@@ -1,0 +1,165 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts + manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax ≥0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` crate binds) rejects; the text parser reassigns ids.
+
+Run once by `make artifacts`; Python never appears on the request path.
+
+Artifacts:
+- ``gemm_{mm,tn,nt}_{pallas,xla}_f64_{T}`` — square-tile GEMMs in the three
+  contraction layouts the solvers use, in both a Pallas-kernel variant (L1)
+  and a plain ``jnp.dot`` variant (XLA-native baseline for the engine
+  ablation bench);
+- ``cd_sweep_pallas_f64_b{B}`` — the CD block-sweep kernel;
+- ``cggm_obj_f64`` / ``cggm_grads_f64`` — small fixed-shape L2 objective and
+  analytic gradients, loaded by Rust integration tests as a cross-language
+  numerical oracle.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels import cd_sweep, gemm_pallas  # noqa: E402
+from . import model  # noqa: E402
+
+GEMM_TILES = (128, 256)
+CD_BLOCK = 32
+ORACLE_P, ORACLE_Q = 24, 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def manifest_input(shape, dtype="f64"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_artifacts(outdir: str, tiles=GEMM_TILES, quick=False) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {}
+
+    def emit(name, lowered, kind, inputs, outputs, **extra):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "file": fname,
+            "kind": kind,
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        entry.update(extra)
+        manifest[name] = entry
+        print(f"  wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    # ---- GEMM tiles ----
+    layouts = {
+        "mm": (lambda a, b: (gemm_pallas.matmul(a, b),),
+               lambda a, b: (jnp.dot(a, b),),
+               lambda t: ((t, t), (t, t))),
+        "tn": (lambda a, b: (gemm_pallas.gemm_tn(a, b),),
+               lambda a, b: (jnp.dot(a.T, b),),
+               lambda t: ((t, t), (t, t))),
+        "nt": (lambda a, b: (gemm_pallas.gemm_nt(a, b),),
+               lambda a, b: (jnp.dot(a, b.T),),
+               lambda t: ((t, t), (t, t))),
+    }
+    tiles = tiles if not quick else (128,)
+    for t in tiles:
+        for lname, (pallas_fn, xla_fn, shapes) in layouts.items():
+            sa, sb = shapes(t)
+            for variant, fn in (("pallas", pallas_fn), ("xla", xla_fn)):
+                if quick and variant == "pallas" and lname != "nt":
+                    continue
+                name = f"gemm_{lname}_{variant}_f64_{t}"
+                lowered = jax.jit(fn).lower(spec(sa), spec(sb))
+                emit(
+                    name, lowered, f"gemm_{lname}",
+                    [manifest_input(sa), manifest_input(sb)],
+                    [manifest_input((t, t))],
+                    block=t, variant=variant,
+                )
+
+    # ---- CD block sweep ----
+    b = CD_BLOCK
+    bb = (b, b)
+    lowered = jax.jit(
+        lambda syy, sg, ps, lm, mk, rg, dl, u: tuple(
+            cd_sweep.cd_block_sweep(syy, sg, ps, lm, mk, rg, dl, u)
+        )
+    ).lower(*([spec(bb)] * 5 + [spec((1, 1))] + [spec(bb)] * 2))
+    emit(
+        f"cd_sweep_pallas_f64_b{b}", lowered, "cd_sweep",
+        [manifest_input(bb)] * 5 + [manifest_input((1, 1))]
+        + [manifest_input(bb)] * 2,
+        [manifest_input(bb), manifest_input(bb)],
+        block=b, variant="pallas",
+    )
+
+    # ---- L2 oracle: objective + gradients at fixed small shapes ----
+    p, q = ORACLE_P, ORACLE_Q
+    lowered = jax.jit(
+        lambda lam, th, syy, sxy, sxx, rl, rt:
+        (model.cggm_objective(lam, th, syy, sxy, sxx, rl, rt),)
+    ).lower(
+        spec((q, q)), spec((p, q)), spec((q, q)), spec((p, q)), spec((p, p)),
+        spec(()), spec(()),
+    )
+    emit(
+        "cggm_obj_f64", lowered, "cggm_obj",
+        [manifest_input((q, q)), manifest_input((p, q)),
+         manifest_input((q, q)), manifest_input((p, q)),
+         manifest_input((p, p)), manifest_input(()), manifest_input(())],
+        [manifest_input(())],
+        p=p, q=q,
+    )
+    lowered = jax.jit(model.cggm_grads).lower(
+        spec((q, q)), spec((p, q)), spec((q, q)), spec((p, q)), spec((p, p))
+    )
+    emit(
+        "cggm_grads_f64", lowered, "cggm_grads",
+        [manifest_input((q, q)), manifest_input((p, q)),
+         manifest_input((q, q)), manifest_input((p, q)),
+         manifest_input((p, p))],
+        [manifest_input((q, q)), manifest_input((p, q))],
+        p=p, q=q,
+    )
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest, "dtype": "f64"}, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="small subset (CI smoke)")
+    args = ap.parse_args()
+    manifest = build_artifacts(args.out, quick=args.quick)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

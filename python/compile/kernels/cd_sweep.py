@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: one coordinate-descent sweep over a diagonal
+Λ-block — the paper's inner loop as a VMEM-resident kernel.
+
+Hardware-adaptation story (DESIGN.md §8): the paper's block CD exists to keep
+the working set (columns of Σ, Ψ) in CPU cache; on TPU the analogous move is
+to pin the B×B block working set (Σ_B, Ψ_B, S_yy,B, Λ_B, Δ_B, U_B) in VMEM
+and run the inherently-sequential CD recurrence inside the kernel with
+`lax.fori_loop`, leaving HBM↔VMEM transfers at block granularity.
+
+The sweep visits the upper triangle in row-major order, solves each 1-D
+subproblem exactly (soft-thresholding), and maintains U = ΔΣ — bitwise the
+same recurrence as the Rust implementation and `ref.cd_sweep_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _soft(w, r):
+    return jnp.sign(w) * jnp.maximum(jnp.abs(w) - r, 0.0)
+
+
+def _cd_kernel(syy_ref, sigma_ref, psi_ref, lam_ref, mask_ref, reg_ref,
+               delta_in_ref, u_in_ref, delta_out_ref, u_out_ref, *, b: int):
+    syy = syy_ref[...]
+    sigma = sigma_ref[...]
+    psi = psi_ref[...]
+    lam = lam_ref[...]
+    mask = mask_ref[...]
+    reg = reg_ref[0, 0]
+
+    def body(t, carry):
+        delta, u = carry
+        i = t // b
+        j = t % b
+        upper = j >= i
+        act = (mask[i, j] != 0) & upper
+
+        s_ij = sigma[i, j]
+        s_ii = sigma[i, i]
+        s_jj = sigma[j, j]
+        p_ij = psi[i, j]
+        p_ii = psi[i, i]
+        p_jj = psi[j, j]
+        diag = i == j
+
+        a_off = s_ij * s_ij + s_ii * s_jj + s_ii * p_jj + s_jj * p_ii \
+            + 2.0 * s_ij * p_ij
+        a_diag = s_ii * s_ii + 2.0 * s_ii * p_ii
+        a = jnp.where(diag, a_diag, a_off)
+
+        lin_off = (syy[i, j] - s_ij - p_ij
+                   + sigma[i, :] @ u[:, j]
+                   + psi[i, :] @ u[:, j]
+                   + psi[j, :] @ u[:, i])
+        lin_diag = (syy[i, i] - s_ii - p_ii
+                    + sigma[i, :] @ u[:, i]
+                    + 2.0 * (psi[i, :] @ u[:, i]))
+        lin = jnp.where(diag, lin_diag, lin_off)
+
+        c = lam[i, j] + delta[i, j]
+        mu = -c + _soft(c - lin / a, reg / a)
+        mu = jnp.where(act, mu, 0.0)
+
+        delta = delta.at[i, j].add(mu)
+        delta = delta.at[j, i].add(jnp.where(diag, 0.0, mu))
+        u = u.at[i, :].add(mu * sigma[j, :])
+        u = u.at[j, :].add(jnp.where(diag, 0.0, mu) * sigma[i, :])
+        return delta, u
+
+    delta0 = delta_in_ref[...]
+    u0 = u_in_ref[...]
+    delta, u = lax.fori_loop(0, b * b, body, (delta0, u0))
+    delta_out_ref[...] = delta
+    u_out_ref[...] = u
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cd_block_sweep(syy, sigma, psi, lam, mask, reg, delta, u, *,
+                   interpret=True):
+    """Run one CD sweep over a B×B diagonal Λ-block.
+
+    Args: all matrices (B, B) float64 (mask any numeric 0/1); ``reg`` is the
+    scalar λ_Λ reshaped to (1, 1). Returns (delta, u) after the sweep.
+    """
+    b = syy.shape[0]
+    specs = [pl.BlockSpec((b, b), lambda: (0, 0))] * 5 + [
+        pl.BlockSpec((1, 1), lambda: (0, 0))
+    ] + [pl.BlockSpec((b, b), lambda: (0, 0))] * 2
+    return pl.pallas_call(
+        functools.partial(_cd_kernel, b=b),
+        grid=(),
+        in_specs=specs,
+        out_specs=[pl.BlockSpec((b, b), lambda: (0, 0))] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, b), syy.dtype),
+            jax.ShapeDtypeStruct((b, b), syy.dtype),
+        ],
+        interpret=interpret,
+    )(syy, sigma, psi, lam, mask, jnp.asarray(reg).reshape(1, 1), delta, u)

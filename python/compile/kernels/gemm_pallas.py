@@ -1,0 +1,142 @@
+"""Layer-1 Pallas GEMM kernels — the paper's flop hot spot as TPU-shaped
+tiled kernels.
+
+The CGGM optimizers spend their dense-flop budget in three contraction
+layouts (DESIGN.md §8):
+
+- ``matmul``   C = A·B     (Σ·R̃ products, blocked Cholesky updates)
+- ``gemm_tn``  C = Aᵀ·B    (Gram products over samples stored row-major)
+- ``gemm_nt``  C = A·Bᵀ    (covariance blocks of feature-major data:
+  ``Ψ = RᵀR/n``, ``S_xx`` tiles, ``S_xy`` blocks — the O(npq + nq²) terms)
+
+Each kernel tiles the output into (bm × bn) blocks held in VMEM while
+marching over the contraction dimension in bk-sized panels (grid axis 2),
+accumulating in-place — the HBM↔VMEM schedule expressed via BlockSpec that
+the paper expressed via CPU cache blocking. Block shapes default to
+128×128×128 (MXU-aligned); ``interpret=True`` is mandatory on CPU-PJRT
+(real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """C[i,j] += A[i,k]·B[k,j] with accumulation across the k grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _tn_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """C[i,j] += Aᵀ[i,k]·B[k,j]: A panel arrives as (bk × bm)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _nt_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """C[i,j] += A[i,k]·Bᵀ[k,j]: B panel arrives as (bn × bk)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...].T, preferred_element_type=o_ref.dtype
+    )
+
+
+def _check_divisible(name, dim, block):
+    if dim % block != 0:
+        raise ValueError(f"{name}={dim} not divisible by block {block}")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(a, b, *, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK,
+           interpret=True):
+    """C = A·B for A (m×k), B (k×n); m/k/n divisible by the block sizes."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    _check_divisible("m", m, bm)
+    _check_divisible("k", k, bk)
+    _check_divisible("n", n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def gemm_tn(a, b, *, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK,
+            interpret=True):
+    """C = Aᵀ·B for A (k×m), B (k×n)."""
+    k, m = a.shape
+    k2, n = b.shape
+    assert k == k2
+    _check_divisible("m", m, bm)
+    _check_divisible("k", k, bk)
+    _check_divisible("n", n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_tn_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def gemm_nt(a, b, *, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK,
+            interpret=True):
+    """C = A·Bᵀ for A (m×k), B (n×k) — the covariance-block form."""
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2
+    _check_divisible("m", m, bm)
+    _check_divisible("k", k, bk)
+    _check_divisible("n", n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_nt_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def vmem_bytes(bm, bk, bn, dtype_bytes=8):
+    """VMEM working-set estimate for one grid step (perf analysis §Perf):
+    A panel + B panel + C accumulator."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

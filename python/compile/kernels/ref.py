@@ -1,0 +1,80 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels — the build-time
+correctness signal (pytest asserts allclose against these)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b)
+
+
+def gemm_tn_ref(a, b):
+    return jnp.dot(a.T, b)
+
+
+def gemm_nt_ref(a, b):
+    return jnp.dot(a, b.T)
+
+
+def soft_threshold(w, r):
+    return np.sign(w) * np.maximum(np.abs(w) - r, 0.0)
+
+
+def cd_sweep_ref(syy, sigma, psi, lam_mat, delta, u, active_mask, reg):
+    """Reference CD sweep over one diagonal Λ-block (numpy loop).
+
+    Mirrors `cggm::solvers::cd_common::lambda_cd_pass` restricted to a block:
+    visits the upper triangle in row-major order, solves the 1-D problem
+    exactly, updates delta (symmetric) and u = delta·sigma.
+
+    All inputs are (B, B) arrays; `active_mask` is 0/1; `reg` is λ_Λ.
+    Returns (delta, u).
+    """
+    b = syy.shape[0]
+    delta = np.array(delta, dtype=np.float64, copy=True)
+    u = np.array(u, dtype=np.float64, copy=True)
+    syy = np.asarray(syy, dtype=np.float64)
+    sigma = np.asarray(sigma, dtype=np.float64)
+    psi = np.asarray(psi, dtype=np.float64)
+    lam_mat = np.asarray(lam_mat, dtype=np.float64)
+    for i in range(b):
+        for j in range(i, b):
+            if not active_mask[i, j]:
+                continue
+            s_ij, s_ii, s_jj = sigma[i, j], sigma[i, i], sigma[j, j]
+            p_ij, p_ii, p_jj = psi[i, j], psi[i, i], psi[j, j]
+            if i == j:
+                a = s_ii * s_ii + 2.0 * s_ii * p_ii
+                lin = (syy[i, i] - s_ii - p_ii
+                       + sigma[i, :] @ u[:, i]
+                       + 2.0 * (psi[i, :] @ u[:, i]))
+            else:
+                a = (s_ij * s_ij + s_ii * s_jj + s_ii * p_jj
+                     + s_jj * p_ii + 2.0 * s_ij * p_ij)
+                lin = (syy[i, j] - s_ij - p_ij
+                       + sigma[i, :] @ u[:, j]
+                       + psi[i, :] @ u[:, j]
+                       + psi[j, :] @ u[:, i])
+            c = lam_mat[i, j] + delta[i, j]
+            mu = -c + soft_threshold(c - lin / a, reg / a)
+            if mu != 0.0:
+                delta[i, j] += mu
+                if i != j:
+                    delta[j, i] += mu
+                # U = ΔΣ row updates: U[i,:] += μΣ[j,:], U[j,:] += μΣ[i,:].
+                u[i, :] += mu * sigma[j, :]
+                if i != j:
+                    u[j, :] += mu * sigma[i, :]
+    return delta, u
+
+
+def lambda_block_model_value(syy, sigma, psi, lam_mat, delta, reg):
+    """Quadratic-model objective of the block subproblem (for the
+    monotonicity property test):
+    tr(∇ᵀΔ) + ½[tr(ΣΔΣΔ) + 2tr(ΨΔΣΔ)] + λ‖Λ+Δ‖₁ with ∇ = S_yy - Σ - Ψ."""
+    grad = syy - sigma - psi
+    ds = delta @ sigma
+    quad = np.trace(sigma @ delta @ ds) + 2.0 * np.trace(psi @ delta @ ds)
+    lin = float(np.sum(grad * delta))
+    return lin + 0.5 * quad + reg * float(np.abs(lam_mat + delta).sum())

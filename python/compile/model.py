@@ -1,0 +1,152 @@
+"""Layer-2 JAX model: the CGGM negative log-likelihood (paper Eq. 1), its
+analytic gradients (Eq. 3), and a Pallas-backed variant whose Gram hot spots
+run through the Layer-1 kernels.
+
+These functions are AOT-lowered to HLO text by `aot.py`; the small
+fixed-shape objective/gradient artifacts double as a cross-language oracle —
+a Rust integration test loads them via PJRT and compares against the Rust
+objective implementation bit-for-nearly.
+
+The linear algebra (Cholesky, triangular solves, logdet) is written in pure
+lax ops rather than `jnp.linalg`: LAPACK-backed primitives lower to typed-FFI
+custom-calls (API v4) that the `xla` crate's xla_extension 0.5.1 rejects at
+compile time. The pure versions are validated against `jnp.linalg` in
+pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import gemm_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# Custom-call-free dense linear algebra (small q; oracle shapes only).
+# ---------------------------------------------------------------------------
+
+def cholesky(a):
+    """Lower Cholesky factor via a fori_loop — no LAPACK custom-call."""
+    q = a.shape[0]
+    idx = jnp.arange(q)
+
+    def body(j, l):
+        row_j = l[j, :]
+        mask = idx < j
+        mrow = jnp.where(mask, row_j, 0.0)
+        d = a[j, j] - jnp.sum(mrow * mrow)
+        dj = jnp.sqrt(d)
+        dots = l @ mrow  # (q,)
+        col = (a[:, j] - dots) / dj
+        col = jnp.where(idx > j, col, 0.0)
+        l = l.at[:, j].set(col)
+        l = l.at[j, j].set(dj)
+        return l
+
+    return lax.fori_loop(0, q, body, jnp.zeros_like(a))
+
+
+def solve_lower(l, b):
+    """Solve L y = b (b may be (q,) or (q, m)) by forward substitution."""
+    q = l.shape[0]
+    idx = jnp.arange(q)
+    y0 = jnp.zeros_like(b)
+
+    def body(i, y):
+        row = jnp.where(idx < i, l[i, :], 0.0)
+        s = row @ y
+        return y.at[i].set((b[i] - s) / l[i, i])
+
+    return lax.fori_loop(0, q, body, y0)
+
+
+def solve_upper_t(l, b):
+    """Solve Lᵀ x = b by backward substitution."""
+    q = l.shape[0]
+    idx = jnp.arange(q)
+    x0 = jnp.zeros_like(b)
+
+    def body(t, x):
+        i = q - 1 - t
+        col = jnp.where(idx > i, l[:, i], 0.0)
+        s = col @ x
+        return x.at[i].set((b[i] - s) / l[i, i])
+
+    return lax.fori_loop(0, q, body, x0)
+
+
+def chol_solve(l, b):
+    """A x = b given A = LLᵀ."""
+    return solve_upper_t(l, solve_lower(l, b))
+
+
+def logdet_spd(a):
+    l = cholesky(a)
+    return 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+
+
+# ---------------------------------------------------------------------------
+# CGGM objective and gradients (Eqs. 1 and 3).
+# ---------------------------------------------------------------------------
+
+def cggm_smooth(lam, theta, syy, sxy, sxx):
+    """g(Λ,Θ) = -log|Λ| + tr(S_yy Λ + 2 S_xyᵀΘ + Λ⁻¹ΘᵀS_xxΘ)."""
+    l = cholesky(lam)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    tr1 = jnp.sum(syy * lam)
+    tr2 = 2.0 * jnp.sum(sxy * theta)
+    m = theta.T @ sxx @ theta
+    tr3 = jnp.trace(chol_solve(l, m))
+    return -logdet + tr1 + tr2 + tr3
+
+
+def cggm_smooth_linalg(lam, theta, syy, sxy, sxx):
+    """`jnp.linalg` reference of `cggm_smooth` — used by pytest (autodiff
+    cross-check); NOT lowered to artifacts (LAPACK custom-calls)."""
+    sign, logdet = jnp.linalg.slogdet(lam)
+    tr1 = jnp.sum(syy * lam)
+    tr2 = 2.0 * jnp.sum(sxy * theta)
+    m = theta.T @ sxx @ theta
+    tr3 = jnp.trace(jnp.linalg.solve(lam, m))
+    return -sign * logdet + tr1 + tr2 + tr3
+
+
+def cggm_objective(lam, theta, syy, sxy, sxx, reg_l, reg_t):
+    """f = g + λ_Λ‖Λ‖₁ + λ_Θ‖Θ‖₁."""
+    return (cggm_smooth(lam, theta, syy, sxy, sxx)
+            + reg_l * jnp.sum(jnp.abs(lam))
+            + reg_t * jnp.sum(jnp.abs(theta)))
+
+
+def cggm_grads(lam, theta, syy, sxy, sxx):
+    """Analytic gradients (Eq. 3):
+    ∇_Λ g = S_yy - Σ - Ψ,  ∇_Θ g = 2 S_xy + 2 S_xxΘΣ."""
+    q = lam.shape[0]
+    l = cholesky(lam)
+    sigma = chol_solve(l, jnp.eye(q, dtype=lam.dtype))
+    ts = theta @ sigma
+    psi = ts.T @ sxx @ ts
+    grad_l = syy - sigma - psi
+    grad_t = 2.0 * sxy + 2.0 * sxx @ ts
+    return grad_l, grad_t
+
+
+def cggm_smooth_pallas(lam, theta, x, y, *, block=128):
+    """g(Λ,Θ) with the sample-Gram hot spots computed by the L1 Pallas
+    kernels (composition check: L1 lowers inside the L2 graph).
+
+    x: (n, p), y: (n, q), n/p/q divisible by `block`.
+    """
+    n = x.shape[0]
+    syy = gemm_pallas.gemm_tn(y, y, bm=block, bk=block, bn=block) / n
+    sxy = gemm_pallas.gemm_tn(x, y, bm=block, bk=block, bn=block) / n
+    rt_ = gemm_pallas.matmul(x, theta, bm=block, bk=block, bn=block)  # XΘ
+    m = gemm_pallas.gemm_tn(rt_, rt_, bm=block, bk=block, bn=block) / n
+    l = cholesky(lam)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    tr1 = jnp.sum(syy * lam)
+    tr2 = 2.0 * jnp.sum(sxy * theta)
+    tr3 = jnp.trace(chol_solve(l, m))
+    return -logdet + tr1 + tr2 + tr3

@@ -1,0 +1,64 @@
+"""AOT pipeline checks: artifacts lower, the manifest is consistent, and the
+HLO text has the entry signature the Rust runtime expects."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_artifacts(str(out), quick=True)
+    return out, manifest
+
+
+def test_manifest_lists_every_file(built):
+    out, manifest = built
+    with open(out / "manifest.json") as f:
+        doc = json.load(f)
+    assert doc["artifacts"].keys() == manifest.keys()
+    for name, entry in manifest.items():
+        path = out / entry["file"]
+        assert path.exists(), name
+        assert path.stat().st_size > 0
+
+
+def test_hlo_text_has_entry_computation(built):
+    out, manifest = built
+    for name, entry in manifest.items():
+        text = (out / entry["file"]).read_text()
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def test_gemm_artifact_shapes(built):
+    _, manifest = built
+    entry = manifest["gemm_nt_xla_f64_128"]
+    assert entry["inputs"][0]["shape"] == [128, 128]
+    assert entry["outputs"][0]["shape"] == [128, 128]
+    # Entry signature mentions f64 parameters of the right rank.
+    assert entry["kind"] == "gemm_nt"
+
+
+def test_oracle_artifacts_present(built):
+    _, manifest = built
+    assert "cggm_obj_f64" in manifest
+    assert "cggm_grads_f64" in manifest
+    obj = manifest["cggm_obj_f64"]
+    assert obj["p"] == aot.ORACLE_P
+    assert obj["q"] == aot.ORACLE_Q
+    # 7 inputs: Λ, Θ, S_yy, S_xy, S_xx, λ_Λ, λ_Θ.
+    assert len(obj["inputs"]) == 7
+
+
+def test_hlo_is_parseable_shape_line(built):
+    out, manifest = built
+    text = (out / manifest["gemm_nt_xla_f64_128"]["file"]).read_text()
+    m = re.search(r"ENTRY.*?\((.*?)\)", text, re.S)
+    assert m, "no ENTRY parameter list"
+    assert "f64[128,128]" in text

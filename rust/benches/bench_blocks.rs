@@ -1,0 +1,145 @@
+//! Block-machinery ablations (paper §4 design choices):
+//! - block CD sweep cost with clustering vs contiguous blocks;
+//! - budget sweep (cache size vs time);
+//! - L1 ablation: the Pallas cd_sweep artifact vs the native Rust CD pass
+//!   on an identical Λ-block (cross-layer equivalence + cost).
+
+use cggm::bench::{Bench, BenchSet};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::gemm::GemmEngine;
+use cggm::linalg::dense::Mat;
+use cggm::linalg::sparse::SpRowMat;
+use cggm::runtime::{artifact_dir, compile_artifact, manifest::Manifest};
+use cggm::solvers::cd_common::lambda_cd_pass;
+use cggm::solvers::{solve, SolveOptions, SolverKind};
+use cggm::util::membudget::MemBudget;
+use cggm::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("blocks");
+    let eng = NativeGemm::new(1);
+    let prob = datagen::cluster_graph::generate(
+        400,
+        300,
+        150,
+        7,
+        &datagen::cluster_graph::ClusterOptions {
+            cluster_size: 50,
+            hub_coeff: 3.0,
+            ..Default::default()
+        },
+    );
+    // Clustering ablation under a tight budget.
+    for (name, clustering) in [("clustered", true), ("contiguous", false)] {
+        let opts = SolveOptions {
+            lam_l: 0.9,
+            lam_t: 0.9,
+            max_iter: 40,
+            clustering,
+            budget: MemBudget::new(2 << 20),
+            ..Default::default()
+        };
+        set.push(
+            Bench::new(format!("bcd_sweep/{name}/2MB"))
+                .warmup(1)
+                .iters(3)
+                .run(|| solve(SolverKind::AltNewtonBcd, &prob.data, &opts, &eng).unwrap()),
+        );
+    }
+    // Budget sweep.
+    for budget_mb in [1usize, 8, 64] {
+        let opts = SolveOptions {
+            lam_l: 0.9,
+            lam_t: 0.9,
+            max_iter: 40,
+            budget: MemBudget::new(budget_mb << 20),
+            ..Default::default()
+        };
+        set.push(
+            Bench::new(format!("bcd_sweep/budget/{budget_mb}MB"))
+                .warmup(1)
+                .iters(3)
+                .run(|| solve(SolverKind::AltNewtonBcd, &prob.data, &opts, &eng).unwrap()),
+        );
+    }
+
+    // L1 ablation: Pallas cd_sweep artifact vs native CD pass on one block.
+    let dir = artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+        if let Some(entry) = manifest.find("cd_sweep", None, None) {
+            let b = entry.block.unwrap_or(32);
+            let client = xla::PjRtClient::cpu().unwrap();
+            let exe = compile_artifact(&client, &dir, entry).unwrap();
+            let mut rng = Rng::new(9);
+            // Random SPD block problem.
+            let mk_spd = |rng: &mut Rng, scale: f64| {
+                let m = Mat::from_fn(b + 2, b, |_, _| rng.normal());
+                let mut s = Mat::zeros(b, b);
+                NativeGemm::new(1).gemm_tn(1.0, &m, &m, 0.0, &mut s);
+                for i in 0..b {
+                    s[(i, i)] += scale;
+                }
+                s.symmetrize();
+                s
+            };
+            let sigma = mk_spd(&mut rng, b as f64);
+            let psi = mk_spd(&mut rng, 0.0);
+            let syy = mk_spd(&mut rng, 1.0);
+            let lam_mat = Mat::eye(b);
+            let mask = Mat::from_fn(b, b, |i, j| if (i + j) % 3 != 0 || i == j { 1.0 } else { 0.0 });
+            let reg = 0.3f64;
+            let lit = |m: &Mat| {
+                xla::Literal::vec1(m.data())
+                    .reshape(&[b as i64, b as i64])
+                    .unwrap()
+            };
+            set.push(
+                Bench::new(format!("cd_sweep/pallas_artifact/b{b}"))
+                    .iters(5)
+                    .run(|| {
+                        let args = vec![
+                            lit(&syy),
+                            lit(&sigma),
+                            lit(&psi),
+                            lit(&lam_mat),
+                            lit(&mask),
+                            xla::Literal::vec1(&[reg]).reshape(&[1, 1]).unwrap(),
+                            lit(&Mat::zeros(b, b)),
+                            lit(&Mat::zeros(b, b)),
+                        ];
+                        exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+                            .to_literal_sync()
+                            .unwrap()
+                    }),
+            );
+            // Native equivalent.
+            let lambda_sp = SpRowMat::eye(b);
+            let mut active = Vec::new();
+            for i in 0..b {
+                for j in i..b {
+                    if mask[(i, j)] != 0.0 {
+                        active.push((i, j));
+                    }
+                }
+            }
+            set.push(
+                Bench::new(format!("cd_sweep/native/b{b}"))
+                    .iters(50)
+                    .run(|| {
+                        let mut delta = SpRowMat::zeros(b, b);
+                        let mut w = Mat::zeros(b, b);
+                        lambda_cd_pass(
+                            &active, &syy, &sigma, &psi, &lambda_sp, &mut delta, &mut w, reg,
+                            None,
+                        );
+                        delta
+                    }),
+            );
+        }
+    } else {
+        eprintln!("artifacts not built; skipping cd_sweep ablation");
+    }
+    set.finish();
+}

@@ -1,0 +1,61 @@
+//! Engine ablation bench: native blocked GEMM vs PJRT/XLA artifacts vs
+//! PJRT/Pallas (interpret) artifacts across the three contraction layouts.
+//! Quantifies the crossover size used by `XlaGemm::small` and the CPU cost
+//! of the TPU-shaped Pallas kernels.
+
+use cggm::bench::{Bench, BenchSet};
+use cggm::gemm::native::NativeGemm;
+use cggm::gemm::GemmEngine;
+use cggm::linalg::dense::Mat;
+use cggm::runtime::{artifact_dir, GemmVariant, XlaGemm};
+use cggm::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("gemm");
+    let mut rng = Rng::new(1);
+    let native = NativeGemm::new(1);
+    let engines: Vec<(&str, Box<dyn GemmEngine>)> = {
+        let mut v: Vec<(&str, Box<dyn GemmEngine>)> = vec![("native", Box::new(NativeGemm::new(1)))];
+        let dir = artifact_dir();
+        if dir.join("manifest.json").exists() {
+            for (name, variant, tile) in [
+                ("xla@128", GemmVariant::Xla, 128),
+                ("xla@256", GemmVariant::Xla, 256),
+                ("pallas@128", GemmVariant::Pallas, 128),
+            ] {
+                match XlaGemm::load(&dir, tile, variant, 1) {
+                    Ok(e) => v.push((name, Box::new(e))),
+                    Err(e) => eprintln!("skipping {name}: {e}"),
+                }
+            }
+        } else {
+            eprintln!("artifacts not built; native only");
+        }
+        v
+    };
+    for &size in &[128usize, 256, 512] {
+        let a = Mat::from_fn(size, size, |_, _| rng.normal());
+        let b = Mat::from_fn(size, size, |_, _| rng.normal());
+        let flops = 2.0 * (size as f64).powi(3);
+        let mut c = Mat::zeros(size, size);
+        for (name, eng) in &engines {
+            if *name == "pallas@128" && size > 256 {
+                continue; // interpret mode too slow beyond this
+            }
+            set.push(
+                Bench::new(format!("gemm_nt/{name}/{size}"))
+                    .iters(if *name == "pallas@128" { 3 } else { 8 })
+                    .work(flops)
+                    .run(|| eng.gemm_nt(1.0, &a, &b, 0.0, &mut c)),
+            );
+        }
+        // Reference: same op through the plain-native path (sanity anchor).
+        set.push(
+            Bench::new(format!("gemm_mm/native/{size}"))
+                .iters(8)
+                .work(flops)
+                .run(|| native.gemm(1.0, &a, &b, 0.0, &mut c)),
+        );
+    }
+    set.finish();
+}

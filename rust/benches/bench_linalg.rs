@@ -1,0 +1,73 @@
+//! Linear-algebra substrate bench: the paper's per-iteration primitives —
+//! Σ-column extraction (CG vs sparse-Cholesky solve vs dense inverse),
+//! sparse Cholesky factorization, and graph clustering.
+
+use cggm::bench::{Bench, BenchSet};
+use cggm::datagen::chain::chain_lambda;
+use cggm::datagen::cluster_graph::{clustered_lambda, ClusterOptions as GenOpts};
+use cggm::gemm::native::NativeGemm;
+use cggm::graph::cluster::{cluster, ClusterOptions};
+use cggm::graph::Graph;
+use cggm::linalg::cg::CgSolver;
+use cggm::linalg::chol_dense::DenseChol;
+use cggm::linalg::chol_sparse::SparseChol;
+use cggm::linalg::dense::Mat;
+use cggm::util::rng::Rng;
+use cggm::util::threadpool::Parallelism;
+
+fn main() {
+    let mut set = BenchSet::new("linalg");
+    let eng = NativeGemm::new(1);
+    let par = Parallelism::new(1);
+    let mut rng = Rng::new(2);
+
+    for &q in &[500usize, 2000] {
+        let lam = chain_lambda(q);
+        // CG: 32 columns of Σ.
+        let solver = CgSolver::new(lam.to_csr(), 1e-10, 20 * q);
+        let cols: Vec<usize> = (0..32).map(|i| i * (q / 32)).collect();
+        let mut out = Mat::zeros(cols.len(), q);
+        set.push(
+            Bench::new(format!("sigma_cols_cg/chain/q{q}/32cols"))
+                .iters(5)
+                .run(|| solver.inverse_columns(&cols, &mut out, &par)),
+        );
+        // Sparse Cholesky factor + 32 solves.
+        set.push(
+            Bench::new(format!("sparse_chol_factor/chain/q{q}"))
+                .iters(5)
+                .run(|| SparseChol::factor(&lam, true, usize::MAX).unwrap()),
+        );
+        let chol = SparseChol::factor(&lam, true, usize::MAX).unwrap();
+        let e0: Vec<f64> = (0..q).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect();
+        set.push(
+            Bench::new(format!("sparse_chol_solve/chain/q{q}"))
+                .iters(10)
+                .run(|| chol.solve(&e0)),
+        );
+        if q <= 500 {
+            let dense = lam.to_dense();
+            set.push(
+                Bench::new(format!("dense_chol_inverse/q{q}"))
+                    .iters(3)
+                    .run(|| DenseChol::factor(&dense, &eng).unwrap().inverse(&eng)),
+            );
+        }
+    }
+    // Clustering on a clustered random graph (the partitioner's real input).
+    let lam = clustered_lambda(
+        2000,
+        &mut rng,
+        &GenOpts {
+            cluster_size: 100,
+            ..Default::default()
+        },
+    );
+    let g = Graph::from_sym_pattern(&lam);
+    set.push(
+        Bench::new("cluster/2000nodes/k8")
+            .iters(5)
+            .run(|| cluster(&g, 8, &ClusterOptions::default())),
+    );
+    set.finish();
+}

@@ -1,0 +1,41 @@
+//! End-to-end solver bench — Table 1 / Figure 1–2 in miniature: the three
+//! methods on a chain and a clustered workload at fixed small sizes.
+
+use cggm::bench::{Bench, BenchSet};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{solve, SolveOptions, SolverKind};
+
+fn main() {
+    let mut set = BenchSet::new("solvers");
+    let eng = NativeGemm::new(1);
+    let chain = datagen::chain::generate(300, 300, 100, 5);
+    let cluster = datagen::cluster_graph::generate(
+        400,
+        200,
+        150,
+        6,
+        &datagen::cluster_graph::ClusterOptions {
+            cluster_size: 50,
+            hub_coeff: 3.0,
+            ..Default::default()
+        },
+    );
+    for (wname, prob, lam) in [("chain300", &chain, 1.5), ("cluster400x200", &cluster, 0.9)] {
+        for kind in SolverKind::all() {
+            let opts = SolveOptions {
+                lam_l: lam,
+                lam_t: lam,
+                max_iter: 60,
+                ..Default::default()
+            };
+            set.push(
+                Bench::new(format!("solve/{wname}/{}", kind.name()))
+                    .warmup(1)
+                    .iters(3)
+                    .run(|| solve(kind, &prob.data, &opts, &eng).unwrap()),
+            );
+        }
+    }
+    set.finish();
+}

@@ -1,0 +1,194 @@
+//! Micro-benchmark harness (criterion substitute, DESIGN.md S19).
+//!
+//! Used by the `rust/benches/*.rs` targets (built with `harness = false`):
+//! warmup runs, timed iterations, robust statistics (median + MAD), and
+//! criterion-style one-line reports plus CSV rows for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    /// Seconds per iteration.
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+    /// Optional work units (e.g. flops) per iteration for rate reporting.
+    pub work: Option<f64>,
+}
+
+impl BenchStats {
+    /// Work rate per second (e.g. FLOP/s when `work` is flops).
+    pub fn rate(&self) -> Option<f64> {
+        self.work.map(|w| w / self.median)
+    }
+
+    pub fn report_line(&self) -> String {
+        let rate = match self.rate() {
+            Some(r) if r >= 1e9 => format!("  {:8.2} G/s", r / 1e9),
+            Some(r) if r >= 1e6 => format!("  {:8.2} M/s", r / 1e6),
+            Some(r) => format!("  {r:8.0} /s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} ± {:<10} [{} .. {}]{}",
+            self.name,
+            fmt_time(self.median),
+            fmt_time(self.mad),
+            fmt_time(self.min),
+            fmt_time(self.max),
+            rate
+        )
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.9},{:.9},{:.9},{:.9},{:.9}\n",
+            self.name, self.iters, self.median, self.mean, self.min, self.max, self.mad
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// One benchmark case builder.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+    work: Option<f64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench {
+            name: name.into(),
+            warmup: 2,
+            iters: 10,
+            work: None,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n.max(1);
+        self
+    }
+
+    /// Work units per iteration (for rate reporting), e.g. 2·m·n·k flops.
+    pub fn work(mut self, units: f64) -> Self {
+        self.work = Some(units);
+        self
+    }
+
+    /// Run the benchmark; `f` is invoked warmup+iters times.
+    pub fn run<T>(self, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let mut devs: Vec<f64> = sorted.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = BenchStats {
+            name: self.name,
+            iters: self.iters,
+            median,
+            mean: samples.iter().sum::<f64>() / samples.len() as f64,
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            mad: devs[devs.len() / 2],
+            work: self.work,
+        };
+        println!("{}", stats.report_line());
+        stats
+    }
+}
+
+/// A collection of benchmark rows, written to `results/bench_<name>.csv`.
+pub struct BenchSet {
+    pub name: String,
+    pub rows: Vec<BenchStats>,
+}
+
+impl BenchSet {
+    pub fn new(name: impl Into<String>) -> BenchSet {
+        let name = name.into();
+        println!("== bench: {name} ==");
+        BenchSet {
+            name,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, stats: BenchStats) {
+        self.rows.push(stats);
+    }
+
+    /// Write CSV to `results/bench_<name>.csv`.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("results");
+        let _ = std::fs::create_dir_all(dir);
+        let mut csv = String::from("name,iters,median,mean,min,max,mad\n");
+        for r in &self.rows {
+            csv.push_str(&r.csv_row());
+        }
+        let path = dir.join(format!("bench_{}.csv", self.name));
+        if let Err(e) = std::fs::write(&path, csv) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("-> {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let stats = Bench::new("noop")
+            .warmup(1)
+            .iters(5)
+            .work(100.0)
+            .run(|| std::hint::black_box(1 + 1));
+        assert_eq!(stats.iters, 5);
+        assert!(stats.median >= 0.0);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+        assert!(stats.rate().unwrap() > 0.0);
+        assert!(stats.report_line().contains("noop"));
+        assert!(stats.csv_row().starts_with("noop,5,"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).contains("us"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Datasets: inputs X (n×p) and outputs Y (n×q), stored feature-major.
+//!
+//! `xt` is p×n and `yt` is q×n so that every covariance entry the CD loops
+//! need — `(S_xx)_ij = x_iᵀx_j/n`, `(S_yy)_ij`, `(S_xy)_ij` — is a dot of two
+//! contiguous rows, and covariance *blocks* are `gemm_nt` row-Gram products.
+//! n is small relative to p, q in all of the paper's workloads, which is why
+//! rows of `xt` work as an implicit representation of the huge `S_xx`
+//! (§4.2: "we store only one row of S_xx at a time").
+
+use crate::gemm::GemmEngine;
+use crate::linalg::dense::{dot, Mat};
+use crate::linalg::sparse::SpRowMat;
+
+/// A regression dataset for CGGM estimation.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Inputs, feature-major: p × n.
+    pub xt: Mat,
+    /// Outputs, feature-major: q × n.
+    pub yt: Mat,
+}
+
+impl Dataset {
+    pub fn new(xt: Mat, yt: Mat) -> Dataset {
+        assert_eq!(xt.cols(), yt.cols(), "sample count mismatch");
+        Dataset { xt, yt }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.xt.cols()
+    }
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.xt.rows()
+    }
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.yt.rows()
+    }
+
+    #[inline]
+    pub fn inv_n(&self) -> f64 {
+        1.0 / self.n() as f64
+    }
+
+    /// (S_yy)_ij on demand — O(n).
+    #[inline]
+    pub fn syy(&self, i: usize, j: usize) -> f64 {
+        dot(self.yt.row(i), self.yt.row(j)) * self.inv_n()
+    }
+
+    /// (S_xy)_ij on demand — O(n).
+    #[inline]
+    pub fn sxy(&self, i: usize, j: usize) -> f64 {
+        dot(self.xt.row(i), self.yt.row(j)) * self.inv_n()
+    }
+
+    /// (S_xx)_ij on demand — O(n).
+    #[inline]
+    pub fn sxx(&self, i: usize, j: usize) -> f64 {
+        dot(self.xt.row(i), self.xt.row(j)) * self.inv_n()
+    }
+
+    /// Row i of S_xx restricted to `cols`, appended into `out`
+    /// (the paper's §4.2 row-wise-sparsity trick: skip entries whose Θ row
+    /// is empty). O(n·|cols|).
+    pub fn sxx_row_restricted(&self, i: usize, cols: &[usize], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(cols.len());
+        let xi = self.xt.row(i);
+        let inv_n = self.inv_n();
+        for &k in cols {
+            out.push(dot(xi, self.xt.row(k)) * inv_n);
+        }
+    }
+
+    /// Dense S_yy (q×q) — non-block solvers only.
+    pub fn syy_dense(&self, engine: &dyn GemmEngine) -> Mat {
+        let mut s = Mat::zeros(self.q(), self.q());
+        engine.gemm_nt(self.inv_n(), &self.yt, &self.yt, 0.0, &mut s);
+        s.symmetrize();
+        s
+    }
+
+    /// Dense S_xx (p×p) — small p only.
+    pub fn sxx_dense(&self, engine: &dyn GemmEngine) -> Mat {
+        let mut s = Mat::zeros(self.p(), self.p());
+        engine.gemm_nt(self.inv_n(), &self.xt, &self.xt, 0.0, &mut s);
+        s.symmetrize();
+        s
+    }
+
+    /// Dense S_xy (p×q).
+    pub fn sxy_dense(&self, engine: &dyn GemmEngine) -> Mat {
+        let mut s = Mat::zeros(self.p(), self.q());
+        engine.gemm_nt(self.inv_n(), &self.xt, &self.yt, 0.0, &mut s);
+        s
+    }
+
+    /// R̃ᵀ = (XΘ)ᵀ as a q×n matrix (`rt.row(j)` = j-th column of XΘ).
+    /// O(nnz(Θ)·n); the basis of every Ψ/trace computation.
+    pub fn xtheta_t(&self, theta: &SpRowMat) -> Mat {
+        assert_eq!(theta.rows(), self.p());
+        assert_eq!(theta.cols(), self.q());
+        let mut rt = Mat::zeros(self.q(), self.n());
+        for i in 0..self.p() {
+            let row = theta.row(i);
+            if row.is_empty() {
+                continue;
+            }
+            let xi = self.xt.row(i);
+            for &(j, v) in row {
+                crate::linalg::dense::axpy(v, xi, rt.row_mut(j));
+            }
+        }
+        rt
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.xt.bytes() + self.yt.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check_close, property};
+
+    fn random_dataset(rng: &mut Rng, n: usize, p: usize, q: usize) -> Dataset {
+        Dataset::new(
+            Mat::from_fn(p, n, |_, _| rng.normal()),
+            Mat::from_fn(q, n, |_, _| rng.normal()),
+        )
+    }
+
+    #[test]
+    fn covariance_entries_match_dense() {
+        property(20, |rng| {
+            let (n, p, q) = (2 + rng.below(10), 1 + rng.below(8), 1 + rng.below(8));
+            let d = random_dataset(rng, n, p, q);
+            let eng = NativeGemm::new(1);
+            let syy = d.syy_dense(&eng);
+            let sxx = d.sxx_dense(&eng);
+            let sxy = d.sxy_dense(&eng);
+            for i in 0..q {
+                for j in 0..q {
+                    check_close(d.syy(i, j), syy[(i, j)], 1e-12, "syy")?;
+                }
+            }
+            for i in 0..p {
+                for j in 0..p {
+                    check_close(d.sxx(i, j), sxx[(i, j)], 1e-12, "sxx")?;
+                }
+                for j in 0..q {
+                    check_close(d.sxy(i, j), sxy[(i, j)], 1e-12, "sxy")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sxx_row_restricted_matches() {
+        let mut rng = Rng::new(2);
+        let d = random_dataset(&mut rng, 7, 10, 3);
+        let cols = vec![0, 3, 9];
+        let mut out = Vec::new();
+        d.sxx_row_restricted(4, &cols, &mut out);
+        for (k, &c) in cols.iter().enumerate() {
+            assert!((out[k] - d.sxx(4, c)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn xtheta_matches_dense_product() {
+        property(20, |rng| {
+            let (n, p, q) = (2 + rng.below(8), 1 + rng.below(8), 1 + rng.below(8));
+            let d = random_dataset(rng, n, p, q);
+            let mut theta = SpRowMat::zeros(p, q);
+            for _ in 0..p {
+                theta.set(rng.below(p), rng.below(q), rng.normal());
+            }
+            let rt = d.xtheta_t(&theta);
+            // dense check: (XΘ)ᵀ[j, k] = Σ_i X[k,i]Θ[i,j]
+            let td = theta.to_dense();
+            for j in 0..q {
+                for k in 0..n {
+                    let mut want = 0.0;
+                    for i in 0..p {
+                        want += d.xt[(i, k)] * td[(i, j)];
+                    }
+                    check_close(rt[(j, k)], want, 1e-12, "xtheta")?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! Unified handle over the two Cholesky paths for Λ.
+//!
+//! The non-block solvers factor Λ densely (paper §2: "Initializing Σ = Λ⁻¹
+//! via Cholesky decomposition"); the block solver must stay sparse (§4,
+//! following BigQUIC). [`LambdaFactor`] gives line search and the objective
+//! one interface for logdet / PD checks / solves / the n-RHS trace term.
+
+use crate::gemm::GemmEngine;
+use crate::linalg::chol_dense::DenseChol;
+use crate::linalg::chol_sparse::{SparseChol, SparseCholError};
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpRowMat;
+
+/// Which factorization to use for Λ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CholKind {
+    /// Always dense (O(q²) memory) — matches the paper's non-block solvers.
+    Dense,
+    /// Always sparse with RCM preordering (block solver).
+    SparseRcm,
+    /// Sparse first; fall back to dense if fill explodes and q is moderate.
+    Auto,
+}
+
+/// A successful Λ factorization.
+pub enum LambdaFactor {
+    Dense(DenseChol),
+    Sparse(SparseChol),
+}
+
+/// Factorization failure — `NotPd` doubles as the line-search PD probe.
+#[derive(Debug, thiserror::Error)]
+pub enum FactorError {
+    #[error("Λ is not positive definite")]
+    NotPd,
+    #[error("sparse factor fill exceeded and dense fallback is disabled (q={q})")]
+    FillExceeded { q: usize },
+}
+
+/// Threshold under which the Auto dense fallback is allowed.
+const AUTO_DENSE_MAX_Q: usize = 4096;
+
+impl LambdaFactor {
+    /// Factor a sparse symmetric Λ.
+    pub fn factor(
+        lambda: &SpRowMat,
+        kind: CholKind,
+        engine: &dyn GemmEngine,
+    ) -> Result<LambdaFactor, FactorError> {
+        let q = lambda.rows();
+        match kind {
+            CholKind::Dense => DenseChol::factor(&lambda.to_dense(), engine)
+                .map(LambdaFactor::Dense)
+                .map_err(|_| FactorError::NotPd),
+            CholKind::SparseRcm => match SparseChol::factor(lambda, true, usize::MAX) {
+                Ok(f) => Ok(LambdaFactor::Sparse(f)),
+                Err(SparseCholError::NotPositiveDefinite { .. }) => Err(FactorError::NotPd),
+                Err(SparseCholError::TooMuchFill { .. }) => unreachable!("no cap set"),
+            },
+            CholKind::Auto => {
+                // Cap fill at ~64·nnz(Λ) before considering dense fallback.
+                let cap = lambda.nnz().saturating_mul(64).max(1 << 22);
+                match SparseChol::factor(lambda, true, cap) {
+                    Ok(f) => Ok(LambdaFactor::Sparse(f)),
+                    Err(SparseCholError::NotPositiveDefinite { .. }) => Err(FactorError::NotPd),
+                    Err(SparseCholError::TooMuchFill { .. }) => {
+                        if q <= AUTO_DENSE_MAX_Q {
+                            DenseChol::factor(&lambda.to_dense(), engine)
+                                .map(LambdaFactor::Dense)
+                                .map_err(|_| FactorError::NotPd)
+                        } else {
+                            // Very large + very filled: retry sparse uncapped
+                            // rather than allocating q² (slow but bounded mem).
+                            match SparseChol::factor(lambda, true, usize::MAX) {
+                                Ok(f) => Ok(LambdaFactor::Sparse(f)),
+                                Err(_) => Err(FactorError::NotPd),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn logdet(&self) -> f64 {
+        match self {
+            LambdaFactor::Dense(f) => f.logdet(),
+            LambdaFactor::Sparse(f) => f.logdet(),
+        }
+    }
+
+    /// Solve Λ x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        match self {
+            LambdaFactor::Dense(f) => {
+                let mut x = b.to_vec();
+                f.solve(&mut x);
+                x
+            }
+            LambdaFactor::Sparse(f) => f.solve(b),
+        }
+    }
+
+    /// bᵀ Λ⁻¹ b.
+    pub fn quad_form_inv(&self, b: &[f64]) -> f64 {
+        match self {
+            LambdaFactor::Dense(f) => f.quad_form_inv(b),
+            LambdaFactor::Sparse(f) => f.quad_form_inv(b),
+        }
+    }
+
+    /// tr(Λ⁻¹ R̃ᵀR̃)/n for R̃ᵀ given as a q×n matrix — the objective's trace
+    /// term, computed as Σ_k ‖L⁻¹ r̃_k‖²/n without forming Λ⁻¹.
+    pub fn trace_quad(&self, rt: &Mat) -> f64 {
+        let (q, n) = (rt.rows(), rt.cols());
+        let mut total = 0.0;
+        let mut col = vec![0.0; q];
+        for k in 0..n {
+            for j in 0..q {
+                col[j] = rt[(j, k)];
+            }
+            total += self.quad_form_inv(&col);
+        }
+        total / n as f64
+    }
+
+    /// Dense Σ = Λ⁻¹ (non-block solvers).
+    pub fn inverse_dense(&self, engine: &dyn GemmEngine) -> Mat {
+        match self {
+            LambdaFactor::Dense(f) => f.inverse(engine),
+            LambdaFactor::Sparse(f) => {
+                // Solve against identity columns (used only in tests/small q).
+                let q = f.n();
+                let mut inv = Mat::zeros(q, q);
+                let mut e = vec![0.0; q];
+                for j in 0..q {
+                    e[j] = 1.0;
+                    let x = f.solve(&e);
+                    for i in 0..q {
+                        inv[(i, j)] = x[i];
+                    }
+                    e[j] = 0.0;
+                }
+                inv.symmetrize();
+                inv
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check_close, property};
+
+    fn chain_lambda(q: usize) -> SpRowMat {
+        let mut a = SpRowMat::zeros(q, q);
+        for i in 0..q {
+            a.set(i, i, 2.25);
+            if i > 0 {
+                a.set_sym(i, i - 1, 1.0);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn dense_and_sparse_agree() {
+        property(20, |rng| {
+            let q = 2 + rng.below(30);
+            let lam = chain_lambda(q);
+            let eng = NativeGemm::new(1);
+            let fd = LambdaFactor::factor(&lam, CholKind::Dense, &eng).map_err(|e| e.to_string())?;
+            let fs =
+                LambdaFactor::factor(&lam, CholKind::SparseRcm, &eng).map_err(|e| e.to_string())?;
+            check_close(fd.logdet(), fs.logdet(), 1e-9, "logdet")?;
+            let b: Vec<f64> = (0..q).map(|_| rng.normal()).collect();
+            check_close(fd.quad_form_inv(&b), fs.quad_form_inv(&b), 1e-8, "quad")?;
+            let n = 3;
+            let rt = Mat::from_fn(q, n, |_, _| rng.normal());
+            check_close(fd.trace_quad(&rt), fs.trace_quad(&rt), 1e-8, "trace")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn not_pd_detected_by_all_kinds() {
+        let mut lam = SpRowMat::eye(4);
+        lam.set(1, 1, -1.0);
+        let eng = NativeGemm::new(1);
+        for kind in [CholKind::Dense, CholKind::SparseRcm, CholKind::Auto] {
+            assert!(matches!(
+                LambdaFactor::factor(&lam, kind, &eng),
+                Err(FactorError::NotPd)
+            ));
+        }
+    }
+
+    #[test]
+    fn trace_quad_matches_explicit() {
+        let mut rng = Rng::new(7);
+        let q = 10;
+        let n = 5;
+        let lam = chain_lambda(q);
+        let eng = NativeGemm::new(1);
+        let f = LambdaFactor::factor(&lam, CholKind::Dense, &eng).unwrap();
+        let rt = Mat::from_fn(q, n, |_, _| rng.normal());
+        // Explicit: tr(Λ⁻¹ R̃ᵀR̃)/n with R̃ᵀR̃ = rt·rtᵀ.
+        let inv = f.inverse_dense(&eng);
+        let mut gram = Mat::zeros(q, q);
+        eng.gemm_nt(1.0, &rt, &rt, 0.0, &mut gram);
+        let mut want = 0.0;
+        for i in 0..q {
+            for j in 0..q {
+                want += inv[(i, j)] * gram[(j, i)];
+            }
+        }
+        want /= n as f64;
+        assert!((f.trace_quad(&rt) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,92 @@
+//! CGGM parameters: the sparse output network Λ (q×q, symmetric positive
+//! definite) and the sparse input→output map Θ (p×q).
+
+use crate::linalg::sparse::SpRowMat;
+
+/// Sparse CGGM parameter pair.
+#[derive(Clone, Debug)]
+pub struct CggmModel {
+    /// Output-network precision-like matrix, q×q symmetric, PD.
+    pub lambda: SpRowMat,
+    /// Input→output mapping, p×q.
+    pub theta: SpRowMat,
+}
+
+impl CggmModel {
+    /// Paper initialization: Θ ← 0, Λ ← I_q.
+    pub fn init(p: usize, q: usize) -> CggmModel {
+        CggmModel {
+            lambda: SpRowMat::eye(q),
+            theta: SpRowMat::zeros(p, q),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.theta.rows()
+    }
+
+    pub fn q(&self) -> usize {
+        self.lambda.rows()
+    }
+
+    /// ‖Λ‖₀ — paper's Table 1 reports this including both triangles + diag.
+    pub fn lambda_nnz(&self) -> usize {
+        self.lambda.nnz()
+    }
+
+    pub fn theta_nnz(&self) -> usize {
+        self.theta.nnz()
+    }
+
+    /// Number of off-diagonal edges in the Λ network (each counted once).
+    pub fn lambda_edges(&self) -> usize {
+        let mut e = 0;
+        for i in 0..self.q() {
+            e += self.lambda.row(i).iter().filter(|&&(j, _)| j > i).count();
+        }
+        e
+    }
+
+    /// h(Λ,Θ) = λ_Λ‖Λ‖₁ + λ_Θ‖Θ‖₁.
+    pub fn penalty(&self, lam_l: f64, lam_t: f64) -> f64 {
+        lam_l * self.lambda.l1_norm() + lam_t * self.theta.l1_norm()
+    }
+
+    /// Drop exact zeros from both patterns.
+    pub fn prune(&mut self) {
+        self.lambda.prune(0.0);
+        self.theta.prune(0.0);
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.lambda.bytes() + self.theta.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes() {
+        let m = CggmModel::init(5, 3);
+        assert_eq!(m.p(), 5);
+        assert_eq!(m.q(), 3);
+        assert_eq!(m.lambda_nnz(), 3);
+        assert_eq!(m.theta_nnz(), 0);
+        assert_eq!(m.lambda_edges(), 0);
+    }
+
+    #[test]
+    fn penalty_and_edges() {
+        let mut m = CggmModel::init(2, 3);
+        m.lambda.set_sym(0, 1, -2.0);
+        m.theta.set(1, 2, 3.0);
+        // ‖Λ‖₁ = 3 (diag) + 2·2 (sym pair) = 7; ‖Θ‖₁ = 3.
+        assert_eq!(m.penalty(1.0, 10.0), 7.0 + 30.0);
+        assert_eq!(m.lambda_edges(), 1);
+        m.theta.set(1, 2, 0.0);
+        m.prune();
+        assert_eq!(m.theta_nnz(), 0);
+    }
+}

@@ -1,0 +1,317 @@
+//! The l1-regularized CGGM objective (paper Eq. 1) and its gradients (Eq. 3).
+//!
+//! ```text
+//! f(Λ,Θ) = g(Λ,Θ) + h(Λ,Θ)
+//! g = -log|Λ| + tr(S_yy Λ + 2 S_xyᵀΘ + Λ⁻¹ΘᵀS_xxΘ)
+//! h = λ_Λ‖Λ‖₁ + λ_Θ‖Θ‖₁
+//! ∇_Λ g = S_yy - Σ - Ψ,   ∇_Θ g = 2 S_xy + 2 Γ
+//! Σ = Λ⁻¹, Ψ = ΣΘᵀS_xxΘΣ, Γ = S_xxΘΣ
+//! ```
+//!
+//! Everything is evaluated without dense p×p / p×q intermediates: sparse
+//! patterns drive the trace terms and the q×n matrix `rt = (XΘ)ᵀ` carries
+//! all S_xx interactions (n ≪ p, q).
+
+use super::dataset::Dataset;
+use super::factor::{CholKind, FactorError, LambdaFactor};
+use super::model::CggmModel;
+use crate::gemm::GemmEngine;
+use crate::linalg::dense::Mat;
+
+/// Problem definition: data + regularization.
+pub struct Objective<'a> {
+    pub data: &'a Dataset,
+    /// λ_Λ.
+    pub lam_l: f64,
+    /// λ_Θ.
+    pub lam_t: f64,
+    pub chol: CholKind,
+}
+
+/// The smooth terms of f, kept separate so line search can update the linear
+/// pieces in α analytically.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SmoothParts {
+    pub logdet: f64,
+    /// tr(S_yy Λ).
+    pub tr_syy_lambda: f64,
+    /// 2 tr(S_xyᵀ Θ).
+    pub tr_sxy_theta: f64,
+    /// tr(Λ⁻¹ Θᵀ S_xx Θ).
+    pub tr_quad: f64,
+}
+
+impl SmoothParts {
+    /// g(Λ,Θ).
+    pub fn g(&self) -> f64 {
+        -self.logdet + self.tr_syy_lambda + self.tr_sxy_theta + self.tr_quad
+    }
+}
+
+impl<'a> Objective<'a> {
+    pub fn new(data: &'a Dataset, lam_l: f64, lam_t: f64) -> Objective<'a> {
+        Objective {
+            data,
+            lam_l,
+            lam_t,
+            chol: CholKind::Auto,
+        }
+    }
+
+    pub fn with_chol(mut self, kind: CholKind) -> Self {
+        self.chol = kind;
+        self
+    }
+
+    /// tr(S_yy A) for sparse symmetric A — O(nnz(A)·n).
+    pub fn tr_syy_sparse(&self, a: &crate::linalg::sparse::SpRowMat) -> f64 {
+        let mut t = 0.0;
+        for i in 0..a.rows() {
+            for &(j, v) in a.row(i) {
+                t += v * self.data.syy(i, j);
+            }
+        }
+        t
+    }
+
+    /// 2 tr(S_xyᵀ A) for sparse A (p×q) — O(nnz(A)·n).
+    pub fn tr_sxy_sparse(&self, a: &crate::linalg::sparse::SpRowMat) -> f64 {
+        let mut t = 0.0;
+        for i in 0..a.rows() {
+            for &(j, v) in a.row(i) {
+                t += v * self.data.sxy(i, j);
+            }
+        }
+        2.0 * t
+    }
+
+    /// Full objective evaluation. Returns (f, parts, factor, rt).
+    pub fn eval(
+        &self,
+        model: &CggmModel,
+        engine: &dyn GemmEngine,
+    ) -> Result<(f64, SmoothParts, LambdaFactor, Mat), FactorError> {
+        let factor = LambdaFactor::factor(&model.lambda, self.chol, engine)?;
+        let rt = self.data.xtheta_t(&model.theta);
+        let parts = SmoothParts {
+            logdet: factor.logdet(),
+            tr_syy_lambda: self.tr_syy_sparse(&model.lambda),
+            tr_sxy_theta: self.tr_sxy_sparse(&model.theta),
+            tr_quad: factor.trace_quad(&rt),
+        };
+        let f = parts.g() + model.penalty(self.lam_l, self.lam_t);
+        Ok((f, parts, factor, rt))
+    }
+
+    /// Objective value only.
+    pub fn value(&self, model: &CggmModel, engine: &dyn GemmEngine) -> Result<f64, FactorError> {
+        Ok(self.eval(model, engine)?.0)
+    }
+
+    /// Dense ∇_Λ g = S_yy - Σ - Ψ given precomputed Σ and Ψ.
+    pub fn grad_lambda_dense(&self, sigma: &Mat, psi: &Mat, engine: &dyn GemmEngine) -> Mat {
+        let mut g = self.data.syy_dense(engine);
+        g.add_scaled(-1.0, sigma);
+        g.add_scaled(-1.0, psi);
+        g
+    }
+
+    /// Dense ∇_Θ g = 2 S_xy + 2 Γ, Γ = S_xxΘΣ computed n-factored:
+    /// Γ = Xᵀ(XΘΣ)/n = gemm_nt(xt, Σ·rt)/n. O(npq) but pure GEMM.
+    pub fn grad_theta_dense(&self, sigma: &Mat, rt: &Mat, engine: &dyn GemmEngine) -> Mat {
+        let d = self.data;
+        // sr = Σ · rt  (q×n)
+        let mut sr = Mat::zeros(d.q(), d.n());
+        engine.gemm(1.0, sigma, rt, 0.0, &mut sr);
+        // Γ = gemm_nt(xt, sr)/n  (p×q)
+        let mut g = d.sxy_dense(engine);
+        g.scale(2.0);
+        engine.gemm_nt(2.0 * d.inv_n(), &d.xt, &sr, 1.0, &mut g);
+        g
+    }
+
+    /// Ψ = ΣΘᵀS_xxΘΣ computed as Gram of rows of `sr = Σ·rt` divided by n.
+    pub fn psi_dense(&self, sigma: &Mat, rt: &Mat, engine: &dyn GemmEngine) -> Mat {
+        let d = self.data;
+        let mut sr = Mat::zeros(d.q(), d.n());
+        engine.gemm(1.0, sigma, rt, 0.0, &mut sr);
+        let mut psi = Mat::zeros(d.q(), d.q());
+        engine.gemm_nt(d.inv_n(), &sr, &sr, 0.0, &mut psi);
+        psi.symmetrize();
+        psi
+    }
+}
+
+/// Minimum-norm subgradient contribution of one coordinate (paper §5 stopping
+/// rule): `g + λ·sign(x)` on the support, `max(|g|-λ, 0)` off it.
+#[inline]
+pub fn min_norm_subgrad(grad: f64, x: f64, lam: f64) -> f64 {
+    if x != 0.0 {
+        grad + lam * x.signum()
+    } else {
+        (grad.abs() - lam).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::linalg::sparse::SpRowMat;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check_close, property};
+
+    fn small_problem(rng: &mut Rng, n: usize, p: usize, q: usize) -> (Dataset, CggmModel) {
+        let data = Dataset::new(
+            Mat::from_fn(p, n, |_, _| rng.normal()),
+            Mat::from_fn(q, n, |_, _| rng.normal()),
+        );
+        let mut model = CggmModel::init(p, q);
+        // Random sparse Λ (diagonally dominant) and Θ.
+        for i in 0..q {
+            model.lambda.set(i, i, 2.0 + rng.uniform());
+        }
+        for _ in 0..q {
+            let (i, j) = (rng.below(q), rng.below(q));
+            if i != j {
+                model.lambda.set_sym(i, j, 0.2 * rng.normal());
+            }
+        }
+        for i in 0..q {
+            let rowsum: f64 = model.lambda.row(i).iter().map(|e| e.1.abs()).sum();
+            let d = model.lambda.get(i, i).abs();
+            model.lambda.set(i, i, rowsum - d + 1.0 + rng.uniform());
+        }
+        for _ in 0..p {
+            model.theta.set(rng.below(p), rng.below(q), rng.normal() * 0.5);
+        }
+        (data, model)
+    }
+
+    /// Brute-force objective via dense algebra.
+    fn dense_objective(
+        data: &Dataset,
+        model: &CggmModel,
+        lam_l: f64,
+        lam_t: f64,
+        eng: &dyn GemmEngine,
+    ) -> f64 {
+        let q = data.q();
+        let lam_d = model.lambda.to_dense();
+        let th_d = model.theta.to_dense();
+        let chol = crate::linalg::chol_dense::DenseChol::factor(&lam_d, eng).unwrap();
+        let sigma = chol.inverse(eng);
+        let syy = data.syy_dense(eng);
+        let sxx = data.sxx_dense(eng);
+        let sxy = data.sxy_dense(eng);
+        let mut tr1 = 0.0;
+        for i in 0..q {
+            for j in 0..q {
+                tr1 += syy[(i, j)] * lam_d[(j, i)];
+            }
+        }
+        let mut tr2 = 0.0;
+        for i in 0..data.p() {
+            for j in 0..q {
+                tr2 += sxy[(i, j)] * th_d[(i, j)];
+            }
+        }
+        // tr(Σ Θᵀ S_xx Θ)
+        let mut sxt = Mat::zeros(data.p(), q);
+        eng.gemm(1.0, &sxx, &th_d, 0.0, &mut sxt);
+        let mut tts = Mat::zeros(q, q);
+        eng.gemm_tn(1.0, &th_d, &sxt, 0.0, &mut tts);
+        let mut tr3 = 0.0;
+        for i in 0..q {
+            for j in 0..q {
+                tr3 += sigma[(i, j)] * tts[(j, i)];
+            }
+        }
+        -chol.logdet() + tr1 + 2.0 * tr2 + tr3
+            + lam_l * model.lambda.l1_norm()
+            + lam_t * model.theta.l1_norm()
+    }
+
+    #[test]
+    fn objective_matches_dense_bruteforce() {
+        property(25, |rng| {
+            let (n, p, q) = (3 + rng.below(8), 2 + rng.below(6), 2 + rng.below(6));
+            let (data, model) = small_problem(rng, n, p, q);
+            let eng = NativeGemm::new(1);
+            let obj = Objective::new(&data, 0.3, 0.2);
+            let (f, _, _, _) = obj.eval(&model, &eng).map_err(|e| e.to_string())?;
+            let want = dense_objective(&data, &model, 0.3, 0.2, &eng);
+            check_close(f, want, 1e-9, "objective")
+        });
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        property(10, |rng| {
+            let (n, p, q) = (6, 3, 3);
+            let (data, model) = small_problem(rng, n, p, q);
+            let eng = NativeGemm::new(1);
+            let obj = Objective::new(&data, 0.0, 0.0); // smooth part only
+            let (_, _, factor, rt) = obj.eval(&model, &eng).map_err(|e| e.to_string())?;
+            let sigma = factor.inverse_dense(&eng);
+            let psi = obj.psi_dense(&sigma, &rt, &eng);
+            let gl = obj.grad_lambda_dense(&sigma, &psi, &eng);
+            let gt = obj.grad_theta_dense(&sigma, &rt, &eng);
+            let h = 1e-6;
+            // Λ finite difference (symmetric pair perturbation / diagonal).
+            for i in 0..q {
+                for j in i..q {
+                    let mut mp = model.clone();
+                    mp.lambda.add_sym(i, j, h);
+                    let mut mm = model.clone();
+                    mm.lambda.add_sym(i, j, -h);
+                    let fp = obj.value(&mp, &eng).map_err(|e| e.to_string())?;
+                    let fm = obj.value(&mm, &eng).map_err(|e| e.to_string())?;
+                    let fd = (fp - fm) / (2.0 * h);
+                    // Symmetric perturbation hits both (i,j) and (j,i).
+                    let want = if i == j { gl[(i, i)] } else { 2.0 * gl[(i, j)] };
+                    check_close(fd, want, 2e-4, &format!("∇Λ[{i},{j}]"))?;
+                }
+            }
+            // Θ finite difference.
+            for i in 0..p {
+                for j in 0..q {
+                    let mut mp = model.clone();
+                    mp.theta.add(i, j, h);
+                    let mut mm = model.clone();
+                    mm.theta.add(i, j, -h);
+                    let fp = obj.value(&mp, &eng).map_err(|e| e.to_string())?;
+                    let fm = obj.value(&mm, &eng).map_err(|e| e.to_string())?;
+                    let fd = (fp - fm) / (2.0 * h);
+                    check_close(fd, gt[(i, j)], 2e-4, &format!("∇Θ[{i},{j}]"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn min_norm_subgrad_cases() {
+        assert_eq!(min_norm_subgrad(2.0, 1.0, 0.5), 2.5);
+        assert_eq!(min_norm_subgrad(2.0, -1.0, 0.5), 1.5);
+        assert_eq!(min_norm_subgrad(2.0, 0.0, 0.5), 1.5);
+        assert_eq!(min_norm_subgrad(0.3, 0.0, 0.5), 0.0);
+    }
+
+    #[test]
+    fn psi_positive_semidefinite_diag() {
+        let mut rng = Rng::new(11);
+        let (data, model) = small_problem(&mut rng, 8, 4, 5);
+        let eng = NativeGemm::new(1);
+        let obj = Objective::new(&data, 0.1, 0.1);
+        let (_, _, factor, rt) = obj.eval(&model, &eng).unwrap();
+        let sigma = factor.inverse_dense(&eng);
+        let psi = obj.psi_dense(&sigma, &rt, &eng);
+        for i in 0..data.q() {
+            assert!(psi[(i, i)] >= -1e-12);
+        }
+        let mut s = SpRowMat::from_dense(&psi, 0.0);
+        s.prune(1e-12);
+        assert!(s.is_symmetric(1e-9));
+    }
+}

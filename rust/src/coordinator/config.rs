@@ -1,0 +1,246 @@
+//! Run configuration: defaults ← JSON config file ← CLI flags.
+//!
+//! A config file (see `configs/` for committed examples) is a JSON object
+//! whose keys mirror the CLI flags; unknown keys are rejected so typos fail
+//! loudly.
+
+use crate::cggm::factor::CholKind;
+use crate::datagen::Workload;
+use crate::solvers::{SolveOptions, SolverKind};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::membudget::{parse_bytes, MemBudget};
+
+/// Full run configuration for `cggm fit` / experiment runs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub workload: Workload,
+    pub p: usize,
+    pub q: usize,
+    pub n: usize,
+    pub seed: u64,
+    pub solver: SolverKind,
+    pub lam_l: f64,
+    pub lam_t: f64,
+    pub max_iter: usize,
+    pub tol: f64,
+    pub threads: usize,
+    pub engine: String,
+    pub tile: usize,
+    pub mem_budget: Option<usize>,
+    pub clustering: bool,
+    pub time_limit: f64,
+    pub calibrate: bool,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workload: Workload::Chain,
+            p: 200,
+            q: 200,
+            n: 100,
+            seed: 1,
+            solver: SolverKind::AltNewtonCd,
+            lam_l: 0.5,
+            lam_t: 0.5,
+            max_iter: 100,
+            tol: 0.01,
+            threads: 1,
+            engine: "native".into(),
+            tile: 256,
+            mem_budget: None,
+            clustering: true,
+            time_limit: 0.0,
+            calibrate: false,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config file: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config parse: {0}")]
+    Json(String),
+    #[error("unknown config key '{0}'")]
+    UnknownKey(String),
+    #[error("bad value for '{key}': {msg}")]
+    BadValue { key: String, msg: String },
+}
+
+impl RunConfig {
+    /// Layer a JSON config file over the defaults.
+    pub fn from_file(path: &str) -> Result<RunConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text).map_err(|e| ConfigError::Json(e.to_string()))?;
+        let mut cfg = RunConfig::default();
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| ConfigError::Json("top level must be an object".into()))?;
+        for (key, val) in obj {
+            cfg.apply(key, val)?;
+        }
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, key: &str, val: &Json) -> Result<(), ConfigError> {
+        let bad = |msg: &str| ConfigError::BadValue {
+            key: key.to_string(),
+            msg: msg.to_string(),
+        };
+        match key {
+            "workload" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string"))?;
+                self.workload = Workload::parse(s).ok_or_else(|| bad("unknown workload"))?;
+            }
+            "p" => self.p = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "q" => self.q = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "n" => self.n = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "seed" => self.seed = val.as_usize().ok_or_else(|| bad("expected int"))? as u64,
+            "solver" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string"))?;
+                self.solver = SolverKind::parse(s).ok_or_else(|| bad("unknown solver"))?;
+            }
+            "lambda" => {
+                let x = val.as_f64().ok_or_else(|| bad("expected number"))?;
+                self.lam_l = x;
+                self.lam_t = x;
+            }
+            "lambda_l" => self.lam_l = val.as_f64().ok_or_else(|| bad("expected number"))?,
+            "lambda_t" => self.lam_t = val.as_f64().ok_or_else(|| bad("expected number"))?,
+            "max_iter" => self.max_iter = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "tol" => self.tol = val.as_f64().ok_or_else(|| bad("expected number"))?,
+            "threads" => self.threads = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "engine" => {
+                self.engine = val.as_str().ok_or_else(|| bad("expected string"))?.into()
+            }
+            "tile" => self.tile = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "mem_budget" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string like '512MB'"))?;
+                self.mem_budget =
+                    Some(parse_bytes(s).ok_or_else(|| bad("unparseable byte size"))?);
+            }
+            "clustering" => {
+                self.clustering = val.as_bool().ok_or_else(|| bad("expected bool"))?
+            }
+            "time_limit" => {
+                self.time_limit = val.as_f64().ok_or_else(|| bad("expected number"))?
+            }
+            "calibrate" => self.calibrate = val.as_bool().ok_or_else(|| bad("expected bool"))?,
+            "out_dir" => {
+                self.out_dir = val.as_str().ok_or_else(|| bad("expected string"))?.into()
+            }
+            other => return Err(ConfigError::UnknownKey(other.to_string())),
+        }
+        Ok(())
+    }
+
+    /// Layer CLI flags over this config.
+    pub fn apply_args(&mut self, args: &Args) {
+        if let Some(w) = args.opt("workload").and_then(Workload::parse) {
+            self.workload = w;
+        }
+        self.p = args.get_usize("p", self.p);
+        self.q = args.get_usize("q", self.q);
+        self.n = args.get_usize("n", self.n);
+        self.seed = args.get_u64("seed", self.seed);
+        if let Some(s) = args.opt("solver").and_then(SolverKind::parse) {
+            self.solver = s;
+        }
+        if let Some(l) = args.opt("lambda") {
+            let x: f64 = l.parse().expect("--lambda expects a number");
+            self.lam_l = x;
+            self.lam_t = x;
+        }
+        self.lam_l = args.get_f64("lambda-l", self.lam_l);
+        self.lam_t = args.get_f64("lambda-t", self.lam_t);
+        self.max_iter = args.get_usize("max-iter", self.max_iter);
+        self.tol = args.get_f64("tol", self.tol);
+        self.threads = args.get_usize("threads", self.threads);
+        self.engine = args.get_str("engine", &self.engine);
+        self.tile = args.get_usize("tile", self.tile);
+        if let Some(b) = args.opt("mem-budget") {
+            self.mem_budget = Some(parse_bytes(b).expect("--mem-budget like 512MB"));
+        }
+        if args.flag("no-clustering") {
+            self.clustering = false;
+        }
+        self.time_limit = args.get_f64("time-limit", self.time_limit);
+        if args.flag("calibrate") {
+            self.calibrate = true;
+        }
+        self.out_dir = args.get_str("out", &self.out_dir);
+    }
+
+    /// Produce solver options.
+    pub fn solve_options(&self) -> SolveOptions {
+        SolveOptions {
+            lam_l: self.lam_l,
+            lam_t: self.lam_t,
+            max_iter: self.max_iter,
+            tol: self.tol,
+            threads: self.threads,
+            chol: if self.solver == SolverKind::AltNewtonBcd {
+                CholKind::Auto
+            } else {
+                CholKind::Auto
+            },
+            budget: self
+                .mem_budget
+                .map(MemBudget::new)
+                .unwrap_or_else(MemBudget::unlimited),
+            clustering: self.clustering,
+            time_limit: self.time_limit,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_and_args_layering() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_test.json");
+        std::fs::write(
+            &tmp,
+            r#"{"workload": "cluster", "p": 500, "lambda": 0.7,
+                "mem_budget": "64MB", "solver": "bcd"}"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.workload, Workload::Cluster);
+        assert_eq!(cfg.p, 500);
+        assert_eq!(cfg.lam_l, 0.7);
+        assert_eq!(cfg.mem_budget, Some(64 << 20));
+        assert_eq!(cfg.solver, SolverKind::AltNewtonBcd);
+        // CLI overrides file.
+        let args = Args::parse(
+            &["--p".into(), "900".into(), "--no-clustering".into()],
+            &["no-clustering"],
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.p, 900);
+        assert!(!cfg.clustering);
+        let opts = cfg.solve_options();
+        assert_eq!(opts.lam_l, 0.7);
+        assert_eq!(opts.budget.limit(), 64 << 20);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_bad.json");
+        std::fs::write(&tmp, r#"{"workloda": "chain"}"#).unwrap();
+        assert!(matches!(
+            RunConfig::from_file(tmp.to_str().unwrap()),
+            Err(ConfigError::UnknownKey(_))
+        ));
+        let _ = std::fs::remove_file(tmp);
+    }
+}

@@ -1,0 +1,271 @@
+//! Run coordination: configuration, λ calibration, dataset IO, and the
+//! fit driver shared by the CLI and the experiment harness.
+
+pub mod config;
+
+use crate::cggm::Dataset;
+use crate::datagen::{self, Problem, Workload};
+use crate::gemm::GemmEngine;
+use crate::metrics::f1_edges_sym;
+use crate::solvers::{solve, SolveError, SolveOptions, SolveResult, SolverKind};
+use crate::util::json::Json;
+use std::path::Path;
+
+pub use config::RunConfig;
+
+/// One timed solver run with derived summary numbers (a row of Table 1).
+pub struct RunSummary {
+    pub solver: SolverKind,
+    pub seconds: f64,
+    pub iters: usize,
+    pub converged: bool,
+    pub f: f64,
+    pub lambda_nnz: usize,
+    pub theta_nnz: usize,
+    pub f1_lambda: Option<f64>,
+    pub peak_bytes: usize,
+}
+
+impl RunSummary {
+    pub fn from_result(
+        kind: SolverKind,
+        res: &SolveResult,
+        truth: Option<&crate::cggm::CggmModel>,
+        peak_bytes: usize,
+    ) -> RunSummary {
+        RunSummary {
+            solver: kind,
+            seconds: res.trace.total_seconds,
+            iters: res.trace.records.len(),
+            converged: res.trace.converged,
+            f: res.trace.final_f().unwrap_or(f64::NAN),
+            lambda_nnz: res.model.lambda_nnz(),
+            theta_nnz: res.model.theta_nnz(),
+            f1_lambda: truth.map(|t| f1_edges_sym(&res.model.lambda, &t.lambda).f1),
+            peak_bytes,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("solver", Json::str(self.solver.name())),
+            ("seconds", Json::num(self.seconds)),
+            ("iters", Json::num(self.iters as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("f", Json::num(self.f)),
+            ("lambda_nnz", Json::num(self.lambda_nnz as f64)),
+            ("theta_nnz", Json::num(self.theta_nnz as f64)),
+            (
+                "f1_lambda",
+                self.f1_lambda.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("peak_bytes", Json::num(self.peak_bytes as f64)),
+        ])
+    }
+}
+
+/// Fit with a solver and summarize (trace CSV optionally written).
+pub fn run_fit(
+    kind: SolverKind,
+    prob: &Problem,
+    opts: &SolveOptions,
+    engine: &dyn GemmEngine,
+    trace_out: Option<&Path>,
+) -> Result<(RunSummary, SolveResult), SolveError> {
+    let res = solve(kind, &prob.data, opts, engine)?;
+    if let Some(path) = trace_out {
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let _ = std::fs::write(path, res.trace.to_csv());
+    }
+    let summary = RunSummary::from_result(kind, &res, Some(&prob.truth), opts.budget.peak());
+    Ok((summary, res))
+}
+
+/// Calibrate λ so the estimated support sizes land near the ground truth
+/// (paper §5.1: "We choose λ_Λ and λ_Θ so that the number of estimated edges
+/// in Λ and Θ is close to ground truth"). Geometric bisection on a shared
+/// scale factor using short AltNewtonCD runs.
+pub fn calibrate_lambda(
+    prob: &Problem,
+    engine: &dyn GemmEngine,
+    base: &SolveOptions,
+    steps: usize,
+) -> (f64, f64) {
+    let target_l = prob.truth.lambda_nnz() as f64;
+    let target_t = prob.truth.theta_nnz().max(1) as f64;
+    // Data-driven bracket: above λ_max = max |∇g| at the initial iterate
+    // nothing enters the active set, so probing far below it creates huge
+    // dense subproblems. Estimate λ_max from sampled gradient entries
+    // (∇_Λ ≈ S_yy off-diagonal, ∇_Θ = 2S_xy at (I, 0)).
+    let (p, q) = (prob.p(), prob.q());
+    let mut rng = crate::util::rng::Rng::new(0x0ca1);
+    let mut gmax = 1e-6f64;
+    for _ in 0..4000 {
+        let (i, j) = (rng.below(q), rng.below(q));
+        if i != j {
+            gmax = gmax.max(prob.data.syy(i, j).abs());
+        }
+        gmax = gmax.max(2.0 * prob.data.sxy(rng.below(p), rng.below(q)).abs());
+    }
+    let probe = |lam_l: f64, lam_t: f64| -> (f64, f64) {
+        let opts = SolveOptions {
+            lam_l,
+            lam_t,
+            max_iter: 6,
+            trace_f: false,
+            time_limit: 120.0,
+            ..base.clone()
+        };
+        match solve(SolverKind::AltNewtonCd, &prob.data, &opts, engine) {
+            Ok(res) => (
+                res.model.lambda_nnz() as f64,
+                res.model.theta_nnz() as f64,
+            ),
+            Err(_) => (f64::INFINITY, f64::INFINITY),
+        }
+    };
+    // Independent geometric bisection per parameter: each probe updates both
+    // brackets using its own density ratio.
+    let (mut lo_l, mut hi_l) = (0.02 * gmax, 1.2 * gmax);
+    let (mut lo_t, mut hi_t) = (0.02 * gmax, 1.2 * gmax);
+    let (mut best_l, mut best_t) = (0.5, 0.5);
+    for _ in 0..steps {
+        best_l = (lo_l * hi_l).sqrt();
+        best_t = (lo_t * hi_t).sqrt();
+        let (nl, nt) = probe(best_l, best_t);
+        if nl > target_l {
+            lo_l = best_l; // too dense → raise λ_Λ
+        } else {
+            hi_l = best_l;
+        }
+        if nt > target_t {
+            lo_t = best_t;
+        } else {
+            hi_t = best_t;
+        }
+    }
+    (best_l, best_t)
+}
+
+/// Generate a workload (CLI `gen` + experiments).
+pub fn generate_problem(
+    workload: Workload,
+    p: usize,
+    q: usize,
+    n: usize,
+    seed: u64,
+) -> Problem {
+    datagen::generate(workload, p, q, n, seed)
+}
+
+/// Save a dataset in a simple binary format (header + row-major f64).
+pub fn save_dataset(data: &Dataset, path: &Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(b"CGGMDS01")?;
+    for dim in [data.p() as u64, data.q() as u64, data.n() as u64] {
+        f.write_all(&dim.to_le_bytes())?;
+    }
+    for v in data.xt.data() {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for v in data.yt.data() {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a dataset saved by [`save_dataset`].
+pub fn load_dataset(path: &Path) -> std::io::Result<Dataset> {
+    use std::io::Read;
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != b"CGGMDS01" {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic",
+        ));
+    }
+    let mut dim = [0u8; 8];
+    let mut dims = [0usize; 3];
+    for d in dims.iter_mut() {
+        f.read_exact(&mut dim)?;
+        *d = u64::from_le_bytes(dim) as usize;
+    }
+    let (p, q, n) = (dims[0], dims[1], dims[2]);
+    let mut read_mat = |rows: usize, cols: usize| -> std::io::Result<crate::linalg::Mat> {
+        let mut data = vec![0.0f64; rows * cols];
+        let mut buf = [0u8; 8];
+        for v in data.iter_mut() {
+            f.read_exact(&mut buf)?;
+            *v = f64::from_le_bytes(buf);
+        }
+        Ok(crate::linalg::Mat::from_rows(rows, cols, data))
+    };
+    let xt = read_mat(p, n)?;
+    let yt = read_mat(q, n)?;
+    Ok(Dataset::new(xt, yt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+
+    #[test]
+    fn dataset_roundtrip() {
+        let prob = datagen::chain::generate(6, 4, 5, 1);
+        let dir = std::env::temp_dir().join("cggm_test_ds.bin");
+        save_dataset(&prob.data, &dir).unwrap();
+        let back = load_dataset(&dir).unwrap();
+        assert_eq!(back.p(), 6);
+        assert_eq!(back.q(), 4);
+        assert_eq!(back.n(), 5);
+        assert_eq!(back.xt.data(), prob.data.xt.data());
+        assert_eq!(back.yt.data(), prob.data.yt.data());
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn calibration_moves_toward_truth_density() {
+        let prob = datagen::chain::generate(20, 20, 150, 3);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions::default();
+        let (lam_l, _) = calibrate_lambda(&prob, &eng, &base, 5);
+        // Run at the calibrated λ and check the support is within 3× truth.
+        let opts = SolveOptions {
+            lam_l,
+            lam_t: lam_l,
+            max_iter: 40,
+            ..Default::default()
+        };
+        let res = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
+        let truth = prob.truth.lambda_nnz() as f64;
+        let got = res.model.lambda_nnz() as f64;
+        assert!(
+            got < 4.0 * truth && got > truth / 4.0,
+            "calibrated nnz {got} vs truth {truth} (λ={lam_l})"
+        );
+    }
+
+    #[test]
+    fn run_fit_summary() {
+        let prob = datagen::chain::generate(8, 8, 60, 2);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions {
+            lam_l: 0.3,
+            lam_t: 0.3,
+            max_iter: 30,
+            ..Default::default()
+        };
+        let (sum, _) = run_fit(SolverKind::AltNewtonCd, &prob, &opts, &eng, None).unwrap();
+        assert!(sum.converged);
+        assert!(sum.f.is_finite());
+        assert!(sum.f1_lambda.unwrap() >= 0.0);
+        let j = sum.to_json().to_string();
+        assert!(j.contains("alt_newton_cd"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Chain-graph workload (paper §5.1):
+//!
+//! "the true sparse parameter Λ is set with Λ_{i,i-1} = 1 and Λ_{i,i} = 2.25
+//! and the ground truth Θ is set with Θ_{i,i} = 1. […] one set of chain graph
+//! experiments where p = q, and another with an additional q irrelevant
+//! features unconnected to any outputs, so that p = 2q."
+
+use super::sampler::{gaussian_x, sample_dataset};
+use super::Problem;
+use crate::cggm::CggmModel;
+use crate::linalg::sparse::SpRowMat;
+use crate::util::rng::Rng;
+
+/// Ground-truth chain Λ* (q×q).
+pub fn chain_lambda(q: usize) -> SpRowMat {
+    let mut lambda = SpRowMat::zeros(q, q);
+    for i in 0..q {
+        lambda.set(i, i, 2.25);
+        if i > 0 {
+            lambda.set_sym(i, i - 1, 1.0);
+        }
+    }
+    lambda
+}
+
+/// Generate the chain problem. `p ≥ q`; inputs beyond the first q are the
+/// "irrelevant features unconnected to any outputs".
+pub fn generate(p: usize, q: usize, n: usize, seed: u64) -> Problem {
+    assert!(p >= q, "chain workload requires p ≥ q (got p={p}, q={q})");
+    let mut truth = CggmModel::init(p, q);
+    truth.lambda = chain_lambda(q);
+    for i in 0..q {
+        truth.theta.set(i, i, 1.0);
+    }
+    let mut rng = Rng::new(seed);
+    let data = sample_dataset(&truth, n, &mut rng, gaussian_x);
+    Problem { truth, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_truth_pattern() {
+        let prob = generate(10, 5, 8, 1);
+        assert_eq!(prob.p(), 10);
+        assert_eq!(prob.q(), 5);
+        assert_eq!(prob.n(), 8);
+        assert_eq!(prob.truth.lambda_edges(), 4);
+        assert_eq!(prob.truth.theta_nnz(), 5);
+        assert_eq!(prob.truth.lambda.get(3, 3), 2.25);
+        assert_eq!(prob.truth.lambda.get(3, 2), 1.0);
+        // Irrelevant inputs have empty Θ rows.
+        assert!(prob.truth.theta.row(7).is_empty());
+    }
+
+    #[test]
+    fn lambda_is_positive_definite() {
+        let lam = chain_lambda(50);
+        assert!(crate::linalg::chol_sparse::SparseChol::factor(&lam, false, usize::MAX).is_ok());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(6, 6, 5, 42);
+        let b = generate(6, 6, 5, 42);
+        assert_eq!(a.data.yt.data(), b.data.yt.data());
+        let c = generate(6, 6, 5, 43);
+        assert_ne!(a.data.yt.data(), c.data.yt.data());
+    }
+}

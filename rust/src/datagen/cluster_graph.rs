@@ -1,0 +1,179 @@
+//! Random clustered-graph workload (paper §5.1, following BigQUIC's GGM
+//! generator):
+//!
+//! "we set the true Λ to a graph with clusters of nodes of size 250 and with
+//! 90% of edges connecting randomly-selected nodes within clusters. We set
+//! the number of edges so that the average degree of each node is 10, with
+//! edge weights set to 1. We then set the diagonal values so that Λ is
+//! positive definite. To set the sparse patterns for Θ, we randomly select
+//! 100√p input variables as having edges to at least one output and
+//! distribute total 10q edges among those selected inputs […] edge weights 1."
+//!
+//! Cluster size, degree, and hub constants are configurable so scaled-down
+//! runs keep the same *structure* at smaller q (DESIGN.md §7).
+
+use super::sampler::{gaussian_x, sample_dataset};
+use super::Problem;
+use crate::cggm::CggmModel;
+use crate::linalg::sparse::SpRowMat;
+use crate::util::rng::Rng;
+
+/// Generator constants (paper defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterOptions {
+    pub cluster_size: usize,
+    /// Average node degree in Λ.
+    pub avg_degree: usize,
+    /// Fraction of edges kept within clusters.
+    pub within_frac: f64,
+    /// Θ hubs = hub_coeff·√p inputs with edges.
+    pub hub_coeff: f64,
+    /// Θ edges = theta_edges_per_q·q.
+    pub theta_edges_per_q: usize,
+    /// Λ edge weight.
+    pub weight: f64,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            cluster_size: 250,
+            avg_degree: 10,
+            within_frac: 0.9,
+            hub_coeff: 100.0,
+            theta_edges_per_q: 10,
+            weight: 1.0,
+        }
+    }
+}
+
+/// Ground-truth clustered Λ* (q×q), positive definite by diagonal dominance.
+pub fn clustered_lambda(q: usize, rng: &mut Rng, opts: &ClusterOptions) -> SpRowMat {
+    let mut lambda = SpRowMat::zeros(q, q);
+    let csize = opts.cluster_size.min(q).max(2);
+    let nclusters = q.div_ceil(csize);
+    let target_edges = q * opts.avg_degree / 2;
+    let mut added = 0usize;
+    let mut guard = 0usize;
+    while added < target_edges && guard < 50 * target_edges {
+        guard += 1;
+        let (i, j) = if rng.bernoulli(opts.within_frac) {
+            // Within a random cluster.
+            let c = rng.below(nclusters);
+            let lo = c * csize;
+            let hi = ((c + 1) * csize).min(q);
+            if hi - lo < 2 {
+                continue;
+            }
+            (lo + rng.below(hi - lo), lo + rng.below(hi - lo))
+        } else {
+            (rng.below(q), rng.below(q))
+        };
+        if i == j || lambda.get(i, j) != 0.0 {
+            continue;
+        }
+        lambda.set_sym(i, j, opts.weight);
+        added += 1;
+    }
+    // Diagonal: strict dominance ⇒ PD.
+    for i in 0..q {
+        let rowsum: f64 = lambda.row(i).iter().map(|e| e.1.abs()).sum();
+        lambda.set(i, i, rowsum + 1.0);
+    }
+    lambda
+}
+
+/// Ground-truth hub-sparse Θ* (p×q).
+pub fn hub_theta(p: usize, q: usize, rng: &mut Rng, opts: &ClusterOptions) -> SpRowMat {
+    let mut theta = SpRowMat::zeros(p, q);
+    let nhubs = ((opts.hub_coeff * (p as f64).sqrt()) as usize).clamp(1, p);
+    let hubs = rng.sample_distinct(p, nhubs);
+    let target = opts.theta_edges_per_q * q;
+    let mut added = 0;
+    let mut guard = 0;
+    while added < target && guard < 50 * target + 100 {
+        guard += 1;
+        let i = hubs[rng.below(nhubs)];
+        let j = rng.below(q);
+        if theta.get(i, j) != 0.0 {
+            continue;
+        }
+        theta.set(i, j, opts.weight);
+        added += 1;
+    }
+    theta
+}
+
+/// Generate the clustered random-graph problem.
+pub fn generate(p: usize, q: usize, n: usize, seed: u64, opts: &ClusterOptions) -> Problem {
+    let mut rng = Rng::new(seed);
+    let mut truth = CggmModel::init(p, q);
+    truth.lambda = clustered_lambda(q, &mut rng, opts);
+    truth.theta = hub_theta(p, q, &mut rng, opts);
+    let data = sample_dataset(&truth, n, &mut rng, gaussian_x);
+    Problem { truth, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> ClusterOptions {
+        ClusterOptions {
+            cluster_size: 25,
+            hub_coeff: 3.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lambda_structure() {
+        let mut rng = Rng::new(3);
+        let q = 200;
+        let opts = small_opts();
+        let lam = clustered_lambda(q, &mut rng, &opts);
+        assert!(lam.is_symmetric(0.0));
+        // Average degree ≈ 10.
+        let edges: usize = (0..q)
+            .map(|i| lam.row(i).iter().filter(|&&(j, _)| j > i).count())
+            .sum();
+        let avg_deg = 2.0 * edges as f64 / q as f64;
+        assert!((avg_deg - 10.0).abs() < 1.5, "avg degree {avg_deg}");
+        // Mostly within-cluster edges.
+        let mut within = 0usize;
+        for i in 0..q {
+            for &(j, _) in lam.row(i) {
+                if j > i && i / 25 == j / 25 {
+                    within += 1;
+                }
+            }
+        }
+        assert!(
+            within as f64 / edges as f64 > 0.8,
+            "within fraction {}",
+            within as f64 / edges as f64
+        );
+        // PD check.
+        assert!(crate::linalg::chol_sparse::SparseChol::factor(&lam, true, usize::MAX).is_ok());
+    }
+
+    #[test]
+    fn theta_hub_structure() {
+        let mut rng = Rng::new(4);
+        let (p, q) = (400, 100);
+        let opts = small_opts();
+        let th = hub_theta(p, q, &mut rng, &opts);
+        let nhubs_expected = (3.0 * (p as f64).sqrt()) as usize;
+        assert!(th.nonempty_rows() <= nhubs_expected);
+        assert_eq!(th.nnz(), opts.theta_edges_per_q * q);
+    }
+
+    #[test]
+    fn generate_end_to_end() {
+        let prob = generate(60, 40, 20, 9, &small_opts());
+        assert_eq!(prob.data.n(), 20);
+        assert_eq!(prob.data.p(), 60);
+        assert_eq!(prob.data.q(), 40);
+        assert!(prob.data.yt.frob_norm() > 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Wind-power forecasting generator — the application domain that motivated
+//! sparse Gaussian CRFs in Wytock & Kolter (2013), used by the
+//! `energy_forecast` example.
+//!
+//! q wind farms on a √q×√q grid; outputs are next-hour power deviations with
+//! a spatial neighbor network Λ* (adjacent farms co-vary). Inputs are, per
+//! farm, `lags` autoregressive wind-speed features plus a few global weather
+//! regime features, so p = q·lags + extras and Θ* maps each farm's own lags
+//! (plus upwind neighbors) to its output — banded, row-sparse.
+
+use super::sampler::sample_dataset;
+use super::Problem;
+use crate::cggm::CggmModel;
+use crate::linalg::sparse::SpRowMat;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyOptions {
+    /// Autoregressive lags per farm.
+    pub lags: usize,
+    /// Global weather-regime features.
+    pub globals: usize,
+    /// Spatial coupling weight in Λ*.
+    pub coupling: f64,
+}
+
+impl Default for EnergyOptions {
+    fn default() -> Self {
+        EnergyOptions {
+            lags: 3,
+            globals: 8,
+            coupling: 0.4,
+        }
+    }
+}
+
+/// Number of inputs for a given farm count.
+pub fn input_dim(q: usize, opts: &EnergyOptions) -> usize {
+    q * opts.lags + opts.globals
+}
+
+/// Generate the wind-farm problem with q farms.
+pub fn generate(q: usize, n: usize, seed: u64, opts: &EnergyOptions) -> Problem {
+    let p = input_dim(q, opts);
+    let side = (q as f64).sqrt().ceil() as usize;
+    let mut rng = Rng::new(seed);
+    let mut truth = CggmModel::init(p, q);
+
+    // Λ*: grid adjacency.
+    let mut lambda = SpRowMat::zeros(q, q);
+    for j in 0..q {
+        let (r, c) = (j / side, j % side);
+        if c + 1 < side && j + 1 < q {
+            lambda.set_sym(j, j + 1, opts.coupling);
+        }
+        if r + 1 < side && j + side < q {
+            lambda.set_sym(j, j + side, opts.coupling);
+        }
+    }
+    for j in 0..q {
+        let rowsum: f64 = lambda.row(j).iter().map(|e| e.1.abs()).sum();
+        lambda.set(j, j, rowsum + 1.0);
+    }
+    truth.lambda = lambda;
+
+    // Θ*: own lags with decaying weights + first lag of the east/south
+    // neighbors (upwind transport) + a couple of globals.
+    for j in 0..q {
+        for l in 0..opts.lags {
+            truth.theta.set(j * opts.lags + l, j, 0.8 / (l + 1) as f64);
+        }
+        let (r, c) = (j / side, j % side);
+        if c + 1 < side && j + 1 < q {
+            truth.theta.set((j + 1) * opts.lags, j, 0.3);
+        }
+        if r + 1 < side && j + side < q {
+            truth.theta.set((j + side) * opts.lags, j, 0.2);
+        }
+        // A global regime feature per row of the grid.
+        let g = q * opts.lags + (r % opts.globals.max(1));
+        truth.theta.set(g, j, 0.25);
+    }
+
+    // Inputs: lag features share a farm-level AR signal; globals are N(0,1).
+    let lags = opts.lags;
+    let nglob = opts.globals;
+    let draw_x = move |rng: &mut Rng, x: &mut [f64]| {
+        let nf = (x.len() - nglob) / lags;
+        for f in 0..nf {
+            let base = rng.normal();
+            for l in 0..lags {
+                // Lagged copies decorrelate with distance.
+                let w = 0.7f64.powi(l as i32);
+                x[f * lags + l] = w * base + (1.0 - w * w).sqrt() * rng.normal();
+            }
+        }
+        for g in 0..nglob {
+            x[x.len() - nglob + g] = rng.normal();
+        }
+    };
+    let data = sample_dataset(&truth, n, &mut rng, draw_x);
+    Problem { truth, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_grid_structure() {
+        let opts = EnergyOptions::default();
+        let prob = generate(16, 25, 5, &opts);
+        assert_eq!(prob.q(), 16);
+        assert_eq!(prob.p(), 16 * 3 + 8);
+        // Farm 0 couples to farm 1 (east) and farm 4 (south) on a 4×4 grid.
+        assert!(prob.truth.lambda.get(0, 1) > 0.0);
+        assert!(prob.truth.lambda.get(0, 4) > 0.0);
+        assert_eq!(prob.truth.lambda.get(0, 5), 0.0);
+        // Own-lag mapping present.
+        assert!(prob.truth.theta.get(0, 0) > 0.0);
+    }
+
+    #[test]
+    fn lag_features_are_correlated() {
+        let prob = generate(9, 800, 6, &EnergyOptions::default());
+        let d = &prob.data;
+        // lag0 and lag1 of farm 0 correlate strongly; farm 0 lag0 vs farm 5
+        // lag0 do not.
+        let c01 = d.sxx(0, 1);
+        let c_far = d.sxx(0, 5 * 3);
+        assert!(c01 > 0.4, "lag correlation {c01}");
+        assert!(c_far.abs() < 0.2, "cross-farm correlation {c_far}");
+    }
+}

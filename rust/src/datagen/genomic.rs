@@ -1,0 +1,168 @@
+//! Genomic (eQTL) data simulator — the substitution for the paper's private
+//! asthma dataset (§5.2: 442,440 SNPs × 10,256 expressions × 171 individuals).
+//!
+//! Structure preserved (DESIGN.md §7):
+//! - **X**: SNP genotypes in {0,1,2}, minor-allele frequency ~ U(0.05, 0.5),
+//!   organized in LD blocks — neighboring SNPs are correlated through a
+//!   shared latent haplotype signal. Columns standardized, so p ≫ q with
+//!   strongly correlated input groups (what makes S_xx rows expensive and
+//!   clustered).
+//! - **Λ***: clustered gene co-expression network (modules), reusing the
+//!   clustered-graph generator.
+//! - **Θ***: *cis* effects (a gene regulated by a few nearby SNPs) plus a few
+//!   *trans* hotspot SNPs that each regulate many genes — producing the
+//!   row-sparse Θ with non-empty-row count p̃ ≪ p that §4.2 exploits.
+
+use super::cluster_graph::{clustered_lambda, ClusterOptions};
+use super::sampler::sample_dataset;
+use super::Problem;
+use crate::cggm::CggmModel;
+use crate::linalg::sparse::SpRowMat;
+use crate::util::rng::Rng;
+
+/// Simulator constants.
+#[derive(Clone, Copy, Debug)]
+pub struct GenomicOptions {
+    /// SNPs per LD block.
+    pub ld_block: usize,
+    /// Within-block genotype correlation strength (0..1).
+    pub ld_rho: f64,
+    /// cis SNPs per gene.
+    pub cis_per_gene: usize,
+    /// Number of trans hotspot SNPs.
+    pub hotspots: usize,
+    /// Genes regulated per hotspot.
+    pub genes_per_hotspot: usize,
+    /// Gene-module size for Λ*.
+    pub module_size: usize,
+    /// Effect size of eQTL edges.
+    pub effect: f64,
+}
+
+impl Default for GenomicOptions {
+    fn default() -> Self {
+        GenomicOptions {
+            ld_block: 20,
+            ld_rho: 0.7,
+            cis_per_gene: 2,
+            hotspots: 10,
+            genes_per_hotspot: 30,
+            module_size: 50,
+            effect: 0.8,
+        }
+    }
+}
+
+/// Generate the genomic problem.
+pub fn generate(p: usize, q: usize, n: usize, seed: u64, opts: &GenomicOptions) -> Problem {
+    let mut rng = Rng::new(seed);
+    let mut truth = CggmModel::init(p, q);
+    truth.lambda = clustered_lambda(
+        q,
+        &mut rng,
+        &ClusterOptions {
+            cluster_size: opts.module_size,
+            avg_degree: 8,
+            ..Default::default()
+        },
+    );
+    truth.theta = eqtl_theta(p, q, &mut rng, opts);
+
+    // Genotype model: per individual, per LD block, a latent haplotype
+    // dosage h ~ N(0,1); SNP i has genotype Binomial(2, sigmoid-ish pi)
+    // where pi mixes its MAF with the block signal.
+    let mafs: Vec<f64> = (0..p).map(|_| rng.uniform_in(0.05, 0.5)).collect();
+    // Standardization constants under Hardy–Weinberg: mean 2·maf,
+    // var ≈ 2·maf·(1-maf) (approximate; post-standardized empirically below).
+    let ld_block = opts.ld_block.max(1);
+    let ld_rho = opts.ld_rho.clamp(0.0, 0.99);
+    let draw_x = move |rng: &mut Rng, x: &mut [f64]| {
+        let nblocks = x.len().div_ceil(ld_block);
+        for b in 0..nblocks {
+            let h = rng.normal();
+            let lo = b * ld_block;
+            let hi = ((b + 1) * ld_block).min(x.len());
+            for (i, xi) in x[lo..hi].iter_mut().enumerate() {
+                let snp = lo + i;
+                let maf = mafs[snp];
+                // shift allele probability by the block haplotype
+                let z = maf.ln() - (1.0 - maf).ln()
+                    + ld_rho * h
+                    + (1.0 - ld_rho) * rng.normal();
+                let prob = 1.0 / (1.0 + (-z).exp());
+                let geno = rng.binomial(2, prob) as f64;
+                let mean = 2.0 * maf;
+                let sd = (2.0 * maf * (1.0 - maf)).sqrt().max(0.05);
+                *xi = (geno - mean) / sd;
+            }
+        }
+    };
+    let data = sample_dataset(&truth, n, &mut rng, draw_x);
+    Problem { truth, data }
+}
+
+/// cis + trans-hotspot eQTL map.
+fn eqtl_theta(p: usize, q: usize, rng: &mut Rng, opts: &GenomicOptions) -> SpRowMat {
+    let mut theta = SpRowMat::zeros(p, q);
+    // cis: gene j regulated by a few SNPs near position j·(p/q).
+    let stride = (p as f64 / q as f64).max(1.0);
+    for j in 0..q {
+        let center = ((j as f64 * stride) as usize).min(p - 1);
+        for _ in 0..opts.cis_per_gene {
+            let offset = rng.below(2 * opts.ld_block + 1);
+            let i = (center + offset).saturating_sub(opts.ld_block).min(p - 1);
+            theta.set(i, j, opts.effect * if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+        }
+    }
+    // trans hotspots.
+    let hotspots = rng.sample_distinct(p, opts.hotspots.min(p));
+    for &h in &hotspots {
+        for _ in 0..opts.genes_per_hotspot {
+            let j = rng.below(q);
+            theta.set(h, j, opts.effect * if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+        }
+    }
+    theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_is_row_sparse() {
+        let prob = generate(800, 60, 30, 7, &GenomicOptions::default());
+        let ptilde = prob.truth.theta.nonempty_rows();
+        assert!(ptilde < 800 / 2, "Θ should be row-sparse, p̃ = {ptilde}");
+        assert!(ptilde > 0);
+        assert_eq!(prob.data.n(), 30);
+    }
+
+    #[test]
+    fn genotypes_standardized_and_ld_correlated() {
+        let prob = generate(200, 20, 400, 11, &GenomicOptions::default());
+        let d = &prob.data;
+        // Standardized-ish: mean near 0, sd near 1.
+        let mut worst_mean = 0.0f64;
+        for i in 0..d.p() {
+            let row = d.xt.row(i);
+            let mean: f64 = row.iter().sum::<f64>() / row.len() as f64;
+            worst_mean = worst_mean.max(mean.abs());
+        }
+        assert!(worst_mean < 0.6, "genotype means too far from 0: {worst_mean}");
+        // Adjacent SNPs in a block correlate more than cross-block pairs.
+        let within = d.sxx(0, 1).abs() + d.sxx(2, 3).abs() + d.sxx(4, 5).abs();
+        let across = d.sxx(0, 150).abs() + d.sxx(1, 100).abs() + d.sxx(2, 60).abs();
+        assert!(
+            within > across,
+            "LD structure missing: within={within} across={across}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(50, 10, 5, 3, &GenomicOptions::default());
+        let b = generate(50, 10, 5, 3, &GenomicOptions::default());
+        assert_eq!(a.data.xt.data(), b.data.xt.data());
+    }
+}

@@ -1,0 +1,69 @@
+//! Synthetic data generators reproducing the paper's §5 workloads.
+//!
+//! - [`chain`]: chain-graph Λ*, diagonal Θ* (§5.1, Figures 1, 3, 5);
+//! - [`cluster_graph`]: random clustered Λ* + hub-sparse Θ* (§5.1, Figure 2);
+//! - [`genomic`]: SNP/expression simulator substituting the private asthma
+//!   dataset (§5.2, Table 1, Figure 4) — see DESIGN.md §7;
+//! - [`energy`]: wind-farm forecasting generator (Wytock & Kolter's
+//!   motivating domain) for the `energy_forecast` example;
+//! - [`sampler`]: exact CGGM sampling `y|x ~ N(-Λ⁻¹Θᵀx, Λ⁻¹)` shared by all.
+
+pub mod chain;
+pub mod cluster_graph;
+pub mod energy;
+pub mod genomic;
+pub mod sampler;
+
+use crate::cggm::{CggmModel, Dataset};
+
+/// A generated problem: ground truth + sampled data.
+pub struct Problem {
+    pub truth: CggmModel,
+    pub data: Dataset,
+}
+
+impl Problem {
+    pub fn p(&self) -> usize {
+        self.truth.p()
+    }
+    pub fn q(&self) -> usize {
+        self.truth.q()
+    }
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+}
+
+/// Workload families from the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Chain Λ, Θ = I; p = q.
+    Chain,
+    /// Chain Λ with q extra irrelevant inputs; p = 2q.
+    ChainIrrelevant,
+    /// Random clustered Λ (Fig. 2 family).
+    Cluster,
+    /// Genomic simulator (Table 1 / Fig. 4 family).
+    Genomic,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "chain" => Some(Workload::Chain),
+            "chain2" | "chain-irrelevant" => Some(Workload::ChainIrrelevant),
+            "cluster" | "random" => Some(Workload::Cluster),
+            "genomic" => Some(Workload::Genomic),
+            _ => None,
+        }
+    }
+}
+
+/// Generate a problem by workload family with the paper's defaults.
+pub fn generate(w: Workload, p: usize, q: usize, n: usize, seed: u64) -> Problem {
+    match w {
+        Workload::Chain | Workload::ChainIrrelevant => chain::generate(p, q, n, seed),
+        Workload::Cluster => cluster_graph::generate(p, q, n, seed, &Default::default()),
+        Workload::Genomic => genomic::generate(p, q, n, seed, &Default::default()),
+    }
+}

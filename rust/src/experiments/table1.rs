@@ -1,0 +1,140 @@
+//! Table 1 (genomic timings) and the memory-wall experiment.
+
+use super::{genomic_opts_scaled, md_row, results_dir, write_csv};
+use crate::coordinator::run_fit;
+use crate::datagen;
+use crate::gemm::GemmEngine;
+use crate::solvers::{dense_workingset_bytes, SolveOptions, SolverKind};
+use crate::util::cli::Args;
+use crate::util::membudget::{fmt_bytes, parse_bytes, MemBudget};
+
+/// Table 1: computation time on the genomic simulator at three (p, q)
+/// scales. The paper's sizes (34249/3268 … 442440/3268 at n = 171) are
+/// scaled by `--scale` (default 1/10); the third row's non-block methods hit
+/// the memory wall exactly as in the paper — detected from their dense
+/// working-set estimate against `--machine-ram`.
+pub fn run(args: &Args, engine: &dyn GemmEngine) -> anyhow::Result<()> {
+    let scale = args.get_f64("scale", 0.1);
+    let n = args.get_usize("n", 171);
+    let sizes: Vec<(usize, usize)> = vec![
+        (
+            (34249.0 * scale) as usize,
+            (3268.0 * scale) as usize,
+        ),
+        (
+            (34249.0 * scale) as usize,
+            (10256.0 * scale) as usize,
+        ),
+        (
+            (442440.0 * scale) as usize,
+            (3268.0 * scale) as usize,
+        ),
+    ];
+    // Emulated machine RAM for the OOM column (the paper's machine: 104 GB).
+    let machine_ram = parse_bytes(&args.get_str("machine-ram", "2GB")).unwrap();
+    let lam = args.get_f64("lambda", 0.14);
+    let time_limit = args.get_f64("time-limit", 1800.0);
+
+    println!("\n## table1 — genomic-sim timings (n={n}, scale={scale}, λ={lam}, RAM cap {})\n", fmt_bytes(machine_ram));
+    println!(
+        "{}",
+        md_row(&["p".into(), "q".into(), "‖Λ*‖₀".into(), "‖Θ*‖₀".into(),
+                 "NewtonCD".into(), "AltNewtonCD".into(), "AltNewtonBCD".into()])
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for &(p, q) in &sizes {
+        let prob = datagen::genomic::generate(p, q, n, args.get_u64("seed", 20), &genomic_opts_scaled());
+        let mut cells = vec![
+            p.to_string(),
+            q.to_string(),
+            prob.truth.lambda_nnz().to_string(),
+            prob.truth.theta_nnz().to_string(),
+        ];
+        let mut csv = format!("{p},{q}");
+        for kind in [
+            SolverKind::NewtonCd,
+            SolverKind::AltNewtonCd,
+            SolverKind::AltNewtonBcd,
+        ] {
+            let ws = dense_workingset_bytes(kind, p, q);
+            if ws > machine_ram {
+                // The paper's '*' — the dense working set does not fit.
+                cells.push(format!("* ({})", fmt_bytes(ws)));
+                csv.push_str(",oom");
+                continue;
+            }
+            let budget = MemBudget::new(machine_ram);
+            let opts = SolveOptions {
+                lam_l: lam,
+                lam_t: lam,
+                max_iter: args.get_usize("max-iter", 60),
+                threads: args.get_usize("threads", 1),
+                time_limit,
+                budget,
+                ..Default::default()
+            };
+            let (sum, _) = run_fit(kind, &prob, &opts, engine, None)?;
+            let mark = if sum.converged { "" } else { " (cap)" };
+            cells.push(format!("{:.0}s{mark}", sum.seconds));
+            csv.push_str(&format!(",{:.2}", sum.seconds));
+        }
+        println!("{}", md_row(&cells));
+        rows.push(csv);
+    }
+    write_csv(&results_dir(args), "table1.csv", "p,q,newton_cd,alt_newton_cd,alt_newton_bcd", &rows);
+    Ok(())
+}
+
+/// Memory wall: where the non-block solvers exceed RAM (analytic working
+/// set) vs the block solver's *measured* peak under a budget.
+pub fn memwall(args: &Args, engine: &dyn GemmEngine) -> anyhow::Result<()> {
+    let sizes = args.get_usize_list("sizes", &[500, 1000, 2000, 4000, 8000, 16000, 40000]);
+    let ram = parse_bytes(&args.get_str("machine-ram", "2GB")).unwrap();
+    let bcd_budget = parse_bytes(&args.get_str("mem-budget", "64MB")).unwrap();
+    let run_cap = args.get_usize("run-cap", 1000);
+    println!("\n## memwall — dense working sets vs budget (RAM cap {}, bcd budget {})\n",
+        fmt_bytes(ram), fmt_bytes(bcd_budget));
+    println!(
+        "{}",
+        md_row(&["p=q".into(), "NewtonCD ws".into(), "AltNewtonCD ws".into(),
+                 "fits RAM?".into(), "BCD peak (measured)".into()])
+    );
+    println!("|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for &q in &sizes {
+        let ws_n = dense_workingset_bytes(SolverKind::NewtonCd, q, q);
+        let ws_a = dense_workingset_bytes(SolverKind::AltNewtonCd, q, q);
+        let fits = ws_a <= ram;
+        // Measure the block solver's true peak on the smaller sizes.
+        let measured = if q <= run_cap {
+            let prob = datagen::chain::generate(q, q, 100, 21);
+            let budget = MemBudget::new(bcd_budget);
+            let opts = SolveOptions {
+                lam_l: 1.5,
+                lam_t: 1.5,
+                max_iter: 30,
+                budget: budget.clone(),
+                time_limit: 600.0,
+                ..Default::default()
+            };
+            let _ = run_fit(SolverKind::AltNewtonBcd, &prob, &opts, engine, None)?;
+            fmt_bytes(budget.peak())
+        } else {
+            "—".into()
+        };
+        println!(
+            "{}",
+            md_row(&[
+                q.to_string(),
+                fmt_bytes(ws_n),
+                fmt_bytes(ws_a),
+                fits.to_string(),
+                measured.clone(),
+            ])
+        );
+        rows.push(format!("{q},{ws_n},{ws_a},{fits},{measured}"));
+    }
+    write_csv(&results_dir(args), "memwall.csv", "q,newton_ws,alt_ws,fits_ram,bcd_peak", &rows);
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! GEMM engine abstraction — the flop hot spot of the paper
+//! (`Ψ = RᵀR/n`, `S_xx` tiles, `Xᵀ(XV)` active-set screens, blocked Cholesky
+//! updates all reduce to GEMM / Gram products).
+//!
+//! Two engines implement [`GemmEngine`]:
+//! - [`native::NativeGemm`] — blocked, axpy-vectorized, thread-parallel Rust;
+//! - [`crate::runtime::XlaGemm`] — tiled execution through AOT-compiled
+//!   JAX/Pallas HLO artifacts on the PJRT CPU client (L1/L2 of the stack).
+//!
+//! The runtime engine falls back to native below a crossover size (PJRT call
+//! overhead; measured in `bench_gemm`), so solvers just call the trait.
+
+pub mod native;
+
+use crate::linalg::dense::Mat;
+use std::sync::Arc;
+
+/// Abstract dense-matmul provider.
+pub trait GemmEngine: Send + Sync {
+    /// C = alpha * A·B + beta * C. Shapes: A (m×k), B (k×n), C (m×n).
+    fn gemm(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat);
+
+    /// C = alpha * Aᵀ·B + beta * C. Shapes: A (k×m), B (k×n), C (m×n).
+    ///
+    /// This is the paper's Gram form (`Ψ = RᵀR`, `S_xx = XᵀX/n`); engines
+    /// implement it directly to avoid materializing transposes.
+    fn gemm_tn(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat);
+
+    /// C = alpha * A·Bᵀ + beta * C. Shapes: A (m×k), B (n×k), C (m×n).
+    ///
+    /// The row-Gram form: matrices stored features-by-samples (`xt`, `yt`,
+    /// `rt`) produce covariance blocks as contiguous row dots.
+    fn gemm_nt(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat);
+
+    /// Engine label for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Shared handle used throughout the solvers.
+pub type Engine = Arc<dyn GemmEngine>;
+
+/// Default engine: native kernels, single thread.
+pub fn default_engine() -> Engine {
+    Arc::new(native::NativeGemm::new(1))
+}
+
+/// Symmetric rank-k: C = alpha·AᵀA + beta·C (convenience over `gemm_tn`).
+pub fn gram(engine: &dyn GemmEngine, alpha: f64, a: &Mat, beta: f64, c: &mut Mat) {
+    engine.gemm_tn(alpha, a, a, beta, c);
+}
+
+#[cfg(test)]
+pub(crate) fn reference_gemm(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()));
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0;
+            for k in 0..a.cols() {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = alpha * s + beta * c[(i, j)];
+        }
+    }
+}

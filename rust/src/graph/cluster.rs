@@ -1,0 +1,403 @@
+//! Multilevel k-way graph partitioner (METIS substitute, DESIGN.md S7).
+//!
+//! Pipeline: (1) coarsen by heavy-edge matching until the graph is small,
+//! (2) greedy region-growing initial partition on the coarsest graph,
+//! (3) project back up, running boundary gain refinement at every level.
+//!
+//! The objective is the paper's: minimize edge cut (≈ active entries in
+//! off-diagonal blocks) subject to balanced part sizes, so that the block
+//! solver's cache misses B = Σ|B_zr| stay small (§4.1) and Θ's row blocks
+//! concentrate in few parts (§4.2).
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Partitioner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterOptions {
+    /// Allowed imbalance: max part weight ≤ balance · (total/k).
+    pub balance: f64,
+    /// Refinement passes per level.
+    pub refine_passes: usize,
+    /// Stop coarsening at this many vertices (≥ 4k).
+    pub coarsen_target: usize,
+    pub seed: u64,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            balance: 1.10,
+            refine_passes: 4,
+            coarsen_target: 256,
+            seed: 1,
+        }
+    }
+}
+
+/// Partition `g` into `k` parts. Returns `part[v] ∈ 0..k` for every vertex.
+pub fn cluster(g: &Graph, k: usize, opts: &ClusterOptions) -> Vec<usize> {
+    assert!(k >= 1);
+    let n = g.n();
+    if k == 1 || n <= k {
+        return (0..n).map(|v| v % k.max(1)).collect();
+    }
+    let mut rng = Rng::new(opts.seed);
+    // ---- Coarsening ----
+    let mut levels: Vec<(Graph, Vec<usize>)> = Vec::new(); // (fine graph, fine→coarse map)
+    let mut cur = g.clone();
+    let target = opts.coarsen_target.max(4 * k);
+    while cur.n() > target {
+        let (coarse, map) = coarsen_once(&cur, &mut rng);
+        if coarse.n() as f64 > 0.95 * cur.n() as f64 {
+            break; // matching stalled (e.g. edgeless graph)
+        }
+        levels.push((cur, map));
+        cur = coarse;
+    }
+    // ---- Initial partition on coarsest ----
+    let mut part = initial_partition(&cur, k, opts, &mut rng);
+    refine(&cur, &mut part, k, opts);
+    // ---- Uncoarsen + refine ----
+    while let Some((fine, map)) = levels.pop() {
+        let mut fine_part = vec![0usize; fine.n()];
+        for v in 0..fine.n() {
+            fine_part[v] = part[map[v]];
+        }
+        part = fine_part;
+        refine(&fine, &mut part, k, opts);
+        cur = fine;
+    }
+    debug_assert_eq!(cur.n(), n);
+    part
+}
+
+/// One round of heavy-edge matching; returns the coarse graph and the
+/// fine→coarse vertex map.
+fn coarsen_once(g: &Graph, rng: &mut Rng) -> (Graph, Vec<usize>) {
+    let n = g.n();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![usize::MAX; n];
+    for &u in &order {
+        if mate[u] != usize::MAX {
+            continue;
+        }
+        // Match u with its heaviest unmatched neighbor.
+        let mut best = usize::MAX;
+        let mut best_w = f64::NEG_INFINITY;
+        for &(v, w) in g.neighbors(u) {
+            if mate[v] == usize::MAX && v != u && w > best_w {
+                best = v;
+                best_w = w;
+            }
+        }
+        if best != usize::MAX {
+            mate[u] = best;
+            mate[best] = u;
+        } else {
+            mate[u] = u; // stays single
+        }
+    }
+    // Assign coarse ids.
+    let mut map = vec![usize::MAX; n];
+    let mut next = 0usize;
+    for v in 0..n {
+        if map[v] != usize::MAX {
+            continue;
+        }
+        map[v] = next;
+        let m = mate[v];
+        if m != usize::MAX && m != v {
+            map[m] = next;
+        }
+        next += 1;
+    }
+    // Build coarse graph.
+    let mut coarse = Graph::empty(next);
+    for c in coarse.vwgt.iter_mut() {
+        *c = 0.0;
+    }
+    for v in 0..n {
+        coarse.vwgt[map[v]] += g.vwgt[v];
+        for &(u, w) in g.neighbors(v) {
+            if u > v && map[u] != map[v] {
+                coarse.add_edge(map[v], map[u], w);
+            }
+        }
+    }
+    (coarse, map)
+}
+
+/// Greedy region growing: k seeds spread by repeated farthest-BFS, then grow
+/// parts by absorbing the frontier vertex with the strongest connection.
+fn initial_partition(g: &Graph, k: usize, opts: &ClusterOptions, rng: &mut Rng) -> Vec<usize> {
+    let n = g.n();
+    let total_w: f64 = g.vwgt.iter().sum();
+    let cap = opts.balance * total_w / k as f64;
+    let mut part = vec![usize::MAX; n];
+    let mut wgt = vec![0.0; k];
+
+    // Seeds: first random, each next = unassigned vertex farthest (BFS hops)
+    // from all previous seeds.
+    let mut seeds = vec![rng.below(n)];
+    while seeds.len() < k {
+        let dist = multi_bfs(g, &seeds);
+        let far = (0..n)
+            .filter(|v| !seeds.contains(v))
+            .max_by_key(|&v| if dist[v] == usize::MAX { n + 1 } else { dist[v] });
+        match far {
+            Some(v) => seeds.push(v),
+            None => seeds.push(rng.below(n)),
+        }
+    }
+    // Grow: priority = connection weight to the part; simple repeated scan
+    // queue (coarsest graph is small, O(n²·deg) is fine).
+    let mut frontier_gain = vec![vec![0.0f64; k]; n];
+    for (p, &s) in seeds.iter().enumerate() {
+        if part[s] == usize::MAX {
+            part[s] = p;
+            wgt[p] += g.vwgt[s];
+            for &(u, w) in g.neighbors(s) {
+                frontier_gain[u][p] += w;
+            }
+        }
+    }
+    loop {
+        // Pick (v, p): unassigned v with max gain to a non-full part p.
+        let mut best: Option<(usize, usize, f64)> = None;
+        for v in 0..n {
+            if part[v] != usize::MAX {
+                continue;
+            }
+            for p in 0..k {
+                if wgt[p] + g.vwgt[v] > cap {
+                    continue;
+                }
+                let gain = frontier_gain[v][p];
+                if best.map(|b| gain > b.2).unwrap_or(true) {
+                    best = Some((v, p, gain));
+                }
+            }
+        }
+        match best {
+            None => break,
+            Some((v, p, _)) => {
+                part[v] = p;
+                wgt[p] += g.vwgt[v];
+                for &(u, w) in g.neighbors(v) {
+                    if part[u] == usize::MAX {
+                        frontier_gain[u][p] += w;
+                    }
+                }
+            }
+        }
+    }
+    // Any stragglers (capacity edge cases): lightest part.
+    for v in 0..n {
+        if part[v] == usize::MAX {
+            let p = (0..k)
+                .min_by(|&a, &b| wgt[a].partial_cmp(&wgt[b]).unwrap())
+                .unwrap();
+            part[v] = p;
+            wgt[p] += g.vwgt[v];
+        }
+    }
+    part
+}
+
+fn multi_bfs(g: &Graph, sources: &[usize]) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; g.n()];
+    let mut queue = std::collections::VecDeque::new();
+    for &s in sources {
+        dist[s] = 0;
+        queue.push_back(s);
+    }
+    while let Some(u) = queue.pop_front() {
+        for &(v, _) in g.neighbors(u) {
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Boundary refinement: greedy positive-gain moves subject to balance.
+fn refine(g: &Graph, part: &mut [usize], k: usize, opts: &ClusterOptions) {
+    let n = g.n();
+    let total_w: f64 = g.vwgt.iter().sum();
+    let cap = opts.balance * total_w / k as f64;
+    let mut wgt = vec![0.0; k];
+    for v in 0..n {
+        wgt[part[v]] += g.vwgt[v];
+    }
+    for _ in 0..opts.refine_passes {
+        let mut moved = 0usize;
+        for v in 0..n {
+            let home = part[v];
+            // Connection weight to each part among neighbors.
+            let mut conn = vec![0.0f64; k];
+            let mut boundary = false;
+            for &(u, w) in g.neighbors(v) {
+                conn[part[u]] += w;
+                if part[u] != home {
+                    boundary = true;
+                }
+            }
+            if !boundary {
+                continue;
+            }
+            let (mut best_p, mut best_gain) = (home, 0.0);
+            for p in 0..k {
+                if p == home || wgt[p] + g.vwgt[v] > cap {
+                    continue;
+                }
+                let gain = conn[p] - conn[home];
+                if gain > best_gain {
+                    best_gain = gain;
+                    best_p = p;
+                }
+            }
+            if best_p != home {
+                wgt[home] -= g.vwgt[v];
+                wgt[best_p] += g.vwgt[v];
+                part[v] = best_p;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+/// Convert a partition label vector into index lists per part, dropping
+/// empty parts (the C_1..C_k of Algorithms 1–2).
+pub fn parts_to_blocks(part: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut blocks = vec![Vec::new(); k];
+    for (v, &p) in part.iter().enumerate() {
+        blocks[p].push(v);
+    }
+    blocks.retain(|b| !b.is_empty());
+    blocks
+}
+
+/// Contiguous fallback partition (no clustering): splits 0..n into k ranges.
+/// Used by the `--no-clustering` ablation.
+pub fn contiguous_blocks(n: usize, k: usize) -> Vec<Vec<usize>> {
+    let k = k.max(1);
+    let size = n.div_ceil(k);
+    (0..n)
+        .collect::<Vec<_>>()
+        .chunks(size.max(1))
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::property;
+
+    /// Two dense clusters joined by one edge.
+    fn two_cluster_graph(m: usize) -> Graph {
+        let mut g = Graph::empty(2 * m);
+        for c in 0..2 {
+            let base = c * m;
+            for i in 0..m {
+                for j in i + 1..m {
+                    g.add_edge(base + i, base + j, 1.0);
+                }
+            }
+        }
+        g.add_edge(0, m, 1.0);
+        g
+    }
+
+    #[test]
+    fn separates_obvious_clusters() {
+        let g = two_cluster_graph(20);
+        let part = cluster(&g, 2, &ClusterOptions::default());
+        assert!(g.edge_cut(&part) <= 2.0, "cut = {}", g.edge_cut(&part));
+        // Each cluster ends up homogeneous.
+        for c in 0..2 {
+            let base = c * 20;
+            let p0 = part[base];
+            assert!((0..20).all(|i| part[base + i] == p0));
+        }
+    }
+
+    #[test]
+    fn partition_is_valid_and_balanced() {
+        property(20, |rng| {
+            let n = 10 + rng.below(200);
+            let k = 2 + rng.below(6);
+            let mut g = Graph::empty(n);
+            for _ in 0..3 * n {
+                let (u, v) = (rng.below(n), rng.below(n));
+                if u != v {
+                    g.add_edge(u, v, 1.0 + rng.uniform());
+                }
+            }
+            let opts = ClusterOptions {
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let part = cluster(&g, k, &opts);
+            if part.len() != n {
+                return Err("wrong length".into());
+            }
+            if part.iter().any(|&p| p >= k) {
+                return Err("label out of range".into());
+            }
+            // balance within a loose factor (refinement may drift slightly)
+            let mut wgt = vec![0.0; k];
+            for v in 0..n {
+                wgt[part[v]] += g.vwgt[v];
+            }
+            let cap = 1.5 * (n as f64) / k as f64 + 2.0;
+            for (p, w) in wgt.iter().enumerate() {
+                if *w > cap {
+                    return Err(format!("part {p} weight {w} > cap {cap}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chain_partition_is_mostly_contiguous() {
+        // On the paper's chain graph, a good partition cuts O(k) edges.
+        let n = 400;
+        let mut g = Graph::empty(n);
+        for i in 1..n {
+            g.add_edge(i - 1, i, 1.0);
+        }
+        let part = cluster(&g, 4, &ClusterOptions::default());
+        let cut = g.edge_cut(&part);
+        assert!(cut <= 12.0, "chain cut = {cut}");
+    }
+
+    #[test]
+    fn blocks_cover_everything() {
+        let part = vec![2, 0, 2, 1, 0];
+        let blocks = parts_to_blocks(&part, 3);
+        let mut all: Vec<usize> = blocks.concat();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        let cont = contiguous_blocks(10, 3);
+        assert_eq!(cont.len(), 3);
+        assert_eq!(cont.concat(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn k1_and_tiny_graphs() {
+        let g = Graph::empty(5);
+        assert_eq!(cluster(&g, 1, &ClusterOptions::default()), vec![0; 5]);
+        let g2 = Graph::empty(2);
+        let p = cluster(&g2, 5, &ClusterOptions::default());
+        assert_eq!(p.len(), 2);
+    }
+}

@@ -1,0 +1,34 @@
+//! # cggm — large-scale sparse Conditional Gaussian Graphical Model estimation
+//!
+//! Reproduction of McCarter & Kim (2015), *Large-Scale Optimization Algorithms
+//! for Sparse Conditional Gaussian Graphical Models*, as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the optimization coordinator — the paper's
+//!   contribution. Three solvers ([`solvers::newton_cd`] baseline,
+//!   [`solvers::alt_newton_cd`] = Algorithm 1, [`solvers::alt_newton_bcd`] =
+//!   Algorithm 2), plus every substrate they need: dense/sparse linear
+//!   algebra, conjugate gradients, Cholesky factorizations, graph
+//!   clustering (METIS substitute), active-set screening, line search,
+//!   memory-budgeted column caches, data generators, metrics, experiment
+//!   harness.
+//! - **L2/L1 (python/, build-time only)**: JAX model of the CGGM objective and
+//!   Pallas GEMM/Gram/CD-sweep kernels, AOT-lowered to HLO text artifacts.
+//! - **runtime**: PJRT CPU client ([`runtime`]) loading those artifacts so the
+//!   flop hot spots (the paper's `O(npq + nq²)` Gram products) can execute
+//!   through XLA from the Rust hot path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod cggm;
+pub mod coordinator;
+pub mod datagen;
+pub mod experiments;
+pub mod gemm;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod solvers;
+pub mod util;

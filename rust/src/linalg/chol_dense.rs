@@ -1,0 +1,269 @@
+//! Blocked dense Cholesky factorization.
+//!
+//! Used by the non-block solvers (Σ = Λ⁻¹ "via Cholesky decomposition",
+//! paper §2 Computational Complexity), by the line search's
+//! positive-definiteness check at moderate q, and by the data generators.
+//!
+//! The trailing-submatrix update is routed through the [`GemmEngine`], so the
+//! O(q³) work can run on either the native kernels or the PJRT artifacts.
+
+use super::dense::{dot, Mat};
+use crate::gemm::GemmEngine;
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct DenseChol {
+    /// Lower triangle holds L; strict upper is garbage.
+    l: Mat,
+}
+
+/// Factorization failure: the matrix is not positive definite.
+#[derive(Debug, thiserror::Error)]
+#[error("matrix not positive definite (pivot {pivot} at index {index})")]
+pub struct NotPositiveDefinite {
+    pub index: usize,
+    pub pivot: f64,
+}
+
+const NB: usize = 64;
+
+impl DenseChol {
+    /// Factor A = L·Lᵀ (A symmetric, lower triangle read).
+    pub fn factor(a: &Mat, engine: &dyn GemmEngine) -> Result<DenseChol, NotPositiveDefinite> {
+        assert_eq!(a.rows(), a.cols());
+        let n = a.rows();
+        let mut l = a.clone();
+        for j0 in (0..n).step_by(NB) {
+            let jb = NB.min(n - j0);
+            // Diagonal block: unblocked factor of L[j0.., j0..][..jb,..jb]
+            unblocked_potrf(&mut l, j0, jb)?;
+            if j0 + jb < n {
+                // Panel solve: L21 = A21 · L11⁻ᵀ for rows i in (j0+jb..n).
+                for i in j0 + jb..n {
+                    for j in j0..j0 + jb {
+                        let mut s = l[(i, j)];
+                        // s -= Σ_{t<j} L[i,t] L[j,t]
+                        let (ri, rj) = (i * n, j * n);
+                        let li = &l.data()[ri + j0..ri + j];
+                        let lj = &l.data()[rj + j0..rj + j];
+                        s -= dot(li, lj);
+                        l[(i, j)] = s / l[(j, j)];
+                    }
+                }
+                // Trailing update: A22 -= L21 · L21ᵀ, via the GEMM engine.
+                let m2 = n - (j0 + jb);
+                let mut panel = Mat::zeros(m2, jb);
+                for i in 0..m2 {
+                    for j in 0..jb {
+                        panel[(i, j)] = l[(j0 + jb + i, j0 + j)];
+                    }
+                }
+                let mut update = Mat::zeros(m2, m2);
+                // update = panel · panelᵀ  =  (panelᵀ)ᵀ (panelᵀ): use gemm_tn on transposed panel.
+                let panel_t = panel.transposed();
+                engine.gemm_tn(1.0, &panel_t, &panel_t, 0.0, &mut update);
+                for i in 0..m2 {
+                    for j in 0..=i {
+                        l[(j0 + jb + i, j0 + jb + j)] -= update[(i, j)];
+                    }
+                }
+            }
+        }
+        // Zero the strict upper triangle for cleanliness.
+        for i in 0..n {
+            for j in i + 1..n {
+                l[(i, j)] = 0.0;
+            }
+        }
+        Ok(DenseChol { l })
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// log |A| = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve A x = b in place (forward + backward substitution).
+    pub fn solve(&self, b: &mut [f64]) {
+        self.solve_lower(b);
+        self.solve_upper(b);
+    }
+
+    /// Solve L y = b in place.
+    pub fn solve_lower(&self, b: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        for i in 0..n {
+            let row = &self.l.data()[i * n..i * n + i];
+            let s = dot(row, &b[..i]);
+            b[i] = (b[i] - s) / self.l[(i, i)];
+        }
+    }
+
+    /// Solve Lᵀ x = b in place.
+    pub fn solve_upper(&self, b: &mut [f64]) {
+        let n = self.n();
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for j in i + 1..n {
+                s -= self.l[(j, i)] * b[j];
+            }
+            b[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// ‖L⁻¹ b‖² — the quadratic form bᵀA⁻¹b (line-search trace terms).
+    pub fn quad_form_inv(&self, b: &[f64]) -> f64 {
+        let mut y = b.to_vec();
+        self.solve_lower(&mut y);
+        dot(&y, &y)
+    }
+
+    /// Full inverse A⁻¹ (dense q×q — the non-block solvers' Σ).
+    pub fn inverse(&self, engine: &dyn GemmEngine) -> Mat {
+        // A⁻¹ = L⁻ᵀ L⁻¹. Compute W = L⁻¹ (lower triangular) then A⁻¹ = WᵀW.
+        let n = self.n();
+        let mut w = Mat::zeros(n, n);
+        // Solve L W = I column by column; exploit that col j of W has zeros above j.
+        for j in 0..n {
+            w[(j, j)] = 1.0 / self.l[(j, j)];
+            for i in j + 1..n {
+                let row = &self.l.data()[i * n + j..i * n + i];
+                let mut s = 0.0;
+                for (t, lval) in row.iter().enumerate() {
+                    s += lval * w[(j + t, j)];
+                }
+                w[(i, j)] = -s / self.l[(i, i)];
+            }
+        }
+        // A⁻¹ = Wᵀ W (W lower triangular) — Gram via the engine.
+        let mut inv = Mat::zeros(n, n);
+        engine.gemm_tn(1.0, &w, &w, 0.0, &mut inv);
+        inv.symmetrize();
+        inv
+    }
+}
+
+fn unblocked_potrf(l: &mut Mat, j0: usize, jb: usize) -> Result<(), NotPositiveDefinite> {
+    let n = l.rows();
+    for j in j0..j0 + jb {
+        let rj = j * n;
+        let mut d = l[(j, j)];
+        {
+            let row = &l.data()[rj + j0..rj + j];
+            d -= dot(row, row);
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(NotPositiveDefinite { index: j, pivot: d });
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = dj;
+        for i in j + 1..j0 + jb {
+            let ri = i * n;
+            let mut s = l[(i, j)];
+            let (a, b) = (
+                &l.data()[ri + j0..ri + j],
+                &l.data()[rj + j0..rj + j],
+            );
+            s -= dot(a, b);
+            l[(i, j)] = s / dj;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check_all_close, check_close, property};
+
+    pub(crate) fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = Mat::zeros(n, n);
+        NativeGemm::new(1).gemm_tn(1.0, &b, &b, 0.0, &mut a);
+        for i in 0..n {
+            a[(i, i)] += n as f64; // well conditioned
+        }
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn reconstructs_a() {
+        property(30, |rng| {
+            let n = 1 + rng.below(90);
+            let a = random_spd(rng, n);
+            let eng = NativeGemm::new(1);
+            let ch = DenseChol::factor(&a, &eng).map_err(|e| e.to_string())?;
+            // LLᵀ == A
+            let l = ch.l();
+            let lt = l.transposed();
+            let mut rec = Mat::zeros(n, n);
+            eng.gemm(1.0, l, &lt, 0.0, &mut rec);
+            check_all_close(rec.data(), a.data(), 1e-9, "LLᵀ=A")
+        });
+    }
+
+    #[test]
+    fn solve_and_quadform() {
+        property(30, |rng| {
+            let n = 1 + rng.below(40);
+            let a = random_spd(rng, n);
+            let eng = NativeGemm::new(1);
+            let ch = DenseChol::factor(&a, &eng).map_err(|e| e.to_string())?;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x);
+            let mut got = b.clone();
+            ch.solve(&mut got);
+            check_all_close(&got, &x, 1e-8, "solve")?;
+            // quad form: bᵀ A⁻¹ b = bᵀ x
+            let qf = ch.quad_form_inv(&b);
+            check_close(qf, dot(&b, &x), 1e-8, "quad form")
+        });
+    }
+
+    #[test]
+    fn inverse_and_logdet() {
+        property(20, |rng| {
+            let n = 1 + rng.below(30);
+            let a = random_spd(rng, n);
+            let eng = NativeGemm::new(1);
+            let ch = DenseChol::factor(&a, &eng).map_err(|e| e.to_string())?;
+            let inv = ch.inverse(&eng);
+            let mut prod = Mat::zeros(n, n);
+            eng.gemm(1.0, &a, &inv, 0.0, &mut prod);
+            check_all_close(prod.data(), Mat::eye(n).data(), 1e-8, "A·A⁻¹=I")?;
+            // logdet via eigen-free check: det of 2x2 case handled by property below
+            if n == 1 {
+                check_close(ch.logdet(), a[(0, 0)].ln(), 1e-12, "logdet n=1")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        let eng = NativeGemm::new(1);
+        assert!(DenseChol::factor(&a, &eng).is_err());
+    }
+
+    #[test]
+    fn logdet_matches_product_of_pivots_2x2() {
+        let a = Mat::from_rows(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let eng = NativeGemm::new(1);
+        let ch = DenseChol::factor(&a, &eng).unwrap();
+        let det: f64 = 4.0 * 3.0 - 1.0;
+        assert!((ch.logdet() - det.ln()).abs() < 1e-12);
+    }
+}

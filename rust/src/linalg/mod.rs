@@ -1,0 +1,21 @@
+//! Linear-algebra substrates: dense matrices, sparse matrices, blocked
+//! Cholesky (dense + sparse), multi-RHS conjugate gradients, and fill-reducing
+//! orderings.
+//!
+//! The paper's implementation sat on C++/BLAS/sparse-Cholesky; everything
+//! here is built from scratch (see DESIGN.md §3), with the flop-dense parts
+//! routed through [`crate::gemm::GemmEngine`] so they can execute either on
+//! the native blocked kernels or through PJRT/XLA artifacts.
+
+pub mod cg;
+pub mod chol_dense;
+pub mod chol_sparse;
+pub mod dense;
+pub mod ordering;
+pub mod sparse;
+
+pub use cg::CgSolver;
+pub use chol_dense::DenseChol;
+pub use chol_sparse::SparseChol;
+pub use dense::Mat;
+pub use sparse::{CsrMat, SpRowMat};

@@ -1,0 +1,223 @@
+//! Fill-reducing orderings for sparse Cholesky.
+//!
+//! Reverse Cuthill–McKee (RCM): BFS from a pseudo-peripheral vertex,
+//! neighbors visited in increasing-degree order, then reversed. Very
+//! effective on the paper's graph families (chains are banded; clustered
+//! random graphs become tightly banded per cluster).
+
+use crate::linalg::sparse::SpRowMat;
+
+/// Permutation `perm` such that `perm[new_index] = old_index`.
+#[derive(Clone, Debug)]
+pub struct Permutation {
+    pub perm: Vec<usize>,
+    pub inv: Vec<usize>,
+}
+
+impl Permutation {
+    pub fn identity(n: usize) -> Permutation {
+        Permutation {
+            perm: (0..n).collect(),
+            inv: (0..n).collect(),
+        }
+    }
+
+    pub fn from_perm(perm: Vec<usize>) -> Permutation {
+        let mut inv = vec![0; perm.len()];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        Permutation { perm, inv }
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Apply to a vector: out[new] = x[perm[new]].
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        self.perm.iter().map(|&old| x[old]).collect()
+    }
+
+    /// Inverse application: out[perm[new]] = x[new].
+    pub fn apply_inv(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        for (new, &old) in self.perm.iter().enumerate() {
+            out[old] = x[new];
+        }
+        out
+    }
+}
+
+/// Symmetric permutation of a sparse symmetric matrix: B = PᵀAP with
+/// B[new_i, new_j] = A[perm[new_i], perm[new_j]].
+pub fn permute_sym(a: &SpRowMat, p: &Permutation) -> SpRowMat {
+    let n = a.rows();
+    assert_eq!(n, p.len());
+    let mut out = SpRowMat::zeros(n, n);
+    for new_i in 0..n {
+        let old_i = p.perm[new_i];
+        for &(old_j, v) in a.row(old_i) {
+            out.set(new_i, p.inv[old_j], v);
+        }
+    }
+    out
+}
+
+/// Reverse Cuthill–McKee ordering of the symmetric pattern of `a`.
+pub fn rcm(a: &SpRowMat) -> Permutation {
+    let n = a.rows();
+    let degree: Vec<usize> = (0..n).map(|i| a.row(i).len()).collect();
+    let mut visited = vec![false; n];
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+
+    while order.len() < n {
+        // Start each component from its minimum-degree unvisited vertex
+        // (cheap pseudo-peripheral heuristic).
+        let start = (0..n)
+            .filter(|&i| !visited[i])
+            .min_by_key(|&i| degree[i])
+            .unwrap();
+        let mut queue = std::collections::VecDeque::new();
+        visited[start] = true;
+        queue.push_back(start);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            let mut nbrs: Vec<usize> = a
+                .row(u)
+                .iter()
+                .map(|e| e.0)
+                .filter(|&v| v != u && !visited[v])
+                .collect();
+            nbrs.sort_by_key(|&v| degree[v]);
+            for v in nbrs {
+                if !visited[v] {
+                    visited[v] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    order.reverse();
+    Permutation::from_perm(order)
+}
+
+/// Bandwidth of the symmetric pattern (for tests: RCM should not increase it
+/// much, and should shrink it on shuffled banded matrices).
+pub fn bandwidth(a: &SpRowMat) -> usize {
+    let mut bw = 0;
+    for i in 0..a.rows() {
+        for &(j, _) in a.row(i) {
+            bw = bw.max(i.abs_diff(j));
+        }
+    }
+    bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::property;
+
+    fn chain_pattern(n: usize) -> SpRowMat {
+        let mut a = SpRowMat::zeros(n, n);
+        for i in 0..n {
+            a.set(i, i, 2.0);
+            if i > 0 {
+                a.set_sym(i, i - 1, 1.0);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn permutation_roundtrip() {
+        property(50, |rng| {
+            let n = 1 + rng.below(30);
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            let p = Permutation::from_perm(perm);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y = p.apply_inv(&p.apply(&x));
+            crate::util::testing::check_all_close(&x, &y, 0.0, "perm roundtrip")
+        });
+    }
+
+    #[test]
+    fn permute_sym_preserves_values() {
+        property(30, |rng| {
+            let n = 2 + rng.below(15);
+            let mut a = SpRowMat::zeros(n, n);
+            for i in 0..n {
+                a.set(i, i, 1.0 + rng.uniform());
+                if rng.bernoulli(0.5) {
+                    let j = rng.below(n);
+                    a.set_sym(i, j, rng.normal());
+                }
+            }
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            let p = Permutation::from_perm(perm);
+            let b = permute_sym(&a, &p);
+            for new_i in 0..n {
+                for &(new_j, v) in b.row(new_i) {
+                    let want = a.get(p.perm[new_i], p.perm[new_j]);
+                    if (v - want).abs() > 0.0 {
+                        return Err(format!("value mismatch at ({new_i},{new_j})"));
+                    }
+                }
+            }
+            if b.nnz() != a.nnz() {
+                return Err("nnz changed".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rcm_recovers_band_on_shuffled_chain() {
+        let n = 200;
+        let a = chain_pattern(n);
+        // Shuffle, destroying the band.
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(99);
+        rng.shuffle(&mut perm);
+        let shuffled = permute_sym(&a, &Permutation::from_perm(perm));
+        assert!(bandwidth(&shuffled) > 10);
+        // RCM should restore a narrow band.
+        let p = rcm(&shuffled);
+        let restored = permute_sym(&shuffled, &p);
+        assert!(
+            bandwidth(&restored) <= 2,
+            "rcm bandwidth = {}",
+            bandwidth(&restored)
+        );
+    }
+
+    #[test]
+    fn rcm_is_a_permutation() {
+        property(30, |rng| {
+            let n = 1 + rng.below(40);
+            let mut a = SpRowMat::zeros(n, n);
+            for i in 0..n {
+                a.set(i, i, 1.0);
+                if rng.bernoulli(0.3) {
+                    a.set_sym(i, rng.below(n), 1.0);
+                }
+            }
+            let p = rcm(&a);
+            let mut seen = p.perm.clone();
+            seen.sort_unstable();
+            if seen == (0..n).collect::<Vec<_>>() {
+                Ok(())
+            } else {
+                Err("not a permutation".to_string())
+            }
+        });
+    }
+}

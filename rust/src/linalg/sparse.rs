@@ -1,0 +1,423 @@
+//! Sparse matrix substrates.
+//!
+//! Two representations, matching how the solvers use them:
+//!
+//! - [`SpRowMat`]: editable per-row sorted `(col, val)` lists. The parameter
+//!   matrices `Λ`, `Θ` and the Newton directions `Δ` live here — the active
+//!   set fixes the pattern once per Newton iteration, after which updates are
+//!   in-place value writes. Symmetric matrices store both triangles.
+//! - [`CsrMat`]: frozen CSR for fast SpMV/SpMM (conjugate-gradient matvecs,
+//!   `ΘΣ` products).
+
+use super::dense::{axpy, Mat};
+
+/// Editable sparse row matrix (sorted column lists per row).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpRowMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<Vec<(usize, f64)>>,
+}
+
+impl SpRowMat {
+    pub fn zeros(rows: usize, cols: usize) -> SpRowMat {
+        SpRowMat {
+            rows,
+            cols,
+            data: vec![Vec::new(); rows],
+        }
+    }
+
+    /// Identity (for Λ initialization).
+    pub fn eye(n: usize) -> SpRowMat {
+        let mut m = SpRowMat::zeros(n, n);
+        for i in 0..n {
+            m.data[i].push((i, 1.0));
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().map(|r| r.len()).sum()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[(usize, f64)] {
+        &self.data[i]
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self.data[i].binary_search_by_key(&j, |e| e.0) {
+            Ok(k) => self.data[i][k].1,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Set entry (inserting if absent; removing is done via `prune`).
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        match self.data[i].binary_search_by_key(&j, |e| e.0) {
+            Ok(k) => self.data[i][k].1 = v,
+            Err(k) => self.data[i].insert(k, (j, v)),
+        }
+    }
+
+    /// Add to entry (inserting if absent).
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        match self.data[i].binary_search_by_key(&j, |e| e.0) {
+            Ok(k) => self.data[i][k].1 += v,
+            Err(k) => self.data[i].insert(k, (j, v)),
+        }
+    }
+
+    /// Symmetric set: writes (i,j) and (j,i).
+    pub fn set_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.set(i, j, v);
+        if i != j {
+            self.set(j, i, v);
+        }
+    }
+
+    /// Symmetric add.
+    pub fn add_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.add(i, j, v);
+        if i != j {
+            self.add(j, i, v);
+        }
+    }
+
+    /// Ensure entry exists (value 0 if new) — used when freezing active sets.
+    pub fn touch(&mut self, i: usize, j: usize) {
+        if self.data[i].binary_search_by_key(&j, |e| e.0).is_err() {
+            let k = self.data[i].partition_point(|e| e.0 < j);
+            self.data[i].insert(k, (j, 0.0));
+        }
+    }
+
+    /// Remove exact zeros (and entries below `tol` in absolute value).
+    pub fn prune(&mut self, tol: f64) {
+        for r in &mut self.data {
+            r.retain(|e| e.1.abs() > tol);
+        }
+    }
+
+    /// self += alpha * other (pattern union).
+    pub fn add_scaled(&mut self, alpha: f64, other: &SpRowMat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for i in 0..self.rows {
+            for &(j, v) in other.row(i) {
+                self.add(i, j, alpha * v);
+            }
+        }
+    }
+
+    /// Sum of |values| (the l1 penalty term).
+    pub fn l1_norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|r| r.iter().map(|e| e.1.abs()).sum::<f64>())
+            .sum()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data
+            .iter()
+            .flat_map(|r| r.iter())
+            .fold(0.0, |m, e| m.max(e.1.abs()))
+    }
+
+    /// Number of non-empty rows (p̃ in the paper's §4.2 analysis).
+    pub fn nonempty_rows(&self) -> usize {
+        self.data.iter().filter(|r| !r.is_empty()).count()
+    }
+
+    /// Indices of non-empty rows.
+    pub fn nonempty_row_indices(&self) -> Vec<usize> {
+        (0..self.rows).filter(|&i| !self.data[i].is_empty()).collect()
+    }
+
+    /// Zero every stored value, keeping the pattern.
+    pub fn zero_values(&mut self) {
+        for r in &mut self.data {
+            for e in r {
+                e.1 = 0.0;
+            }
+        }
+    }
+
+    /// Dense copy (tests / small problems only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for &(j, v) in self.row(i) {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+
+    pub fn from_dense(m: &Mat, tol: f64) -> SpRowMat {
+        let mut s = SpRowMat::zeros(m.rows(), m.cols());
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                if m[(i, j)].abs() > tol {
+                    s.data[i].push((j, m[(i, j)]));
+                }
+            }
+        }
+        s
+    }
+
+    /// Frozen CSR copy.
+    pub fn to_csr(&self) -> CsrMat {
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        indptr.push(0);
+        for r in &self.data {
+            for &(j, v) in r {
+                indices.push(j);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        self.data
+            .iter()
+            .map(|r| r.iter().map(|&(j, v)| v * x[j]).sum())
+            .collect()
+    }
+
+    /// Symmetric check (tests).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for &(j, v) in self.row(i) {
+                if (v - self.get(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Estimated bytes of storage.
+    pub fn bytes(&self) -> usize {
+        self.nnz() * std::mem::size_of::<(usize, f64)>()
+            + self.rows * std::mem::size_of::<Vec<(usize, f64)>>()
+    }
+}
+
+/// Frozen CSR matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMat {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let mut s = 0.0;
+            for (j, v) in idx.iter().zip(val) {
+                s += v * x[*j];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Y = A · X for dense row-major X (cols(A) × k) → Y (rows(A) × k).
+    /// Row-axpy formulation keeps all accesses contiguous.
+    pub fn spmm(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.rows(), self.cols);
+        assert_eq!(y.rows(), self.rows);
+        assert_eq!(y.cols(), x.cols());
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let yrow = y.row_mut(i);
+            for (j, v) in idx.iter().zip(val) {
+                axpy(*v, x.row(*j), yrow);
+            }
+        }
+    }
+
+    /// Dense copy (tests).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (j, v) in idx.iter().zip(val) {
+                m[(i, *j)] = *v;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check_all_close, property};
+
+    fn random_sparse(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> SpRowMat {
+        let mut m = SpRowMat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.bernoulli(density) {
+                    m.set(i, j, rng.normal());
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn set_get_add() {
+        let mut m = SpRowMat::zeros(3, 3);
+        m.set(0, 2, 5.0);
+        m.add(0, 2, 1.0);
+        m.add(1, 1, 2.0);
+        assert_eq!(m.get(0, 2), 6.0);
+        assert_eq!(m.get(1, 1), 2.0);
+        assert_eq!(m.get(2, 2), 0.0);
+        assert_eq!(m.nnz(), 2);
+        m.set(0, 2, 0.0);
+        m.prune(0.0);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn rows_stay_sorted() {
+        property(100, |rng| {
+            let mut m = SpRowMat::zeros(1, 50);
+            for _ in 0..30 {
+                m.set(0, rng.below(50), rng.normal());
+            }
+            let cols: Vec<usize> = m.row(0).iter().map(|e| e.0).collect();
+            let mut sorted = cols.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if cols == sorted {
+                Ok(())
+            } else {
+                Err(format!("row not sorted/deduped: {cols:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        property(50, |rng| {
+            let r = 1 + rng.below(8);
+            let c = 1 + rng.below(8);
+            let m = random_sparse(rng, r, c, 0.4);
+            let back = SpRowMat::from_dense(&m.to_dense(), 0.0);
+            if m == back {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn csr_matvec_matches_dense() {
+        property(50, |rng| {
+            let r = 1 + rng.below(10);
+            let c = 1 + rng.below(10);
+            let m = random_sparse(rng, r, c, 0.3);
+            let x: Vec<f64> = (0..c).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; r];
+            m.to_csr().matvec(&x, &mut y);
+            let want = m.to_dense().matvec(&x);
+            check_all_close(&y, &want, 1e-13, "csr matvec")
+        });
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        property(30, |rng| {
+            let r = 1 + rng.below(8);
+            let c = 1 + rng.below(8);
+            let k = 1 + rng.below(6);
+            let m = random_sparse(rng, r, c, 0.4);
+            let x = Mat::from_fn(c, k, |_, _| rng.normal());
+            let mut y = Mat::zeros(r, k);
+            m.to_csr().spmm(&x, &mut y);
+            let md = m.to_dense();
+            let mut want = Mat::zeros(r, k);
+            for i in 0..r {
+                for jj in 0..k {
+                    let mut s = 0.0;
+                    for t in 0..c {
+                        s += md[(i, t)] * x[(t, jj)];
+                    }
+                    want[(i, jj)] = s;
+                }
+            }
+            check_all_close(y.data(), want.data(), 1e-13, "spmm")
+        });
+    }
+
+    #[test]
+    fn symmetric_ops() {
+        let mut m = SpRowMat::zeros(4, 4);
+        m.set_sym(1, 3, 2.0);
+        m.add_sym(1, 3, 1.0);
+        assert_eq!(m.get(3, 1), 3.0);
+        assert!(m.is_symmetric(0.0));
+        m.set(0, 1, 9.0);
+        assert!(!m.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn l1_and_row_stats() {
+        let mut m = SpRowMat::zeros(3, 3);
+        m.set(0, 0, -2.0);
+        m.set(2, 1, 3.0);
+        assert_eq!(m.l1_norm(), 5.0);
+        assert_eq!(m.nonempty_rows(), 2);
+        assert_eq!(m.nonempty_row_indices(), vec![0, 2]);
+        assert_eq!(m.max_abs(), 3.0);
+    }
+}

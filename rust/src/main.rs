@@ -1,0 +1,265 @@
+//! `cggm` — CLI for the sparse conditional Gaussian graphical model
+//! estimation framework (McCarter & Kim 2015 reproduction).
+//!
+//! Subcommands:
+//! - `gen`   generate a synthetic workload and save it;
+//! - `fit`   estimate a CGGM (solver/engine/budget configurable);
+//! - `exp`   regenerate a paper table/figure (`--list` shows all);
+//! - `cal`   calibrate λ for a workload;
+//! - `info`  environment + artifact status.
+
+use cggm::coordinator::{self, RunConfig};
+use cggm::datagen;
+use cggm::experiments;
+use cggm::gemm::GemmEngine;
+use cggm::metrics::f1_edges_sym;
+use cggm::runtime;
+use cggm::util::cli::Args;
+use std::path::PathBuf;
+
+const BOOL_FLAGS: &[&str] = &[
+    "list",
+    "verbose",
+    "calibrate",
+    "no-clustering",
+    "trace",
+    "quick",
+];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = raw[0].clone();
+    let args = Args::parse(&raw[1..], BOOL_FLAGS);
+    let code = match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "fit" => cmd_fit(&args),
+        "exp" => cmd_exp(&args),
+        "cal" => cmd_cal(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        r#"cggm — sparse CGGM estimation (McCarter & Kim 2015)
+
+USAGE: cggm <command> [flags]
+
+COMMANDS
+  gen   --workload chain|cluster|genomic --p N --q N --n N [--seed S] --out FILE
+  fit   [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
+        [--lambda X | --calibrate] [--mem-budget 512MB] [--threads T]
+        [--engine native|xla|pallas [--tile 128|256]] [--trace]
+  exp   <id>|all [--list] [--scale F] [--sizes a,b,c] [--lambda X] ...
+  cal   --workload ... --p N --q N --n N
+  info
+
+Engines: native (blocked Rust GEMM), xla / pallas (AOT artifacts via PJRT;
+requires `make artifacts`)."#
+    );
+}
+
+fn make_engine(args: &Args) -> std::sync::Arc<dyn GemmEngine> {
+    let kind = args.get_str("engine", "native");
+    let threads = args.get_usize("threads", 1);
+    let tile = args.get_usize("tile", 256);
+    match runtime::make_engine(&kind, threads, tile) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine '{kind}' unavailable ({e}); falling back to native");
+            std::sync::Arc::new(cggm::gemm::native::NativeGemm::new(threads))
+        }
+    }
+}
+
+fn load_config(args: &Args) -> RunConfig {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::from_file(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }),
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args);
+    cfg
+}
+
+fn cmd_gen(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let out = args.get_str("out", "dataset.bin");
+    eprintln!(
+        "generating {:?} workload p={} q={} n={} seed={}",
+        cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed
+    );
+    let prob = coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed);
+    match coordinator::save_dataset(&prob.data, &PathBuf::from(&out)) {
+        Ok(()) => {
+            eprintln!(
+                "wrote {out} (truth: nnz(L*)={} nnz(T*)={})",
+                prob.truth.lambda_nnz(),
+                prob.truth.theta_nnz()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_fit(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let engine = make_engine(args);
+    let prob = match args.opt("data") {
+        Some(path) => {
+            let data = match coordinator::load_dataset(&PathBuf::from(path)) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("cannot load {path}: {e}");
+                    return 1;
+                }
+            };
+            let (p, q) = (data.p(), data.q());
+            datagen::Problem {
+                truth: cggm::cggm::CggmModel::init(p, q),
+                data,
+            }
+        }
+        None => coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed),
+    };
+    let mut opts = cfg.solve_options();
+    if cfg.calibrate {
+        eprintln!("calibrating lambda ...");
+        let (l, t) = coordinator::calibrate_lambda(&prob, engine.as_ref(), &opts, 5);
+        eprintln!("  lambda_l = {l:.4}, lambda_t = {t:.4}");
+        opts.lam_l = l;
+        opts.lam_t = t;
+    }
+    let trace_path = args
+        .flag("trace")
+        .then(|| PathBuf::from(&cfg.out_dir).join(format!("trace_{}.csv", cfg.solver.name())));
+    eprintln!(
+        "fitting {} (engine={}, p={}, q={}, n={}, lambda=({:.3},{:.3}))",
+        cfg.solver.name(),
+        engine.name(),
+        prob.p(),
+        prob.q(),
+        prob.n(),
+        opts.lam_l,
+        opts.lam_t
+    );
+    match coordinator::run_fit(
+        cfg.solver,
+        &prob,
+        &opts,
+        engine.as_ref(),
+        trace_path.as_deref(),
+    ) {
+        Ok((sum, res)) => {
+            println!("{}", sum.to_json().to_string_pretty());
+            if args.flag("verbose") {
+                eprintln!("phase breakdown:");
+                for (phase, secs, calls) in &res.trace.phases {
+                    eprintln!("  {phase:<24} {secs:>9.2}s ({calls} calls)");
+                }
+                let f1 = f1_edges_sym(&res.model.lambda, &prob.truth.lambda);
+                eprintln!(
+                    "structure recovery: precision={:.3} recall={:.3} F1={:.3}",
+                    f1.precision, f1.recall, f1.f1
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("solve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_exp(args: &Args) -> i32 {
+    if args.flag("list") || args.positional.is_empty() {
+        println!("available experiments:");
+        for (id, desc) in experiments::registry() {
+            println!("  {id:<8} {desc}");
+        }
+        return 0;
+    }
+    let engine = make_engine(args);
+    let mut code = 0;
+    for id in &args.positional {
+        let ids: Vec<String> = if id == "all" {
+            experiments::registry()
+                .iter()
+                .map(|(i, _)| i.to_string())
+                .collect()
+        } else {
+            vec![id.clone()]
+        };
+        for id in ids {
+            if let Err(e) = experiments::run(&id, args, engine.as_ref()) {
+                eprintln!("experiment {id} failed: {e}");
+                code = 1;
+            }
+        }
+    }
+    code
+}
+
+fn cmd_cal(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let engine = make_engine(args);
+    let prob = coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed);
+    let opts = cfg.solve_options();
+    let (l, t) = coordinator::calibrate_lambda(&prob, engine.as_ref(), &opts, 6);
+    println!(
+        "{}",
+        cggm::util::json::Json::obj(vec![
+            ("lambda_l", cggm::util::json::Json::num(l)),
+            ("lambda_t", cggm::util::json::Json::num(t)),
+        ])
+        .to_string()
+    );
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("cggm {}", env!("CARGO_PKG_VERSION"));
+    println!("solvers: newton-cd, alt-newton-cd (Alg.1), alt-newton-bcd (Alg.2)");
+    let dir = runtime::artifact_dir();
+    match cggm::runtime::manifest::Manifest::load(&dir.join("manifest.json")) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} entries in {}",
+                m.entries.len(),
+                dir.display()
+            );
+            if args.flag("verbose") {
+                for (name, e) in &m.entries {
+                    println!("  {name:<28} kind={:<10} file={}", e.kind, e.file);
+                }
+            }
+            match runtime::XlaGemm::load_default(&dir) {
+                Ok(_) => println!("PJRT engine: OK (cpu)"),
+                Err(e) => println!("PJRT engine: unavailable ({e})"),
+            }
+        }
+        Err(_) => println!("artifacts: not built (run `make artifacts`); native engine only"),
+    }
+    0
+}

@@ -1,0 +1,237 @@
+//! Evaluation metrics and per-iteration traces backing every figure:
+//! suboptimality curves (Figs. 1c, 4a), active-set trajectories (Figs. 2c,
+//! 4b), F1 edge recovery (Fig. 5b), and the min-norm-subgradient stopping
+//! rule (§5: ‖grad^S f‖₁ < 0.01·(‖Λ‖₁+‖Θ‖₁)).
+
+use crate::linalg::sparse::SpRowMat;
+use crate::util::json::Json;
+
+/// Precision/recall/F1 of support recovery.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct F1 {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub true_positives: usize,
+    pub predicted: usize,
+    pub actual: usize,
+}
+
+/// F1 over the off-diagonal support of symmetric matrices (Λ edge recovery,
+/// Fig. 5b). Each undirected edge counted once.
+pub fn f1_edges_sym(estimate: &SpRowMat, truth: &SpRowMat) -> F1 {
+    let q = truth.rows();
+    let mut tp = 0usize;
+    let mut pred = 0usize;
+    let mut act = 0usize;
+    for i in 0..q {
+        for &(j, v) in estimate.row(i) {
+            if j > i && v != 0.0 {
+                pred += 1;
+                if truth.get(i, j) != 0.0 {
+                    tp += 1;
+                }
+            }
+        }
+        act += truth.row(i).iter().filter(|&&(j, v)| j > i && v != 0.0).count();
+    }
+    build_f1(tp, pred, act)
+}
+
+/// F1 over all entries of a (generally rectangular) sparse matrix (Θ).
+pub fn f1_entries(estimate: &SpRowMat, truth: &SpRowMat) -> F1 {
+    let mut tp = 0usize;
+    let mut pred = 0usize;
+    let mut act = 0usize;
+    for i in 0..truth.rows() {
+        pred += estimate.row(i).iter().filter(|e| e.1 != 0.0).count();
+        act += truth.row(i).iter().filter(|e| e.1 != 0.0).count();
+        for &(j, v) in estimate.row(i) {
+            if v != 0.0 && truth.get(i, j) != 0.0 {
+                tp += 1;
+            }
+        }
+    }
+    build_f1(tp, pred, act)
+}
+
+fn build_f1(tp: usize, pred: usize, act: usize) -> F1 {
+    let precision = if pred > 0 { tp as f64 / pred as f64 } else { 0.0 };
+    let recall = if act > 0 { tp as f64 / act as f64 } else { 0.0 };
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+    F1 {
+        precision,
+        recall,
+        f1,
+        true_positives: tp,
+        predicted: pred,
+        actual: act,
+    }
+}
+
+/// One solver iteration record.
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// Seconds since solve start.
+    pub time: f64,
+    /// Objective value f.
+    pub f: f64,
+    /// |S_Λ| (active-set size, both triangles like the paper's plots).
+    pub active_lambda: usize,
+    /// |S_Θ|.
+    pub active_theta: usize,
+    /// ‖grad^S f‖₁.
+    pub subgrad: f64,
+    /// ‖Λ‖₁ + ‖Θ‖₁ (stopping-rule denominator).
+    pub param_l1: f64,
+}
+
+/// Full trace of a solve.
+#[derive(Clone, Debug, Default)]
+pub struct SolveTrace {
+    pub records: Vec<IterRecord>,
+    /// Phase-time attribution, copied from the solver's profiler.
+    pub phases: Vec<(String, f64, u64)>,
+    pub converged: bool,
+    pub total_seconds: f64,
+    pub solver: String,
+}
+
+impl SolveTrace {
+    pub fn push(&mut self, r: IterRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_f(&self) -> Option<f64> {
+        self.records.last().map(|r| r.f)
+    }
+
+    /// Paper's stopping rule on the last record.
+    pub fn stopping_ratio(&self) -> Option<f64> {
+        self.records.last().map(|r| r.subgrad / r.param_l1.max(1e-300))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("solver", Json::str(self.solver.clone())),
+            ("converged", Json::Bool(self.converged)),
+            ("total_seconds", Json::num(self.total_seconds)),
+            (
+                "phases",
+                Json::arr(self.phases.iter().map(|(name, secs, calls)| {
+                    Json::obj(vec![
+                        ("phase", Json::str(name.clone())),
+                        ("seconds", Json::num(*secs)),
+                        ("calls", Json::num(*calls as f64)),
+                    ])
+                })),
+            ),
+            (
+                "iters",
+                Json::arr(self.records.iter().map(|r| {
+                    Json::obj(vec![
+                        ("iter", Json::num(r.iter as f64)),
+                        ("time", Json::num(r.time)),
+                        ("f", Json::num(r.f)),
+                        ("active_lambda", Json::num(r.active_lambda as f64)),
+                        ("active_theta", Json::num(r.active_theta as f64)),
+                        ("subgrad", Json::num(r.subgrad)),
+                        ("param_l1", Json::num(r.param_l1)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// CSV with one row per iteration (for plotting the figures).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("iter,time,f,active_lambda,active_theta,subgrad,param_l1\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:.6},{:.10},{},{},{:.8},{:.6}\n",
+                r.iter, r.time, r.f, r.active_lambda, r.active_theta, r.subgrad, r.param_l1
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_perfect_and_empty() {
+        let mut truth = SpRowMat::zeros(4, 4);
+        truth.set_sym(0, 1, 1.0);
+        truth.set_sym(2, 3, 1.0);
+        let est = truth.clone();
+        let f = f1_edges_sym(&est, &truth);
+        assert_eq!(f.f1, 1.0);
+        assert_eq!(f.true_positives, 2);
+        let none = SpRowMat::zeros(4, 4);
+        let f0 = f1_edges_sym(&none, &truth);
+        assert_eq!(f0.f1, 0.0);
+    }
+
+    #[test]
+    fn f1_partial() {
+        let mut truth = SpRowMat::zeros(4, 4);
+        truth.set_sym(0, 1, 1.0);
+        truth.set_sym(1, 2, 1.0);
+        let mut est = SpRowMat::zeros(4, 4);
+        est.set_sym(0, 1, 0.5); // TP
+        est.set_sym(0, 3, 0.5); // FP
+        let f = f1_edges_sym(&est, &truth);
+        assert_eq!(f.precision, 0.5);
+        assert_eq!(f.recall, 0.5);
+        assert_eq!(f.f1, 0.5);
+    }
+
+    #[test]
+    fn f1_entries_rectangular() {
+        let mut truth = SpRowMat::zeros(3, 2);
+        truth.set(0, 0, 1.0);
+        truth.set(2, 1, 1.0);
+        let mut est = SpRowMat::zeros(3, 2);
+        est.set(0, 0, 2.0);
+        let f = f1_entries(&est, &truth);
+        assert_eq!(f.precision, 1.0);
+        assert_eq!(f.recall, 0.5);
+    }
+
+    #[test]
+    fn trace_json_roundtrips() {
+        let mut t = SolveTrace {
+            solver: "alt".into(),
+            ..Default::default()
+        };
+        t.push(IterRecord {
+            iter: 0,
+            time: 0.5,
+            f: 12.25,
+            active_lambda: 10,
+            active_theta: 20,
+            subgrad: 1.5,
+            param_l1: 30.0,
+        });
+        t.converged = true;
+        let j = t.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            parsed.get("iters").unwrap().as_arr().unwrap()[0]
+                .get("f")
+                .unwrap()
+                .as_f64(),
+            Some(12.25)
+        );
+        assert!(t.to_csv().lines().count() == 2);
+        assert!((t.stopping_ratio().unwrap() - 0.05).abs() < 1e-12);
+    }
+}

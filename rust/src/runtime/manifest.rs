@@ -1,0 +1,149 @@
+//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// e.g. "gemm_nt", "cd_sweep", "cggm_obj".
+    pub kind: String,
+    /// "pallas" / "xla" where applicable.
+    pub variant: Option<String>,
+    /// Tile/block size where applicable.
+    pub block: Option<usize>,
+    /// Entry parameter shapes.
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse: {0}")]
+    Parse(String),
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, ManifestError> {
+        let doc = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| ManifestError::Parse("missing 'artifacts' object".into()))?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in arts {
+            let shapes = |key: &str| -> Vec<Vec<usize>> {
+                entry
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|items| {
+                        items
+                            .iter()
+                            .filter_map(|it| {
+                                it.get("shape").and_then(|s| s.as_arr()).map(|dims| {
+                                    dims.iter().filter_map(|d| d.as_usize()).collect()
+                                })
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: entry
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| ManifestError::Parse(format!("{name}: no file")))?
+                        .to_string(),
+                    kind: entry
+                        .get("kind")
+                        .and_then(|k| k.as_str())
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    variant: entry
+                        .get("variant")
+                        .and_then(|v| v.as_str())
+                        .map(String::from),
+                    block: entry.get("block").and_then(|b| b.as_usize()),
+                    inputs: shapes("inputs"),
+                    outputs: shapes("outputs"),
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find an artifact by kind, optionally filtered by variant and block.
+    pub fn find(
+        &self,
+        kind: &str,
+        variant: Option<&str>,
+        block: Option<usize>,
+    ) -> Option<&ArtifactEntry> {
+        self.entries.values().find(|e| {
+            e.kind == kind
+                && variant.map(|v| e.variant.as_deref() == Some(v)).unwrap_or(true)
+                && block.map(|b| e.block == Some(b)).unwrap_or(true)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "gemm_nt_xla_f64_128": {
+          "file": "gemm_nt_xla_f64_128.hlo.txt",
+          "kind": "gemm_nt", "variant": "xla", "block": 128,
+          "inputs": [{"shape": [128,128], "dtype": "f64"},
+                     {"shape": [128,128], "dtype": "f64"}],
+          "outputs": [{"shape": [128,128], "dtype": "f64"}]
+        },
+        "cggm_obj_f64": {
+          "file": "cggm_obj_f64.hlo.txt", "kind": "cggm_obj",
+          "p": 24, "q": 16,
+          "inputs": [{"shape": [16,16], "dtype": "f64"}],
+          "outputs": [{"shape": [], "dtype": "f64"}]
+        }
+      },
+      "dtype": "f64"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("gemm_nt", Some("xla"), Some(128)).unwrap();
+        assert_eq!(e.file, "gemm_nt_xla_f64_128.hlo.txt");
+        assert_eq!(e.inputs[0], vec![128, 128]);
+        assert!(m.find("gemm_nt", Some("pallas"), None).is_none());
+        let o = m.find("cggm_obj", None, None).unwrap();
+        assert!(o.outputs[0].is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_docs() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,433 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas HLO-text artifacts and
+//! execute them from the Rust hot path (the L1/L2 ↔ L3 bridge).
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) describes
+//! each artifact's entry shapes. [`XlaGemm`] implements
+//! [`crate::gemm::GemmEngine`] by tiling arbitrary GEMMs over fixed-shape
+//! compiled executables (padding edge tiles with zeros), falling back to the
+//! native engine below a crossover size where PJRT call overhead dominates
+//! (measured in `bench_gemm`).
+
+pub mod manifest;
+
+use crate::gemm::{native::NativeGemm, GemmEngine};
+use crate::linalg::dense::Mat;
+use manifest::{ArtifactEntry, Manifest};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Contraction layouts the solvers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Layout {
+    /// C = A·B.
+    Mm,
+    /// C = Aᵀ·B.
+    Tn,
+    /// C = A·Bᵀ.
+    Nt,
+}
+
+impl Layout {
+    fn kind_str(&self) -> &'static str {
+        match self {
+            Layout::Mm => "gemm_mm",
+            Layout::Tn => "gemm_tn",
+            Layout::Nt => "gemm_nt",
+        }
+    }
+}
+
+/// Which compiled GEMM variant to prefer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmVariant {
+    /// Plain `jnp.dot` lowered through XLA (fast CPU baseline).
+    Xla,
+    /// The Pallas L1 kernels in interpret mode (TPU-shaped; slower on CPU —
+    /// quantified by the engine ablation bench).
+    Pallas,
+}
+
+impl GemmVariant {
+    fn as_str(&self) -> &'static str {
+        match self {
+            GemmVariant::Xla => "xla",
+            GemmVariant::Pallas => "pallas",
+        }
+    }
+    pub fn parse(s: &str) -> Option<GemmVariant> {
+        match s {
+            "xla" => Some(GemmVariant::Xla),
+            "pallas" => Some(GemmVariant::Pallas),
+            _ => None,
+        }
+    }
+}
+
+struct TileExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT-backed engine. Thread-safe via an execution mutex: the PJRT CPU
+/// client is internally synchronized, but the `xla` crate types carry no
+/// Send/Sync markers, so we serialize calls ourselves.
+pub struct XlaGemm {
+    inner: Mutex<Inner>,
+    /// Below this max-dimension, dispatch to native (call overhead).
+    pub crossover: usize,
+    native: NativeGemm,
+    variant: GemmVariant,
+    tile: usize,
+}
+
+struct Inner {
+    _client: xla::PjRtClient,
+    exes: BTreeMap<Layout, TileExe>,
+}
+
+// SAFETY: all PJRT interaction happens under the `inner` mutex; the PJRT CPU
+// client itself is thread-safe. The raw pointers inside the xla crate types
+// are never aliased across threads without the lock.
+unsafe impl Send for XlaGemm {}
+unsafe impl Sync for XlaGemm {}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact dir {0} missing or unreadable")]
+    MissingArtifacts(PathBuf),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("artifact {name} missing for layout {layout:?}")]
+    MissingKernel { name: String, layout: Layout },
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+impl XlaGemm {
+    /// Load the engine from an artifact directory, choosing tile size and
+    /// kernel variant.
+    pub fn load(
+        dir: &Path,
+        tile: usize,
+        variant: GemmVariant,
+        threads: usize,
+    ) -> Result<XlaGemm, RuntimeError> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for layout in [Layout::Mm, Layout::Tn, Layout::Nt] {
+            let entry = manifest
+                .find(layout.kind_str(), Some(variant.as_str()), Some(tile))
+                .or_else(|| manifest.find(layout.kind_str(), Some("xla"), Some(tile)))
+                .ok_or_else(|| RuntimeError::MissingKernel {
+                    name: format!("{}_{}_f64_{}", layout.kind_str(), variant.as_str(), tile),
+                    layout,
+                })?;
+            let exe = compile_artifact(&client, dir, entry)?;
+            exes.insert(layout, TileExe { exe });
+        }
+        Ok(XlaGemm {
+            inner: Mutex::new(Inner {
+                _client: client,
+                exes,
+            }),
+            crossover: tile / 2,
+            native: NativeGemm::new(threads),
+            variant,
+            tile,
+        })
+    }
+
+    /// Load with defaults (tile 256, XLA variant) from `artifacts/`.
+    pub fn load_default(dir: &Path) -> Result<XlaGemm, RuntimeError> {
+        XlaGemm::load(dir, 256, GemmVariant::Xla, 1)
+    }
+
+    pub fn variant(&self) -> GemmVariant {
+        self.variant
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Tiled execution: pads (m, k, n) up to multiples of the tile, runs one
+    /// PJRT call per (i, j, k) tile triple, accumulates into C.
+    fn tiled(&self, layout: Layout, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+        let (m, k) = match layout {
+            Layout::Mm | Layout::Nt => (a.rows(), a.cols()),
+            Layout::Tn => (a.cols(), a.rows()),
+        };
+        let n = match layout {
+            Layout::Mm | Layout::Tn => b.cols(),
+            Layout::Nt => b.rows(),
+        };
+        assert_eq!((c.rows(), c.cols()), (m, n), "tiled gemm output shape");
+        if beta == 0.0 {
+            c.fill(0.0);
+        } else if beta != 1.0 {
+            c.scale(beta);
+        }
+        let t = self.tile;
+        let (mt, nt, kt) = (m.div_ceil(t), n.div_ceil(t), k.div_ceil(t));
+        let mut abuf = vec![0.0f64; t * t];
+        let mut bbuf = vec![0.0f64; t * t];
+        for it in 0..mt {
+            for kt_i in 0..kt {
+                fill_tile_a(layout, a, it, kt_i, t, &mut abuf);
+                for jt in 0..nt {
+                    fill_tile_b(layout, b, kt_i, jt, t, &mut bbuf);
+                    let out = self.execute_tile(layout, &abuf, &bbuf, t);
+                    // C[it, jt] += alpha * out.
+                    let i0 = it * t;
+                    let j0 = jt * t;
+                    let ib = t.min(m - i0);
+                    let jb = t.min(n - j0);
+                    for di in 0..ib {
+                        let crow = &mut c.row_mut(i0 + di)[j0..j0 + jb];
+                        let orow = &out[di * t..di * t + jb];
+                        for (cv, ov) in crow.iter_mut().zip(orow) {
+                            *cv += alpha * ov;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn execute_tile(&self, layout: Layout, a: &[f64], b: &[f64], t: usize) -> Vec<f64> {
+        let inner = self.inner.lock().unwrap();
+        let exe = &inner.exes[&layout].exe;
+        let ta = xla::Literal::vec1(a).reshape(&[t as i64, t as i64]).unwrap();
+        let tb = xla::Literal::vec1(b).reshape(&[t as i64, t as i64]).unwrap();
+        let result = exe.execute::<xla::Literal>(&[ta, tb]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let out = result.to_tuple1().unwrap();
+        out.to_vec::<f64>().unwrap()
+    }
+
+    fn small(&self, m: usize, k: usize, n: usize) -> bool {
+        m.max(k).max(n) < self.crossover
+    }
+}
+
+/// Fill the A tile for logical block (it, kt): the executable expects the
+/// artifact's own input layout (m×k for Mm/Nt, k×m panel for Tn).
+fn fill_tile_a(layout: Layout, a: &Mat, it: usize, kt: usize, t: usize, buf: &mut [f64]) {
+    buf.iter_mut().for_each(|x| *x = 0.0);
+    let (m, k) = match layout {
+        Layout::Mm | Layout::Nt => (a.rows(), a.cols()),
+        Layout::Tn => (a.cols(), a.rows()),
+    };
+    let i0 = it * t;
+    let k0 = kt * t;
+    let ib = t.min(m.saturating_sub(i0));
+    let kb = t.min(k.saturating_sub(k0));
+    match layout {
+        Layout::Mm | Layout::Nt => {
+            for di in 0..ib {
+                let src = &a.row(i0 + di)[k0..k0 + kb];
+                buf[di * t..di * t + kb].copy_from_slice(src);
+            }
+        }
+        Layout::Tn => {
+            for dk in 0..kb {
+                let src = &a.row(k0 + dk)[i0..i0 + ib];
+                buf[dk * t..dk * t + ib].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// Fill the B tile for logical block (kt, jt) (k×n for Mm/Tn, n×k for Nt).
+fn fill_tile_b(layout: Layout, b: &Mat, kt: usize, jt: usize, t: usize, buf: &mut [f64]) {
+    buf.iter_mut().for_each(|x| *x = 0.0);
+    let (k, n) = match layout {
+        Layout::Mm | Layout::Tn => (b.rows(), b.cols()),
+        Layout::Nt => (b.cols(), b.rows()),
+    };
+    let k0 = kt * t;
+    let j0 = jt * t;
+    let kb = t.min(k.saturating_sub(k0));
+    let jb = t.min(n.saturating_sub(j0));
+    match layout {
+        Layout::Mm | Layout::Tn => {
+            for dk in 0..kb {
+                let src = &b.row(k0 + dk)[j0..j0 + jb];
+                buf[dk * t..dk * t + jb].copy_from_slice(src);
+            }
+        }
+        Layout::Nt => {
+            for dj in 0..jb {
+                let src = &b.row(j0 + dj)[k0..k0 + kb];
+                buf[dj * t..dj * t + kb].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+impl GemmEngine for XlaGemm {
+    fn gemm(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+        if self.small(a.rows(), a.cols(), b.cols()) {
+            return self.native.gemm(alpha, a, b, beta, c);
+        }
+        self.tiled(Layout::Mm, alpha, a, b, beta, c);
+    }
+
+    fn gemm_tn(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+        if self.small(a.cols(), a.rows(), b.cols()) {
+            return self.native.gemm_tn(alpha, a, b, beta, c);
+        }
+        self.tiled(Layout::Tn, alpha, a, b, beta, c);
+    }
+
+    fn gemm_nt(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+        if self.small(a.rows(), a.cols(), b.rows()) {
+            return self.native.gemm_nt(alpha, a, b, beta, c);
+        }
+        self.tiled(Layout::Nt, alpha, a, b, beta, c);
+    }
+
+    fn name(&self) -> &'static str {
+        match self.variant {
+            GemmVariant::Xla => "xla",
+            GemmVariant::Pallas => "pallas",
+        }
+    }
+}
+
+/// Compile one artifact on a PJRT client.
+pub fn compile_artifact(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    entry: &ArtifactEntry,
+) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
+    let path = dir.join(&entry.file);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| RuntimeError::MissingArtifacts(path.clone()))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Default artifact directory: `$CGGM_ARTIFACTS` or `./artifacts`.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var("CGGM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Build the configured engine: `native`, `xla`, or `pallas`.
+pub fn make_engine(
+    kind: &str,
+    threads: usize,
+    tile: usize,
+) -> Result<std::sync::Arc<dyn GemmEngine>, RuntimeError> {
+    match kind {
+        "native" => Ok(std::sync::Arc::new(NativeGemm::new(threads))),
+        "xla" | "pallas" => {
+            let variant = GemmVariant::parse(kind).unwrap();
+            Ok(std::sync::Arc::new(XlaGemm::load(
+                &artifact_dir(),
+                tile,
+                variant,
+                threads,
+            )?))
+        }
+        other => Err(RuntimeError::Manifest(format!("unknown engine '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::check_all_close;
+
+    fn artifacts_available() -> Option<PathBuf> {
+        let dir = artifact_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn xla_engine_matches_native() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = XlaGemm::load(&dir, 128, GemmVariant::Xla, 1).unwrap();
+        let nat = NativeGemm::new(1);
+        let mut rng = Rng::new(3);
+        // Odd sizes exercise padding.
+        for (m, k, n) in [(130, 257, 190), (256, 128, 128), (300, 40, 170)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            let mut c1 = Mat::zeros(m, n);
+            let mut c2 = Mat::zeros(m, n);
+            eng.tiled(Layout::Mm, 1.5, &a, &b, 0.0, &mut c1);
+            nat.gemm(1.5, &a, &b, 0.0, &mut c2);
+            check_all_close(c1.data(), c2.data(), 1e-10, "mm").unwrap();
+            // tn: A stored (k×m)
+            let at = a.transposed();
+            let mut c3 = Mat::zeros(m, n);
+            eng.tiled(Layout::Tn, 1.5, &at, &b, 0.0, &mut c3);
+            check_all_close(c3.data(), c2.data(), 1e-9, "tn").unwrap();
+            // nt: B stored (n×k)
+            let bt = b.transposed();
+            let mut c4 = Mat::zeros(m, n);
+            eng.tiled(Layout::Nt, 1.5, &a, &bt, 0.0, &mut c4);
+            check_all_close(c4.data(), c2.data(), 1e-9, "nt").unwrap();
+        }
+    }
+
+    #[test]
+    fn pallas_variant_matches_native() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = match XlaGemm::load(&dir, 128, GemmVariant::Pallas, 1) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skipping: pallas artifacts not built ({e})");
+                return;
+            }
+        };
+        let nat = NativeGemm::new(1);
+        let mut rng = Rng::new(5);
+        let a = Mat::from_fn(140, 150, |_, _| rng.normal());
+        let b = Mat::from_fn(160, 150, |_, _| rng.normal());
+        let mut c1 = Mat::zeros(140, 160);
+        let mut c2 = Mat::zeros(140, 160);
+        eng.gemm_nt(1.0, &a, &b, 0.0, &mut c1);
+        nat.gemm_nt(1.0, &a, &b, 0.0, &mut c2);
+        check_all_close(c1.data(), c2.data(), 1e-9, "pallas nt").unwrap();
+    }
+
+    #[test]
+    fn beta_accumulation() {
+        let Some(dir) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = XlaGemm::load(&dir, 128, GemmVariant::Xla, 1).unwrap();
+        let nat = NativeGemm::new(1);
+        let mut rng = Rng::new(7);
+        let a = Mat::from_fn(129, 131, |_, _| rng.normal());
+        let b = Mat::from_fn(131, 133, |_, _| rng.normal());
+        let mut c1 = Mat::from_fn(129, 133, |_, _| rng.normal());
+        let mut c2 = c1.clone();
+        eng.tiled(Layout::Mm, 0.5, &a, &b, 2.0, &mut c1);
+        nat.gemm(0.5, &a, &b, 2.0, &mut c2);
+        check_all_close(c1.data(), c2.data(), 1e-10, "beta").unwrap();
+    }
+}

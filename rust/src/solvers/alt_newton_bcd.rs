@@ -1,0 +1,855 @@
+//! **Algorithm 2 — Alternating Newton Block Coordinate Descent** (paper §4).
+//!
+//! Algorithm 1 restructured so that no dense q×q or p×p matrix is ever
+//! materialized:
+//!
+//! - **Σ columns by conjugate gradient** (`Λσ_t = e_t`, Jacobi-preconditioned,
+//!   K ≈ 10–40) — computed per block and cached under the memory budget;
+//! - **Ψ columns** via `ψ_t = Λ⁻¹(ΘᵀS_xxΘ)σ_t = (1/n)·Λ⁻¹ R̃ᵀ(R̃σ_t)` with
+//!   `R̃ = XΘ` (n×q) — one extra CG per column, no p×q intermediates;
+//! - **graph clustering** (S7, METIS substitute) picks the partition
+//!   {C_1..C_k} that minimizes active entries in off-diagonal blocks, so
+//!   off-diagonal column loads (the cache misses, B = Σ|B_zr|) stay rare;
+//! - **Θ row-blocks** (§4.2): one row of S_xx at a time, restricted to the
+//!   union of non-empty Θ rows and active rows (row-wise sparsity), with
+//!   `V = ΘΣ_{C_r}` maintained per block;
+//! - the **memory budget** ([`crate::util::membudget::MemBudget`]) chooses
+//!   k_Λ, k_Θ ("the smallest possible k such that we can store 2q/k columns
+//!   in memory") and every cache allocation is tracked against it, which is
+//!   how the paper's OOM wall is reproduced on a large-RAM machine.
+
+use super::{SolveError, SolveOptions, SolveResult};
+use crate::cggm::factor::LambdaFactor;
+use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
+use crate::cggm::objective::{min_norm_subgrad, SmoothParts};
+use crate::cggm::{cd_minimizer, CggmModel, Dataset, Objective};
+use crate::gemm::GemmEngine;
+use crate::graph::cluster::{cluster, contiguous_blocks, parts_to_blocks, ClusterOptions};
+use crate::graph::Graph;
+use crate::linalg::cg::CgSolver;
+use crate::linalg::dense::{axpy, dot, Mat};
+use crate::linalg::sparse::SpRowMat;
+use crate::metrics::{IterRecord, SolveTrace};
+use crate::util::membudget::Tracked;
+use crate::util::threadpool::Parallelism;
+use crate::util::timer::{PhaseProfiler, Stopwatch};
+
+const CG_TOL: f64 = 1e-10;
+
+/// Source of Σ columns (and Ψ back-solves).
+///
+/// The paper's Algorithm 2 uses conjugate gradient so that no factor of Λ
+/// need ever be stored. We keep CG as the guaranteed-memory path, but when
+/// the sparse Cholesky factor computed by the *line search* (whose fill is
+/// known) fits comfortably in the budget, its triangular solves are an
+/// order of magnitude cheaper than K CG iterations — the paper itself
+/// remarks that "sparse Cholesky decomposition exploits sparsity"
+/// (EXPERIMENTS.md §Perf iter 2).
+pub(crate) enum SigmaOracle<'a> {
+    Cg(&'a CgSolver),
+    Chol(&'a crate::linalg::chol_sparse::SparseChol),
+}
+
+impl SigmaOracle<'_> {
+    fn n(&self) -> usize {
+        match self {
+            SigmaOracle::Cg(cg) => cg.n(),
+            SigmaOracle::Chol(f) => f.n(),
+        }
+    }
+
+    fn solve_into(&self, b: &[f64], out: &mut [f64]) {
+        match self {
+            SigmaOracle::Cg(cg) => {
+                cg.solve(b, out);
+            }
+            SigmaOracle::Chol(f) => out.copy_from_slice(&f.solve(b)),
+        }
+    }
+
+    /// σ_t = Λ⁻¹ e_t.
+    fn unit_column(&self, t: usize, out: &mut [f64]) {
+        let mut e = vec![0.0; self.n()];
+        e[t] = 1.0;
+        // Zero warm start for CG.
+        if matches!(self, SigmaOracle::Cg(_)) {
+            out.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.solve_into(&e, out);
+    }
+}
+
+/// Pick the Σ oracle: the current Λ-factor when it is sparse and its fill
+/// fits in a quarter of the budget, else CG.
+fn pick_sigma<'a>(
+    factor: &'a LambdaFactor,
+    cg: &'a CgSolver,
+    opts: &SolveOptions,
+) -> SigmaOracle<'a> {
+    if let LambdaFactor::Sparse(f) = factor {
+        let bytes = f.nnz() * 16;
+        if bytes <= opts.budget.available() / 4 {
+            return SigmaOracle::Chol(f);
+        }
+    }
+    SigmaOracle::Cg(cg)
+}
+
+/// An active Λ coordinate with its screened gradient value.
+#[derive(Clone, Copy, Debug)]
+struct ActivePair {
+    i: usize,
+    j: usize,
+    grad: f64,
+}
+
+/// Cached columns for one Λ block: row c of each matrix corresponds to
+/// global column `cols[c]`.
+struct LambdaCache {
+    cols: Vec<usize>,
+    /// σ_t = Λ⁻¹ e_t, full q-vectors.
+    sigma: Mat,
+    /// ψ_t = Λ⁻¹ΘᵀS_xxΘσ_t, full q-vectors.
+    psi: Mat,
+    /// u_t = Δ_Λ σ_t (maintained through CD updates).
+    u: Mat,
+    _track: Tracked,
+}
+
+pub fn solve(
+    data: &Dataset,
+    opts: &SolveOptions,
+    engine: &dyn GemmEngine,
+) -> Result<SolveResult, SolveError> {
+    let (p, q) = (data.p(), data.q());
+    let par = opts.parallelism();
+    let prof = PhaseProfiler::new();
+    let sw = Stopwatch::start();
+    let obj = Objective::new(data, opts.lam_l, opts.lam_t).with_chol(opts.chol);
+    let mut model = CggmModel::init(p, q);
+    let mut trace = SolveTrace {
+        solver: "alt_newton_bcd".into(),
+        ..Default::default()
+    };
+
+    let mut factor = LambdaFactor::factor(&model.lambda, obj.chol, engine)?;
+    let mut rt = data.xtheta_t(&model.theta); // R̃ᵀ (q×n)
+    let mut parts = SmoothParts {
+        logdet: factor.logdet(),
+        tr_syy_lambda: obj.tr_syy_sparse(&model.lambda),
+        tr_sxy_theta: obj.tr_sxy_sparse(&model.theta),
+        tr_quad: factor.trace_quad(&rt),
+    };
+    let mut f = parts.g() + model.penalty(opts.lam_l, opts.lam_t);
+    let ls_opts = LineSearchOptions::default();
+    // Reusable column-position lookup (usize::MAX = not cached).
+    let mut pos: Vec<usize> = vec![usize::MAX; q.max(p)];
+
+    for it in 0..opts.max_iter {
+        let cg = CgSolver::new(model.lambda.to_csr(), CG_TOL, 20 * q.max(16));
+        let sig = pick_sigma(&factor, &cg, opts);
+
+        // ================= Λ phase =================
+        // ---- screen: blockwise gradient of Λ (O(nq²), GEMM-backed) ----
+        let screen_bsz = lambda_screen_block(q, data.n(), opts);
+        let mut active: Vec<ActivePair> = Vec::new();
+        let mut subgrad_l = 0.0;
+        // Perf iter 3 (EXPERIMENTS.md §Perf): when the whole column range
+        // fits in one screen block AND the CD partition will be a single
+        // block, the screen's σ/ψ columns are exactly what the sweep needs —
+        // keep them instead of recomputing (u is zero because Δ starts at 0).
+        let mut screen_cache: Option<LambdaCache> = None;
+        prof.time("screen:lambda", || -> Result<(), SolveError> {
+            let mut t0 = 0;
+            while t0 < q {
+                let bsz = screen_bsz.min(q - t0);
+                let cols: Vec<usize> = (t0..t0 + bsz).collect();
+                let cache = load_lambda_cache(
+                    data, &sig, &rt, &SpRowMat::zeros(q, q), &cols, &par, opts,
+                )?;
+                // S_yy block = gemm_nt(yt, yt[cols]) / n  (q×bsz).
+                let ytb = data.yt.submatrix(&cols, &(0..data.n()).collect::<Vec<_>>());
+                let mut syyb = Mat::zeros(q, bsz);
+                engine.gemm_nt(data.inv_n(), &data.yt, &ytb, 0.0, &mut syyb);
+                for (c, &t) in cols.iter().enumerate() {
+                    let sig = cache.sigma.row(c);
+                    let psi = cache.psi.row(c);
+                    for i in 0..=t {
+                        let g = syyb[(i, c)] - sig[i] - psi[i];
+                        let x = model.lambda.get(i, t);
+                        let s = min_norm_subgrad(g, x, opts.lam_l);
+                        subgrad_l += if i == t { s.abs() } else { 2.0 * s.abs() };
+                        if x != 0.0 || g.abs() > opts.lam_l {
+                            active.push(ActivePair { i, j: t, grad: g });
+                        }
+                    }
+                }
+                t0 += bsz;
+                if bsz == q {
+                    screen_cache = Some(cache);
+                }
+            }
+            Ok(())
+        })?;
+
+        // ---- Θ screen (also needed for the stopping statistic) ----
+        let (theta_active, subgrad_t) =
+            prof.time("screen:theta", || theta_screen(data, &sig, &model, engine, &par, opts))?;
+
+        let subgrad = subgrad_l + subgrad_t;
+        let param_l1 = model.lambda.l1_norm() + model.theta.l1_norm();
+        let active_l_count = active
+            .iter()
+            .map(|a| if a.i == a.j { 1 } else { 2 })
+            .sum::<usize>();
+        let active_t_count: usize = theta_active.iter().map(|(_, v)| v.len()).sum();
+        trace.push(IterRecord {
+            iter: it,
+            time: sw.seconds(),
+            f,
+            active_lambda: active_l_count,
+            active_theta: active_t_count,
+            subgrad,
+            param_l1,
+        });
+        if subgrad <= opts.tol * param_l1 {
+            trace.converged = true;
+            break;
+        }
+        if opts.out_of_time(sw.seconds()) {
+            break;
+        }
+
+        // ---- partition columns of Λ (graph clustering on the active set) ----
+        let k_l = lambda_block_count(q, data.n(), opts);
+        let blocks: Vec<Vec<usize>> = prof.time("cluster:lambda", || {
+            if opts.clustering && k_l > 1 {
+                let mut g = Graph::empty(q);
+                for a in &active {
+                    if a.i != a.j {
+                        g.add_edge(a.i, a.j, 1.0);
+                    }
+                }
+                let part = cluster(
+                    &g,
+                    k_l,
+                    &ClusterOptions {
+                        seed: opts.seed,
+                        ..Default::default()
+                    },
+                );
+                parts_to_blocks(&part, k_l)
+            } else {
+                contiguous_blocks(q, k_l)
+            }
+        });
+        // Bucket active pairs by unordered block pair.
+        let mut block_of = vec![0usize; q];
+        for (b, cols) in blocks.iter().enumerate() {
+            for &c in cols {
+                block_of[c] = b;
+            }
+        }
+        let nb = blocks.len();
+        let mut buckets: Vec<Vec<ActivePair>> = vec![Vec::new(); nb * nb];
+        for a in &active {
+            let (x, y) = (
+                block_of[a.i].min(block_of[a.j]),
+                block_of[a.i].max(block_of[a.j]),
+            );
+            buckets[x * nb + y].push(*a);
+        }
+
+        // ---- blocked CD for the Newton direction D_Λ ----
+        let mut delta = SpRowMat::zeros(q, q);
+        prof.time("cd:lambda", || -> Result<(), SolveError> {
+            for sweep in 0..opts.inner_sweeps {
+                for z in 0..nb {
+                    // Load the z-block cache once; reuse across all r.
+                    // (Perf iter 3: first single-block sweep reuses the
+                    // screen's columns — Δ = 0 so u = 0 matches.)
+                    let mut cz = match (nb, sweep, screen_cache.take()) {
+                        (1, 0, Some(c)) => c,
+                        _ => load_lambda_cache(data, &sig, &rt, &delta, &blocks[z], &par, opts)?,
+                    };
+                    set_pos(&mut pos, &cz.cols);
+                    // Diagonal bucket.
+                    cd_block_pair(&buckets[z * nb + z], &mut cz, None, &pos, &model.lambda, &mut delta, opts.lam_l);
+                    for r in (z + 1)..nb {
+                        let bucket = &buckets[z * nb + r];
+                        if bucket.is_empty() {
+                            continue; // clustering win: no cache miss
+                        }
+                        // Only columns of C_r actually touched (B_zr).
+                        let mut bcols: Vec<usize> = bucket
+                            .iter()
+                            .flat_map(|a| [a.i, a.j])
+                            .filter(|&c| block_of[c] == r)
+                            .collect();
+                        bcols.sort_unstable();
+                        bcols.dedup();
+                        let mut cr =
+                            load_lambda_cache(data, &sig, &rt, &delta, &bcols, &par, opts)?;
+                        set_pos(&mut pos, &cr.cols);
+                        cd_block_pair(bucket, &mut cz, Some(&mut cr), &pos, &model.lambda, &mut delta, opts.lam_l);
+                        clear_pos(&mut pos, &cr.cols);
+                    }
+                    clear_pos(&mut pos, &cz.cols);
+                }
+            }
+            Ok(())
+        })?;
+
+        // ---- Armijo line search on Λ ----
+        let tr_gd: f64 = active
+            .iter()
+            .map(|a| {
+                let d = delta.get(a.i, a.j);
+                if a.i == a.j {
+                    a.grad * d
+                } else {
+                    2.0 * a.grad * d
+                }
+            })
+            .sum();
+        let mut lpd = model.lambda.clone();
+        lpd.add_scaled(1.0, &delta);
+        let delta_armijo = tr_gd + opts.lam_l * (lpd.l1_norm() - model.lambda.l1_norm());
+        if delta_armijo < -1e-14 {
+            let res = prof.time("linesearch", || {
+                lambda_line_search(
+                    &obj,
+                    &model.lambda,
+                    &delta,
+                    &rt,
+                    f,
+                    &parts,
+                    delta_armijo,
+                    model.theta.l1_norm(),
+                    engine,
+                    &ls_opts,
+                )
+            })?;
+            model.lambda.add_scaled(res.alpha, &delta);
+            model.lambda.prune(0.0);
+            factor = res.factor;
+            parts = res.parts;
+            // (f is recomputed after the Θ phase below.)
+        }
+
+        // ================= Θ phase =================
+        // New CG / oracle on the updated Λ (the line-search factor matches).
+        let cg = CgSolver::new(model.lambda.to_csr(), CG_TOL, 20 * q.max(16));
+        let sig = pick_sigma(&factor, &cg, opts);
+        prof.time("cd:theta", || -> Result<(), SolveError> {
+            theta_block_sweep(data, &sig, &mut model, &theta_active, engine, &par, opts)
+        })?;
+        model.theta.prune(0.0);
+        rt = data.xtheta_t(&model.theta);
+        parts.tr_sxy_theta = obj.tr_sxy_sparse(&model.theta);
+        parts.tr_quad = prof.time("trace_quad", || factor.trace_quad(&rt));
+        f = parts.g() + model.penalty(opts.lam_l, opts.lam_t);
+    }
+
+    trace.total_seconds = sw.seconds();
+    trace.phases = prof
+        .report()
+        .into_iter()
+        .map(|(n, s, c)| (n.to_string(), s, c))
+        .collect();
+    Ok(SolveResult { model, trace })
+}
+
+// ---------------------------------------------------------------- Λ helpers
+
+/// Cache-sizing policy: the number of Λ blocks k such that 2·(q/k) cached
+/// columns (3 q-vectors each) fit in the budget (paper §4.1).
+fn lambda_block_count(q: usize, _n: usize, opts: &SolveOptions) -> usize {
+    let budget = opts.budget.available().max(1);
+    let col_bytes = 3 * q * 8 + 64;
+    // 2·(q/k)·col_bytes ≤ budget/2  (half the budget for the Λ cache).
+    let max_cols = (budget / 2 / col_bytes).max(2);
+    q.div_ceil((max_cols / 2).max(1)).max(1)
+}
+
+/// Screen block width: σ/ψ pairs per screen block under the budget.
+fn lambda_screen_block(q: usize, _n: usize, opts: &SolveOptions) -> usize {
+    let budget = opts.budget.available().max(1);
+    let col_bytes = 3 * q * 8 + 64;
+    ((budget / 2) / col_bytes).clamp(1, q)
+}
+
+/// Compute σ, ψ, u columns for `cols` (parallel over columns).
+fn load_lambda_cache(
+    data: &Dataset,
+    sig: &SigmaOracle,
+    rt: &Mat,
+    delta: &SpRowMat,
+    cols: &[usize],
+    par: &Parallelism,
+    opts: &SolveOptions,
+) -> Result<LambdaCache, SolveError> {
+    let q = sig.n();
+    let n = data.n();
+    let m = cols.len();
+    let track = opts.budget.track(3 * m * q * 8)?;
+    let mut sigma = Mat::zeros(m, q);
+    // σ_t columns.
+    par.parallel_chunks_mut(sigma.data_mut(), q, |c, row| {
+        sig.unit_column(cols[c], row);
+    });
+    // ψ_t = (1/n)·Λ⁻¹ R̃ᵀ(R̃σ_t).
+    let mut psi = Mat::zeros(m, q);
+    {
+        let sigma_ref = &sigma;
+        par.parallel_chunks_mut(psi.data_mut(), q, |c, row| {
+            let sigcol = sigma_ref.row(c);
+            // m2 = R̃σ_t = Σ_j σ[j]·rt.row(j)  (n-vector).
+            let mut m2 = vec![0.0; n];
+            for (j, &s) in sigcol.iter().enumerate() {
+                if s != 0.0 {
+                    axpy(s, rt.row(j), &mut m2);
+                }
+            }
+            // m4[j] = dot(rt.row(j), m2) / n.
+            let mut m4 = vec![0.0; q];
+            let inv_n = 1.0 / n as f64;
+            for j in 0..q {
+                m4[j] = dot(rt.row(j), &m2) * inv_n;
+            }
+            if matches!(sig, SigmaOracle::Cg(_)) {
+                row.iter_mut().for_each(|x| *x = 0.0);
+            }
+            sig.solve_into(&m4, row);
+        });
+    }
+    // u_t = Δ σ_t (sparse × dense-column; Δ is symmetric row storage).
+    let mut u = Mat::zeros(m, q);
+    for c in 0..m {
+        let sig = sigma.row(c);
+        let urow = u.row_mut(c);
+        for i in 0..q {
+            let drow = delta.row(i);
+            if !drow.is_empty() {
+                let mut s = 0.0;
+                for &(j, v) in drow {
+                    s += v * sig[j];
+                }
+                urow[i] = s;
+            }
+        }
+    }
+    Ok(LambdaCache {
+        cols: cols.to_vec(),
+        sigma,
+        psi,
+        u,
+        _track: track,
+    })
+}
+
+fn set_pos(pos: &mut [usize], cols: &[usize]) {
+    for (c, &t) in cols.iter().enumerate() {
+        pos[t] = c;
+    }
+}
+
+fn clear_pos(pos: &mut [usize], cols: &[usize]) {
+    for &t in cols {
+        pos[t] = usize::MAX;
+    }
+}
+
+/// CD updates for all active pairs in one (C_z, C_r) bucket. `cr = None`
+/// means the diagonal bucket (both endpoints in `cz`).
+fn cd_block_pair(
+    bucket: &[ActivePair],
+    cz: &mut LambdaCache,
+    mut cr: Option<&mut LambdaCache>,
+    pos: &[usize],
+    lambda: &SpRowMat,
+    delta: &mut SpRowMat,
+    lam_l: f64,
+) {
+    for a in bucket {
+        let (i, j) = (a.i, a.j);
+        let mu = {
+            // Locate each endpoint's cached column (in cz or cr).
+            let (ci, i_in_z) = match locate(cz, cr.as_deref(), pos, i) {
+                Some(x) => x,
+                None => continue,
+            };
+            let (cj, j_in_z) = match locate(cz, cr.as_deref(), pos, j) {
+                Some(x) => x,
+                None => continue,
+            };
+            let cache_i: &LambdaCache = if i_in_z { &*cz } else { cr.as_deref().unwrap() };
+            let cache_j: &LambdaCache = if j_in_z { &*cz } else { cr.as_deref().unwrap() };
+            let sig_i = cache_i.sigma.row(ci);
+            let sig_j = cache_j.sigma.row(cj);
+            let psi_i = cache_i.psi.row(ci);
+            let psi_j = cache_j.psi.row(cj);
+            let u_i = cache_i.u.row(ci);
+            let u_j = cache_j.u.row(cj);
+            let (s_ij, s_ii, s_jj) = (sig_j[i], sig_i[i], sig_j[j]);
+            let (p_ij, p_ii, p_jj) = (psi_j[i], psi_i[i], psi_j[j]);
+            if i == j {
+                let aa = s_ii * s_ii + 2.0 * s_ii * p_ii;
+                let b = a.grad + dot(sig_i, u_i) + 2.0 * dot(psi_i, u_i);
+                let c = lambda.get(i, i) + delta.get(i, i);
+                cd_minimizer(aa, b, c, lam_l)
+            } else {
+                let aa =
+                    s_ij * s_ij + s_ii * s_jj + s_ii * p_jj + s_jj * p_ii + 2.0 * s_ij * p_ij;
+                let b = a.grad + dot(sig_i, u_j) + dot(psi_i, u_j) + dot(psi_j, u_i);
+                let c = lambda.get(i, j) + delta.get(i, j);
+                cd_minimizer(aa, b, c, lam_l)
+            }
+        };
+        if mu == 0.0 {
+            continue;
+        }
+        delta.add_sym(i, j, mu);
+        // Maintain u_t for every cached column t: u_t[i] += μσ_t[j],
+        // u_t[j] += μσ_t[i].
+        maintain_u(cz, i, j, mu);
+        if let Some(ref mut crr) = cr {
+            maintain_u(crr, i, j, mu);
+        }
+    }
+}
+
+fn locate(
+    cz: &LambdaCache,
+    cr: Option<&LambdaCache>,
+    pos: &[usize],
+    t: usize,
+) -> Option<(usize, bool)> {
+    let c = pos[t];
+    if c == usize::MAX {
+        return None;
+    }
+    if c < cz.cols.len() && cz.cols[c] == t {
+        return Some((c, true));
+    }
+    if let Some(cr) = cr {
+        if c < cr.cols.len() && cr.cols[c] == t {
+            return Some((c, false));
+        }
+    }
+    None
+}
+
+fn maintain_u(cache: &mut LambdaCache, i: usize, j: usize, mu: f64) {
+    let m = cache.cols.len();
+    let q = cache.sigma.cols();
+    let sd = cache.sigma.data();
+    let ud = cache.u.data_mut();
+    if i == j {
+        for c in 0..m {
+            ud[c * q + i] += mu * sd[c * q + i];
+        }
+    } else {
+        for c in 0..m {
+            let s_j = sd[c * q + j];
+            let s_i = sd[c * q + i];
+            ud[c * q + i] += mu * s_j;
+            ud[c * q + j] += mu * s_i;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- Θ helpers
+
+/// Θ screen: blockwise gradient ∇_Θ = 2S_xy + 2Γ with
+/// Γ_blk = Xᵀ(X·ΘΣ_blk)/n via two GEMMs. Returns per-row active column
+/// lists with gradient values, plus the subgradient statistic.
+type ThetaActive = Vec<(usize, Vec<(usize, f64)>)>;
+
+fn theta_screen(
+    data: &Dataset,
+    sig: &SigmaOracle,
+    model: &CggmModel,
+    engine: &dyn GemmEngine,
+    par: &Parallelism,
+    opts: &SolveOptions,
+) -> Result<(ThetaActive, f64), SolveError> {
+    let (p, q, n) = (data.p(), data.q(), data.n());
+    let bsz = theta_screen_block(p, q, opts);
+    // active[i] = list of (j, grad) per row i (built incrementally).
+    let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); p];
+    let mut subgrad = 0.0;
+    let mut t0 = 0;
+    while t0 < q {
+        let b = bsz.min(q - t0);
+        let cols: Vec<usize> = (t0..t0 + b).collect();
+        let track = opts.budget.track((b * q + 2 * p * b + n * b) * 8)?;
+        // σ columns for this block.
+        let mut sigma = Mat::zeros(b, q);
+        par.parallel_chunks_mut(sigma.data_mut(), q, |c, row| {
+            sig.unit_column(cols[c], row);
+        });
+        // M = ΘΣ_blk (sparse rows); T = X·M (n×b).
+        let mut t_mat = Mat::zeros(n, b);
+        for i in 0..p {
+            let row = model.theta.row(i);
+            if row.is_empty() {
+                continue;
+            }
+            // m_i[c] = Θ_i·σ_c
+            let mut mi = vec![0.0; b];
+            for (c, m) in mi.iter_mut().enumerate() {
+                let sig = sigma.row(c);
+                let mut s = 0.0;
+                for &(jj, v) in row {
+                    s += v * sig[jj];
+                }
+                *m = s;
+            }
+            let xi = data.xt.row(i);
+            for k in 0..n {
+                axpy(xi[k], &mi, t_mat.row_mut(k));
+            }
+        }
+        // Γ_blk = Xᵀ·T / n  (p×b): gemm(xt (p×n), T (n×b)).
+        let mut gamma = Mat::zeros(p, b);
+        engine.gemm(data.inv_n(), &data.xt, &t_mat, 0.0, &mut gamma);
+        // S_xy block (p×b).
+        let ytb = data.yt.submatrix(&cols, &(0..n).collect::<Vec<_>>());
+        let mut sxyb = Mat::zeros(p, b);
+        engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
+        // Screen.
+        for i in 0..p {
+            let grow = gamma.row(i);
+            let srow = sxyb.row(i);
+            for c in 0..b {
+                let j = cols[c];
+                let g = 2.0 * srow[c] + 2.0 * grow[c];
+                let x = model.theta.get(i, j);
+                subgrad += min_norm_subgrad(g, x, opts.lam_t).abs();
+                if x != 0.0 || g.abs() > opts.lam_t {
+                    per_row[i].push((j, g));
+                }
+            }
+        }
+        drop(track);
+        t0 += b;
+    }
+    let active: ThetaActive = per_row
+        .into_iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_empty())
+        .collect();
+    Ok((active, subgrad))
+}
+
+fn theta_screen_block(p: usize, q: usize, opts: &SolveOptions) -> usize {
+    let budget = opts.budget.available().max(1);
+    // Per block column: q (σ) + 2p (Γ, S_xy) doubles.
+    let col_bytes = (q + 2 * p) * 8 + 64;
+    ((budget / 2) / col_bytes).clamp(1, q)
+}
+
+/// Θ block CD sweep (Alg. 2 lower half): partition output columns, cache
+/// Σ_{C_r} and V rows, update row blocks (i, C_r) with one S_xx row at a
+/// time restricted to the support rows.
+fn theta_block_sweep(
+    data: &Dataset,
+    sig: &SigmaOracle,
+    model: &mut CggmModel,
+    active: &ThetaActive,
+    _engine: &dyn GemmEngine,
+    par: &Parallelism,
+    opts: &SolveOptions,
+) -> Result<(), SolveError> {
+    let q = data.q();
+    if active.is_empty() {
+        return Ok(());
+    }
+    // Support rows: non-empty Θ rows ∪ active rows.
+    let mut support: Vec<usize> = model.theta.nonempty_row_indices();
+    support.extend(active.iter().map(|(i, _)| *i));
+    support.sort_unstable();
+    support.dedup();
+    let ns = support.len();
+    let mut support_pos = vec![usize::MAX; data.p()];
+    for (s, &i) in support.iter().enumerate() {
+        support_pos[i] = s;
+    }
+
+    // Partition columns: cluster the ΘᵀΘ co-occurrence graph of the active set.
+    let k_t = theta_block_count(q, ns, opts);
+    let blocks: Vec<Vec<usize>> = if opts.clustering && k_t > 1 {
+        let rows: Vec<Vec<usize>> = active
+            .iter()
+            .map(|(_, v)| v.iter().map(|(j, _)| *j).collect())
+            .collect();
+        let g = Graph::theta_column_graph(&rows, q);
+        let part = cluster(
+            &g,
+            k_t,
+            &ClusterOptions {
+                seed: opts.seed ^ 0x5eed,
+                ..Default::default()
+            },
+        );
+        parts_to_blocks(&part, k_t)
+    } else {
+        contiguous_blocks(q, k_t)
+    };
+    let mut block_of = vec![0usize; q];
+    for (b, cols) in blocks.iter().enumerate() {
+        for &c in cols {
+            block_of[c] = b;
+        }
+    }
+
+    // Per-row active lists bucketed by block.
+    // row_actives[b] = Vec<(row i, Vec<(col j, grad)>)> restricted to block b.
+    let nb = blocks.len();
+    let mut row_actives: Vec<Vec<(usize, Vec<(usize, f64)>)>> = vec![Vec::new(); nb];
+    for (i, cols) in active {
+        let mut per_block: Vec<Vec<(usize, f64)>> = vec![Vec::new(); nb];
+        for &(j, g) in cols {
+            per_block[block_of[j]].push((j, g));
+        }
+        for (b, v) in per_block.into_iter().enumerate() {
+            if !v.is_empty() {
+                row_actives[b].push((*i, v));
+            }
+        }
+    }
+
+    let mut sxx_row: Vec<f64> = Vec::new();
+    for _ in 0..opts.inner_sweeps {
+        for (b, cols) in blocks.iter().enumerate() {
+            if row_actives[b].is_empty() {
+                continue;
+            }
+            let bsz = cols.len();
+            let track = opts.budget.track((bsz * q + bsz * ns) * 8)?;
+            // σ columns of this block.
+            let mut sigma = Mat::zeros(bsz, q);
+            par.parallel_chunks_mut(sigma.data_mut(), q, |c, row| {
+                sig.unit_column(cols[c], row);
+            });
+            // vt[c][s] = V[support[s]][c] = Θ_{support[s],:}·σ_c.
+            let mut vt = Mat::zeros(bsz, ns);
+            for (s, &i) in support.iter().enumerate() {
+                let row = model.theta.row(i);
+                if row.is_empty() {
+                    continue;
+                }
+                for c in 0..bsz {
+                    let sig = sigma.row(c);
+                    let mut acc = 0.0;
+                    for &(jj, v) in row {
+                        acc += v * sig[jj];
+                    }
+                    vt[(c, s)] = acc;
+                }
+            }
+            // Column position lookup within this block.
+            let mut col_pos = vec![usize::MAX; q];
+            for (c, &j) in cols.iter().enumerate() {
+                col_pos[j] = c;
+            }
+            // Row blocks (i, C_b).
+            for (i, jlist) in &row_actives[b] {
+                let i = *i;
+                // One S_xx row, restricted to the support (cache miss cost
+                // O(n·p̃), §4.2).
+                data.sxx_row_restricted(i, &support, &mut sxx_row);
+                let sxx_ii = data.sxx(i, i);
+                let si = support_pos[i];
+                debug_assert!(si != usize::MAX);
+                for &(j, _g) in jlist {
+                    let c = col_pos[j];
+                    debug_assert!(c != usize::MAX);
+                    let sig_c = sigma.row(c);
+                    let a = 2.0 * sxx_ii * sig_c[j];
+                    if a <= 0.0 {
+                        continue;
+                    }
+                    let b_lin =
+                        2.0 * data.sxy(i, j) + 2.0 * dot(&sxx_row, vt.row(c));
+                    let cc = model.theta.get(i, j);
+                    let mu = cd_minimizer(a, b_lin, cc, opts.lam_t);
+                    if mu != 0.0 {
+                        model.theta.add(i, j, mu);
+                        // V_{i,:}|block += μΣ_{j,:}|block ⇒ vt[c'][si] += μσ_{c'}[j].
+                        for cprime in 0..bsz {
+                            let sjc = sigma[(cprime, j)];
+                            vt[(cprime, si)] += mu * sjc;
+                        }
+                    }
+                }
+            }
+            drop(track);
+        }
+    }
+    Ok(())
+}
+
+fn theta_block_count(q: usize, support: usize, opts: &SolveOptions) -> usize {
+    let budget = opts.budget.available().max(1);
+    let col_bytes = (q + support) * 8 + 64;
+    let max_cols = ((budget / 2) / col_bytes).max(1);
+    q.div_ceil(max_cols).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::gemm::native::NativeGemm;
+    use crate::util::membudget::MemBudget;
+
+    #[test]
+    fn converges_on_tiny_chain() {
+        let prob = datagen::chain::generate(12, 12, 80, 3);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions {
+            lam_l: 0.15,
+            lam_t: 0.15,
+            max_iter: 60,
+            chol: crate::cggm::CholKind::SparseRcm,
+            ..Default::default()
+        };
+        let res = solve(&prob.data, &opts, &eng).unwrap();
+        assert!(res.trace.converged, "bcd did not converge");
+        let fs: Vec<f64> = res.trace.records.iter().map(|r| r.f).collect();
+        for k in 1..fs.len() {
+            assert!(fs[k] <= fs[k - 1] + 1e-7, "f increased: {fs:?}");
+        }
+    }
+
+    #[test]
+    fn tight_budget_forces_many_blocks_same_answer() {
+        let prob = datagen::chain::generate(10, 10, 60, 9);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions {
+            lam_l: 0.2,
+            lam_t: 0.2,
+            max_iter: 50,
+            chol: crate::cggm::CholKind::SparseRcm,
+            ..Default::default()
+        };
+        let unlimited = solve(&prob.data, &base, &eng).unwrap();
+        // A budget that only fits a handful of cached columns.
+        let tight = SolveOptions {
+            budget: MemBudget::new(64 * 1024),
+            ..base
+        };
+        let constrained = solve(&prob.data, &tight, &eng).unwrap();
+        let fu = unlimited.trace.final_f().unwrap();
+        let fc = constrained.trace.final_f().unwrap();
+        assert!(
+            (fu - fc).abs() < 1e-4 * fu.abs().max(1.0),
+            "objectives differ: {fu} vs {fc}"
+        );
+        assert!(constrained.trace.converged);
+        // Budget was respected.
+        assert!(tight.budget.peak() <= 64 * 1024);
+    }
+}

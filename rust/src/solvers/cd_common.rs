@@ -1,0 +1,394 @@
+//! Shared coordinate-descent inner loops (dense-cache variants used by the
+//! two non-block solvers). Update equations are derived in DESIGN.md §4
+//! (note the erratum on the paper's `a` coefficient).
+//!
+//! Layout conventions (performance-critical — see DESIGN.md §9):
+//! - `sigma`, `psi`, `syy` are dense symmetric q×q, so row i ≡ column i;
+//! - `w` stores **Uᵀ = (Δ_ΛΣ)ᵀ = ΣΔ_Λ**: `w.row(t)` is the t-th *column* of
+//!   U, making every Hessian dot a contiguous-row dot;
+//! - `vt` stores **Vᵀ = (ΘΣ)ᵀ = ΣΘᵀ**: `vt.row(j)` is the j-th column of V.
+
+use crate::cggm::cd_minimizer;
+use crate::linalg::dense::{dot, Mat};
+use crate::linalg::sparse::SpRowMat;
+
+/// Extra cached matrices for the joint (Newton CD) Λ update: the Γ/Φ
+/// coupling terms of Appendix A.1.
+pub struct JointTerms<'a> {
+    /// Γᵀ (q×p): `gamma_t.row(i)` = Γ_:,i.
+    pub gamma_t: &'a Mat,
+    /// V'ᵀ = (Δ_ΘΣ)ᵀ (q×p): `vtp.row(j)` = V'_:,j.
+    pub vtp: &'a Mat,
+}
+
+/// One CD pass over the Λ active set, updating the direction `delta`
+/// (symmetric) and the cache `w`. Returns the number of coordinates moved.
+#[allow(clippy::too_many_arguments)]
+pub fn lambda_cd_pass(
+    active: &[(usize, usize)],
+    syy: &Mat,
+    sigma: &Mat,
+    psi: &Mat,
+    lambda: &SpRowMat,
+    delta: &mut SpRowMat,
+    w: &mut Mat,
+    lam_l: f64,
+    joint: Option<&JointTerms>,
+) -> usize {
+    let q = sigma.rows();
+    let mut moved = 0usize;
+    for &(i, j) in active {
+        let (s_ij, s_ii, s_jj) = (sigma[(i, j)], sigma[(i, i)], sigma[(j, j)]);
+        let (p_ij, p_ii, p_jj) = (psi[(i, j)], psi[(i, i)], psi[(j, j)]);
+        let mu = if i == j {
+            let a = s_ii * s_ii + 2.0 * s_ii * p_ii;
+            let mut b = syy[(i, i)] - s_ii - p_ii
+                + dot(sigma.row(i), w.row(i))
+                + 2.0 * dot(psi.row(i), w.row(i));
+            if let Some(jt) = joint {
+                b -= 2.0 * dot(jt.gamma_t.row(i), jt.vtp.row(i));
+            }
+            let c = lambda.get(i, i) + delta.get(i, i);
+            cd_minimizer(a, b, c, lam_l)
+        } else {
+            let a = s_ij * s_ij + s_ii * s_jj + s_ii * p_jj + s_jj * p_ii + 2.0 * s_ij * p_ij;
+            let mut b = syy[(i, j)] - s_ij - p_ij
+                + dot(sigma.row(i), w.row(j))
+                + dot(psi.row(i), w.row(j))
+                + dot(psi.row(j), w.row(i));
+            if let Some(jt) = joint {
+                // Φ_ij + Φ_ji
+                b -= dot(jt.gamma_t.row(i), jt.vtp.row(j))
+                    + dot(jt.gamma_t.row(j), jt.vtp.row(i));
+            }
+            let c = lambda.get(i, j) + delta.get(i, j);
+            cd_minimizer(a, b, c, lam_l)
+        };
+        if mu != 0.0 {
+            moved += 1;
+            delta.add_sym(i, j, mu);
+            // Maintain w = Uᵀ: U_{i,:} += μΣ_{j,:} and U_{j,:} += μΣ_{i,:}
+            // ⇒ column updates w[t][i] += μΣ[j][t], w[t][j] += μΣ[i][t].
+            let wd = w.data_mut();
+            let sd = sigma.data();
+            if i == j {
+                for t in 0..q {
+                    wd[t * q + i] += mu * sd[i * q + t];
+                }
+            } else {
+                for t in 0..q {
+                    let sjt = sd[j * q + t];
+                    let sit = sd[i * q + t];
+                    wd[t * q + i] += mu * sjt;
+                    wd[t * q + j] += mu * sit;
+                }
+            }
+        }
+    }
+    moved
+}
+
+/// One CD pass over the Θ active set for **Algorithm 1's direct update**:
+/// mutates Θ itself (and `vt = (ΘΣ)ᵀ`). `sxx_diag[i] = (S_xx)_ii`.
+#[allow(clippy::too_many_arguments)]
+pub fn theta_cd_pass_direct(
+    active: &[(usize, usize)],
+    sxx: &Mat,
+    sxx_diag: &[f64],
+    sxy: &Mat,
+    sigma: &Mat,
+    theta: &mut SpRowMat,
+    vt: &mut Mat,
+    lam_t: f64,
+) -> usize {
+    let q = sigma.rows();
+    let mut moved = 0usize;
+    for &(i, j) in active {
+        let a = 2.0 * sxx_diag[i] * sigma[(j, j)];
+        if a <= 0.0 {
+            continue; // zero-variance input: coordinate has no curvature
+        }
+        let b = 2.0 * sxy[(i, j)] + 2.0 * dot(sxx.row(i), vt.row(j));
+        let c = theta.get(i, j);
+        let mu = cd_minimizer(a, b, c, lam_t);
+        if mu != 0.0 {
+            moved += 1;
+            theta.add(i, j, mu);
+            // V_{i,:} += μ Σ_{j,:}  ⇒  vt[t][i] += μ Σ[j][t].
+            let vd = vt.data_mut();
+            let sd = sigma.data();
+            let p = sxx.rows();
+            for t in 0..q {
+                vd[t * p + i] += mu * sd[j * q + t];
+            }
+        }
+    }
+    moved
+}
+
+/// One CD pass over the Θ active set for the **joint direction** (Newton CD
+/// baseline, Appendix A.1): updates the direction `delta_t` and
+/// `vtp = (Δ_ΘΣ)ᵀ`. Needs Γ (p×q, rows) and `w = (Δ_ΛΣ)ᵀ` for the coupling.
+#[allow(clippy::too_many_arguments)]
+pub fn theta_cd_pass_direction(
+    active: &[(usize, usize)],
+    sxx: &Mat,
+    sxx_diag: &[f64],
+    sxy: &Mat,
+    sigma: &Mat,
+    gamma: &Mat,
+    w: &Mat,
+    theta: &SpRowMat,
+    delta_t: &mut SpRowMat,
+    vtp: &mut Mat,
+    lam_t: f64,
+) -> usize {
+    let q = sigma.rows();
+    let p = sxx.rows();
+    let mut moved = 0usize;
+    for &(i, j) in active {
+        let a = 2.0 * sxx_diag[i] * sigma[(j, j)];
+        if a <= 0.0 {
+            continue;
+        }
+        let b = 2.0 * sxy[(i, j)] + 2.0 * gamma[(i, j)]
+            + 2.0 * dot(sxx.row(i), vtp.row(j))
+            - 2.0 * dot(gamma.row(i), w.row(j));
+        let c = theta.get(i, j) + delta_t.get(i, j);
+        let mu = cd_minimizer(a, b, c, lam_t);
+        if mu != 0.0 {
+            moved += 1;
+            delta_t.add(i, j, mu);
+            let vd = vtp.data_mut();
+            let sd = sigma.data();
+            for t in 0..q {
+                vd[t * p + i] += mu * sd[j * q + t];
+            }
+        }
+    }
+    moved
+}
+
+/// tr(Gᵀ D) for dense G and sparse D (δ term of the Armijo condition).
+pub fn trace_grad_dir(grad: &Mat, dir: &SpRowMat) -> f64 {
+    let mut t = 0.0;
+    for i in 0..dir.rows() {
+        for &(j, v) in dir.row(i) {
+            t += grad[(i, j)] * v;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::gemm::GemmEngine;
+    use crate::util::rng::Rng;
+    use crate::util::testing::property;
+
+    /// Quadratic model value for the Λ subproblem:
+    /// Q(Δ) = tr(∇ᵀΔ) + ½[tr(ΣΔΣΔ) + 2 tr(ΨΔΣΔ)] + λ‖Λ+Δ‖₁
+    fn lambda_model_value(
+        grad: &Mat,
+        sigma: &Mat,
+        psi: &Mat,
+        lambda: &SpRowMat,
+        delta: &SpRowMat,
+        lam_l: f64,
+    ) -> f64 {
+        let q = sigma.rows();
+        let eng = NativeGemm::new(1);
+        let d = delta.to_dense();
+        let mut ds = Mat::zeros(q, q);
+        eng.gemm(1.0, &d, sigma, 0.0, &mut ds); // ΔΣ
+        let mut sds = Mat::zeros(q, q);
+        eng.gemm(1.0, sigma, &ds, 0.0, &mut sds); // ΣΔΣ
+        let mut pds = Mat::zeros(q, q);
+        eng.gemm(1.0, psi, &ds, 0.0, &mut pds); // ΨΔΣ
+        let mut quad = 0.0;
+        let mut lin = 0.0;
+        for i in 0..q {
+            for j in 0..q {
+                quad += d[(i, j)] * (sds[(j, i)] + 2.0 * pds[(j, i)]);
+                lin += grad[(i, j)] * d[(i, j)];
+            }
+        }
+        let mut lpd = lambda.clone();
+        lpd.add_scaled(1.0, delta);
+        lin + 0.5 * quad + lam_l * lpd.l1_norm()
+    }
+
+    fn random_spd_dense(rng: &mut Rng, n: usize) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = Mat::zeros(n, n);
+        NativeGemm::new(1).gemm_tn(1.0, &b, &b, 0.0, &mut a);
+        for i in 0..n {
+            a[(i, i)] += n as f64 * 0.5;
+        }
+        a.symmetrize();
+        a
+    }
+
+    fn random_psd_dense(rng: &mut Rng, n: usize, k: usize) -> Mat {
+        let b = Mat::from_fn(k, n, |_, _| rng.normal());
+        let mut a = Mat::zeros(n, n);
+        NativeGemm::new(1).gemm_tn(1.0, &b, &b, 0.0, &mut a);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn lambda_cd_never_increases_model() {
+        property(25, |rng| {
+            let q = 2 + rng.below(7);
+            let sigma = random_spd_dense(rng, q);
+            let psi = random_psd_dense(rng, q, 3);
+            let syy = random_psd_dense(rng, q, q + 2);
+            let mut lambda = SpRowMat::eye(q);
+            for _ in 0..q {
+                let (i, j) = (rng.below(q), rng.below(q));
+                lambda.set_sym(i, j, 0.1 * rng.normal());
+            }
+            for i in 0..q {
+                lambda.add(i, i, 1.0);
+            }
+            // grad = S_yy - Σ - Ψ
+            let mut grad = syy.clone();
+            grad.add_scaled(-1.0, &sigma);
+            grad.add_scaled(-1.0, &psi);
+            let lam_l = 0.3;
+            // active set: everything upper-tri
+            let mut active = Vec::new();
+            for i in 0..q {
+                for j in i..q {
+                    active.push((i, j));
+                }
+            }
+            let mut delta = SpRowMat::zeros(q, q);
+            let mut w = Mat::zeros(q, q);
+            let mut prev = lambda_model_value(&grad, &sigma, &psi, &lambda, &delta, lam_l);
+            for sweep in 0..3 {
+                lambda_cd_pass(
+                    &active, &syy, &sigma, &psi, &lambda, &mut delta, &mut w, lam_l, None,
+                );
+                let cur = lambda_model_value(&grad, &sigma, &psi, &lambda, &delta, lam_l);
+                if cur > prev + 1e-9 {
+                    return Err(format!("model increased on sweep {sweep}: {prev} -> {cur}"));
+                }
+                prev = cur;
+            }
+            // And the final model value beats Δ = 0.
+            let zero = lambda_model_value(&grad, &sigma, &psi, &lambda, &SpRowMat::zeros(q, q), lam_l);
+            if prev > zero + 1e-9 {
+                return Err(format!("no progress over Δ=0: {prev} vs {zero}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn w_cache_stays_consistent() {
+        // After a pass, w must equal (ΔΣ)ᵀ exactly.
+        property(25, |rng| {
+            let q = 2 + rng.below(7);
+            let sigma = random_spd_dense(rng, q);
+            let psi = random_psd_dense(rng, q, 2);
+            let syy = random_psd_dense(rng, q, q);
+            let lambda = SpRowMat::eye(q);
+            let mut active = Vec::new();
+            for i in 0..q {
+                for j in i..q {
+                    if rng.bernoulli(0.7) {
+                        active.push((i, j));
+                    }
+                }
+            }
+            let mut delta = SpRowMat::zeros(q, q);
+            let mut w = Mat::zeros(q, q);
+            lambda_cd_pass(&active, &syy, &sigma, &psi, &lambda, &mut delta, &mut w, 0.1, None);
+            let eng = NativeGemm::new(1);
+            let d = delta.to_dense();
+            let mut ds = Mat::zeros(q, q);
+            eng.gemm(1.0, &d, &sigma, 0.0, &mut ds);
+            let dst = ds.transposed();
+            crate::util::testing::check_all_close(w.data(), dst.data(), 1e-9, "w = (ΔΣ)ᵀ")
+        });
+    }
+
+    /// Θ subproblem objective: tr(2S_xyᵀΘ + ΣΘᵀS_xxΘ) + λ‖Θ‖₁.
+    fn theta_obj(sxy: &Mat, sxx: &Mat, sigma: &Mat, theta: &SpRowMat, lam_t: f64) -> f64 {
+        let eng = NativeGemm::new(1);
+        let (p, q) = (sxx.rows(), sigma.rows());
+        let td = theta.to_dense();
+        let mut lin = 0.0;
+        for i in 0..p {
+            for j in 0..q {
+                lin += sxy[(i, j)] * td[(i, j)];
+            }
+        }
+        let mut st = Mat::zeros(p, q);
+        eng.gemm(1.0, sxx, &td, 0.0, &mut st);
+        let mut tst = Mat::zeros(q, q);
+        eng.gemm_tn(1.0, &td, &st, 0.0, &mut tst);
+        let mut quad = 0.0;
+        for i in 0..q {
+            for j in 0..q {
+                quad += sigma[(i, j)] * tst[(j, i)];
+            }
+        }
+        2.0 * lin + quad + lam_t * theta.l1_norm()
+    }
+
+    #[test]
+    fn theta_cd_monotone_and_consistent() {
+        property(25, |rng| {
+            let p = 2 + rng.below(6);
+            let q = 2 + rng.below(6);
+            let sigma = random_spd_dense(rng, q);
+            let sxx = random_spd_dense(rng, p);
+            let sxy = Mat::from_fn(p, q, |_, _| rng.normal());
+            let sxx_diag: Vec<f64> = (0..p).map(|i| sxx[(i, i)]).collect();
+            let mut theta = SpRowMat::zeros(p, q);
+            let mut vt = Mat::zeros(q, p);
+            let mut active = Vec::new();
+            for i in 0..p {
+                for j in 0..q {
+                    if rng.bernoulli(0.8) {
+                        active.push((i, j));
+                    }
+                }
+            }
+            let lam_t = 0.2;
+            let mut prev = theta_obj(&sxy, &sxx, &sigma, &theta, lam_t);
+            for sweep in 0..4 {
+                theta_cd_pass_direct(
+                    &active, &sxx, &sxx_diag, &sxy, &sigma, &mut theta, &mut vt, lam_t,
+                );
+                let cur = theta_obj(&sxy, &sxx, &sigma, &theta, lam_t);
+                if cur > prev + 1e-9 {
+                    return Err(format!("Θ objective increased on sweep {sweep}"));
+                }
+                prev = cur;
+            }
+            // vt consistency: vt = (ΘΣ)ᵀ
+            let eng = NativeGemm::new(1);
+            let td = theta.to_dense();
+            let mut v = Mat::zeros(p, q);
+            eng.gemm(1.0, &td, &sigma, 0.0, &mut v);
+            let vtt = v.transposed();
+            crate::util::testing::check_all_close(vt.data(), vtt.data(), 1e-9, "vt = (ΘΣ)ᵀ")
+        });
+    }
+
+    #[test]
+    fn trace_grad_dir_matches_dense() {
+        let mut rng = Rng::new(5);
+        let g = Mat::from_fn(4, 4, |_, _| rng.normal());
+        let mut d = SpRowMat::zeros(4, 4);
+        d.set(1, 2, 2.0);
+        d.set(3, 0, -1.0);
+        assert!((trace_grad_dir(&g, &d) - (2.0 * g[(1, 2)] - g[(3, 0)])).abs() < 1e-14);
+    }
+}

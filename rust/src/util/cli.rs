@@ -1,0 +1,141 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Typed getters with defaults keep call sites short.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. Flags listed in `bool_flags` take no value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if i + 1 < raw.len() {
+                    out.options.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|s| {
+                s.replace('_', "")
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 250,500,1000`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.opt(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .replace('_', "")
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixture() {
+        let a = Args::parse(
+            &s(&["fit", "--p", "100", "--q=50", "--verbose", "data.bin"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["fit", "data.bin"]);
+        assert_eq!(a.get_usize("p", 0), 100);
+        assert_eq!(a.get_usize("q", 0), 50);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&s(&[]), &[]);
+        assert_eq!(a.get_f64("lambda", 0.5), 0.5);
+        assert_eq!(a.get_str("solver", "alt"), "alt");
+        assert_eq!(a.get_usize_list("sizes", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn lists_and_underscores() {
+        let a = Args::parse(&s(&["--sizes", "1_000,2_000", "--n", "10_000"]), &[]);
+        assert_eq!(a.get_usize_list("sizes", &[]), vec![1000, 2000]);
+        assert_eq!(a.get_usize("n", 0), 10_000);
+    }
+
+    #[test]
+    fn trailing_option_without_value_is_flag() {
+        let a = Args::parse(&s(&["--dry-run"]), &[]);
+        assert!(a.flag("dry-run"));
+    }
+}

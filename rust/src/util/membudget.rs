@@ -1,0 +1,171 @@
+//! Memory-budget accounting for the block coordinate descent solver.
+//!
+//! The paper's Algorithm 2 exists because the dense matrices Σ, Ψ (q×q) and
+//! Γ (p×q) exceed RAM for large p, q ("the Newton coordinate descent method
+//! exhausted memory when p+q exceeded 80,000" on 104 GB). The block solver
+//! "picks the smallest possible k such that we can store 2q/k columns of Σ
+//! and Ψ in memory".
+//!
+//! [`MemBudget`] makes that policy explicit and testable: solvers ask it to
+//! size their caches, and it tracks live allocations so tests (and the
+//! `memwall` experiment) can assert the working set never exceeds the budget
+//! — which is how we reproduce the paper's OOM boundary on a machine with
+//! plenty of physical RAM.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Byte budget with live accounting and a high-water mark.
+#[derive(Clone)]
+pub struct MemBudget {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    limit: usize,
+    live: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+/// RAII registration of a tracked allocation.
+pub struct Tracked {
+    inner: Arc<Inner>,
+    bytes: usize,
+}
+
+impl Drop for Tracked {
+    fn drop(&mut self) {
+        self.inner.live.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("memory budget exceeded: requested {requested} bytes, live {live}, limit {limit}")]
+pub struct BudgetExceeded {
+    pub requested: usize,
+    pub live: usize,
+    pub limit: usize,
+}
+
+impl MemBudget {
+    /// A budget of `limit` bytes. `usize::MAX` = unlimited.
+    pub fn new(limit: usize) -> Self {
+        MemBudget {
+            inner: Arc::new(Inner {
+                limit,
+                live: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    pub fn unlimited() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    pub fn limit(&self) -> usize {
+        self.inner.limit
+    }
+
+    pub fn live(&self) -> usize {
+        self.inner.live.load(Ordering::Relaxed)
+    }
+
+    /// Largest live total ever observed.
+    pub fn peak(&self) -> usize {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    /// Register `bytes` of working-set memory. Fails if it would exceed the
+    /// limit — the solver treats that as the paper's "out of memory".
+    pub fn track(&self, bytes: usize) -> Result<Tracked, BudgetExceeded> {
+        let prev = self.inner.live.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        if now > self.inner.limit {
+            self.inner.live.fetch_sub(bytes, Ordering::Relaxed);
+            return Err(BudgetExceeded {
+                requested: bytes,
+                live: prev,
+                limit: self.inner.limit,
+            });
+        }
+        self.inner.peak.fetch_max(now, Ordering::Relaxed);
+        Ok(Tracked {
+            inner: self.inner.clone(),
+            bytes,
+        })
+    }
+
+    /// Bytes still available.
+    pub fn available(&self) -> usize {
+        self.inner.limit.saturating_sub(self.live())
+    }
+}
+
+/// Parse "512MB", "2GB", "1048576", "64KB" into bytes.
+pub fn parse_bytes(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mult) = if let Some(t) = s.strip_suffix("GB").or(s.strip_suffix("gb")) {
+        (t, 1usize << 30)
+    } else if let Some(t) = s.strip_suffix("MB").or(s.strip_suffix("mb")) {
+        (t, 1usize << 20)
+    } else if let Some(t) = s.strip_suffix("KB").or(s.strip_suffix("kb")) {
+        (t, 1usize << 10)
+    } else if let Some(t) = s.strip_suffix('B').or(s.strip_suffix('b')) {
+        (t, 1)
+    } else {
+        (s, 1)
+    };
+    num.trim().parse::<f64>().ok().map(|x| (x * mult as f64) as usize)
+}
+
+/// Render a byte count human-readably.
+pub fn fmt_bytes(bytes: usize) -> String {
+    let b = bytes as f64;
+    if b >= (1u64 << 30) as f64 {
+        format!("{:.2}GB", b / (1u64 << 30) as f64)
+    } else if b >= (1u64 << 20) as f64 {
+        format!("{:.2}MB", b / (1u64 << 20) as f64)
+    } else if b >= 1024.0 {
+        format!("{:.2}KB", b / 1024.0)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_and_releases() {
+        let b = MemBudget::new(1000);
+        let t1 = b.track(600).unwrap();
+        assert_eq!(b.live(), 600);
+        assert!(b.track(500).is_err());
+        let t2 = b.track(400).unwrap();
+        assert_eq!(b.live(), 1000);
+        drop(t1);
+        assert_eq!(b.live(), 400);
+        drop(t2);
+        assert_eq!(b.live(), 0);
+        assert_eq!(b.peak(), 1000);
+    }
+
+    #[test]
+    fn unlimited_never_fails() {
+        let b = MemBudget::unlimited();
+        let _t = b.track(usize::MAX / 4).unwrap();
+    }
+
+    #[test]
+    fn parse_and_format() {
+        assert_eq!(parse_bytes("512MB"), Some(512 << 20));
+        assert_eq!(parse_bytes("2GB"), Some(2 << 30));
+        assert_eq!(parse_bytes("64kb"), Some(64 << 10));
+        assert_eq!(parse_bytes("123"), Some(123));
+        assert_eq!(parse_bytes("1.5GB"), Some((1.5 * (1u64 << 30) as f64) as usize));
+        assert_eq!(parse_bytes("xyz"), None);
+        assert_eq!(fmt_bytes(512 << 20), "512.00MB");
+    }
+}

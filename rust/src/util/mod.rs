@@ -1,0 +1,13 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment vendors only the `xla` crate, so the
+//! conveniences a crates.io project would pull in (rand, serde, clap, rayon,
+//! proptest) are implemented here from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod membudget;
+pub mod rng;
+pub mod testing;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,226 @@
+//! Deterministic pseudo-random number generation (PCG64-DXSM) plus the
+//! distributions the data generators need: uniform, normal (Box–Muller),
+//! Bernoulli, binomial, and sampling without replacement.
+//!
+//! `rand` is unavailable offline; this is a small, well-tested substitute.
+//! Determinism matters here: every experiment in `EXPERIMENTS.md` records its
+//! seed, and the synthetic datasets of the paper's §5.1 are regenerated
+//! bit-identically from (kind, p, q, n, seed).
+
+/// PCG64-DXSM generator (O'Neill). 128-bit state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// Cached second normal deviate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Rng {
+    /// Create a generator from a seed. Distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng {
+            state: (seed as u128).wrapping_mul(0x9e37_79b9_7f4a_7c15_f39c_c060_5ced_c834),
+            inc: ((seed as u128) << 1) | 1,
+            spare_normal: None,
+        };
+        // Warm up to decorrelate small seeds.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Derive an independent stream (for per-thread / per-column use).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let s = self.next_u64() ^ stream.wrapping_mul(0xa076_1d64_78bd_642f);
+        Rng::new(s)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // PCG64-DXSM output function.
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda94_2042_e4dd_58b5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random bits into the mantissa.
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free-enough method (bias < 2^-64·n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal deviate (Box–Muller, cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Bernoulli(prob).
+    #[inline]
+    pub fn bernoulli(&mut self, prob: f64) -> bool {
+        self.uniform() < prob
+    }
+
+    /// Binomial(n, prob) by direct summation (n is small in our use: 2).
+    pub fn binomial(&mut self, n: usize, prob: f64) -> usize {
+        (0..n).filter(|_| self.bernoulli(prob)).count()
+    }
+
+    /// k distinct indices sampled uniformly from [0, n), Floyd's algorithm.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(11);
+        let n = 200_000;
+        let (mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s1 += z;
+            s2 += z * z;
+            s3 += z * z * z;
+        }
+        let m = s1 / n as f64;
+        let var = s2 / n as f64 - m * m;
+        let skew = s3 / n as f64;
+        assert!(m.abs() < 0.01, "mean={m}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!(skew.abs() < 0.03, "skew={skew}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = rng.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let k = 1 + rng.below(20);
+            let n = k + rng.below(50);
+            let mut s = rng.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), k, "duplicates produced");
+        }
+    }
+
+    #[test]
+    fn binomial_in_range() {
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            let b = rng.binomial(2, 0.3);
+            assert!(b <= 2);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(13);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut w = v.clone();
+        w.sort_unstable();
+        assert_eq!(w, (0..50).collect::<Vec<_>>());
+    }
+}

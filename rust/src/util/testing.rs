@@ -1,0 +1,110 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Usage pattern, mirroring proptest's ergonomics at reduced power:
+//!
+//! ```ignore
+//! property(100, |rng| {
+//!     let n = 1 + rng.below(20);
+//!     let m = random_spd(rng, n);
+//!     // ... assert invariants, returning Err(msg) on failure ...
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case gets a deterministic per-case seed; failures report the seed so
+//! the case can be replayed with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Run `cases` random test cases. Panics with the failing seed + message.
+pub fn property<F>(cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let base = std::env::var("CGGM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xc99a_2015_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e37_79b9));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at case {case} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay seed {seed}: {msg}");
+    }
+}
+
+/// Assert two floats are close; returns Err for use inside properties.
+pub fn check_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!(
+            "{what}: {a} vs {b} (|Δ|={}, tol={tol}, scale={scale})",
+            (a - b).abs()
+        ))
+    }
+}
+
+/// Assert slices are elementwise close.
+pub fn check_all_close(a: &[f64], b: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        check_close(*x, *y, tol, &format!("{what}[{i}]"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_trivially() {
+        property(50, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn property_failure_reports_seed() {
+        property(10, |rng| {
+            let x = rng.uniform();
+            if x < 2.0 {
+                // Force a failure deterministically on case 3.
+                if rng.below(10) == usize::MAX {
+                    return Ok(());
+                }
+            }
+            Err("forced".into())
+        });
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(check_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(check_close(1.0, 1.1, 1e-9, "x").is_err());
+        assert!(check_all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-12, "v").is_ok());
+        assert!(check_all_close(&[1.0], &[1.0, 2.0], 1e-12, "v").is_err());
+    }
+}

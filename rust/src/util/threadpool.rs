@@ -1,0 +1,150 @@
+//! Scoped data-parallel helpers over `std::thread::scope`.
+//!
+//! Implements the paper's §Parallelization ("embarrassingly-parallelizable"
+//! column computations: multiple columns of Σ via CG, elements of S_xx rows,
+//! GEMM tiles). rayon is unavailable offline, so this provides the two
+//! primitives the solvers need: `parallel_for` over an index range with
+//! static chunking, and `parallel_chunks_mut` over disjoint output slices.
+//!
+//! The thread count is a runtime parameter (`Parallelism`), which is how the
+//! Fig. 3 speedup experiment sweeps 1..16 workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Degree of parallelism for a solver run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    pub threads: usize,
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism { threads: 1 }
+    }
+}
+
+impl Parallelism {
+    pub fn new(threads: usize) -> Self {
+        Parallelism {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Run `body(i)` for every `i` in `0..n`, dynamically load-balanced in
+    /// chunks. `body` must be safe to call concurrently for distinct `i`.
+    pub fn parallel_for<F>(&self, n: usize, chunk: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let nt = self.threads.min(n.max(1));
+        if nt <= 1 || n <= chunk {
+            for i in 0..n {
+                body(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let chunk = chunk.max(1);
+        std::thread::scope(|s| {
+            for _ in 0..nt {
+                s.spawn(|| loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        body(i);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Split `out` into contiguous chunks of `chunk_len` and run
+    /// `body(chunk_index, chunk)` in parallel. Chunks are disjoint, so `body`
+    /// may mutate freely.
+    pub fn parallel_chunks_mut<T: Send, F>(&self, out: &mut [T], chunk_len: usize, body: F)
+    where
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        let nchunks = out.len().div_ceil(chunk_len);
+        let nt = self.threads.min(nchunks.max(1));
+        if nt <= 1 {
+            for (ci, chunk) in out.chunks_mut(chunk_len).enumerate() {
+                body(ci, chunk);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        // Collect raw chunk bounds; each worker claims chunk indices.
+        let base = out.as_mut_ptr() as usize;
+        let total = out.len();
+        let elem = std::mem::size_of::<T>();
+        std::thread::scope(|s| {
+            for _ in 0..nt {
+                s.spawn(|| loop {
+                    let ci = next.fetch_add(1, Ordering::Relaxed);
+                    let start = ci * chunk_len;
+                    if start >= total {
+                        break;
+                    }
+                    let len = chunk_len.min(total - start);
+                    // SAFETY: chunks [start, start+len) are disjoint across ci,
+                    // and `out` outlives the scope.
+                    let chunk = unsafe {
+                        std::slice::from_raw_parts_mut((base + start * elem) as *mut T, len)
+                    };
+                    body(ci, chunk);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        for threads in [1, 2, 4, 8] {
+            let par = Parallelism::new(threads);
+            let n = 1000;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            par.parallel_for(n, 16, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_mut_writes_disjointly() {
+        for threads in [1, 3, 8] {
+            let par = Parallelism::new(threads);
+            let mut v = vec![0usize; 257];
+            par.parallel_chunks_mut(&mut v, 10, |ci, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = ci * 10 + k;
+                }
+            });
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, i);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_len_ok() {
+        let par = Parallelism::new(4);
+        par.parallel_for(0, 8, |_| panic!("should not run"));
+        let mut v: Vec<u8> = vec![];
+        par.parallel_chunks_mut(&mut v, 4, |_, _| panic!("should not run"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Timing helpers: a stopwatch and a hierarchical phase profiler used by the
+//! solvers to attribute time to the paper's cost centers (Σ columns, Ψ/Gram
+//! products, CD sweeps, line search, active-set screening).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Accumulates wall time per named phase. Cheap enough to leave in the hot
+/// path (one `Instant::now()` pair per phase enter/exit, phases are coarse).
+#[derive(Default)]
+pub struct PhaseProfiler {
+    totals: Mutex<BTreeMap<&'static str, (f64, u64)>>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let mut m = self.totals.lock().unwrap();
+        let e = m.entry(phase).or_insert((0.0, 0));
+        e.0 += dt;
+        e.1 += 1;
+        out
+    }
+
+    /// Add externally measured time.
+    pub fn add(&self, phase: &'static str, seconds: f64) {
+        let mut m = self.totals.lock().unwrap();
+        let e = m.entry(phase).or_insert((0.0, 0));
+        e.0 += seconds;
+        e.1 += 1;
+    }
+
+    /// (phase, total seconds, call count), sorted by descending time.
+    pub fn report(&self) -> Vec<(&'static str, f64, u64)> {
+        let m = self.totals.lock().unwrap();
+        let mut v: Vec<_> = m.iter().map(|(k, (s, c))| (*k, *s, *c)).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (phase, secs, calls) in self.report() {
+            out.push_str(&format!("{phase:<24} {secs:>10.3}s  ({calls} calls)\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiler_accumulates() {
+        let p = PhaseProfiler::new();
+        let x = p.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        p.time("work", || ());
+        p.add("ext", 1.5);
+        let rep = p.report();
+        let work = rep.iter().find(|r| r.0 == "work").unwrap();
+        assert_eq!(work.2, 2);
+        let ext = rep.iter().find(|r| r.0 == "ext").unwrap();
+        assert!((ext.1 - 1.5).abs() < 1e-12);
+        assert!(!p.render().is_empty());
+    }
+}
