@@ -1,5 +1,6 @@
-//! Quickstart: generate a chain-graph CGGM problem, fit it with all three
-//! solvers, and compare time / objective / recovered structure.
+//! Quickstart: generate a chain-graph CGGM problem, fit it with the paper's
+//! three solvers (pass `--with-prox` to add the FISTA baseline), and compare
+//! time / objective / recovered structure.
 //!
 //! ```bash
 //! cargo run --release --example quickstart -- [--q 500] [--n 100] [--solver alt]
@@ -14,7 +15,7 @@ use cggm::util::cli::Args;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["verbose"]);
+    let args = Args::parse(&raw, &["verbose", "with-prox"]);
     let q = args.get_usize("q", 400);
     let p = args.get_usize("p", q);
     let n = args.get_usize("n", 100);
@@ -30,7 +31,8 @@ fn main() {
 
     let solvers: Vec<SolverKind> = match args.opt("solver") {
         Some(s) => vec![SolverKind::parse(s).expect("unknown solver")],
-        None => SolverKind::all().to_vec(),
+        None if args.flag("with-prox") => SolverKind::all().to_vec(),
+        None => SolverKind::paper_three().to_vec(),
     };
     println!(
         "{:<16} {:>9} {:>7} {:>14} {:>8} {:>8} {:>6}",

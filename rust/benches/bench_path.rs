@@ -1,0 +1,60 @@
+//! λ-path bench: quantifies what the warm-started path driver buys —
+//! (a) total outer iterations saved by seeding each point with the previous
+//! solution, and (b) wall-clock for a full sweep, warm vs cold, on a shared
+//! `SolverContext` (covariance statistics computed once per path).
+
+use cggm::bench::{Bench, BenchSet};
+use cggm::coordinator::{fit_path, PathOptions};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{SolveOptions, SolverKind};
+
+fn main() {
+    let eng = NativeGemm::new(1);
+    let prob = datagen::chain::generate(150, 150, 100, 5);
+    let base = SolveOptions {
+        max_iter: 120,
+        ..Default::default()
+    };
+    let warm_opts = PathOptions {
+        points: 8,
+        min_ratio: 0.05,
+        lambdas: None,
+        warm_start: true,
+    };
+    let cold_opts = PathOptions {
+        warm_start: false,
+        ..warm_opts.clone()
+    };
+
+    // Iteration-count comparison (the warm-start savings headline).
+    let warm = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &warm_opts, &eng).unwrap();
+    let cold = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &cold_opts, &eng).unwrap();
+    println!(
+        "# chain150 λ-path ({} points): warm {} iters / {:.2}s vs cold {} iters / {:.2}s",
+        warm.points.len(),
+        warm.total_iters(),
+        warm.total_seconds,
+        cold.total_iters(),
+        cold.total_seconds,
+    );
+    for (w, c) in warm.points.iter().zip(&cold.points) {
+        println!(
+            "#   λ={:<8.4} warm {:>3} iters vs cold {:>3} iters",
+            w.lam_l, w.iters, c.iters
+        );
+    }
+
+    let mut set = BenchSet::new("path");
+    for kind in [SolverKind::AltNewtonCd, SolverKind::NewtonCd] {
+        for (tag, popts) in [("warm", &warm_opts), ("cold", &cold_opts)] {
+            set.push(
+                Bench::new(format!("path/chain150/{}/{tag}", kind.name()))
+                    .warmup(1)
+                    .iters(3)
+                    .run(|| fit_path(kind, &prob.data, &base, popts, &eng).unwrap()),
+            );
+        }
+    }
+    set.finish();
+}

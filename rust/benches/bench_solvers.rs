@@ -22,7 +22,7 @@ fn main() {
         },
     );
     for (wname, prob, lam) in [("chain300", &chain, 1.5), ("cluster400x200", &cluster, 0.9)] {
-        for kind in SolverKind::all() {
+        for kind in SolverKind::paper_three() {
             let opts = SolveOptions {
                 lam_l: lam,
                 lam_t: lam,

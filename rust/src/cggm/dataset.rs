@@ -101,9 +101,18 @@ impl Dataset {
     /// R̃ᵀ = (XΘ)ᵀ as a q×n matrix (`rt.row(j)` = j-th column of XΘ).
     /// O(nnz(Θ)·n); the basis of every Ψ/trace computation.
     pub fn xtheta_t(&self, theta: &SpRowMat) -> Mat {
+        let mut rt = Mat::zeros(self.q(), self.n());
+        self.xtheta_t_into(theta, &mut rt);
+        rt
+    }
+
+    /// [`Self::xtheta_t`] into a preallocated q×n buffer (overwritten) — the
+    /// workspace-arena path used by the solvers' iteration loops.
+    pub fn xtheta_t_into(&self, theta: &SpRowMat, rt: &mut Mat) {
         assert_eq!(theta.rows(), self.p());
         assert_eq!(theta.cols(), self.q());
-        let mut rt = Mat::zeros(self.q(), self.n());
+        assert_eq!((rt.rows(), rt.cols()), (self.q(), self.n()));
+        rt.fill(0.0);
         for i in 0..self.p() {
             let row = theta.row(i);
             if row.is_empty() {
@@ -114,7 +123,6 @@ impl Dataset {
                 crate::linalg::dense::axpy(v, xi, rt.row_mut(j));
             }
         }
-        rt
     }
 
     pub fn bytes(&self) -> usize {

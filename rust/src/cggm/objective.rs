@@ -120,25 +120,61 @@ impl<'a> Objective<'a> {
     /// Γ = Xᵀ(XΘΣ)/n = gemm_nt(xt, Σ·rt)/n. O(npq) but pure GEMM.
     pub fn grad_theta_dense(&self, sigma: &Mat, rt: &Mat, engine: &dyn GemmEngine) -> Mat {
         let d = self.data;
-        // sr = Σ · rt  (q×n)
+        let sxy = d.sxy_dense(engine);
         let mut sr = Mat::zeros(d.q(), d.n());
-        engine.gemm(1.0, sigma, rt, 0.0, &mut sr);
-        // Γ = gemm_nt(xt, sr)/n  (p×q)
-        let mut g = d.sxy_dense(engine);
-        g.scale(2.0);
-        engine.gemm_nt(2.0 * d.inv_n(), &d.xt, &sr, 1.0, &mut g);
+        let mut g = Mat::zeros(d.p(), d.q());
+        self.grad_theta_into(&sxy, sigma, rt, engine, &mut sr, &mut g);
         g
+    }
+
+    /// Allocation-free ∇_Θ g given the cached `sxy` and two workspace
+    /// buffers: `sr` (q×n, overwritten with Σ·rt) and `gt` (p×q, the result).
+    pub fn grad_theta_into(
+        &self,
+        sxy: &Mat,
+        sigma: &Mat,
+        rt: &Mat,
+        engine: &dyn GemmEngine,
+        sr: &mut Mat,
+        gt: &mut Mat,
+    ) {
+        // sr = Σ · rt  (q×n)
+        engine.gemm(1.0, sigma, rt, 0.0, sr);
+        self.grad_theta_from_sr(sxy, sr, engine, gt);
+    }
+
+    /// ∇_Θ g from an already-computed `sr = Σ·rt` panel (solvers that also
+    /// build Ψ share one panel and skip the second O(q²n) GEMM).
+    pub fn grad_theta_from_sr(&self, sxy: &Mat, sr: &Mat, engine: &dyn GemmEngine, gt: &mut Mat) {
+        let d = self.data;
+        // ∇_Θ = 2S_xy + 2Γ, Γ = gemm_nt(xt, sr)/n  (p×q)
+        gt.copy_from(sxy);
+        gt.scale(2.0);
+        engine.gemm_nt(2.0 * d.inv_n(), &d.xt, sr, 1.0, gt);
     }
 
     /// Ψ = ΣΘᵀS_xxΘΣ computed as Gram of rows of `sr = Σ·rt` divided by n.
     pub fn psi_dense(&self, sigma: &Mat, rt: &Mat, engine: &dyn GemmEngine) -> Mat {
         let d = self.data;
         let mut sr = Mat::zeros(d.q(), d.n());
-        engine.gemm(1.0, sigma, rt, 0.0, &mut sr);
         let mut psi = Mat::zeros(d.q(), d.q());
-        engine.gemm_nt(d.inv_n(), &sr, &sr, 0.0, &mut psi);
-        psi.symmetrize();
+        self.psi_into(sigma, rt, engine, &mut sr, &mut psi);
         psi
+    }
+
+    /// Allocation-free Ψ into workspace buffers: `sr` (q×n) receives Σ·rt
+    /// (callers may reuse it, e.g. for Γ), `psi` (q×q) the result.
+    pub fn psi_into(
+        &self,
+        sigma: &Mat,
+        rt: &Mat,
+        engine: &dyn GemmEngine,
+        sr: &mut Mat,
+        psi: &mut Mat,
+    ) {
+        engine.gemm(1.0, sigma, rt, 0.0, sr);
+        engine.gemm_nt(self.data.inv_n(), sr, sr, 0.0, psi);
+        psi.symmetrize();
     }
 }
 

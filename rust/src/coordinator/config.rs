@@ -32,6 +32,10 @@ pub struct RunConfig {
     pub time_limit: f64,
     pub calibrate: bool,
     pub out_dir: String,
+    /// λ-path sweep: number of grid points (`cggm path`).
+    pub path_points: usize,
+    /// λ-path sweep: λ_min as a fraction of λ_max.
+    pub path_min_ratio: f64,
 }
 
 impl Default for RunConfig {
@@ -55,6 +59,8 @@ impl Default for RunConfig {
             time_limit: 0.0,
             calibrate: false,
             out_dir: "results".into(),
+            path_points: 10,
+            path_min_ratio: 0.1,
         }
     }
 }
@@ -133,6 +139,12 @@ impl RunConfig {
             "out_dir" => {
                 self.out_dir = val.as_str().ok_or_else(|| bad("expected string"))?.into()
             }
+            "path_points" => {
+                self.path_points = val.as_usize().ok_or_else(|| bad("expected int"))?
+            }
+            "path_min_ratio" => {
+                self.path_min_ratio = val.as_f64().ok_or_else(|| bad("expected number"))?
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -173,6 +185,18 @@ impl RunConfig {
             self.calibrate = true;
         }
         self.out_dir = args.get_str("out", &self.out_dir);
+        self.path_points = args.get_usize("path-points", self.path_points);
+        self.path_min_ratio = args.get_f64("path-min-ratio", self.path_min_ratio);
+    }
+
+    /// λ-path options derived from this config (`cggm path`).
+    pub fn path_options(&self, warm_start: bool) -> crate::coordinator::PathOptions {
+        crate::coordinator::PathOptions {
+            points: self.path_points,
+            min_ratio: self.path_min_ratio,
+            lambdas: None,
+            warm_start,
+        }
     }
 
     /// Produce solver options.
@@ -230,6 +254,23 @@ mod tests {
         let opts = cfg.solve_options();
         assert_eq!(opts.lam_l, 0.7);
         assert_eq!(opts.budget.limit(), 64 << 20);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn path_keys_layer_like_the_rest() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_path.json");
+        std::fs::write(&tmp, r#"{"path_points": 6, "path_min_ratio": 0.05}"#).unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.path_points, 6);
+        assert_eq!(cfg.path_min_ratio, 0.05);
+        let args = Args::parse(&["--path-points".into(), "8".into()], &[]);
+        cfg.apply_args(&args);
+        assert_eq!(cfg.path_points, 8);
+        let popts = cfg.path_options(true);
+        assert_eq!(popts.points, 8);
+        assert_eq!(popts.min_ratio, 0.05);
+        assert!(popts.warm_start);
         let _ = std::fs::remove_file(tmp);
     }
 

@@ -1,14 +1,18 @@
-//! Run coordination: configuration, λ calibration, dataset IO, and the
-//! fit driver shared by the CLI and the experiment harness.
+//! Run coordination: configuration, λ calibration, dataset IO, the fit
+//! driver shared by the CLI and the experiment harness, and the
+//! warm-started λ-path driver ([`fit_path`]).
 
 pub mod config;
 
-use crate::cggm::Dataset;
+use crate::cggm::{CggmModel, Dataset};
 use crate::datagen::{self, Problem, Workload};
 use crate::gemm::GemmEngine;
 use crate::metrics::f1_edges_sym;
-use crate::solvers::{solve, SolveError, SolveOptions, SolveResult, SolverKind};
+use crate::solvers::{
+    solve, solve_in_context, SolveError, SolveOptions, SolveResult, SolverContext, SolverKind,
+};
 use crate::util::json::Json;
+use crate::util::timer::Stopwatch;
 use std::path::Path;
 
 pub use config::RunConfig;
@@ -83,6 +87,216 @@ pub fn run_fit(
     Ok((summary, res))
 }
 
+// ---------------------------------------------------------------- λ paths
+
+/// Configuration of a regularization path sweep.
+#[derive(Clone, Debug)]
+pub struct PathOptions {
+    /// Number of grid points when the grid is auto-generated.
+    pub points: usize,
+    /// λ_min = `min_ratio` · λ_max for the auto-generated geometric grid.
+    pub min_ratio: f64,
+    /// Explicit (λ_Λ, λ_Θ) grid; should be decreasing for warm starts to
+    /// help. `None` auto-generates from the data's λ_max.
+    pub lambdas: Option<Vec<(f64, f64)>>,
+    /// Seed each solve with the previous point's solution (the path driver's
+    /// reason to exist); `false` is the cold-start ablation the `bench_path`
+    /// bench measures against.
+    pub warm_start: bool,
+}
+
+impl Default for PathOptions {
+    fn default() -> Self {
+        PathOptions {
+            points: 10,
+            min_ratio: 0.1,
+            lambdas: None,
+            warm_start: true,
+        }
+    }
+}
+
+/// One fitted point of a λ path.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub lam_l: f64,
+    pub lam_t: f64,
+    pub iters: usize,
+    pub converged: bool,
+    pub f: f64,
+    pub lambda_nnz: usize,
+    pub theta_nnz: usize,
+    pub seconds: f64,
+}
+
+/// A completed λ-path run.
+pub struct PathResult {
+    pub solver: SolverKind,
+    pub points: Vec<PathPoint>,
+    /// Model at the last fitted (smallest-λ) point.
+    pub model: Option<CggmModel>,
+    pub total_seconds: f64,
+}
+
+impl PathResult {
+    /// Total outer iterations across the path (the warm-start savings
+    /// metric).
+    pub fn total_iters(&self) -> usize {
+        self.points.iter().map(|p| p.iters).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("solver", Json::str(self.solver.name())),
+            ("total_seconds", Json::num(self.total_seconds)),
+            ("total_iters", Json::num(self.total_iters() as f64)),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|p| {
+                    Json::obj(vec![
+                        ("lambda_l", Json::num(p.lam_l)),
+                        ("lambda_t", Json::num(p.lam_t)),
+                        ("iters", Json::num(p.iters as f64)),
+                        ("converged", Json::Bool(p.converged)),
+                        ("f", Json::num(p.f)),
+                        ("lambda_nnz", Json::num(p.lambda_nnz as f64)),
+                        ("theta_nnz", Json::num(p.theta_nnz as f64)),
+                        ("seconds", Json::num(p.seconds)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s =
+            String::from("lambda_l,lambda_t,iters,converged,f,lambda_nnz,theta_nnz,seconds\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{:.4}\n",
+                p.lam_l, p.lam_t, p.iters, p.converged, p.f, p.lambda_nnz, p.theta_nnz, p.seconds
+            ));
+        }
+        s
+    }
+}
+
+/// λ_max per parameter: the largest gradient magnitude at the cold-start
+/// iterate (Λ = I, Θ = 0), above which nothing enters the active set. Exact
+/// from the context's cached statistics for the dense-stat solvers; for the
+/// block solver (which must not materialize q×q / p×q matrices) it is
+/// computed exactly but *streamed* in budget-tracked column panels — the
+/// same GEMM pattern as its Λ/Θ screens.
+fn lambda_max(ctx: &SolverContext, kind: SolverKind) -> Result<(f64, f64), SolveError> {
+    let data = ctx.data();
+    if kind == SolverKind::AltNewtonBcd {
+        // The block solver's own streamed panels — exact, O(panel) memory.
+        return crate::solvers::alt_newton_bcd::streamed_lambda_max(
+            data,
+            ctx.engine(),
+            ctx.workspace(),
+        );
+    }
+    let (p, q) = (data.p(), data.q());
+    let syy = ctx.syy()?;
+    let sxy = ctx.sxy()?;
+    let mut ml = 1e-12f64;
+    for i in 0..q {
+        for j in 0..i {
+            ml = ml.max(syy[(i, j)].abs());
+        }
+    }
+    let mut mt = 1e-12f64;
+    debug_assert_eq!(sxy.data().len(), p * q);
+    for v in sxy.data() {
+        mt = mt.max(2.0 * v.abs());
+    }
+    Ok((ml, mt))
+}
+
+/// Geometric grid from λ_max down to `min_ratio`·λ_max, per parameter.
+fn geometric_grid(max_l: f64, max_t: f64, points: usize, min_ratio: f64) -> Vec<(f64, f64)> {
+    let ratio = min_ratio.clamp(1e-6, 1.0);
+    (0..points)
+        .map(|k| {
+            let t = if points <= 1 {
+                0.0 // a single point sits at λ_max
+            } else {
+                k as f64 / (points - 1) as f64
+            };
+            (max_l * ratio.powf(t), max_t * ratio.powf(t))
+        })
+        .collect()
+}
+
+/// Fit a warm-started regularization path: decreasing λ grid, each solve
+/// seeded with the previous solution, covariance statistics computed once
+/// for the whole path (the shared [`SolverContext`]).
+pub fn fit_path(
+    kind: SolverKind,
+    data: &Dataset,
+    base: &SolveOptions,
+    popts: &PathOptions,
+    engine: &dyn GemmEngine,
+) -> Result<PathResult, SolveError> {
+    let ctx = SolverContext::new(data, base, engine);
+    fit_path_in_context(kind, &ctx, base, popts)
+}
+
+/// [`fit_path`] on a caller-provided context (reusable across paths; tests
+/// assert the statistics are computed exactly once). `base.time_limit` is a
+/// budget for the *whole path*: each point receives the remaining time, and
+/// the sweep stops early once it is spent.
+pub fn fit_path_in_context(
+    kind: SolverKind,
+    ctx: &SolverContext,
+    base: &SolveOptions,
+    popts: &PathOptions,
+) -> Result<PathResult, SolveError> {
+    let sw = Stopwatch::start();
+    let grid: Vec<(f64, f64)> = match &popts.lambdas {
+        Some(g) => g.clone(),
+        None => {
+            let (ml, mt) = lambda_max(ctx, kind)?;
+            geometric_grid(ml, mt, popts.points.max(1), popts.min_ratio)
+        }
+    };
+    let mut warm: Option<CggmModel> = None;
+    let mut points = Vec::with_capacity(grid.len());
+    for &(lam_l, lam_t) in &grid {
+        let mut opts = base.clone();
+        opts.lam_l = lam_l;
+        opts.lam_t = lam_t;
+        if base.time_limit > 0.0 {
+            let remaining = base.time_limit - sw.seconds();
+            if remaining <= 0.0 {
+                break;
+            }
+            opts.time_limit = remaining;
+        }
+        let t0 = sw.seconds();
+        let seed = if popts.warm_start { warm.as_ref() } else { None };
+        let res = solve_in_context(kind, ctx, &opts, seed)?;
+        points.push(PathPoint {
+            lam_l,
+            lam_t,
+            iters: res.trace.records.len(),
+            converged: res.trace.converged,
+            f: res.trace.final_f().unwrap_or(f64::NAN),
+            lambda_nnz: res.model.lambda_nnz(),
+            theta_nnz: res.model.theta_nnz(),
+            seconds: sw.seconds() - t0,
+        });
+        warm = Some(res.model);
+    }
+    Ok(PathResult {
+        solver: kind,
+        points,
+        model: warm,
+        total_seconds: sw.seconds(),
+    })
+}
+
 /// Calibrate λ so the estimated support sizes land near the ground truth
 /// (paper §5.1: "We choose λ_Λ and λ_Θ so that the number of estimated edges
 /// in Λ and Θ is close to ground truth"). Geometric bisection on a shared
@@ -109,6 +323,10 @@ pub fn calibrate_lambda(
         }
         gmax = gmax.max(2.0 * prob.data.sxy(rng.below(p), rng.below(q)).abs());
     }
+    // One context for every probe: the bisection re-solves the same dataset
+    // `steps` times, so the covariance statistics are computed once here
+    // instead of once per probe.
+    let ctx = SolverContext::new(&prob.data, base, engine);
     let probe = |lam_l: f64, lam_t: f64| -> (f64, f64) {
         let opts = SolveOptions {
             lam_l,
@@ -118,7 +336,7 @@ pub fn calibrate_lambda(
             time_limit: 120.0,
             ..base.clone()
         };
-        match solve(SolverKind::AltNewtonCd, &prob.data, &opts, engine) {
+        match solve_in_context(SolverKind::AltNewtonCd, &ctx, &opts, None) {
             Ok(res) => (
                 res.model.lambda_nnz() as f64,
                 res.model.theta_nnz() as f64,
@@ -248,6 +466,78 @@ mod tests {
         assert!(
             got < 4.0 * truth && got > truth / 4.0,
             "calibrated nnz {got} vs truth {truth} (λ={lam_l})"
+        );
+    }
+
+    #[test]
+    fn geometric_grid_is_decreasing_and_bracketed() {
+        let g = geometric_grid(2.0, 1.0, 5, 0.1);
+        assert_eq!(g.len(), 5);
+        assert!((g[0].0 - 2.0).abs() < 1e-12);
+        assert!((g[4].0 - 0.2).abs() < 1e-12);
+        assert!((g[4].1 - 0.1).abs() < 1e-12);
+        for k in 1..g.len() {
+            assert!(g[k].0 < g[k - 1].0);
+            assert!(g[k].1 < g[k - 1].1);
+        }
+        // Degenerate single-point grid sits at λ_max.
+        let one = geometric_grid(3.0, 3.0, 1, 0.1);
+        assert_eq!(one, vec![(3.0, 3.0)]);
+    }
+
+    #[test]
+    fn fit_path_shares_statistics_across_points() {
+        let prob = datagen::chain::generate(12, 12, 70, 4);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions {
+            max_iter: 60,
+            ..Default::default()
+        };
+        let ctx = SolverContext::new(&prob.data, &base, &eng);
+        let popts = PathOptions {
+            points: 3,
+            min_ratio: 0.3,
+            ..Default::default()
+        };
+        let res = fit_path_in_context(SolverKind::AltNewtonCd, &ctx, &base, &popts).unwrap();
+        assert_eq!(res.points.len(), 3);
+        assert!(res.points.iter().all(|p| p.converged));
+        // S_yy, S_xx, S_xy each materialized exactly once for the whole path.
+        assert_eq!(ctx.stat_computes(), 3);
+        // Sparsity decreases (support grows) as λ shrinks along the path.
+        assert!(
+            res.points[2].lambda_nnz >= res.points[0].lambda_nnz,
+            "support should grow as λ decreases: {:?}",
+            res.points
+        );
+        assert!(res.model.is_some());
+        // Serialization round-trips the point count.
+        assert_eq!(res.to_csv().lines().count(), 1 + 3);
+        assert!(res.to_json().to_string().contains("alt_newton_cd"));
+    }
+
+    #[test]
+    fn path_time_budget_is_for_the_whole_path() {
+        let prob = datagen::chain::generate(60, 60, 80, 6);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions {
+            max_iter: 200,
+            time_limit: 0.05, // seconds for the *entire* sweep
+            ..Default::default()
+        };
+        let popts = PathOptions {
+            points: 40,
+            min_ratio: 0.01,
+            ..Default::default()
+        };
+        let sw = std::time::Instant::now();
+        let res = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &popts, &eng).unwrap();
+        // The driver must stop early rather than giving every point the full
+        // budget (40 × 0.05s would blow far past the cap).
+        assert!(res.points.len() <= 40);
+        assert!(
+            sw.elapsed().as_secs_f64() < 2.0,
+            "path ignored the shared time budget"
         );
     }
 

@@ -128,9 +128,31 @@ impl DenseChol {
 
     /// Full inverse A⁻¹ (dense q×q — the non-block solvers' Σ).
     pub fn inverse(&self, engine: &dyn GemmEngine) -> Mat {
+        let n = self.n();
+        let mut inv = Mat::zeros(n, n);
+        self.inverse_into(engine, &mut inv);
+        inv
+    }
+
+    /// Inverse written into a preallocated n×n matrix; allocates the
+    /// triangular scratch internally (see [`Self::inverse_into_scratch`] for
+    /// the allocation-free hot-loop variant).
+    pub fn inverse_into(&self, engine: &dyn GemmEngine, inv: &mut Mat) {
+        let mut w = Mat::zeros(self.n(), self.n());
+        self.inverse_into_scratch(engine, &mut w, inv);
+    }
+
+    /// Inverse with a caller-provided n×n scratch `w` (overwritten) — no
+    /// allocation; the solvers hand both buffers from their workspace arena
+    /// so the whole Σ computation is budget-visible.
+    pub fn inverse_into_scratch(&self, engine: &dyn GemmEngine, w: &mut Mat, inv: &mut Mat) {
         // A⁻¹ = L⁻ᵀ L⁻¹. Compute W = L⁻¹ (lower triangular) then A⁻¹ = WᵀW.
         let n = self.n();
-        let mut w = Mat::zeros(n, n);
+        assert_eq!((inv.rows(), inv.cols()), (n, n));
+        assert_eq!((w.rows(), w.cols()), (n, n));
+        // The Gram below reads all of W, so the strict upper triangle must
+        // be zero.
+        w.fill(0.0);
         // Solve L W = I column by column; exploit that col j of W has zeros above j.
         for j in 0..n {
             w[(j, j)] = 1.0 / self.l[(j, j)];
@@ -144,10 +166,8 @@ impl DenseChol {
             }
         }
         // A⁻¹ = Wᵀ W (W lower triangular) — Gram via the engine.
-        let mut inv = Mat::zeros(n, n);
-        engine.gemm_tn(1.0, &w, &w, 0.0, &mut inv);
+        engine.gemm_tn(1.0, &w, &w, 0.0, inv);
         inv.symmetrize();
-        inv
     }
 }
 

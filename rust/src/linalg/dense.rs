@@ -105,12 +105,39 @@ impl Mat {
     /// Transposed copy.
     pub fn transposed(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Write the transpose into a preallocated matrix (workspace-arena path:
+    /// no allocation).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        assert_eq!((out.rows, out.cols), (self.cols, self.rows));
         for i in 0..self.rows {
             for j in 0..self.cols {
-                t[(j, i)] = self[(i, j)];
+                out[(j, i)] = self[(i, j)];
             }
         }
-        t
+    }
+
+    /// Overwrite with another matrix of the same shape.
+    pub fn copy_from(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Copy the selected full rows into a preallocated `rows.len() × cols`
+    /// matrix (the block solvers' covariance panels).
+    pub fn rows_into(&self, rows: &[usize], out: &mut Mat) {
+        assert_eq!((out.rows, out.cols), (rows.len(), self.cols));
+        for (ri, &i) in rows.iter().enumerate() {
+            out.row_mut(ri).copy_from_slice(self.row(i));
+        }
+    }
+
+    /// Consume into the backing row-major buffer (workspace-arena checkin).
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
     }
 
     /// Submatrix copy of the given rows and columns.
@@ -291,6 +318,27 @@ mod tests {
         m.symmetrize();
         assert_eq!(m[(0, 1)], 3.0);
         assert_eq!(m[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn buffer_reuse_helpers() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        // transpose_into matches transposed().
+        let mut t = Mat::zeros(4, 3);
+        m.transpose_into(&mut t);
+        assert_eq!(t, m.transposed());
+        // copy_from overwrites.
+        let mut c = Mat::from_fn(3, 4, |_, _| -1.0);
+        c.copy_from(&m);
+        assert_eq!(c, m);
+        // rows_into selects full rows.
+        let mut two = Mat::zeros(2, 4);
+        m.rows_into(&[2, 0], &mut two);
+        assert_eq!(two.row(0), m.row(2));
+        assert_eq!(two.row(1), m.row(0));
+        // into_data round-trips through from_rows.
+        let data = m.clone().into_data();
+        assert_eq!(Mat::from_rows(3, 4, data), m);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! Subcommands:
 //! - `gen`   generate a synthetic workload and save it;
 //! - `fit`   estimate a CGGM (solver/engine/budget configurable);
+//! - `path`  fit a warm-started λ regularization path;
 //! - `exp`   regenerate a paper table/figure (`--list` shows all);
 //! - `cal`   calibrate λ for a workload;
 //! - `info`  environment + artifact status.
@@ -24,6 +25,7 @@ const BOOL_FLAGS: &[&str] = &[
     "no-clustering",
     "trace",
     "quick",
+    "cold",
 ];
 
 fn main() {
@@ -37,6 +39,7 @@ fn main() {
     let code = match cmd.as_str() {
         "gen" => cmd_gen(&args),
         "fit" => cmd_fit(&args),
+        "path" => cmd_path(&args),
         "exp" => cmd_exp(&args),
         "cal" => cmd_cal(&args),
         "info" => cmd_info(&args),
@@ -64,6 +67,10 @@ COMMANDS
   fit   [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--lambda X | --calibrate] [--mem-budget 512MB] [--threads T]
         [--engine native|xla|pallas [--tile 128|256]] [--trace]
+  path  [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
+        [--path-points N] [--path-min-ratio R] [--cold] [--time-limit S] ...
+        (warm-started λ path: stats computed once, each point seeds the next;
+         --time-limit budgets the whole sweep; --cold disables warm starts)
   exp   <id>|all [--list] [--scale F] [--sizes a,b,c] [--lambda X] ...
   cal   --workload ... --p N --q N --n N
   info
@@ -122,25 +129,39 @@ fn cmd_gen(args: &Args) -> i32 {
     }
 }
 
-fn cmd_fit(args: &Args) -> i32 {
-    let cfg = load_config(args);
-    let engine = make_engine(args);
-    let prob = match args.opt("data") {
+/// Problem from `--data FILE` (unknown truth) or the configured generator.
+fn load_problem(args: &Args, cfg: &RunConfig) -> Result<datagen::Problem, i32> {
+    match args.opt("data") {
         Some(path) => {
             let data = match coordinator::load_dataset(&PathBuf::from(path)) {
                 Ok(d) => d,
                 Err(e) => {
                     eprintln!("cannot load {path}: {e}");
-                    return 1;
+                    return Err(1);
                 }
             };
             let (p, q) = (data.p(), data.q());
-            datagen::Problem {
+            Ok(datagen::Problem {
                 truth: cggm::cggm::CggmModel::init(p, q),
                 data,
-            }
+            })
         }
-        None => coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed),
+        None => Ok(coordinator::generate_problem(
+            cfg.workload,
+            cfg.p,
+            cfg.q,
+            cfg.n,
+            cfg.seed,
+        )),
+    }
+}
+
+fn cmd_fit(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let engine = make_engine(args);
+    let prob = match load_problem(args, &cfg) {
+        Ok(p) => p,
+        Err(code) => return code,
     };
     let mut opts = cfg.solve_options();
     if cfg.calibrate {
@@ -187,6 +208,56 @@ fn cmd_fit(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("solve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_path(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let engine = make_engine(args);
+    let prob = match load_problem(args, &cfg) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
+    let opts = cfg.solve_options();
+    let popts = cfg.path_options(!args.flag("cold"));
+    if args.opt("lambda").is_some()
+        || args.opt("lambda-l").is_some()
+        || args.opt("lambda-t").is_some()
+        || args.flag("calibrate")
+    {
+        eprintln!(
+            "note: `path` auto-generates its λ grid from the data's λ_max; \
+             --lambda/--lambda-l/--lambda-t/--calibrate are ignored \
+             (tune --path-points / --path-min-ratio instead)"
+        );
+    }
+    eprintln!(
+        "λ path: {} (engine={}, p={}, q={}, n={}, {} points, min ratio {}, {})",
+        cfg.solver.name(),
+        engine.name(),
+        prob.p(),
+        prob.q(),
+        prob.n(),
+        popts.points,
+        popts.min_ratio,
+        if popts.warm_start { "warm starts" } else { "cold starts" },
+    );
+    match coordinator::fit_path(cfg.solver, &prob.data, &opts, &popts, engine.as_ref()) {
+        Ok(path) => {
+            println!("{}", path.to_json().to_string_pretty());
+            let dir = PathBuf::from(&cfg.out_dir);
+            let _ = std::fs::create_dir_all(&dir);
+            let csv = dir.join(format!("path_{}.csv", cfg.solver.name()));
+            match std::fs::write(&csv, path.to_csv()) {
+                Ok(()) => eprintln!("-> {}", csv.display()),
+                Err(e) => eprintln!("warning: cannot write {}: {e}", csv.display()),
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("path failed: {e}");
             1
         }
     }
@@ -240,7 +311,11 @@ fn cmd_cal(args: &Args) -> i32 {
 
 fn cmd_info(args: &Args) -> i32 {
     println!("cggm {}", env!("CARGO_PKG_VERSION"));
-    println!("solvers: newton-cd, alt-newton-cd (Alg.1), alt-newton-bcd (Alg.2)");
+    let names: Vec<&str> = cggm::solvers::SolverKind::all()
+        .iter()
+        .map(|k| k.name())
+        .collect();
+    println!("solvers: {}", names.join(", "));
     let dir = runtime::artifact_dir();
     match cggm::runtime::manifest::Manifest::load(&dir.join("manifest.json")) {
         Ok(m) => {

@@ -17,8 +17,15 @@
 //!   k_Λ, k_Θ ("the smallest possible k such that we can store 2q/k columns
 //!   in memory") and every cache allocation is tracked against it, which is
 //!   how the paper's OOM wall is reproduced on a large-RAM machine.
+//!
+//! All block caches and GEMM panels are checked out of the
+//! [`SolverContext`]'s workspace arena, so buffers recycle across blocks and
+//! iterations and `MemBudget::peak()` is the measured truth the `memwall`
+//! experiment reports. This solver deliberately never touches the context's
+//! dense `S_yy`/`S_xx`/`S_xy` caches — their absence *is* Algorithm 2.
 
-use super::{SolveError, SolveOptions, SolveResult};
+use super::workspace::{Workspace, WsMat};
+use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::factor::LambdaFactor;
 use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
 use crate::cggm::objective::{min_norm_subgrad, SmoothParts};
@@ -30,7 +37,6 @@ use crate::linalg::cg::CgSolver;
 use crate::linalg::dense::{axpy, dot, Mat};
 use crate::linalg::sparse::SpRowMat;
 use crate::metrics::{IterRecord, SolveTrace};
-use crate::util::membudget::Tracked;
 use crate::util::threadpool::Parallelism;
 use crate::util::timer::{PhaseProfiler, Stopwatch};
 
@@ -104,36 +110,40 @@ struct ActivePair {
 }
 
 /// Cached columns for one Λ block: row c of each matrix corresponds to
-/// global column `cols[c]`.
-struct LambdaCache {
+/// global column `cols[c]`. The three column matrices are workspace
+/// checkouts, tracked against the budget for as long as the cache is alive.
+struct LambdaCache<'w> {
     cols: Vec<usize>,
     /// σ_t = Λ⁻¹ e_t, full q-vectors.
-    sigma: Mat,
+    sigma: WsMat<'w>,
     /// ψ_t = Λ⁻¹ΘᵀS_xxΘσ_t, full q-vectors.
-    psi: Mat,
+    psi: WsMat<'w>,
     /// u_t = Δ_Λ σ_t (maintained through CD updates).
-    u: Mat,
-    _track: Tracked,
+    u: WsMat<'w>,
 }
 
 pub fn solve(
-    data: &Dataset,
+    ctx: &SolverContext,
     opts: &SolveOptions,
-    engine: &dyn GemmEngine,
+    warm: Option<&CggmModel>,
 ) -> Result<SolveResult, SolveError> {
-    let (p, q) = (data.p(), data.q());
-    let par = opts.parallelism();
+    let data = ctx.data();
+    let engine = ctx.engine();
+    let ws = ctx.workspace();
+    let par = ctx.par();
+    let (p, q, n) = (data.p(), data.q(), data.n());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
     let obj = Objective::new(data, opts.lam_l, opts.lam_t).with_chol(opts.chol);
-    let mut model = CggmModel::init(p, q);
+    let mut model = warm.cloned().unwrap_or_else(|| CggmModel::init(p, q));
     let mut trace = SolveTrace {
         solver: "alt_newton_bcd".into(),
         ..Default::default()
     };
 
     let mut factor = LambdaFactor::factor(&model.lambda, obj.chol, engine)?;
-    let mut rt = data.xtheta_t(&model.theta); // R̃ᵀ (q×n)
+    let mut rt = ws.mat(q, n)?; // R̃ᵀ (q×n)
+    data.xtheta_t_into(&model.theta, &mut rt);
     let mut parts = SmoothParts {
         logdet: factor.logdet(),
         tr_syy_lambda: obj.tr_syy_sparse(&model.lambda),
@@ -151,7 +161,7 @@ pub fn solve(
 
         // ================= Λ phase =================
         // ---- screen: blockwise gradient of Λ (O(nq²), GEMM-backed) ----
-        let screen_bsz = lambda_screen_block(q, data.n(), opts);
+        let screen_bsz = lambda_screen_block(q, n, opts);
         let mut active: Vec<ActivePair> = Vec::new();
         let mut subgrad_l = 0.0;
         // Perf iter 3 (EXPERIMENTS.md §Perf): when the whole column range
@@ -165,11 +175,12 @@ pub fn solve(
                 let bsz = screen_bsz.min(q - t0);
                 let cols: Vec<usize> = (t0..t0 + bsz).collect();
                 let cache = load_lambda_cache(
-                    data, &sig, &rt, &SpRowMat::zeros(q, q), &cols, &par, opts,
+                    data, &sig, &rt, &SpRowMat::zeros(q, q), &cols, par, ws,
                 )?;
                 // S_yy block = gemm_nt(yt, yt[cols]) / n  (q×bsz).
-                let ytb = data.yt.submatrix(&cols, &(0..data.n()).collect::<Vec<_>>());
-                let mut syyb = Mat::zeros(q, bsz);
+                let mut ytb = ws.mat(bsz, n)?;
+                data.yt.rows_into(&cols, &mut ytb);
+                let mut syyb = ws.mat(q, bsz)?;
                 engine.gemm_nt(data.inv_n(), &data.yt, &ytb, 0.0, &mut syyb);
                 for (c, &t) in cols.iter().enumerate() {
                     let sig = cache.sigma.row(c);
@@ -193,8 +204,9 @@ pub fn solve(
         })?;
 
         // ---- Θ screen (also needed for the stopping statistic) ----
-        let (theta_active, subgrad_t) =
-            prof.time("screen:theta", || theta_screen(data, &sig, &model, engine, &par, opts))?;
+        let (theta_active, subgrad_t) = prof.time("screen:theta", || {
+            theta_screen(data, &sig, &model, engine, par, opts, ws)
+        })?;
 
         let subgrad = subgrad_l + subgrad_t;
         let param_l1 = model.lambda.l1_norm() + model.theta.l1_norm();
@@ -221,7 +233,7 @@ pub fn solve(
         }
 
         // ---- partition columns of Λ (graph clustering on the active set) ----
-        let k_l = lambda_block_count(q, data.n(), opts);
+        let k_l = lambda_block_count(q, n, opts);
         let blocks: Vec<Vec<usize>> = prof.time("cluster:lambda", || {
             if opts.clustering && k_l > 1 {
                 let mut g = Graph::empty(q);
@@ -270,7 +282,7 @@ pub fn solve(
                     // screen's columns — Δ = 0 so u = 0 matches.)
                     let mut cz = match (nb, sweep, screen_cache.take()) {
                         (1, 0, Some(c)) => c,
-                        _ => load_lambda_cache(data, &sig, &rt, &delta, &blocks[z], &par, opts)?,
+                        _ => load_lambda_cache(data, &sig, &rt, &delta, &blocks[z], par, ws)?,
                     };
                     set_pos(&mut pos, &cz.cols);
                     // Diagonal bucket.
@@ -289,7 +301,7 @@ pub fn solve(
                         bcols.sort_unstable();
                         bcols.dedup();
                         let mut cr =
-                            load_lambda_cache(data, &sig, &rt, &delta, &bcols, &par, opts)?;
+                            load_lambda_cache(data, &sig, &rt, &delta, &bcols, par, ws)?;
                         set_pos(&mut pos, &cr.cols);
                         cd_block_pair(bucket, &mut cz, Some(&mut cr), &pos, &model.lambda, &mut delta, opts.lam_l);
                         clear_pos(&mut pos, &cr.cols);
@@ -342,10 +354,10 @@ pub fn solve(
         let cg = CgSolver::new(model.lambda.to_csr(), CG_TOL, 20 * q.max(16));
         let sig = pick_sigma(&factor, &cg, opts);
         prof.time("cd:theta", || -> Result<(), SolveError> {
-            theta_block_sweep(data, &sig, &mut model, &theta_active, engine, &par, opts)
+            theta_block_sweep(data, &sig, &mut model, &theta_active, par, opts, ws)
         })?;
         model.theta.prune(0.0);
-        rt = data.xtheta_t(&model.theta);
+        data.xtheta_t_into(&model.theta, &mut rt);
         parts.tr_sxy_theta = obj.tr_sxy_sparse(&model.theta);
         parts.tr_quad = prof.time("trace_quad", || factor.trace_quad(&rt));
         f = parts.g() + model.penalty(opts.lam_l, opts.lam_t);
@@ -372,36 +384,37 @@ fn lambda_block_count(q: usize, _n: usize, opts: &SolveOptions) -> usize {
     q.div_ceil((max_cols / 2).max(1)).max(1)
 }
 
-/// Screen block width: σ/ψ pairs per screen block under the budget.
-fn lambda_screen_block(q: usize, _n: usize, opts: &SolveOptions) -> usize {
+/// Screen block width: σ/ψ/u triples plus the S_yy and Yᵀ panels per screen
+/// column, under the budget.
+fn lambda_screen_block(q: usize, n: usize, opts: &SolveOptions) -> usize {
     let budget = opts.budget.available().max(1);
-    let col_bytes = 3 * q * 8 + 64;
+    let col_bytes = (4 * q + n) * 8 + 64;
     ((budget / 2) / col_bytes).clamp(1, q)
 }
 
-/// Compute σ, ψ, u columns for `cols` (parallel over columns).
-fn load_lambda_cache(
+/// Compute σ, ψ, u columns for `cols` (parallel over columns). The three
+/// m×q column matrices are arena checkouts — budget-tracked while cached.
+fn load_lambda_cache<'w>(
     data: &Dataset,
     sig: &SigmaOracle,
     rt: &Mat,
     delta: &SpRowMat,
     cols: &[usize],
     par: &Parallelism,
-    opts: &SolveOptions,
-) -> Result<LambdaCache, SolveError> {
+    ws: &'w Workspace,
+) -> Result<LambdaCache<'w>, SolveError> {
     let q = sig.n();
     let n = data.n();
     let m = cols.len();
-    let track = opts.budget.track(3 * m * q * 8)?;
-    let mut sigma = Mat::zeros(m, q);
+    let mut sigma = ws.mat(m, q)?;
     // σ_t columns.
     par.parallel_chunks_mut(sigma.data_mut(), q, |c, row| {
         sig.unit_column(cols[c], row);
     });
     // ψ_t = (1/n)·Λ⁻¹ R̃ᵀ(R̃σ_t).
-    let mut psi = Mat::zeros(m, q);
+    let mut psi = ws.mat(m, q)?;
     {
-        let sigma_ref = &sigma;
+        let sigma_ref = &*sigma;
         par.parallel_chunks_mut(psi.data_mut(), q, |c, row| {
             let sigcol = sigma_ref.row(c);
             // m2 = R̃σ_t = Σ_j σ[j]·rt.row(j)  (n-vector).
@@ -424,7 +437,7 @@ fn load_lambda_cache(
         });
     }
     // u_t = Δ σ_t (sparse × dense-column; Δ is symmetric row storage).
-    let mut u = Mat::zeros(m, q);
+    let mut u = ws.mat(m, q)?;
     for c in 0..m {
         let sig = sigma.row(c);
         let urow = u.row_mut(c);
@@ -444,7 +457,6 @@ fn load_lambda_cache(
         sigma,
         psi,
         u,
-        _track: track,
     })
 }
 
@@ -464,8 +476,8 @@ fn clear_pos(pos: &mut [usize], cols: &[usize]) {
 /// means the diagonal bucket (both endpoints in `cz`).
 fn cd_block_pair(
     bucket: &[ActivePair],
-    cz: &mut LambdaCache,
-    mut cr: Option<&mut LambdaCache>,
+    cz: &mut LambdaCache<'_>,
+    mut cr: Option<&mut LambdaCache<'_>>,
     pos: &[usize],
     lambda: &SpRowMat,
     delta: &mut SpRowMat,
@@ -520,8 +532,8 @@ fn cd_block_pair(
 }
 
 fn locate(
-    cz: &LambdaCache,
-    cr: Option<&LambdaCache>,
+    cz: &LambdaCache<'_>,
+    cr: Option<&LambdaCache<'_>>,
     pos: &[usize],
     t: usize,
 ) -> Option<(usize, bool)> {
@@ -540,7 +552,7 @@ fn locate(
     None
 }
 
-fn maintain_u(cache: &mut LambdaCache, i: usize, j: usize, mu: f64) {
+fn maintain_u(cache: &mut LambdaCache<'_>, i: usize, j: usize, mu: f64) {
     let m = cache.cols.len();
     let q = cache.sigma.cols();
     let sd = cache.sigma.data();
@@ -566,6 +578,7 @@ fn maintain_u(cache: &mut LambdaCache, i: usize, j: usize, mu: f64) {
 /// lists with gradient values, plus the subgradient statistic.
 type ThetaActive = Vec<(usize, Vec<(usize, f64)>)>;
 
+#[allow(clippy::too_many_arguments)]
 fn theta_screen(
     data: &Dataset,
     sig: &SigmaOracle,
@@ -573,9 +586,10 @@ fn theta_screen(
     engine: &dyn GemmEngine,
     par: &Parallelism,
     opts: &SolveOptions,
+    ws: &Workspace,
 ) -> Result<(ThetaActive, f64), SolveError> {
     let (p, q, n) = (data.p(), data.q(), data.n());
-    let bsz = theta_screen_block(p, q, opts);
+    let bsz = theta_screen_block(p, q, n, opts);
     // active[i] = list of (j, grad) per row i (built incrementally).
     let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); p];
     let mut subgrad = 0.0;
@@ -583,14 +597,13 @@ fn theta_screen(
     while t0 < q {
         let b = bsz.min(q - t0);
         let cols: Vec<usize> = (t0..t0 + b).collect();
-        let track = opts.budget.track((b * q + 2 * p * b + n * b) * 8)?;
         // σ columns for this block.
-        let mut sigma = Mat::zeros(b, q);
+        let mut sigma = ws.mat(b, q)?;
         par.parallel_chunks_mut(sigma.data_mut(), q, |c, row| {
             sig.unit_column(cols[c], row);
         });
         // M = ΘΣ_blk (sparse rows); T = X·M (n×b).
-        let mut t_mat = Mat::zeros(n, b);
+        let mut t_mat = ws.mat(n, b)?;
         for i in 0..p {
             let row = model.theta.row(i);
             if row.is_empty() {
@@ -612,11 +625,12 @@ fn theta_screen(
             }
         }
         // Γ_blk = Xᵀ·T / n  (p×b): gemm(xt (p×n), T (n×b)).
-        let mut gamma = Mat::zeros(p, b);
+        let mut gamma = ws.mat(p, b)?;
         engine.gemm(data.inv_n(), &data.xt, &t_mat, 0.0, &mut gamma);
         // S_xy block (p×b).
-        let ytb = data.yt.submatrix(&cols, &(0..n).collect::<Vec<_>>());
-        let mut sxyb = Mat::zeros(p, b);
+        let mut ytb = ws.mat(b, n)?;
+        data.yt.rows_into(&cols, &mut ytb);
+        let mut sxyb = ws.mat(p, b)?;
         engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
         // Screen.
         for i in 0..p {
@@ -632,7 +646,6 @@ fn theta_screen(
                 }
             }
         }
-        drop(track);
         t0 += b;
     }
     let active: ThetaActive = per_row
@@ -643,10 +656,10 @@ fn theta_screen(
     Ok((active, subgrad))
 }
 
-fn theta_screen_block(p: usize, q: usize, opts: &SolveOptions) -> usize {
+fn theta_screen_block(p: usize, q: usize, n: usize, opts: &SolveOptions) -> usize {
     let budget = opts.budget.available().max(1);
-    // Per block column: q (σ) + 2p (Γ, S_xy) doubles.
-    let col_bytes = (q + 2 * p) * 8 + 64;
+    // Per block column: q (σ) + 2p (Γ, S_xy) + 2n (T panel, Yᵀ rows) doubles.
+    let col_bytes = (q + 2 * p + 2 * n) * 8 + 64;
     ((budget / 2) / col_bytes).clamp(1, q)
 }
 
@@ -658,9 +671,9 @@ fn theta_block_sweep(
     sig: &SigmaOracle,
     model: &mut CggmModel,
     active: &ThetaActive,
-    _engine: &dyn GemmEngine,
     par: &Parallelism,
     opts: &SolveOptions,
+    ws: &Workspace,
 ) -> Result<(), SolveError> {
     let q = data.q();
     if active.is_empty() {
@@ -727,14 +740,13 @@ fn theta_block_sweep(
                 continue;
             }
             let bsz = cols.len();
-            let track = opts.budget.track((bsz * q + bsz * ns) * 8)?;
             // σ columns of this block.
-            let mut sigma = Mat::zeros(bsz, q);
+            let mut sigma = ws.mat(bsz, q)?;
             par.parallel_chunks_mut(sigma.data_mut(), q, |c, row| {
                 sig.unit_column(cols[c], row);
             });
             // vt[c][s] = V[support[s]][c] = Θ_{support[s],:}·σ_c.
-            let mut vt = Mat::zeros(bsz, ns);
+            let mut vt = ws.mat(bsz, ns)?;
             for (s, &i) in support.iter().enumerate() {
                 let row = model.theta.row(i);
                 if row.is_empty() {
@@ -785,7 +797,6 @@ fn theta_block_sweep(
                     }
                 }
             }
-            drop(track);
         }
     }
     Ok(())
@@ -798,12 +809,64 @@ fn theta_block_count(q: usize, support: usize, opts: &SolveOptions) -> usize {
     q.div_ceil(max_cols).max(1)
 }
 
+/// Exact λ_max statistics for the λ-path driver, computed the block-solver
+/// way: streamed in budget-tracked column panels (the same `rows_into` +
+/// `gemm_nt` layout as the Λ/Θ screens above, kept in one module so the
+/// sizing cannot drift from the screens'). Never materializes dense q×q or
+/// p×q matrices. Returns (max off-diagonal |S_yy|, max 2·|S_xy|) — the
+/// gradient magnitudes at the cold-start iterate (Λ = I, Θ = 0).
+pub(crate) fn streamed_lambda_max(
+    data: &Dataset,
+    engine: &dyn GemmEngine,
+    ws: &Workspace,
+) -> Result<(f64, f64), SolveError> {
+    let (p, q, n) = (data.p(), data.q(), data.n());
+    // Per panel column: q (S_yy) + p (S_xy) + n (Yᵀ rows) doubles.
+    let col_bytes = (q + p + n) * 8 + 64;
+    let bsz = ((ws.budget().available().max(1) / 2) / col_bytes).clamp(1, q);
+    let (mut ml, mut mt) = (1e-12f64, 1e-12f64);
+    let mut t0 = 0;
+    while t0 < q {
+        let b = bsz.min(q - t0);
+        let cols: Vec<usize> = (t0..t0 + b).collect();
+        let mut ytb = ws.mat(b, n)?;
+        data.yt.rows_into(&cols, &mut ytb);
+        // S_yy panel (q×b): off-diagonal max.
+        let mut syyb = ws.mat(q, b)?;
+        engine.gemm_nt(data.inv_n(), &data.yt, &ytb, 0.0, &mut syyb);
+        for i in 0..q {
+            for (c, v) in syyb.row(i).iter().enumerate() {
+                if i != t0 + c {
+                    ml = ml.max(v.abs());
+                }
+            }
+        }
+        // S_xy panel (p×b).
+        let mut sxyb = ws.mat(p, b)?;
+        engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
+        for v in sxyb.data() {
+            mt = mt.max(2.0 * v.abs());
+        }
+        t0 += b;
+    }
+    Ok((ml, mt))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::datagen;
     use crate::gemm::native::NativeGemm;
     use crate::util::membudget::MemBudget;
+
+    fn run(
+        prob: &datagen::Problem,
+        opts: &SolveOptions,
+        eng: &NativeGemm,
+    ) -> Result<SolveResult, SolveError> {
+        let ctx = SolverContext::new(&prob.data, opts, eng);
+        solve(&ctx, opts, None)
+    }
 
     #[test]
     fn converges_on_tiny_chain() {
@@ -816,7 +879,7 @@ mod tests {
             chol: crate::cggm::CholKind::SparseRcm,
             ..Default::default()
         };
-        let res = solve(&prob.data, &opts, &eng).unwrap();
+        let res = run(&prob, &opts, &eng).unwrap();
         assert!(res.trace.converged, "bcd did not converge");
         let fs: Vec<f64> = res.trace.records.iter().map(|r| r.f).collect();
         for k in 1..fs.len() {
@@ -835,13 +898,13 @@ mod tests {
             chol: crate::cggm::CholKind::SparseRcm,
             ..Default::default()
         };
-        let unlimited = solve(&prob.data, &base, &eng).unwrap();
+        let unlimited = run(&prob, &base, &eng).unwrap();
         // A budget that only fits a handful of cached columns.
         let tight = SolveOptions {
             budget: MemBudget::new(64 * 1024),
             ..base
         };
-        let constrained = solve(&prob.data, &tight, &eng).unwrap();
+        let constrained = run(&prob, &tight, &eng).unwrap();
         let fu = unlimited.trace.final_f().unwrap();
         let fc = constrained.trace.final_f().unwrap();
         assert!(

@@ -13,17 +13,20 @@
 //! O(npq) term) and the per-coordinate costs drop to O(q) for Λ and O(p)
 //! for Θ.
 //!
-//! This is the *non-block* variant: it materializes dense `S_yy`, `Σ`, `Ψ`,
-//! `W` (q×q), `S_xx` (p×p) and `Vᵀ` (p×q) — exactly the working set whose
-//! growth motivates Algorithm 2.
+//! This is the *non-block* variant: it holds dense `S_yy`, `Σ`, `Ψ`, `W`
+//! (q×q), `S_xx` (p×p) and `Vᵀ` (p×q) — exactly the working set whose
+//! growth motivates Algorithm 2. The statistics come cached from the
+//! [`SolverContext`]; every per-iteration buffer is checked out of its
+//! workspace arena, so the loop performs no allocations and the budget's
+//! `peak()` reports the true working set.
 
 use super::cd_common::{lambda_cd_pass, theta_cd_pass_direct, trace_grad_dir};
-use super::{SolveError, SolveOptions, SolveResult};
+use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::active::{lambda_active_dense, theta_active_dense};
 use crate::cggm::factor::LambdaFactor;
 use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
 use crate::cggm::objective::SmoothParts;
-use crate::cggm::{CggmModel, Dataset, Objective};
+use crate::cggm::{CggmModel, Objective};
 use crate::gemm::GemmEngine;
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpRowMat;
@@ -32,30 +35,34 @@ use crate::util::threadpool::Parallelism;
 use crate::util::timer::{PhaseProfiler, Stopwatch};
 
 pub fn solve(
-    data: &Dataset,
+    ctx: &SolverContext,
     opts: &SolveOptions,
-    engine: &dyn GemmEngine,
+    warm: Option<&CggmModel>,
 ) -> Result<SolveResult, SolveError> {
-    let (p, q) = (data.p(), data.q());
-    let par = opts.parallelism();
+    let data = ctx.data();
+    let engine = ctx.engine();
+    let ws = ctx.workspace();
+    let par = ctx.par();
+    let (p, q, n) = (data.p(), data.q(), data.n());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
     let obj = Objective::new(data, opts.lam_l, opts.lam_t).with_chol(opts.chol);
-    let mut model = CggmModel::init(p, q);
+    let mut model = warm.cloned().unwrap_or_else(|| CggmModel::init(p, q));
     let mut trace = SolveTrace {
         solver: "alt_newton_cd".into(),
         ..Default::default()
     };
 
-    // Dense covariance precomputations — the memory footprint the paper
-    // attributes to the non-block methods.
-    let syy = prof.time("cov:syy", || data.syy_dense(engine));
-    let sxx = prof.time("cov:sxx", || data.sxx_dense(engine));
-    let sxy = prof.time("cov:sxy", || data.sxy_dense(engine));
-    let sxx_diag: Vec<f64> = (0..p).map(|i| sxx[(i, i)]).collect();
+    // Cached covariance statistics — computed once per context, so λ-path
+    // sweeps and repeated fits pay the Gram cost a single time.
+    let syy = prof.time("cov:syy", || ctx.syy())?;
+    let sxx = prof.time("cov:sxx", || ctx.sxx())?;
+    let sxy = prof.time("cov:sxy", || ctx.sxy())?;
+    let sxx_diag = ctx.sxx_diag();
 
     let mut factor = LambdaFactor::factor(&model.lambda, obj.chol, engine)?;
-    let mut rt = data.xtheta_t(&model.theta);
+    let mut rt = ws.mat(q, n)?;
+    data.xtheta_t_into(&model.theta, &mut rt);
     let mut parts = SmoothParts {
         logdet: factor.logdet(),
         tr_syy_lambda: obj.tr_syy_sparse(&model.lambda),
@@ -63,21 +70,28 @@ pub fn solve(
         tr_quad: factor.trace_quad(&rt),
     };
     let mut f = parts.g() + model.penalty(opts.lam_l, opts.lam_t);
-    let mut sigma = prof.time("sigma", || sigma_dense(&factor, engine, &par));
+    let mut sigma = ws.mat(q, q)?;
+    prof.time("sigma", || sigma_dense_into(&factor, engine, par, ws, &mut sigma))?;
     let ls_opts = LineSearchOptions::default();
 
     for it in 0..opts.max_iter {
         // ---- screens (gradients at the current iterate) ----
-        let psi = prof.time("psi", || obj.psi_dense(&sigma, &rt, engine));
-        let gl = prof.time("grad:lambda", || {
-            let mut g = syy.clone();
-            g.add_scaled(-1.0, &sigma);
-            g.add_scaled(-1.0, &psi);
-            g
+        let mut psi = ws.mat(q, q)?;
+        let (active_t, stats_t) = {
+            // One Σ·rt panel feeds both Ψ and ∇_Θ (no second O(q²n) GEMM).
+            let mut sr = ws.mat(q, n)?;
+            prof.time("psi", || obj.psi_into(&sigma, &rt, engine, &mut sr, &mut psi));
+            let mut gt = ws.mat(p, q)?;
+            prof.time("grad:theta", || obj.grad_theta_from_sr(sxy, &sr, engine, &mut gt));
+            theta_active_dense(&gt, &model.theta, opts.lam_t)
+        };
+        let mut gl = ws.mat(q, q)?;
+        prof.time("grad:lambda", || {
+            gl.copy_from(syy);
+            gl.add_scaled(-1.0, &sigma);
+            gl.add_scaled(-1.0, &psi);
         });
-        let gt = prof.time("grad:theta", || obj.grad_theta_dense(&sigma, &rt, engine));
         let (active_l, stats_l) = lambda_active_dense(&gl, &model.lambda, opts.lam_l);
-        let (active_t, stats_t) = theta_active_dense(&gt, &model.theta, opts.lam_t);
         let subgrad = stats_l.subgrad_l1 + stats_t.subgrad_l1;
         let param_l1 = model.lambda.l1_norm() + model.theta.l1_norm();
         trace.push(IterRecord {
@@ -99,11 +113,11 @@ pub fn solve(
 
         // ---- Λ step: CD for the Newton direction, then line search ----
         let mut delta = SpRowMat::zeros(q, q);
-        let mut w = Mat::zeros(q, q);
+        let mut w = ws.mat(q, q)?;
         prof.time("cd:lambda", || {
             for _ in 0..opts.inner_sweeps {
                 lambda_cd_pass(
-                    &active_l, &syy, &sigma, &psi, &model.lambda, &mut delta, &mut w,
+                    &active_l, syy, &sigma, &psi, &model.lambda, &mut delta, &mut w,
                     opts.lam_l, None,
                 );
             }
@@ -132,18 +146,22 @@ pub fn solve(
             factor = res.factor;
             parts = res.parts;
             // (f is recomputed after the Θ phase below.)
-            sigma = prof.time("sigma", || sigma_dense(&factor, engine, &par));
+            prof.time("sigma", || sigma_dense_into(&factor, engine, par, ws, &mut sigma))?;
         }
 
         // ---- Θ step: direct CD on the quadratic subproblem ----
-        let mut vt = prof.time("vt", || theta_sigma_t(&model.theta, &sigma));
+        let mut vt = ws.mat(q, p)?;
+        {
+            let mut v = ws.mat(p, q)?;
+            prof.time("vt", || theta_sigma_t_into(&model.theta, &sigma, &mut v, &mut vt));
+        }
         prof.time("cd:theta", || {
             for _ in 0..opts.inner_sweeps {
                 theta_cd_pass_direct(
                     &active_t,
-                    &sxx,
-                    &sxx_diag,
-                    &sxy,
+                    sxx,
+                    sxx_diag,
+                    sxy,
                     &sigma,
                     &mut model.theta,
                     &mut vt,
@@ -152,7 +170,7 @@ pub fn solve(
             }
         });
         model.theta.prune(0.0);
-        rt = data.xtheta_t(&model.theta);
+        data.xtheta_t_into(&model.theta, &mut rt);
         parts.tr_sxy_theta = obj.tr_sxy_sparse(&model.theta);
         parts.tr_quad = prof.time("trace_quad", || factor.trace_quad(&rt));
         f = parts.g() + model.penalty(opts.lam_l, opts.lam_t);
@@ -167,18 +185,26 @@ pub fn solve(
     Ok(SolveResult { model, trace })
 }
 
-/// Σ = Λ⁻¹ dense. With a sparse factor, solve per column in parallel
-/// (writing column c into row c — Σ is symmetric).
-pub(crate) fn sigma_dense(
+/// Σ = Λ⁻¹ dense, into a preallocated q×q buffer; the dense path's
+/// triangular scratch comes from the workspace arena (budget-visible, no
+/// allocation). With a sparse factor, solve per column in parallel (writing
+/// column c into row c — Σ is symmetric).
+pub(crate) fn sigma_dense_into(
     factor: &LambdaFactor,
     engine: &dyn GemmEngine,
     par: &Parallelism,
-) -> Mat {
+    ws: &super::workspace::Workspace,
+    out: &mut Mat,
+) -> Result<(), SolveError> {
     match factor {
-        LambdaFactor::Dense(f) => f.inverse(engine),
+        LambdaFactor::Dense(f) => {
+            let n = f.n();
+            let mut w = ws.mat(n, n)?;
+            f.inverse_into_scratch(engine, &mut w, out);
+        }
         LambdaFactor::Sparse(f) => {
             let q = f.n();
-            let mut out = Mat::zeros(q, q);
+            debug_assert_eq!((out.rows(), out.cols()), (q, q));
             par.parallel_chunks_mut(out.data_mut(), q, |c, row| {
                 let mut e = vec![0.0; q];
                 e[c] = 1.0;
@@ -186,16 +212,35 @@ pub(crate) fn sigma_dense(
                 row.copy_from_slice(&x);
             });
             out.symmetrize();
-            out
         }
     }
+    Ok(())
 }
 
-/// (ΘΣ)ᵀ = ΣΘᵀ as a q×p matrix (`vt.row(j)` = column j of V = ΘΣ).
-pub(crate) fn theta_sigma_t(theta: &SpRowMat, sigma: &Mat) -> Mat {
+/// Allocating wrapper over [`sigma_dense_into`] (tests, one-off callers).
+pub(crate) fn sigma_dense(
+    factor: &LambdaFactor,
+    engine: &dyn GemmEngine,
+    par: &Parallelism,
+) -> Mat {
+    let q = match factor {
+        LambdaFactor::Dense(f) => f.n(),
+        LambdaFactor::Sparse(f) => f.n(),
+    };
+    let ws = super::workspace::Workspace::new(crate::util::membudget::MemBudget::unlimited());
+    let mut out = Mat::zeros(q, q);
+    sigma_dense_into(factor, engine, par, &ws, &mut out).expect("unlimited budget");
+    out
+}
+
+/// (ΘΣ)ᵀ = ΣΘᵀ as a q×p matrix (`vt.row(j)` = column j of V = ΘΣ), using a
+/// caller-provided p×q scratch `v` — no allocation.
+pub(crate) fn theta_sigma_t_into(theta: &SpRowMat, sigma: &Mat, v: &mut Mat, vt: &mut Mat) {
     let (p, q) = (theta.rows(), theta.cols());
+    debug_assert_eq!((v.rows(), v.cols()), (p, q));
+    debug_assert_eq!((vt.rows(), vt.cols()), (q, p));
     // V = Θ·Σ row-wise (contiguous axpys), then transpose.
-    let mut v = Mat::zeros(p, q);
+    v.fill(0.0);
     for i in 0..p {
         let row = theta.row(i);
         if row.is_empty() {
@@ -206,7 +251,7 @@ pub(crate) fn theta_sigma_t(theta: &SpRowMat, sigma: &Mat) -> Mat {
             crate::linalg::dense::axpy(val, sigma.row(t), vrow);
         }
     }
-    v.transposed()
+    v.transpose_into(vt);
 }
 
 /// Active-set size counting both triangles (what the paper's Fig. 2c plots).
@@ -222,6 +267,8 @@ mod tests {
     use super::*;
     use crate::datagen;
     use crate::gemm::native::NativeGemm;
+    use crate::solvers::solve_in_context;
+    use crate::solvers::SolverKind;
 
     #[test]
     fn solves_tiny_chain_to_tolerance() {
@@ -233,7 +280,8 @@ mod tests {
             max_iter: 60,
             ..Default::default()
         };
-        let res = solve(&prob.data, &opts, &eng).unwrap();
+        let ctx = SolverContext::new(&prob.data, &opts, &eng);
+        let res = solve(&ctx, &opts, None).unwrap();
         assert!(res.trace.converged, "did not converge: {:?}", res.trace.stopping_ratio());
         // Objective decreased monotonically.
         let fs: Vec<f64> = res.trace.records.iter().map(|r| r.f).collect();
@@ -244,6 +292,56 @@ mod tests {
         for i in 0..12 {
             assert!(res.model.lambda.get(i, i) > 0.0);
         }
+    }
+
+    #[test]
+    fn workspace_arena_does_not_grow_across_iterations() {
+        let prob = datagen::chain::generate(14, 14, 70, 5);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions {
+            lam_l: 0.1,
+            lam_t: 0.1,
+            max_iter: 40,
+            ..Default::default()
+        };
+        let ctx = SolverContext::new(&prob.data, &opts, &eng);
+        let res = solve_in_context(SolverKind::AltNewtonCd, &ctx, &opts, None).unwrap();
+        let iters = res.trace.records.len();
+        assert!(iters >= 3, "need several iterations to exercise reuse");
+        let ws = ctx.workspace();
+        // First iteration seeds the pool (≤ 9 distinct concurrent buffers);
+        // every later iteration must be served from it.
+        assert!(
+            ws.misses() <= 9,
+            "arena misses ({}) grew with iterations ({iters})",
+            ws.misses()
+        );
+        assert!(ws.hits() > ws.misses(), "expected pool reuse after warmup");
+        // All buffers returned: nothing live beyond the cached statistics.
+        let stats_bytes = 8 * (14 * 14 * 2 + 14 * 14); // syy + sxx + sxy
+        assert_eq!(ctx.budget().live(), stats_bytes);
+    }
+
+    #[test]
+    fn warm_start_from_own_solution_converges_immediately() {
+        let prob = datagen::chain::generate(10, 10, 60, 9);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions {
+            lam_l: 0.2,
+            lam_t: 0.2,
+            max_iter: 50,
+            ..Default::default()
+        };
+        let ctx = SolverContext::new(&prob.data, &opts, &eng);
+        let cold = solve(&ctx, &opts, None).unwrap();
+        assert!(cold.trace.converged);
+        let warm = solve(&ctx, &opts, Some(&cold.model)).unwrap();
+        assert!(warm.trace.converged);
+        assert_eq!(
+            warm.trace.records.len(),
+            1,
+            "restarting at the optimum must converge at the first screen"
+        );
     }
 
     #[test]

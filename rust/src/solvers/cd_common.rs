@@ -2,6 +2,12 @@
 //! two non-block solvers). Update equations are derived in DESIGN.md §4
 //! (note the erratum on the paper's `a` coefficient).
 //!
+//! These passes are pure compute over caller-provided buffers: they never
+//! allocate, so the solvers can (and do) hand them matrices checked out of
+//! the [`super::workspace::Workspace`] arena — `syy` comes from the
+//! [`super::SolverContext`] statistic cache, `w`/`vt`/`vtp` are arena
+//! checkouts recycled across iterations.
+//!
 //! Layout conventions (performance-critical — see DESIGN.md §9):
 //! - `sigma`, `psi`, `syy` are dense symmetric q×q, so row i ≡ column i;
 //! - `w` stores **Uᵀ = (Δ_ΛΣ)ᵀ = ΣΔ_Λ**: `w.row(t)` is the t-th *column* of

@@ -1,0 +1,213 @@
+//! Shared per-problem solver state: cached covariance statistics, the
+//! workspace arena, the GEMM engine handle, and the parallelism degree.
+//!
+//! The paper's speed argument leans on reusing the expensive quadratics —
+//! `S_yy = YᵀY/n` (q×q), `S_xx = XᵀX/n` (p×p), `S_xy = XᵀY/n` (p×q) are
+//! functions of the *data only*, yet historically every solver invocation
+//! recomputed them from scratch. [`SolverContext`] owns them once, computed
+//! lazily on first use and shared by every subsequent solve on the same
+//! context — which is what makes warm-started λ-path sweeps
+//! ([`crate::coordinator::fit_path`]) pay the O(nq² + np² + npq) Gram cost
+//! exactly once for the whole path.
+//!
+//! The context also owns the [`Workspace`] arena, so cached statistics and
+//! hot-loop scratch draw on one [`MemBudget`]: `peak()` measures the
+//! dominant dense working set — statistics, Σ/Ψ/gradient buffers, column
+//! caches and GEMM panels — for all four solvers (the `memwall`
+//! experiment's measured column). Cholesky factors (one O(q²)-bounded
+//! allocation per factorization, dense path only) remain untracked; see
+//! ROADMAP "λ-path workloads" for the follow-up.
+//!
+//! Laziness matters for the memory story: the block solver (Algorithm 2)
+//! never touches the dense statistics, so creating a context for it
+//! materializes nothing; `prox_grad` pulls only `S_yy`/`S_xy` (it is
+//! n-factored and never forms the p×p Gram).
+
+use std::cell::{Cell, OnceCell};
+
+use super::workspace::Workspace;
+use super::SolveOptions;
+use crate::cggm::Dataset;
+use crate::gemm::GemmEngine;
+use crate::linalg::dense::Mat;
+use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
+use crate::util::threadpool::Parallelism;
+
+/// A cached statistic with its budget registration (lives as long as the
+/// context, so `MemBudget::live()` reflects it).
+struct CachedMat {
+    mat: Mat,
+    _track: Tracked,
+}
+
+/// Shared state for one dataset: construct once, run many solves.
+pub struct SolverContext<'a> {
+    data: &'a Dataset,
+    engine: &'a dyn GemmEngine,
+    par: Parallelism,
+    ws: Workspace,
+    syy: OnceCell<CachedMat>,
+    sxx: OnceCell<CachedMat>,
+    sxy: OnceCell<CachedMat>,
+    sxx_diag: OnceCell<Vec<f64>>,
+    stat_computes: Cell<usize>,
+}
+
+impl<'a> SolverContext<'a> {
+    pub fn new(
+        data: &'a Dataset,
+        opts: &SolveOptions,
+        engine: &'a dyn GemmEngine,
+    ) -> SolverContext<'a> {
+        SolverContext {
+            data,
+            engine,
+            par: opts.parallelism(),
+            ws: Workspace::new(opts.budget.clone()),
+            syy: OnceCell::new(),
+            sxx: OnceCell::new(),
+            sxy: OnceCell::new(),
+            sxx_diag: OnceCell::new(),
+            stat_computes: Cell::new(0),
+        }
+    }
+
+    pub fn data(&self) -> &'a Dataset {
+        self.data
+    }
+
+    pub fn engine(&self) -> &'a dyn GemmEngine {
+        self.engine
+    }
+
+    pub fn par(&self) -> &Parallelism {
+        &self.par
+    }
+
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    pub fn budget(&self) -> &MemBudget {
+        self.ws.budget()
+    }
+
+    fn cached<'s>(
+        &'s self,
+        cell: &'s OnceCell<CachedMat>,
+        bytes: usize,
+        compute: impl FnOnce() -> Mat,
+    ) -> Result<&'s Mat, BudgetExceeded> {
+        if cell.get().is_none() {
+            // Register before computing so an over-budget statistic fails
+            // cleanly instead of allocating first.
+            let track = self.ws.budget().track(bytes)?;
+            self.stat_computes.set(self.stat_computes.get() + 1);
+            let _ = cell.set(CachedMat {
+                mat: compute(),
+                _track: track,
+            });
+        }
+        Ok(&cell.get().expect("cell just populated").mat)
+    }
+
+    /// Dense S_yy (q×q), computed once per context.
+    pub fn syy(&self) -> Result<&Mat, BudgetExceeded> {
+        let q = self.data.q();
+        self.cached(&self.syy, 8 * q * q, || self.data.syy_dense(self.engine))
+    }
+
+    /// Dense S_xx (p×p), computed once per context. The block solver never
+    /// calls this — its absence is Algorithm 2's memory story.
+    pub fn sxx(&self) -> Result<&Mat, BudgetExceeded> {
+        let p = self.data.p();
+        self.cached(&self.sxx, 8 * p * p, || self.data.sxx_dense(self.engine))
+    }
+
+    /// Dense S_xy (p×q), computed once per context.
+    pub fn sxy(&self) -> Result<&Mat, BudgetExceeded> {
+        let (p, q) = (self.data.p(), self.data.q());
+        self.cached(&self.sxy, 8 * p * q, || self.data.sxy_dense(self.engine))
+    }
+
+    /// diag(S_xx), computed directly in O(pn) — does not force the dense p×p.
+    pub fn sxx_diag(&self) -> &[f64] {
+        self.sxx_diag
+            .get_or_init(|| (0..self.data.p()).map(|i| self.data.sxx(i, i)).collect())
+    }
+
+    /// How many dense statistics have been materialized (tests assert a
+    /// λ-path computes each exactly once).
+    pub fn stat_computes(&self) -> usize {
+        self.stat_computes.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::util::rng::Rng;
+
+    fn small_data(rng: &mut Rng, n: usize, p: usize, q: usize) -> Dataset {
+        Dataset::new(
+            Mat::from_fn(p, n, |_, _| rng.normal()),
+            Mat::from_fn(q, n, |_, _| rng.normal()),
+        )
+    }
+
+    #[test]
+    fn statistics_computed_once_and_cached() {
+        let mut rng = Rng::new(3);
+        let data = small_data(&mut rng, 12, 5, 7);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions::default();
+        let ctx = SolverContext::new(&data, &opts, &eng);
+        let a = ctx.syy().unwrap() as *const Mat;
+        let b = ctx.syy().unwrap() as *const Mat;
+        assert_eq!(a, b, "second call must return the cached matrix");
+        let _ = ctx.sxx().unwrap();
+        let _ = ctx.sxy().unwrap();
+        let _ = ctx.sxy().unwrap();
+        assert_eq!(ctx.stat_computes(), 3);
+        // Values agree with the direct computation.
+        let want = data.syy_dense(&eng);
+        assert!(ctx.syy().unwrap().max_abs_diff(&want) < 1e-14);
+        for (i, d) in ctx.sxx_diag().iter().enumerate() {
+            assert!((d - data.sxx(i, i)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn cached_statistics_count_against_the_budget() {
+        let mut rng = Rng::new(4);
+        let data = small_data(&mut rng, 10, 4, 6);
+        let eng = NativeGemm::new(1);
+        let budget = MemBudget::unlimited();
+        let opts = SolveOptions {
+            budget: budget.clone(),
+            ..Default::default()
+        };
+        let ctx = SolverContext::new(&data, &opts, &eng);
+        assert_eq!(budget.live(), 0);
+        let _ = ctx.syy().unwrap();
+        assert_eq!(budget.live(), 8 * 6 * 6);
+        let _ = ctx.sxy().unwrap();
+        assert_eq!(budget.live(), 8 * 6 * 6 + 8 * 4 * 6);
+    }
+
+    #[test]
+    fn over_budget_statistic_is_an_error() {
+        let mut rng = Rng::new(5);
+        let data = small_data(&mut rng, 10, 4, 6);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions {
+            budget: MemBudget::new(64),
+            ..Default::default()
+        };
+        let ctx = SolverContext::new(&data, &opts, &eng);
+        assert!(ctx.syy().is_err(), "q²·8 = 288 bytes must not fit in 64");
+        // diag never forces the dense matrix and stays available.
+        assert_eq!(ctx.sxx_diag().len(), 4);
+    }
+}

@@ -1,4 +1,4 @@
-//! The three CGGM solvers:
+//! The four CGGM solvers:
 //!
 //! - [`newton_cd`] — the prior state of the art (Wytock & Kolter 2013):
 //!   one joint second-order model over (Λ, Θ), coordinate descent on the
@@ -10,12 +10,27 @@
 //!   block coordinate descent with clustered blocks, CG-computed Σ columns,
 //!   and a memory budget — runs at sizes where the others cannot allocate
 //!   their dense q×q / p×q work matrices.
+//! - [`prox_grad`] — accelerated proximal gradient (FISTA), the first-order
+//!   prior-art baseline the second-order methods are measured against.
+//!
+//! All four run on a shared [`SolverContext`]: cached covariance statistics
+//! (computed once per dataset, reused across solves — the λ-path driver's
+//! speed story), a budget-tracked [`workspace::Workspace`] arena supplying
+//! every hot-loop buffer, and the GEMM engine + parallelism handles. The
+//! one-shot [`solve`] entry point builds a context internally;
+//! [`solve_in_context`] lets callers (warm-started paths, repeated fits)
+//! amortize it.
 
 pub mod alt_newton_bcd;
 pub mod alt_newton_cd;
 pub mod cd_common;
+pub mod context;
 pub mod newton_cd;
 pub mod prox_grad;
+pub mod workspace;
+
+pub use context::SolverContext;
+pub use workspace::Workspace;
 
 use crate::cggm::factor::CholKind;
 use crate::cggm::{CggmModel, Dataset};
@@ -58,16 +73,28 @@ impl SolverKind {
         }
     }
 
-    pub fn all() -> [SolverKind; 3] {
+    /// The paper's three solvers (Table 1 / Figures 1–2). Formerly misnamed
+    /// `all()`, which silently omitted [`SolverKind::ProxGrad`].
+    pub fn paper_three() -> [SolverKind; 3] {
         [
             SolverKind::NewtonCd,
             SolverKind::AltNewtonCd,
             SolverKind::AltNewtonBcd,
         ]
     }
+
+    /// Every solver the crate implements, including the first-order baseline.
+    pub fn all() -> [SolverKind; 4] {
+        [
+            SolverKind::NewtonCd,
+            SolverKind::AltNewtonCd,
+            SolverKind::AltNewtonBcd,
+            SolverKind::ProxGrad,
+        ]
+    }
 }
 
-/// Solver configuration shared by all three methods.
+/// Solver configuration shared by all four methods.
 #[derive(Clone)]
 pub struct SolveOptions {
     /// λ_Λ.
@@ -123,9 +150,10 @@ impl SolveOptions {
         Parallelism::new(self.threads)
     }
 
-    /// True when the wall-clock cap is exceeded.
+    /// True when the wall-clock cap is reached. `>=` so `time_limit` is
+    /// honored exactly at the cap (a run timed at precisely the limit stops).
     pub fn out_of_time(&self, elapsed: f64) -> bool {
-        self.time_limit > 0.0 && elapsed > self.time_limit
+        self.time_limit > 0.0 && elapsed >= self.time_limit
     }
 }
 
@@ -145,23 +173,40 @@ pub enum SolveError {
     Budget(#[from] crate::util::membudget::BudgetExceeded),
 }
 
-/// Dispatch entry point.
+/// One-shot dispatch: builds a fresh [`SolverContext`] for this solve.
 pub fn solve(
     kind: SolverKind,
     data: &Dataset,
     opts: &SolveOptions,
     engine: &dyn GemmEngine,
 ) -> Result<SolveResult, SolveError> {
+    let ctx = SolverContext::new(data, opts, engine);
+    solve_in_context(kind, &ctx, opts, None)
+}
+
+/// Dispatch on a shared context. `warm` seeds the iterate (λ-path warm
+/// starts); `None` is the paper's cold start (Λ = I, Θ = 0). Cached
+/// statistics and workspace buffers persist across calls on the same
+/// context.
+pub fn solve_in_context(
+    kind: SolverKind,
+    ctx: &SolverContext,
+    opts: &SolveOptions,
+    warm: Option<&CggmModel>,
+) -> Result<SolveResult, SolveError> {
     match kind {
-        SolverKind::NewtonCd => newton_cd::solve(data, opts, engine),
-        SolverKind::AltNewtonCd => alt_newton_cd::solve(data, opts, engine),
-        SolverKind::AltNewtonBcd => alt_newton_bcd::solve(data, opts, engine),
-        SolverKind::ProxGrad => prox_grad::solve(data, opts, engine),
+        SolverKind::NewtonCd => newton_cd::solve(ctx, opts, warm),
+        SolverKind::AltNewtonCd => alt_newton_cd::solve(ctx, opts, warm),
+        SolverKind::AltNewtonBcd => alt_newton_bcd::solve(ctx, opts, warm),
+        SolverKind::ProxGrad => prox_grad::solve(ctx, opts, warm),
     }
 }
 
 /// Estimated dense working-set bytes of the non-block solvers — used by the
-/// `memwall` experiment to reproduce the paper's OOM boundary.
+/// `memwall` experiment to reproduce the paper's OOM boundary. An analytic
+/// estimate only; the measured truth is `MemBudget::peak()`, which the
+/// workspace arena keeps honest (asserted within tolerance by
+/// `workspace_peak_matches_dense_estimate` in the integration tests).
 pub fn dense_workingset_bytes(kind: SolverKind, p: usize, q: usize) -> usize {
     let f = std::mem::size_of::<f64>();
     match kind {

@@ -10,46 +10,52 @@
 //! - Λ updates carry `-Φ_ij - Φ_ji`, `Φ = ΣΘᵀS_xxΔ_ΘΣ = Γᵀ V'`;
 //! - Θ updates carry `+2Γ_ij - 2(ΓU)_ij` and cost O(p+q) each;
 //! - one *joint* Armijo line search over (Λ + αD_Λ, Θ + αD_Θ).
+//!
+//! Statistics come cached from the [`SolverContext`]; all per-iteration
+//! dense scratch (Σ, Ψ, Γ, Γᵀ, gradients, `U`/`V'` caches) is checked out
+//! of the workspace arena — zero allocations in the iteration loop.
 
-use super::alt_newton_cd::{full_count, sigma_dense};
+use super::alt_newton_cd::{full_count, sigma_dense_into};
 use super::cd_common::{
     lambda_cd_pass, theta_cd_pass_direction, trace_grad_dir, JointTerms,
 };
-use super::{SolveError, SolveOptions, SolveResult};
+use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::active::{lambda_active_dense, theta_active_dense};
 use crate::cggm::factor::LambdaFactor;
 use crate::cggm::linesearch::{joint_line_search, LineSearchOptions};
 use crate::cggm::objective::SmoothParts;
-use crate::cggm::{CggmModel, Dataset, Objective};
-use crate::gemm::GemmEngine;
-use crate::linalg::dense::Mat;
+use crate::cggm::{CggmModel, Objective};
 use crate::linalg::sparse::SpRowMat;
 use crate::metrics::{IterRecord, SolveTrace};
 use crate::util::timer::{PhaseProfiler, Stopwatch};
 
 pub fn solve(
-    data: &Dataset,
+    ctx: &SolverContext,
     opts: &SolveOptions,
-    engine: &dyn GemmEngine,
+    warm: Option<&CggmModel>,
 ) -> Result<SolveResult, SolveError> {
-    let (p, q) = (data.p(), data.q());
-    let par = opts.parallelism();
+    let data = ctx.data();
+    let engine = ctx.engine();
+    let ws = ctx.workspace();
+    let par = ctx.par();
+    let (p, q, n) = (data.p(), data.q(), data.n());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
     let obj = Objective::new(data, opts.lam_l, opts.lam_t).with_chol(opts.chol);
-    let mut model = CggmModel::init(p, q);
+    let mut model = warm.cloned().unwrap_or_else(|| CggmModel::init(p, q));
     let mut trace = SolveTrace {
         solver: "newton_cd".into(),
         ..Default::default()
     };
 
-    let syy = prof.time("cov:syy", || data.syy_dense(engine));
-    let sxx = prof.time("cov:sxx", || data.sxx_dense(engine));
-    let sxy = prof.time("cov:sxy", || data.sxy_dense(engine));
-    let sxx_diag: Vec<f64> = (0..p).map(|i| sxx[(i, i)]).collect();
+    let syy = prof.time("cov:syy", || ctx.syy())?;
+    let sxx = prof.time("cov:sxx", || ctx.sxx())?;
+    let sxy = prof.time("cov:sxy", || ctx.sxy())?;
+    let sxx_diag = ctx.sxx_diag();
 
     let mut factor = LambdaFactor::factor(&model.lambda, obj.chol, engine)?;
-    let mut rt = data.xtheta_t(&model.theta);
+    let mut rt = ws.mat(q, n)?;
+    data.xtheta_t_into(&model.theta, &mut rt);
     let mut parts = SmoothParts {
         logdet: factor.logdet(),
         tr_syy_lambda: obj.tr_syy_sparse(&model.lambda),
@@ -57,35 +63,35 @@ pub fn solve(
         tr_quad: factor.trace_quad(&rt),
     };
     let mut f = parts.g() + model.penalty(opts.lam_l, opts.lam_t);
-    let mut sigma = prof.time("sigma", || sigma_dense(&factor, engine, &par));
+    let mut sigma = ws.mat(q, q)?;
+    prof.time("sigma", || sigma_dense_into(&factor, engine, par, ws, &mut sigma))?;
     let ls_opts = LineSearchOptions::default();
 
     for it in 0..opts.max_iter {
         // ---- Γ, Ψ: the per-iteration dense precomputations (O(npq + nq²)) ----
-        let psi = prof.time("psi", || obj.psi_dense(&sigma, &rt, engine));
-        // Γ = S_xxΘΣ = Xᵀ(X·(ΘΣ))/n = gemm_nt(xt, Σ·rt)/n.
-        let gamma = prof.time("gamma", || {
-            let mut sr = Mat::zeros(q, data.n());
-            engine.gemm(1.0, &sigma, &rt, 0.0, &mut sr);
-            let mut g = Mat::zeros(p, q);
-            engine.gemm_nt(data.inv_n(), &data.xt, &sr, 0.0, &mut g);
-            g
-        });
-        let gamma_t = prof.time("gamma", || gamma.transposed());
+        let mut psi = ws.mat(q, q)?;
+        let mut gamma = ws.mat(p, q)?;
+        {
+            let mut sr = ws.mat(q, n)?;
+            // Ψ from sr = Σ·rt; Γ = Xᵀ·sr/n reuses the same panel — one GEMM
+            // saved versus recomputing Σ·rt.
+            prof.time("psi", || obj.psi_into(&sigma, &rt, engine, &mut sr, &mut psi));
+            prof.time("gamma", || {
+                engine.gemm_nt(data.inv_n(), &data.xt, &sr, 0.0, &mut gamma);
+            });
+        }
+        let mut gamma_t = ws.mat(q, p)?;
+        prof.time("gamma", || gamma.transpose_into(&mut gamma_t));
 
         // ---- gradients & screens ----
-        let gl = {
-            let mut g = syy.clone();
-            g.add_scaled(-1.0, &sigma);
-            g.add_scaled(-1.0, &psi);
-            g
-        };
-        let gt = {
-            let mut g = sxy.clone();
-            g.add_scaled(1.0, &gamma);
-            g.scale(2.0);
-            g
-        };
+        let mut gl = ws.mat(q, q)?;
+        gl.copy_from(syy);
+        gl.add_scaled(-1.0, &sigma);
+        gl.add_scaled(-1.0, &psi);
+        let mut gt = ws.mat(p, q)?;
+        gt.copy_from(sxy);
+        gt.add_scaled(1.0, &gamma);
+        gt.scale(2.0);
         let (active_l, stats_l) = lambda_active_dense(&gl, &model.lambda, opts.lam_l);
         let (active_t, stats_t) = theta_active_dense(&gt, &model.theta, opts.lam_t);
         let subgrad = stats_l.subgrad_l1 + stats_t.subgrad_l1;
@@ -110,13 +116,13 @@ pub fn solve(
         // ---- joint CD for (D_Λ, D_Θ) ----
         let mut delta_l = SpRowMat::zeros(q, q);
         let mut delta_t = SpRowMat::zeros(p, q);
-        let mut w = Mat::zeros(q, q);
-        let mut vtp = Mat::zeros(q, p);
+        let mut w = ws.mat(q, q)?;
+        let mut vtp = ws.mat(q, p)?;
         prof.time("cd:joint", || {
             for _ in 0..opts.inner_sweeps {
                 lambda_cd_pass(
                     &active_l,
-                    &syy,
+                    syy,
                     &sigma,
                     &psi,
                     &model.lambda,
@@ -130,9 +136,9 @@ pub fn solve(
                 );
                 theta_cd_pass_direction(
                     &active_t,
-                    &sxx,
-                    &sxx_diag,
-                    &sxy,
+                    sxx,
+                    sxx_diag,
+                    sxy,
                     &sigma,
                     &gamma,
                     &w,
@@ -181,8 +187,8 @@ pub fn solve(
         factor = res.factor;
         parts = res.parts;
         f = res.f_new;
-        rt = data.xtheta_t(&model.theta);
-        sigma = prof.time("sigma", || sigma_dense(&factor, engine, &par));
+        data.xtheta_t_into(&model.theta, &mut rt);
+        prof.time("sigma", || sigma_dense_into(&factor, engine, par, ws, &mut sigma))?;
     }
 
     trace.total_seconds = sw.seconds();
@@ -210,7 +216,8 @@ mod tests {
             max_iter: 80,
             ..Default::default()
         };
-        let res = solve(&prob.data, &opts, &eng).unwrap();
+        let ctx = SolverContext::new(&prob.data, &opts, &eng);
+        let res = solve(&ctx, &opts, None).unwrap();
         assert!(res.trace.converged);
         let fs: Vec<f64> = res.trace.records.iter().map(|r| r.f).collect();
         for k in 1..fs.len() {

@@ -12,9 +12,17 @@
 //! (prox touches every coordinate), dense Γ each iteration — this is
 //! exactly why second-order active-set methods win, and this solver exists
 //! to measure that gap (`bench_solvers`, fig1c `--with-prox`).
+//!
+//! `S_yy`/`S_xy` come cached from the [`SolverContext`] (this solver is
+//! n-factored and never forms the p×p `S_xx`); the dense iterates, momentum
+//! point, prox candidate, and every smooth-evaluation scratch matrix are
+//! workspace-arena checkouts, so the FISTA loop — including its inner
+//! backtracking trials — performs no allocations.
 
-use super::{SolveError, SolveOptions, SolveResult};
+use super::workspace::{Workspace, WsMat};
+use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::active::{lambda_active_dense, theta_active_dense};
+use crate::cggm::factor::FactorError;
 use crate::cggm::soft_threshold;
 use crate::cggm::{CggmModel, Dataset};
 use crate::gemm::GemmEngine;
@@ -24,24 +32,108 @@ use crate::linalg::sparse::SpRowMat;
 use crate::metrics::{IterRecord, SolveTrace};
 use crate::util::timer::{PhaseProfiler, Stopwatch};
 
-/// Dense iterate (Λ, Θ).
-#[derive(Clone)]
-struct Iterate {
-    lam: Mat,
-    th: Mat,
+/// Smooth value + gradients at one iterate; the gradient buffers stay
+/// checked out of the arena while the eval is alive.
+struct SmoothEval<'w> {
+    g: f64,
+    grad_l: WsMat<'w>,
+    grad_t: WsMat<'w>,
 }
 
-struct SmoothEval {
-    g: f64,
-    grad_l: Mat,
-    grad_t: Mat,
+/// g, ∇_Λg, ∇_Θg at (Λ, Θ). `Ok(None)` means Λ ⊁ 0 (momentum overshot the
+/// PD cone); `Err` is a budget failure.
+fn eval_smooth<'w>(
+    ws: &'w Workspace,
+    data: &Dataset,
+    syy: &Mat,
+    sxy: &Mat,
+    engine: &dyn GemmEngine,
+    lam: &Mat,
+    th: &Mat,
+) -> Result<Option<SmoothEval<'w>>, SolveError> {
+    let (p, q, n) = (data.p(), data.q(), data.n());
+    let chol = match DenseChol::factor(lam, engine) {
+        Ok(c) => c,
+        Err(_) => return Ok(None),
+    };
+    let mut sigma = ws.mat(q, q)?;
+    {
+        let mut wtri = ws.mat(q, q)?;
+        chol.inverse_into_scratch(engine, &mut wtri, &mut sigma);
+    }
+    // R̃ᵀ = Θᵀ·xt (q×n); sr = Σ·R̃ᵀ.
+    let mut rtt = ws.mat(q, n)?;
+    engine.gemm_tn(1.0, th, &data.xt, 0.0, &mut rtt);
+    let mut sr = ws.mat(q, n)?;
+    engine.gemm(1.0, &sigma, &rtt, 0.0, &mut sr);
+    let mut psi = ws.mat(q, q)?;
+    engine.gemm_nt(data.inv_n(), &sr, &sr, 0.0, &mut psi);
+    psi.symmetrize();
+    let mut gamma = ws.mat(p, q)?;
+    engine.gemm_nt(data.inv_n(), &data.xt, &sr, 0.0, &mut gamma);
+    // g = -logdet + tr(SyyΛ) + 2tr(SxyᵀΘ) + tr(ΣΘᵀSxxΘ), the last term as
+    // tr(ΘᵀSxxΘΣ) = Σ_ij Θ_ij (SxxΘΣ)_ij = <Θ, Γ>.
+    let mut tr1 = 0.0;
+    for (a, b) in syy.data().iter().zip(lam.data()) {
+        tr1 += a * b;
+    }
+    let mut tr2 = 0.0;
+    for (a, b) in sxy.data().iter().zip(th.data()) {
+        tr2 += a * b;
+    }
+    let mut tr3 = 0.0;
+    for (a, b) in gamma.data().iter().zip(th.data()) {
+        tr3 += a * b;
+    }
+    let g = -chol.logdet() + tr1 + 2.0 * tr2 + tr3;
+    let mut grad_l = ws.mat(q, q)?;
+    grad_l.copy_from(syy);
+    grad_l.add_scaled(-1.0, &sigma);
+    grad_l.add_scaled(-1.0, &psi);
+    let mut grad_t = ws.mat(p, q)?;
+    grad_t.copy_from(sxy);
+    grad_t.add_scaled(1.0, &gamma);
+    grad_t.scale(2.0);
+    Ok(Some(SmoothEval { g, grad_l, grad_t }))
+}
+
+/// (Λ⁺, Θ⁺) = prox_{ηh}(y − η∇g(y)), written into `out_*`.
+#[allow(clippy::too_many_arguments)]
+fn prox_step(
+    y_lam: &Mat,
+    y_th: &Mat,
+    ev: &SmoothEval,
+    eta: f64,
+    lam_l: f64,
+    lam_t: f64,
+    out_lam: &mut Mat,
+    out_th: &mut Mat,
+) {
+    for (o, (yi, gi)) in out_lam
+        .data_mut()
+        .iter_mut()
+        .zip(y_lam.data().iter().zip(ev.grad_l.data()))
+    {
+        *o = soft_threshold(yi - eta * gi, eta * lam_l);
+    }
+    out_lam.symmetrize();
+    for (o, (yi, gi)) in out_th
+        .data_mut()
+        .iter_mut()
+        .zip(y_th.data().iter().zip(ev.grad_t.data()))
+    {
+        *o = soft_threshold(yi - eta * gi, eta * lam_t);
+    }
 }
 
 pub fn solve(
-    data: &Dataset,
+    ctx: &SolverContext,
     opts: &SolveOptions,
-    engine: &dyn GemmEngine,
+    warm: Option<&CggmModel>,
 ) -> Result<SolveResult, SolveError> {
+    let data = ctx.data();
+    let engine = ctx.engine();
+    let ws = ctx.workspace();
     let (p, q) = (data.p(), data.q());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
@@ -49,88 +141,60 @@ pub fn solve(
         solver: "prox_grad".into(),
         ..Default::default()
     };
-    let syy = data.syy_dense(engine);
-    let sxy = data.sxy_dense(engine);
+    let syy = ctx.syy()?;
+    let sxy = ctx.sxy()?;
 
-    // Smooth part + gradients at a dense iterate (n-factored, no S_xx).
-    let eval = |x: &Iterate| -> Option<SmoothEval> {
-        let chol = DenseChol::factor(&x.lam, engine).ok()?;
-        let sigma = chol.inverse(engine);
-        // R̃ᵀ = Θᵀ·xt (q×n)
-        let mut rtt = Mat::zeros(q, data.n());
-        engine.gemm_tn(1.0, &x.th, &data.xt, 0.0, &mut rtt);
-        let mut sr = Mat::zeros(q, data.n());
-        engine.gemm(1.0, &sigma, &rtt, 0.0, &mut sr);
-        let mut psi = Mat::zeros(q, q);
-        engine.gemm_nt(data.inv_n(), &sr, &sr, 0.0, &mut psi);
-        psi.symmetrize();
-        let mut gamma = Mat::zeros(p, q);
-        engine.gemm_nt(data.inv_n(), &data.xt, &sr, 0.0, &mut gamma);
-        // g = -logdet + tr(SyyΛ) + 2tr(SxyᵀΘ) + tr(ΣΘᵀSxxΘ)
-        let mut tr1 = 0.0;
-        for (a, b) in syy.data().iter().zip(x.lam.data()) {
-            tr1 += a * b;
-        }
-        let mut tr2 = 0.0;
-        for (a, b) in sxy.data().iter().zip(x.th.data()) {
-            tr2 += a * b;
-        }
-        // tr(ΣΘᵀSxxΘ) = tr(Γᵀ Θ) with Γ = SxxΘΣ ... = Σ_{ij} Γ_ij Θ_ij? No:
-        // tr(ΘᵀSxxΘΣ) = Σ_ij Θ_ij (SxxΘΣ)_ij = <Θ, Γ>.
-        let mut tr3 = 0.0;
-        for (a, b) in gamma.data().iter().zip(x.th.data()) {
-            tr3 += a * b;
-        }
-        let g = -chol.logdet() + tr1 + 2.0 * tr2 + tr3;
-        let mut grad_l = syy.clone();
-        grad_l.add_scaled(-1.0, &sigma);
-        grad_l.add_scaled(-1.0, &psi);
-        let mut grad_t = sxy.clone();
-        grad_t.add_scaled(1.0, &gamma);
-        grad_t.scale(2.0);
-        Some(SmoothEval { g, grad_l, grad_t })
+    let penalty = |lam: &Mat, th: &Mat| -> f64 {
+        opts.lam_l * lam.data().iter().map(|v| v.abs()).sum::<f64>()
+            + opts.lam_t * th.data().iter().map(|v| v.abs()).sum::<f64>()
     };
 
-    let prox = |y: &Iterate, ev: &SmoothEval, eta: f64| -> Iterate {
-        let mut lam = Mat::zeros(q, q);
-        for (o, (yi, gi)) in lam
-            .data_mut()
-            .iter_mut()
-            .zip(y.lam.data().iter().zip(ev.grad_l.data()))
-        {
-            *o = soft_threshold(yi - eta * gi, eta * opts.lam_l);
+    // Dense iterates x (current), y (momentum point), cand (prox trial) —
+    // six arena buffers that live for the whole solve.
+    let mut x_lam = ws.mat(q, q)?;
+    let mut x_th = ws.mat(p, q)?;
+    match warm {
+        Some(m) => {
+            // Scatter the sparse rows straight into the zeroed arena buffers
+            // (no untracked dense temporaries).
+            for i in 0..q {
+                for &(j, v) in m.lambda.row(i) {
+                    x_lam[(i, j)] = v;
+                }
+            }
+            for i in 0..p {
+                for &(j, v) in m.theta.row(i) {
+                    x_th[(i, j)] = v;
+                }
+            }
         }
-        lam.symmetrize();
-        let mut th = Mat::zeros(p, q);
-        for (o, (yi, gi)) in th
-            .data_mut()
-            .iter_mut()
-            .zip(y.th.data().iter().zip(ev.grad_t.data()))
-        {
-            *o = soft_threshold(yi - eta * gi, eta * opts.lam_t);
+        None => {
+            for i in 0..q {
+                x_lam[(i, i)] = 1.0;
+            }
         }
-        Iterate { lam, th }
-    };
+    }
+    let mut y_lam = ws.mat(q, q)?;
+    let mut y_th = ws.mat(p, q)?;
+    y_lam.copy_from(&x_lam);
+    y_th.copy_from(&x_th);
+    let mut cand_lam = ws.mat(q, q)?;
+    let mut cand_th = ws.mat(p, q)?;
 
-    let penalty = |x: &Iterate| -> f64 {
-        opts.lam_l * x.lam.data().iter().map(|v| v.abs()).sum::<f64>()
-            + opts.lam_t * x.th.data().iter().map(|v| v.abs()).sum::<f64>()
-    };
-
-    let mut x = Iterate {
-        lam: Mat::eye(q),
-        th: Mat::zeros(p, q),
-    };
-    let mut y = x.clone();
     let mut tk = 1.0f64;
     let mut eta = 1.0f64;
-    let mut ev_x = eval(&x).expect("Λ = I must be PD");
-    let mut f_cur = ev_x.g + penalty(&x);
+    // A non-PD initial Λ (possible with a caller-supplied warm start) is an
+    // error, not a panic — same contract as the factorizing solvers.
+    let mut ev_x = match eval_smooth(ws, data, syy, sxy, engine, &x_lam, &x_th)? {
+        Some(e) => e,
+        None => return Err(SolveError::Factor(FactorError::NotPd)),
+    };
+    let mut f_cur = ev_x.g + penalty(&x_lam, &x_th);
 
     for it in 0..opts.max_iter {
         // Trace + stopping statistic from the dense screens.
-        let lam_sp = SpRowMat::from_dense(&x.lam, 0.0);
-        let th_sp = SpRowMat::from_dense(&x.th, 0.0);
+        let lam_sp = SpRowMat::from_dense(&x_lam, 0.0);
+        let th_sp = SpRowMat::from_dense(&x_th, 0.0);
         let (al, stats_l) = lambda_active_dense(&ev_x.grad_l, &lam_sp, opts.lam_l);
         let (at, stats_t) = theta_active_dense(&ev_x.grad_t, &th_sp, opts.lam_t);
         let subgrad = stats_l.subgrad_l1 + stats_t.subgrad_l1;
@@ -153,38 +217,41 @@ pub fn solve(
         }
 
         // Momentum point (y already holds it; evaluate there).
-        let ev_y = match prof.time("eval", || eval(&y)) {
+        let ev_y = match prof.time("eval", || {
+            eval_smooth(ws, data, syy, sxy, engine, &y_lam, &y_th)
+        })? {
             Some(e) => e,
             None => {
                 // Momentum overshot the PD cone: restart from x.
-                y = x.clone();
+                y_lam.copy_from(&x_lam);
+                y_th.copy_from(&x_th);
                 tk = 1.0;
-                eval(&y).expect("x is PD")
+                eval_smooth(ws, data, syy, sxy, engine, &y_lam, &y_th)?.expect("x is PD")
             }
         };
         // Backtracking on η: g(x⁺) ≤ g(y) + <∇g(y), x⁺−y> + ‖x⁺−y‖²/(2η).
-        let mut accepted = None;
+        let mut accepted: Option<SmoothEval> = None;
         for _ in 0..60 {
-            let cand = prox(&y, &ev_y, eta);
-            if let Some(ev_c) = eval(&cand) {
+            prox_step(
+                &y_lam, &y_th, &ev_y, eta, opts.lam_l, opts.lam_t, &mut cand_lam, &mut cand_th,
+            );
+            if let Some(ev_c) = eval_smooth(ws, data, syy, sxy, engine, &cand_lam, &cand_th)? {
                 let mut lin = 0.0;
                 let mut dist2 = 0.0;
-                for ((c, yv), g) in cand
-                    .lam
+                for ((c, yv), g) in cand_lam
                     .data()
                     .iter()
-                    .zip(y.lam.data())
+                    .zip(y_lam.data())
                     .zip(ev_y.grad_l.data())
                 {
                     let d = c - yv;
                     lin += g * d;
                     dist2 += d * d;
                 }
-                for ((c, yv), g) in cand
-                    .th
+                for ((c, yv), g) in cand_th
                     .data()
                     .iter()
-                    .zip(y.th.data())
+                    .zip(y_th.data())
                     .zip(ev_y.grad_t.data())
                 {
                     let d = c - yv;
@@ -192,34 +259,38 @@ pub fn solve(
                     dist2 += d * d;
                 }
                 if ev_c.g <= ev_y.g + lin + dist2 / (2.0 * eta) + 1e-12 {
-                    accepted = Some((cand, ev_c));
+                    accepted = Some(ev_c);
                     break;
                 }
             }
             eta *= 0.5;
         }
-        let (x_new, ev_new) = match accepted {
+        let ev_new = match accepted {
             Some(v) => v,
             None => break, // η underflow — numerically stuck
         };
-        let f_new = ev_new.g + penalty(&x_new);
+        let f_new = ev_new.g + penalty(&cand_lam, &cand_th);
         // FISTA momentum with function restart.
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * tk * tk).sqrt());
         if f_new > f_cur {
             // restart
-            y = x_new.clone();
+            y_lam.copy_from(&cand_lam);
+            y_th.copy_from(&cand_th);
             tk = 1.0;
         } else {
             let beta = (tk - 1.0) / t_next;
-            let mut ynew = x_new.clone();
-            ynew.lam.scale(1.0 + beta);
-            ynew.lam.add_scaled(-beta, &x.lam);
-            ynew.th.scale(1.0 + beta);
-            ynew.th.add_scaled(-beta, &x.th);
-            y = ynew;
+            // y = (1+β)·x_new − β·x_old, in place.
+            y_lam.copy_from(&cand_lam);
+            y_lam.scale(1.0 + beta);
+            y_lam.add_scaled(-beta, &x_lam);
+            y_th.copy_from(&cand_th);
+            y_th.scale(1.0 + beta);
+            y_th.add_scaled(-beta, &x_th);
             tk = t_next;
         }
-        x = x_new;
+        // x ← x_new by swapping buffers (cand becomes the stale pair).
+        std::mem::swap(&mut x_lam, &mut cand_lam);
+        std::mem::swap(&mut x_th, &mut cand_th);
         ev_x = ev_new;
         f_cur = f_new;
         // Gentle η growth so backtracking can recover.
@@ -233,8 +304,8 @@ pub fn solve(
         .map(|(n, s, c)| (n.to_string(), s, c))
         .collect();
     let mut model = CggmModel::init(p, q);
-    model.lambda = SpRowMat::from_dense(&x.lam, 0.0);
-    model.theta = SpRowMat::from_dense(&x.th, 0.0);
+    model.lambda = SpRowMat::from_dense(&x_lam, 0.0);
+    model.theta = SpRowMat::from_dense(&x_th, 0.0);
     Ok(SolveResult { model, trace })
 }
 
@@ -256,7 +327,8 @@ mod tests {
             tol: 0.01,
             ..Default::default()
         };
-        let fista = solve(&prob.data, &opts, &eng).unwrap();
+        let ctx = SolverContext::new(&prob.data, &opts, &eng);
+        let fista = solve(&ctx, &opts, None).unwrap();
         let alt = dispatch(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
         let (ff, fa) = (
             fista.trace.final_f().unwrap(),
@@ -285,7 +357,8 @@ mod tests {
             max_iter: 100,
             ..Default::default()
         };
-        let res = solve(&prob.data, &opts, &eng).unwrap();
+        let ctx = SolverContext::new(&prob.data, &opts, &eng);
+        let res = solve(&ctx, &opts, None).unwrap();
         // Final Λ factorizes.
         assert!(DenseChol::factor(&res.model.lambda.to_dense(), &eng).is_ok());
         assert!(res.trace.final_f().unwrap().is_finite());

@@ -1,0 +1,303 @@
+//! Budget-tracked workspace arena for the solvers' hot-loop buffers.
+//!
+//! Every solver iteration needs the same handful of dense scratch matrices
+//! (Σ, Ψ, gradients, the `U`/`V` caches, GEMM panels). Allocating them with
+//! `Mat::zeros` inside the loop has two costs the paper's speed story cannot
+//! afford: allocator traffic on the hot path, and — worse for the memwall
+//! experiment — memory the [`MemBudget`] never sees, so `peak()` under-reports
+//! the true working set of the non-block solvers.
+//!
+//! [`Workspace`] fixes both. Buffers are checked out by shape
+//! ([`Workspace::mat`] / [`Workspace::vec`]) and returned to a free pool when
+//! the RAII guard ([`WsMat`] / [`WsVec`]) drops. Checkouts are tracked against
+//! the budget for exactly as long as they are live, so
+//! `MemBudget::peak()` reports the true concurrent working set; idle pooled
+//! buffers are capacity held by the process but not part of the working set,
+//! and are not counted. A checkout that would exceed the budget fails with
+//! [`BudgetExceeded`] — the paper's "out of memory", now enforced uniformly
+//! for *all four* solvers instead of only the block solver's column caches.
+//!
+//! Reuse is capacity-based best-fit, bounded: a pooled buffer serves any
+//! shape whose element count fits within 2× of the request (so a small
+//! checkout never hogs — or hides — a much larger buffer; tracked bytes are
+//! the buffer's real capacity on reuse). After the first iteration a
+//! solver's loop runs with zero new allocations (observable via
+//! [`Workspace::misses`], which tests use to assert the arena does not grow
+//! across iterations).
+
+use crate::linalg::dense::Mat;
+use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
+use std::cell::{Cell, RefCell};
+use std::ops::{Deref, DerefMut};
+
+/// Pool of reusable `f64` buffers with budget accounting.
+///
+/// Not `Sync`: one workspace belongs to one solver invocation thread (the
+/// data-parallel helpers operate on disjoint slices *inside* checked-out
+/// buffers and never touch the pool).
+pub struct Workspace {
+    budget: MemBudget,
+    pool: RefCell<Vec<Vec<f64>>>,
+    /// Sum of pooled (idle) capacities, bounded by [`Self::idle_allowance`].
+    pooled_bytes: Cell<usize>,
+    hits: Cell<usize>,
+    misses: Cell<usize>,
+}
+
+/// Hard cap on pooled buffer count — the solvers hold ≲10 distinct
+/// concurrent buffers, so this never binds in practice; it backstops
+/// pathological size churn.
+const POOL_MAX_BUFFERS: usize = 32;
+
+impl Workspace {
+    pub fn new(budget: MemBudget) -> Workspace {
+        Workspace {
+            budget,
+            pool: RefCell::new(Vec::new()),
+            pooled_bytes: Cell::new(0),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+
+    /// Idle pooled capacity the arena may hold beyond live checkouts: a
+    /// quarter of the budget. Buffers returned past this allowance are
+    /// freed, so resident memory cannot creep arbitrarily past the limit
+    /// through size-churned pool entries.
+    fn idle_allowance(&self) -> usize {
+        self.budget.limit() / 4
+    }
+
+    pub fn budget(&self) -> &MemBudget {
+        &self.budget
+    }
+
+    /// Checkouts served from the pool (no allocation).
+    pub fn hits(&self) -> usize {
+        self.hits.get()
+    }
+
+    /// Checkouts that had to allocate a fresh buffer. Stable across solver
+    /// iterations once the working set is warm.
+    pub fn misses(&self) -> usize {
+        self.misses.get()
+    }
+
+    /// Buffers currently idle in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.borrow().len()
+    }
+
+    /// Check out a zeroed `rows × cols` matrix. Tracks `rows·cols·8` bytes
+    /// against the budget until the guard drops.
+    pub fn mat(&self, rows: usize, cols: usize) -> Result<WsMat<'_>, BudgetExceeded> {
+        let (buf, track) = self.take_buf(rows * cols)?;
+        Ok(WsMat {
+            ws: self,
+            mat: Some(Mat::from_rows(rows, cols, buf)),
+            _track: track,
+        })
+    }
+
+    /// Check out a zeroed length-`len` vector.
+    pub fn vec(&self, len: usize) -> Result<WsVec<'_>, BudgetExceeded> {
+        let (buf, track) = self.take_buf(len)?;
+        Ok(WsVec {
+            ws: self,
+            v: Some(buf),
+            _track: track,
+        })
+    }
+
+    fn take_buf(&self, need: usize) -> Result<(Vec<f64>, Tracked), BudgetExceeded> {
+        let f = std::mem::size_of::<f64>();
+        let mut pool = self.pool.borrow_mut();
+        // Best fit: the smallest pooled buffer whose capacity suffices, but
+        // never one more than twice the request — a small checkout must not
+        // hog (and hide) a much larger buffer, so tracked bytes stay within
+        // 2× of real resident capacity.
+        let mut best: Option<(usize, usize)> = None;
+        for (k, b) in pool.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= need && cap <= 2 * need.max(1) {
+                match best {
+                    Some((_, bc)) if bc <= cap => {}
+                    _ => best = Some((k, cap)),
+                }
+            }
+        }
+        if let Some((k, cap)) = best {
+            // Track the buffer's real capacity, not just the request. If the
+            // candidate's extra capacity no longer fits the remaining budget,
+            // fall through to an exact-size allocation instead of failing —
+            // a tight budget must reject the *request*, not the pool's shape.
+            if let Ok(track) = self.budget.track(cap * f) {
+                self.hits.set(self.hits.get() + 1);
+                let mut buf = pool.swap_remove(k);
+                self.pooled_bytes
+                    .set(self.pooled_bytes.get().saturating_sub(cap * f));
+                buf.clear();
+                buf.resize(need, 0.0);
+                return Ok((buf, track));
+            }
+        }
+        // Register before allocating so an over-budget checkout fails
+        // cleanly.
+        let track = self.budget.track(need * f)?;
+        self.misses.set(self.misses.get() + 1);
+        Ok((vec![0.0; need], track))
+    }
+
+    fn give_back(&self, buf: Vec<f64>) {
+        let bytes = buf.capacity() * std::mem::size_of::<f64>();
+        let mut pool = self.pool.borrow_mut();
+        if pool.len() >= POOL_MAX_BUFFERS
+            || self.pooled_bytes.get().saturating_add(bytes) > self.idle_allowance()
+        {
+            return; // free it: hoarding idle capacity past the allowance
+                    // would let resident memory creep beyond the budget
+        }
+        self.pooled_bytes.set(self.pooled_bytes.get() + bytes);
+        pool.push(buf);
+    }
+}
+
+/// RAII guard for a checked-out matrix; derefs to [`Mat`]. On drop the
+/// backing buffer returns to the pool and its bytes leave the budget.
+pub struct WsMat<'ws> {
+    ws: &'ws Workspace,
+    mat: Option<Mat>,
+    _track: Tracked,
+}
+
+impl Deref for WsMat<'_> {
+    type Target = Mat;
+    #[inline]
+    fn deref(&self) -> &Mat {
+        self.mat.as_ref().expect("live checkout")
+    }
+}
+
+impl DerefMut for WsMat<'_> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut Mat {
+        self.mat.as_mut().expect("live checkout")
+    }
+}
+
+impl Drop for WsMat<'_> {
+    fn drop(&mut self) {
+        if let Some(m) = self.mat.take() {
+            self.ws.give_back(m.into_data());
+        }
+    }
+}
+
+/// RAII guard for a checked-out vector; derefs to `[f64]`.
+pub struct WsVec<'ws> {
+    ws: &'ws Workspace,
+    v: Option<Vec<f64>>,
+    _track: Tracked,
+}
+
+impl Deref for WsVec<'_> {
+    type Target = Vec<f64>;
+    #[inline]
+    fn deref(&self) -> &Vec<f64> {
+        self.v.as_ref().expect("live checkout")
+    }
+}
+
+impl DerefMut for WsVec<'_> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut Vec<f64> {
+        self.v.as_mut().expect("live checkout")
+    }
+}
+
+impl Drop for WsVec<'_> {
+    fn drop(&mut self) {
+        if let Some(v) = self.v.take() {
+            self.ws.give_back(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_checkin_reuses_buffers() {
+        let ws = Workspace::new(MemBudget::unlimited());
+        for it in 0..5 {
+            let mut m = ws.mat(8, 8).unwrap();
+            assert_eq!((m.rows(), m.cols()), (8, 8));
+            // Always zeroed, even when the buffer is recycled.
+            assert!(m.data().iter().all(|&x| x == 0.0), "iteration {it}");
+            m[(3, 4)] = 1.5;
+        }
+        assert_eq!(ws.misses(), 1, "arena grew across iterations");
+        assert_eq!(ws.hits(), 4);
+        assert_eq!(ws.pooled(), 1);
+    }
+
+    #[test]
+    fn capacity_based_reuse_across_shapes() {
+        let budget = MemBudget::unlimited();
+        let ws = Workspace::new(budget.clone());
+        drop(ws.mat(4, 16).unwrap());
+        // Different shape, same element count: served from the pool, and the
+        // reused buffer's full capacity is what gets tracked.
+        let m = ws.mat(8, 8).unwrap();
+        assert_eq!(budget.live(), 64 * 8);
+        drop(m);
+        // A much smaller request must NOT hog the 64-element buffer
+        // (capacity > 2× request): it allocates its own.
+        drop(ws.mat(5, 5).unwrap());
+        assert_eq!(ws.misses(), 2);
+        assert_eq!(ws.hits(), 1);
+        // A near-fit request (36 ≤ 64 ≤ 72) reuses it.
+        drop(ws.mat(6, 6).unwrap());
+        assert_eq!(ws.hits(), 2);
+    }
+
+    #[test]
+    fn oversized_checkout_fails_budget() {
+        let budget = MemBudget::new(1000);
+        let ws = Workspace::new(budget.clone());
+        assert!(ws.mat(100, 100).is_err(), "80000 bytes must exceed 1000");
+        let m = ws.mat(10, 10).unwrap(); // 800 bytes
+        assert_eq!(budget.live(), 800);
+        // A second concurrent checkout would exceed the limit.
+        assert!(ws.vec(100).is_err());
+        drop(m);
+        assert_eq!(budget.live(), 0);
+        assert_eq!(budget.peak(), 800);
+        // After checkin the bytes are free again.
+        assert!(ws.vec(100).is_ok());
+    }
+
+    #[test]
+    fn concurrent_checkouts_all_counted() {
+        let budget = MemBudget::unlimited();
+        let ws = Workspace::new(budget.clone());
+        let a = ws.mat(4, 4).unwrap();
+        let b = ws.mat(3, 3).unwrap();
+        let c = ws.vec(10).unwrap();
+        assert_eq!(budget.live(), (16 + 9 + 10) * 8);
+        drop((a, b, c));
+        assert_eq!(budget.live(), 0);
+        assert_eq!(budget.peak(), (16 + 9 + 10) * 8);
+        assert_eq!(ws.pooled(), 3);
+    }
+
+    #[test]
+    fn vec_guard_derefs_mutably() {
+        let ws = Workspace::new(MemBudget::unlimited());
+        let mut v = ws.vec(5).unwrap();
+        v[2] = 7.0;
+        assert_eq!(v.len(), 5);
+        assert_eq!(v[2], 7.0);
+    }
+}

@@ -3,13 +3,16 @@
 //! objective vs the AOT-compiled L2 JAX objective through PJRT).
 
 use cggm::cggm::{CggmModel, CholKind, Dataset, Objective};
+use cggm::coordinator::{fit_path, fit_path_in_context, PathOptions};
 use cggm::datagen;
 use cggm::gemm::native::NativeGemm;
 use cggm::gemm::GemmEngine;
 use cggm::linalg::dense::Mat;
 use cggm::metrics::f1_edges_sym;
 use cggm::runtime::{artifact_dir, compile_artifact, manifest::Manifest};
-use cggm::solvers::{solve, SolveOptions, SolverKind};
+use cggm::solvers::{
+    dense_workingset_bytes, solve, solve_in_context, SolveOptions, SolverContext, SolverKind,
+};
 use cggm::util::membudget::MemBudget;
 use cggm::util::rng::Rng;
 
@@ -30,7 +33,7 @@ fn three_solvers_agree_on_chain() {
     let eng = NativeGemm::new(1);
     let opts = chain_opts(0.25);
     let mut finals = Vec::new();
-    for kind in SolverKind::all() {
+    for kind in SolverKind::paper_three() {
         let res = solve(kind, &prob.data, &opts, &eng).unwrap();
         assert!(res.trace.converged, "{:?} did not converge", kind);
         finals.push((kind, res.trace.final_f().unwrap(), res.model));
@@ -71,7 +74,7 @@ fn three_solvers_agree_on_cluster_graph() {
         ..Default::default()
     };
     let mut finals = Vec::new();
-    for kind in SolverKind::all() {
+    for kind in SolverKind::paper_three() {
         let res = solve(kind, &prob.data, &opts, &eng).unwrap();
         assert!(res.trace.converged, "{kind:?} did not converge");
         finals.push((kind, res.trace.final_f().unwrap()));
@@ -416,12 +419,109 @@ fn saved_dataset_reproduces_fit() {
 fn stopping_rule_holds_at_convergence() {
     let prob = datagen::chain::generate(25, 25, 120, 10);
     let eng = NativeGemm::new(1);
-    for kind in SolverKind::all() {
+    for kind in SolverKind::paper_three() {
         let res = solve(kind, &prob.data, &chain_opts(0.3), &eng).unwrap();
         assert!(res.trace.converged, "{kind:?}");
         let ratio = res.trace.stopping_ratio().unwrap();
         assert!(ratio <= 0.01 + 1e-12, "{kind:?}: ratio {ratio}");
     }
+}
+
+/// The workspace arena makes `MemBudget::peak()` report the true dense
+/// working set: for a small AltNewtonCD run it must agree with the analytic
+/// `dense_workingset_bytes` estimate within a tolerance (the estimate counts
+/// S_yy/Σ/Ψ/W + S_xx + Vᵀ; the measured set adds the gradients and the q×n
+/// R̃ᵀ panel, hence the slack).
+#[test]
+fn workspace_peak_matches_dense_estimate() {
+    let (p, q, n) = (30, 30, 30);
+    let prob = datagen::chain::generate(p, q, n, 7);
+    let eng = NativeGemm::new(1);
+    let budget = MemBudget::unlimited();
+    let opts = SolveOptions {
+        lam_l: 0.3,
+        lam_t: 0.3,
+        max_iter: 40,
+        budget: budget.clone(),
+        ..Default::default()
+    };
+    let res = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
+    assert!(res.trace.converged);
+    let est = dense_workingset_bytes(SolverKind::AltNewtonCd, p, q);
+    let peak = budget.peak();
+    assert!(
+        peak >= est / 2 && peak <= est.saturating_mul(5) / 2,
+        "measured peak {peak} bytes vs analytic estimate {est} bytes"
+    );
+}
+
+/// Satellite: on a 2-point λ path, the warm-started second solve converges
+/// in at most the cold-start iteration count and reaches the same objective
+/// within the stopping tolerance.
+#[test]
+fn warm_start_beats_cold_start_on_a_two_point_path() {
+    let prob = datagen::chain::generate(20, 20, 100, 11);
+    let eng = NativeGemm::new(1);
+    let base = SolveOptions {
+        max_iter: 100,
+        ..Default::default()
+    };
+    let grid = vec![(0.5, 0.5), (0.25, 0.25)];
+    let mk = |warm_start: bool| PathOptions {
+        lambdas: Some(grid.clone()),
+        warm_start,
+        ..Default::default()
+    };
+    let warm = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &mk(true), &eng).unwrap();
+    let cold = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &mk(false), &eng).unwrap();
+    assert_eq!(warm.points.len(), 2);
+    assert!(warm.points[1].converged && cold.points[1].converged);
+    assert!(
+        warm.points[1].iters <= cold.points[1].iters,
+        "warm {} iters vs cold {} iters",
+        warm.points[1].iters,
+        cold.points[1].iters
+    );
+    let (fw, fc) = (warm.points[1].f, cold.points[1].f);
+    assert!(
+        (fw - fc).abs() <= base.tol * fc.abs().max(1.0),
+        "objectives diverged: warm {fw} vs cold {fc}"
+    );
+    // The first point is identical either way (no warm start to apply yet).
+    assert_eq!(warm.points[0].iters, cold.points[0].iters);
+}
+
+/// A λ path on a shared context computes each covariance statistic exactly
+/// once, and the workspace arena does not grow after the first solve.
+#[test]
+fn lambda_path_reuses_context_state() {
+    let prob = datagen::chain::generate(16, 16, 80, 13);
+    let eng = NativeGemm::new(1);
+    let base = SolveOptions {
+        max_iter: 80,
+        ..Default::default()
+    };
+    let ctx = SolverContext::new(&prob.data, &base, &eng);
+    let popts = PathOptions {
+        points: 4,
+        min_ratio: 0.2,
+        ..Default::default()
+    };
+    let res = fit_path_in_context(SolverKind::AltNewtonCd, &ctx, &base, &popts).unwrap();
+    assert_eq!(res.points.len(), 4);
+    assert_eq!(
+        ctx.stat_computes(),
+        3,
+        "S_yy/S_xx/S_xy must be computed once for the whole path"
+    );
+    let misses_after_path = ctx.workspace().misses();
+    // Another solve on the same context allocates nothing new.
+    let _ = solve_in_context(SolverKind::AltNewtonCd, &ctx, &base, res.model.as_ref()).unwrap();
+    assert_eq!(
+        ctx.workspace().misses(),
+        misses_after_path,
+        "a further solve on a warm context must be allocation-free"
+    );
 }
 
 /// Genomic workload through the whole pipe (simulator → block solver).
