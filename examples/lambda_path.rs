@@ -36,11 +36,16 @@ fn main() {
         ..Default::default()
     };
 
+    // Both legs pin ScreenRule::Full so the printed savings isolate warm
+    // starts alone (the cold leg cannot screen, so leaving the default
+    // strong rule on would conflate the two effects; the screening win is
+    // bench_path's comparison).
     let warm_opts = PathOptions {
         points,
         min_ratio,
         lambdas: None,
         warm_start: true,
+        screen: cggm::cggm::active::ScreenRule::Full,
     };
     let cold_opts = PathOptions {
         warm_start: false,

@@ -1,9 +1,12 @@
-//! λ-path bench: quantifies what the warm-started path driver buys —
+//! λ-path bench: quantifies what the path driver buys —
 //! (a) total outer iterations saved by seeding each point with the previous
-//! solution, and (b) wall-clock for a full sweep, warm vs cold, on a shared
-//! `SolverContext` (covariance statistics computed once per path).
+//! solution (warm vs cold), (b) coordinates examined with strong-rule
+//! screening vs full re-screening at equal final objective, and (c)
+//! wall-clock for a full sweep, all on a shared `SolverContext` (covariance
+//! statistics computed once per path).
 
 use cggm::bench::{Bench, BenchSet};
+use cggm::cggm::active::ScreenRule;
 use cggm::coordinator::{fit_path, PathOptions};
 use cggm::datagen;
 use cggm::gemm::native::NativeGemm;
@@ -16,11 +19,16 @@ fn main() {
         max_iter: 120,
         ..Default::default()
     };
-    let warm_opts = PathOptions {
+    let screened_opts = PathOptions {
         points: 8,
         min_ratio: 0.05,
         lambdas: None,
         warm_start: true,
+        screen: ScreenRule::Strong,
+    };
+    let warm_opts = PathOptions {
+        screen: ScreenRule::Full,
+        ..screened_opts.clone()
     };
     let cold_opts = PathOptions {
         warm_start: false,
@@ -45,9 +53,67 @@ fn main() {
         );
     }
 
+    // Screening comparison (the strong-rule savings headline): same grid,
+    // same warm starts, coordinates examined with and without the rule. The
+    // final objectives must agree to ~solver precision — screening is an
+    // optimization, not an approximation.
+    let screened = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &screened_opts,
+        &eng,
+    )
+    .unwrap();
+    let (cs, cu) = (
+        screened.total_coord_updates(),
+        warm.total_coord_updates(),
+    );
+    let (fs, fu) = (
+        screened.points.last().unwrap().f,
+        warm.points.last().unwrap().f,
+    );
+    println!(
+        "# screening: strong {} coord updates (+{} KKT-scan coords) vs \
+         full {} ({:.2}x fewer updates), {} fallbacks, |Δf| = {:.2e}",
+        cs,
+        screened.total_kkt_scans(),
+        cu,
+        cu as f64 / cs.max(1) as f64,
+        screened.screen_fallbacks,
+        (fs - fu).abs(),
+    );
+    for (s, w) in screened.points.iter().zip(&warm.points) {
+        println!(
+            "#   λ={:<8.4} strong {:>9} (+{:>7} kkt) vs full {:>9}{}",
+            s.lam_l,
+            s.coord_updates,
+            s.kkt_scans,
+            w.coord_updates,
+            if s.fallback { "  [fallback]" } else { "" }
+        );
+    }
+    assert!(
+        (fs - fu).abs() <= 1e-6 * fu.abs().max(1.0),
+        "screened and unscreened paths disagree: {fs} vs {fu}"
+    );
+    assert!(
+        2 * cs <= cu,
+        "acceptance: screened must do >= 2x fewer coordinate updates \
+         (strong {cs} vs full {cu})"
+    );
+
     let mut set = BenchSet::new("path");
     for kind in [SolverKind::AltNewtonCd, SolverKind::NewtonCd] {
-        for (tag, popts) in [("warm", &warm_opts), ("cold", &cold_opts)] {
+        for (tag, popts) in [
+            ("strong", &screened_opts),
+            ("warm", &warm_opts),
+            ("cold", &cold_opts),
+        ] {
+            if tag == "strong" && !kind.supports_screen() {
+                continue; // screening is inert for this solver — the "warm"
+                          // leg already measures the identical run
+            }
             set.push(
                 Bench::new(format!("path/chain150/{}/{tag}", kind.name()))
                     .warmup(1)

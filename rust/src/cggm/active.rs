@@ -13,10 +13,224 @@
 //! These helpers take *dense* gradients (non-block solvers). The block
 //! solver screens blockwise during its sweeps (see `solvers::alt_newton_bcd`)
 //! and shares [`ActiveStats`] so the stopping rule comes free.
+//!
+//! # Path-level screening (sequential strong rule)
+//!
+//! Along a decreasing λ path the active set changes slowly, so re-screening
+//! all q²/pq coordinates at every point (and every outer iteration) is
+//! wasted work. The sequential strong rule (Tibshirani et al., in the spirit
+//! of the safe-bound analyses of Banerjee et al.) keeps, at path point λ_k,
+//! only the coordinates
+//!
+//! ```text
+//! E = supp(x̂(λ_{k-1})) ∪ {(i,j) : |∇g(x̂(λ_{k-1}))_ij| > 2λ_k − λ_{k-1}}
+//! ```
+//!
+//! and restricts *all* screening and CD work to E ([`ScreenSet`]). The rule
+//! is a heuristic, so after the restricted solve a KKT post-check
+//! ([`kkt_violations`]) scans the discarded coordinates once; any violation
+//! sends the path driver back to an unrestricted solve (warm-started from
+//! the restricted solution, so the fallback is cheap). See
+//! `coordinator::solve_screened`.
 
+use super::model::CggmModel;
 use super::objective::min_norm_subgrad;
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpRowMat;
+
+/// How the λ-path driver screens coordinates across path points.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScreenRule {
+    /// Re-screen every coordinate at every point (the pre-screening driver).
+    Full,
+    /// Sequential strong rule with KKT post-check (default).
+    #[default]
+    Strong,
+}
+
+impl ScreenRule {
+    pub fn parse(s: &str) -> Option<ScreenRule> {
+        match s {
+            "full" | "none" | "off" => Some(ScreenRule::Full),
+            "strong" | "seq" | "sequential" => Some(ScreenRule::Strong),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScreenRule::Full => "full",
+            ScreenRule::Strong => "strong",
+        }
+    }
+}
+
+/// Candidate coordinates a restricted solve is allowed to touch: Λ pairs in
+/// the upper triangle (i ≤ j) and Θ pairs, both row-major sorted. Built once
+/// per path point from the previous point's solution and gradients.
+#[derive(Clone, Debug, Default)]
+pub struct ScreenSet {
+    /// Allowed Λ coordinates, i ≤ j, always including the diagonal.
+    pub lambda: Vec<(usize, usize)>,
+    /// Allowed Θ coordinates.
+    pub theta: Vec<(usize, usize)>,
+}
+
+impl ScreenSet {
+    /// Sequential strong rule at (λ_Λ, λ_Θ) given the gradients `gl`/`gt`
+    /// and support of the *previous* path point's solution at
+    /// (λ_Λ', λ_Θ') = (`prev_l`, `prev_t`). An aggressive λ drop makes the
+    /// threshold `2λ − λ'` negative, in which case every coordinate passes
+    /// — the rule degrades gracefully to a full screen.
+    pub fn strong(
+        gl: &Mat,
+        gt: &Mat,
+        model: &CggmModel,
+        lam_l: f64,
+        lam_t: f64,
+        prev_l: f64,
+        prev_t: f64,
+    ) -> ScreenSet {
+        let q = gl.rows();
+        let p = gt.rows();
+        debug_assert_eq!(gt.cols(), q);
+        let thr_l = 2.0 * lam_l - prev_l;
+        let thr_t = 2.0 * lam_t - prev_t;
+        let mut lambda = Vec::new();
+        for i in 0..q {
+            let grow = gl.row(i);
+            for j in i..q {
+                if i == j || model.lambda.get(i, j) != 0.0 || grow[j].abs() > thr_l {
+                    lambda.push((i, j));
+                }
+            }
+        }
+        let mut theta = Vec::new();
+        for i in 0..p {
+            let grow = gt.row(i);
+            // Merge the sparse support row with the dense gradient row.
+            let srow = model.theta.row(i);
+            let mut s_iter = srow.iter().peekable();
+            for j in 0..q {
+                let supported = match s_iter.peek() {
+                    Some(&&(jj, v)) if jj == j => {
+                        s_iter.next();
+                        v != 0.0
+                    }
+                    _ => false,
+                };
+                if supported || grow[j].abs() > thr_t {
+                    theta.push((i, j));
+                }
+            }
+        }
+        ScreenSet { lambda, theta }
+    }
+
+    /// Total allowed coordinates (the per-iteration screening cost of a
+    /// restricted solve).
+    pub fn len(&self) -> usize {
+        self.lambda.len() + self.theta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lambda.is_empty() && self.theta.is_empty()
+    }
+
+    /// The set extended with any of `model`'s support coordinates it is
+    /// missing, or `None` when it already covers the support (the common
+    /// case — [`ScreenSet::strong`] includes the support by construction).
+    /// A restricted solve can only move coordinates it screens, so a warm
+    /// start whose support pokes outside the set would otherwise be frozen
+    /// at stale values — and exempted from the KKT post-check, which only
+    /// examines zero coordinates ([`crate::coordinator::solve_screened`]
+    /// calls this to keep its safety guarantee for arbitrary caller sets).
+    pub fn with_support(&self, model: &CggmModel) -> Option<ScreenSet> {
+        let (p, q) = (model.p(), model.q());
+        let (ml, mt) = self.masks(p, q);
+        let mut extra_l = Vec::new();
+        for i in 0..q {
+            // Symmetric Λ: every unordered pair has its (i, j ≥ i)
+            // representative in row i.
+            for &(j, v) in model.lambda.row(i) {
+                if j >= i && v != 0.0 && !ml[i * q + j] {
+                    extra_l.push((i, j));
+                }
+            }
+        }
+        let mut extra_t = Vec::new();
+        for i in 0..p {
+            for &(j, v) in model.theta.row(i) {
+                if v != 0.0 && !mt[i * q + j] {
+                    extra_t.push((i, j));
+                }
+            }
+        }
+        if extra_l.is_empty() && extra_t.is_empty() {
+            return None;
+        }
+        let mut out = self.clone();
+        out.lambda.extend(extra_l);
+        out.theta.extend(extra_t);
+        Some(out)
+    }
+
+    /// Dense membership masks (row-major q×q upper-tri for Λ, p×q for Θ) for
+    /// the KKT post-check's O(1) lookups.
+    fn masks(&self, p: usize, q: usize) -> (Vec<bool>, Vec<bool>) {
+        let mut ml = vec![false; q * q];
+        for &(i, j) in &self.lambda {
+            ml[i * q + j] = true;
+        }
+        let mut mt = vec![false; p * q];
+        for &(i, j) in &self.theta {
+            mt[i * q + j] = true;
+        }
+        (ml, mt)
+    }
+}
+
+/// KKT post-check for a restricted solve: count coordinates *outside* the
+/// screen set whose gradient violates optimality — |g| > λ·(1 + `rel_slack`)
+/// for a zero coordinate. Coordinates inside the set are covered by the
+/// solver's own stopping rule, and the restricted solve can never grow
+/// support outside the set. `rel_slack` is the tolerance scale below which
+/// a "violation" is indistinguishable from converged noise (the path driver
+/// passes the solver's stopping tolerance); anything larger forces the
+/// full-screen fallback.
+pub fn kkt_violations(
+    gl: &Mat,
+    gt: &Mat,
+    model: &CggmModel,
+    lam_l: f64,
+    lam_t: f64,
+    set: &ScreenSet,
+    rel_slack: f64,
+) -> usize {
+    let q = gl.rows();
+    let p = gt.rows();
+    let (ml, mt) = set.masks(p, q);
+    let thr_l = lam_l * (1.0 + rel_slack);
+    let thr_t = lam_t * (1.0 + rel_slack);
+    let mut viol = 0usize;
+    for i in 0..q {
+        let grow = gl.row(i);
+        for j in i..q {
+            if !ml[i * q + j] && model.lambda.get(i, j) == 0.0 && grow[j].abs() > thr_l {
+                viol += 1;
+            }
+        }
+    }
+    for i in 0..p {
+        let grow = gt.row(i);
+        for j in 0..q {
+            if !mt[i * q + j] && model.theta.get(i, j) == 0.0 && grow[j].abs() > thr_t {
+                viol += 1;
+            }
+        }
+    }
+    viol
+}
 
 /// Output of a screen: the active coordinate list plus the convergence
 /// statistics that fall out of the same pass.
@@ -89,6 +303,58 @@ pub fn theta_active_dense(
     (act, stats)
 }
 
+/// Λ screen restricted to an allowed coordinate list (path-level strong-rule
+/// screening): identical decision rule to [`lambda_active_dense`], but only
+/// `allowed` pairs (i ≤ j) are examined — O(|allowed|) instead of O(q²).
+/// Coordinates outside `allowed` are presumed zero with |g| ≤ λ (the strong
+/// rule's bet), so their subgradient contribution is 0; the KKT post-check
+/// validates the bet after the solve.
+pub fn lambda_active_within(
+    grad: &Mat,
+    lambda: &SpRowMat,
+    lam_l: f64,
+    allowed: &[(usize, usize)],
+) -> (Vec<(usize, usize)>, ActiveStats) {
+    let mut act = Vec::new();
+    let mut stats = ActiveStats::default();
+    for &(i, j) in allowed {
+        let g = grad[(i, j)];
+        let x = lambda.get(i, j);
+        let s = min_norm_subgrad(g, x, lam_l);
+        stats.subgrad_l1 += if i == j { s.abs() } else { 2.0 * s.abs() };
+        if x != 0.0 || g.abs() > lam_l {
+            act.push((i, j));
+        }
+    }
+    stats.count = act.len();
+    (act, stats)
+}
+
+/// Θ screen restricted to an allowed coordinate list. Takes the gradient as
+/// a per-coordinate closure so callers can evaluate only the |allowed|
+/// entries (O(n) each from the shared `Σ·R̃ᵀ` panel) instead of forming the
+/// dense p×q gradient — the screened path's hot-path win: the O(npq) GEMM
+/// is skipped entirely.
+pub fn theta_active_within(
+    grad: impl Fn(usize, usize) -> f64,
+    theta: &SpRowMat,
+    lam_t: f64,
+    allowed: &[(usize, usize)],
+) -> (Vec<(usize, usize)>, ActiveStats) {
+    let mut act = Vec::new();
+    let mut stats = ActiveStats::default();
+    for &(i, j) in allowed {
+        let g = grad(i, j);
+        let x = theta.get(i, j);
+        stats.subgrad_l1 += min_norm_subgrad(g, x, lam_t).abs();
+        if x != 0.0 || g.abs() > lam_t {
+            act.push((i, j));
+        }
+    }
+    stats.count = act.len();
+    (act, stats)
+}
+
 /// Active Λ pairs grouped by (block_z, block_r) for the block solver:
 /// entry (i,j), i≤j goes to the (part[i], part[j]) bucket (unordered pair).
 pub fn group_pairs_by_block(
@@ -144,6 +410,121 @@ mod tests {
         let (act, stats) = theta_active_dense(&grad, &th, 0.5);
         assert!(act.is_empty());
         assert_eq!(stats.subgrad_l1, 0.0);
+    }
+
+    #[test]
+    fn restricted_screens_match_dense_on_full_universe() {
+        // With `allowed` = every coordinate, the restricted screens must
+        // reproduce the dense screens exactly (active lists and stats).
+        let (p, q) = (3, 4);
+        let mut rng = crate::util::rng::Rng::new(17);
+        let gl = Mat::from_fn(q, q, |_, _| rng.normal());
+        let gt = Mat::from_fn(p, q, |_, _| rng.normal());
+        let mut lam = SpRowMat::eye(q);
+        lam.set_sym(0, 2, 0.4);
+        let mut th = SpRowMat::zeros(p, q);
+        th.set(1, 3, -0.2);
+        let all_l: Vec<(usize, usize)> =
+            (0..q).flat_map(|i| (i..q).map(move |j| (i, j))).collect();
+        let all_t: Vec<(usize, usize)> =
+            (0..p).flat_map(|i| (0..q).map(move |j| (i, j))).collect();
+        let (da, ds) = lambda_active_dense(&gl, &lam, 0.5);
+        let (ra, rs) = lambda_active_within(&gl, &lam, 0.5, &all_l);
+        assert_eq!(da, ra);
+        assert!((ds.subgrad_l1 - rs.subgrad_l1).abs() < 1e-12);
+        let (da, ds) = theta_active_dense(&gt, &th, 0.5);
+        let (ra, rs) = theta_active_within(|i, j| gt[(i, j)], &th, 0.5, &all_t);
+        assert_eq!(da, ra);
+        assert!((ds.subgrad_l1 - rs.subgrad_l1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strong_rule_keeps_support_and_large_gradients() {
+        let q = 4;
+        let p = 3;
+        let mut gl = Mat::zeros(q, q);
+        gl[(0, 1)] = 0.9; // above thr 0.6 → kept
+        gl[(1, 2)] = 0.3; // below thr → dropped unless supported
+        let mut gt = Mat::zeros(p, q);
+        gt[(2, 0)] = 0.7;
+        let mut model = CggmModel::init(p, q);
+        model.lambda.set_sym(1, 2, 0.5); // supported → kept regardless
+        model.theta.set(0, 3, -0.1);
+        // λ_k = 0.4, λ_{k−1} = 0.2 → thr = 2·0.4 − 0.2 = 0.6.
+        let set = ScreenSet::strong(&gl, &gt, &model, 0.4, 0.4, 0.2, 0.2);
+        assert!(set.lambda.contains(&(0, 1)));
+        assert!(set.lambda.contains(&(1, 2)));
+        for i in 0..q {
+            assert!(set.lambda.contains(&(i, i)), "diag ({i},{i}) must be kept");
+        }
+        assert!(!set.lambda.contains(&(0, 2)), "zero-gradient pair dropped");
+        assert!(set.theta.contains(&(2, 0)));
+        assert!(set.theta.contains(&(0, 3)));
+        assert_eq!(set.theta.len(), 2);
+        assert_eq!(set.len(), set.lambda.len() + set.theta.len());
+        // An aggressive λ drop (2λ_k < λ_{k−1}) sends the threshold
+        // negative and the rule keeps everything.
+        let wide = ScreenSet::strong(&gl, &gt, &model, 0.1, 0.1, 0.9, 0.9);
+        assert_eq!(wide.lambda.len(), q * (q + 1) / 2);
+        assert_eq!(wide.theta.len(), p * q);
+    }
+
+    #[test]
+    fn with_support_merges_only_missing_coordinates() {
+        let (p, q) = (2, 3);
+        let mut model = CggmModel::init(p, q);
+        model.lambda.set_sym(0, 2, 0.4);
+        model.theta.set(1, 1, -0.3);
+        let covering = ScreenSet {
+            lambda: vec![(0, 0), (0, 2), (1, 1), (2, 2)],
+            theta: vec![(1, 1)],
+        };
+        assert!(
+            covering.with_support(&model).is_none(),
+            "a covering set needs no merge"
+        );
+        // Drop (0,2) and the Θ entry: both must come back, nothing else.
+        let partial = ScreenSet {
+            lambda: vec![(0, 0), (1, 1), (2, 2)],
+            theta: vec![],
+        };
+        let merged = partial.with_support(&model).expect("support was missing");
+        assert!(merged.lambda.contains(&(0, 2)));
+        assert_eq!(merged.lambda.len(), 4);
+        assert_eq!(merged.theta, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn kkt_check_flags_dropped_violators_only() {
+        let (p, q) = (2, 3);
+        let mut gl = Mat::zeros(q, q);
+        gl[(0, 1)] = 0.8; // violates λ=0.5 if outside the set
+        let mut gt = Mat::zeros(p, q);
+        gt[(1, 2)] = -0.9;
+        let model = CggmModel::init(p, q);
+        // Set containing both hot coordinates → no violations.
+        let full = ScreenSet {
+            lambda: vec![(0, 0), (0, 1), (1, 1), (2, 2)],
+            theta: vec![(1, 2)],
+        };
+        assert_eq!(kkt_violations(&gl, &gt, &model, 0.5, 0.5, &full, 1e-9), 0);
+        // Dropping them must be detected — one violation each.
+        let bad = ScreenSet {
+            lambda: vec![(0, 0), (1, 1), (2, 2)],
+            theta: vec![],
+        };
+        assert_eq!(kkt_violations(&gl, &gt, &model, 0.5, 0.5, &bad, 1e-9), 2);
+        // Larger λ silences them again (gradient within the λ tube).
+        assert_eq!(kkt_violations(&gl, &gt, &model, 1.0, 1.0, &bad, 1e-9), 0);
+    }
+
+    #[test]
+    fn screen_rule_parse_roundtrip() {
+        assert_eq!(ScreenRule::parse("full"), Some(ScreenRule::Full));
+        assert_eq!(ScreenRule::parse("strong"), Some(ScreenRule::Strong));
+        assert_eq!(ScreenRule::parse("bogus"), None);
+        assert_eq!(ScreenRule::default(), ScreenRule::Strong);
+        assert_eq!(ScreenRule::Strong.name(), "strong");
     }
 
     #[test]

@@ -125,6 +125,20 @@ impl Dataset {
         }
     }
 
+    /// Copy out the sample columns in `idx` (order preserved, duplicates
+    /// allowed) — the K-fold splitter of [`crate::coordinator::cross_validate`].
+    /// O((p+q)·|idx|); feature-major layout means each sample is a strided
+    /// column gather.
+    pub fn select_samples(&self, idx: &[usize]) -> Dataset {
+        let m = idx.len();
+        for &s in idx {
+            assert!(s < self.n(), "sample index {s} out of range (n={})", self.n());
+        }
+        let xt = Mat::from_fn(self.p(), m, |i, k| self.xt[(i, idx[k])]);
+        let yt = Mat::from_fn(self.q(), m, |j, k| self.yt[(j, idx[k])]);
+        Dataset::new(xt, yt)
+    }
+
     pub fn bytes(&self) -> usize {
         self.xt.bytes() + self.yt.bytes()
     }
@@ -180,6 +194,29 @@ mod tests {
         for (k, &c) in cols.iter().enumerate() {
             assert!((out[k] - d.sxx(4, c)).abs() < 1e-14);
         }
+    }
+
+    #[test]
+    fn select_samples_gathers_columns() {
+        let mut rng = Rng::new(9);
+        let d = random_dataset(&mut rng, 6, 4, 3);
+        let sub = d.select_samples(&[5, 0, 2]);
+        assert_eq!((sub.p(), sub.q(), sub.n()), (4, 3, 3));
+        for i in 0..4 {
+            assert_eq!(sub.xt[(i, 0)], d.xt[(i, 5)]);
+            assert_eq!(sub.xt[(i, 1)], d.xt[(i, 0)]);
+            assert_eq!(sub.xt[(i, 2)], d.xt[(i, 2)]);
+        }
+        for j in 0..3 {
+            assert_eq!(sub.yt[(j, 0)], d.yt[(j, 5)]);
+        }
+        // Complementary splits partition the covariance mass:
+        // n·S_full = n₁·S₁ + n₂·S₂ entrywise.
+        let a = d.select_samples(&[0, 1, 2]);
+        let b = d.select_samples(&[3, 4, 5]);
+        let full = d.syy(1, 2) * d.n() as f64;
+        let split = a.syy(1, 2) * a.n() as f64 + b.syy(1, 2) * b.n() as f64;
+        assert!((full - split).abs() < 1e-10);
     }
 
     #[test]

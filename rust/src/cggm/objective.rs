@@ -153,6 +153,25 @@ impl<'a> Objective<'a> {
         engine.gemm_nt(2.0 * d.inv_n(), &d.xt, sr, 1.0, gt);
     }
 
+    /// Single ∇_Λ entry from the dense pieces the CD loop already holds:
+    /// `(∇_Λ g)_ij = (S_yy)_ij − Σ_ij − Ψ_ij`. The screening path's
+    /// per-coordinate form of [`Self::grad_lambda_dense`].
+    #[inline]
+    pub fn grad_lambda_entry(syy: &Mat, sigma: &Mat, psi: &Mat, i: usize, j: usize) -> f64 {
+        syy[(i, j)] - sigma[(i, j)] - psi[(i, j)]
+    }
+
+    /// Single ∇_Θ entry from the shared `sr = Σ·R̃ᵀ` panel:
+    /// `(∇_Θ g)_ij = 2(S_xy)_ij + 2Γ_ij`, `Γ_ij = x_iᵀ(XΘΣ)_j / n =
+    /// ⟨xt_i, sr_j⟩ / n` — O(n) per coordinate, so restricted screens touch
+    /// only their allowed entries instead of paying the dense O(npq) GEMM
+    /// of [`Self::grad_theta_dense`].
+    #[inline]
+    pub fn grad_theta_entry(&self, sxy: &Mat, sr: &Mat, i: usize, j: usize) -> f64 {
+        2.0 * sxy[(i, j)]
+            + 2.0 * self.data.inv_n() * crate::linalg::dense::dot(self.data.xt.row(i), sr.row(j))
+    }
+
     /// Ψ = ΣΘᵀS_xxΘΣ computed as Gram of rows of `sr = Σ·rt` divided by n.
     pub fn psi_dense(&self, sigma: &Mat, rt: &Mat, engine: &dyn GemmEngine) -> Mat {
         let d = self.data;
@@ -176,6 +195,28 @@ impl<'a> Objective<'a> {
         engine.gemm_nt(self.data.inv_n(), sr, sr, 0.0, psi);
         psi.symmetrize();
     }
+}
+
+/// Average held-out negative log-likelihood of a fitted CGGM on `data`:
+/// the conditional density is y|x ~ N(−Λ⁻¹Θᵀx, Λ⁻¹), whose per-sample NLL
+/// averages to
+///
+/// ```text
+/// NLL = ½ [ g(Λ,Θ; S_test) + q·log 2π ]
+/// ```
+///
+/// — the *smooth* objective evaluated with the held-out covariance
+/// statistics (no penalty term). This is the model-selection score of
+/// [`crate::coordinator::cross_validate`]: lower is better, and unlike the
+/// penalized objective it is comparable across λ values.
+pub fn heldout_nll(
+    model: &CggmModel,
+    data: &Dataset,
+    engine: &dyn GemmEngine,
+) -> Result<f64, FactorError> {
+    let obj = Objective::new(data, 0.0, 0.0);
+    let (g, _, _, _) = obj.eval(model, engine)?;
+    Ok(0.5 * (g + data.q() as f64 * (2.0 * std::f64::consts::PI).ln()))
 }
 
 /// Minimum-norm subgradient contribution of one coordinate (paper §5 stopping
@@ -323,6 +364,101 @@ mod tests {
                 }
             }
             Ok(())
+        });
+    }
+
+    /// The per-coordinate gradient entries used by path-level screening
+    /// ([`Objective::grad_lambda_entry`] / [`Objective::grad_theta_entry`])
+    /// must match (a) the dense gradients and (b) central finite differences
+    /// of the smooth objective — the directional derivative along one
+    /// coordinate — over random small problems.
+    #[test]
+    fn grad_entries_match_dense_and_finite_differences() {
+        property(10, |rng| {
+            let (n, p, q) = (5 + rng.below(4), 2 + rng.below(3), 2 + rng.below(3));
+            let (data, model) = small_problem(rng, n, p, q);
+            let eng = NativeGemm::new(1);
+            let obj = Objective::new(&data, 0.0, 0.0);
+            let (_, _, factor, rt) = obj.eval(&model, &eng).map_err(|e| e.to_string())?;
+            let sigma = factor.inverse_dense(&eng);
+            let syy = data.syy_dense(&eng);
+            let sxy = data.sxy_dense(&eng);
+            let mut sr = Mat::zeros(q, n);
+            let mut psi = Mat::zeros(q, q);
+            obj.psi_into(&sigma, &rt, &eng, &mut sr, &mut psi);
+            let gl = obj.grad_lambda_dense(&sigma, &psi, &eng);
+            let gt = obj.grad_theta_dense(&sigma, &rt, &eng);
+            let h = 1e-6;
+            for i in 0..q {
+                for j in i..q {
+                    let e = Objective::grad_lambda_entry(&syy, &sigma, &psi, i, j);
+                    check_close(e, gl[(i, j)], 1e-12, &format!("Λ entry vs dense [{i},{j}]"))?;
+                    // Directional derivative along the symmetric pair.
+                    let mut mp = model.clone();
+                    mp.lambda.add_sym(i, j, h);
+                    let mut mm = model.clone();
+                    mm.lambda.add_sym(i, j, -h);
+                    let fp = obj.value(&mp, &eng).map_err(|e| e.to_string())?;
+                    let fm = obj.value(&mm, &eng).map_err(|e| e.to_string())?;
+                    let fd = (fp - fm) / (2.0 * h);
+                    let want = if i == j { e } else { 2.0 * e };
+                    check_close(fd, want, 2e-4, &format!("Λ entry FD [{i},{j}]"))?;
+                }
+            }
+            for i in 0..p {
+                for j in 0..q {
+                    let e = obj.grad_theta_entry(&sxy, &sr, i, j);
+                    check_close(e, gt[(i, j)], 1e-10, &format!("Θ entry vs dense [{i},{j}]"))?;
+                    let mut mp = model.clone();
+                    mp.theta.add(i, j, h);
+                    let mut mm = model.clone();
+                    mm.theta.add(i, j, -h);
+                    let fp = obj.value(&mp, &eng).map_err(|e| e.to_string())?;
+                    let fm = obj.value(&mm, &eng).map_err(|e| e.to_string())?;
+                    let fd = (fp - fm) / (2.0 * h);
+                    check_close(fd, e, 2e-4, &format!("Θ entry FD [{i},{j}]"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn heldout_nll_matches_direct_density_evaluation() {
+        // NLL from the smooth objective must equal the per-sample Gaussian
+        // density −log N(y; −Λ⁻¹Θᵀx, Λ⁻¹) averaged directly.
+        property(10, |rng| {
+            let (n, p, q) = (4 + rng.below(5), 2 + rng.below(3), 2 + rng.below(3));
+            let (data, model) = small_problem(rng, n, p, q);
+            let eng = NativeGemm::new(1);
+            let lam_d = model.lambda.to_dense();
+            let th_d = model.theta.to_dense();
+            let chol = crate::linalg::chol_dense::DenseChol::factor(&lam_d, &eng)
+                .map_err(|e| e.to_string())?;
+            let sigma = chol.inverse(&eng);
+            let mut total = 0.0;
+            for s in 0..n {
+                // residual r = y + Λ⁻¹Θᵀx; NLL_s = ½(q log 2π − log|Λ| + rᵀΛr)
+                let x: Vec<f64> = (0..p).map(|i| data.xt[(i, s)]).collect();
+                let tx: Vec<f64> = (0..q)
+                    .map(|j| (0..p).map(|i| th_d[(i, j)] * x[i]).sum::<f64>())
+                    .collect();
+                let mu: Vec<f64> = (0..q)
+                    .map(|j| -(0..q).map(|k| sigma[(j, k)] * tx[k]).sum::<f64>())
+                    .collect();
+                let r: Vec<f64> = (0..q).map(|j| data.yt[(j, s)] - mu[j]).collect();
+                let mut quad = 0.0;
+                for a in 0..q {
+                    for b in 0..q {
+                        quad += r[a] * lam_d[(a, b)] * r[b];
+                    }
+                }
+                total += 0.5
+                    * (q as f64 * (2.0 * std::f64::consts::PI).ln() - chol.logdet() + quad);
+            }
+            let want = total / n as f64;
+            let got = heldout_nll(&model, &data, &eng).map_err(|e| e.to_string())?;
+            check_close(got, want, 1e-9, "held-out NLL")
         });
     }
 

@@ -4,6 +4,7 @@
 //! whose keys mirror the CLI flags; unknown keys are rejected so typos fail
 //! loudly.
 
+use crate::cggm::active::ScreenRule;
 use crate::cggm::factor::CholKind;
 use crate::datagen::Workload;
 use crate::solvers::{SolveOptions, SolverKind};
@@ -36,6 +37,12 @@ pub struct RunConfig {
     pub path_points: usize,
     /// λ-path sweep: λ_min as a fraction of λ_max.
     pub path_min_ratio: f64,
+    /// Path-level screening rule (`cggm path` / `cggm cv`).
+    pub screen_rule: ScreenRule,
+    /// Cross-validation folds (`cggm cv`).
+    pub cv_folds: usize,
+    /// Worker threads across CV folds (`cggm cv`).
+    pub cv_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -61,6 +68,9 @@ impl Default for RunConfig {
             out_dir: "results".into(),
             path_points: 10,
             path_min_ratio: 0.1,
+            screen_rule: ScreenRule::Strong,
+            cv_folds: 5,
+            cv_threads: 1,
         }
     }
 }
@@ -145,6 +155,15 @@ impl RunConfig {
             "path_min_ratio" => {
                 self.path_min_ratio = val.as_f64().ok_or_else(|| bad("expected number"))?
             }
+            "screen_rule" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string"))?;
+                self.screen_rule =
+                    ScreenRule::parse(s).ok_or_else(|| bad("expected 'full' or 'strong'"))?;
+            }
+            "cv_folds" => self.cv_folds = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "cv_threads" => {
+                self.cv_threads = val.as_usize().ok_or_else(|| bad("expected int"))?
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -187,15 +206,32 @@ impl RunConfig {
         self.out_dir = args.get_str("out", &self.out_dir);
         self.path_points = args.get_usize("path-points", self.path_points);
         self.path_min_ratio = args.get_f64("path-min-ratio", self.path_min_ratio);
+        if let Some(s) = args.opt("screen") {
+            self.screen_rule =
+                ScreenRule::parse(s).expect("--screen expects 'full' or 'strong'");
+        }
+        self.cv_folds = args.get_usize("folds", self.cv_folds);
+        self.cv_threads = args.get_usize("cv-threads", self.cv_threads);
     }
 
-    /// λ-path options derived from this config (`cggm path`).
+    /// λ-path options derived from this config (`cggm path` / `cggm cv`).
     pub fn path_options(&self, warm_start: bool) -> crate::coordinator::PathOptions {
         crate::coordinator::PathOptions {
             points: self.path_points,
             min_ratio: self.path_min_ratio,
             lambdas: None,
             warm_start,
+            screen: self.screen_rule,
+        }
+    }
+
+    /// Cross-validation options derived from this config (`cggm cv`).
+    pub fn cv_options(&self) -> crate::coordinator::CvOptions {
+        crate::coordinator::CvOptions {
+            folds: self.cv_folds,
+            seed: self.seed,
+            fold_threads: self.cv_threads,
+            refit: true,
         }
     }
 
@@ -271,6 +307,41 @@ mod tests {
         assert_eq!(popts.points, 8);
         assert_eq!(popts.min_ratio, 0.05);
         assert!(popts.warm_start);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn cv_and_screen_keys_layer_like_the_rest() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_cv.json");
+        std::fs::write(
+            &tmp,
+            r#"{"cv_folds": 7, "cv_threads": 2, "screen_rule": "full"}"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.cv_folds, 7);
+        assert_eq!(cfg.cv_threads, 2);
+        assert_eq!(cfg.screen_rule, ScreenRule::Full);
+        let args = Args::parse(
+            &[
+                "--folds".into(),
+                "3".into(),
+                "--screen".into(),
+                "strong".into(),
+            ],
+            &[],
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.cv_folds, 3);
+        assert_eq!(cfg.screen_rule, ScreenRule::Strong);
+        let cvo = cfg.cv_options();
+        assert_eq!(cvo.folds, 3);
+        assert_eq!(cvo.fold_threads, 2);
+        assert!(cvo.refit);
+        assert_eq!(cfg.path_options(true).screen, ScreenRule::Strong);
+        // A bad rule fails loudly.
+        std::fs::write(&tmp, r#"{"screen_rule": "sorta"}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
         let _ = std::fs::remove_file(tmp);
     }
 

@@ -1,0 +1,430 @@
+//! K-fold cross-validated λ selection over the regularization path — the
+//! end-to-end model-selection pipeline on top of [`super::fit_path_with`].
+//!
+//! The sweep that the paper runs for speed exists, in practice, to *choose*
+//! λ. [`cross_validate`] closes that loop:
+//!
+//! 1. one λ grid is generated from the **full** data (so every fold scores
+//!    the same candidates);
+//! 2. the samples are split into K shuffled folds; each fold builds its own
+//!    [`SolverContext`] on the training split — covariance statistics are
+//!    computed once per fold and budget-tracked through the context's
+//!    workspace arena (each fold gets an independent [`MemBudget`] with the
+//!    caller's limit, so a per-solve cap stays a per-solve cap). The fold
+//!    *datasets* themselves are column copies of the input — raw data, not
+//!    solver working set, and like the original dataset they sit outside
+//!    the budget: with F folds in flight that is ~F·(p+q)·n·8 bytes of
+//!    resident input data;
+//! 3. folds run **in parallel across threads** ([`CvOptions::fold_threads`])
+//!    — they are embarrassingly parallel: disjoint data, disjoint contexts,
+//!    a shared read-only GEMM engine;
+//! 4. each fold fits the warm-started, strong-rule-screened path and scores
+//!    every path point's model on the held-out split via
+//!    [`heldout_nll`] (average test negative log-likelihood — comparable
+//!    across λ, unlike the penalized objective);
+//! 5. the λ with the lowest mean held-out NLL wins, and a final
+//!    warm-started path refit on the full data down to the winner produces
+//!    the returned model.
+
+use super::{fit_path_with, geometric_grid, lambda_max, PathOptions, PathResult};
+use crate::cggm::objective::heldout_nll;
+use crate::cggm::{CggmModel, Dataset};
+use crate::gemm::GemmEngine;
+use crate::solvers::{SolveError, SolveOptions, SolverContext, SolverKind};
+use crate::util::json::Json;
+use crate::util::membudget::MemBudget;
+use crate::util::rng::Rng;
+use crate::util::threadpool::Parallelism;
+use crate::util::timer::Stopwatch;
+
+/// Cross-validation configuration.
+#[derive(Clone, Debug)]
+pub struct CvOptions {
+    /// Number of folds K (clamped to [2, n]).
+    pub folds: usize,
+    /// Shuffle seed for the fold assignment (deterministic splits).
+    pub seed: u64,
+    /// Worker threads across folds (1 = sequential). Independent of
+    /// `SolveOptions::threads`, which parallelizes *inside* one solve.
+    pub fold_threads: usize,
+    /// Refit on the full dataset at the winning λ (warm-started down the
+    /// truncated grid). `false` skips the refit (grid scoring only).
+    pub refit: bool,
+}
+
+impl Default for CvOptions {
+    fn default() -> Self {
+        CvOptions {
+            folds: 5,
+            seed: 0x5eed,
+            fold_threads: 1,
+            refit: true,
+        }
+    }
+}
+
+/// One λ grid point's cross-validation score.
+#[derive(Clone, Debug)]
+pub struct CvPoint {
+    pub lam_l: f64,
+    pub lam_t: f64,
+    /// Held-out NLL per fold (NaN where a fold's path stopped early, e.g.
+    /// on a time budget).
+    pub fold_nll: Vec<f64>,
+    /// Mean over the folds that scored this point.
+    pub mean_nll: f64,
+    /// Standard error of that mean (0 when fewer than two folds scored).
+    pub se_nll: f64,
+}
+
+/// A completed cross-validation run.
+pub struct CvResult {
+    pub solver: SolverKind,
+    pub folds: usize,
+    pub points: Vec<CvPoint>,
+    /// Index into `points` of the winning λ (lowest mean held-out NLL).
+    pub best: usize,
+    pub best_lambda: (f64, f64),
+    /// Full-data refit path down to the winning λ (`None` when
+    /// `CvOptions::refit` is off or every fold failed to score).
+    pub refit: Option<PathResult>,
+    /// KKT fallbacks summed over all fold paths (screening quality).
+    pub screen_fallbacks: usize,
+    pub total_seconds: f64,
+}
+
+impl CvResult {
+    /// The refit model at the winning λ, when a refit ran.
+    pub fn model(&self) -> Option<&CggmModel> {
+        self.refit.as_ref().and_then(|r| r.model.as_ref())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("solver", Json::str(self.solver.name())),
+            ("folds", Json::num(self.folds as f64)),
+            ("best", Json::num(self.best as f64)),
+            ("best_lambda_l", Json::num(self.best_lambda.0)),
+            ("best_lambda_t", Json::num(self.best_lambda.1)),
+            (
+                "screen_fallbacks",
+                Json::num(self.screen_fallbacks as f64),
+            ),
+            ("total_seconds", Json::num(self.total_seconds)),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|p| {
+                    Json::obj(vec![
+                        ("lambda_l", Json::num(p.lam_l)),
+                        ("lambda_t", Json::num(p.lam_t)),
+                        ("mean_nll", Json::num(p.mean_nll)),
+                        ("se_nll", Json::num(p.se_nll)),
+                        (
+                            "fold_nll",
+                            Json::arr(p.fold_nll.iter().map(|&x| Json::num(x))),
+                        ),
+                    ])
+                })),
+            ),
+            (
+                "refit",
+                self.refit
+                    .as_ref()
+                    .map(|r| r.to_json())
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("lambda_l,lambda_t,mean_nll,se_nll,best\n");
+        for (k, p) in self.points.iter().enumerate() {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                p.lam_l,
+                p.lam_t,
+                p.mean_nll,
+                p.se_nll,
+                k == self.best
+            ));
+        }
+        s
+    }
+}
+
+/// Deterministic shuffled fold assignment: `assign[s] ∈ 0..k` for each
+/// sample, sizes balanced to within one.
+pub(crate) fn fold_assignment(n: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut order);
+    let mut assign = vec![0usize; n];
+    for (pos, &s) in order.iter().enumerate() {
+        assign[s] = pos % k;
+    }
+    assign
+}
+
+/// Train/test split for fold `f` under `assign`.
+fn split_fold(data: &Dataset, assign: &[usize], f: usize) -> (Dataset, Dataset) {
+    let train: Vec<usize> = (0..assign.len()).filter(|&s| assign[s] != f).collect();
+    let test: Vec<usize> = (0..assign.len()).filter(|&s| assign[s] == f).collect();
+    (data.select_samples(&train), data.select_samples(&test))
+}
+
+/// Per-fold outcome: held-out NLL per grid point (NaN = not fitted) plus
+/// the fold path's screening fallback count.
+struct FoldScores {
+    nll: Vec<f64>,
+    fallbacks: usize,
+}
+
+/// K-fold cross-validation over the λ path; see the module docs for the
+/// pipeline. The returned [`CvResult`] orders `points` like the grid
+/// (decreasing λ).
+pub fn cross_validate(
+    kind: SolverKind,
+    data: &Dataset,
+    base: &SolveOptions,
+    popts: &PathOptions,
+    cv: &CvOptions,
+    engine: &dyn GemmEngine,
+) -> Result<CvResult, SolveError> {
+    let sw = Stopwatch::start();
+    let n = data.n();
+    let k = cv.folds.clamp(2, n.max(2));
+    // One full-data context shared by grid generation and the final refit,
+    // so the full dataset's covariance statistics are computed at most once
+    // (they are lazy: an explicit grid with refit off materializes nothing).
+    let full_ctx = SolverContext::new(data, base, engine);
+    // One grid for every fold, from the full data's λ_max.
+    let grid: Vec<(f64, f64)> = match &popts.lambdas {
+        Some(g) => g.clone(),
+        None => {
+            let (ml, mt) = lambda_max(&full_ctx, kind)?;
+            geometric_grid(ml, mt, popts.points.max(1), popts.min_ratio)
+        }
+    };
+    let fold_popts = PathOptions {
+        lambdas: Some(grid.clone()),
+        ..popts.clone()
+    };
+    let assign = fold_assignment(n, k, cv.seed);
+
+    // Fit + score the folds, in parallel across threads. Each fold owns its
+    // data copies, context, and budget; slots are disjoint, so the
+    // chunk-parallel helper applies directly.
+    let mut slots: Vec<Option<Result<FoldScores, SolveError>>> = (0..k).map(|_| None).collect();
+    let run_fold = |f: usize| -> Result<FoldScores, SolveError> {
+        let (train, test) = split_fold(data, &assign, f);
+        let mut fold_base = base.clone();
+        // Same cap, independent accounting: K concurrent folds must not
+        // trip each other's budget, and `peak()` stays per-context.
+        fold_base.budget = MemBudget::new(base.budget.limit());
+        let ctx = SolverContext::new(&train, &fold_base, engine);
+        let mut nll = vec![f64::NAN; grid.len()];
+        let path = fit_path_with(kind, &ctx, &fold_base, &fold_popts, |j, _, model| {
+            nll[j] = heldout_nll(model, &test, engine).unwrap_or(f64::INFINITY);
+        })?;
+        Ok(FoldScores {
+            nll,
+            fallbacks: path.screen_fallbacks,
+        })
+    };
+    Parallelism::new(cv.fold_threads.max(1)).parallel_chunks_mut(&mut slots, 1, |f, slot| {
+        slot[0] = Some(run_fold(f));
+    });
+
+    let mut fold_scores = Vec::with_capacity(k);
+    let mut screen_fallbacks = 0usize;
+    for slot in slots {
+        let scores = slot.expect("every fold slot is filled")?;
+        screen_fallbacks += scores.fallbacks;
+        fold_scores.push(scores.nll);
+    }
+
+    // Aggregate: mean ± standard error over the folds that scored each λ.
+    let mut points = Vec::with_capacity(grid.len());
+    for (j, &(lam_l, lam_t)) in grid.iter().enumerate() {
+        let fold_nll: Vec<f64> = fold_scores.iter().map(|s| s[j]).collect();
+        let scored: Vec<f64> = fold_nll.iter().copied().filter(|x| x.is_finite()).collect();
+        let m = scored.len();
+        let mean_nll = if m > 0 {
+            scored.iter().sum::<f64>() / m as f64
+        } else {
+            f64::INFINITY
+        };
+        let se_nll = if m > 1 {
+            let var = scored.iter().map(|x| (x - mean_nll).powi(2)).sum::<f64>()
+                / (m as f64 - 1.0);
+            (var / m as f64).sqrt()
+        } else {
+            0.0
+        };
+        points.push(CvPoint {
+            lam_l,
+            lam_t,
+            fold_nll,
+            mean_nll,
+            se_nll,
+        });
+    }
+    let best = points
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.mean_nll.total_cmp(&b.1.mean_nll))
+        .map(|(j, _)| j)
+        .unwrap_or(0);
+    let best_lambda = (points[best].lam_l, points[best].lam_t);
+
+    // Full-data refit: warm-started (and screened) path down the truncated
+    // grid, so the winner benefits from the same path machinery the folds
+    // used.
+    let refit = if cv.refit && points[best].mean_nll.is_finite() {
+        let refit_popts = PathOptions {
+            lambdas: Some(grid[..=best].to_vec()),
+            ..popts.clone()
+        };
+        Some(fit_path_with(kind, &full_ctx, base, &refit_popts, |_, _, _| {})?)
+    } else {
+        None
+    };
+
+    Ok(CvResult {
+        solver: kind,
+        folds: k,
+        points,
+        best,
+        best_lambda,
+        refit,
+        screen_fallbacks,
+        total_seconds: sw.seconds(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::gemm::native::NativeGemm;
+
+    #[test]
+    fn fold_assignment_is_balanced_partition() {
+        for (n, k) in [(10, 3), (17, 5), (8, 8), (9, 2)] {
+            let assign = fold_assignment(n, k, 42);
+            assert_eq!(assign.len(), n);
+            let mut counts = vec![0usize; k];
+            for &f in &assign {
+                assert!(f < k);
+                counts[f] += 1;
+            }
+            let (lo, hi) = (
+                counts.iter().min().unwrap(),
+                counts.iter().max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "unbalanced folds {counts:?} for n={n} k={k}");
+            // Deterministic in the seed, different across seeds (n > k).
+            assert_eq!(assign, fold_assignment(n, k, 42));
+            if n > k {
+                assert_ne!(assign, fold_assignment(n, k, 43));
+            }
+        }
+    }
+
+    #[test]
+    fn split_fold_partitions_samples() {
+        let prob = datagen::chain::generate(4, 3, 12, 5);
+        let assign = fold_assignment(12, 3, 7);
+        let mut total_test = 0;
+        for f in 0..3 {
+            let (train, test) = split_fold(&prob.data, &assign, f);
+            assert_eq!(train.n() + test.n(), 12);
+            assert_eq!(train.p(), 4);
+            assert_eq!(test.q(), 3);
+            total_test += test.n();
+        }
+        assert_eq!(total_test, 12, "every sample is held out exactly once");
+    }
+
+    #[test]
+    fn cv_scores_every_grid_point_and_picks_argmin() {
+        let prob = datagen::chain::generate(10, 10, 90, 21);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions {
+            max_iter: 60,
+            ..Default::default()
+        };
+        let popts = PathOptions {
+            points: 4,
+            min_ratio: 0.1,
+            ..Default::default()
+        };
+        let cv = CvOptions {
+            folds: 3,
+            ..Default::default()
+        };
+        let res = cross_validate(
+            SolverKind::AltNewtonCd,
+            &prob.data,
+            &base,
+            &popts,
+            &cv,
+            &eng,
+        )
+        .unwrap();
+        assert_eq!(res.points.len(), 4);
+        assert_eq!(res.folds, 3);
+        for p in &res.points {
+            assert_eq!(p.fold_nll.len(), 3);
+            assert!(p.mean_nll.is_finite());
+            assert!(p.se_nll >= 0.0);
+        }
+        // Argmin property: the winner's mean NLL is minimal.
+        for p in &res.points {
+            assert!(res.points[res.best].mean_nll <= p.mean_nll + 1e-12);
+        }
+        assert_eq!(
+            res.best_lambda,
+            (res.points[res.best].lam_l, res.points[res.best].lam_t)
+        );
+        // Refit ran down the truncated grid and produced a model.
+        let refit = res.refit.as_ref().unwrap();
+        assert_eq!(refit.points.len(), res.best + 1);
+        assert!(res.model().is_some());
+        let j = res.to_json().to_string();
+        assert!(j.contains("best_lambda_l"));
+        assert_eq!(res.to_csv().lines().count(), 1 + 4);
+    }
+
+    #[test]
+    fn parallel_folds_match_sequential_exactly() {
+        let prob = datagen::chain::generate(8, 8, 60, 3);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions {
+            max_iter: 50,
+            ..Default::default()
+        };
+        let popts = PathOptions {
+            points: 3,
+            min_ratio: 0.2,
+            ..Default::default()
+        };
+        let seq = CvOptions {
+            folds: 4,
+            fold_threads: 1,
+            refit: false,
+            ..Default::default()
+        };
+        let par = CvOptions {
+            fold_threads: 4,
+            ..seq.clone()
+        };
+        let a = cross_validate(SolverKind::AltNewtonCd, &prob.data, &base, &popts, &seq, &eng)
+            .unwrap();
+        let b = cross_validate(SolverKind::AltNewtonCd, &prob.data, &base, &popts, &par, &eng)
+            .unwrap();
+        assert_eq!(a.best, b.best);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.fold_nll, y.fold_nll, "fold NLLs must be bitwise equal");
+        }
+    }
+}

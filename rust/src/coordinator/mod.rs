@@ -1,12 +1,17 @@
 //! Run coordination: configuration, λ calibration, dataset IO, the fit
-//! driver shared by the CLI and the experiment harness, and the
-//! warm-started λ-path driver ([`fit_path`]).
+//! driver shared by the CLI and the experiment harness, the warm-started
+//! λ-path driver ([`fit_path`]) with sequential strong-rule screening
+//! ([`solve_screened`]), and K-fold cross-validated model selection
+//! ([`cv::cross_validate`]).
 
 pub mod config;
+pub mod cv;
 
+use crate::cggm::active::{kkt_violations, ScreenRule, ScreenSet};
 use crate::cggm::{CggmModel, Dataset};
 use crate::datagen::{self, Problem, Workload};
 use crate::gemm::GemmEngine;
+use crate::linalg::dense::Mat;
 use crate::metrics::f1_edges_sym;
 use crate::solvers::{
     solve, solve_in_context, SolveError, SolveOptions, SolveResult, SolverContext, SolverKind,
@@ -14,8 +19,10 @@ use crate::solvers::{
 use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
 use std::path::Path;
+use std::sync::Arc;
 
 pub use config::RunConfig;
+pub use cv::{cross_validate, CvOptions, CvPoint, CvResult};
 
 /// One timed solver run with derived summary numbers (a row of Table 1).
 pub struct RunSummary {
@@ -103,6 +110,15 @@ pub struct PathOptions {
     /// reason to exist); `false` is the cold-start ablation the `bench_path`
     /// bench measures against.
     pub warm_start: bool,
+    /// Path-level screening: [`ScreenRule::Strong`] (default) carries the
+    /// previous point's active set forward through the sequential strong
+    /// rule with a KKT post-check; [`ScreenRule::Full`] re-screens every
+    /// coordinate at every point. Strong screening requires warm starts
+    /// (the rule is stated at the previous solution), so it is inert when
+    /// `warm_start` is false, for the first path point, and for solvers
+    /// without [`SolverKind::supports_screen`] (notably the block solver,
+    /// whose memory story forbids the driver's dense gradient scans).
+    pub screen: ScreenRule,
 }
 
 impl Default for PathOptions {
@@ -112,6 +128,7 @@ impl Default for PathOptions {
             min_ratio: 0.1,
             lambdas: None,
             warm_start: true,
+            screen: ScreenRule::Strong,
         }
     }
 }
@@ -127,6 +144,20 @@ pub struct PathPoint {
     pub lambda_nnz: usize,
     pub theta_nnz: usize,
     pub seconds: f64,
+    /// Solver-side coordinates examined at this point: screening scans + CD
+    /// update visits from the solve trace(s), including any discarded
+    /// restricted work on fallback. The screening bench's work metric.
+    pub coord_updates: usize,
+    /// Driver-side verification scans: the once-per-point gradient
+    /// evaluation that feeds the KKT post-check and the next point's strong
+    /// rule (reported separately — it replaces the full run's *per-iteration*
+    /// gradient screens, and hiding it inside `coord_updates` would blur
+    /// what screening actually saves).
+    pub kkt_scans: usize,
+    /// Whether this point ran under a strong-rule restricted screen.
+    pub screened: bool,
+    /// Whether the KKT post-check forced a full-screen re-solve here.
+    pub fallback: bool,
 }
 
 /// A completed λ-path run.
@@ -136,6 +167,9 @@ pub struct PathResult {
     /// Model at the last fitted (smallest-λ) point.
     pub model: Option<CggmModel>,
     pub total_seconds: f64,
+    /// How many points needed the KKT fallback (screening quality metric —
+    /// near zero on a well-spaced decreasing grid).
+    pub screen_fallbacks: usize,
 }
 
 impl PathResult {
@@ -145,11 +179,29 @@ impl PathResult {
         self.points.iter().map(|p| p.iters).sum()
     }
 
+    /// Total solver-side coordinates examined across the path (screening
+    /// scans + CD visits) — the quantity strong-rule screening shrinks.
+    pub fn total_coord_updates(&self) -> usize {
+        self.points.iter().map(|p| p.coord_updates).sum()
+    }
+
+    /// Total driver-side KKT/strong-rule verification scans (zero on an
+    /// unscreened path).
+    pub fn total_kkt_scans(&self) -> usize {
+        self.points.iter().map(|p| p.kkt_scans).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("solver", Json::str(self.solver.name())),
             ("total_seconds", Json::num(self.total_seconds)),
             ("total_iters", Json::num(self.total_iters() as f64)),
+            (
+                "total_coord_updates",
+                Json::num(self.total_coord_updates() as f64),
+            ),
+            ("total_kkt_scans", Json::num(self.total_kkt_scans() as f64)),
+            ("screen_fallbacks", Json::num(self.screen_fallbacks as f64)),
             (
                 "points",
                 Json::arr(self.points.iter().map(|p| {
@@ -162,6 +214,10 @@ impl PathResult {
                         ("lambda_nnz", Json::num(p.lambda_nnz as f64)),
                         ("theta_nnz", Json::num(p.theta_nnz as f64)),
                         ("seconds", Json::num(p.seconds)),
+                        ("coord_updates", Json::num(p.coord_updates as f64)),
+                        ("kkt_scans", Json::num(p.kkt_scans as f64)),
+                        ("screened", Json::Bool(p.screened)),
+                        ("fallback", Json::Bool(p.fallback)),
                     ])
                 })),
             ),
@@ -169,12 +225,25 @@ impl PathResult {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s =
-            String::from("lambda_l,lambda_t,iters,converged,f,lambda_nnz,theta_nnz,seconds\n");
+        let mut s = String::from(
+            "lambda_l,lambda_t,iters,converged,f,lambda_nnz,theta_nnz,seconds,\
+             coord_updates,kkt_scans,screened,fallback\n",
+        );
         for p in &self.points {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{:.4}\n",
-                p.lam_l, p.lam_t, p.iters, p.converged, p.f, p.lambda_nnz, p.theta_nnz, p.seconds
+                "{},{},{},{},{},{},{},{:.4},{},{},{},{}\n",
+                p.lam_l,
+                p.lam_t,
+                p.iters,
+                p.converged,
+                p.f,
+                p.lambda_nnz,
+                p.theta_nnz,
+                p.seconds,
+                p.coord_updates,
+                p.kkt_scans,
+                p.screened,
+                p.fallback
             ));
         }
         s
@@ -187,7 +256,7 @@ impl PathResult {
 /// block solver (which must not materialize q×q / p×q matrices) it is
 /// computed exactly but *streamed* in budget-tracked column panels — the
 /// same GEMM pattern as its Λ/Θ screens.
-fn lambda_max(ctx: &SolverContext, kind: SolverKind) -> Result<(f64, f64), SolveError> {
+pub(crate) fn lambda_max(ctx: &SolverContext, kind: SolverKind) -> Result<(f64, f64), SolveError> {
     let data = ctx.data();
     if kind == SolverKind::AltNewtonBcd {
         // The block solver's own streamed panels — exact, O(panel) memory.
@@ -215,7 +284,12 @@ fn lambda_max(ctx: &SolverContext, kind: SolverKind) -> Result<(f64, f64), Solve
 }
 
 /// Geometric grid from λ_max down to `min_ratio`·λ_max, per parameter.
-fn geometric_grid(max_l: f64, max_t: f64, points: usize, min_ratio: f64) -> Vec<(f64, f64)> {
+pub(crate) fn geometric_grid(
+    max_l: f64,
+    max_t: f64,
+    points: usize,
+    min_ratio: f64,
+) -> Vec<(f64, f64)> {
     let ratio = min_ratio.clamp(1e-6, 1.0);
     (0..points)
         .map(|k| {
@@ -229,9 +303,119 @@ fn geometric_grid(max_l: f64, max_t: f64, points: usize, min_ratio: f64) -> Vec<
         .collect()
 }
 
-/// Fit a warm-started regularization path: decreasing λ grid, each solve
-/// seeded with the previous solution, covariance statistics computed once
-/// for the whole path (the shared [`SolverContext`]).
+/// Outcome of [`solve_screened`]: the solve plus the bookkeeping the path
+/// driver needs to chain strong rules across points.
+pub struct ScreenedSolve {
+    pub res: SolveResult,
+    /// Smooth gradients `(∇_Λ g, ∇_Θ g)` at the returned solution — the
+    /// KKT evidence, reused by the caller as the next point's strong-rule
+    /// input so gradients are evaluated once per path point.
+    pub grads: (Mat, Mat),
+    /// Whether the KKT post-check found a dropped violating coordinate and
+    /// forced an unrestricted re-solve.
+    pub fell_back: bool,
+    /// Discarded restricted-solve work when the fallback fired (solver-side;
+    /// charged to the point's `coord_updates`).
+    pub wasted_coords: usize,
+    /// Driver-side KKT/strong-rule verification scans (one full coordinate
+    /// scan per gradient evaluation; two on fallback).
+    pub kkt_scans: usize,
+}
+
+/// One λ point under the sequential strong rule: solve restricted to `set`,
+/// then KKT-check every *discarded* coordinate at the solution. A violation
+/// means the strong rule's heuristic bet lost, so the point is re-solved
+/// with a full screen, warm-started from the restricted solution (cheap —
+/// that solution is already nearly optimal over its set). The returned
+/// solution therefore always satisfies the same optimality conditions as an
+/// unrestricted solve: **screening can never silently drop a violating
+/// coordinate**.
+pub fn solve_screened(
+    kind: SolverKind,
+    ctx: &SolverContext,
+    opts: &SolveOptions,
+    warm: Option<&CggmModel>,
+    set: Arc<ScreenSet>,
+) -> Result<ScreenedSolve, SolveError> {
+    let sw = Stopwatch::start();
+    let data = ctx.data();
+    let (p, q) = (data.p(), data.q());
+    let full_scan = q * (q + 1) / 2 + p * q;
+    // A caller-provided set might miss part of the starting model's support
+    // (the warm start's, or cold-start init's Λ = I diagonal) — those
+    // coordinates would be frozen at stale values and invisible to the KKT
+    // check (which only examines zeros). Merge the support in; the driver's
+    // strong sets already contain it, so this is a no-op there.
+    let cold_init;
+    let start = match warm {
+        Some(w) => w,
+        None => {
+            cold_init = CggmModel::init(p, q);
+            &cold_init
+        }
+    };
+    let set = match set.with_support(start) {
+        Some(merged) => Arc::new(merged),
+        None => set,
+    };
+    let mut sopts = opts.clone();
+    sopts.screen = Some(set.clone());
+    let res = solve_in_context(kind, ctx, &sopts, warm)?;
+    let grads = ctx.smooth_gradients(&res.model, opts.chol)?;
+    // Violations below λ·(1+tol) are converged noise (an unrestricted solve
+    // would leave them too); anything larger forces the fallback. This
+    // per-coordinate threshold is deliberately *stricter* than the solver's
+    // aggregate tol·‖·‖₁ stopping rule, so a coordinate a loose full solve
+    // would legitimately leave slightly above λ can occasionally trip a
+    // conservative (wasted but safe) re-solve — the safe side of the trade.
+    let viol = kkt_violations(
+        &grads.0,
+        &grads.1,
+        &res.model,
+        opts.lam_l,
+        opts.lam_t,
+        &set,
+        opts.tol,
+    );
+    if viol == 0 {
+        return Ok(ScreenedSolve {
+            res,
+            grads,
+            fell_back: false,
+            wasted_coords: 0,
+            kkt_scans: full_scan,
+        });
+    }
+    // The restricted solve's work is charged to this point even though its
+    // result is discarded.
+    let wasted = res.trace.coords_screened + res.trace.cd_updates;
+    let mut fopts = opts.clone();
+    fopts.screen = None;
+    // The fallback runs on whatever is left of this point's time budget —
+    // reusing the original limit would let a fallback point spend it twice
+    // and overrun the whole-path cap. An exhausted budget still gets a
+    // hair of time so the solver returns the (valid) warm iterate instead
+    // of an error.
+    if opts.time_limit > 0.0 {
+        fopts.time_limit = (opts.time_limit - sw.seconds()).max(1e-3);
+    }
+    let res = solve_in_context(kind, ctx, &fopts, Some(&res.model))?;
+    let grads = ctx.smooth_gradients(&res.model, opts.chol)?;
+    Ok(ScreenedSolve {
+        res,
+        grads,
+        fell_back: true,
+        wasted_coords: wasted,
+        kkt_scans: 2 * full_scan,
+    })
+}
+
+/// Fit a warm-started regularization path: decreasing λ grid (auto-generated
+/// from the data's λ_max unless `popts.lambdas` pins it), each solve seeded
+/// with the previous solution, covariance statistics computed once for the
+/// whole path (the shared [`SolverContext`]), and — under the default
+/// [`ScreenRule::Strong`] — the active set carried across points by the
+/// sequential strong rule with a KKT-checked fallback.
 pub fn fit_path(
     kind: SolverKind,
     data: &Dataset,
@@ -246,12 +430,28 @@ pub fn fit_path(
 /// [`fit_path`] on a caller-provided context (reusable across paths; tests
 /// assert the statistics are computed exactly once). `base.time_limit` is a
 /// budget for the *whole path*: each point receives the remaining time, and
-/// the sweep stops early once it is spent.
+/// the sweep stops early once it is spent. `base.lam_l`/`lam_t` are ignored
+/// — the grid governs.
 pub fn fit_path_in_context(
     kind: SolverKind,
     ctx: &SolverContext,
     base: &SolveOptions,
     popts: &PathOptions,
+) -> Result<PathResult, SolveError> {
+    fit_path_with(kind, ctx, base, popts, |_, _, _| {})
+}
+
+/// [`fit_path_in_context`] with a per-point observer: `on_point(k, point,
+/// model)` fires after each grid point `k` is fitted, with the point summary
+/// and the model *at that point*. This is how [`cv::cross_validate`] scores
+/// held-out likelihood along the path without the driver retaining every
+/// (possibly large) intermediate model.
+pub fn fit_path_with(
+    kind: SolverKind,
+    ctx: &SolverContext,
+    base: &SolveOptions,
+    popts: &PathOptions,
+    mut on_point: impl FnMut(usize, &PathPoint, &CggmModel),
 ) -> Result<PathResult, SolveError> {
     let sw = Stopwatch::start();
     let grid: Vec<(f64, f64)> = match &popts.lambdas {
@@ -261,9 +461,19 @@ pub fn fit_path_in_context(
             geometric_grid(ml, mt, popts.points.max(1), popts.min_ratio)
         }
     };
+    let data = ctx.data();
+    let (p, q) = (data.p(), data.q());
+    let full_scan = q * (q + 1) / 2 + p * q;
+    let screen_on =
+        popts.warm_start && popts.screen == ScreenRule::Strong && kind.supports_screen();
     let mut warm: Option<CggmModel> = None;
+    // Gradients at `warm` and the λ it was fitted at — the strong rule's
+    // sequential state, refreshed once per point.
+    let mut prev_grads: Option<(Mat, Mat)> = None;
+    let mut prev_lams = (f64::NAN, f64::NAN);
+    let mut fallbacks = 0usize;
     let mut points = Vec::with_capacity(grid.len());
-    for &(lam_l, lam_t) in &grid {
+    for (k, &(lam_l, lam_t)) in grid.iter().enumerate() {
         let mut opts = base.clone();
         opts.lam_l = lam_l;
         opts.lam_t = lam_t;
@@ -276,8 +486,38 @@ pub fn fit_path_in_context(
         }
         let t0 = sw.seconds();
         let seed = if popts.warm_start { warm.as_ref() } else { None };
-        let res = solve_in_context(kind, ctx, &opts, seed)?;
-        points.push(PathPoint {
+        let mut wasted_coords = 0usize;
+        let mut kkt_scans = 0usize;
+        let mut screened = false;
+        let mut fallback = false;
+        let res = match (seed, prev_grads.take()) {
+            (Some(seed_model), Some((gl, gt))) if screen_on => {
+                let set = Arc::new(ScreenSet::strong(
+                    &gl, &gt, seed_model, lam_l, lam_t, prev_lams.0, prev_lams.1,
+                ));
+                screened = true;
+                let out = solve_screened(kind, ctx, &opts, Some(seed_model), set)?;
+                fallback = out.fell_back;
+                if fallback {
+                    fallbacks += 1;
+                }
+                wasted_coords = out.wasted_coords;
+                kkt_scans = out.kkt_scans;
+                prev_grads = Some(out.grads);
+                out.res
+            }
+            (seed, _) => {
+                let res = solve_in_context(kind, ctx, &opts, seed)?;
+                if screen_on {
+                    // Seed the strong rule for the next point.
+                    prev_grads = Some(ctx.smooth_gradients(&res.model, opts.chol)?);
+                    kkt_scans = full_scan;
+                }
+                res
+            }
+        };
+        prev_lams = (lam_l, lam_t);
+        let point = PathPoint {
             lam_l,
             lam_t,
             iters: res.trace.records.len(),
@@ -286,7 +526,13 @@ pub fn fit_path_in_context(
             lambda_nnz: res.model.lambda_nnz(),
             theta_nnz: res.model.theta_nnz(),
             seconds: sw.seconds() - t0,
-        });
+            coord_updates: res.trace.coords_screened + res.trace.cd_updates + wasted_coords,
+            kkt_scans,
+            screened,
+            fallback,
+        };
+        on_point(k, &point, &res.model);
+        points.push(point);
         warm = Some(res.model);
     }
     Ok(PathResult {
@@ -294,13 +540,20 @@ pub fn fit_path_in_context(
         points,
         model: warm,
         total_seconds: sw.seconds(),
+        screen_fallbacks: fallbacks,
     })
 }
 
 /// Calibrate λ so the estimated support sizes land near the ground truth
 /// (paper §5.1: "We choose λ_Λ and λ_Θ so that the number of estimated edges
-/// in Λ and Θ is close to ground truth"). Geometric bisection on a shared
-/// scale factor using short AltNewtonCD runs.
+/// in Λ and Θ is close to ground truth"). *Independent* geometric bisection
+/// per parameter (each probe updates both brackets from its own density
+/// ratio). Every probe is a deliberately truncated `AltNewtonCd` run — 6
+/// outer iterations, regardless of the configured solver, because the probe
+/// only needs a support-size estimate, not an optimum — on one shared
+/// [`SolverContext`], bracketed by a sampled estimate of the data's λ_max.
+/// The returned pair are the last probed midpoints, accurate to the final
+/// bracket ratio — close to, not exactly at, the target support.
 pub fn calibrate_lambda(
     prob: &Problem,
     engine: &dyn GemmEngine,

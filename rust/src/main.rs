@@ -4,7 +4,8 @@
 //! Subcommands:
 //! - `gen`   generate a synthetic workload and save it;
 //! - `fit`   estimate a CGGM (solver/engine/budget configurable);
-//! - `path`  fit a warm-started λ regularization path;
+//! - `path`  fit a warm-started λ regularization path (strong-rule screened);
+//! - `cv`    K-fold cross-validated λ selection + full-data refit;
 //! - `exp`   regenerate a paper table/figure (`--list` shows all);
 //! - `cal`   calibrate λ for a workload;
 //! - `info`  environment + artifact status.
@@ -40,6 +41,7 @@ fn main() {
         "gen" => cmd_gen(&args),
         "fit" => cmd_fit(&args),
         "path" => cmd_path(&args),
+        "cv" => cmd_cv(&args),
         "exp" => cmd_exp(&args),
         "cal" => cmd_cal(&args),
         "info" => cmd_info(&args),
@@ -68,9 +70,16 @@ COMMANDS
         [--lambda X | --calibrate] [--mem-budget 512MB] [--threads T]
         [--engine native|xla|pallas [--tile 128|256]] [--trace]
   path  [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
-        [--path-points N] [--path-min-ratio R] [--cold] [--time-limit S] ...
-        (warm-started λ path: stats computed once, each point seeds the next;
+        [--path-points N] [--path-min-ratio R] [--screen full|strong] [--cold]
+        [--time-limit S] ...
+        (warm-started λ path: stats computed once, each point seeds the next
+         and carries its active set forward via the sequential strong rule;
          --time-limit budgets the whole sweep; --cold disables warm starts)
+  cv    [--config FILE] [--workload ...|--data FILE] --solver ... --folds K
+        [--cv-threads T] [--path-points N] [--path-min-ratio R]
+        [--screen full|strong] [--seed S] ...
+        (K-fold CV over the λ path: per-fold contexts, folds in parallel,
+         held-out NLL scoring, winning λ refit on the full data)
   exp   <id>|all [--list] [--scale F] [--sizes a,b,c] [--lambda X] ...
   cal   --workload ... --p N --q N --n N
   info
@@ -234,7 +243,7 @@ fn cmd_path(args: &Args) -> i32 {
         );
     }
     eprintln!(
-        "λ path: {} (engine={}, p={}, q={}, n={}, {} points, min ratio {}, {})",
+        "λ path: {} (engine={}, p={}, q={}, n={}, {} points, min ratio {}, {}, screen={})",
         cfg.solver.name(),
         engine.name(),
         prob.p(),
@@ -243,6 +252,7 @@ fn cmd_path(args: &Args) -> i32 {
         popts.points,
         popts.min_ratio,
         if popts.warm_start { "warm starts" } else { "cold starts" },
+        popts.screen.name(),
     );
     match coordinator::fit_path(cfg.solver, &prob.data, &opts, &popts, engine.as_ref()) {
         Ok(path) => {
@@ -258,6 +268,58 @@ fn cmd_path(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("path failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_cv(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let engine = make_engine(args);
+    let prob = match load_problem(args, &cfg) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
+    let opts = cfg.solve_options();
+    let popts = cfg.path_options(!args.flag("cold"));
+    let cvo = cfg.cv_options();
+    eprintln!(
+        "cv: {} (engine={}, p={}, q={}, n={}, {} folds × {} points, \
+         screen={}, {} fold threads)",
+        cfg.solver.name(),
+        engine.name(),
+        prob.p(),
+        prob.q(),
+        prob.n(),
+        cvo.folds,
+        popts.points,
+        popts.screen.name(),
+        cvo.fold_threads,
+    );
+    match coordinator::cross_validate(cfg.solver, &prob.data, &opts, &popts, &cvo, engine.as_ref())
+    {
+        Ok(res) => {
+            println!("{}", res.to_json().to_string_pretty());
+            eprintln!(
+                "selected lambda=({:.4},{:.4}) at point {} of {} \
+                 (mean held-out NLL {:.4})",
+                res.best_lambda.0,
+                res.best_lambda.1,
+                res.best + 1,
+                res.points.len(),
+                res.points[res.best].mean_nll,
+            );
+            let dir = PathBuf::from(&cfg.out_dir);
+            let _ = std::fs::create_dir_all(&dir);
+            let csv = dir.join(format!("cv_{}.csv", cfg.solver.name()));
+            match std::fs::write(&csv, res.to_csv()) {
+                Ok(()) => eprintln!("-> {}", csv.display()),
+                Err(e) => eprintln!("warning: cannot write {}: {e}", csv.display()),
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("cv failed: {e}");
             1
         }
     }

@@ -100,6 +100,17 @@ pub struct SolveTrace {
     pub converged: bool,
     pub total_seconds: f64,
     pub solver: String,
+    /// Coordinates *examined* by active-set screening, summed over outer
+    /// iterations: `q(q+1)/2 + pq` per iteration for a full screen, the
+    /// screen-set size for a restricted one. The λ-path screening bench's
+    /// work metric. Currently instrumented only by `alt_newton_cd` (the one
+    /// solver that honors `SolveOptions::screen`); every other solver
+    /// reports 0, which means "not measured", not "no work".
+    pub coords_screened: usize,
+    /// Coordinate-descent update visits (active-set size × inner sweeps,
+    /// summed over outer iterations). Same instrumentation scope as
+    /// `coords_screened`.
+    pub cd_updates: usize,
 }
 
 impl SolveTrace {
@@ -121,6 +132,8 @@ impl SolveTrace {
             ("solver", Json::str(self.solver.clone())),
             ("converged", Json::Bool(self.converged)),
             ("total_seconds", Json::num(self.total_seconds)),
+            ("coords_screened", Json::num(self.coords_screened as f64)),
+            ("cd_updates", Json::num(self.cd_updates as f64)),
             (
                 "phases",
                 Json::arr(self.phases.iter().map(|(name, secs, calls)| {

@@ -22,7 +22,9 @@
 
 use super::cd_common::{lambda_cd_pass, theta_cd_pass_direct, trace_grad_dir};
 use super::{SolveError, SolveOptions, SolveResult, SolverContext};
-use crate::cggm::active::{lambda_active_dense, theta_active_dense};
+use crate::cggm::active::{
+    lambda_active_dense, lambda_active_within, theta_active_dense, theta_active_within,
+};
 use crate::cggm::factor::LambdaFactor;
 use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
 use crate::cggm::objective::SmoothParts;
@@ -74,6 +76,12 @@ pub fn solve(
     prof.time("sigma", || sigma_dense_into(&factor, engine, par, ws, &mut sigma))?;
     let ls_opts = LineSearchOptions::default();
 
+    // Path-level strong-rule restriction: when set, screening (and hence CD)
+    // only ever touches the allowed coordinates, and the Θ screen evaluates
+    // per-coordinate gradients from the shared Σ·R̃ᵀ panel instead of the
+    // dense O(npq) GEMM.
+    let screen = opts.screen.as_deref();
+
     for it in 0..opts.max_iter {
         // ---- screens (gradients at the current iterate) ----
         let mut psi = ws.mat(q, q)?;
@@ -81,9 +89,23 @@ pub fn solve(
             // One Σ·rt panel feeds both Ψ and ∇_Θ (no second O(q²n) GEMM).
             let mut sr = ws.mat(q, n)?;
             prof.time("psi", || obj.psi_into(&sigma, &rt, engine, &mut sr, &mut psi));
-            let mut gt = ws.mat(p, q)?;
-            prof.time("grad:theta", || obj.grad_theta_from_sr(sxy, &sr, engine, &mut gt));
-            theta_active_dense(&gt, &model.theta, opts.lam_t)
+            match screen {
+                Some(set) => prof.time("grad:theta", || {
+                    theta_active_within(
+                        |i, j| obj.grad_theta_entry(sxy, &sr, i, j),
+                        &model.theta,
+                        opts.lam_t,
+                        &set.theta,
+                    )
+                }),
+                None => {
+                    let mut gt = ws.mat(p, q)?;
+                    prof.time("grad:theta", || {
+                        obj.grad_theta_from_sr(sxy, &sr, engine, &mut gt)
+                    });
+                    theta_active_dense(&gt, &model.theta, opts.lam_t)
+                }
+            }
         };
         let mut gl = ws.mat(q, q)?;
         prof.time("grad:lambda", || {
@@ -91,7 +113,14 @@ pub fn solve(
             gl.add_scaled(-1.0, &sigma);
             gl.add_scaled(-1.0, &psi);
         });
-        let (active_l, stats_l) = lambda_active_dense(&gl, &model.lambda, opts.lam_l);
+        let (active_l, stats_l) = match screen {
+            Some(set) => lambda_active_within(&gl, &model.lambda, opts.lam_l, &set.lambda),
+            None => lambda_active_dense(&gl, &model.lambda, opts.lam_l),
+        };
+        trace.coords_screened += match screen {
+            Some(set) => set.len(),
+            None => q * (q + 1) / 2 + p * q,
+        };
         let subgrad = stats_l.subgrad_l1 + stats_t.subgrad_l1;
         let param_l1 = model.lambda.l1_norm() + model.theta.l1_norm();
         trace.push(IterRecord {
@@ -110,6 +139,7 @@ pub fn solve(
         if opts.out_of_time(sw.seconds()) {
             break;
         }
+        trace.cd_updates += opts.inner_sweeps * (active_l.len() + active_t.len());
 
         // ---- Λ step: CD for the Newton direction, then line search ----
         let mut delta = SpRowMat::zeros(q, q);

@@ -26,8 +26,9 @@
 use std::cell::{Cell, OnceCell};
 
 use super::workspace::Workspace;
-use super::SolveOptions;
-use crate::cggm::Dataset;
+use super::{SolveError, SolveOptions};
+use crate::cggm::factor::{CholKind, LambdaFactor};
+use crate::cggm::{CggmModel, Dataset, Objective};
 use crate::gemm::GemmEngine;
 use crate::linalg::dense::Mat;
 use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
@@ -141,6 +142,49 @@ impl<'a> SolverContext<'a> {
     pub fn stat_computes(&self) -> usize {
         self.stat_computes.get()
     }
+
+    /// Dense gradients of the *smooth* objective at `model`:
+    /// `(∇_Λ g, ∇_Θ g)` per Eq. 3, from the context's cached statistics
+    /// (`S_yy`, `S_xy`; `S_xx` is never formed — ∇_Θ is n-factored). All
+    /// scratch (Σ, R̃ᵀ, Σ·R̃ᵀ, Ψ) comes budget-tracked from the workspace
+    /// arena; only the two returned matrices are plain owned allocations
+    /// (q² + pq bytes of driver state — the same footprint as one cached
+    /// statistic — which must outlive the checkout scope). One factorization
+    /// + O(q²n + npq) of GEMM — an outer iteration's worth of work. The
+    /// λ-path driver calls this once per path point to build the next
+    /// strong-rule screen set and run the KKT post-check
+    /// (`coordinator::solve_screened`).
+    pub fn smooth_gradients(
+        &self,
+        model: &CggmModel,
+        chol: CholKind,
+    ) -> Result<(Mat, Mat), SolveError> {
+        let data = self.data;
+        let (p, q, n) = (data.p(), data.q(), data.n());
+        let obj = Objective::new(data, 0.0, 0.0).with_chol(chol);
+        let factor = LambdaFactor::factor(&model.lambda, chol, self.engine)?;
+        let mut gl = self.syy()?.clone();
+        let mut gt = Mat::zeros(p, q);
+        {
+            let mut sigma = self.ws.mat(q, q)?;
+            super::alt_newton_cd::sigma_dense_into(
+                &factor,
+                self.engine,
+                &self.par,
+                &self.ws,
+                &mut sigma,
+            )?;
+            let mut rt = self.ws.mat(q, n)?;
+            data.xtheta_t_into(&model.theta, &mut rt);
+            let mut sr = self.ws.mat(q, n)?;
+            let mut psi = self.ws.mat(q, q)?;
+            obj.psi_into(&sigma, &rt, self.engine, &mut sr, &mut psi);
+            gl.add_scaled(-1.0, &sigma);
+            gl.add_scaled(-1.0, &psi);
+            obj.grad_theta_from_sr(self.sxy()?, &sr, self.engine, &mut gt);
+        }
+        Ok((gl, gt))
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +238,34 @@ mod tests {
         assert_eq!(budget.live(), 8 * 6 * 6);
         let _ = ctx.sxy().unwrap();
         assert_eq!(budget.live(), 8 * 6 * 6 + 8 * 4 * 6);
+    }
+
+    #[test]
+    fn smooth_gradients_match_objective_dense_path() {
+        let mut rng = Rng::new(6);
+        let data = small_data(&mut rng, 14, 5, 6);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions::default();
+        let ctx = SolverContext::new(&data, &opts, &eng);
+        let mut model = CggmModel::init(5, 6);
+        for i in 0..6 {
+            model.lambda.set(i, i, 2.5 + 0.1 * i as f64);
+        }
+        model.lambda.set_sym(0, 3, 0.3);
+        model.theta.set(2, 1, -0.4);
+        model.theta.set(4, 5, 0.7);
+        let (gl, gt) = ctx.smooth_gradients(&model, CholKind::Auto).unwrap();
+        // Reference: the Objective's allocating dense path.
+        let obj = Objective::new(&data, 0.0, 0.0);
+        let (_, _, factor, rt) = obj.eval(&model, &eng).unwrap();
+        let sigma = factor.inverse_dense(&eng);
+        let psi = obj.psi_dense(&sigma, &rt, &eng);
+        let want_gl = obj.grad_lambda_dense(&sigma, &psi, &eng);
+        let want_gt = obj.grad_theta_dense(&sigma, &rt, &eng);
+        assert!(gl.max_abs_diff(&want_gl) < 1e-10);
+        assert!(gt.max_abs_diff(&want_gt) < 1e-10);
+        // Uses only the cached S_yy and S_xy — S_xx is never materialized.
+        assert_eq!(ctx.stat_computes(), 2);
     }
 
     #[test]

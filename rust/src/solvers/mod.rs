@@ -32,12 +32,14 @@ pub mod workspace;
 pub use context::SolverContext;
 pub use workspace::Workspace;
 
+use crate::cggm::active::ScreenSet;
 use crate::cggm::factor::CholKind;
 use crate::cggm::{CggmModel, Dataset};
 use crate::gemm::GemmEngine;
 use crate::metrics::SolveTrace;
 use crate::util::membudget::MemBudget;
 use crate::util::threadpool::Parallelism;
+use std::sync::Arc;
 
 /// Which solver to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,6 +85,16 @@ impl SolverKind {
         ]
     }
 
+    /// Whether this solver honors [`SolveOptions::screen`] (path-level
+    /// strong-rule restriction). The λ-path driver only engages screening —
+    /// including its per-point gradient evaluations — for these solvers.
+    /// The block solver must stay off this list: the driver's dense
+    /// gradient evaluations would materialize the q×q/p×q matrices its
+    /// memory story exists to avoid.
+    pub fn supports_screen(&self) -> bool {
+        matches!(self, SolverKind::AltNewtonCd)
+    }
+
     /// Every solver the crate implements, including the first-order baseline.
     pub fn all() -> [SolverKind; 4] {
         [
@@ -124,6 +136,15 @@ pub struct SolveOptions {
     pub trace_f: bool,
     /// Seed for clustering tie-breaking.
     pub seed: u64,
+    /// Restrict screening (and hence all CD work) to this coordinate set —
+    /// the λ-path driver's sequential strong rule
+    /// ([`crate::cggm::active::ScreenSet`]). `None` screens every
+    /// coordinate. Honored by the dense-stat CD solvers (`alt_newton_cd`,
+    /// which also skips the dense ∇_Θ GEMM when restricted); solvers that
+    /// ignore it simply solve the unrestricted problem, which is always
+    /// correct — the restriction is an optimization, never a semantic
+    /// change, and the path driver's KKT post-check holds either way.
+    pub screen: Option<Arc<ScreenSet>>,
 }
 
 impl Default for SolveOptions {
@@ -141,6 +162,7 @@ impl Default for SolveOptions {
             time_limit: 0.0,
             trace_f: true,
             seed: 7,
+            screen: None,
         }
     }
 }

@@ -1,548 +1,43 @@
-//! Cross-module integration tests: solver↔solver agreement, block=non-block
-//! equivalence, budget enforcement, and the cross-language oracle (Rust
-//! objective vs the AOT-compiled L2 JAX objective through PJRT).
+//! Cross-module integration suite, split by subsystem:
+//!
+//! - [`common`] — shared dataset/option fixtures (documented seeds);
+//! - [`solver_tests`] — solver↔solver agreement, budget enforcement,
+//!   threading, structure recovery;
+//! - [`path_tests`] — warm-started λ-path behavior + the golden-path
+//!   regression (checked-in JSON);
+//! - [`context_tests`] — `SolverContext` statistic caching and workspace
+//!   arena reuse;
+//! - [`cv_tests`] — K-fold cross-validated λ selection end to end;
+//! - [`screening_tests`] — sequential strong rule, KKT post-check, and the
+//!   screened-vs-full equivalence/efficiency guarantees;
+//! - [`cli_tests`] — config/dataset plumbing plus the compiled `cggm`
+//!   binary run as a subprocess;
+//! - [`oracle_tests`] — the cross-language PJRT oracle (skips when
+//!   artifacts are not built).
+//!
+//! Layout, fixture seeds, and golden-file regeneration are documented in
+//! `docs/TESTING.md`.
 
-use cggm::cggm::{CggmModel, CholKind, Dataset, Objective};
-use cggm::coordinator::{fit_path, fit_path_in_context, PathOptions};
-use cggm::datagen;
-use cggm::gemm::native::NativeGemm;
-use cggm::gemm::GemmEngine;
-use cggm::linalg::dense::Mat;
-use cggm::metrics::f1_edges_sym;
-use cggm::runtime::{artifact_dir, compile_artifact, manifest::Manifest};
-use cggm::solvers::{
-    dense_workingset_bytes, solve, solve_in_context, SolveOptions, SolverContext, SolverKind,
-};
-use cggm::util::membudget::MemBudget;
-use cggm::util::rng::Rng;
+#[path = "integration/common.rs"]
+mod common;
 
-fn chain_opts(lam: f64) -> SolveOptions {
-    SolveOptions {
-        lam_l: lam,
-        lam_t: lam,
-        max_iter: 80,
-        ..Default::default()
-    }
-}
+#[path = "integration/solver_tests.rs"]
+mod solver_tests;
 
-/// All three solvers minimize the same convex objective — they must agree on
-/// the final objective value and (essentially) the support.
-#[test]
-fn three_solvers_agree_on_chain() {
-    let prob = datagen::chain::generate(20, 20, 100, 11);
-    let eng = NativeGemm::new(1);
-    let opts = chain_opts(0.25);
-    let mut finals = Vec::new();
-    for kind in SolverKind::paper_three() {
-        let res = solve(kind, &prob.data, &opts, &eng).unwrap();
-        assert!(res.trace.converged, "{:?} did not converge", kind);
-        finals.push((kind, res.trace.final_f().unwrap(), res.model));
-    }
-    let f0 = finals[0].1;
-    for (kind, f, _) in &finals {
-        assert!(
-            (f - f0).abs() < 1e-3 * f0.abs().max(1.0),
-            "{kind:?} objective {f} vs {f0}"
-        );
-    }
-    // Supports agree closely (tolerate a few boundary entries).
-    let m0 = &finals[0].2;
-    for (kind, _, m) in &finals[1..] {
-        let diff = m0.lambda.to_dense().max_abs_diff(&m.lambda.to_dense());
-        assert!(diff < 0.05, "{kind:?} Λ differs by {diff}");
-    }
-}
+#[path = "integration/path_tests.rs"]
+mod path_tests;
 
-#[test]
-fn three_solvers_agree_on_cluster_graph() {
-    let prob = datagen::cluster_graph::generate(
-        40,
-        30,
-        120,
-        5,
-        &datagen::cluster_graph::ClusterOptions {
-            cluster_size: 10,
-            hub_coeff: 2.0,
-            ..Default::default()
-        },
-    );
-    let eng = NativeGemm::new(1);
-    let opts = SolveOptions {
-        lam_l: 0.6,
-        lam_t: 0.6,
-        max_iter: 100,
-        ..Default::default()
-    };
-    let mut finals = Vec::new();
-    for kind in SolverKind::paper_three() {
-        let res = solve(kind, &prob.data, &opts, &eng).unwrap();
-        assert!(res.trace.converged, "{kind:?} did not converge");
-        finals.push((kind, res.trace.final_f().unwrap()));
-    }
-    let f0 = finals[0].1;
-    for (kind, f) in &finals {
-        assert!(
-            (f - f0).abs() < 2e-3 * f0.abs().max(1.0),
-            "{kind:?}: {f} vs {f0}"
-        );
-    }
-}
+#[path = "integration/context_tests.rs"]
+mod context_tests;
 
-/// The block solver under a tiny budget must reach the same optimum while
-/// never exceeding its budget (the paper's memory story).
-#[test]
-fn bcd_budget_enforced_and_equivalent() {
-    let prob = datagen::chain::generate(24, 24, 90, 2);
-    let eng = NativeGemm::new(1);
-    let unlimited = solve(
-        SolverKind::AltNewtonBcd,
-        &prob.data,
-        &chain_opts(0.3),
-        &eng,
-    )
-    .unwrap();
-    let budget = MemBudget::new(48 * 1024);
-    let tight_opts = SolveOptions {
-        budget: budget.clone(),
-        ..chain_opts(0.3)
-    };
-    let tight = solve(SolverKind::AltNewtonBcd, &prob.data, &tight_opts, &eng).unwrap();
-    assert!(tight.trace.converged);
-    assert!(budget.peak() <= 48 * 1024, "peak {} bytes", budget.peak());
-    let (fu, ft) = (
-        unlimited.trace.final_f().unwrap(),
-        tight.trace.final_f().unwrap(),
-    );
-    assert!((fu - ft).abs() < 1e-4 * fu.abs().max(1.0));
-}
+#[path = "integration/cv_tests.rs"]
+mod cv_tests;
 
-/// Clustering ablation: contiguous blocks give the same answer (just more
-/// cache misses).
-#[test]
-fn clustering_ablation_same_result() {
-    let prob = datagen::cluster_graph::generate(
-        30,
-        24,
-        80,
-        9,
-        &datagen::cluster_graph::ClusterOptions {
-            cluster_size: 8,
-            hub_coeff: 2.0,
-            ..Default::default()
-        },
-    );
-    let eng = NativeGemm::new(1);
-    let budget = MemBudget::new(32 * 1024);
-    let base = SolveOptions {
-        lam_l: 0.5,
-        lam_t: 0.5,
-        max_iter: 80,
-        budget: budget.clone(),
-        ..Default::default()
-    };
-    let with = solve(SolverKind::AltNewtonBcd, &prob.data, &base, &eng).unwrap();
-    let without_opts = SolveOptions {
-        clustering: false,
-        budget: MemBudget::new(32 * 1024),
-        ..base
-    };
-    let without = solve(SolverKind::AltNewtonBcd, &prob.data, &without_opts, &eng).unwrap();
-    let (fa, fb) = (
-        with.trace.final_f().unwrap(),
-        without.trace.final_f().unwrap(),
-    );
-    assert!((fa - fb).abs() < 1e-4 * fa.abs().max(1.0));
-}
+#[path = "integration/screening_tests.rs"]
+mod screening_tests;
 
-/// Multithreaded solve agrees with single-threaded.
-#[test]
-fn threads_do_not_change_answer() {
-    let prob = datagen::chain::generate(16, 16, 70, 21);
-    let eng1 = NativeGemm::new(1);
-    let eng4 = NativeGemm::new(4);
-    let o1 = chain_opts(0.3);
-    let o4 = SolveOptions {
-        threads: 4,
-        ..chain_opts(0.3)
-    };
-    let r1 = solve(SolverKind::AltNewtonBcd, &prob.data, &o1, &eng1).unwrap();
-    let r4 = solve(SolverKind::AltNewtonBcd, &prob.data, &o4, &eng4).unwrap();
-    let (f1, f4) = (r1.trace.final_f().unwrap(), r4.trace.final_f().unwrap());
-    assert!((f1 - f4).abs() < 1e-6 * f1.abs().max(1.0));
-}
+#[path = "integration/cli_tests.rs"]
+mod cli_tests;
 
-/// Structure recovery improves with sample size (Fig. 5b's shape).
-#[test]
-fn f1_improves_with_samples() {
-    let eng = NativeGemm::new(1);
-    let mut scores = Vec::new();
-    for n in [40, 400] {
-        let prob = datagen::chain::generate(30, 30, n, 33);
-        let res = solve(SolverKind::AltNewtonCd, &prob.data, &chain_opts(0.5), &eng).unwrap();
-        scores.push(f1_edges_sym(&res.model.lambda, &prob.truth.lambda).f1);
-    }
-    assert!(
-        scores[1] > scores[0] - 0.02,
-        "F1 did not improve with n: {scores:?}"
-    );
-    assert!(scores[1] > 0.5, "F1 at n=400 too low: {scores:?}");
-}
-
-/// Cross-language oracle: the Rust objective must match the AOT-lowered L2
-/// JAX objective executed through PJRT, on random dense inputs at the
-/// artifact's fixed shape.
-#[test]
-fn rust_objective_matches_jax_artifact() {
-    let dir = artifact_dir();
-    let manifest_path = dir.join("manifest.json");
-    if !manifest_path.exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let manifest = Manifest::load(&manifest_path).unwrap();
-    let entry = manifest.find("cggm_obj", None, None).expect("oracle artifact");
-    let q = 16usize;
-    let p = 24usize;
-    assert_eq!(entry.inputs[0], vec![q, q]);
-
-    let client = xla::PjRtClient::cpu().unwrap();
-    let exe = compile_artifact(&client, &dir, entry).unwrap();
-
-    let mut rng = Rng::new(44);
-    // Random SPD Λ, sparse-ish Θ, covariance matrices from a random dataset.
-    let n = 32;
-    let data = Dataset::new(
-        Mat::from_fn(p, n, |_, _| rng.normal()),
-        Mat::from_fn(q, n, |_, _| rng.normal()),
-    );
-    let mut model = CggmModel::init(p, q);
-    for i in 0..q {
-        model.lambda.set(i, i, 3.0 + rng.uniform());
-    }
-    for _ in 0..q {
-        let (i, j) = (rng.below(q), rng.below(q));
-        if i != j {
-            model.lambda.set_sym(i, j, 0.2 * rng.normal());
-        }
-    }
-    for _ in 0..2 * p {
-        model.theta.set(rng.below(p), rng.below(q), rng.normal() * 0.4);
-    }
-    let (lam_l, lam_t) = (0.37, 0.21);
-
-    // Rust value.
-    let eng = NativeGemm::new(1);
-    let obj = Objective::new(&data, lam_l, lam_t).with_chol(CholKind::Dense);
-    let f_rust = obj.value(&model, &eng).unwrap();
-
-    // JAX artifact value.
-    let lam_d = model.lambda.to_dense();
-    let th_d = model.theta.to_dense();
-    let syy = data.syy_dense(&eng);
-    let sxy = data.sxy_dense(&eng);
-    let sxx = data.sxx_dense(&eng);
-    let lit = |m: &Mat, r: usize, c: usize| {
-        xla::Literal::vec1(m.data())
-            .reshape(&[r as i64, c as i64])
-            .unwrap()
-    };
-    let args = vec![
-        lit(&lam_d, q, q),
-        lit(&th_d, p, q),
-        lit(&syy, q, q),
-        lit(&sxy, p, q),
-        lit(&sxx, p, p),
-        xla::Literal::scalar(lam_l),
-        xla::Literal::scalar(lam_t),
-    ];
-    let result = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
-        .to_literal_sync()
-        .unwrap();
-    let f_jax: f64 = result
-        .to_tuple1()
-        .unwrap()
-        .to_vec::<f64>()
-        .unwrap()[0];
-
-    let rel = (f_rust - f_jax).abs() / f_rust.abs().max(1.0);
-    assert!(
-        rel < 1e-9,
-        "cross-language objective mismatch: rust={f_rust} jax={f_jax}"
-    );
-}
-
-/// Same oracle for the analytic gradients (Eq. 3).
-#[test]
-fn rust_gradients_match_jax_artifact() {
-    let dir = artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
-    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
-    let entry = manifest.find("cggm_grads", None, None).expect("grads artifact");
-    let (p, q) = (24usize, 16usize);
-    let client = xla::PjRtClient::cpu().unwrap();
-    let exe = compile_artifact(&client, &dir, entry).unwrap();
-
-    let mut rng = Rng::new(45);
-    let n = 40;
-    let data = Dataset::new(
-        Mat::from_fn(p, n, |_, _| rng.normal()),
-        Mat::from_fn(q, n, |_, _| rng.normal()),
-    );
-    let mut model = CggmModel::init(p, q);
-    for i in 0..q {
-        model.lambda.set(i, i, 3.0);
-    }
-    model.lambda.set_sym(0, 5, 0.3);
-    for _ in 0..p {
-        model.theta.set(rng.below(p), rng.below(q), rng.normal() * 0.4);
-    }
-    let eng = NativeGemm::new(1);
-    let obj = Objective::new(&data, 0.0, 0.0).with_chol(CholKind::Dense);
-    let (_, _, factor, rt) = obj.eval(&model, &eng).unwrap();
-    let sigma = factor.inverse_dense(&eng);
-    let psi = obj.psi_dense(&sigma, &rt, &eng);
-    let gl_rust = obj.grad_lambda_dense(&sigma, &psi, &eng);
-    let gt_rust = obj.grad_theta_dense(&sigma, &rt, &eng);
-
-    let lam_d = model.lambda.to_dense();
-    let th_d = model.theta.to_dense();
-    let syy = data.syy_dense(&eng);
-    let sxy = data.sxy_dense(&eng);
-    let sxx = data.sxx_dense(&eng);
-    let lit = |m: &Mat, r: usize, c: usize| {
-        xla::Literal::vec1(m.data())
-            .reshape(&[r as i64, c as i64])
-            .unwrap()
-    };
-    let args = vec![
-        lit(&lam_d, q, q),
-        lit(&th_d, p, q),
-        lit(&syy, q, q),
-        lit(&sxy, p, q),
-        lit(&sxx, p, p),
-    ];
-    let mut result = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
-        .to_literal_sync()
-        .unwrap();
-    let parts = result.decompose_tuple().unwrap();
-    let gl_jax = parts[0].to_vec::<f64>().unwrap();
-    let gt_jax = parts[1].to_vec::<f64>().unwrap();
-    for (a, b) in gl_rust.data().iter().zip(&gl_jax) {
-        assert!((a - b).abs() < 1e-9, "∇Λ mismatch: {a} vs {b}");
-    }
-    for (a, b) in gt_rust.data().iter().zip(&gt_jax) {
-        assert!((a - b).abs() < 1e-9, "∇Θ mismatch: {a} vs {b}");
-    }
-}
-
-/// A budget too small for even one cached column is the true memory wall:
-/// the solver reports it instead of thrashing.
-#[test]
-fn impossible_budget_is_an_error() {
-    let prob = datagen::chain::generate(64, 64, 30, 4);
-    let eng = NativeGemm::new(1);
-    let opts = SolveOptions {
-        lam_l: 0.5,
-        lam_t: 0.5,
-        max_iter: 5,
-        budget: MemBudget::new(256), // bytes — cannot hold one q-column
-        chol: CholKind::SparseRcm,
-        ..Default::default()
-    };
-    match solve(SolverKind::AltNewtonBcd, &prob.data, &opts, &eng) {
-        Err(cggm::solvers::SolveError::Budget(_)) => {}
-        Ok(_) => panic!("expected budget failure"),
-        Err(e) => panic!("wrong error: {e}"),
-    }
-}
-
-/// The wall-clock cap stops long runs early without corrupting state.
-#[test]
-fn time_limit_respected() {
-    let prob = datagen::chain::generate(200, 200, 100, 6);
-    let eng = NativeGemm::new(1);
-    let opts = SolveOptions {
-        lam_l: 0.05, // dense active set → slow per iteration
-        lam_t: 0.05,
-        max_iter: 1000,
-        time_limit: 0.05,
-        ..Default::default()
-    };
-    let res = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
-    assert!(!res.trace.converged);
-    assert!(res.trace.records.len() < 1000);
-    assert!(res.trace.final_f().unwrap().is_finite());
-}
-
-/// Run-config file → solver options → fit, end to end through the
-/// coordinator (the CLI's code path).
-#[test]
-fn config_file_drives_a_fit() {
-    let tmp = std::env::temp_dir().join("cggm_it_cfg.json");
-    std::fs::write(
-        &tmp,
-        r#"{"workload": "chain", "p": 30, "q": 30, "n": 60, "seed": 3,
-            "solver": "bcd", "lambda": 0.4, "max_iter": 40,
-            "mem_budget": "1MB"}"#,
-    )
-    .unwrap();
-    let cfg = cggm::coordinator::RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
-    let prob = cggm::coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed);
-    let opts = cfg.solve_options();
-    let eng = NativeGemm::new(1);
-    let (sum, _) = cggm::coordinator::run_fit(cfg.solver, &prob, &opts, &eng, None).unwrap();
-    assert!(sum.converged);
-    assert!(sum.peak_bytes <= 1 << 20);
-    let _ = std::fs::remove_file(tmp);
-}
-
-/// Dataset save/load through the coordinator feeds a solve identically.
-#[test]
-fn saved_dataset_reproduces_fit() {
-    let prob = datagen::chain::generate(20, 20, 60, 8);
-    let tmp = std::env::temp_dir().join("cggm_it_ds.bin");
-    cggm::coordinator::save_dataset(&prob.data, &tmp).unwrap();
-    let loaded = cggm::coordinator::load_dataset(&tmp).unwrap();
-    let eng = NativeGemm::new(1);
-    let opts = chain_opts(0.4);
-    let a = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
-    let b = solve(SolverKind::AltNewtonCd, &loaded, &opts, &eng).unwrap();
-    assert_eq!(a.trace.final_f(), b.trace.final_f());
-    let _ = std::fs::remove_file(tmp);
-}
-
-/// At convergence the stopping statistic really satisfies the paper's rule.
-#[test]
-fn stopping_rule_holds_at_convergence() {
-    let prob = datagen::chain::generate(25, 25, 120, 10);
-    let eng = NativeGemm::new(1);
-    for kind in SolverKind::paper_three() {
-        let res = solve(kind, &prob.data, &chain_opts(0.3), &eng).unwrap();
-        assert!(res.trace.converged, "{kind:?}");
-        let ratio = res.trace.stopping_ratio().unwrap();
-        assert!(ratio <= 0.01 + 1e-12, "{kind:?}: ratio {ratio}");
-    }
-}
-
-/// The workspace arena makes `MemBudget::peak()` report the true dense
-/// working set: for a small AltNewtonCD run it must agree with the analytic
-/// `dense_workingset_bytes` estimate within a tolerance (the estimate counts
-/// S_yy/Σ/Ψ/W + S_xx + Vᵀ; the measured set adds the gradients and the q×n
-/// R̃ᵀ panel, hence the slack).
-#[test]
-fn workspace_peak_matches_dense_estimate() {
-    let (p, q, n) = (30, 30, 30);
-    let prob = datagen::chain::generate(p, q, n, 7);
-    let eng = NativeGemm::new(1);
-    let budget = MemBudget::unlimited();
-    let opts = SolveOptions {
-        lam_l: 0.3,
-        lam_t: 0.3,
-        max_iter: 40,
-        budget: budget.clone(),
-        ..Default::default()
-    };
-    let res = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
-    assert!(res.trace.converged);
-    let est = dense_workingset_bytes(SolverKind::AltNewtonCd, p, q);
-    let peak = budget.peak();
-    assert!(
-        peak >= est / 2 && peak <= est.saturating_mul(5) / 2,
-        "measured peak {peak} bytes vs analytic estimate {est} bytes"
-    );
-}
-
-/// Satellite: on a 2-point λ path, the warm-started second solve converges
-/// in at most the cold-start iteration count and reaches the same objective
-/// within the stopping tolerance.
-#[test]
-fn warm_start_beats_cold_start_on_a_two_point_path() {
-    let prob = datagen::chain::generate(20, 20, 100, 11);
-    let eng = NativeGemm::new(1);
-    let base = SolveOptions {
-        max_iter: 100,
-        ..Default::default()
-    };
-    let grid = vec![(0.5, 0.5), (0.25, 0.25)];
-    let mk = |warm_start: bool| PathOptions {
-        lambdas: Some(grid.clone()),
-        warm_start,
-        ..Default::default()
-    };
-    let warm = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &mk(true), &eng).unwrap();
-    let cold = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &mk(false), &eng).unwrap();
-    assert_eq!(warm.points.len(), 2);
-    assert!(warm.points[1].converged && cold.points[1].converged);
-    assert!(
-        warm.points[1].iters <= cold.points[1].iters,
-        "warm {} iters vs cold {} iters",
-        warm.points[1].iters,
-        cold.points[1].iters
-    );
-    let (fw, fc) = (warm.points[1].f, cold.points[1].f);
-    assert!(
-        (fw - fc).abs() <= base.tol * fc.abs().max(1.0),
-        "objectives diverged: warm {fw} vs cold {fc}"
-    );
-    // The first point is identical either way (no warm start to apply yet).
-    assert_eq!(warm.points[0].iters, cold.points[0].iters);
-}
-
-/// A λ path on a shared context computes each covariance statistic exactly
-/// once, and the workspace arena does not grow after the first solve.
-#[test]
-fn lambda_path_reuses_context_state() {
-    let prob = datagen::chain::generate(16, 16, 80, 13);
-    let eng = NativeGemm::new(1);
-    let base = SolveOptions {
-        max_iter: 80,
-        ..Default::default()
-    };
-    let ctx = SolverContext::new(&prob.data, &base, &eng);
-    let popts = PathOptions {
-        points: 4,
-        min_ratio: 0.2,
-        ..Default::default()
-    };
-    let res = fit_path_in_context(SolverKind::AltNewtonCd, &ctx, &base, &popts).unwrap();
-    assert_eq!(res.points.len(), 4);
-    assert_eq!(
-        ctx.stat_computes(),
-        3,
-        "S_yy/S_xx/S_xy must be computed once for the whole path"
-    );
-    let misses_after_path = ctx.workspace().misses();
-    // Another solve on the same context allocates nothing new.
-    let _ = solve_in_context(SolverKind::AltNewtonCd, &ctx, &base, res.model.as_ref()).unwrap();
-    assert_eq!(
-        ctx.workspace().misses(),
-        misses_after_path,
-        "a further solve on a warm context must be allocation-free"
-    );
-}
-
-/// Genomic workload through the whole pipe (simulator → block solver).
-#[test]
-fn genomic_pipeline_smoke() {
-    let prob = datagen::genomic::generate(
-        300,
-        40,
-        80,
-        12,
-        &datagen::genomic::GenomicOptions::default(),
-    );
-    let eng = NativeGemm::new(1);
-    let opts = SolveOptions {
-        lam_l: 0.15,
-        lam_t: 0.15,
-        max_iter: 40,
-        budget: MemBudget::new(8 << 20),
-        ..Default::default()
-    };
-    let res = solve(SolverKind::AltNewtonBcd, &prob.data, &opts, &eng).unwrap();
-    assert!(res.trace.final_f().unwrap().is_finite());
-    assert!(res.model.theta_nnz() > 0, "no eQTLs recovered at all");
-}
+#[path = "integration/oracle_tests.rs"]
+mod oracle_tests;

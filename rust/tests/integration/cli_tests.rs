@@ -1,0 +1,148 @@
+//! CLI-level plumbing: config files driving fits, dataset round-trips, and
+//! the compiled `cggm` binary run as a subprocess (the acceptance path for
+//! `cggm cv --folds 5`).
+
+use super::common::chain_opts;
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{solve, SolverKind};
+use cggm::util::json::Json;
+use std::process::Command;
+
+/// Run-config file → solver options → fit, end to end through the
+/// coordinator (the CLI's code path).
+#[test]
+fn config_file_drives_a_fit() {
+    let tmp = std::env::temp_dir().join("cggm_it_cfg.json");
+    std::fs::write(
+        &tmp,
+        r#"{"workload": "chain", "p": 30, "q": 30, "n": 60, "seed": 3,
+            "solver": "bcd", "lambda": 0.4, "max_iter": 40,
+            "mem_budget": "1MB"}"#,
+    )
+    .unwrap();
+    let cfg = cggm::coordinator::RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+    let prob = cggm::coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed);
+    let opts = cfg.solve_options();
+    let eng = NativeGemm::new(1);
+    let (sum, _) = cggm::coordinator::run_fit(cfg.solver, &prob, &opts, &eng, None).unwrap();
+    assert!(sum.converged);
+    assert!(sum.peak_bytes <= 1 << 20);
+    let _ = std::fs::remove_file(tmp);
+}
+
+/// Dataset save/load through the coordinator feeds a solve identically.
+#[test]
+fn saved_dataset_reproduces_fit() {
+    let prob = datagen::chain::generate(20, 20, 60, 8);
+    let tmp = std::env::temp_dir().join("cggm_it_ds.bin");
+    cggm::coordinator::save_dataset(&prob.data, &tmp).unwrap();
+    let loaded = cggm::coordinator::load_dataset(&tmp).unwrap();
+    let eng = NativeGemm::new(1);
+    let opts = chain_opts(0.4);
+    let a = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
+    let b = solve(SolverKind::AltNewtonCd, &loaded, &opts, &eng).unwrap();
+    assert_eq!(a.trace.final_f(), b.trace.final_f());
+    let _ = std::fs::remove_file(tmp);
+}
+
+/// Acceptance: the compiled binary's `cggm cv --folds 5` selects a λ on a
+/// synthetic chain problem, emits well-formed JSON (CV curve + refit), and
+/// exits 0.
+#[test]
+fn cggm_cv_subcommand_selects_a_lambda() {
+    let out_dir = std::env::temp_dir().join("cggm_cli_cv_out");
+    let output = Command::new(env!("CARGO_BIN_EXE_cggm"))
+        .args([
+            "cv",
+            "--workload",
+            "chain",
+            "--p",
+            "12",
+            "--q",
+            "12",
+            "--n",
+            "120",
+            "--seed",
+            "5",
+            "--solver",
+            "alt",
+            "--folds",
+            "5",
+            "--cv-threads",
+            "2",
+            "--path-points",
+            "4",
+            "--path-min-ratio",
+            "0.1",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("failed to run the cggm binary");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "cggm cv failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    let doc = Json::parse(&stdout).expect("cv output must be JSON");
+    assert_eq!(
+        doc.get("folds").and_then(|v| v.as_usize()),
+        Some(5),
+        "bad folds in {stdout}"
+    );
+    let best_l = doc
+        .get("best_lambda_l")
+        .and_then(|v| v.as_f64())
+        .expect("best_lambda_l");
+    assert!(best_l.is_finite() && best_l > 0.0);
+    let points = doc.get("points").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(points.len(), 4);
+    // The refit ran and reports its path.
+    let refit = doc.get("refit").expect("refit block");
+    assert!(refit.get("points").is_some(), "refit missing in {stdout}");
+    // The CV curve CSV landed in --out.
+    let csv = out_dir.join("cv_alt_newton_cd.csv");
+    let text = std::fs::read_to_string(&csv).expect("cv csv written");
+    assert!(text.starts_with("lambda_l,lambda_t,mean_nll"));
+    assert_eq!(text.lines().count(), 1 + 4);
+    let _ = std::fs::remove_dir_all(out_dir);
+}
+
+/// `cggm path` honors `--screen full` (no screened points in the JSON).
+#[test]
+fn cggm_path_subcommand_screen_flag() {
+    let out_dir = std::env::temp_dir().join("cggm_cli_path_out");
+    let output = Command::new(env!("CARGO_BIN_EXE_cggm"))
+        .args([
+            "path",
+            "--workload",
+            "chain",
+            "--p",
+            "10",
+            "--q",
+            "10",
+            "--n",
+            "60",
+            "--solver",
+            "alt",
+            "--path-points",
+            "3",
+            "--screen",
+            "full",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("failed to run the cggm binary");
+    assert!(output.status.success());
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let doc = Json::parse(&stdout).expect("path output must be JSON");
+    assert_eq!(
+        doc.get("total_kkt_scans").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "--screen full must disable strong-rule scans: {stdout}"
+    );
+    let _ = std::fs::remove_dir_all(out_dir);
+}

@@ -1,0 +1,44 @@
+//! Shared fixtures for the integration suite.
+//!
+//! Every fixture is deterministic: generator seeds are pinned here (and
+//! documented in `docs/TESTING.md`) so failures replay exactly. Modules use
+//! different seeds on purpose — a regression in one workload should not be
+//! masked by another module's tuning.
+
+#![allow(dead_code)] // each test module uses a subset of the fixtures
+
+use cggm::datagen::{self, Problem};
+use cggm::solvers::SolveOptions;
+
+/// Seed for the "medium chain" problems (solver agreement, golden path).
+pub const CHAIN_SEED: u64 = 11;
+
+/// Seed for CV fixtures (train/eval splits stay reproducible).
+pub const CV_SEED: u64 = 29;
+
+/// Solve options shared by the chain fixtures: both penalties at `lam`,
+/// enough outer iterations to converge at the default tolerance.
+pub fn chain_opts(lam: f64) -> SolveOptions {
+    SolveOptions {
+        lam_l: lam,
+        lam_t: lam,
+        max_iter: 80,
+        ..Default::default()
+    }
+}
+
+/// The suite's workhorse problem: 20×20 chain, n=100, seed [`CHAIN_SEED`].
+pub fn chain_medium() -> Problem {
+    datagen::chain::generate(20, 20, 100, CHAIN_SEED)
+}
+
+/// Asymmetric golden-path problem (p=20 inputs, q=10 outputs), fixed seed 7
+/// — the shape pinned by `tests/golden/path_chain_p20_q10.json`.
+pub fn chain_golden() -> Problem {
+    datagen::chain::generate(20, 10, 80, 7)
+}
+
+/// Larger sample for CV: p=q=15, n=360 (240 train + 120 eval in cv_tests).
+pub fn chain_cv() -> Problem {
+    datagen::chain::generate(15, 15, 360, CV_SEED)
+}

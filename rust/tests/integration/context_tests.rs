@@ -1,0 +1,73 @@
+//! `SolverContext` behavior across whole solves: statistic caching, arena
+//! reuse, and the measured-vs-analytic working set.
+
+use cggm::coordinator::{fit_path_in_context, PathOptions};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{
+    dense_workingset_bytes, solve, solve_in_context, SolveOptions, SolverContext, SolverKind,
+};
+use cggm::util::membudget::MemBudget;
+
+/// The workspace arena makes `MemBudget::peak()` report the true dense
+/// working set: for a small AltNewtonCD run it must agree with the analytic
+/// `dense_workingset_bytes` estimate within a tolerance (the estimate counts
+/// S_yy/Σ/Ψ/W + S_xx + Vᵀ; the measured set adds the gradients and the q×n
+/// R̃ᵀ panel, hence the slack).
+#[test]
+fn workspace_peak_matches_dense_estimate() {
+    let (p, q, n) = (30, 30, 30);
+    let prob = datagen::chain::generate(p, q, n, 7);
+    let eng = NativeGemm::new(1);
+    let budget = MemBudget::unlimited();
+    let opts = SolveOptions {
+        lam_l: 0.3,
+        lam_t: 0.3,
+        max_iter: 40,
+        budget: budget.clone(),
+        ..Default::default()
+    };
+    let res = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
+    assert!(res.trace.converged);
+    let est = dense_workingset_bytes(SolverKind::AltNewtonCd, p, q);
+    let peak = budget.peak();
+    assert!(
+        peak >= est / 2 && peak <= est.saturating_mul(5) / 2,
+        "measured peak {peak} bytes vs analytic estimate {est} bytes"
+    );
+}
+
+/// A λ path on a shared context computes each covariance statistic exactly
+/// once — including the strong-rule screening's per-point gradient
+/// evaluations, which reuse the cached S_yy/S_xy — and the workspace arena
+/// does not grow after the first solve.
+#[test]
+fn lambda_path_reuses_context_state() {
+    let prob = datagen::chain::generate(16, 16, 80, 13);
+    let eng = NativeGemm::new(1);
+    let base = SolveOptions {
+        max_iter: 80,
+        ..Default::default()
+    };
+    let ctx = SolverContext::new(&prob.data, &base, &eng);
+    let popts = PathOptions {
+        points: 4,
+        min_ratio: 0.2,
+        ..Default::default()
+    };
+    let res = fit_path_in_context(SolverKind::AltNewtonCd, &ctx, &base, &popts).unwrap();
+    assert_eq!(res.points.len(), 4);
+    assert_eq!(
+        ctx.stat_computes(),
+        3,
+        "S_yy/S_xx/S_xy must be computed once for the whole path"
+    );
+    let misses_after_path = ctx.workspace().misses();
+    // Another solve on the same context allocates nothing new.
+    let _ = solve_in_context(SolverKind::AltNewtonCd, &ctx, &base, res.model.as_ref()).unwrap();
+    assert_eq!(
+        ctx.workspace().misses(),
+        misses_after_path,
+        "a further solve on a warm context must be allocation-free"
+    );
+}

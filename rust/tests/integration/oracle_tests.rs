@@ -1,0 +1,159 @@
+//! Cross-language oracle: the Rust objective/gradients vs the AOT-compiled
+//! L2 JAX objective executed through PJRT. Both tests skip (with a note)
+//! when the artifacts are not built — `make artifacts` enables them.
+
+use cggm::cggm::{CggmModel, CholKind, Dataset, Objective};
+use cggm::gemm::native::NativeGemm;
+use cggm::linalg::dense::Mat;
+use cggm::runtime::{artifact_dir, compile_artifact, manifest::Manifest};
+use cggm::util::rng::Rng;
+
+/// Cross-language oracle: the Rust objective must match the AOT-lowered L2
+/// JAX objective executed through PJRT, on random dense inputs at the
+/// artifact's fixed shape.
+#[test]
+fn rust_objective_matches_jax_artifact() {
+    let dir = artifact_dir();
+    let manifest_path = dir.join("manifest.json");
+    if !manifest_path.exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&manifest_path).unwrap();
+    let entry = manifest.find("cggm_obj", None, None).expect("oracle artifact");
+    let q = 16usize;
+    let p = 24usize;
+    assert_eq!(entry.inputs[0], vec![q, q]);
+
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = compile_artifact(&client, &dir, entry).unwrap();
+
+    let mut rng = Rng::new(44);
+    // Random SPD Λ, sparse-ish Θ, covariance matrices from a random dataset.
+    let n = 32;
+    let data = Dataset::new(
+        Mat::from_fn(p, n, |_, _| rng.normal()),
+        Mat::from_fn(q, n, |_, _| rng.normal()),
+    );
+    let mut model = CggmModel::init(p, q);
+    for i in 0..q {
+        model.lambda.set(i, i, 3.0 + rng.uniform());
+    }
+    for _ in 0..q {
+        let (i, j) = (rng.below(q), rng.below(q));
+        if i != j {
+            model.lambda.set_sym(i, j, 0.2 * rng.normal());
+        }
+    }
+    for _ in 0..2 * p {
+        model.theta.set(rng.below(p), rng.below(q), rng.normal() * 0.4);
+    }
+    let (lam_l, lam_t) = (0.37, 0.21);
+
+    // Rust value.
+    let eng = NativeGemm::new(1);
+    let obj = Objective::new(&data, lam_l, lam_t).with_chol(CholKind::Dense);
+    let f_rust = obj.value(&model, &eng).unwrap();
+
+    // JAX artifact value.
+    let lam_d = model.lambda.to_dense();
+    let th_d = model.theta.to_dense();
+    let syy = data.syy_dense(&eng);
+    let sxy = data.sxy_dense(&eng);
+    let sxx = data.sxx_dense(&eng);
+    let lit = |m: &Mat, r: usize, c: usize| {
+        xla::Literal::vec1(m.data())
+            .reshape(&[r as i64, c as i64])
+            .unwrap()
+    };
+    let args = vec![
+        lit(&lam_d, q, q),
+        lit(&th_d, p, q),
+        lit(&syy, q, q),
+        lit(&sxy, p, q),
+        lit(&sxx, p, p),
+        xla::Literal::scalar(lam_l),
+        xla::Literal::scalar(lam_t),
+    ];
+    let result = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let f_jax: f64 = result
+        .to_tuple1()
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap()[0];
+
+    let rel = (f_rust - f_jax).abs() / f_rust.abs().max(1.0);
+    assert!(
+        rel < 1e-9,
+        "cross-language objective mismatch: rust={f_rust} jax={f_jax}"
+    );
+}
+
+/// Same oracle for the analytic gradients (Eq. 3).
+#[test]
+fn rust_gradients_match_jax_artifact() {
+    let dir = artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let entry = manifest.find("cggm_grads", None, None).expect("grads artifact");
+    let (p, q) = (24usize, 16usize);
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = compile_artifact(&client, &dir, entry).unwrap();
+
+    let mut rng = Rng::new(45);
+    let n = 40;
+    let data = Dataset::new(
+        Mat::from_fn(p, n, |_, _| rng.normal()),
+        Mat::from_fn(q, n, |_, _| rng.normal()),
+    );
+    let mut model = CggmModel::init(p, q);
+    for i in 0..q {
+        model.lambda.set(i, i, 3.0);
+    }
+    model.lambda.set_sym(0, 5, 0.3);
+    for _ in 0..p {
+        model.theta.set(rng.below(p), rng.below(q), rng.normal() * 0.4);
+    }
+    let eng = NativeGemm::new(1);
+    let obj = Objective::new(&data, 0.0, 0.0).with_chol(CholKind::Dense);
+    let (_, _, factor, rt) = obj.eval(&model, &eng).unwrap();
+    let sigma = factor.inverse_dense(&eng);
+    let psi = obj.psi_dense(&sigma, &rt, &eng);
+    let gl_rust = obj.grad_lambda_dense(&sigma, &psi, &eng);
+    let gt_rust = obj.grad_theta_dense(&sigma, &rt, &eng);
+
+    let lam_d = model.lambda.to_dense();
+    let th_d = model.theta.to_dense();
+    let syy = data.syy_dense(&eng);
+    let sxy = data.sxy_dense(&eng);
+    let sxx = data.sxx_dense(&eng);
+    let lit = |m: &Mat, r: usize, c: usize| {
+        xla::Literal::vec1(m.data())
+            .reshape(&[r as i64, c as i64])
+            .unwrap()
+    };
+    let args = vec![
+        lit(&lam_d, q, q),
+        lit(&th_d, p, q),
+        lit(&syy, q, q),
+        lit(&sxy, p, q),
+        lit(&sxx, p, p),
+    ];
+    let mut result = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = result.decompose_tuple().unwrap();
+    let gl_jax = parts[0].to_vec::<f64>().unwrap();
+    let gt_jax = parts[1].to_vec::<f64>().unwrap();
+    for (a, b) in gl_rust.data().iter().zip(&gl_jax) {
+        assert!((a - b).abs() < 1e-9, "∇Λ mismatch: {a} vs {b}");
+    }
+    for (a, b) in gt_rust.data().iter().zip(&gt_jax) {
+        assert!((a - b).abs() < 1e-9, "∇Θ mismatch: {a} vs {b}");
+    }
+}

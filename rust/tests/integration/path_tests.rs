@@ -1,0 +1,150 @@
+//! Warm-started λ-path behavior and the golden-path regression.
+
+use super::common::chain_golden;
+use cggm::coordinator::{fit_path, PathOptions};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{SolveOptions, SolverKind};
+use cggm::util::json::Json;
+use std::path::PathBuf;
+
+/// Satellite: on a 2-point λ path, the warm-started second solve converges
+/// in at most the cold-start iteration count and reaches the same objective
+/// within the stopping tolerance.
+#[test]
+fn warm_start_beats_cold_start_on_a_two_point_path() {
+    let prob = datagen::chain::generate(20, 20, 100, 11);
+    let eng = NativeGemm::new(1);
+    let base = SolveOptions {
+        max_iter: 100,
+        ..Default::default()
+    };
+    let grid = vec![(0.5, 0.5), (0.25, 0.25)];
+    let mk = |warm_start: bool| PathOptions {
+        lambdas: Some(grid.clone()),
+        warm_start,
+        ..Default::default()
+    };
+    let warm = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &mk(true), &eng).unwrap();
+    let cold = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &mk(false), &eng).unwrap();
+    assert_eq!(warm.points.len(), 2);
+    assert!(warm.points[1].converged && cold.points[1].converged);
+    assert!(
+        warm.points[1].iters <= cold.points[1].iters,
+        "warm {} iters vs cold {} iters",
+        warm.points[1].iters,
+        cold.points[1].iters
+    );
+    let (fw, fc) = (warm.points[1].f, cold.points[1].f);
+    assert!(
+        (fw - fc).abs() <= base.tol * fc.abs().max(1.0),
+        "objectives diverged: warm {fw} vs cold {fc}"
+    );
+    // The first point is identical either way (no warm start to apply yet).
+    assert_eq!(warm.points[0].iters, cold.points[0].iters);
+}
+
+/// Where the golden record lives, relative to the crate root (checked in;
+/// regenerate with `CGGM_REGEN_GOLDEN=1 cargo test golden_path`).
+fn golden_path_file() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("path_chain_p20_q10.json")
+}
+
+fn golden_path_run() -> cggm::coordinator::PathResult {
+    let prob = chain_golden(); // p=20, q=10, n=80, seed 7
+    let eng = NativeGemm::new(1);
+    let base = SolveOptions {
+        max_iter: 100,
+        ..Default::default()
+    };
+    let popts = PathOptions {
+        points: 5,
+        min_ratio: 0.1,
+        ..Default::default() // warm starts + strong screening: the defaults
+    };
+    fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &popts, &eng).unwrap()
+}
+
+fn golden_record(res: &cggm::coordinator::PathResult) -> Json {
+    Json::obj(vec![(
+        "points",
+        Json::arr(res.points.iter().map(|p| {
+            Json::obj(vec![
+                ("lambda_l", Json::num(p.lam_l)),
+                ("lambda_t", Json::num(p.lam_t)),
+                ("f", Json::num(p.f)),
+                ("lambda_nnz", Json::num(p.lambda_nnz as f64)),
+                ("theta_nnz", Json::num(p.theta_nnz as f64)),
+            ])
+        })),
+    )])
+}
+
+/// Golden-path regression: a fixed-seed 20×10 problem's path must reproduce
+/// the checked-in objective values and active-set sizes — so screening (or
+/// any solver) refactors cannot silently change results. The record is
+/// (re)generated when missing or when `CGGM_REGEN_GOLDEN=1`; commit the
+/// regenerated file together with the change that legitimately moved the
+/// numbers (see docs/TESTING.md).
+#[test]
+fn golden_path_regression() {
+    let res = golden_path_run();
+    assert_eq!(res.points.len(), 5);
+    assert!(res.points.iter().all(|p| p.converged));
+    let file = golden_path_file();
+    let regen = std::env::var("CGGM_REGEN_GOLDEN").is_ok();
+    if regen || !file.exists() {
+        if let Some(dir) = file.parent() {
+            std::fs::create_dir_all(dir).unwrap();
+        }
+        std::fs::write(&file, golden_record(&res).to_string_pretty()).unwrap();
+        eprintln!(
+            "golden_path_regression: wrote {} — commit it so future runs \
+             compare against it",
+            file.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&file).unwrap();
+    let want = Json::parse(&text).unwrap();
+    let points = want.get("points").and_then(|p| p.as_arr()).unwrap();
+    assert_eq!(
+        points.len(),
+        res.points.len(),
+        "golden point count changed — regenerate deliberately"
+    );
+    for (k, (gold, got)) in points.iter().zip(&res.points).enumerate() {
+        let num = |key: &str| gold.get(key).and_then(|v| v.as_f64()).unwrap();
+        // λ values must match almost exactly (same data ⇒ same λ_max).
+        assert!(
+            (num("lambda_l") - got.lam_l).abs() <= 1e-9 * got.lam_l.abs().max(1e-12),
+            "point {k}: grid λ_Λ moved: {} vs {}",
+            num("lambda_l"),
+            got.lam_l
+        );
+        assert!(
+            (num("lambda_t") - got.lam_t).abs() <= 1e-9 * got.lam_t.abs().max(1e-12),
+            "point {k}: grid λ_Θ moved"
+        );
+        // Objective within 1e-6 relative; support sizes within ±2 entries
+        // (platform-dependent rounding at the soft-threshold boundary).
+        assert!(
+            (num("f") - got.f).abs() <= 1e-6 * got.f.abs().max(1.0),
+            "point {k}: objective drifted: golden {} vs got {}",
+            num("f"),
+            got.f
+        );
+        let nnz_close = |key: &str, got_nnz: usize| {
+            let want_nnz = num(key);
+            assert!(
+                (want_nnz - got_nnz as f64).abs() <= 2.0,
+                "point {k}: {key} drifted: golden {want_nnz} vs got {got_nnz}"
+            );
+        };
+        nnz_close("lambda_nnz", got.lambda_nnz);
+        nnz_close("theta_nnz", got.theta_nnz);
+    }
+}

@@ -1,0 +1,248 @@
+//! Solver↔solver agreement, budget enforcement, threading, and structure
+//! recovery — every test drives [`cggm::solvers::solve`] end to end.
+
+use super::common::{chain_medium, chain_opts};
+use cggm::cggm::CholKind;
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::metrics::f1_edges_sym;
+use cggm::solvers::{solve, SolveOptions, SolverKind};
+use cggm::util::membudget::MemBudget;
+
+/// All three solvers minimize the same convex objective — they must agree on
+/// the final objective value and (essentially) the support.
+#[test]
+fn three_solvers_agree_on_chain() {
+    let prob = chain_medium();
+    let eng = NativeGemm::new(1);
+    let opts = chain_opts(0.25);
+    let mut finals = Vec::new();
+    for kind in SolverKind::paper_three() {
+        let res = solve(kind, &prob.data, &opts, &eng).unwrap();
+        assert!(res.trace.converged, "{:?} did not converge", kind);
+        finals.push((kind, res.trace.final_f().unwrap(), res.model));
+    }
+    let f0 = finals[0].1;
+    for (kind, f, _) in &finals {
+        assert!(
+            (f - f0).abs() < 1e-3 * f0.abs().max(1.0),
+            "{kind:?} objective {f} vs {f0}"
+        );
+    }
+    // Supports agree closely (tolerate a few boundary entries).
+    let m0 = &finals[0].2;
+    for (kind, _, m) in &finals[1..] {
+        let diff = m0.lambda.to_dense().max_abs_diff(&m.lambda.to_dense());
+        assert!(diff < 0.05, "{kind:?} Λ differs by {diff}");
+    }
+}
+
+#[test]
+fn three_solvers_agree_on_cluster_graph() {
+    let prob = datagen::cluster_graph::generate(
+        40,
+        30,
+        120,
+        5,
+        &datagen::cluster_graph::ClusterOptions {
+            cluster_size: 10,
+            hub_coeff: 2.0,
+            ..Default::default()
+        },
+    );
+    let eng = NativeGemm::new(1);
+    let opts = SolveOptions {
+        lam_l: 0.6,
+        lam_t: 0.6,
+        max_iter: 100,
+        ..Default::default()
+    };
+    let mut finals = Vec::new();
+    for kind in SolverKind::paper_three() {
+        let res = solve(kind, &prob.data, &opts, &eng).unwrap();
+        assert!(res.trace.converged, "{kind:?} did not converge");
+        finals.push((kind, res.trace.final_f().unwrap()));
+    }
+    let f0 = finals[0].1;
+    for (kind, f) in &finals {
+        assert!(
+            (f - f0).abs() < 2e-3 * f0.abs().max(1.0),
+            "{kind:?}: {f} vs {f0}"
+        );
+    }
+}
+
+/// The block solver under a tiny budget must reach the same optimum while
+/// never exceeding its budget (the paper's memory story).
+#[test]
+fn bcd_budget_enforced_and_equivalent() {
+    let prob = datagen::chain::generate(24, 24, 90, 2);
+    let eng = NativeGemm::new(1);
+    let unlimited = solve(
+        SolverKind::AltNewtonBcd,
+        &prob.data,
+        &chain_opts(0.3),
+        &eng,
+    )
+    .unwrap();
+    let budget = MemBudget::new(48 * 1024);
+    let tight_opts = SolveOptions {
+        budget: budget.clone(),
+        ..chain_opts(0.3)
+    };
+    let tight = solve(SolverKind::AltNewtonBcd, &prob.data, &tight_opts, &eng).unwrap();
+    assert!(tight.trace.converged);
+    assert!(budget.peak() <= 48 * 1024, "peak {} bytes", budget.peak());
+    let (fu, ft) = (
+        unlimited.trace.final_f().unwrap(),
+        tight.trace.final_f().unwrap(),
+    );
+    assert!((fu - ft).abs() < 1e-4 * fu.abs().max(1.0));
+}
+
+/// Clustering ablation: contiguous blocks give the same answer (just more
+/// cache misses).
+#[test]
+fn clustering_ablation_same_result() {
+    let prob = datagen::cluster_graph::generate(
+        30,
+        24,
+        80,
+        9,
+        &datagen::cluster_graph::ClusterOptions {
+            cluster_size: 8,
+            hub_coeff: 2.0,
+            ..Default::default()
+        },
+    );
+    let eng = NativeGemm::new(1);
+    let budget = MemBudget::new(32 * 1024);
+    let base = SolveOptions {
+        lam_l: 0.5,
+        lam_t: 0.5,
+        max_iter: 80,
+        budget: budget.clone(),
+        ..Default::default()
+    };
+    let with = solve(SolverKind::AltNewtonBcd, &prob.data, &base, &eng).unwrap();
+    let without_opts = SolveOptions {
+        clustering: false,
+        budget: MemBudget::new(32 * 1024),
+        ..base
+    };
+    let without = solve(SolverKind::AltNewtonBcd, &prob.data, &without_opts, &eng).unwrap();
+    let (fa, fb) = (
+        with.trace.final_f().unwrap(),
+        without.trace.final_f().unwrap(),
+    );
+    assert!((fa - fb).abs() < 1e-4 * fa.abs().max(1.0));
+}
+
+/// Multithreaded solve agrees with single-threaded.
+#[test]
+fn threads_do_not_change_answer() {
+    let prob = datagen::chain::generate(16, 16, 70, 21);
+    let eng1 = NativeGemm::new(1);
+    let eng4 = NativeGemm::new(4);
+    let o1 = chain_opts(0.3);
+    let o4 = SolveOptions {
+        threads: 4,
+        ..chain_opts(0.3)
+    };
+    let r1 = solve(SolverKind::AltNewtonBcd, &prob.data, &o1, &eng1).unwrap();
+    let r4 = solve(SolverKind::AltNewtonBcd, &prob.data, &o4, &eng4).unwrap();
+    let (f1, f4) = (r1.trace.final_f().unwrap(), r4.trace.final_f().unwrap());
+    assert!((f1 - f4).abs() < 1e-6 * f1.abs().max(1.0));
+}
+
+/// Structure recovery improves with sample size (Fig. 5b's shape).
+#[test]
+fn f1_improves_with_samples() {
+    let eng = NativeGemm::new(1);
+    let mut scores = Vec::new();
+    for n in [40, 400] {
+        let prob = datagen::chain::generate(30, 30, n, 33);
+        let res = solve(SolverKind::AltNewtonCd, &prob.data, &chain_opts(0.5), &eng).unwrap();
+        scores.push(f1_edges_sym(&res.model.lambda, &prob.truth.lambda).f1);
+    }
+    assert!(
+        scores[1] > scores[0] - 0.02,
+        "F1 did not improve with n: {scores:?}"
+    );
+    assert!(scores[1] > 0.5, "F1 at n=400 too low: {scores:?}");
+}
+
+/// A budget too small for even one cached column is the true memory wall:
+/// the solver reports it instead of thrashing.
+#[test]
+fn impossible_budget_is_an_error() {
+    let prob = datagen::chain::generate(64, 64, 30, 4);
+    let eng = NativeGemm::new(1);
+    let opts = SolveOptions {
+        lam_l: 0.5,
+        lam_t: 0.5,
+        max_iter: 5,
+        budget: MemBudget::new(256), // bytes — cannot hold one q-column
+        chol: CholKind::SparseRcm,
+        ..Default::default()
+    };
+    match solve(SolverKind::AltNewtonBcd, &prob.data, &opts, &eng) {
+        Err(cggm::solvers::SolveError::Budget(_)) => {}
+        Ok(_) => panic!("expected budget failure"),
+        Err(e) => panic!("wrong error: {e}"),
+    }
+}
+
+/// The wall-clock cap stops long runs early without corrupting state.
+#[test]
+fn time_limit_respected() {
+    let prob = datagen::chain::generate(200, 200, 100, 6);
+    let eng = NativeGemm::new(1);
+    let opts = SolveOptions {
+        lam_l: 0.05, // dense active set → slow per iteration
+        lam_t: 0.05,
+        max_iter: 1000,
+        time_limit: 0.05,
+        ..Default::default()
+    };
+    let res = solve(SolverKind::AltNewtonCd, &prob.data, &opts, &eng).unwrap();
+    assert!(!res.trace.converged);
+    assert!(res.trace.records.len() < 1000);
+    assert!(res.trace.final_f().unwrap().is_finite());
+}
+
+/// At convergence the stopping statistic really satisfies the paper's rule.
+#[test]
+fn stopping_rule_holds_at_convergence() {
+    let prob = datagen::chain::generate(25, 25, 120, 10);
+    let eng = NativeGemm::new(1);
+    for kind in SolverKind::paper_three() {
+        let res = solve(kind, &prob.data, &chain_opts(0.3), &eng).unwrap();
+        assert!(res.trace.converged, "{kind:?}");
+        let ratio = res.trace.stopping_ratio().unwrap();
+        assert!(ratio <= 0.01 + 1e-12, "{kind:?}: ratio {ratio}");
+    }
+}
+
+/// Genomic workload through the whole pipe (simulator → block solver).
+#[test]
+fn genomic_pipeline_smoke() {
+    let prob = datagen::genomic::generate(
+        300,
+        40,
+        80,
+        12,
+        &datagen::genomic::GenomicOptions::default(),
+    );
+    let eng = NativeGemm::new(1);
+    let opts = SolveOptions {
+        lam_l: 0.15,
+        lam_t: 0.15,
+        max_iter: 40,
+        budget: MemBudget::new(8 << 20),
+        ..Default::default()
+    };
+    let res = solve(SolverKind::AltNewtonBcd, &prob.data, &opts, &eng).unwrap();
+    assert!(res.trace.final_f().unwrap().is_finite());
+    assert!(res.model.theta_nnz() > 0, "no eQTLs recovered at all");
+}
