@@ -46,6 +46,7 @@ fn main() {
         lambdas: None,
         warm_start: true,
         screen: cggm::cggm::active::ScreenRule::Full,
+        ..Default::default()
     };
     let cold_opts = PathOptions {
         warm_start: false,

@@ -1,16 +1,19 @@
 //! λ-path bench: quantifies what the path driver buys —
 //! (a) total outer iterations saved by seeding each point with the previous
 //! solution (warm vs cold), (b) coordinates examined with strong-rule
-//! screening vs full re-screening at equal final objective, and (c)
-//! wall-clock for a full sweep, all on a shared `SolverContext` (covariance
-//! statistics computed once per path).
+//! screening vs full re-screening at equal final objective, (c) clustering
+//! partitions the block solver *didn't* have to rebuild thanks to the
+//! context-persistent partition cache, (d) checkpoint write overhead and the
+//! points a resumed sweep skips, and (e) wall-clock for a full sweep, all on
+//! a shared `SolverContext` (covariance statistics computed once per path).
 
 use cggm::bench::{Bench, BenchSet};
 use cggm::cggm::active::ScreenRule;
-use cggm::coordinator::{fit_path, PathOptions};
+use cggm::coordinator::{fit_path, fit_path_in_context, PathOptions};
 use cggm::datagen;
 use cggm::gemm::native::NativeGemm;
-use cggm::solvers::{SolveOptions, SolverKind};
+use cggm::solvers::{SolveOptions, SolverContext, SolverKind};
+use cggm::util::membudget::MemBudget;
 
 fn main() {
     let eng = NativeGemm::new(1);
@@ -25,6 +28,7 @@ fn main() {
         lambdas: None,
         warm_start: true,
         screen: ScreenRule::Strong,
+        ..Default::default()
     };
     let warm_opts = PathOptions {
         screen: ScreenRule::Full,
@@ -102,6 +106,101 @@ fn main() {
         "acceptance: screened must do >= 2x fewer coordinate updates \
          (strong {cs} vs full {cu})"
     );
+
+    // Clustering persistence (block solver): along the path the partition is
+    // rebuilt only on active-set churn; a forced-rebuild ablation shows what
+    // the cache saves while reaching the same objectives.
+    let bcd_popts = PathOptions {
+        points: 6,
+        min_ratio: 0.1,
+        screen: ScreenRule::Full,
+        ..Default::default()
+    };
+    let mk_bcd = |churn: f64| SolveOptions {
+        max_iter: 120,
+        budget: MemBudget::new(512 * 1024),
+        recluster_churn: churn,
+        ..Default::default()
+    };
+    let cached_base = mk_bcd(0.2);
+    let cached_ctx = SolverContext::new(&prob.data, &cached_base, &eng);
+    let cached =
+        fit_path_in_context(SolverKind::AltNewtonBcd, &cached_ctx, &cached_base, &bcd_popts)
+            .unwrap();
+    let forced_base = mk_bcd(-1.0);
+    let forced_ctx = SolverContext::new(&prob.data, &forced_base, &eng);
+    let forced =
+        fit_path_in_context(SolverKind::AltNewtonBcd, &forced_ctx, &forced_base, &bcd_popts)
+            .unwrap();
+    let (rc, rf) = (
+        cached.points.iter().map(|p| p.reclusterings).sum::<usize>(),
+        forced.points.iter().map(|p| p.reclusterings).sum::<usize>(),
+    );
+    println!(
+        "# bcd clustering persistence: {} rebuilds cached vs {} forced \
+         ({:.2}s vs {:.2}s), |Δf| = {:.2e}",
+        rc,
+        rf,
+        cached.total_seconds,
+        forced.total_seconds,
+        (cached.points.last().unwrap().f - forced.points.last().unwrap().f).abs(),
+    );
+    assert!(
+        rc <= rf,
+        "persistent partition must not rebuild more than the forced ablation"
+    );
+    {
+        let (fc, ff) = (
+            cached.points.last().unwrap().f,
+            forced.points.last().unwrap().f,
+        );
+        // Partition choice changes CD update order, so the runs agree to the
+        // solver's stopping tolerance (the tight 1e-6 bar lives in
+        // cluster_persistence_tests, which converges to tol = 1e-5).
+        assert!(
+            (fc - ff).abs() <= 1e-4 * ff.abs().max(1.0),
+            "clustering persistence changed the optimum: {fc} vs {ff}"
+        );
+    }
+
+    // Checkpoint/resume: write a checkpoint during a screened sweep, drop
+    // the second half, and resume — the resumed sweep must reproduce the
+    // uninterrupted objectives while refitting only the dropped points.
+    let ck = std::env::temp_dir().join("cggm_bench_path_ckpt.jsonl");
+    let _ = std::fs::remove_file(&ck);
+    let ck_opts = PathOptions {
+        checkpoint: Some(ck.clone()),
+        ..screened_opts.clone()
+    };
+    let ckpointed = fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &ck_opts, &eng).unwrap();
+    let keep = 1 + ckpointed.points.len() / 2; // header + half the points
+    let text = std::fs::read_to_string(&ck).unwrap();
+    let prefix: String = text.lines().take(keep).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&ck, prefix).unwrap();
+    let resume_opts = PathOptions {
+        resume: true,
+        ..ck_opts.clone()
+    };
+    let resumed =
+        fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &resume_opts, &eng).unwrap();
+    println!(
+        "# checkpoint: full sweep {:.2}s (+checkpoint io) vs resume {:.2}s \
+         ({} points carried, {} refitted)",
+        ckpointed.total_seconds,
+        resumed.total_seconds,
+        resumed.resumed_points,
+        resumed.points.len() - resumed.resumed_points,
+    );
+    for (a, b) in ckpointed.points.iter().zip(&resumed.points) {
+        assert!(
+            (a.f - b.f).abs() <= 1e-8 * a.f.abs().max(1.0),
+            "resume diverged at λ={}: {} vs {}",
+            a.lam_l,
+            a.f,
+            b.f
+        );
+    }
+    let _ = std::fs::remove_file(&ck);
 
     let mut set = BenchSet::new("path");
     for kind in [SolverKind::AltNewtonCd, SolverKind::NewtonCd] {

@@ -1,15 +1,39 @@
-//! Unified handle over the two Cholesky paths for Λ.
+//! Unified handle over the two Cholesky paths for Λ, with memory-budget
+//! accounting.
 //!
 //! The non-block solvers factor Λ densely (paper §2: "Initializing Σ = Λ⁻¹
 //! via Cholesky decomposition"); the block solver must stay sparse (§4,
 //! following BigQUIC). [`LambdaFactor`] gives line search and the objective
 //! one interface for logdet / PD checks / solves / the n-RHS trace term.
+//!
+//! # Budget accounting
+//!
+//! Factorization scratch — not the sparse iterates — dominates the peak
+//! working set of every solver: a dense factor is a q×q `L` plus a q×q
+//! staging copy of Λ, a sparse factor is nnz(L) of fill, and the line search
+//! builds one *per Armijo trial* while the previous iteration's factor is
+//! still live. [`LambdaFactor::factor_tracked`] registers all of it against
+//! the caller's [`MemBudget`] *before* allocating, so
+//!
+//! - `MemBudget::peak()` covers every factor byte the four solvers touch
+//!   (closing the gap the `memwall` experiment used to under-report), and
+//! - a factorization the budget cannot hold fails fast with a clean
+//!   [`FactorError::Budget`] instead of allocating past the limit — the
+//!   sparse path registers its O(q) per-column structures up front and
+//!   converts the remaining budget into a fill cap, so the factorization
+//!   aborts the moment its fill outgrows the budget.
+//!
+//! The resident bytes stay registered for as long as the factor is alive
+//! (RAII [`Tracked`] inside the handle); staging/scratch bytes are released
+//! when `factor_tracked` returns. The untracked [`LambdaFactor::factor`]
+//! remains for data generation and tests, where no budget is in force.
 
 use crate::gemm::GemmEngine;
 use crate::linalg::chol_dense::DenseChol;
 use crate::linalg::chol_sparse::{SparseChol, SparseCholError};
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpRowMat;
+use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
 
 /// Which factorization to use for Λ.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,10 +46,18 @@ pub enum CholKind {
     Auto,
 }
 
-/// A successful Λ factorization.
-pub enum LambdaFactor {
+/// The concrete factorization behind a [`LambdaFactor`].
+pub enum FactorRepr {
     Dense(DenseChol),
     Sparse(SparseChol),
+}
+
+/// A successful Λ factorization (+ its budget registration, when tracked).
+pub struct LambdaFactor {
+    repr: FactorRepr,
+    /// Registration of the factor's resident bytes; `None` for the
+    /// untracked [`LambdaFactor::factor`] path.
+    _track: Option<Tracked>,
 }
 
 /// Factorization failure — `NotPd` doubles as the line-search PD probe.
@@ -35,77 +67,202 @@ pub enum FactorError {
     NotPd,
     #[error("sparse factor fill exceeded and dense fallback is disabled (q={q})")]
     FillExceeded { q: usize },
+    #[error("memory budget cannot hold the Λ factor: {0}")]
+    Budget(BudgetExceeded),
 }
 
 /// Threshold under which the Auto dense fallback is allowed.
 const AUTO_DENSE_MAX_Q: usize = 4096;
 
+/// Blocked dense Cholesky panel width (`chol_dense::NB`) — mirrored here so
+/// the scratch estimate matches the factorization's largest trailing-update
+/// allocation.
+const DENSE_NB: usize = 64;
+
+/// Bytes each sparse-factor fill entry costs while resident *and* during
+/// factorization: 16 for the frozen CSC (row index + value) plus ~16 for the
+/// up-looking builder's per-entry column-list storage.
+const SPARSE_FILL_BYTES: usize = 32;
+
+/// Resident bytes of a dense q×q factor (the lower-triangular `L` buffer).
+pub fn dense_factor_bytes(q: usize) -> usize {
+    8 * q * q
+}
+
+/// Transient scratch `DenseChol::factor` allocates beyond the held `L`: the
+/// first (largest) blocked trailing-update round keeps `update` (m×m),
+/// `panel` (m×NB), and its transposed copy `panel_t` (NB×m) alive
+/// concurrently. Zero for q ≤ NB, where the factorization is a single
+/// unblocked sweep.
+pub fn dense_factor_scratch_bytes(q: usize) -> usize {
+    if q <= DENSE_NB {
+        0
+    } else {
+        let m = q - DENSE_NB;
+        8 * (m * m + 2 * DENSE_NB * m)
+    }
+}
+
 impl LambdaFactor {
-    /// Factor a sparse symmetric Λ.
+    /// Factor a sparse symmetric Λ without budget accounting (tests, data
+    /// generation, callers with no budget in force). Prefer
+    /// [`Self::factor_tracked`] anywhere a [`MemBudget`] exists.
     pub fn factor(
         lambda: &SpRowMat,
         kind: CholKind,
         engine: &dyn GemmEngine,
     ) -> Result<LambdaFactor, FactorError> {
+        Self::factor_tracked(lambda, kind, engine, &MemBudget::unlimited())
+    }
+
+    /// Factor with every byte registered against `budget` (see the module
+    /// docs): resident factor bytes stay tracked for the factor's lifetime,
+    /// staging/scratch bytes for the duration of this call, and a plan the
+    /// budget cannot hold is rejected *before* the allocation happens.
+    pub fn factor_tracked(
+        lambda: &SpRowMat,
+        kind: CholKind,
+        engine: &dyn GemmEngine,
+        budget: &MemBudget,
+    ) -> Result<LambdaFactor, FactorError> {
         let q = lambda.rows();
         match kind {
-            CholKind::Dense => DenseChol::factor(&lambda.to_dense(), engine)
-                .map(LambdaFactor::Dense)
-                .map_err(|_| FactorError::NotPd),
-            CholKind::SparseRcm => match SparseChol::factor(lambda, true, usize::MAX) {
-                Ok(f) => Ok(LambdaFactor::Sparse(f)),
-                Err(SparseCholError::NotPositiveDefinite { .. }) => Err(FactorError::NotPd),
-                Err(SparseCholError::TooMuchFill { .. }) => unreachable!("no cap set"),
-            },
+            CholKind::Dense => Self::dense_tracked(lambda, engine, budget),
+            CholKind::SparseRcm => Self::sparse_tracked(lambda, budget, usize::MAX),
             CholKind::Auto => {
                 // Cap fill at ~64·nnz(Λ) before considering dense fallback.
                 let cap = lambda.nnz().saturating_mul(64).max(1 << 22);
-                match SparseChol::factor(lambda, true, cap) {
-                    Ok(f) => Ok(LambdaFactor::Sparse(f)),
-                    Err(SparseCholError::NotPositiveDefinite { .. }) => Err(FactorError::NotPd),
-                    Err(SparseCholError::TooMuchFill { .. }) => {
-                        if q <= AUTO_DENSE_MAX_Q {
-                            DenseChol::factor(&lambda.to_dense(), engine)
-                                .map(LambdaFactor::Dense)
-                                .map_err(|_| FactorError::NotPd)
+                match Self::sparse_tracked(lambda, budget, cap) {
+                    Ok(f) => Ok(f),
+                    Err(FactorError::FillExceeded { .. }) => {
+                        let dense_need =
+                            2 * dense_factor_bytes(q) + dense_factor_scratch_bytes(q);
+                        if q <= AUTO_DENSE_MAX_Q && dense_need <= budget.available() {
+                            Self::dense_tracked(lambda, engine, budget)
                         } else {
-                            // Very large + very filled: retry sparse uncapped
-                            // rather than allocating q² (slow but bounded mem).
-                            match SparseChol::factor(lambda, true, usize::MAX) {
-                                Ok(f) => Ok(LambdaFactor::Sparse(f)),
-                                Err(_) => Err(FactorError::NotPd),
-                            }
+                            // Very large + very filled: retry sparse with only
+                            // the budget as the cap rather than allocating q²
+                            // (slow but bounded memory).
+                            Self::sparse_tracked(lambda, budget, usize::MAX)
                         }
                     }
+                    Err(e) => Err(e),
                 }
             }
         }
     }
 
+    fn dense_tracked(
+        lambda: &SpRowMat,
+        engine: &dyn GemmEngine,
+        budget: &MemBudget,
+    ) -> Result<LambdaFactor, FactorError> {
+        let q = lambda.rows();
+        // Register before allocating: the resident L, then the staging dense
+        // copy of Λ plus the blocked factorization's trailing-update scratch.
+        let held = budget
+            .track(dense_factor_bytes(q))
+            .map_err(FactorError::Budget)?;
+        let staging = budget
+            .track(dense_factor_bytes(q) + dense_factor_scratch_bytes(q))
+            .map_err(FactorError::Budget)?;
+        let dense = lambda.to_dense();
+        let res = DenseChol::factor(&dense, engine);
+        drop(dense);
+        drop(staging);
+        match res {
+            Ok(f) => Ok(LambdaFactor {
+                repr: FactorRepr::Dense(f),
+                _track: Some(held),
+            }),
+            Err(_) => Err(FactorError::NotPd),
+        }
+    }
+
+    fn sparse_tracked(
+        lambda: &SpRowMat,
+        budget: &MemBudget,
+        cap: usize,
+    ) -> Result<LambdaFactor, FactorError> {
+        let q = lambda.rows();
+        // Register the O(q) per-column structures (colptr + diag + the two
+        // permutation vectors, plus the builder's dense scratch rows) before
+        // factoring — a budget that cannot even hold those must reject the
+        // plan up front, not after allocating them.
+        let base = budget
+            .track(8 * (q + 1) + 8 * q + 16 * q + 16 * q)
+            .map_err(FactorError::Budget)?;
+        // The rest of the budget, expressed as a fill cap: factorization
+        // aborts the moment fill outgrows what the budget can hold — fail
+        // fast, no allocation past the limit.
+        let budget_cap = (budget.available() / SPARSE_FILL_BYTES).max(1);
+        let eff_cap = cap.min(budget_cap);
+        match SparseChol::factor(lambda, true, eff_cap) {
+            Ok(f) => {
+                // Register the frozen factor while the builder registration
+                // is still live (both genuinely coexist during the freeze),
+                // then release the builder's share.
+                let track = budget.track(f.bytes()).map_err(FactorError::Budget)?;
+                drop(base);
+                Ok(LambdaFactor {
+                    repr: FactorRepr::Sparse(f),
+                    _track: Some(track),
+                })
+            }
+            Err(SparseCholError::NotPositiveDefinite { .. }) => Err(FactorError::NotPd),
+            Err(SparseCholError::TooMuchFill { fill, .. }) => {
+                if budget_cap < cap {
+                    // The budget was the binding cap.
+                    Err(FactorError::Budget(BudgetExceeded {
+                        requested: fill.saturating_mul(SPARSE_FILL_BYTES),
+                        live: budget.live(),
+                        limit: budget.limit(),
+                    }))
+                } else {
+                    Err(FactorError::FillExceeded { q })
+                }
+            }
+        }
+    }
+
+    /// The concrete dense/sparse factorization.
+    pub fn repr(&self) -> &FactorRepr {
+        &self.repr
+    }
+
+    /// Bytes this factor keeps resident (0 when untracked — the accounting
+    /// itself, not the structure, is what is absent).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.repr {
+            FactorRepr::Dense(f) => dense_factor_bytes(f.n()),
+            FactorRepr::Sparse(f) => f.bytes(),
+        }
+    }
+
     pub fn logdet(&self) -> f64 {
-        match self {
-            LambdaFactor::Dense(f) => f.logdet(),
-            LambdaFactor::Sparse(f) => f.logdet(),
+        match &self.repr {
+            FactorRepr::Dense(f) => f.logdet(),
+            FactorRepr::Sparse(f) => f.logdet(),
         }
     }
 
     /// Solve Λ x = b.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        match self {
-            LambdaFactor::Dense(f) => {
+        match &self.repr {
+            FactorRepr::Dense(f) => {
                 let mut x = b.to_vec();
                 f.solve(&mut x);
                 x
             }
-            LambdaFactor::Sparse(f) => f.solve(b),
+            FactorRepr::Sparse(f) => f.solve(b),
         }
     }
 
     /// bᵀ Λ⁻¹ b.
     pub fn quad_form_inv(&self, b: &[f64]) -> f64 {
-        match self {
-            LambdaFactor::Dense(f) => f.quad_form_inv(b),
-            LambdaFactor::Sparse(f) => f.quad_form_inv(b),
+        match &self.repr {
+            FactorRepr::Dense(f) => f.quad_form_inv(b),
+            FactorRepr::Sparse(f) => f.quad_form_inv(b),
         }
     }
 
@@ -126,9 +283,9 @@ impl LambdaFactor {
 
     /// Dense Σ = Λ⁻¹ (non-block solvers).
     pub fn inverse_dense(&self, engine: &dyn GemmEngine) -> Mat {
-        match self {
-            LambdaFactor::Dense(f) => f.inverse(engine),
-            LambdaFactor::Sparse(f) => {
+        match &self.repr {
+            FactorRepr::Dense(f) => f.inverse(engine),
+            FactorRepr::Sparse(f) => {
                 // Solve against identity columns (used only in tests/small q).
                 let q = f.n();
                 let mut inv = Mat::zeros(q, q);
@@ -219,5 +376,72 @@ mod tests {
         }
         want /= n as f64;
         assert!((f.trace_quad(&rt) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_factor_bytes_tracked_for_factor_lifetime() {
+        let q = 12;
+        let lam = chain_lambda(q);
+        let eng = NativeGemm::new(1);
+        let budget = MemBudget::unlimited();
+        let f = LambdaFactor::factor_tracked(&lam, CholKind::Dense, &eng, &budget).unwrap();
+        // Resident: exactly the q×q L. Staging (dense Λ copy) released.
+        assert_eq!(budget.live(), dense_factor_bytes(q));
+        assert_eq!(f.resident_bytes(), dense_factor_bytes(q));
+        // Peak saw L + the staging copy concurrently (q ≤ NB: no blocked
+        // trailing-update scratch on top).
+        assert_eq!(budget.peak(), 2 * dense_factor_bytes(q));
+        drop(f);
+        assert_eq!(budget.live(), 0);
+    }
+
+    #[test]
+    fn sparse_factor_bytes_tracked_for_factor_lifetime() {
+        let q = 30;
+        let lam = chain_lambda(q);
+        let budget = MemBudget::unlimited();
+        let eng = NativeGemm::new(1);
+        let f = LambdaFactor::factor_tracked(&lam, CholKind::SparseRcm, &eng, &budget).unwrap();
+        assert!(matches!(f.repr(), FactorRepr::Sparse(_)));
+        assert_eq!(budget.live(), f.resident_bytes());
+        assert!(f.resident_bytes() > 0);
+        drop(f);
+        assert_eq!(budget.live(), 0);
+    }
+
+    #[test]
+    fn undersized_budget_rejects_before_allocating() {
+        let q = 40;
+        let lam = chain_lambda(q);
+        let eng = NativeGemm::new(1);
+        // Dense: L alone is 12800 bytes — a 1KB budget must fail fast.
+        let budget = MemBudget::new(1024);
+        match LambdaFactor::factor_tracked(&lam, CholKind::Dense, &eng, &budget) {
+            Err(FactorError::Budget(_)) => {}
+            other => panic!("expected Budget error, got ok={}", other.is_ok()),
+        }
+        // Nothing leaked, and the accounting never exceeded the limit.
+        assert_eq!(budget.live(), 0);
+        assert!(budget.peak() <= 1024);
+        // Sparse: the per-column structures alone exceed a 64-byte budget.
+        let tiny = MemBudget::new(64);
+        match LambdaFactor::factor_tracked(&lam, CholKind::SparseRcm, &eng, &tiny) {
+            Err(FactorError::Budget(_)) => {}
+            other => panic!("expected Budget error, got ok={}", other.is_ok()),
+        }
+        assert_eq!(tiny.live(), 0);
+        assert!(tiny.peak() <= 64);
+    }
+
+    #[test]
+    fn auto_respects_budget_on_both_paths() {
+        let q = 20;
+        let lam = chain_lambda(q);
+        let eng = NativeGemm::new(1);
+        // Plenty of budget: Auto picks sparse on a chain and tracks it.
+        let budget = MemBudget::new(1 << 20);
+        let f = LambdaFactor::factor_tracked(&lam, CholKind::Auto, &eng, &budget).unwrap();
+        assert_eq!(budget.live(), f.resident_bytes());
+        assert!(budget.peak() <= 1 << 20);
     }
 }

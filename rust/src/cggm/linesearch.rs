@@ -9,7 +9,11 @@
 //!
 //! Per-α cost: one sparse/dense Cholesky of Λ + αD (the PD probe + logdet)
 //! and one n-RHS triangular solve for the tr(Λ⁻¹ΘᵀS_xxΘ) term; all terms
-//! linear in α are updated analytically.
+//! linear in α are updated analytically. Every trial factor is built through
+//! [`Objective::factor_lambda`], so its bytes are registered against the
+//! solver's memory budget while the trial is alive — the line search is where
+//! factorization scratch peaks (the previous iteration's factor is still
+//! live), and `MemBudget::peak()` must see it.
 
 use super::dataset::Dataset;
 use super::factor::{FactorError, LambdaFactor};
@@ -17,6 +21,7 @@ use super::objective::{Objective, SmoothParts};
 use crate::gemm::GemmEngine;
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpRowMat;
+use crate::util::membudget::BudgetExceeded;
 
 /// Accepted step.
 pub struct LineSearchResult {
@@ -35,6 +40,10 @@ pub struct LineSearchResult {
 pub enum LineSearchError {
     #[error("line search failed to find a positive-definite sufficient-decrease step")]
     NoStep,
+    /// The memory budget cannot hold a trial factor — aborts the search
+    /// (backtracking further cannot shrink the factor's footprint).
+    #[error("memory budget cannot hold the line-search trial factor: {0}")]
+    Budget(#[from] BudgetExceeded),
 }
 
 pub struct LineSearchOptions {
@@ -78,8 +87,9 @@ pub fn lambda_line_search(
         // Λ(α) = Λ + αD built by pattern union (reuse buffer).
         trial_lambda.clone_from(lambda);
         trial_lambda.add_scaled(alpha, dir);
-        match LambdaFactor::factor(&trial_lambda, obj.chol, engine) {
+        match obj.factor_lambda(&trial_lambda, engine) {
             Err(FactorError::NotPd) | Err(FactorError::FillExceeded { .. }) => {}
+            Err(FactorError::Budget(b)) => return Err(LineSearchError::Budget(b)),
             Ok(factor) => {
                 let parts = SmoothParts {
                     logdet: factor.logdet(),
@@ -134,7 +144,8 @@ pub fn joint_line_search(
     for trial in 0..opts.max_trials {
         trial_lambda.clone_from(lambda);
         trial_lambda.add_scaled(alpha, dir_l);
-        match LambdaFactor::factor(&trial_lambda, obj.chol, engine) {
+        match obj.factor_lambda(&trial_lambda, engine) {
+            Err(FactorError::Budget(b)) => return Err(LineSearchError::Budget(b)),
             Err(_) => {}
             Ok(factor) => {
                 rt_trial.clone_from(rt);

@@ -17,6 +17,7 @@ use super::factor::{CholKind, FactorError, LambdaFactor};
 use super::model::CggmModel;
 use crate::gemm::GemmEngine;
 use crate::linalg::dense::Mat;
+use crate::util::membudget::MemBudget;
 
 /// Problem definition: data + regularization.
 pub struct Objective<'a> {
@@ -26,6 +27,11 @@ pub struct Objective<'a> {
     /// λ_Θ.
     pub lam_t: f64,
     pub chol: CholKind,
+    /// Budget every Λ factorization this objective performs is tracked
+    /// against — including the per-trial factors of the line searches, which
+    /// historically escaped `MemBudget::peak()`. Unlimited by default;
+    /// solvers wire in their context's budget via [`Self::with_budget`].
+    pub budget: MemBudget,
 }
 
 /// The smooth terms of f, kept separate so line search can update the linear
@@ -55,12 +61,31 @@ impl<'a> Objective<'a> {
             lam_l,
             lam_t,
             chol: CholKind::Auto,
+            budget: MemBudget::unlimited(),
         }
     }
 
     pub fn with_chol(mut self, kind: CholKind) -> Self {
         self.chol = kind;
         self
+    }
+
+    /// Track every factorization this objective performs against `budget`
+    /// (see [`LambdaFactor::factor_tracked`]).
+    pub fn with_budget(mut self, budget: MemBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Factor Λ with this objective's Cholesky strategy, budget-tracked.
+    /// This is the one factorization entry point for the solvers and the
+    /// line searches, so trial factors can never escape the accounting.
+    pub fn factor_lambda(
+        &self,
+        lambda: &crate::linalg::sparse::SpRowMat,
+        engine: &dyn GemmEngine,
+    ) -> Result<LambdaFactor, FactorError> {
+        LambdaFactor::factor_tracked(lambda, self.chol, engine, &self.budget)
     }
 
     /// tr(S_yy A) for sparse symmetric A — O(nnz(A)·n).
@@ -91,7 +116,7 @@ impl<'a> Objective<'a> {
         model: &CggmModel,
         engine: &dyn GemmEngine,
     ) -> Result<(f64, SmoothParts, LambdaFactor, Mat), FactorError> {
-        let factor = LambdaFactor::factor(&model.lambda, self.chol, engine)?;
+        let factor = self.factor_lambda(&model.lambda, engine)?;
         let rt = self.data.xtheta_t(&model.theta);
         let parts = SmoothParts {
             logdet: factor.logdet(),

@@ -43,6 +43,12 @@ pub struct RunConfig {
     pub cv_folds: usize,
     /// Worker threads across CV folds (`cggm cv`).
     pub cv_threads: usize,
+    /// λ-path checkpoint file (`cggm path --checkpoint`; `--resume FILE`
+    /// additionally warm-restarts from it).
+    pub checkpoint: Option<String>,
+    /// Block-solver clustering persistence: active-set churn above which the
+    /// cached partition is rebuilt (negative = always rebuild).
+    pub recluster_churn: f64,
 }
 
 impl Default for RunConfig {
@@ -71,6 +77,8 @@ impl Default for RunConfig {
             screen_rule: ScreenRule::Strong,
             cv_folds: 5,
             cv_threads: 1,
+            checkpoint: None,
+            recluster_churn: 0.2,
         }
     }
 }
@@ -164,6 +172,13 @@ impl RunConfig {
             "cv_threads" => {
                 self.cv_threads = val.as_usize().ok_or_else(|| bad("expected int"))?
             }
+            "checkpoint" => {
+                self.checkpoint =
+                    Some(val.as_str().ok_or_else(|| bad("expected string"))?.into())
+            }
+            "recluster_churn" => {
+                self.recluster_churn = val.as_f64().ok_or_else(|| bad("expected number"))?
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -212,9 +227,15 @@ impl RunConfig {
         }
         self.cv_folds = args.get_usize("folds", self.cv_folds);
         self.cv_threads = args.get_usize("cv-threads", self.cv_threads);
+        if let Some(ck) = args.opt("checkpoint") {
+            self.checkpoint = Some(ck.to_string());
+        }
+        self.recluster_churn = args.get_f64("recluster-churn", self.recluster_churn);
     }
 
     /// λ-path options derived from this config (`cggm path` / `cggm cv`).
+    /// Resume is a CLI-level decision (`--resume FILE`), layered on by
+    /// `cmd_path`.
     pub fn path_options(&self, warm_start: bool) -> crate::coordinator::PathOptions {
         crate::coordinator::PathOptions {
             points: self.path_points,
@@ -222,6 +243,8 @@ impl RunConfig {
             lambdas: None,
             warm_start,
             screen: self.screen_rule,
+            checkpoint: self.checkpoint.as_ref().map(std::path::PathBuf::from),
+            resume: false,
         }
     }
 
@@ -255,6 +278,7 @@ impl RunConfig {
             clustering: self.clustering,
             time_limit: self.time_limit,
             seed: self.seed,
+            recluster_churn: self.recluster_churn,
             ..Default::default()
         }
     }
@@ -342,6 +366,39 @@ mod tests {
         // A bad rule fails loudly.
         std::fs::write(&tmp, r#"{"screen_rule": "sorta"}"#).unwrap();
         assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn checkpoint_and_recluster_keys_layer_like_the_rest() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_ckpt.json");
+        std::fs::write(
+            &tmp,
+            r#"{"checkpoint": "sweep.jsonl", "recluster_churn": 0.5}"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.checkpoint.as_deref(), Some("sweep.jsonl"));
+        assert_eq!(cfg.recluster_churn, 0.5);
+        let args = Args::parse(
+            &[
+                "--checkpoint".into(),
+                "other.jsonl".into(),
+                "--recluster-churn".into(),
+                "-1".into(),
+            ],
+            &[],
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.checkpoint.as_deref(), Some("other.jsonl"));
+        assert_eq!(cfg.recluster_churn, -1.0);
+        let popts = cfg.path_options(true);
+        assert_eq!(
+            popts.checkpoint.as_deref(),
+            Some(std::path::Path::new("other.jsonl"))
+        );
+        assert!(!popts.resume, "resume is a CLI-level decision");
+        assert_eq!(cfg.solve_options().recluster_churn, -1.0);
         let _ = std::fs::remove_file(tmp);
     }
 

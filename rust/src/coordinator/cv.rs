@@ -204,8 +204,14 @@ pub fn cross_validate(
             geometric_grid(ml, mt, popts.points.max(1), popts.min_ratio)
         }
     };
+    // Folds pin the shared grid and drop any checkpoint wiring: K parallel
+    // folds streaming into one caller-supplied checkpoint file would corrupt
+    // it (and resuming a CV fold from a single-path checkpoint is
+    // meaningless).
     let fold_popts = PathOptions {
         lambdas: Some(grid.clone()),
+        checkpoint: None,
+        resume: false,
         ..popts.clone()
     };
     let assign = fold_assignment(n, k, cv.seed);
@@ -282,6 +288,8 @@ pub fn cross_validate(
     let refit = if cv.refit && points[best].mean_nll.is_finite() {
         let refit_popts = PathOptions {
             lambdas: Some(grid[..=best].to_vec()),
+            checkpoint: None,
+            resume: false,
             ..popts.clone()
         };
         Some(fit_path_with(kind, &full_ctx, base, &refit_popts, |_, _, _| {})?)

@@ -1,9 +1,10 @@
 //! Run coordination: configuration, λ calibration, dataset IO, the fit
 //! driver shared by the CLI and the experiment harness, the warm-started
 //! λ-path driver ([`fit_path`]) with sequential strong-rule screening
-//! ([`solve_screened`]), and K-fold cross-validated model selection
-//! ([`cv::cross_validate`]).
+//! ([`solve_screened`]) and JSONL checkpoint/resume ([`checkpoint`]), and
+//! K-fold cross-validated model selection ([`cv::cross_validate`]).
 
+pub mod checkpoint;
 pub mod config;
 pub mod cv;
 
@@ -18,7 +19,7 @@ use crate::solvers::{
 };
 use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 pub use config::RunConfig;
@@ -119,6 +120,19 @@ pub struct PathOptions {
     /// without [`SolverKind::supports_screen`] (notably the block solver,
     /// whose memory story forbids the driver's dense gradient scans).
     pub screen: ScreenRule,
+    /// Stream every fitted point (+ model) to this JSONL checkpoint file so
+    /// the sweep survives interruption (see [`checkpoint`]). `None` disables
+    /// checkpointing.
+    pub checkpoint: Option<PathBuf>,
+    /// Resume from `checkpoint` when it holds a valid prefix: the header's
+    /// grid governs (any configured grid is ignored), already-fitted points
+    /// are carried over verbatim, and the sweep warm-restarts from the last
+    /// valid point's model — including re-seeding the strong rule's
+    /// gradients there. A missing or header-corrupt file starts fresh; a
+    /// torn trailing line is truncated and its point refitted; a valid
+    /// checkpoint whose solver or problem shape differs from the current
+    /// run is an error (never silently overwritten or adopted).
+    pub resume: bool,
 }
 
 impl Default for PathOptions {
@@ -129,6 +143,8 @@ impl Default for PathOptions {
             lambdas: None,
             warm_start: true,
             screen: ScreenRule::Strong,
+            checkpoint: None,
+            resume: false,
         }
     }
 }
@@ -158,6 +174,10 @@ pub struct PathPoint {
     pub screened: bool,
     /// Whether the KKT post-check forced a full-screen re-solve here.
     pub fallback: bool,
+    /// Graph-clustering partition rebuilds during this point's solve(s)
+    /// (block solver only; the context persists the partition across
+    /// points, so a warm path point is typically 0).
+    pub reclusterings: usize,
 }
 
 /// A completed λ-path run.
@@ -170,6 +190,8 @@ pub struct PathResult {
     /// How many points needed the KKT fallback (screening quality metric —
     /// near zero on a well-spaced decreasing grid).
     pub screen_fallbacks: usize,
+    /// Points carried over from a resumed checkpoint (0 for a fresh sweep).
+    pub resumed_points: usize,
 }
 
 impl PathResult {
@@ -202,6 +224,7 @@ impl PathResult {
             ),
             ("total_kkt_scans", Json::num(self.total_kkt_scans() as f64)),
             ("screen_fallbacks", Json::num(self.screen_fallbacks as f64)),
+            ("resumed_points", Json::num(self.resumed_points as f64)),
             (
                 "points",
                 Json::arr(self.points.iter().map(|p| {
@@ -218,6 +241,7 @@ impl PathResult {
                         ("kkt_scans", Json::num(p.kkt_scans as f64)),
                         ("screened", Json::Bool(p.screened)),
                         ("fallback", Json::Bool(p.fallback)),
+                        ("reclusterings", Json::num(p.reclusterings as f64)),
                     ])
                 })),
             ),
@@ -227,11 +251,11 @@ impl PathResult {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "lambda_l,lambda_t,iters,converged,f,lambda_nnz,theta_nnz,seconds,\
-             coord_updates,kkt_scans,screened,fallback\n",
+             coord_updates,kkt_scans,screened,fallback,reclusterings\n",
         );
         for p in &self.points {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{:.4},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{:.4},{},{},{},{},{}\n",
                 p.lam_l,
                 p.lam_t,
                 p.iters,
@@ -243,7 +267,8 @@ impl PathResult {
                 p.coord_updates,
                 p.kkt_scans,
                 p.screened,
-                p.fallback
+                p.fallback,
+                p.reclusterings
             ));
         }
         s
@@ -454,15 +479,45 @@ pub fn fit_path_with(
     mut on_point: impl FnMut(usize, &PathPoint, &CggmModel),
 ) -> Result<PathResult, SolveError> {
     let sw = Stopwatch::start();
-    let grid: Vec<(f64, f64)> = match &popts.lambdas {
-        Some(g) => g.clone(),
-        None => {
+    let data = ctx.data();
+    let (p, q) = (data.p(), data.q());
+    // Resume: adopt the checkpoint's valid prefix. Its header grid governs
+    // (the interrupted sweep's grid must be continued exactly); a missing or
+    // header-corrupt file falls through to a fresh start.
+    let mut resumed: Option<checkpoint::CheckpointState> = None;
+    if popts.resume {
+        if let Some(ck) = &popts.checkpoint {
+            if let Ok(state) = checkpoint::load(ck) {
+                // A valid checkpoint from a *different* run must not be
+                // silently overwritten or adopted: the header pins solver
+                // and problem shape, and resuming across either is an error
+                // (the model would be dimensionally wrong, or the result
+                // would mix two solvers' points under one label).
+                if state.solver != kind.name() || state.p != p || state.q != q {
+                    return Err(SolveError::Checkpoint(format!(
+                        "{} was written by {} for a {}×{} problem; this run \
+                         is {} on {}×{} — refusing to resume",
+                        ck.display(),
+                        state.solver,
+                        state.p,
+                        state.q,
+                        kind.name(),
+                        p,
+                        q
+                    )));
+                }
+                resumed = Some(state);
+            }
+        }
+    }
+    let grid: Vec<(f64, f64)> = match (&resumed, &popts.lambdas) {
+        (Some(state), _) => state.grid.clone(),
+        (None, Some(g)) => g.clone(),
+        (None, None) => {
             let (ml, mt) = lambda_max(ctx, kind)?;
             geometric_grid(ml, mt, popts.points.max(1), popts.min_ratio)
         }
     };
-    let data = ctx.data();
-    let (p, q) = (data.p(), data.q());
     let full_scan = q * (q + 1) / 2 + p * q;
     let screen_on =
         popts.warm_start && popts.screen == ScreenRule::Strong && kind.supports_screen();
@@ -473,7 +528,42 @@ pub fn fit_path_with(
     let mut prev_lams = (f64::NAN, f64::NAN);
     let mut fallbacks = 0usize;
     let mut points = Vec::with_capacity(grid.len());
-    for (k, &(lam_l, lam_t)) in grid.iter().enumerate() {
+    let mut start_k = 0usize;
+    let mut writer: Option<checkpoint::CheckpointWriter> = None;
+    if let Some(state) = resumed {
+        start_k = state.points.len().min(grid.len());
+        points = state.points;
+        // The summary counters must cover the carried-over points too, so a
+        // resumed sweep reports the same screen_fallbacks as an
+        // uninterrupted one.
+        fallbacks = points.iter().filter(|pt| pt.fallback).count();
+        warm = state.model;
+        prev_lams = if start_k > 0 {
+            grid[start_k - 1]
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        // Re-seed the strong rule where the interrupted run left off: the
+        // checkpointed model round-trips f64s exactly, so these gradients
+        // equal the ones the uninterrupted sweep would have carried.
+        if screen_on && start_k > 0 && start_k < grid.len() {
+            if let Some(m) = &warm {
+                prev_grads = Some(ctx.smooth_gradients(m, base.chol)?);
+            }
+        }
+        let ck = popts.checkpoint.as_ref().expect("resume implies checkpoint");
+        writer = Some(
+            checkpoint::CheckpointWriter::append_after(ck, state.valid_bytes)
+                .map_err(|e| SolveError::Checkpoint(e.to_string()))?,
+        );
+    } else if let Some(ck) = &popts.checkpoint {
+        writer = Some(
+            checkpoint::CheckpointWriter::create(ck, kind.name(), p, q, &grid)
+                .map_err(|e| SolveError::Checkpoint(e.to_string()))?,
+        );
+    }
+    let resumed_points = start_k;
+    for (k, &(lam_l, lam_t)) in grid.iter().enumerate().skip(start_k) {
         let mut opts = base.clone();
         opts.lam_l = lam_l;
         opts.lam_t = lam_t;
@@ -530,7 +620,17 @@ pub fn fit_path_with(
             kkt_scans,
             screened,
             fallback,
+            reclusterings: res.trace.reclusterings,
         };
+        // A failed record write must not lose the fitted point — warn and
+        // keep sweeping (the checkpoint simply ends earlier).
+        let write_err = writer
+            .as_mut()
+            .and_then(|w| w.record(k, &point, &res.model).err());
+        if let Some(e) = write_err {
+            eprintln!("warning: checkpoint write failed at point {k}: {e}");
+            writer = None;
+        }
         on_point(k, &point, &res.model);
         points.push(point);
         warm = Some(res.model);
@@ -541,6 +641,7 @@ pub fn fit_path_with(
         model: warm,
         total_seconds: sw.seconds(),
         screen_fallbacks: fallbacks,
+        resumed_points,
     })
 }
 

@@ -284,6 +284,95 @@ pub fn parts_to_blocks(part: &[usize], k: usize) -> Vec<Vec<usize>> {
     blocks
 }
 
+/// Fraction of a sorted pair set that changed between two snapshots:
+/// |symmetric difference| / |union| (Jaccard distance). Both inputs must be
+/// sorted and deduplicated; 0.0 for two empty sets.
+pub fn pair_set_churn(old: &[(usize, usize)], new: &[(usize, usize)]) -> f64 {
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut common = 0usize;
+    while i < old.len() && j < new.len() {
+        match old[i].cmp(&new[j]) {
+            std::cmp::Ordering::Equal => {
+                common += 1;
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    let union = old.len() + new.len() - common;
+    if union == 0 {
+        0.0
+    } else {
+        (union - common) as f64 / union as f64
+    }
+}
+
+/// Churn-gated partition cache — the block solver's clustering, persisted
+/// across outer iterations *and* adjacent λ-path points (supports change
+/// slowly along a path, so the partition that minimized cross-block active
+/// entries at λ_k is almost always still good at λ_{k+1}).
+///
+/// The cache is keyed on the structural inputs that shaped the partition:
+/// vertex count, block count `k`, clustering seed, and the sorted active
+/// pair set it was built from. [`PersistentPartition::blocks_cached`]
+/// recomputes only when any key changes beyond the churn threshold; callers
+/// count the `reclustered` flag into `SolveTrace::reclusterings` so tests
+/// (and the path CLI) can observe the reuse.
+#[derive(Clone, Debug, Default)]
+pub struct PersistentPartition {
+    k: usize,
+    seed: u64,
+    part: Vec<usize>,
+    /// Sorted, deduplicated pair signature the cached partition was built
+    /// from.
+    sig: Vec<(usize, usize)>,
+}
+
+impl PersistentPartition {
+    pub fn new() -> PersistentPartition {
+        PersistentPartition::default()
+    }
+
+    /// True once a partition has been computed.
+    pub fn is_built(&self) -> bool {
+        !self.part.is_empty()
+    }
+
+    /// Blocks for the active structure summarized by `sig` (sorted, deduped
+    /// pairs) over `n` vertices, split `k` ways. Reuses the cached partition
+    /// unless (a) it does not exist or its shape/seed/k changed, or (b) the
+    /// signature churn exceeds `churn_threshold` (negative ⇒ always
+    /// rebuild). `build_graph` is invoked only on a rebuild. Returns the
+    /// per-part index lists and whether a rebuild happened.
+    pub fn blocks_cached(
+        &mut self,
+        n: usize,
+        k: usize,
+        opts: &ClusterOptions,
+        sig: Vec<(usize, usize)>,
+        churn_threshold: f64,
+        build_graph: impl FnOnce() -> Graph,
+    ) -> (Vec<Vec<usize>>, bool) {
+        debug_assert!(sig.windows(2).all(|w| w[0] < w[1]), "signature not sorted");
+        let reusable = self.part.len() == n
+            && self.k == k
+            && self.seed == opts.seed
+            && pair_set_churn(&self.sig, &sig) <= churn_threshold;
+        if reusable {
+            return (parts_to_blocks(&self.part, k), false);
+        }
+        let g = build_graph();
+        debug_assert_eq!(g.n(), n);
+        self.part = cluster(&g, k, opts);
+        self.k = k;
+        self.seed = opts.seed;
+        self.sig = sig;
+        (parts_to_blocks(&self.part, k), true)
+    }
+}
+
 /// Contiguous fallback partition (no clustering): splits 0..n into k ranges.
 /// Used by the `--no-clustering` ablation.
 pub fn contiguous_blocks(n: usize, k: usize) -> Vec<Vec<usize>> {
@@ -390,6 +479,64 @@ mod tests {
         let cont = contiguous_blocks(10, 3);
         assert_eq!(cont.len(), 3);
         assert_eq!(cont.concat(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn churn_is_jaccard_distance() {
+        let a = vec![(0, 1), (1, 2), (2, 3)];
+        assert_eq!(pair_set_churn(&a, &a), 0.0);
+        assert_eq!(pair_set_churn(&[], &[]), 0.0);
+        // One of four union elements differs: distance 2/4 (one dropped, one
+        // added out of union size 4).
+        let b = vec![(0, 1), (1, 2), (3, 4)];
+        assert!((pair_set_churn(&a, &b) - 0.5).abs() < 1e-12);
+        // Disjoint sets: distance 1.
+        assert_eq!(pair_set_churn(&a, &[(7, 8)]), 1.0);
+        // Empty vs non-empty: everything changed.
+        assert_eq!(pair_set_churn(&[], &a), 1.0);
+    }
+
+    #[test]
+    fn persistent_partition_reuses_until_churn_threshold() {
+        let g = two_cluster_graph(10);
+        let mk_graph = || two_cluster_graph(10);
+        let sig: Vec<(usize, usize)> = (0..g.n())
+            .flat_map(|u| {
+                g.neighbors(u)
+                    .iter()
+                    .filter(move |&&(v, _)| v > u)
+                    .map(move |&(v, _)| (u, v))
+            })
+            .collect();
+        let mut sig = sig;
+        sig.sort_unstable();
+        sig.dedup();
+        let opts = ClusterOptions::default();
+        let mut cache = PersistentPartition::new();
+        let (blocks, rebuilt) =
+            cache.blocks_cached(20, 2, &opts, sig.clone(), 0.2, mk_graph);
+        assert!(rebuilt, "first use must build");
+        assert!(cache.is_built());
+        assert_eq!(blocks.concat().len(), 20);
+        // Identical signature: reused, and the builder must not run.
+        let (same, rebuilt) = cache.blocks_cached(20, 2, &opts, sig.clone(), 0.2, || {
+            panic!("builder must not run on a cache hit")
+        });
+        assert!(!rebuilt);
+        assert_eq!(same, blocks);
+        // Small churn (1 edge of many): still under a 0.2 threshold.
+        let mut near = sig.clone();
+        near.pop();
+        let (_, rebuilt) = cache.blocks_cached(20, 2, &opts, near, 0.2, || {
+            panic!("small churn must not trigger a rebuild")
+        });
+        assert!(!rebuilt);
+        // k change always rebuilds.
+        let (_, rebuilt) = cache.blocks_cached(20, 3, &opts, sig.clone(), 0.2, mk_graph);
+        assert!(rebuilt);
+        // Negative threshold forces a rebuild even with zero churn.
+        let (_, rebuilt) = cache.blocks_cached(20, 3, &opts, sig, -1.0, mk_graph);
+        assert!(rebuilt);
     }
 
     #[test]

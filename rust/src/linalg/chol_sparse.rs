@@ -179,6 +179,14 @@ impl SparseChol {
         self.vals.len() + self.n
     }
 
+    /// Resident bytes of the frozen factor: CSC arrays (row index + value
+    /// per off-diagonal entry), column pointers, diagonal, and the two
+    /// permutation vectors — what the memory budget charges for keeping
+    /// this factor alive.
+    pub fn bytes(&self) -> usize {
+        self.vals.len() * 16 + self.colptr.len() * 8 + self.diag.len() * 8 + self.perm.len() * 16
+    }
+
     pub fn logdet(&self) -> f64 {
         self.diag.iter().map(|d| d.ln()).sum::<f64>() * 2.0
     }

@@ -71,10 +71,13 @@ COMMANDS
         [--engine native|xla|pallas [--tile 128|256]] [--trace]
   path  [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--path-points N] [--path-min-ratio R] [--screen full|strong] [--cold]
+        [--checkpoint FILE | --resume FILE] [--recluster-churn X]
         [--time-limit S] ...
         (warm-started λ path: stats computed once, each point seeds the next
          and carries its active set forward via the sequential strong rule;
-         --time-limit budgets the whole sweep; --cold disables warm starts)
+         --time-limit budgets the whole sweep; --cold disables warm starts;
+         --checkpoint streams each fitted point to a JSONL file and --resume
+         warm-restarts an interrupted sweep from its last valid point)
   cv    [--config FILE] [--workload ...|--data FILE] --solver ... --folds K
         [--cv-threads T] [--path-points N] [--path-min-ratio R]
         [--screen full|strong] [--seed S] ...
@@ -230,7 +233,11 @@ fn cmd_path(args: &Args) -> i32 {
         Err(code) => return code,
     };
     let opts = cfg.solve_options();
-    let popts = cfg.path_options(!args.flag("cold"));
+    let mut popts = cfg.path_options(!args.flag("cold"));
+    if let Some(ck) = args.opt("resume") {
+        popts.checkpoint = Some(PathBuf::from(ck));
+        popts.resume = true;
+    }
     if args.opt("lambda").is_some()
         || args.opt("lambda-l").is_some()
         || args.opt("lambda-t").is_some()
@@ -256,6 +263,14 @@ fn cmd_path(args: &Args) -> i32 {
     );
     match coordinator::fit_path(cfg.solver, &prob.data, &opts, &popts, engine.as_ref()) {
         Ok(path) => {
+            if path.resumed_points > 0 {
+                eprintln!(
+                    "resumed from checkpoint: {} of {} points carried over, {} refitted",
+                    path.resumed_points,
+                    path.points.len(),
+                    path.points.len().saturating_sub(path.resumed_points),
+                );
+            }
             println!("{}", path.to_json().to_string_pretty());
             let dir = PathBuf::from(&cfg.out_dir);
             let _ = std::fs::create_dir_all(&dir);

@@ -103,14 +103,21 @@ pub struct SolveTrace {
     /// Coordinates *examined* by active-set screening, summed over outer
     /// iterations: `q(q+1)/2 + pq` per iteration for a full screen, the
     /// screen-set size for a restricted one. The λ-path screening bench's
-    /// work metric. Currently instrumented only by `alt_newton_cd` (the one
-    /// solver that honors `SolveOptions::screen`); every other solver
-    /// reports 0, which means "not measured", not "no work".
+    /// work metric. Instrumented by the screen-honoring solvers
+    /// (`alt_newton_cd`, `newton_cd`, `prox_grad`); the block solver reports
+    /// 0, which means "not measured", not "no work".
     pub coords_screened: usize,
     /// Coordinate-descent update visits (active-set size × inner sweeps,
-    /// summed over outer iterations). Same instrumentation scope as
+    /// summed over outer iterations; for `prox_grad`, prox coordinates
+    /// touched per accepted step). Same instrumentation scope as
     /// `coords_screened`.
     pub cd_updates: usize,
+    /// Graph-clustering partition rebuilds performed by the block solver
+    /// (`alt_newton_bcd`). The partition is cached in the `SolverContext`
+    /// and reused while active-set churn stays under
+    /// `SolveOptions::recluster_churn`, so a warm path point typically
+    /// reports 0 — the λ-path persistence tests pin this.
+    pub reclusterings: usize,
 }
 
 impl SolveTrace {
@@ -134,6 +141,7 @@ impl SolveTrace {
             ("total_seconds", Json::num(self.total_seconds)),
             ("coords_screened", Json::num(self.coords_screened as f64)),
             ("cd_updates", Json::num(self.cd_updates as f64)),
+            ("reclusterings", Json::num(self.reclusterings as f64)),
             (
                 "phases",
                 Json::arr(self.phases.iter().map(|(name, secs, calls)| {

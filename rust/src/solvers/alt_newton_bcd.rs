@@ -19,19 +19,30 @@
 //!   how the paper's OOM wall is reproduced on a large-RAM machine.
 //!
 //! All block caches and GEMM panels are checked out of the
-//! [`SolverContext`]'s workspace arena, so buffers recycle across blocks and
+//! [`SolverContext`]'s workspace arena, and the Λ factorizations (line-search
+//! trials included) are budget-tracked, so buffers recycle across blocks and
 //! iterations and `MemBudget::peak()` is the measured truth the `memwall`
-//! experiment reports. This solver deliberately never touches the context's
-//! dense `S_yy`/`S_xx`/`S_xy` caches — their absence *is* Algorithm 2.
+//! experiment reports — now covering every byte. This solver deliberately
+//! never touches the context's dense `S_yy`/`S_xx`/`S_xy` caches — their
+//! absence *is* Algorithm 2.
+//!
+//! The graph-clustering partitions for the Λ column blocks and Θ output
+//! blocks persist in the [`SolverContext`] across outer iterations and
+//! adjacent λ-path points ([`crate::graph::cluster::PersistentPartition`]):
+//! supports change slowly along a path, so the partition is rebuilt only
+//! when active-set churn crosses [`SolveOptions::recluster_churn`] (observable
+//! via `SolveTrace::reclusterings`).
 
 use super::workspace::{Workspace, WsMat};
 use super::{SolveError, SolveOptions, SolveResult, SolverContext};
-use crate::cggm::factor::LambdaFactor;
+use crate::cggm::factor::{FactorRepr, LambdaFactor};
 use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
 use crate::cggm::objective::{min_norm_subgrad, SmoothParts};
 use crate::cggm::{cd_minimizer, CggmModel, Dataset, Objective};
 use crate::gemm::GemmEngine;
-use crate::graph::cluster::{cluster, contiguous_blocks, parts_to_blocks, ClusterOptions};
+use crate::graph::cluster::{
+    contiguous_blocks, ClusterOptions, PersistentPartition,
+};
 use crate::graph::Graph;
 use crate::linalg::cg::CgSolver;
 use crate::linalg::dense::{axpy, dot, Mat};
@@ -92,9 +103,12 @@ fn pick_sigma<'a>(
     cg: &'a CgSolver,
     opts: &SolveOptions,
 ) -> SigmaOracle<'a> {
-    if let LambdaFactor::Sparse(f) = factor {
+    if let FactorRepr::Sparse(f) = factor.repr() {
+        // The factor's bytes are already registered against the budget
+        // (factor_tracked); using it as the Σ oracle adds no new memory, so
+        // the only question is whether keeping it hot is comfortable.
         let bytes = f.nnz() * 16;
-        if bytes <= opts.budget.available() / 4 {
+        if bytes <= opts.budget.limit() / 4 || bytes <= opts.budget.available() {
             return SigmaOracle::Chol(f);
         }
     }
@@ -134,14 +148,16 @@ pub fn solve(
     let (p, q, n) = (data.p(), data.q(), data.n());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
-    let obj = Objective::new(data, opts.lam_l, opts.lam_t).with_chol(opts.chol);
+    let obj = Objective::new(data, opts.lam_l, opts.lam_t)
+        .with_chol(opts.chol)
+        .with_budget(ctx.budget().clone());
     let mut model = warm.cloned().unwrap_or_else(|| CggmModel::init(p, q));
     let mut trace = SolveTrace {
         solver: "alt_newton_bcd".into(),
         ..Default::default()
     };
 
-    let mut factor = LambdaFactor::factor(&model.lambda, obj.chol, engine)?;
+    let mut factor = obj.factor_lambda(&model.lambda, engine)?;
     let mut rt = ws.mat(q, n)?; // R̃ᵀ (q×n)
     data.xtheta_t_into(&model.theta, &mut rt);
     let mut parts = SmoothParts {
@@ -232,25 +248,42 @@ pub fn solve(
             break;
         }
 
-        // ---- partition columns of Λ (graph clustering on the active set) ----
+        // ---- partition columns of Λ (graph clustering on the active set,
+        // persisted in the context and rebuilt only on churn) ----
         let k_l = lambda_block_count(q, n, opts);
         let blocks: Vec<Vec<usize>> = prof.time("cluster:lambda", || {
             if opts.clustering && k_l > 1 {
-                let mut g = Graph::empty(q);
-                for a in &active {
-                    if a.i != a.j {
-                        g.add_edge(a.i, a.j, 1.0);
-                    }
-                }
-                let part = cluster(
-                    &g,
+                let mut sig: Vec<(usize, usize)> = active
+                    .iter()
+                    .filter(|a| a.i != a.j)
+                    .map(|a| (a.i.min(a.j), a.i.max(a.j)))
+                    .collect();
+                sig.sort_unstable();
+                sig.dedup();
+                let mut caches = ctx.cluster_caches();
+                let (blocks, reclustered) = caches.lambda.blocks_cached(
+                    q,
                     k_l,
                     &ClusterOptions {
                         seed: opts.seed,
                         ..Default::default()
                     },
+                    sig,
+                    opts.recluster_churn,
+                    || {
+                        let mut g = Graph::empty(q);
+                        for a in &active {
+                            if a.i != a.j {
+                                g.add_edge(a.i, a.j, 1.0);
+                            }
+                        }
+                        g
+                    },
                 );
-                parts_to_blocks(&part, k_l)
+                if reclustered {
+                    trace.reclusterings += 1;
+                }
+                blocks
             } else {
                 contiguous_blocks(q, k_l)
             }
@@ -353,9 +386,22 @@ pub fn solve(
         // New CG / oracle on the updated Λ (the line-search factor matches).
         let cg = CgSolver::new(model.lambda.to_csr(), CG_TOL, 20 * q.max(16));
         let sig = pick_sigma(&factor, &cg, opts);
-        prof.time("cd:theta", || -> Result<(), SolveError> {
-            theta_block_sweep(data, &sig, &mut model, &theta_active, par, opts, ws)
+        let theta_reclustered = prof.time("cd:theta", || -> Result<bool, SolveError> {
+            let mut caches = ctx.cluster_caches();
+            theta_block_sweep(
+                data,
+                &sig,
+                &mut model,
+                &theta_active,
+                par,
+                opts,
+                ws,
+                &mut caches.theta,
+            )
         })?;
+        if theta_reclustered {
+            trace.reclusterings += 1;
+        }
         model.theta.prune(0.0);
         data.xtheta_t_into(&model.theta, &mut rt);
         parts.tr_sxy_theta = obj.tr_sxy_sparse(&model.theta);
@@ -665,7 +711,10 @@ fn theta_screen_block(p: usize, q: usize, n: usize, opts: &SolveOptions) -> usiz
 
 /// Θ block CD sweep (Alg. 2 lower half): partition output columns, cache
 /// Σ_{C_r} and V rows, update row blocks (i, C_r) with one S_xx row at a
-/// time restricted to the support rows.
+/// time restricted to the support rows. The column partition persists in
+/// `theta_cache` across sweeps and λ-path points; returns whether it was
+/// rebuilt this call.
+#[allow(clippy::too_many_arguments)]
 fn theta_block_sweep(
     data: &Dataset,
     sig: &SigmaOracle,
@@ -674,10 +723,11 @@ fn theta_block_sweep(
     par: &Parallelism,
     opts: &SolveOptions,
     ws: &Workspace,
-) -> Result<(), SolveError> {
+    theta_cache: &mut PersistentPartition,
+) -> Result<bool, SolveError> {
     let q = data.q();
     if active.is_empty() {
-        return Ok(());
+        return Ok(false);
     }
     // Support rows: non-empty Θ rows ∪ active rows.
     let mut support: Vec<usize> = model.theta.nonempty_row_indices();
@@ -690,23 +740,38 @@ fn theta_block_sweep(
         support_pos[i] = s;
     }
 
-    // Partition columns: cluster the ΘᵀΘ co-occurrence graph of the active set.
+    // Partition columns: cluster the ΘᵀΘ co-occurrence graph of the active
+    // set, persisted in the context and rebuilt only on churn. The (row,
+    // col) active pairs are the signature: the co-occurrence graph is a pure
+    // function of them, so an unchanged signature means an identical graph.
     let k_t = theta_block_count(q, ns, opts);
+    let mut reclustered = false;
     let blocks: Vec<Vec<usize>> = if opts.clustering && k_t > 1 {
-        let rows: Vec<Vec<usize>> = active
+        let mut sig_pairs: Vec<(usize, usize)> = active
             .iter()
-            .map(|(_, v)| v.iter().map(|(j, _)| *j).collect())
+            .flat_map(|(i, v)| v.iter().map(move |&(j, _)| (*i, j)))
             .collect();
-        let g = Graph::theta_column_graph(&rows, q);
-        let part = cluster(
-            &g,
+        sig_pairs.sort_unstable();
+        sig_pairs.dedup();
+        let (blocks, rebuilt) = theta_cache.blocks_cached(
+            q,
             k_t,
             &ClusterOptions {
                 seed: opts.seed ^ 0x5eed,
                 ..Default::default()
             },
+            sig_pairs,
+            opts.recluster_churn,
+            || {
+                let rows: Vec<Vec<usize>> = active
+                    .iter()
+                    .map(|(_, v)| v.iter().map(|(j, _)| *j).collect())
+                    .collect();
+                Graph::theta_column_graph(&rows, q)
+            },
         );
-        parts_to_blocks(&part, k_t)
+        reclustered = rebuilt;
+        blocks
     } else {
         contiguous_blocks(q, k_t)
     };
@@ -799,7 +864,7 @@ fn theta_block_sweep(
             }
         }
     }
-    Ok(())
+    Ok(reclustered)
 }
 
 fn theta_block_count(q: usize, support: usize, opts: &SolveOptions) -> usize {

@@ -25,7 +25,7 @@ use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::active::{
     lambda_active_dense, lambda_active_within, theta_active_dense, theta_active_within,
 };
-use crate::cggm::factor::LambdaFactor;
+use crate::cggm::factor::{FactorRepr, LambdaFactor};
 use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
 use crate::cggm::objective::SmoothParts;
 use crate::cggm::{CggmModel, Objective};
@@ -48,7 +48,9 @@ pub fn solve(
     let (p, q, n) = (data.p(), data.q(), data.n());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
-    let obj = Objective::new(data, opts.lam_l, opts.lam_t).with_chol(opts.chol);
+    let obj = Objective::new(data, opts.lam_l, opts.lam_t)
+        .with_chol(opts.chol)
+        .with_budget(ctx.budget().clone());
     let mut model = warm.cloned().unwrap_or_else(|| CggmModel::init(p, q));
     let mut trace = SolveTrace {
         solver: "alt_newton_cd".into(),
@@ -62,7 +64,7 @@ pub fn solve(
     let sxy = prof.time("cov:sxy", || ctx.sxy())?;
     let sxx_diag = ctx.sxx_diag();
 
-    let mut factor = LambdaFactor::factor(&model.lambda, obj.chol, engine)?;
+    let mut factor = obj.factor_lambda(&model.lambda, engine)?;
     let mut rt = ws.mat(q, n)?;
     data.xtheta_t_into(&model.theta, &mut rt);
     let mut parts = SmoothParts {
@@ -226,13 +228,13 @@ pub(crate) fn sigma_dense_into(
     ws: &super::workspace::Workspace,
     out: &mut Mat,
 ) -> Result<(), SolveError> {
-    match factor {
-        LambdaFactor::Dense(f) => {
+    match factor.repr() {
+        FactorRepr::Dense(f) => {
             let n = f.n();
             let mut w = ws.mat(n, n)?;
             f.inverse_into_scratch(engine, &mut w, out);
         }
-        LambdaFactor::Sparse(f) => {
+        FactorRepr::Sparse(f) => {
             let q = f.n();
             debug_assert_eq!((out.rows(), out.cols()), (q, q));
             par.parallel_chunks_mut(out.data_mut(), q, |c, row| {
@@ -253,9 +255,9 @@ pub(crate) fn sigma_dense(
     engine: &dyn GemmEngine,
     par: &Parallelism,
 ) -> Mat {
-    let q = match factor {
-        LambdaFactor::Dense(f) => f.n(),
-        LambdaFactor::Sparse(f) => f.n(),
+    let q = match factor.repr() {
+        FactorRepr::Dense(f) => f.n(),
+        FactorRepr::Sparse(f) => f.n(),
     };
     let ws = super::workspace::Workspace::new(crate::util::membudget::MemBudget::unlimited());
     let mut out = Mat::zeros(q, q);

@@ -13,23 +13,32 @@
 //! The context also owns the [`Workspace`] arena, so cached statistics and
 //! hot-loop scratch draw on one [`MemBudget`]: `peak()` measures the
 //! dominant dense working set — statistics, Σ/Ψ/gradient buffers, column
-//! caches and GEMM panels — for all four solvers (the `memwall`
-//! experiment's measured column). Cholesky factors (one O(q²)-bounded
-//! allocation per factorization, dense path only) remain untracked; see
-//! ROADMAP "λ-path workloads" for the follow-up.
+//! caches, GEMM panels, *and* every Λ Cholesky factor (dense `L`, sparse
+//! fill, one per line-search trial; see
+//! [`crate::cggm::factor::LambdaFactor::factor_tracked`]) — for all four
+//! solvers. `peak()` is the `memwall` experiment's measured column, now
+//! covering every byte the solvers touch.
+//!
+//! The context additionally persists the block solver's graph-clustering
+//! partitions ([`Self::cluster_caches`]): along a λ path, supports change
+//! slowly, so `alt_newton_bcd` reuses the partition across outer iterations
+//! and adjacent path points instead of re-deriving its column clusterings at
+//! every point, re-clustering only when active-set churn crosses
+//! `SolveOptions::recluster_churn`.
 //!
 //! Laziness matters for the memory story: the block solver (Algorithm 2)
 //! never touches the dense statistics, so creating a context for it
 //! materializes nothing; `prox_grad` pulls only `S_yy`/`S_xy` (it is
 //! n-factored and never forms the p×p Gram).
 
-use std::cell::{Cell, OnceCell};
+use std::cell::{Cell, OnceCell, RefCell, RefMut};
 
 use super::workspace::Workspace;
 use super::{SolveError, SolveOptions};
-use crate::cggm::factor::{CholKind, LambdaFactor};
+use crate::cggm::factor::CholKind;
 use crate::cggm::{CggmModel, Dataset, Objective};
 use crate::gemm::GemmEngine;
+use crate::graph::cluster::PersistentPartition;
 use crate::linalg::dense::Mat;
 use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
 use crate::util::threadpool::Parallelism;
@@ -39,6 +48,15 @@ use crate::util::threadpool::Parallelism;
 struct CachedMat {
     mat: Mat,
     _track: Tracked,
+}
+
+/// The block solver's persisted clustering partitions: one for the Λ column
+/// blocks, one for the Θ output-column blocks. Owned by the context so they
+/// survive across solves (and hence across adjacent λ-path points).
+#[derive(Default)]
+pub struct ClusterCaches {
+    pub lambda: PersistentPartition,
+    pub theta: PersistentPartition,
 }
 
 /// Shared state for one dataset: construct once, run many solves.
@@ -52,6 +70,7 @@ pub struct SolverContext<'a> {
     sxy: OnceCell<CachedMat>,
     sxx_diag: OnceCell<Vec<f64>>,
     stat_computes: Cell<usize>,
+    clusters: RefCell<ClusterCaches>,
 }
 
 impl<'a> SolverContext<'a> {
@@ -70,7 +89,15 @@ impl<'a> SolverContext<'a> {
             sxy: OnceCell::new(),
             sxx_diag: OnceCell::new(),
             stat_computes: Cell::new(0),
+            clusters: RefCell::new(ClusterCaches::default()),
         }
+    }
+
+    /// The block solver's persisted clustering partitions (exclusive borrow
+    /// for the duration of one clustering decision — hold it only inside the
+    /// partition phase).
+    pub fn cluster_caches(&self) -> RefMut<'_, ClusterCaches> {
+        self.clusters.borrow_mut()
     }
 
     pub fn data(&self) -> &'a Dataset {
@@ -161,8 +188,10 @@ impl<'a> SolverContext<'a> {
     ) -> Result<(Mat, Mat), SolveError> {
         let data = self.data;
         let (p, q, n) = (data.p(), data.q(), data.n());
-        let obj = Objective::new(data, 0.0, 0.0).with_chol(chol);
-        let factor = LambdaFactor::factor(&model.lambda, chol, self.engine)?;
+        let obj = Objective::new(data, 0.0, 0.0)
+            .with_chol(chol)
+            .with_budget(self.ws.budget().clone());
+        let factor = obj.factor_lambda(&model.lambda, self.engine)?;
         let mut gl = self.syy()?.clone();
         let mut gt = Mat::zeros(p, q);
         {

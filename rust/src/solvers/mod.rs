@@ -88,11 +88,15 @@ impl SolverKind {
     /// Whether this solver honors [`SolveOptions::screen`] (path-level
     /// strong-rule restriction). The λ-path driver only engages screening —
     /// including its per-point gradient evaluations — for these solvers.
-    /// The block solver must stay off this list: the driver's dense
-    /// gradient evaluations would materialize the q×q/p×q matrices its
-    /// memory story exists to avoid.
+    /// All three dense-statistic solvers restrict their screens (and CD /
+    /// prox work) to the allowed set. The block solver must stay off this
+    /// list: the driver's dense gradient evaluations would materialize the
+    /// q×q/p×q matrices its memory story exists to avoid.
     pub fn supports_screen(&self) -> bool {
-        matches!(self, SolverKind::AltNewtonCd)
+        matches!(
+            self,
+            SolverKind::AltNewtonCd | SolverKind::NewtonCd | SolverKind::ProxGrad
+        )
     }
 
     /// Every solver the crate implements, including the first-order baseline.
@@ -136,6 +140,15 @@ pub struct SolveOptions {
     pub trace_f: bool,
     /// Seed for clustering tie-breaking.
     pub seed: u64,
+    /// Active-set churn (Jaccard distance vs the partition's build-time set)
+    /// above which the block solver recomputes its graph-clustering
+    /// partition. The partition is cached in the [`SolverContext`], so along
+    /// a λ path (where supports change slowly) adjacent points — and outer
+    /// iterations within a point — reuse it instead of re-deriving column
+    /// clusterings from scratch. `0.0` reclusters on any change; a negative
+    /// value forces reclustering every time (the ablation the persistence
+    /// tests compare against); `>= 1.0` never reclusters once built.
+    pub recluster_churn: f64,
     /// Restrict screening (and hence all CD work) to this coordinate set —
     /// the λ-path driver's sequential strong rule
     /// ([`crate::cggm::active::ScreenSet`]). `None` screens every
@@ -162,6 +175,7 @@ impl Default for SolveOptions {
             time_limit: 0.0,
             trace_f: true,
             seed: 7,
+            recluster_churn: 0.2,
             screen: None,
         }
     }
@@ -188,11 +202,34 @@ pub struct SolveResult {
 #[derive(Debug, thiserror::Error)]
 pub enum SolveError {
     #[error("line search failed: {0}")]
-    LineSearch(#[from] crate::cggm::linesearch::LineSearchError),
+    LineSearch(crate::cggm::linesearch::LineSearchError),
     #[error("Λ factorization failed: {0}")]
-    Factor(#[from] crate::cggm::factor::FactorError),
+    Factor(crate::cggm::factor::FactorError),
     #[error("memory budget cannot hold the minimum working set: {0}")]
     Budget(#[from] crate::util::membudget::BudgetExceeded),
+    #[error("checkpoint io: {0}")]
+    Checkpoint(String),
+}
+
+// Manual `From` impls so budget failures keep one face: a factorization or
+// line-search trial the budget cannot hold surfaces as `SolveError::Budget`
+// — the paper's "out of memory" — no matter which layer detected it.
+impl From<crate::cggm::factor::FactorError> for SolveError {
+    fn from(e: crate::cggm::factor::FactorError) -> SolveError {
+        match e {
+            crate::cggm::factor::FactorError::Budget(b) => SolveError::Budget(b),
+            other => SolveError::Factor(other),
+        }
+    }
+}
+
+impl From<crate::cggm::linesearch::LineSearchError> for SolveError {
+    fn from(e: crate::cggm::linesearch::LineSearchError) -> SolveError {
+        match e {
+            crate::cggm::linesearch::LineSearchError::Budget(b) => SolveError::Budget(b),
+            other => SolveError::LineSearch(other),
+        }
+    }
 }
 
 /// One-shot dispatch: builds a fresh [`SolverContext`] for this solve.
@@ -226,9 +263,13 @@ pub fn solve_in_context(
 
 /// Estimated dense working-set bytes of the non-block solvers — used by the
 /// `memwall` experiment to reproduce the paper's OOM boundary. An analytic
-/// estimate only; the measured truth is `MemBudget::peak()`, which the
-/// workspace arena keeps honest (asserted within tolerance by
-/// `workspace_peak_matches_dense_estimate` in the integration tests).
+/// estimate of the *iterate-and-cache* set only; Cholesky factors (q²·8
+/// dense, nnz(L)-sized sparse, one extra per live line-search trial —
+/// `cggm::factor::dense_factor_bytes` and friends) come on top and are
+/// measured by `MemBudget::peak()`, which the workspace arena and
+/// budget-tracked factorization keep honest (asserted within tolerance by
+/// `workspace_peak_matches_dense_estimate` and the `memwall_tests`
+/// integration module).
 pub fn dense_workingset_bytes(kind: SolverKind, p: usize, q: usize) -> usize {
     let f = std::mem::size_of::<f64>();
     match kind {

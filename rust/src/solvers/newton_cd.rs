@@ -13,15 +13,24 @@
 //!
 //! Statistics come cached from the [`SolverContext`]; all per-iteration
 //! dense scratch (Σ, Ψ, Γ, Γᵀ, gradients, `U`/`V'` caches) is checked out
-//! of the workspace arena — zero allocations in the iteration loop.
+//! of the workspace arena — zero allocations in the iteration loop — and
+//! every Λ factorization (including the joint line search's per-trial
+//! factors) is tracked against the context's memory budget.
+//!
+//! Honors [`SolveOptions::screen`]: under a λ-path strong-rule restriction
+//! the screens (and hence the joint CD work and the stopping statistic) are
+//! confined to the allowed coordinate set — identical semantics to
+//! `alt_newton_cd`'s restriction, with the KKT post-check in
+//! `coordinator::solve_screened` guaranteeing equivalence.
 
 use super::alt_newton_cd::{full_count, sigma_dense_into};
 use super::cd_common::{
     lambda_cd_pass, theta_cd_pass_direction, trace_grad_dir, JointTerms,
 };
 use super::{SolveError, SolveOptions, SolveResult, SolverContext};
-use crate::cggm::active::{lambda_active_dense, theta_active_dense};
-use crate::cggm::factor::LambdaFactor;
+use crate::cggm::active::{
+    lambda_active_dense, lambda_active_within, theta_active_dense, theta_active_within,
+};
 use crate::cggm::linesearch::{joint_line_search, LineSearchOptions};
 use crate::cggm::objective::SmoothParts;
 use crate::cggm::{CggmModel, Objective};
@@ -41,7 +50,9 @@ pub fn solve(
     let (p, q, n) = (data.p(), data.q(), data.n());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
-    let obj = Objective::new(data, opts.lam_l, opts.lam_t).with_chol(opts.chol);
+    let obj = Objective::new(data, opts.lam_l, opts.lam_t)
+        .with_chol(opts.chol)
+        .with_budget(ctx.budget().clone());
     let mut model = warm.cloned().unwrap_or_else(|| CggmModel::init(p, q));
     let mut trace = SolveTrace {
         solver: "newton_cd".into(),
@@ -53,7 +64,11 @@ pub fn solve(
     let sxy = prof.time("cov:sxy", || ctx.sxy())?;
     let sxx_diag = ctx.sxx_diag();
 
-    let mut factor = LambdaFactor::factor(&model.lambda, obj.chol, engine)?;
+    // Path-level strong-rule restriction (λ-path driver): screens and CD
+    // work confined to the allowed coordinates.
+    let screen = opts.screen.as_deref();
+
+    let mut factor = obj.factor_lambda(&model.lambda, engine)?;
     let mut rt = ws.mat(q, n)?;
     data.xtheta_t_into(&model.theta, &mut rt);
     let mut parts = SmoothParts {
@@ -92,8 +107,20 @@ pub fn solve(
         gt.copy_from(sxy);
         gt.add_scaled(1.0, &gamma);
         gt.scale(2.0);
-        let (active_l, stats_l) = lambda_active_dense(&gl, &model.lambda, opts.lam_l);
-        let (active_t, stats_t) = theta_active_dense(&gt, &model.theta, opts.lam_t);
+        let (active_l, stats_l) = match screen {
+            Some(set) => lambda_active_within(&gl, &model.lambda, opts.lam_l, &set.lambda),
+            None => lambda_active_dense(&gl, &model.lambda, opts.lam_l),
+        };
+        let (active_t, stats_t) = match screen {
+            Some(set) => {
+                theta_active_within(|i, j| gt[(i, j)], &model.theta, opts.lam_t, &set.theta)
+            }
+            None => theta_active_dense(&gt, &model.theta, opts.lam_t),
+        };
+        trace.coords_screened += match screen {
+            Some(set) => set.len(),
+            None => q * (q + 1) / 2 + p * q,
+        };
         let subgrad = stats_l.subgrad_l1 + stats_t.subgrad_l1;
         let param_l1 = model.lambda.l1_norm() + model.theta.l1_norm();
         trace.push(IterRecord {
@@ -112,6 +139,7 @@ pub fn solve(
         if opts.out_of_time(sw.seconds()) {
             break;
         }
+        trace.cd_updates += opts.inner_sweeps * (active_l.len() + active_t.len());
 
         // ---- joint CD for (D_Λ, D_Θ) ----
         let mut delta_l = SpRowMat::zeros(q, q);

@@ -17,12 +17,24 @@
 //! n-factored and never forms the p×p `S_xx`); the dense iterates, momentum
 //! point, prox candidate, and every smooth-evaluation scratch matrix are
 //! workspace-arena checkouts, so the FISTA loop — including its inner
-//! backtracking trials — performs no allocations.
+//! backtracking trials — performs no allocations. Each smooth evaluation's
+//! dense Cholesky (one per backtracking trial) registers its bytes against
+//! the budget for the duration of the evaluation, so `MemBudget::peak()`
+//! covers the factorization scratch here too.
+//!
+//! Honors [`SolveOptions::screen`]: under a λ-path strong-rule restriction
+//! the prox step only moves allowed coordinates (everything else stays
+//! frozen — zero from a cold start, the warm support having been merged into
+//! the set by `coordinator::solve_screened`), and the screens/stopping
+//! statistic are confined to the same set.
 
 use super::workspace::{Workspace, WsMat};
 use super::{SolveError, SolveOptions, SolveResult, SolverContext};
-use crate::cggm::active::{lambda_active_dense, theta_active_dense};
-use crate::cggm::factor::FactorError;
+use crate::cggm::active::{
+    lambda_active_dense, lambda_active_within, theta_active_dense, theta_active_within,
+    ScreenSet,
+};
+use crate::cggm::factor::{dense_factor_bytes, dense_factor_scratch_bytes, FactorError};
 use crate::cggm::soft_threshold;
 use crate::cggm::{CggmModel, Dataset};
 use crate::gemm::GemmEngine;
@@ -52,6 +64,12 @@ fn eval_smooth<'w>(
     th: &Mat,
 ) -> Result<Option<SmoothEval<'w>>, SolveError> {
     let (p, q, n) = (data.p(), data.q(), data.n());
+    // The factor lives for this evaluation only; register its resident L and
+    // the blocked factorization's scratch against the budget for exactly
+    // that long (the per-trial factor bytes the memwall numbers must see).
+    let _factor_bytes = ws
+        .budget()
+        .track(dense_factor_bytes(q) + dense_factor_scratch_bytes(q))?;
     let chol = match DenseChol::factor(lam, engine) {
         Ok(c) => c,
         Err(_) => return Ok(None),
@@ -97,7 +115,26 @@ fn eval_smooth<'w>(
     Ok(Some(SmoothEval { g, grad_l, grad_t }))
 }
 
-/// (Λ⁺, Θ⁺) = prox_{ηh}(y − η∇g(y)), written into `out_*`.
+/// Dense membership masks for a screen set: full q×q for Λ (both triangles)
+/// and p×q for Θ. Built once per solve; the prox step reads them per
+/// coordinate.
+fn screen_masks(set: &ScreenSet, p: usize, q: usize) -> (Vec<bool>, Vec<bool>) {
+    let mut ml = vec![false; q * q];
+    for &(i, j) in &set.lambda {
+        ml[i * q + j] = true;
+        ml[j * q + i] = true;
+    }
+    let mut mt = vec![false; p * q];
+    for &(i, j) in &set.theta {
+        mt[i * q + j] = true;
+    }
+    (ml, mt)
+}
+
+/// (Λ⁺, Θ⁺) = prox_{ηh}(y − η∇g(y)), written into `out_*`. With `masks`,
+/// only allowed coordinates take the gradient-prox step; the rest copy `y`
+/// unchanged — since frozen coordinates never move, their momentum point
+/// equals their (frozen) value, so copying `y` keeps them exactly fixed.
 #[allow(clippy::too_many_arguments)]
 fn prox_step(
     y_lam: &Mat,
@@ -106,23 +143,36 @@ fn prox_step(
     eta: f64,
     lam_l: f64,
     lam_t: f64,
+    masks: Option<&(Vec<bool>, Vec<bool>)>,
     out_lam: &mut Mat,
     out_th: &mut Mat,
 ) {
-    for (o, (yi, gi)) in out_lam
+    let (ml, mt) = match masks {
+        Some((ml, mt)) => (Some(ml.as_slice()), Some(mt.as_slice())),
+        None => (None, None),
+    };
+    for (k, (o, (yi, gi))) in out_lam
         .data_mut()
         .iter_mut()
         .zip(y_lam.data().iter().zip(ev.grad_l.data()))
+        .enumerate()
     {
-        *o = soft_threshold(yi - eta * gi, eta * lam_l);
+        *o = match ml {
+            Some(mask) if !mask[k] => *yi,
+            _ => soft_threshold(yi - eta * gi, eta * lam_l),
+        };
     }
     out_lam.symmetrize();
-    for (o, (yi, gi)) in out_th
+    for (k, (o, (yi, gi))) in out_th
         .data_mut()
         .iter_mut()
         .zip(y_th.data().iter().zip(ev.grad_t.data()))
+        .enumerate()
     {
-        *o = soft_threshold(yi - eta * gi, eta * lam_t);
+        *o = match mt {
+            Some(mask) if !mask[k] => *yi,
+            _ => soft_threshold(yi - eta * gi, eta * lam_t),
+        };
     }
 }
 
@@ -143,6 +193,11 @@ pub fn solve(
     };
     let syy = ctx.syy()?;
     let sxy = ctx.sxy()?;
+
+    // Path-level strong-rule restriction: masks for the prox step (built
+    // once), restricted screens for the stopping statistic.
+    let screen = opts.screen.as_deref();
+    let masks = screen.map(|set| screen_masks(set, p, q));
 
     let penalty = |lam: &Mat, th: &Mat| -> f64 {
         opts.lam_l * lam.data().iter().map(|v| v.abs()).sum::<f64>()
@@ -192,11 +247,23 @@ pub fn solve(
     let mut f_cur = ev_x.g + penalty(&x_lam, &x_th);
 
     for it in 0..opts.max_iter {
-        // Trace + stopping statistic from the dense screens.
+        // Trace + stopping statistic from the (possibly restricted) screens.
         let lam_sp = SpRowMat::from_dense(&x_lam, 0.0);
         let th_sp = SpRowMat::from_dense(&x_th, 0.0);
-        let (al, stats_l) = lambda_active_dense(&ev_x.grad_l, &lam_sp, opts.lam_l);
-        let (at, stats_t) = theta_active_dense(&ev_x.grad_t, &th_sp, opts.lam_t);
+        let (al, stats_l) = match screen {
+            Some(set) => lambda_active_within(&ev_x.grad_l, &lam_sp, opts.lam_l, &set.lambda),
+            None => lambda_active_dense(&ev_x.grad_l, &lam_sp, opts.lam_l),
+        };
+        let (at, stats_t) = match screen {
+            Some(set) => {
+                theta_active_within(|i, j| ev_x.grad_t[(i, j)], &th_sp, opts.lam_t, &set.theta)
+            }
+            None => theta_active_dense(&ev_x.grad_t, &th_sp, opts.lam_t),
+        };
+        trace.coords_screened += match screen {
+            Some(set) => set.len(),
+            None => q * (q + 1) / 2 + p * q,
+        };
         let subgrad = stats_l.subgrad_l1 + stats_t.subgrad_l1;
         let param_l1 = lam_sp.l1_norm() + th_sp.l1_norm();
         trace.push(IterRecord {
@@ -233,7 +300,15 @@ pub fn solve(
         let mut accepted: Option<SmoothEval> = None;
         for _ in 0..60 {
             prox_step(
-                &y_lam, &y_th, &ev_y, eta, opts.lam_l, opts.lam_t, &mut cand_lam, &mut cand_th,
+                &y_lam,
+                &y_th,
+                &ev_y,
+                eta,
+                opts.lam_l,
+                opts.lam_t,
+                masks.as_ref(),
+                &mut cand_lam,
+                &mut cand_th,
             );
             if let Some(ev_c) = eval_smooth(ws, data, syy, sxy, engine, &cand_lam, &cand_th)? {
                 let mut lin = 0.0;
@@ -268,6 +343,12 @@ pub fn solve(
         let ev_new = match accepted {
             Some(v) => v,
             None => break, // η underflow — numerically stuck
+        };
+        // Prox "update" work: one pass over every coordinate the step may
+        // move (the restricted set under screening, all of them otherwise).
+        trace.cd_updates += match screen {
+            Some(set) => set.len(),
+            None => q * q + p * q,
         };
         let f_new = ev_new.g + penalty(&cand_lam, &cand_th);
         // FISTA momentum with function restart.

@@ -9,7 +9,15 @@
 //!   arena reuse;
 //! - [`cv_tests`] — K-fold cross-validated λ selection end to end;
 //! - [`screening_tests`] — sequential strong rule, KKT post-check, and the
-//!   screened-vs-full equivalence/efficiency guarantees;
+//!   screened-vs-full equivalence/efficiency guarantees (all three
+//!   screen-honoring solvers);
+//! - [`memwall_tests`] — `MemBudget::peak()` covers Cholesky factor bytes
+//!   (within tolerance of the analytic estimate) and undersized budgets
+//!   fail fast without allocating;
+//! - [`checkpoint_tests`] — λ-path checkpoint round-trips: interrupt,
+//!   resume, corrupted-tail recovery, 1e-8 objective equivalence;
+//! - [`cluster_persistence_tests`] — the block solver's partition cache:
+//!   re-clustering only on churn, forced-rebuild equivalence;
 //! - [`cli_tests`] — config/dataset plumbing plus the compiled `cggm`
 //!   binary run as a subprocess;
 //! - [`oracle_tests`] — the cross-language PJRT oracle (skips when
@@ -35,6 +43,15 @@ mod cv_tests;
 
 #[path = "integration/screening_tests.rs"]
 mod screening_tests;
+
+#[path = "integration/memwall_tests.rs"]
+mod memwall_tests;
+
+#[path = "integration/checkpoint_tests.rs"]
+mod checkpoint_tests;
+
+#[path = "integration/cluster_persistence_tests.rs"]
+mod cluster_persistence_tests;
 
 #[path = "integration/cli_tests.rs"]
 mod cli_tests;

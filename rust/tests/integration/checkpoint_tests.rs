@@ -1,0 +1,320 @@
+//! λ-path checkpoint/resume round-trips: an interrupted sweep, resumed from
+//! its checkpoint, must reproduce the uninterrupted sweep's objectives to
+//! 1e-8 — the checkpoint stores models with exact f64 round-trips, so the
+//! resumed trajectory is the interrupted one continued, not a lookalike.
+//! Corrupted/truncated checkpoints recover by refitting from the last valid
+//! point; a header-corrupt file is treated as no checkpoint at all.
+
+use cggm::coordinator::{checkpoint, fit_path, PathOptions, PathResult};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{SolveOptions, SolverKind};
+use std::path::PathBuf;
+
+fn fixture() -> datagen::Problem {
+    datagen::chain::generate(16, 16, 80, 41)
+}
+
+fn base_opts() -> SolveOptions {
+    SolveOptions {
+        max_iter: 80,
+        ..Default::default()
+    }
+}
+
+fn popts(ck: Option<PathBuf>, resume: bool) -> PathOptions {
+    PathOptions {
+        points: 5,
+        min_ratio: 0.1,
+        checkpoint: ck,
+        resume,
+        ..Default::default()
+    }
+}
+
+fn assert_paths_equal(reference: &PathResult, got: &PathResult) {
+    assert_eq!(reference.points.len(), got.points.len());
+    for (a, b) in reference.points.iter().zip(&got.points) {
+        assert_eq!(a.lam_l, b.lam_l, "grids diverged");
+        assert_eq!(a.lam_t, b.lam_t);
+        assert!(
+            (a.f - b.f).abs() <= 1e-8 * a.f.abs().max(1.0),
+            "objective diverged at λ={}: reference {} vs resumed {}",
+            a.lam_l,
+            a.f,
+            b.f
+        );
+        assert_eq!(a.lambda_nnz, b.lambda_nnz, "support diverged at λ={}", a.lam_l);
+        assert_eq!(a.theta_nnz, b.theta_nnz);
+    }
+    let (ma, mb) = (
+        reference.model.as_ref().unwrap(),
+        got.model.as_ref().unwrap(),
+    );
+    assert!(
+        ma.lambda
+            .to_dense()
+            .max_abs_diff(&mb.lambda.to_dense())
+            <= 1e-8
+    );
+    assert!(ma.theta.to_dense().max_abs_diff(&mb.theta.to_dense()) <= 1e-8);
+}
+
+/// Keep the first `1 + points` lines (header + fitted points) of a
+/// checkpoint — simulating a sweep killed after `points` points.
+fn truncate_to_points(ck: &PathBuf, points: usize) {
+    let text = std::fs::read_to_string(ck).unwrap();
+    let prefix: String = text
+        .lines()
+        .take(1 + points)
+        .map(|l| format!("{l}\n"))
+        .collect();
+    std::fs::write(ck, prefix).unwrap();
+}
+
+/// Acceptance: interrupt a sweep after 2 of 5 points, resume, and match the
+/// uninterrupted sweep's per-λ objectives to 1e-8.
+#[test]
+fn resumed_sweep_matches_uninterrupted_run() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+    let base = base_opts();
+    let reference =
+        fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &popts(None, false), &eng).unwrap();
+    assert_eq!(reference.points.len(), 5);
+    assert_eq!(reference.resumed_points, 0);
+
+    let ck = std::env::temp_dir().join("cggm_it_ckpt_resume.jsonl");
+    let _ = std::fs::remove_file(&ck);
+    let full = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), false),
+        &eng,
+    )
+    .unwrap();
+    // Checkpointing itself must not perturb the sweep.
+    assert_paths_equal(&reference, &full);
+
+    // "Interrupt" after two points, then resume with the same options.
+    truncate_to_points(&ck, 2);
+    let resumed = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), true),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(resumed.resumed_points, 2);
+    assert_paths_equal(&reference, &resumed);
+
+    // The resumed run appended the refitted points: the checkpoint is whole
+    // again and a further resume carries all 5 points without refitting.
+    let state = checkpoint::load(&ck).unwrap();
+    assert_eq!(state.points.len(), 5);
+    let replay = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), true),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(replay.resumed_points, 5);
+    assert_paths_equal(&reference, &replay);
+    let _ = std::fs::remove_file(&ck);
+}
+
+/// A checkpoint whose final line was torn mid-write (the only state an
+/// interrupted flush-per-line log can leave) recovers by refitting from the
+/// last *valid* point — and still reproduces the uninterrupted objectives.
+#[test]
+fn torn_checkpoint_recovers_from_last_valid_point() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+    let base = base_opts();
+    let reference =
+        fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &popts(None, false), &eng).unwrap();
+
+    let ck = std::env::temp_dir().join("cggm_it_ckpt_torn.jsonl");
+    let _ = std::fs::remove_file(&ck);
+    let _ = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), false),
+        &eng,
+    )
+    .unwrap();
+    // Keep header + 3 points + half of the 4th point's line.
+    let text = std::fs::read_to_string(&ck).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let mut torn: String = lines[..4].iter().map(|l| format!("{l}\n")).collect();
+    torn.push_str(&lines[4][..lines[4].len() / 2]);
+    std::fs::write(&ck, torn).unwrap();
+
+    let state = checkpoint::load(&ck).unwrap();
+    assert_eq!(state.points.len(), 3, "torn line must not count");
+
+    let resumed = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), true),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(resumed.resumed_points, 3);
+    assert_paths_equal(&reference, &resumed);
+    let _ = std::fs::remove_file(&ck);
+}
+
+/// A file that is not a checkpoint (corrupt header) is no checkpoint: the
+/// sweep starts fresh, overwrites it, and completes normally.
+#[test]
+fn corrupt_header_starts_fresh() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+    let base = base_opts();
+    let ck = std::env::temp_dir().join("cggm_it_ckpt_corrupt.jsonl");
+    std::fs::write(&ck, "this is not a checkpoint\n{\"kind\":\"garbage\"}\n").unwrap();
+    let res = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), true),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(res.resumed_points, 0, "garbage must not be resumed");
+    assert_eq!(res.points.len(), 5);
+    // The rewritten file is a valid checkpoint of the full sweep.
+    let state = checkpoint::load(&ck).unwrap();
+    assert_eq!(state.points.len(), 5);
+    let _ = std::fs::remove_file(&ck);
+}
+
+/// Resuming a checkpoint written by a different run (other solver or other
+/// problem shape) is an error, not a silent fresh start — the file must
+/// never be clobbered, and a dimensionally-wrong model must never be adopted
+/// as a warm start.
+#[test]
+fn mismatched_checkpoint_is_refused() {
+    let prob = fixture(); // 16×16
+    let eng = NativeGemm::new(1);
+    let base = base_opts();
+    let ck = std::env::temp_dir().join("cggm_it_ckpt_mismatch.jsonl");
+    let _ = std::fs::remove_file(&ck);
+    let _ = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), false),
+        &eng,
+    )
+    .unwrap();
+    let before = std::fs::read_to_string(&ck).unwrap();
+    // Same data, different solver.
+    let err = fit_path(
+        SolverKind::NewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), true),
+        &eng,
+    );
+    assert!(
+        matches!(err, Err(cggm::solvers::SolveError::Checkpoint(_))),
+        "solver mismatch must refuse to resume"
+    );
+    // Same solver, different shape.
+    let other = datagen::chain::generate(12, 12, 60, 43);
+    let err = fit_path(
+        SolverKind::AltNewtonCd,
+        &other.data,
+        &base,
+        &popts(Some(ck.clone()), true),
+        &eng,
+    );
+    assert!(
+        matches!(err, Err(cggm::solvers::SolveError::Checkpoint(_))),
+        "shape mismatch must refuse to resume"
+    );
+    // The refused checkpoint survives untouched.
+    assert_eq!(std::fs::read_to_string(&ck).unwrap(), before);
+    let _ = std::fs::remove_file(&ck);
+}
+
+/// A resumed sweep's summary counters cover the carried-over points: its
+/// screen_fallbacks equals the sum of `fallback` flags over *all* points,
+/// exactly like an uninterrupted run's.
+#[test]
+fn resumed_summary_counters_cover_carried_points() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+    let base = base_opts();
+    let ck = std::env::temp_dir().join("cggm_it_ckpt_counters.jsonl");
+    let _ = std::fs::remove_file(&ck);
+    let _ = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), false),
+        &eng,
+    )
+    .unwrap();
+    truncate_to_points(&ck, 3);
+    let resumed = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &popts(Some(ck.clone()), true),
+        &eng,
+    )
+    .unwrap();
+    let from_points = resumed.points.iter().filter(|p| p.fallback).count();
+    assert_eq!(
+        resumed.screen_fallbacks, from_points,
+        "summary must agree with the points array it summarizes"
+    );
+    let _ = std::fs::remove_file(&ck);
+}
+
+/// Checkpointing composes with the unscreened/cold configurations too: the
+/// resume path must not assume the strong rule is active.
+#[test]
+fn resume_without_screening_or_warm_starts() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+    let base = base_opts();
+    let mk = |ck: Option<PathBuf>, resume: bool| PathOptions {
+        warm_start: false,
+        screen: cggm::cggm::active::ScreenRule::Full,
+        ..popts(ck, resume)
+    };
+    let reference =
+        fit_path(SolverKind::AltNewtonCd, &prob.data, &base, &mk(None, false), &eng).unwrap();
+    let ck = std::env::temp_dir().join("cggm_it_ckpt_cold.jsonl");
+    let _ = std::fs::remove_file(&ck);
+    let _ = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &mk(Some(ck.clone()), false),
+        &eng,
+    )
+    .unwrap();
+    truncate_to_points(&ck, 3);
+    let resumed = fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &base,
+        &mk(Some(ck.clone()), true),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(resumed.resumed_points, 3);
+    assert_paths_equal(&reference, &resumed);
+    let _ = std::fs::remove_file(&ck);
+}

@@ -110,6 +110,82 @@ fn cggm_cv_subcommand_selects_a_lambda() {
     let _ = std::fs::remove_dir_all(out_dir);
 }
 
+/// `cggm path --checkpoint` writes a resumable JSONL sweep; truncating it
+/// and rerunning with `--resume` carries the surviving points and refits the
+/// rest, reproducing the original objectives exactly.
+#[test]
+fn cggm_path_checkpoint_resume_roundtrip() {
+    let out_dir = std::env::temp_dir().join("cggm_cli_ckpt_out");
+    let ck = std::env::temp_dir().join("cggm_cli_ckpt.jsonl");
+    let _ = std::fs::remove_file(&ck);
+    let run = |resume: bool| {
+        let mut args = vec![
+            "path".to_string(),
+            "--workload".into(),
+            "chain".into(),
+            "--p".into(),
+            "10".into(),
+            "--q".into(),
+            "10".into(),
+            "--n".into(),
+            "60".into(),
+            "--solver".into(),
+            "alt".into(),
+            "--path-points".into(),
+            "4".into(),
+            "--out".into(),
+            out_dir.to_str().unwrap().into(),
+        ];
+        if resume {
+            args.push("--resume".into());
+        } else {
+            args.push("--checkpoint".into());
+        }
+        args.push(ck.to_str().unwrap().to_string());
+        Command::new(env!("CARGO_BIN_EXE_cggm"))
+            .args(&args)
+            .output()
+            .expect("failed to run the cggm binary")
+    };
+    let first = run(false);
+    assert!(
+        first.status.success(),
+        "checkpointed path failed: {}",
+        String::from_utf8_lossy(&first.stderr)
+    );
+    let full_doc = Json::parse(&String::from_utf8_lossy(&first.stdout)).unwrap();
+    assert_eq!(
+        full_doc.get("resumed_points").and_then(|v| v.as_usize()),
+        Some(0)
+    );
+    // "Interrupt": keep the header and the first two point lines.
+    let text = std::fs::read_to_string(&ck).expect("checkpoint written");
+    assert_eq!(text.lines().count(), 1 + 4, "header + 4 points");
+    let prefix: String = text.lines().take(3).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&ck, prefix).unwrap();
+    // Resume: two points carried, two refitted, same objectives.
+    let second = run(true);
+    assert!(
+        second.status.success(),
+        "resumed path failed: {}",
+        String::from_utf8_lossy(&second.stderr)
+    );
+    let doc = Json::parse(&String::from_utf8_lossy(&second.stdout)).unwrap();
+    assert_eq!(doc.get("resumed_points").and_then(|v| v.as_usize()), Some(2));
+    let full_points = full_doc.get("points").and_then(|v| v.as_arr()).unwrap();
+    let points = doc.get("points").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(points.len(), 4);
+    for (a, b) in full_points.iter().zip(points) {
+        let f = |v: &Json| v.get("f").and_then(|x| x.as_f64()).unwrap();
+        assert!(
+            (f(a) - f(b)).abs() <= 1e-8 * f(a).abs().max(1.0),
+            "resumed objective diverged"
+        );
+    }
+    let _ = std::fs::remove_file(&ck);
+    let _ = std::fs::remove_dir_all(out_dir);
+}
+
 /// `cggm path` honors `--screen full` (no screened points in the JSON).
 #[test]
 fn cggm_path_subcommand_screen_flag() {

@@ -1,0 +1,159 @@
+//! Block-solver clustering persistence: the graph partition lives in the
+//! `SolverContext` and is rebuilt only when active-set churn crosses
+//! `SolveOptions::recluster_churn` — observable via
+//! `SolveTrace::reclusterings` / `PathPoint::reclusterings` — and the
+//! partition choice is an optimization, never a semantic change: forced
+//! re-clustering reaches 1e-6-equal objectives.
+//!
+//! Fixture: 24×24 chain under a 48KB budget, which forces k_Λ > 1 so the
+//! clustering path actually engages (an unlimited budget yields one block
+//! and no clustering at all). `tol = 1e-5` drives both runs deep enough
+//! that the 1e-6 objective comparison is meaningful.
+
+use cggm::coordinator::{fit_path_in_context, PathOptions};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{solve_in_context, SolveOptions, SolverContext, SolverKind};
+use cggm::util::membudget::MemBudget;
+
+fn bcd_opts(churn: f64) -> SolveOptions {
+    SolveOptions {
+        lam_l: 0.25,
+        lam_t: 0.25,
+        max_iter: 200,
+        tol: 1e-5,
+        budget: MemBudget::new(48 * 1024),
+        recluster_churn: churn,
+        ..Default::default()
+    }
+}
+
+fn fixture() -> datagen::Problem {
+    datagen::chain::generate(24, 24, 90, 2)
+}
+
+/// A single solve: the persistent partition is built once and reused across
+/// outer iterations; the always-rebuild ablation reclusters every iteration
+/// yet lands on a 1e-6-equal objective.
+#[test]
+fn solve_reuses_partition_across_iterations() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+
+    // Never rebuild once built (churn threshold 1.0 ≥ any Jaccard distance).
+    let cached_opts = bcd_opts(1.0);
+    let cached_ctx = SolverContext::new(&prob.data, &cached_opts, &eng);
+    let cached = solve_in_context(SolverKind::AltNewtonBcd, &cached_ctx, &cached_opts, None)
+        .unwrap();
+    assert!(cached.trace.converged);
+    assert!(
+        cached.trace.records.len() >= 3,
+        "fixture must run several iterations to exercise reuse"
+    );
+    assert!(
+        cached.trace.reclusterings >= 1,
+        "the first iteration must build the partition"
+    );
+
+    // Forced: a negative threshold rebuilds at every clustering phase.
+    let forced_opts = bcd_opts(-1.0);
+    let forced_ctx = SolverContext::new(&prob.data, &forced_opts, &eng);
+    let forced = solve_in_context(SolverKind::AltNewtonBcd, &forced_ctx, &forced_opts, None)
+        .unwrap();
+    assert!(forced.trace.converged);
+    assert!(
+        forced.trace.reclusterings >= 2,
+        "forced run must recluster repeatedly ({} iterations)",
+        forced.trace.records.len()
+    );
+    assert!(
+        cached.trace.reclusterings < forced.trace.reclusterings,
+        "persistence saved nothing: cached {} vs forced {}",
+        cached.trace.reclusterings,
+        forced.trace.reclusterings
+    );
+    // Partition choice changes CD update order only — same optimum.
+    let (fc, ff) = (
+        cached.trace.final_f().unwrap(),
+        forced.trace.final_f().unwrap(),
+    );
+    assert!(
+        (fc - ff).abs() <= 1e-6 * ff.abs().max(1.0),
+        "forced re-clustering moved the objective: cached {fc} vs forced {ff}"
+    );
+}
+
+/// Along a slowly-varying λ path on a shared context, adjacent points reuse
+/// the partition (supports change slowly): total rebuilds stay well under
+/// the always-rebuild ablation, and every point's objective matches to 1e-6.
+#[test]
+fn path_reclusters_only_on_churn() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+    // A gently-spaced explicit grid: adjacent active sets overlap strongly,
+    // which is exactly the regime the persistence targets.
+    let popts = PathOptions {
+        lambdas: Some(vec![(0.30, 0.30), (0.28, 0.28), (0.26, 0.26)]),
+        ..Default::default()
+    };
+
+    let cached_base = bcd_opts(0.25);
+    let cached_ctx = SolverContext::new(&prob.data, &cached_base, &eng);
+    let cached =
+        fit_path_in_context(SolverKind::AltNewtonBcd, &cached_ctx, &cached_base, &popts).unwrap();
+
+    let forced_base = bcd_opts(-1.0);
+    let forced_ctx = SolverContext::new(&prob.data, &forced_base, &eng);
+    let forced =
+        fit_path_in_context(SolverKind::AltNewtonBcd, &forced_ctx, &forced_base, &popts).unwrap();
+
+    assert_eq!(cached.points.len(), 3);
+    assert_eq!(forced.points.len(), 3);
+    assert!(cached.points.iter().all(|p| p.converged));
+    assert!(forced.points.iter().all(|p| p.converged));
+
+    let total = |r: &cggm::coordinator::PathResult| {
+        r.points.iter().map(|p| p.reclusterings).sum::<usize>()
+    };
+    let (tc, tf) = (total(&cached), total(&forced));
+    assert!(tc >= 1, "the path's first point must build the partition");
+    assert!(
+        tc < tf,
+        "path persistence saved nothing: cached {tc} vs forced {tf} rebuilds"
+    );
+    for (a, b) in cached.points.iter().zip(&forced.points) {
+        assert!(
+            (a.f - b.f).abs() <= 1e-6 * b.f.abs().max(1.0),
+            "objectives diverged at λ={}: cached {} vs forced {}",
+            a.lam_l,
+            a.f,
+            b.f
+        );
+    }
+}
+
+/// A warm path point at an unchanged λ converges at its first screen and
+/// never re-derives any clustering state — the degenerate end of "supports
+/// change slowly along a path".
+#[test]
+fn converged_warm_point_reclusters_nothing() {
+    let prob = fixture();
+    let eng = NativeGemm::new(1);
+    let base = bcd_opts(0.25);
+    let ctx = SolverContext::new(&prob.data, &base, &eng);
+    let popts = PathOptions {
+        lambdas: Some(vec![(0.25, 0.25), (0.25, 0.25)]),
+        ..Default::default()
+    };
+    let res = fit_path_in_context(SolverKind::AltNewtonBcd, &ctx, &base, &popts).unwrap();
+    assert_eq!(res.points.len(), 2);
+    assert!(res.points[1].converged);
+    assert_eq!(
+        res.points[1].iters, 1,
+        "warm restart at the optimum must converge at the first screen"
+    );
+    assert_eq!(
+        res.points[1].reclusterings, 0,
+        "a converged warm point must not rebuild any partition"
+    );
+}

@@ -6,6 +6,10 @@
 //! 3. **Safety** — the KKT post-check catches any coordinate the strong
 //!    rule wrongly dropped and falls back to a full solve, so screening can
 //!    never silently drop a violating coordinate.
+//!
+//! All three screen-honoring solvers (`alt_newton_cd`, `newton_cd`,
+//! `prox_grad`) are covered: restricted-vs-full equivalence is pinned at
+//! 1e-6 objective tolerance for each.
 
 use cggm::cggm::active::{kkt_violations, ScreenRule, ScreenSet};
 use cggm::coordinator::{fit_path, solve_screened, PathOptions};
@@ -34,6 +38,7 @@ fn screened_path_matches_full_with_at_least_2x_fewer_coordinates() {
         lambdas: None,
         warm_start: true,
         screen,
+        ..Default::default()
     };
     let strong = fit_path(
         SolverKind::AltNewtonCd,
@@ -173,6 +178,151 @@ fn full_universe_screen_set_is_a_no_op() {
     assert!((fa - fb).abs() <= 1e-9 * fb.abs().max(1.0));
     assert_eq!(out.res.model.lambda_nnz(), reference.model.lambda_nnz());
     assert_eq!(out.res.model.theta_nnz(), reference.model.theta_nnz());
+}
+
+/// `newton_cd` and `prox_grad` honor `SolveOptions::screen` now too: a
+/// full-universe screen set must reproduce each solver's unrestricted run
+/// exactly (same iterate path, same objective) with no KKT fallback — the
+/// restriction machinery itself adds nothing.
+#[test]
+fn newton_and_prox_full_universe_screens_are_no_ops() {
+    let prob = datagen::chain::generate(10, 10, 70, 47);
+    let eng = NativeGemm::new(1);
+    let (p, q) = (10usize, 10usize);
+    let universe = Arc::new(ScreenSet {
+        lambda: (0..q).flat_map(|i| (i..q).map(move |j| (i, j))).collect(),
+        theta: (0..p).flat_map(|i| (0..q).map(move |j| (i, j))).collect(),
+    });
+    for kind in [SolverKind::NewtonCd, SolverKind::ProxGrad] {
+        assert!(kind.supports_screen(), "{kind:?} must honor screens now");
+        let mut opts = base_opts();
+        opts.lam_l = 0.25;
+        opts.lam_t = 0.25;
+        if kind == SolverKind::ProxGrad {
+            opts.max_iter = 800;
+        }
+        let ctx = SolverContext::new(&prob.data, &opts, &eng);
+        let reference = solve_in_context(kind, &ctx, &opts, None).unwrap();
+        let out = solve_screened(kind, &ctx, &opts, None, universe.clone()).unwrap();
+        assert!(!out.fell_back, "{kind:?}: universe set cannot fall back");
+        assert_eq!(
+            out.res.trace.records.len(),
+            reference.trace.records.len(),
+            "{kind:?}: full-universe restriction changed the iterate path"
+        );
+        let (fa, fb) = (
+            out.res.trace.final_f().unwrap(),
+            reference.trace.final_f().unwrap(),
+        );
+        assert!(
+            (fa - fb).abs() <= 1e-9 * fb.abs().max(1.0),
+            "{kind:?}: {fa} vs {fb}"
+        );
+        assert_eq!(out.res.model.lambda_nnz(), reference.model.lambda_nnz());
+        assert_eq!(out.res.model.theta_nnz(), reference.model.theta_nnz());
+    }
+}
+
+/// Satellite acceptance (`newton_cd`): a strong-rule screened path matches
+/// the full-screen path point by point at 1e-6 — the strong set contains
+/// every coordinate the per-iterate active rule would pick (its threshold
+/// 2λ_k − λ_{k−1} < λ_k), so the restricted trajectory is the full one.
+#[test]
+fn newton_cd_screened_path_matches_full() {
+    let prob = datagen::chain::generate(20, 20, 100, 53);
+    let eng = NativeGemm::new(1);
+    let base = base_opts();
+    let mk = |screen| PathOptions {
+        points: 6,
+        min_ratio: 0.15,
+        screen,
+        ..Default::default()
+    };
+    let strong = fit_path(
+        SolverKind::NewtonCd,
+        &prob.data,
+        &base,
+        &mk(ScreenRule::Strong),
+        &eng,
+    )
+    .unwrap();
+    let full = fit_path(
+        SolverKind::NewtonCd,
+        &prob.data,
+        &base,
+        &mk(ScreenRule::Full),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(strong.points.len(), full.points.len());
+    for (s, f) in strong.points.iter().zip(&full.points) {
+        assert_eq!(s.lam_l, f.lam_l);
+        assert!(s.converged && f.converged);
+        assert!(
+            (s.f - f.f).abs() <= 1e-6 * f.f.abs().max(1.0),
+            "newton_cd diverged at λ={}: screened {} vs full {}",
+            s.lam_l,
+            s.f,
+            f.f
+        );
+    }
+    assert!(strong.points[1..].iter().all(|p| p.screened));
+    // The restriction must actually shrink the examined coordinate count.
+    let (cs, cf) = (strong.total_coord_updates(), full.total_coord_updates());
+    assert!(
+        cs < cf,
+        "newton_cd screening saved nothing: strong {cs} vs full {cf}"
+    );
+}
+
+/// Satellite acceptance (`prox_grad`): restricted-vs-full equivalence at
+/// 1e-6. The prox trajectory genuinely differs under restriction (frozen
+/// coordinates cannot wiggle transiently), so both runs are driven to a
+/// tight tolerance where the common optimum pins the comparison.
+#[test]
+fn prox_grad_screened_path_matches_full() {
+    let prob = datagen::chain::generate(8, 8, 60, 59);
+    let eng = NativeGemm::new(1);
+    let base = SolveOptions {
+        max_iter: 3000,
+        tol: 1e-4,
+        ..Default::default()
+    };
+    let mk = |screen| PathOptions {
+        points: 4,
+        min_ratio: 0.3,
+        screen,
+        ..Default::default()
+    };
+    let strong = fit_path(
+        SolverKind::ProxGrad,
+        &prob.data,
+        &base,
+        &mk(ScreenRule::Strong),
+        &eng,
+    )
+    .unwrap();
+    let full = fit_path(
+        SolverKind::ProxGrad,
+        &prob.data,
+        &base,
+        &mk(ScreenRule::Full),
+        &eng,
+    )
+    .unwrap();
+    assert_eq!(strong.points.len(), full.points.len());
+    for (s, f) in strong.points.iter().zip(&full.points) {
+        assert!(s.converged && f.converged, "prox must converge at tol 1e-4");
+        assert!(
+            (s.f - f.f).abs() <= 1e-6 * f.f.abs().max(1.0),
+            "prox diverged at λ={}: screened {} vs full {}",
+            s.lam_l,
+            s.f,
+            f.f
+        );
+    }
+    assert!(strong.points[1..].iter().all(|p| p.screened));
+    assert!(full.points.iter().all(|p| !p.screened));
 }
 
 /// The strong rule's bet pays off on a well-spaced decreasing grid: no KKT
