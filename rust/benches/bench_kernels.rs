@@ -1,0 +1,338 @@
+//! Kernel-level perf trajectory: packed-GEMM and colored-CD-sweep
+//! microbenches across 1/2/4 threads, written to `BENCH_KERNELS.json` so
+//! future PRs have a machine-readable baseline to regress against (see
+//! docs/PERF.md for the schema and how to read it).
+//!
+//! Flags (after `--`):
+//! - `--smoke`        small sizes / few iterations, no scaling assertions
+//!                    (CI runners may have < 4 cores);
+//! - `--max-threads N` cap the thread sweep (default 4).
+//!
+//! Acceptance (full mode on a ≥4-core machine): the colored CD sweep must
+//! reach ≥1.8× at 4 threads vs 1, and packed GEMM ≥1.5× — the ISSUE-4
+//! floors; the JSON records pass/fail either way.
+
+use cggm::bench::{write_bench_json, Bench, BenchSet, BenchStats};
+use cggm::cggm::active::{lambda_active_dense, theta_active_dense};
+use cggm::cggm::Objective;
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::gemm::GemmEngine;
+use cggm::graph::coloring::{color_classes, validate_classes, ConflictSpace};
+use cggm::linalg::dense::Mat;
+use cggm::solvers::cd_common::{
+    lambda_cd_pass, lambda_cd_pass_colored, theta_cd_pass_direct, theta_cd_pass_direct_colored,
+    ColoredScratch,
+};
+use cggm::solvers::{SolveOptions, SolverContext};
+use cggm::util::json::Json;
+use cggm::util::rng::Rng;
+use cggm::util::threadpool::Parallelism;
+
+struct Leg {
+    family: &'static str,
+    threads: usize,
+    coord_updates: usize,
+    stats: BenchStats,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let max_threads: usize = args
+        .iter()
+        .position(|a| a == "--max-threads")
+        .and_then(|k| args.get(k + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let thread_sweep: Vec<usize> = [1usize, 2, 4]
+        .into_iter()
+        .filter(|&t| t <= max_threads.max(1))
+        .collect();
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let (bench_iters, warmup) = if smoke { (3, 1) } else { (9, 2) };
+    let mut set = BenchSet::new("kernels");
+    let mut legs: Vec<Leg> = Vec::new();
+
+    // ---------------------------------------------------------- CD sweeps
+    // Medium synthetic problem (the ISSUE-4 acceptance target): a chain
+    // CGGM whose dense caches (Σ, Ψ, S_yy, S_xx, Vᵀ) feed the real
+    // lambda/theta passes — the benches time exactly the solver hot loops.
+    let (q, n) = if smoke { (64, 80) } else { (192, 140) };
+    let prob = datagen::chain::generate(q, q, n, 7);
+    let eng = NativeGemm::new(1);
+    let opts = SolveOptions::default();
+    let ctx = SolverContext::new(&prob.data, &opts, &eng);
+    let syy = ctx.syy().unwrap();
+    let sxx = ctx.sxx().unwrap();
+    let sxy = ctx.sxy().unwrap();
+    let sxx_diag: Vec<f64> = ctx.sxx_diag().to_vec();
+    let obj = Objective::new(&prob.data, 0.0, 0.0);
+    let factor = obj.factor_lambda(&prob.truth.lambda, &eng).unwrap();
+    let sigma = factor.inverse_dense(&eng);
+    let rt = prob.data.xtheta_t(&prob.truth.theta);
+    let psi = obj.psi_dense(&sigma, &rt, &eng);
+    // Gradients at the truth → realistic active sets (λ small enough to
+    // keep the sweep busy).
+    let gl = obj.grad_lambda_dense(&sigma, &psi, &eng);
+    let gt = obj.grad_theta_dense(&sigma, &rt, &eng);
+    let (lam_l, lam_t) = (0.05, 0.05);
+    let (active_l, _) = lambda_active_dense(&gl, &prob.truth.lambda, lam_l);
+    let (active_t, _) = theta_active_dense(&gt, &prob.truth.theta, lam_t);
+    println!(
+        "# cd sweep problem: q={q} n={n}, |S_L|={}, |S_T|={}",
+        active_l.len(),
+        active_t.len()
+    );
+    let classes_l = color_classes(&active_l, ConflictSpace::Symmetric(q));
+    validate_classes(&active_l, &classes_l, ConflictSpace::Symmetric(q)).unwrap();
+    let classes_t = color_classes(&active_t, ConflictSpace::Bipartite(q, q));
+    validate_classes(&active_t, &classes_t, ConflictSpace::Bipartite(q, q)).unwrap();
+    println!(
+        "# colored: {} Λ classes, {} Θ classes",
+        classes_l.len(),
+        classes_t.len()
+    );
+
+    // Serial reference sweeps.
+    {
+        let stats = Bench::new("cd_lambda/serial")
+            .warmup(warmup)
+            .iters(bench_iters)
+            .run(|| {
+                let mut delta = cggm::linalg::sparse::SpRowMat::zeros(q, q);
+                let mut w = Mat::zeros(q, q);
+                lambda_cd_pass(
+                    &active_l,
+                    syy,
+                    &sigma,
+                    &psi,
+                    &prob.truth.lambda,
+                    &mut delta,
+                    &mut w,
+                    lam_l,
+                    None,
+                )
+            });
+        legs.push(Leg {
+            family: "cd_lambda_serial",
+            threads: 1,
+            coord_updates: active_l.len(),
+            stats: stats.clone(),
+        });
+        set.push(stats);
+        let stats = Bench::new("cd_theta/serial")
+            .warmup(warmup)
+            .iters(bench_iters)
+            .run(|| {
+                let mut theta = prob.truth.theta.clone();
+                let mut vt = Mat::zeros(q, q);
+                theta_cd_pass_direct(
+                    &active_t,
+                    sxx,
+                    &sxx_diag,
+                    sxy,
+                    &sigma,
+                    &mut theta,
+                    &mut vt,
+                    lam_t,
+                )
+            });
+        legs.push(Leg {
+            family: "cd_theta_serial",
+            threads: 1,
+            coord_updates: active_t.len(),
+            stats: stats.clone(),
+        });
+        set.push(stats);
+    }
+
+    // Colored sweeps across the thread sweep.
+    for &t in &thread_sweep {
+        let par = Parallelism::new(t);
+        let mut scratch = ColoredScratch::default();
+        let stats = Bench::new(format!("cd_lambda/colored/t{t}"))
+            .warmup(warmup)
+            .iters(bench_iters)
+            .run(|| {
+                let mut delta = cggm::linalg::sparse::SpRowMat::zeros(q, q);
+                let mut w = Mat::zeros(q, q);
+                lambda_cd_pass_colored(
+                    &classes_l,
+                    syy,
+                    &sigma,
+                    &psi,
+                    &prob.truth.lambda,
+                    &mut delta,
+                    &mut w,
+                    lam_l,
+                    None,
+                    &par,
+                    &mut scratch,
+                )
+            });
+        legs.push(Leg {
+            family: "cd_lambda_colored",
+            threads: t,
+            coord_updates: active_l.len(),
+            stats: stats.clone(),
+        });
+        set.push(stats);
+        let mut scratch = ColoredScratch::default();
+        let stats = Bench::new(format!("cd_theta/colored/t{t}"))
+            .warmup(warmup)
+            .iters(bench_iters)
+            .run(|| {
+                let mut theta = prob.truth.theta.clone();
+                let mut vt = Mat::zeros(q, q);
+                theta_cd_pass_direct_colored(
+                    &classes_t,
+                    sxx,
+                    &sxx_diag,
+                    sxy,
+                    &sigma,
+                    &mut theta,
+                    &mut vt,
+                    lam_t,
+                    &par,
+                    &mut scratch,
+                )
+            });
+        legs.push(Leg {
+            family: "cd_theta_colored",
+            threads: t,
+            coord_updates: active_t.len(),
+            stats: stats.clone(),
+        });
+        set.push(stats);
+    }
+
+    // --------------------------------------------------------------- GEMM
+    let size = if smoke { 192 } else { 384 };
+    let mut rng = Rng::new(1);
+    let a = Mat::from_fn(size, size, |_, _| rng.normal());
+    let b = Mat::from_fn(size, size, |_, _| rng.normal());
+    let flops = 2.0 * (size as f64).powi(3);
+    for &t in &thread_sweep {
+        let native = NativeGemm::new(t);
+        for (tag, family) in [("gemm", "gemm_nn"), ("gemm_tn", "gemm_tn"), ("gemm_nt", "gemm_nt")]
+        {
+            let mut c = Mat::zeros(size, size);
+            let stats = Bench::new(format!("{tag}/{size}/t{t}"))
+                .warmup(warmup)
+                .iters(bench_iters)
+                .work(flops)
+                .run(|| match tag {
+                    "gemm" => native.gemm(1.0, &a, &b, 0.0, &mut c),
+                    "gemm_tn" => native.gemm_tn(1.0, &a, &b, 0.0, &mut c),
+                    _ => native.gemm_nt(1.0, &a, &b, 0.0, &mut c),
+                });
+            legs.push(Leg {
+                family,
+                threads: t,
+                coord_updates: 0,
+                stats: stats.clone(),
+            });
+            set.push(stats);
+        }
+    }
+
+    // ------------------------------------------------- scaling + trajectory
+    let median_of = |family: &str, t: usize| -> Option<f64> {
+        legs.iter()
+            .find(|l| l.family == family && l.threads == t)
+            .map(|l| l.stats.median)
+    };
+    let top = *thread_sweep.last().unwrap_or(&1);
+    let mut scaling = Vec::new();
+    let mut failures = Vec::new();
+    for (family, floor) in [
+        ("cd_lambda_colored", 1.8),
+        ("cd_theta_colored", 1.8),
+        ("gemm_nn", 1.5),
+        ("gemm_tn", 1.5),
+        ("gemm_nt", 1.5),
+    ] {
+        let (t1, ttop) = match (median_of(family, 1), median_of(family, top)) {
+            (Some(a), Some(b)) => (a, b),
+            _ => continue,
+        };
+        let speedup = t1 / ttop;
+        // Floors only bind for the full bench at 4 threads with the cores
+        // to back it — otherwise the numbers are recorded but advisory.
+        let enforced = !smoke && top >= 4 && cpus >= 4;
+        let pass = speedup >= floor;
+        println!(
+            "# scaling {family}: t1 {:.3}ms → t{top} {:.3}ms = {speedup:.2}x \
+             (floor {floor}x{})",
+            t1 * 1e3,
+            ttop * 1e3,
+            if enforced {
+                if pass {
+                    ", pass"
+                } else {
+                    ", FAIL"
+                }
+            } else {
+                ", advisory"
+            }
+        );
+        if enforced && !pass {
+            failures.push(format!("{family}: {speedup:.2}x < {floor}x"));
+        }
+        scaling.push(Json::obj(vec![
+            ("family", Json::str(family)),
+            ("threads", Json::num(top as f64)),
+            ("speedup", Json::num(speedup)),
+            ("floor", Json::num(floor)),
+            ("enforced", Json::Bool(enforced)),
+            ("pass", Json::Bool(pass)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cggm-bench-kernels/v1")),
+        ("smoke", Json::Bool(smoke)),
+        ("cpus", Json::num(cpus as f64)),
+        (
+            "threads",
+            Json::arr(thread_sweep.iter().map(|&t| Json::num(t as f64))),
+        ),
+        (
+            "problem",
+            Json::obj(vec![
+                ("q", Json::num(q as f64)),
+                ("n", Json::num(n as f64)),
+                ("gemm_size", Json::num(size as f64)),
+                ("active_lambda", Json::num(active_l.len() as f64)),
+                ("active_theta", Json::num(active_t.len() as f64)),
+                ("lambda_classes", Json::num(classes_l.len() as f64)),
+                ("theta_classes", Json::num(classes_t.len() as f64)),
+            ]),
+        ),
+        (
+            "legs",
+            Json::arr(legs.iter().map(|l| {
+                let mut o = match l.stats.to_json() {
+                    Json::Obj(o) => o,
+                    _ => unreachable!("to_json returns an object"),
+                };
+                o.insert("family".into(), Json::str(l.family));
+                o.insert("threads".into(), Json::num(l.threads as f64));
+                o.insert(
+                    "coord_updates".into(),
+                    Json::num(l.coord_updates as f64),
+                );
+                Json::Obj(o)
+            })),
+        ),
+        ("scaling", Json::arr(scaling)),
+    ]);
+    write_bench_json("KERNELS", &doc);
+    set.finish();
+    if !failures.is_empty() {
+        panic!("kernel scaling floors not met: {failures:?}");
+    }
+}

@@ -6,8 +6,12 @@
 //! context-persistent partition cache, (d) checkpoint write overhead and the
 //! points a resumed sweep skips, and (e) wall-clock for a full sweep, all on
 //! a shared `SolverContext` (covariance statistics computed once per path).
+//!
+//! Besides the human-readable report it writes `BENCH_PATH.json` — the
+//! machine-readable trajectory future PRs regress against (docs/PERF.md).
 
-use cggm::bench::{Bench, BenchSet};
+use cggm::bench::{write_bench_json, Bench, BenchSet};
+use cggm::util::json::Json;
 use cggm::cggm::active::ScreenRule;
 use cggm::coordinator::{fit_path, fit_path_in_context, PathOptions};
 use cggm::datagen;
@@ -221,5 +225,63 @@ fn main() {
             );
         }
     }
+
+    // Machine-readable trajectory: the headline path comparisons plus every
+    // timed row, so future PRs can diff wall-clock and work counters.
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cggm-bench-path/v1")),
+        (
+            "problem",
+            Json::obj(vec![
+                ("workload", Json::str("chain")),
+                ("p", Json::num(150.0)),
+                ("q", Json::num(150.0)),
+                ("n", Json::num(100.0)),
+                ("points", Json::num(warm.points.len() as f64)),
+            ]),
+        ),
+        (
+            "warm_vs_cold",
+            Json::obj(vec![
+                ("warm_iters", Json::num(warm.total_iters() as f64)),
+                ("cold_iters", Json::num(cold.total_iters() as f64)),
+                ("warm_seconds", Json::num(warm.total_seconds)),
+                ("cold_seconds", Json::num(cold.total_seconds)),
+            ]),
+        ),
+        (
+            "screening",
+            Json::obj(vec![
+                ("strong_coord_updates", Json::num(cs as f64)),
+                ("strong_kkt_scans", Json::num(screened.total_kkt_scans() as f64)),
+                ("full_coord_updates", Json::num(cu as f64)),
+                ("fallbacks", Json::num(screened.screen_fallbacks as f64)),
+                ("abs_delta_f", Json::num((fs - fu).abs())),
+            ]),
+        ),
+        (
+            "clustering_persistence",
+            Json::obj(vec![
+                ("cached_rebuilds", Json::num(rc as f64)),
+                ("forced_rebuilds", Json::num(rf as f64)),
+                ("cached_seconds", Json::num(cached.total_seconds)),
+                ("forced_seconds", Json::num(forced.total_seconds)),
+            ]),
+        ),
+        (
+            "checkpoint",
+            Json::obj(vec![
+                ("full_seconds", Json::num(ckpointed.total_seconds)),
+                ("resume_seconds", Json::num(resumed.total_seconds)),
+                ("resumed_points", Json::num(resumed.resumed_points as f64)),
+                (
+                    "refitted_points",
+                    Json::num((resumed.points.len() - resumed.resumed_points) as f64),
+                ),
+            ]),
+        ),
+        ("legs", Json::arr(set.rows.iter().map(|r| r.to_json()))),
+    ]);
+    write_bench_json("PATH", &doc);
     set.finish();
 }

@@ -4,6 +4,7 @@
 //! warmup runs, timed iterations, robust statistics (median + MAD), and
 //! criterion-style one-line reports plus CSV rows for EXPERIMENTS.md.
 
+use crate::util::json::Json;
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -51,6 +52,39 @@ impl BenchStats {
             "{},{},{:.9},{:.9},{:.9},{:.9},{:.9}\n",
             self.name, self.iters, self.median, self.mean, self.min, self.max, self.mad
         )
+    }
+
+    /// Machine-readable row for the `BENCH_*.json` trajectory files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("median_s", Json::num(self.median)),
+            ("mean_s", Json::num(self.mean)),
+            ("min_s", Json::num(self.min)),
+            ("max_s", Json::num(self.max)),
+            ("mad_s", Json::num(self.mad)),
+            ("rate", self.rate().map(Json::num).unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+/// Where a bench writes its machine-readable trajectory (`BENCH_<TAG>.json`).
+/// Benches run with `rust/` as the working directory; `CGGM_BENCH_DIR`
+/// overrides the destination (CI points it at the artifact staging dir).
+pub fn bench_json_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::var("CGGM_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&dir).join(format!("BENCH_{tag}.json"))
+}
+
+/// Write a bench trajectory document, reporting the destination. These
+/// files are the committed perf baseline future PRs regress against — see
+/// docs/PERF.md for the schema.
+pub fn write_bench_json(tag: &str, doc: &Json) {
+    let path = bench_json_path(tag);
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
     }
 }
 
@@ -183,6 +217,17 @@ mod tests {
         assert!(stats.rate().unwrap() > 0.0);
         assert!(stats.report_line().contains("noop"));
         assert!(stats.csv_row().starts_with("noop,5,"));
+        let j = stats.to_json();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("noop"));
+        assert!(j.get("median_s").and_then(|v| v.as_f64()).is_some());
+        assert!(j.get("rate").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bench_json_path_honors_env_dir() {
+        // (Reads the var only; other tests run in parallel so we don't set it.)
+        let p = bench_json_path("SELFTEST");
+        assert!(p.to_string_lossy().ends_with("BENCH_SELFTEST.json"));
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct RunConfig {
     pub max_iter: usize,
     pub tol: f64,
     pub threads: usize,
+    /// Threads for the colored coordinate-descent sweeps (`--cd-threads`;
+    /// 1 = the serial reference sweeps). Independent of `threads`, which
+    /// drives column/GEMM/fold parallelism.
+    pub cd_threads: usize,
     pub engine: String,
     pub tile: usize,
     pub mem_budget: Option<usize>,
@@ -43,6 +47,10 @@ pub struct RunConfig {
     pub cv_folds: usize,
     /// Worker threads across CV folds (`cggm cv`).
     pub cv_threads: usize,
+    /// One-standard-error rule for CV selection (`--one-se`): pick the
+    /// sparsest λ whose mean held-out NLL is within one standard error of
+    /// the best.
+    pub cv_one_se: bool,
     /// λ-path checkpoint file (`cggm path --checkpoint`; `--resume FILE`
     /// additionally warm-restarts from it).
     pub checkpoint: Option<String>,
@@ -65,6 +73,7 @@ impl Default for RunConfig {
             max_iter: 100,
             tol: 0.01,
             threads: 1,
+            cd_threads: 1,
             engine: "native".into(),
             tile: 256,
             mem_budget: None,
@@ -77,6 +86,7 @@ impl Default for RunConfig {
             screen_rule: ScreenRule::Strong,
             cv_folds: 5,
             cv_threads: 1,
+            cv_one_se: false,
             checkpoint: None,
             recluster_churn: 0.2,
         }
@@ -138,6 +148,9 @@ impl RunConfig {
             "max_iter" => self.max_iter = val.as_usize().ok_or_else(|| bad("expected int"))?,
             "tol" => self.tol = val.as_f64().ok_or_else(|| bad("expected number"))?,
             "threads" => self.threads = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "cd_threads" => {
+                self.cd_threads = val.as_usize().ok_or_else(|| bad("expected int"))?
+            }
             "engine" => {
                 self.engine = val.as_str().ok_or_else(|| bad("expected string"))?.into()
             }
@@ -171,6 +184,9 @@ impl RunConfig {
             "cv_folds" => self.cv_folds = val.as_usize().ok_or_else(|| bad("expected int"))?,
             "cv_threads" => {
                 self.cv_threads = val.as_usize().ok_or_else(|| bad("expected int"))?
+            }
+            "cv_one_se" => {
+                self.cv_one_se = val.as_bool().ok_or_else(|| bad("expected bool"))?
             }
             "checkpoint" => {
                 self.checkpoint =
@@ -206,6 +222,7 @@ impl RunConfig {
         self.max_iter = args.get_usize("max-iter", self.max_iter);
         self.tol = args.get_f64("tol", self.tol);
         self.threads = args.get_usize("threads", self.threads);
+        self.cd_threads = args.get_usize("cd-threads", self.cd_threads);
         self.engine = args.get_str("engine", &self.engine);
         self.tile = args.get_usize("tile", self.tile);
         if let Some(b) = args.opt("mem-budget") {
@@ -227,6 +244,9 @@ impl RunConfig {
         }
         self.cv_folds = args.get_usize("folds", self.cv_folds);
         self.cv_threads = args.get_usize("cv-threads", self.cv_threads);
+        if args.flag("one-se") {
+            self.cv_one_se = true;
+        }
         if let Some(ck) = args.opt("checkpoint") {
             self.checkpoint = Some(ck.to_string());
         }
@@ -255,6 +275,7 @@ impl RunConfig {
             seed: self.seed,
             fold_threads: self.cv_threads,
             refit: true,
+            one_se: self.cv_one_se,
         }
     }
 
@@ -266,6 +287,7 @@ impl RunConfig {
             max_iter: self.max_iter,
             tol: self.tol,
             threads: self.threads,
+            cd_threads: self.cd_threads,
             chol: if self.solver == SolverKind::AltNewtonBcd {
                 CholKind::Auto
             } else {
@@ -399,6 +421,27 @@ mod tests {
         );
         assert!(!popts.resume, "resume is a CLI-level decision");
         assert_eq!(cfg.solve_options().recluster_churn, -1.0);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn cd_threads_and_one_se_keys_layer_like_the_rest() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_cdthreads.json");
+        std::fs::write(&tmp, r#"{"cd_threads": 4, "cv_one_se": true}"#).unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.cd_threads, 4);
+        assert!(cfg.cv_one_se);
+        assert_eq!(cfg.solve_options().cd_threads, 4);
+        assert!(cfg.cv_options().one_se);
+        let args = Args::parse(&["--cd-threads".into(), "2".into()], &["one-se"]);
+        cfg.apply_args(&args);
+        assert_eq!(cfg.cd_threads, 2);
+        assert!(cfg.cv_one_se, "flags only set, never unset");
+        // Defaults: serial CD, argmin selection.
+        let d = RunConfig::default();
+        assert_eq!(d.cd_threads, 1);
+        assert!(!d.solve_options().colored_cd());
+        assert!(!d.cv_options().one_se);
         let _ = std::fs::remove_file(tmp);
     }
 

@@ -50,6 +50,12 @@ pub struct CvOptions {
     /// Refit on the full dataset at the winning λ (warm-started down the
     /// truncated grid). `false` skips the refit (grid scoring only).
     pub refit: bool,
+    /// One-standard-error rule: select the sparsest λ (largest, i.e.
+    /// earliest on the decreasing grid) whose mean held-out NLL is within
+    /// one standard error of the best mean — the classic bias toward
+    /// parsimony when the NLL curve is flat near its minimum. `false`
+    /// selects the argmin.
+    pub one_se: bool,
 }
 
 impl Default for CvOptions {
@@ -59,6 +65,7 @@ impl Default for CvOptions {
             seed: 0x5eed,
             fold_threads: 1,
             refit: true,
+            one_se: false,
         }
     }
 }
@@ -82,8 +89,13 @@ pub struct CvResult {
     pub solver: SolverKind,
     pub folds: usize,
     pub points: Vec<CvPoint>,
-    /// Index into `points` of the winning λ (lowest mean held-out NLL).
+    /// Index into `points` of the argmin λ (lowest mean held-out NLL).
     pub best: usize,
+    /// Index into `points` of the *selected* λ: equals `best` under argmin
+    /// selection; under [`CvOptions::one_se`] the sparsest λ within one
+    /// standard error of the best mean (`selected ≤ best` on the decreasing
+    /// grid). The refit and `best_lambda` follow this index.
+    pub selected: usize,
     pub best_lambda: (f64, f64),
     /// Full-data refit path down to the winning λ (`None` when
     /// `CvOptions::refit` is off or every fold failed to score).
@@ -104,6 +116,7 @@ impl CvResult {
             ("solver", Json::str(self.solver.name())),
             ("folds", Json::num(self.folds as f64)),
             ("best", Json::num(self.best as f64)),
+            ("selected", Json::num(self.selected as f64)),
             ("best_lambda_l", Json::num(self.best_lambda.0)),
             ("best_lambda_t", Json::num(self.best_lambda.1)),
             (
@@ -137,15 +150,16 @@ impl CvResult {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("lambda_l,lambda_t,mean_nll,se_nll,best\n");
+        let mut s = String::from("lambda_l,lambda_t,mean_nll,se_nll,best,selected\n");
         for (k, p) in self.points.iter().enumerate() {
             s.push_str(&format!(
-                "{},{},{},{},{}\n",
+                "{},{},{},{},{},{}\n",
                 p.lam_l,
                 p.lam_t,
                 p.mean_nll,
                 p.se_nll,
-                k == self.best
+                k == self.best,
+                k == self.selected
             ));
         }
         s
@@ -280,14 +294,19 @@ pub fn cross_validate(
         .min_by(|a, b| a.1.mean_nll.total_cmp(&b.1.mean_nll))
         .map(|(j, _)| j)
         .unwrap_or(0);
-    let best_lambda = (points[best].lam_l, points[best].lam_t);
+    let selected = if cv.one_se {
+        one_se_index(&points, best)
+    } else {
+        best
+    };
+    let best_lambda = (points[selected].lam_l, points[selected].lam_t);
 
     // Full-data refit: warm-started (and screened) path down the truncated
     // grid, so the winner benefits from the same path machinery the folds
     // used.
-    let refit = if cv.refit && points[best].mean_nll.is_finite() {
+    let refit = if cv.refit && points[selected].mean_nll.is_finite() {
         let refit_popts = PathOptions {
-            lambdas: Some(grid[..=best].to_vec()),
+            lambdas: Some(grid[..=selected].to_vec()),
             checkpoint: None,
             resume: false,
             ..popts.clone()
@@ -302,11 +321,30 @@ pub fn cross_validate(
         folds: k,
         points,
         best,
+        selected,
         best_lambda,
         refit,
         screen_fallbacks,
         total_seconds: sw.seconds(),
     })
+}
+
+/// One-standard-error selection: the earliest grid index (largest λ — the
+/// grid decreases, so earlier is sparser) whose mean held-out NLL is within
+/// one standard error of the best mean. Falls back to `best` when no
+/// earlier point qualifies (including the degenerate zero-SE case).
+fn one_se_index(points: &[CvPoint], best: usize) -> usize {
+    if !points[best].mean_nll.is_finite() {
+        return best;
+    }
+    let threshold = points[best].mean_nll + points[best].se_nll;
+    points
+        .iter()
+        .enumerate()
+        .take(best + 1)
+        .find(|(_, p)| p.mean_nll.is_finite() && p.mean_nll <= threshold)
+        .map(|(j, _)| j)
+        .unwrap_or(best)
 }
 
 #[cfg(test)]
@@ -401,6 +439,93 @@ mod tests {
         let j = res.to_json().to_string();
         assert!(j.contains("best_lambda_l"));
         assert_eq!(res.to_csv().lines().count(), 1 + 4);
+    }
+
+    fn mk_point(lam: f64, mean: f64, se: f64) -> CvPoint {
+        CvPoint {
+            lam_l: lam,
+            lam_t: lam,
+            fold_nll: vec![],
+            mean_nll: mean,
+            se_nll: se,
+        }
+    }
+
+    #[test]
+    fn one_se_index_picks_sparsest_within_band() {
+        // Decreasing-λ grid; best is index 3 (mean 1.0, se 0.3); indices 1
+        // and 2 are within 1.3, index 0 is not → pick 1 (sparsest in band).
+        let pts = vec![
+            mk_point(1.0, 2.0, 0.1),
+            mk_point(0.7, 1.25, 0.1),
+            mk_point(0.5, 1.1, 0.1),
+            mk_point(0.3, 1.0, 0.3),
+            mk_point(0.1, 1.4, 0.1),
+        ];
+        assert_eq!(one_se_index(&pts, 3), 1);
+        // Zero SE: nothing earlier is ≤ the best mean → stays at best.
+        let pts0 = vec![
+            mk_point(1.0, 2.0, 0.0),
+            mk_point(0.5, 1.0, 0.0),
+        ];
+        assert_eq!(one_se_index(&pts0, 1), 1);
+        // Unscored (infinite) earlier points are skipped.
+        let ptsinf = vec![
+            mk_point(1.0, f64::INFINITY, 0.0),
+            mk_point(0.5, 1.05, 0.1),
+            mk_point(0.3, 1.0, 0.1),
+        ];
+        assert_eq!(one_se_index(&ptsinf, 2), 1);
+    }
+
+    #[test]
+    fn one_se_selection_is_sparser_and_within_band() {
+        let prob = datagen::chain::generate(10, 10, 90, 33);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions {
+            max_iter: 60,
+            ..Default::default()
+        };
+        let popts = PathOptions {
+            points: 5,
+            min_ratio: 0.05,
+            ..Default::default()
+        };
+        let argmin = CvOptions {
+            folds: 3,
+            ..Default::default()
+        };
+        let onese = CvOptions {
+            one_se: true,
+            ..argmin.clone()
+        };
+        let a = cross_validate(SolverKind::AltNewtonCd, &prob.data, &base, &popts, &argmin, &eng)
+            .unwrap();
+        let b = cross_validate(SolverKind::AltNewtonCd, &prob.data, &base, &popts, &onese, &eng)
+            .unwrap();
+        // Same fold scores (selection is post-processing), same argmin.
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.selected, a.best, "argmin mode selects the argmin");
+        assert!(b.selected <= b.best, "one-SE never picks a denser λ");
+        let thr = b.points[b.best].mean_nll + b.points[b.best].se_nll;
+        assert!(b.points[b.selected].mean_nll <= thr + 1e-12);
+        assert_eq!(
+            b.best_lambda,
+            (b.points[b.selected].lam_l, b.points[b.selected].lam_t)
+        );
+        // Refit stops at the selected (sparser) point.
+        assert_eq!(b.refit.as_ref().unwrap().points.len(), b.selected + 1);
+        // And the selected model is at least as sparse as the argmin one.
+        if b.selected < b.best {
+            let ma = a.model().unwrap();
+            let mb = b.model().unwrap();
+            assert!(
+                mb.lambda_nnz() + mb.theta_nnz() <= ma.lambda_nnz() + ma.theta_nnz(),
+                "one-SE model should not be denser"
+            );
+        }
+        let j = b.to_json().to_string();
+        assert!(j.contains("\"selected\""));
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! updates all reduce to GEMM / Gram products).
 //!
 //! Two engines implement [`GemmEngine`]:
-//! - [`native::NativeGemm`] — blocked, axpy-vectorized, thread-parallel Rust;
+//! - [`native::NativeGemm`] — packed-panel (BLIS-style) thread-parallel
+//!   Rust with a register-blocked 4×8 micro-kernel;
 //! - [`crate::runtime::XlaGemm`] — tiled execution through AOT-compiled
 //!   JAX/Pallas HLO artifacts on the PJRT CPU client (L1/L2 of the stack).
 //!

@@ -1,28 +1,275 @@
-//! Native blocked GEMM kernels.
+//! Native GEMM kernels: BLIS-style packed panels + a register-blocked
+//! micro-kernel.
 //!
-//! Row-major, cache-blocked, with the inner loop expressed as contiguous
-//! row-axpys so LLVM autovectorizes it under `-C target-cpu=native`. Serves
-//! as (a) the fallback engine when PJRT artifacts are absent, (b) the
-//! baseline for the engine-ablation bench, and (c) the building block of the
-//! blocked dense Cholesky.
+//! Row-major f64 throughout. Large products run through one packed driver:
+//! A is packed into MR-row tiles of an MC×KC panel, B into NR-column tiles
+//! of a KC×NC panel, and a 4×8 micro-kernel with f64 register accumulators
+//! walks the panels — the packing makes every micro-kernel read contiguous
+//! and lets LLVM keep the 32 accumulators in vector registers under
+//! `-C target-cpu=native`. The transposed layouts (`gemm_tn`, `gemm_nt`)
+//! differ **only in their pack routines**, so all three contractions share
+//! the same hot loop (and the blocked dense Cholesky, `Ψ = RᵀR/n`, and the
+//! screen panels all speed up together).
+//!
+//! Small products (`m·n·k ≤ SMALL`) keep simple serial kernels — packing
+//! overhead dominates below the cache-blocking regime.
+//!
+//! Parallelism: MC-row bands of C are data-parallel
+//! ([`Parallelism::parallel_chunks_mut`]); every C element accumulates its
+//! k-terms in the same order regardless of the band split, so results are
+//! bitwise-identical across thread counts. Pack buffers are bounded
+//! (MC·KC + NC·KC doubles per in-flight band worker, ≈1.1 MiB) and
+//! recycled through a small internal pool — engine-internal scratch,
+//! deliberately outside the solvers' [`crate::util::membudget::MemBudget`]
+//! accounting (like the dataset itself, it is not solver working set; the
+//! bound is documented in docs/PERF.md).
+//!
+//! Serves as (a) the fallback engine when PJRT artifacts are absent,
+//! (b) the baseline for the engine-ablation bench, and (c) the building
+//! block of the blocked dense Cholesky.
 
 use super::GemmEngine;
-use crate::linalg::dense::{axpy, Mat};
+use crate::linalg::dense::{axpy, dot, Mat};
 use crate::util::threadpool::Parallelism;
+use std::sync::Mutex;
 
-/// Cache-block sizes: MC×KC panel of A, KC×NC panel of B.
+/// Micro-kernel tile: MR×NR C block with register accumulators.
+const MR: usize = 4;
+const NR: usize = 8;
+/// Cache-block sizes: MC×KC packed panel of A (L2-resident), KC×NC packed
+/// panel of B (streamed through L1 in NR-column tiles). MC is a multiple of
+/// MR and NC of NR so tiles never straddle a panel edge.
 const MC: usize = 64;
 const KC: usize = 256;
+const NC: usize = 512;
+/// Below this flop-volume (`m·n·k`), packing costs more than it saves.
+const SMALL: usize = 1 << 14;
+/// Pack-pool retention cap in f64 elements (~4 MiB): enough for two full
+/// A+B panel sets in flight, a hard bound on idle engine-internal scratch.
+const POOL_MAX_ELEMS: usize = 4 * (MC * KC + NC * KC);
 
 /// Native engine with a configurable thread count (paper §Parallelization).
 pub struct NativeGemm {
     par: Parallelism,
+    /// Recycled pack buffers (byte-bounded; see module docs).
+    pool: Mutex<Vec<Vec<f64>>>,
 }
 
 impl NativeGemm {
     pub fn new(threads: usize) -> Self {
         NativeGemm {
             par: Parallelism::new(threads),
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Worst-case engine-internal scratch in bytes for `threads` workers:
+    /// one A + one B pack panel per in-flight band worker, plus the pool's
+    /// idle retention cap. This scratch is outside [`crate::util::membudget`]
+    /// accounting (the `GemmEngine` trait carries no budget handle and the
+    /// workspace arena is single-owner); callers that need an airtight
+    /// memory plan can register this bound against their budget up front.
+    pub fn scratch_bytes_bound(threads: usize) -> usize {
+        let f = std::mem::size_of::<f64>();
+        threads.max(1) * (MC * KC + NC * KC) * f + POOL_MAX_ELEMS * f
+    }
+
+    /// Best-fit checkout. Recycled contents are NOT zeroed: every slot the
+    /// micro-kernel reads is overwritten by the pack routines (edge padding
+    /// included), so the memset would be pure wasted bandwidth.
+    fn take_buf(&self, len: usize) -> Vec<f64> {
+        let mut pool = self.pool.lock().expect("pack pool lock");
+        let mut best: Option<(usize, usize)> = None;
+        for (k, b) in pool.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best.map_or(true, |(_, bc)| cap < bc) {
+                best = Some((k, cap));
+            }
+        }
+        if let Some((k, _)) = best {
+            let mut b = pool.swap_remove(k);
+            if b.len() < len {
+                b.resize(len, 0.0);
+            } else {
+                b.truncate(len);
+            }
+            return b;
+        }
+        drop(pool);
+        vec![0.0; len]
+    }
+
+    fn put_buf(&self, b: Vec<f64>) {
+        let mut pool = self.pool.lock().expect("pack pool lock");
+        let pooled: usize = pool.iter().map(|p| p.capacity()).sum();
+        if pooled + b.capacity() <= POOL_MAX_ELEMS {
+            pool.push(b);
+        }
+    }
+
+    /// The shared packed driver. `kind` selects the pack routines (i.e. the
+    /// logical transposition); everything downstream of packing is
+    /// layout-agnostic. C has already been beta-scaled by the caller.
+    #[allow(clippy::too_many_arguments)]
+    fn packed(
+        &self,
+        kind: PackKind,
+        alpha: f64,
+        a: &Mat,
+        b: &Mat,
+        c: &mut Mat,
+        n: usize,
+        kdim: usize,
+    ) {
+        if alpha == 0.0 || kdim == 0 {
+            return;
+        }
+        // MC-row bands of C are disjoint; each band worker packs its own A
+        // panel (band-local) and B panel (shared values, re-packed per band
+        // — an O(k·n) cost against the band's O(MC·n·k) compute, ≈1/MC).
+        self.par.parallel_chunks_mut(c.data_mut(), MC * n, |band, cband| {
+            let i0 = band * MC;
+            let ib = cband.len() / n;
+            let mut apack = self.take_buf(MC * KC);
+            let mut bpack = self.take_buf(NC * KC);
+            for p0 in (0..kdim).step_by(KC) {
+                let kb = KC.min(kdim - p0);
+                match kind {
+                    PackKind::Tn => pack_a_tn(a, i0, ib, p0, kb, &mut apack),
+                    _ => pack_a_nn(a, i0, ib, p0, kb, &mut apack),
+                }
+                for j0 in (0..n).step_by(NC) {
+                    let jb = NC.min(n - j0);
+                    match kind {
+                        PackKind::Nt => pack_b_nt(b, p0, kb, j0, jb, &mut bpack),
+                        _ => pack_b_nn(b, p0, kb, j0, jb, &mut bpack),
+                    }
+                    let mtiles = ib.div_ceil(MR);
+                    let ntiles = jb.div_ceil(NR);
+                    for t in 0..mtiles {
+                        let atile = &apack[t * kb * MR..(t + 1) * kb * MR];
+                        let iw = MR.min(ib - t * MR);
+                        for u in 0..ntiles {
+                            let btile = &bpack[u * kb * NR..(u + 1) * kb * NR];
+                            let jw = NR.min(jb - u * NR);
+                            let acc = micro_4x8(kb, atile, btile);
+                            for (ir, acc_row) in acc.iter().enumerate().take(iw) {
+                                let crow =
+                                    &mut cband[(t * MR + ir) * n + j0 + u * NR..][..jw];
+                                for (jr, cv) in crow.iter_mut().enumerate() {
+                                    *cv += alpha * acc_row[jr];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            self.put_buf(apack);
+            self.put_buf(bpack);
+        });
+    }
+}
+
+/// Which logical transposition the pack routines realize.
+#[derive(Clone, Copy)]
+enum PackKind {
+    /// C = A·B.
+    Nn,
+    /// C = Aᵀ·B (A stored k×m).
+    Tn,
+    /// C = A·Bᵀ (B stored n×k).
+    Nt,
+}
+
+/// The register-blocked inner kernel: an MR×NR block of AᵖBᵖ over `kb`
+/// packed depth steps. Accumulates in locals so the `k` loop is a pure
+/// FMA sweep; padding (zeros packed beyond the edge) keeps it branch-free.
+#[inline(always)]
+fn micro_4x8(kb: usize, a: &[f64], b: &[f64]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for k in 0..kb {
+        let ak = &a[k * MR..k * MR + MR];
+        let bk = &b[k * NR..k * NR + NR];
+        for ir in 0..MR {
+            let av = ak[ir];
+            for (jr, acc_v) in acc[ir].iter_mut().enumerate() {
+                *acc_v += av * bk[jr];
+            }
+        }
+    }
+    acc
+}
+
+/// Pack rows `i0..i0+ib`, depth `p0..p0+kb` of row-major A into MR-row,
+/// k-major tiles (zero-padded past `ib`).
+fn pack_a_nn(a: &Mat, i0: usize, ib: usize, p0: usize, kb: usize, buf: &mut [f64]) {
+    for t in 0..ib.div_ceil(MR) {
+        let base = t * kb * MR;
+        for ir in 0..MR {
+            let i = i0 + t * MR + ir;
+            if i < i0 + ib {
+                let arow = &a.row(i)[p0..p0 + kb];
+                for (k, &v) in arow.iter().enumerate() {
+                    buf[base + k * MR + ir] = v;
+                }
+            } else {
+                for k in 0..kb {
+                    buf[base + k * MR + ir] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Same tile layout for the transposed A of `gemm_tn` (stored k×m): the
+/// pack absorbs the transpose — reads are contiguous MR-chunks of A's rows.
+fn pack_a_tn(a: &Mat, i0: usize, ib: usize, p0: usize, kb: usize, buf: &mut [f64]) {
+    for t in 0..ib.div_ceil(MR) {
+        let base = t * kb * MR;
+        let iw = MR.min(ib - t * MR);
+        for k in 0..kb {
+            let arow = a.row(p0 + k);
+            let dst = &mut buf[base + k * MR..base + (k + 1) * MR];
+            for (ir, d) in dst.iter_mut().enumerate() {
+                *d = if ir < iw { arow[i0 + t * MR + ir] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack depth `p0..p0+kb`, columns `j0..j0+jb` of row-major B into NR-col,
+/// k-major tiles (zero-padded past `jb`).
+fn pack_b_nn(b: &Mat, p0: usize, kb: usize, j0: usize, jb: usize, buf: &mut [f64]) {
+    for u in 0..jb.div_ceil(NR) {
+        let base = u * kb * NR;
+        let jw = NR.min(jb - u * NR);
+        for k in 0..kb {
+            let brow = b.row(p0 + k);
+            let dst = &mut buf[base + k * NR..base + (k + 1) * NR];
+            for (jr, d) in dst.iter_mut().enumerate() {
+                *d = if jr < jw { brow[j0 + u * NR + jr] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Same tile layout for the transposed B of `gemm_nt` (stored n×k): rows of
+/// B are contiguous in the depth dimension.
+fn pack_b_nt(b: &Mat, p0: usize, kb: usize, j0: usize, jb: usize, buf: &mut [f64]) {
+    for u in 0..jb.div_ceil(NR) {
+        let base = u * kb * NR;
+        let jw = NR.min(jb - u * NR);
+        for jr in 0..NR {
+            if jr < jw {
+                let brow = &b.row(j0 + u * NR + jr)[p0..p0 + kb];
+                for (k, &v) in brow.iter().enumerate() {
+                    buf[base + k * NR + jr] = v;
+                }
+            } else {
+                for k in 0..kb {
+                    buf[base + k * NR + jr] = 0.0;
+                }
+            }
         }
     }
 }
@@ -34,25 +281,10 @@ impl GemmEngine for NativeGemm {
         assert_eq!(b.rows(), k, "gemm shape mismatch");
         assert_eq!((c.rows(), c.cols()), (m, n), "gemm output shape mismatch");
         scale_c(beta, c);
-        // Parallelize across MC-row bands of C; each band is disjoint.
-        self.par.parallel_chunks_mut(c.data_mut(), MC * n, |band, cband| {
-            let i0 = band * MC;
-            let ib = cband.len() / n;
-            for k0 in (0..k).step_by(KC) {
-                let kb = KC.min(k - k0);
-                for di in 0..ib {
-                    let i = i0 + di;
-                    let arow = &a.row(i)[k0..k0 + kb];
-                    let crow = &mut cband[di * n..(di + 1) * n];
-                    for (dk, &aik) in arow.iter().enumerate() {
-                        let x = alpha * aik;
-                        if x != 0.0 {
-                            axpy(x, b.row(k0 + dk), crow);
-                        }
-                    }
-                }
-            }
-        });
+        if m * n * k <= SMALL {
+            return small_nn(alpha, a, b, c);
+        }
+        self.packed(PackKind::Nn, alpha, a, b, c, n, k);
     }
 
     fn gemm_tn(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
@@ -61,26 +293,10 @@ impl GemmEngine for NativeGemm {
         assert_eq!(b.rows(), k, "gemm_tn shape mismatch");
         assert_eq!((c.rows(), c.cols()), (m, n), "gemm_tn output shape mismatch");
         scale_c(beta, c);
-        // C[i, :] += alpha * A[t, i] * B[t, :]  — rank-1 panels over t.
-        // Parallel over MC-row bands of C (bands index columns of A).
-        self.par.parallel_chunks_mut(c.data_mut(), MC * n, |band, cband| {
-            let i0 = band * MC;
-            let ib = cband.len() / n;
-            for t0 in (0..k).step_by(KC) {
-                let tb = KC.min(k - t0);
-                for dt in 0..tb {
-                    let t = t0 + dt;
-                    let arow = &a.row(t)[i0..i0 + ib];
-                    let brow = b.row(t);
-                    for (di, &ati) in arow.iter().enumerate() {
-                        let x = alpha * ati;
-                        if x != 0.0 {
-                            axpy(x, brow, &mut cband[di * n..(di + 1) * n]);
-                        }
-                    }
-                }
-            }
-        });
+        if m * n * k <= SMALL {
+            return small_tn(alpha, a, b, c);
+        }
+        self.packed(PackKind::Tn, alpha, a, b, c, n, k);
     }
 
     fn gemm_nt(&self, alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
@@ -88,37 +304,60 @@ impl GemmEngine for NativeGemm {
         let n = b.rows();
         assert_eq!(b.cols(), k, "gemm_nt shape mismatch");
         assert_eq!((c.rows(), c.cols()), (m, n), "gemm_nt output shape mismatch");
-        // Perf (EXPERIMENTS.md §Perf iter 1): the dot-based kernel below
-        // runs ~2.5 GF/s (horizontal reductions defeat vectorization); the
-        // axpy-based `gemm` kernel reaches ~8 GF/s. For compute-heavy
-        // shapes, paying an O(n·k) transpose to use it is a large net win.
-        if m * n * k > (1 << 18) {
-            let bt = b.transposed();
-            return self.gemm(alpha, a, &bt, beta, c);
-        }
         scale_c(beta, c);
-        // C[i,j] += alpha * dot(A[i,:], B[j,:]) — both rows contiguous.
-        // Parallel over row bands of C; j blocked for B-panel reuse in cache.
-        const NBJ: usize = 32;
-        self.par.parallel_chunks_mut(c.data_mut(), MC * n, |band, cband| {
-            let i0 = band * MC;
-            let ib = cband.len() / n;
-            for j0 in (0..n).step_by(NBJ) {
-                let jb = NBJ.min(n - j0);
-                for di in 0..ib {
-                    let arow = a.row(i0 + di);
-                    let crow = &mut cband[di * n..(di + 1) * n];
-                    for dj in 0..jb {
-                        let j = j0 + dj;
-                        crow[j] += alpha * crate::linalg::dense::dot(arow, b.row(j));
-                    }
-                }
-            }
-        });
+        if m * n * k <= SMALL {
+            return small_nt(alpha, a, b, c);
+        }
+        // The packed path handles the transpose in pack_b_nt — no O(n·k)
+        // materialized transpose (which the pre-packing kernel needed to
+        // escape its dot-product layout).
+        self.packed(PackKind::Nt, alpha, a, b, c, n, k);
     }
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+// ------------------------------------------------------------ small kernels
+//
+// Below the packing threshold: serial, allocation-free, axpy/dot based.
+
+fn small_nn(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (kk, &aik) in arow.iter().enumerate() {
+            let x = alpha * aik;
+            if x != 0.0 {
+                axpy(x, b.row(kk), crow);
+            }
+        }
+    }
+}
+
+fn small_tn(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    // C[i,:] += alpha·A[t,i]·B[t,:] — rank-1 panels over t.
+    for t in 0..a.rows() {
+        let arow = a.row(t);
+        let brow = b.row(t);
+        for (i, &ati) in arow.iter().enumerate() {
+            let x = alpha * ati;
+            if x != 0.0 {
+                axpy(x, brow, c.row_mut(i));
+            }
+        }
+    }
+}
+
+fn small_nt(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    // C[i,j] += alpha·dot(A[i,:], B[j,:]) — both rows contiguous.
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv += alpha * dot(arow, b.row(j));
+        }
     }
 }
 
@@ -171,6 +410,41 @@ mod tests {
         });
     }
 
+    /// Shapes chosen to cross every packing edge: m not a multiple of MR,
+    /// n not a multiple of NR, k spanning multiple KC panels, n spanning
+    /// multiple NC panels.
+    #[test]
+    fn packed_path_matches_reference_across_panel_edges() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        for (m, k, n) in [
+            (67, 300, 530),
+            (64, 257, 512),
+            (5, 600, 9),
+            (130, 31, 17),
+            (33, 513, 100),
+        ] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            let mut c = Mat::from_fn(m, n, |_, _| rng.normal());
+            let mut want = c.clone();
+            NativeGemm::new(2).gemm(0.7, &a, &b, -1.3, &mut c);
+            reference_gemm(0.7, &a, &b, -1.3, &mut want);
+            check_all_close(c.data(), want.data(), 1e-10, &format!("{m}x{k}x{n}"))
+                .unwrap();
+            // And the transposed layouts on the same shapes.
+            let at = a.transposed();
+            let mut ct = Mat::zeros(m, n);
+            NativeGemm::new(2).gemm_tn(1.0, &at, &b, 0.0, &mut ct);
+            let mut want_t = Mat::zeros(m, n);
+            reference_gemm(1.0, &a, &b, 0.0, &mut want_t);
+            check_all_close(ct.data(), want_t.data(), 1e-10, "tn edge").unwrap();
+            let bt = b.transposed();
+            let mut cn = Mat::zeros(m, n);
+            NativeGemm::new(2).gemm_nt(1.0, &a, &bt, 0.0, &mut cn);
+            check_all_close(cn.data(), want_t.data(), 1e-10, "nt edge").unwrap();
+        }
+    }
+
     #[test]
     fn multithreaded_agrees_with_single() {
         property(20, |rng| {
@@ -185,6 +459,15 @@ mod tests {
             NativeGemm::new(4).gemm(1.0, &a, &b, 0.0, &mut c4);
             check_all_close(c1.data(), c4.data(), 1e-12, "threads")
         });
+    }
+
+    #[test]
+    fn scratch_bound_is_monotone_in_threads() {
+        let b1 = NativeGemm::scratch_bytes_bound(1);
+        let b4 = NativeGemm::scratch_bytes_bound(4);
+        assert!(b1 > 0 && b4 > b1);
+        // Pool retention cap is part of the bound.
+        assert!(b1 >= POOL_MAX_ELEMS * 8);
     }
 
     #[test]

@@ -1,0 +1,476 @@
+//! Conflict-graph coloring for parallel coordinate-descent sweeps
+//! (paper §Parallelization).
+//!
+//! A CD update of coordinate `(i, j)` writes the shared ring caches along
+//! the pair's row/column indices (`w`'s columns i and j for Λ, `vt`'s
+//! column i for Θ), so two updates can run concurrently only when they
+//! share **no** index. This module greedily colors the active set's
+//! conflict graph — pairs are edges, indices are vertices, two pairs
+//! conflict iff they share an endpoint — so each color class is a set of
+//! index-disjoint coordinates the solvers can update data-parallel
+//! (`cd_common::*_colored`), while classes run Gauss–Seidel in sequence.
+//!
+//! Greedy edge coloring uses at most `2Δ − 1` colors (Δ = the hottest
+//! index's degree), and on the sparse active sets the solvers see it is
+//! near-optimal in practice. Coloring is deterministic in the pair order,
+//! which is what makes colored sweeps bitwise-reproducible across thread
+//! counts.
+//!
+//! [`ColoringCache`] persists a coloring across inner sweeps and outer
+//! iterations (the active set changes slowly near convergence and along a
+//! λ path): an identical pair list is reused outright, small churn extends
+//! the previous coloring incrementally (surviving pairs keep their colors
+//! — removals can never invalidate a proper coloring), and only large
+//! churn triggers a full rebuild. The cache's buffers are registered
+//! against the [`MemBudget`] for as long as they are cached.
+
+use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
+use std::collections::HashMap;
+
+/// Which index spaces a coordinate pair's endpoints live in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConflictSpace {
+    /// Λ coordinates: both endpoints index the same q columns (a diagonal
+    /// pair `(i, i)` occupies a single vertex).
+    Symmetric(usize),
+    /// Θ coordinates `(i, j)`: rows `0..p` and columns `0..q` are distinct
+    /// index spaces — `(i, j)` and `(k, l)` conflict iff `i == k` or
+    /// `j == l`.
+    Bipartite(usize, usize),
+}
+
+impl ConflictSpace {
+    fn vertices(&self) -> usize {
+        match *self {
+            ConflictSpace::Symmetric(q) => q,
+            ConflictSpace::Bipartite(p, q) => p + q,
+        }
+    }
+
+    #[inline]
+    fn endpoints(&self, pair: (usize, usize)) -> (usize, usize) {
+        match *self {
+            ConflictSpace::Symmetric(_) => (pair.0, pair.1),
+            ConflictSpace::Bipartite(p, _) => (pair.0, p + pair.1),
+        }
+    }
+}
+
+/// Per-vertex used-color bitset (lazily grown words).
+fn set_bit(words: &mut Vec<u64>, c: u32) {
+    let w = (c / 64) as usize;
+    if words.len() <= w {
+        words.resize(w + 1, 0);
+    }
+    words[w] |= 1u64 << (c % 64);
+}
+
+fn lowest_free(ua: &[u64], ub: &[u64]) -> u32 {
+    let mut w = 0usize;
+    loop {
+        let a = ua.get(w).copied().unwrap_or(0);
+        let b = ub.get(w).copied().unwrap_or(0);
+        let comb = a | b;
+        if comb != u64::MAX {
+            return (w as u32) * 64 + comb.trailing_ones();
+        }
+        w += 1;
+    }
+}
+
+/// Greedily color `pairs` in order; returns one color per pair. Two pairs
+/// sharing an endpoint (per `space`) never receive the same color.
+pub fn greedy_color(pairs: &[(usize, usize)], space: ConflictSpace) -> Vec<u32> {
+    let mut used: Vec<Vec<u64>> = vec![Vec::new(); space.vertices()];
+    let mut colors = Vec::with_capacity(pairs.len());
+    for &pr in pairs {
+        let (a, b) = space.endpoints(pr);
+        let c = lowest_free(&used[a], &used[b]);
+        set_bit(&mut used[a], c);
+        if b != a {
+            set_bit(&mut used[b], c);
+        }
+        colors.push(c);
+    }
+    colors
+}
+
+/// Bucket `pairs` into color classes, preserving pair order within a class.
+pub fn classes_from(pairs: &[(usize, usize)], colors: &[u32]) -> Vec<Vec<(usize, usize)>> {
+    debug_assert_eq!(pairs.len(), colors.len());
+    let nc = colors.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+    let mut classes: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nc];
+    for (&pr, &c) in pairs.iter().zip(colors) {
+        classes[c as usize].push(pr);
+    }
+    classes
+}
+
+/// One-shot convenience: color and bucket (ephemeral colorings, e.g. the
+/// block solver's per-bucket sweeps).
+pub fn color_classes(pairs: &[(usize, usize)], space: ConflictSpace) -> Vec<Vec<(usize, usize)>> {
+    let colors = greedy_color(pairs, space);
+    classes_from(pairs, &colors)
+}
+
+/// Greedy coloring of *items that each occupy a set of resource indices*:
+/// two items sharing any resource never share a color. The block solver's
+/// Θ row sweep uses this with items = active row-blocks and resources =
+/// the block's columns, so same-column rows (whose Hessian coupling is
+/// first-order, `2·S_xx[i1,i2]·Σ[jj]`) are serialized across classes while
+/// disjoint-column rows run data-parallel — the same guarantee the
+/// pair-coloring above gives the elementwise sweeps. Returns one color per
+/// item; deterministic in item order.
+pub fn greedy_color_groups<'a>(
+    items: impl Iterator<Item = &'a [usize]>,
+    resources: usize,
+) -> Vec<u32> {
+    let mut used: Vec<Vec<u64>> = vec![Vec::new(); resources];
+    let mut colors = Vec::new();
+    for occ in items {
+        let mut c = 0u32;
+        'search: loop {
+            for &r in occ {
+                let w = (c / 64) as usize;
+                if used[r].get(w).copied().unwrap_or(0) & (1u64 << (c % 64)) != 0 {
+                    c += 1;
+                    continue 'search;
+                }
+            }
+            break;
+        }
+        for &r in occ {
+            set_bit(&mut used[r], c);
+        }
+        colors.push(c);
+    }
+    colors
+}
+
+/// Jaccard distance between two pair lists (order-insensitive).
+fn churn(old: &[(usize, usize)], new: &[(usize, usize)]) -> f64 {
+    let mut a: Vec<(usize, usize)> = old.to_vec();
+    let mut b: Vec<(usize, usize)> = new.to_vec();
+    a.sort_unstable();
+    a.dedup();
+    b.sort_unstable();
+    b.dedup();
+    super::cluster::pair_set_churn(&a, &b)
+}
+
+/// Churn-gated coloring cache, owned by the
+/// [`crate::solvers::SolverContext`] next to the block solver's
+/// [`super::cluster::PersistentPartition`]. Rebuilt only when the active
+/// set churns past the caller's threshold; its buffers count against the
+/// memory budget while cached.
+#[derive(Default)]
+pub struct ColoringCache {
+    /// Pair list the cached classes cover, in solver order.
+    sig: Vec<(usize, usize)>,
+    colors: Vec<u32>,
+    classes: Vec<Vec<(usize, usize)>>,
+    space: Option<ConflictSpace>,
+    /// Full greedy recolorings performed (observability for tests).
+    pub rebuilds: usize,
+    /// Incremental extensions (small churn: survivors kept their colors).
+    pub extensions: usize,
+    /// Calls served with the cached classes untouched.
+    pub hits: usize,
+    _track: Option<Tracked>,
+}
+
+impl ColoringCache {
+    pub fn new() -> ColoringCache {
+        ColoringCache::default()
+    }
+
+    /// Color classes covering exactly `pairs`. Reuses the cached coloring
+    /// when the pair list is unchanged; extends it incrementally when the
+    /// Jaccard churn is within `churn_limit` (negative ⇒ always rebuild);
+    /// rebuilds from scratch otherwise. The returned classes partition
+    /// `pairs` and no class contains two pairs sharing an index.
+    pub fn classes_for(
+        &mut self,
+        pairs: &[(usize, usize)],
+        space: ConflictSpace,
+        churn_limit: f64,
+        budget: &MemBudget,
+    ) -> Result<&[Vec<(usize, usize)>], BudgetExceeded> {
+        if self.space == Some(space) && self.sig == pairs {
+            self.hits += 1;
+            return Ok(&self.classes);
+        }
+        let incremental = self.space == Some(space)
+            && !self.sig.is_empty()
+            && churn_limit >= 0.0
+            && churn(&self.sig, pairs) <= churn_limit;
+        let colors = if incremental {
+            // Surviving pairs keep their colors (removals cannot break a
+            // proper coloring); fresh pairs are greedily colored around
+            // them.
+            let old: HashMap<(usize, usize), u32> = self
+                .sig
+                .iter()
+                .copied()
+                .zip(self.colors.iter().copied())
+                .collect();
+            let mut used: Vec<Vec<u64>> = vec![Vec::new(); space.vertices()];
+            let mut colors: Vec<u32> = Vec::with_capacity(pairs.len());
+            // First pass: pin survivors and seed the per-vertex masks.
+            for &pr in pairs {
+                match old.get(&pr) {
+                    Some(&c) => {
+                        let (a, b) = space.endpoints(pr);
+                        set_bit(&mut used[a], c);
+                        if b != a {
+                            set_bit(&mut used[b], c);
+                        }
+                        colors.push(c);
+                    }
+                    None => colors.push(u32::MAX),
+                }
+            }
+            // Second pass: color the newcomers.
+            for (k, &pr) in pairs.iter().enumerate() {
+                if colors[k] == u32::MAX {
+                    let (a, b) = space.endpoints(pr);
+                    let c = lowest_free(&used[a], &used[b]);
+                    set_bit(&mut used[a], c);
+                    if b != a {
+                        set_bit(&mut used[b], c);
+                    }
+                    colors[k] = c;
+                }
+            }
+            self.extensions += 1;
+            colors
+        } else {
+            self.rebuilds += 1;
+            greedy_color(pairs, space)
+        };
+        // Re-register the cache's bytes: release the old registration first
+        // so the swap is not transiently double-counted, and leave the cache
+        // empty (not stale) if the new registration does not fit.
+        self._track = None;
+        let bytes = pairs.len()
+            * (2 * std::mem::size_of::<(usize, usize)>() + std::mem::size_of::<u32>());
+        let track = match budget.track(bytes) {
+            Ok(t) => t,
+            Err(e) => {
+                self.sig.clear();
+                self.colors.clear();
+                self.classes.clear();
+                self.space = None;
+                return Err(e);
+            }
+        };
+        self.classes = classes_from(pairs, &colors);
+        self.sig = pairs.to_vec();
+        self.colors = colors;
+        self.space = Some(space);
+        self._track = Some(track);
+        Ok(&self.classes)
+    }
+}
+
+/// Debug-check a class partition: every class is index-disjoint and the
+/// classes cover `pairs` exactly. Used by tests (and cheap enough for
+/// assertions in benches).
+pub fn validate_classes(
+    pairs: &[(usize, usize)],
+    classes: &[Vec<(usize, usize)>],
+    space: ConflictSpace,
+) -> Result<(), String> {
+    let mut seen = 0usize;
+    for (ci, class) in classes.iter().enumerate() {
+        let mut used = vec![false; space.vertices()];
+        for &pr in class {
+            let (a, b) = space.endpoints(pr);
+            if used[a] || (b != a && used[b]) {
+                return Err(format!("class {ci} has two pairs sharing an index: {pr:?}"));
+            }
+            used[a] = true;
+            used[b] = true;
+            seen += 1;
+        }
+    }
+    if seen != pairs.len() {
+        return Err(format!(
+            "classes cover {seen} pairs, expected {}",
+            pairs.len()
+        ));
+    }
+    let mut a: Vec<(usize, usize)> = pairs.to_vec();
+    let mut b: Vec<(usize, usize)> = classes.iter().flatten().copied().collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    if a != b {
+        return Err("classes are not a permutation of the input pairs".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::property;
+
+    fn random_lambda_pairs(rng: &mut Rng, q: usize) -> Vec<(usize, usize)> {
+        let mut pairs = Vec::new();
+        for i in 0..q {
+            for j in i..q {
+                if i == j || rng.bernoulli(0.3) {
+                    pairs.push((i, j));
+                }
+            }
+        }
+        pairs
+    }
+
+    #[test]
+    fn symmetric_coloring_is_valid() {
+        property(30, |rng| {
+            let q = 2 + rng.below(30);
+            let pairs = random_lambda_pairs(rng, q);
+            let classes = color_classes(&pairs, ConflictSpace::Symmetric(q));
+            validate_classes(&pairs, &classes, ConflictSpace::Symmetric(q))
+        });
+    }
+
+    #[test]
+    fn bipartite_coloring_is_valid() {
+        property(30, |rng| {
+            let p = 1 + rng.below(20);
+            let q = 1 + rng.below(20);
+            let mut pairs = Vec::new();
+            for i in 0..p {
+                for j in 0..q {
+                    if rng.bernoulli(0.3) {
+                        pairs.push((i, j));
+                    }
+                }
+            }
+            let classes = color_classes(&pairs, ConflictSpace::Bipartite(p, q));
+            validate_classes(&pairs, &classes, ConflictSpace::Bipartite(p, q))
+        });
+    }
+
+    #[test]
+    fn shared_row_or_column_conflicts() {
+        // Θ-space: (0,0)/(1,0) share a column, (0,0)/(0,1) share a row —
+        // both must split; (0,0)/(1,1) are disjoint and may share a color.
+        let space = ConflictSpace::Bipartite(2, 2);
+        let c = greedy_color(&[(0, 0), (1, 0)], space);
+        assert_ne!(c[0], c[1]);
+        let c = greedy_color(&[(0, 0), (0, 1)], space);
+        assert_ne!(c[0], c[1]);
+        let c = greedy_color(&[(0, 0), (1, 1)], space);
+        assert_eq!(c[0], c[1], "disjoint pairs share the first color");
+    }
+
+    #[test]
+    fn diagonal_pairs_occupy_one_vertex() {
+        // (i,i) conflicts with every pair touching i but not with (j,j).
+        let space = ConflictSpace::Symmetric(3);
+        let pairs = [(0, 0), (1, 1), (0, 1)];
+        let c = greedy_color(&pairs, space);
+        assert_eq!(c[0], c[1]);
+        assert_ne!(c[0], c[2]);
+        assert_ne!(c[1], c[2]);
+    }
+
+    #[test]
+    fn coloring_is_deterministic_in_pair_order() {
+        let mut rng = Rng::new(9);
+        let pairs = random_lambda_pairs(&mut rng, 25);
+        let a = greedy_color(&pairs, ConflictSpace::Symmetric(25));
+        let b = greedy_color(&pairs, ConflictSpace::Symmetric(25));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn group_coloring_separates_shared_resources() {
+        property(30, |rng| {
+            let nres = 2 + rng.below(20);
+            let nitems = 1 + rng.below(25);
+            let items: Vec<Vec<usize>> = (0..nitems)
+                .map(|_| {
+                    let k = 1 + rng.below(4);
+                    (0..k).map(|_| rng.below(nres)).collect()
+                })
+                .collect();
+            let colors = greedy_color_groups(items.iter().map(|v| v.as_slice()), nres);
+            if colors.len() != nitems {
+                return Err("one color per item".into());
+            }
+            for a in 0..nitems {
+                for b in a + 1..nitems {
+                    let shares = items[a].iter().any(|r| items[b].contains(r));
+                    if shares && colors[a] == colors[b] {
+                        return Err(format!(
+                            "items {a},{b} share a resource but share color {}",
+                            colors[a]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cache_reuses_extends_and_rebuilds() {
+        let mut rng = Rng::new(3);
+        let q = 20;
+        let space = ConflictSpace::Symmetric(q);
+        let budget = MemBudget::unlimited();
+        let mut cache = ColoringCache::new();
+        let pairs = random_lambda_pairs(&mut rng, q);
+        {
+            let classes = cache.classes_for(&pairs, space, 0.2, &budget).unwrap();
+            validate_classes(&pairs, classes, space).unwrap();
+        }
+        assert_eq!((cache.rebuilds, cache.extensions, cache.hits), (1, 0, 0));
+        // Identical pair list: served from cache.
+        cache.classes_for(&pairs, space, 0.2, &budget).unwrap();
+        assert_eq!(cache.hits, 1);
+        // Small churn: drop one pair, add one — incremental extension, and
+        // the result is still a valid coloring of the new list.
+        let mut churned = pairs.clone();
+        churned.retain(|&pr| pr != (0, 0));
+        churned.push((0, 0)); // moved to the end: same set, new order-tail
+        let extra = (0, q - 1);
+        if !churned.contains(&extra) {
+            churned.push(extra);
+        }
+        {
+            let classes = cache.classes_for(&churned, space, 0.5, &budget).unwrap();
+            validate_classes(&churned, classes, space).unwrap();
+        }
+        assert_eq!(cache.extensions, 1);
+        // Negative threshold forces a full rebuild even for tiny churn.
+        let classes = cache.classes_for(&pairs, space, -1.0, &budget).unwrap();
+        validate_classes(&pairs, classes, space).unwrap();
+        assert_eq!(cache.rebuilds, 2);
+    }
+
+    #[test]
+    fn cache_registers_against_the_budget() {
+        let q = 10;
+        let space = ConflictSpace::Symmetric(q);
+        let budget = MemBudget::unlimited();
+        let mut cache = ColoringCache::new();
+        let pairs: Vec<(usize, usize)> = (0..q).map(|i| (i, i)).collect();
+        cache.classes_for(&pairs, space, 0.2, &budget).unwrap();
+        let per_pair = 2 * std::mem::size_of::<(usize, usize)>() + std::mem::size_of::<u32>();
+        assert_eq!(budget.live(), q * per_pair);
+        drop(cache);
+        assert_eq!(budget.live(), 0);
+        // An impossible budget is a clean error and empties the cache.
+        let tiny = MemBudget::new(8);
+        let mut cache = ColoringCache::new();
+        assert!(cache.classes_for(&pairs, space, 0.2, &tiny).is_err());
+        assert_eq!(tiny.live(), 0);
+    }
+}

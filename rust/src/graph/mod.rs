@@ -9,6 +9,7 @@
 //! (Kernighan–Lin/Fiduccia–Mattheyses style) projected back up the levels.
 
 pub mod cluster;
+pub mod coloring;
 
 use crate::linalg::sparse::SpRowMat;
 

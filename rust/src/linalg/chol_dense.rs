@@ -9,6 +9,7 @@
 
 use super::dense::{dot, Mat};
 use crate::gemm::GemmEngine;
+use crate::util::threadpool::Parallelism;
 
 /// Lower-triangular Cholesky factor of an SPD matrix.
 pub struct DenseChol {
@@ -144,29 +145,47 @@ impl DenseChol {
 
     /// Inverse with a caller-provided n×n scratch `w` (overwritten) — no
     /// allocation; the solvers hand both buffers from their workspace arena
-    /// so the whole Σ computation is budget-visible.
+    /// so the whole Σ computation is budget-visible. Serial; see
+    /// [`Self::inverse_into_scratch_par`] for the band-parallel variant the
+    /// solvers use.
     pub fn inverse_into_scratch(&self, engine: &dyn GemmEngine, w: &mut Mat, inv: &mut Mat) {
-        // A⁻¹ = L⁻ᵀ L⁻¹. Compute W = L⁻¹ (lower triangular) then A⁻¹ = WᵀW.
+        self.inverse_into_scratch_par(engine, &Parallelism::new(1), w, inv);
+    }
+
+    /// Band-parallel inverse: the columns of `W = L⁻¹` are independent
+    /// triangular solves, so they are computed in parallel — column j is
+    /// stored as *row* j of the scratch (i.e. the scratch holds `Wᵀ`), which
+    /// makes each solve a contiguous-row recurrence and the per-column
+    /// writes disjoint row slices for [`Parallelism::parallel_chunks_mut`].
+    /// The TRSM phase was the one serial dense path left in Σ = Λ⁻¹
+    /// (the sparse branch already solved per column in parallel).
+    pub fn inverse_into_scratch_par(
+        &self,
+        engine: &dyn GemmEngine,
+        par: &Parallelism,
+        w: &mut Mat,
+        inv: &mut Mat,
+    ) {
+        // A⁻¹ = L⁻ᵀ L⁻¹ = WᵀW. With the scratch holding Wᵀ (row j = column
+        // j of W), the Gram becomes a row-dot product: gemm_nt(Wᵀ, Wᵀ).
         let n = self.n();
         assert_eq!((inv.rows(), inv.cols()), (n, n));
         assert_eq!((w.rows(), w.cols()), (n, n));
-        // The Gram below reads all of W, so the strict upper triangle must
-        // be zero.
-        w.fill(0.0);
-        // Solve L W = I column by column; exploit that col j of W has zeros above j.
-        for j in 0..n {
-            w[(j, j)] = 1.0 / self.l[(j, j)];
+        let l = &self.l;
+        let ld = l.data();
+        // One row (= one triangular solve) per dynamic chunk: the cost per
+        // column shrinks quadratically with j, so dynamic claiming keeps
+        // the bands balanced.
+        par.parallel_chunks_mut(w.data_mut(), n, |j, wrow| {
+            wrow[..j].iter_mut().for_each(|x| *x = 0.0);
+            wrow[j] = 1.0 / ld[j * n + j];
             for i in j + 1..n {
-                let row = &self.l.data()[i * n + j..i * n + i];
-                let mut s = 0.0;
-                for (t, lval) in row.iter().enumerate() {
-                    s += lval * w[(j + t, j)];
-                }
-                w[(i, j)] = -s / self.l[(i, i)];
+                let lrow = &ld[i * n + j..i * n + i];
+                let s = dot(lrow, &wrow[j..i]);
+                wrow[i] = -s / ld[i * n + i];
             }
-        }
-        // A⁻¹ = Wᵀ W (W lower triangular) — Gram via the engine.
-        engine.gemm_tn(1.0, &w, &w, 0.0, inv);
+        });
+        engine.gemm_nt(1.0, w, w, 0.0, inv);
         inv.symmetrize();
     }
 }
@@ -267,6 +286,31 @@ mod tests {
                 check_close(ch.logdet(), a[(0, 0)].ln(), 1e-12, "logdet n=1")?;
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_inverse_matches_serial_bitwise() {
+        property(15, |rng| {
+            let n = 1 + rng.below(70);
+            let a = random_spd(rng, n);
+            let eng = NativeGemm::new(1);
+            let ch = DenseChol::factor(&a, &eng).map_err(|e| e.to_string())?;
+            let mut w1 = Mat::zeros(n, n);
+            let mut i1 = Mat::zeros(n, n);
+            ch.inverse_into_scratch_par(&eng, &Parallelism::new(1), &mut w1, &mut i1);
+            let mut w4 = Mat::zeros(n, n);
+            let mut i4 = Mat::zeros(n, n);
+            ch.inverse_into_scratch_par(&eng, &Parallelism::new(4), &mut w4, &mut i4);
+            // Column solves are independent, so thread count cannot change
+            // a single bit.
+            if i1.data() != i4.data() {
+                return Err("banded TRSM result depends on thread count".into());
+            }
+            // And it is actually the inverse.
+            let mut prod = Mat::zeros(n, n);
+            eng.gemm(1.0, &a, &i4, 0.0, &mut prod);
+            check_all_close(prod.data(), Mat::eye(n).data(), 1e-8, "A·A⁻¹=I")
         });
     }
 

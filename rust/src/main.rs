@@ -27,6 +27,7 @@ const BOOL_FLAGS: &[&str] = &[
     "trace",
     "quick",
     "cold",
+    "one-se",
 ];
 
 fn main() {
@@ -68,7 +69,10 @@ COMMANDS
   gen   --workload chain|cluster|genomic --p N --q N --n N [--seed S] --out FILE
   fit   [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--lambda X | --calibrate] [--mem-budget 512MB] [--threads T]
-        [--engine native|xla|pallas [--tile 128|256]] [--trace]
+        [--cd-threads T] [--engine native|xla|pallas [--tile 128|256]] [--trace]
+        (--threads drives column/GEMM parallelism; --cd-threads > 1 switches
+         the CD sweeps to colored conflict-free parallel passes — see
+         docs/PERF.md)
   path  [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--path-points N] [--path-min-ratio R] [--screen full|strong] [--cold]
         [--checkpoint FILE | --resume FILE] [--recluster-churn X]
@@ -80,9 +84,10 @@ COMMANDS
          warm-restarts an interrupted sweep from its last valid point)
   cv    [--config FILE] [--workload ...|--data FILE] --solver ... --folds K
         [--cv-threads T] [--path-points N] [--path-min-ratio R]
-        [--screen full|strong] [--seed S] ...
+        [--screen full|strong] [--one-se] [--seed S] ...
         (K-fold CV over the λ path: per-fold contexts, folds in parallel,
-         held-out NLL scoring, winning λ refit on the full data)
+         held-out NLL scoring, winning λ refit on the full data; --one-se
+         selects the sparsest λ within one standard error of the best)
   exp   <id>|all [--list] [--scale F] [--sizes a,b,c] [--lambda X] ...
   cal   --workload ... --p N --q N --n N
   info
@@ -316,13 +321,18 @@ fn cmd_cv(args: &Args) -> i32 {
         Ok(res) => {
             println!("{}", res.to_json().to_string_pretty());
             eprintln!(
-                "selected lambda=({:.4},{:.4}) at point {} of {} \
+                "selected lambda=({:.4},{:.4}) at point {} of {}{} \
                  (mean held-out NLL {:.4})",
                 res.best_lambda.0,
                 res.best_lambda.1,
-                res.best + 1,
+                res.selected + 1,
                 res.points.len(),
-                res.points[res.best].mean_nll,
+                if res.selected != res.best {
+                    format!(" [one-SE; argmin at point {}]", res.best + 1)
+                } else {
+                    String::new()
+                },
+                res.points[res.selected].mean_nll,
             );
             let dir = PathBuf::from(&cfg.out_dir);
             let _ = std::fs::create_dir_all(&dir);

@@ -43,12 +43,13 @@ use crate::gemm::GemmEngine;
 use crate::graph::cluster::{
     contiguous_blocks, ClusterOptions, PersistentPartition,
 };
+use crate::graph::coloring::{greedy_color, ConflictSpace};
 use crate::graph::Graph;
 use crate::linalg::cg::CgSolver;
 use crate::linalg::dense::{axpy, dot, Mat};
 use crate::linalg::sparse::SpRowMat;
 use crate::metrics::{IterRecord, SolveTrace};
-use crate::util::threadpool::Parallelism;
+use crate::util::threadpool::{Parallelism, SharedMut, SharedSlice};
 use crate::util::timer::{PhaseProfiler, Stopwatch};
 
 const CG_TOL: f64 = 1e-10;
@@ -171,6 +172,31 @@ pub fn solve(
     // Reusable column-position lookup (usize::MAX = not cached).
     let mut pos: Vec<usize> = vec![usize::MAX; q.max(p)];
 
+    // Strong-rule restriction (SolveOptions::screen): per-column Λ row
+    // lists and per-row Θ column lists, so the blockwise screens — and
+    // hence all CD work and the stopping statistic — only touch allowed
+    // coordinates. Blocks whose columns have no allowed entries skip their
+    // σ/ψ column loads entirely. Built once per solve; O(|set|) memory,
+    // respecting this solver's no-dense-matrices story.
+    let screen = opts.screen.as_deref();
+    let lambda_allowed: Option<Vec<Vec<usize>>> = screen.map(|set| {
+        let mut by_col: Vec<Vec<usize>> = vec![Vec::new(); q];
+        for &(i, j) in &set.lambda {
+            by_col[j].push(i); // i ≤ j by ScreenSet convention
+        }
+        by_col
+    });
+    let theta_allowed: Option<Vec<Vec<usize>>> = screen.map(|set| {
+        let mut by_row: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for &(i, j) in &set.theta {
+            by_row[i].push(j); // row-major sorted by construction
+        }
+        by_row
+    });
+
+    // Colored parallel CD (`--cd-threads > 1`) for the panel sweeps.
+    let cd_par = opts.cd_parallelism();
+
     for it in 0..opts.max_iter {
         let cg = CgSolver::new(model.lambda.to_csr(), CG_TOL, 20 * q.max(16));
         let sig = pick_sigma(&factor, &cg, opts);
@@ -189,30 +215,46 @@ pub fn solve(
             let mut t0 = 0;
             while t0 < q {
                 let bsz = screen_bsz.min(q - t0);
-                let cols: Vec<usize> = (t0..t0 + bsz).collect();
+                // Under a restriction, only load σ/ψ for columns with
+                // allowed coordinates — the screening win the strong rule
+                // buys this solver.
+                let cols: Vec<usize> = match &lambda_allowed {
+                    Some(by_col) => (t0..t0 + bsz)
+                        .filter(|&t| !by_col[t].is_empty())
+                        .collect(),
+                    None => (t0..t0 + bsz).collect(),
+                };
+                t0 += bsz;
+                if cols.is_empty() {
+                    continue;
+                }
+                let m = cols.len();
                 let cache = load_lambda_cache(
                     data, &sig, &rt, &SpRowMat::zeros(q, q), &cols, par, ws,
                 )?;
-                // S_yy block = gemm_nt(yt, yt[cols]) / n  (q×bsz).
-                let mut ytb = ws.mat(bsz, n)?;
+                // S_yy block = gemm_nt(yt, yt[cols]) / n  (q×m).
+                let mut ytb = ws.mat(m, n)?;
                 data.yt.rows_into(&cols, &mut ytb);
-                let mut syyb = ws.mat(q, bsz)?;
+                let mut syyb = ws.mat(q, m)?;
                 engine.gemm_nt(data.inv_n(), &data.yt, &ytb, 0.0, &mut syyb);
                 for (c, &t) in cols.iter().enumerate() {
-                    let sig = cache.sigma.row(c);
-                    let psi = cache.psi.row(c);
-                    for i in 0..=t {
-                        let g = syyb[(i, c)] - sig[i] - psi[i];
+                    let sigc = cache.sigma.row(c);
+                    let psic = cache.psi.row(c);
+                    let mut scan = |i: usize| {
+                        let g = syyb[(i, c)] - sigc[i] - psic[i];
                         let x = model.lambda.get(i, t);
                         let s = min_norm_subgrad(g, x, opts.lam_l);
                         subgrad_l += if i == t { s.abs() } else { 2.0 * s.abs() };
                         if x != 0.0 || g.abs() > opts.lam_l {
                             active.push(ActivePair { i, j: t, grad: g });
                         }
+                    };
+                    match &lambda_allowed {
+                        Some(by_col) => by_col[t].iter().for_each(|&i| scan(i)),
+                        None => (0..=t).for_each(scan),
                     }
                 }
-                t0 += bsz;
-                if bsz == q {
+                if m == q {
                     screen_cache = Some(cache);
                 }
             }
@@ -221,8 +263,12 @@ pub fn solve(
 
         // ---- Θ screen (also needed for the stopping statistic) ----
         let (theta_active, subgrad_t) = prof.time("screen:theta", || {
-            theta_screen(data, &sig, &model, engine, par, opts, ws)
+            theta_screen(data, &sig, &model, engine, par, opts, ws, theta_allowed.as_deref())
         })?;
+        trace.coords_screened += match screen {
+            Some(set) => set.len(),
+            None => q * (q + 1) / 2 + p * q,
+        };
 
         let subgrad = subgrad_l + subgrad_t;
         let param_l1 = model.lambda.l1_norm() + model.theta.l1_norm();
@@ -306,6 +352,14 @@ pub fn solve(
         }
 
         // ---- blocked CD for the Newton direction D_Λ ----
+        // With `--cd-threads > 1`, each bucket's pairs are greedily colored
+        // into index-disjoint classes once per iteration and swept by the
+        // parallel panel variant.
+        let colored_buckets: Option<Vec<Vec<Vec<ActivePair>>>> = if opts.colored_cd() {
+            Some(buckets.iter().map(|b| color_bucket(b, q)).collect())
+        } else {
+            None
+        };
         let mut delta = SpRowMat::zeros(q, q);
         prof.time("cd:lambda", || -> Result<(), SolveError> {
             for sweep in 0..opts.inner_sweeps {
@@ -319,7 +373,16 @@ pub fn solve(
                     };
                     set_pos(&mut pos, &cz.cols);
                     // Diagonal bucket.
-                    cd_block_pair(&buckets[z * nb + z], &mut cz, None, &pos, &model.lambda, &mut delta, opts.lam_l);
+                    match &colored_buckets {
+                        Some(cb) => cd_block_pair_colored(
+                            &cb[z * nb + z], &mut cz, None, &pos, &model.lambda, &mut delta,
+                            opts.lam_l, &cd_par,
+                        ),
+                        None => cd_block_pair(
+                            &buckets[z * nb + z], &mut cz, None, &pos, &model.lambda,
+                            &mut delta, opts.lam_l,
+                        ),
+                    }
                     for r in (z + 1)..nb {
                         let bucket = &buckets[z * nb + r];
                         if bucket.is_empty() {
@@ -336,7 +399,16 @@ pub fn solve(
                         let mut cr =
                             load_lambda_cache(data, &sig, &rt, &delta, &bcols, par, ws)?;
                         set_pos(&mut pos, &cr.cols);
-                        cd_block_pair(bucket, &mut cz, Some(&mut cr), &pos, &model.lambda, &mut delta, opts.lam_l);
+                        match &colored_buckets {
+                            Some(cb) => cd_block_pair_colored(
+                                &cb[z * nb + r], &mut cz, Some(&mut cr), &pos,
+                                &model.lambda, &mut delta, opts.lam_l, &cd_par,
+                            ),
+                            None => cd_block_pair(
+                                bucket, &mut cz, Some(&mut cr), &pos, &model.lambda,
+                                &mut delta, opts.lam_l,
+                            ),
+                        }
                         clear_pos(&mut pos, &cr.cols);
                     }
                     clear_pos(&mut pos, &cz.cols);
@@ -394,6 +466,7 @@ pub fn solve(
                 &mut model,
                 &theta_active,
                 par,
+                &cd_par,
                 opts,
                 ws,
                 &mut caches.theta,
@@ -577,6 +650,206 @@ fn cd_block_pair(
     }
 }
 
+/// Color one bucket's pairs into index-disjoint classes for the parallel
+/// panel sweep (ephemeral — buckets are rebuilt every outer iteration, so
+/// unlike the dense solvers' context-cached colorings these are computed on
+/// the fly; a bucket's pairs are few by construction).
+fn color_bucket(bucket: &[ActivePair], q: usize) -> Vec<Vec<ActivePair>> {
+    if bucket.is_empty() {
+        return Vec::new();
+    }
+    let pairs: Vec<(usize, usize)> = bucket.iter().map(|a| (a.i, a.j)).collect();
+    let colors = greedy_color(&pairs, ConflictSpace::Symmetric(q));
+    let nc = colors.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+    let mut classes: Vec<Vec<ActivePair>> = vec![Vec::new(); nc];
+    for (a, &c) in bucket.iter().zip(&colors) {
+        classes[c as usize].push(*a);
+    }
+    classes
+}
+
+/// Raw phase view of one [`LambdaCache`]: read-only σ/ψ panels plus the
+/// shared-mutable `u` panel the team's apply phase updates row-disjointly.
+struct CacheRawView<'a> {
+    cols: &'a [usize],
+    sigma: &'a [f64],
+    psi: &'a [f64],
+    u: SharedSlice,
+    rows: usize,
+}
+
+fn raw_view<'a>(c: &'a mut LambdaCache<'_>) -> CacheRawView<'a> {
+    let rows = c.cols.len();
+    CacheRawView {
+        cols: &c.cols,
+        sigma: c.sigma.data(),
+        psi: c.psi.data(),
+        u: SharedSlice::new(c.u.data_mut()),
+        rows,
+    }
+}
+
+fn locate_view(
+    zv: &CacheRawView<'_>,
+    rv: Option<&CacheRawView<'_>>,
+    pos: &[usize],
+    t: usize,
+) -> Option<(usize, bool)> {
+    let c = pos[t];
+    if c == usize::MAX {
+        return None;
+    }
+    if c < zv.rows && zv.cols[c] == t {
+        return Some((c, true));
+    }
+    if let Some(rv) = rv {
+        if c < rv.rows && rv.cols[c] == t {
+            return Some((c, false));
+        }
+    }
+    None
+}
+
+/// One pair's step from the frozen phase-1 state (the blocked mirror of
+/// `cd_common::lambda_coord_mu`, reading cached σ/ψ/u columns).
+#[allow(clippy::too_many_arguments)]
+fn colored_pair_mu(
+    a: &ActivePair,
+    zv: &CacheRawView<'_>,
+    rv: Option<&CacheRawView<'_>>,
+    pos: &[usize],
+    lambda: &SpRowMat,
+    delta: &SpRowMat,
+    lam_l: f64,
+    q: usize,
+) -> f64 {
+    let (i, j) = (a.i, a.j);
+    let (ci, i_in_z) = match locate_view(zv, rv, pos, i) {
+        Some(x) => x,
+        None => return 0.0,
+    };
+    let (cj, j_in_z) = match locate_view(zv, rv, pos, j) {
+        Some(x) => x,
+        None => return 0.0,
+    };
+    let vi = if i_in_z { zv } else { rv.expect("located in cr") };
+    let vj = if j_in_z { zv } else { rv.expect("located in cr") };
+    let sig_i = &vi.sigma[ci * q..(ci + 1) * q];
+    let sig_j = &vj.sigma[cj * q..(cj + 1) * q];
+    let psi_i = &vi.psi[ci * q..(ci + 1) * q];
+    let psi_j = &vj.psi[cj * q..(cj + 1) * q];
+    // SAFETY: phase-1 read; u is not written until after the barrier.
+    let u_i = unsafe { vi.u.slice(ci * q, q) };
+    let u_j = unsafe { vj.u.slice(cj * q, q) };
+    let (s_ij, s_ii, s_jj) = (sig_j[i], sig_i[i], sig_j[j]);
+    let (p_ij, p_ii, p_jj) = (psi_j[i], psi_i[i], psi_j[j]);
+    if i == j {
+        let aa = s_ii * s_ii + 2.0 * s_ii * p_ii;
+        let b = a.grad + dot(sig_i, u_i) + 2.0 * dot(psi_i, u_i);
+        let c = lambda.get(i, i) + delta.get(i, i);
+        cd_minimizer(aa, b, c, lam_l)
+    } else {
+        let aa = s_ij * s_ij + s_ii * s_jj + s_ii * p_jj + s_jj * p_ii + 2.0 * s_ij * p_ij;
+        let b = a.grad + dot(sig_i, u_j) + dot(psi_i, u_j) + dot(psi_j, u_i);
+        let c = lambda.get(i, j) + delta.get(i, j);
+        cd_minimizer(aa, b, c, lam_l)
+    }
+}
+
+/// Colored parallel counterpart of [`cd_block_pair`]: Gauss–Seidel across
+/// the bucket's color classes, two team phases per class (frozen-state
+/// steps, then row-disjoint u maintenance + thread-0 Δ application) — the
+/// same scheme as `cd_common`'s colored passes, bitwise-deterministic in
+/// the thread count.
+#[allow(clippy::too_many_arguments)]
+fn cd_block_pair_colored(
+    classes: &[Vec<ActivePair>],
+    cz: &mut LambdaCache<'_>,
+    cr: Option<&mut LambdaCache<'_>>,
+    pos: &[usize],
+    lambda: &SpRowMat,
+    delta: &mut SpRowMat,
+    lam_l: f64,
+    par: &Parallelism,
+) {
+    let maxc = classes.iter().map(|c| c.len()).max().unwrap_or(0);
+    if maxc == 0 {
+        return;
+    }
+    let q = cz.sigma.cols();
+    // Buckets are often tiny (the clustering exists to make off-diagonal
+    // buckets rare and small): below this many total O(q) steps a team
+    // spawn costs more than it buys, so run the identical colored
+    // algorithm on an inline team of one — numerics are thread-count
+    // invariant, so this gate cannot change results, only spawn overhead.
+    const MIN_PAR_STEPS: usize = 64;
+    let total_steps: usize = classes.iter().map(|c| c.len()).sum();
+    let inline = Parallelism::new(1);
+    let par = if total_steps < MIN_PAR_STEPS { &inline } else { par };
+    let zv = raw_view(cz);
+    let rv = cr.map(|c| raw_view(c));
+    let rv_ref = rv.as_ref();
+    let mut mu_buf = vec![0.0f64; maxc];
+    let mu_shared = SharedSlice::new(&mut mu_buf);
+    let delta_shared = SharedMut::new(delta);
+    par.team(|tid, team| {
+        let nt = team.threads();
+        let mut upd: Vec<(usize, usize, f64)> = Vec::new();
+        for class in classes {
+            let m = class.len();
+            {
+                // Phase 1 — SAFETY: delta/u are read-only until the barrier.
+                let delta_ro = unsafe { delta_shared.get_ref() };
+                for k in (tid..m).step_by(nt) {
+                    let mu = colored_pair_mu(
+                        &class[k], &zv, rv_ref, pos, lambda, delta_ro, lam_l, q,
+                    );
+                    unsafe { mu_shared.write(k, mu) };
+                }
+            }
+            team.sync();
+            upd.clear();
+            {
+                let mu_ro = unsafe { mu_shared.slice(0, m) };
+                for (k, a) in class.iter().enumerate() {
+                    if mu_ro[k] != 0.0 {
+                        upd.push((a.i, a.j, mu_ro[k]));
+                    }
+                }
+            }
+            if !upd.is_empty() {
+                if tid == 0 {
+                    // SAFETY: only thread 0 touches delta during phase 2.
+                    let dm = unsafe { delta_shared.get_mut() };
+                    for &(i, j, mu) in &upd {
+                        dm.add_sym(i, j, mu);
+                    }
+                }
+                let total = zv.rows + rv_ref.map_or(0, |v| v.rows);
+                for c in (tid..total).step_by(nt) {
+                    let (view, cc) = if c < zv.rows {
+                        (&zv, c)
+                    } else {
+                        (rv_ref.expect("c indexes cr rows"), c - zv.rows)
+                    };
+                    // SAFETY: row cc of this cache is written by one thread.
+                    let urow = unsafe { view.u.slice_mut(cc * q, q) };
+                    let srow = &view.sigma[cc * q..(cc + 1) * q];
+                    for &(i, j, mu) in &upd {
+                        if i == j {
+                            urow[i] += mu * srow[i];
+                        } else {
+                            urow[i] += mu * srow[j];
+                            urow[j] += mu * srow[i];
+                        }
+                    }
+                }
+            }
+            team.sync();
+        }
+    });
+}
+
 fn locate(
     cz: &LambdaCache<'_>,
     cr: Option<&LambdaCache<'_>>,
@@ -624,6 +897,10 @@ fn maintain_u(cache: &mut LambdaCache<'_>, i: usize, j: usize, mu: f64) {
 /// lists with gradient values, plus the subgradient statistic.
 type ThetaActive = Vec<(usize, Vec<(usize, f64)>)>;
 
+/// `theta_allowed` (from `SolveOptions::screen`) restricts the scan to each
+/// row's allowed columns — the subgradient statistic and active lists then
+/// cover exactly the allowed set, mirroring the dense solvers' restricted
+/// screens.
 #[allow(clippy::too_many_arguments)]
 fn theta_screen(
     data: &Dataset,
@@ -633,15 +910,34 @@ fn theta_screen(
     par: &Parallelism,
     opts: &SolveOptions,
     ws: &Workspace,
+    theta_allowed: Option<&[Vec<usize>]>,
 ) -> Result<(ThetaActive, f64), SolveError> {
     let (p, q, n) = (data.p(), data.q(), data.n());
     let bsz = theta_screen_block(p, q, n, opts);
+    // Under a restriction, column blocks with no allowed coordinate skip
+    // their σ solves and Γ/S_xy GEMMs entirely — the Θ-side screening win
+    // (mirrors the Λ screen's column filtering).
+    let allowed_in_block: Option<Vec<bool>> = theta_allowed.map(|by_row| {
+        let mut any = vec![false; q.div_ceil(bsz)];
+        for lst in by_row {
+            for &j in lst {
+                any[j / bsz] = true;
+            }
+        }
+        any
+    });
     // active[i] = list of (j, grad) per row i (built incrementally).
     let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); p];
     let mut subgrad = 0.0;
     let mut t0 = 0;
     while t0 < q {
         let b = bsz.min(q - t0);
+        if let Some(any) = &allowed_in_block {
+            if !any[t0 / bsz] {
+                t0 += b;
+                continue;
+            }
+        }
         let cols: Vec<usize> = (t0..t0 + b).collect();
         // σ columns for this block.
         let mut sigma = ws.mat(b, q)?;
@@ -678,11 +974,11 @@ fn theta_screen(
         data.yt.rows_into(&cols, &mut ytb);
         let mut sxyb = ws.mat(p, b)?;
         engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
-        // Screen.
+        // Screen (restricted to each row's allowed columns when screening).
         for i in 0..p {
             let grow = gamma.row(i);
             let srow = sxyb.row(i);
-            for c in 0..b {
+            let mut scan = |c: usize| {
                 let j = cols[c];
                 let g = 2.0 * srow[c] + 2.0 * grow[c];
                 let x = model.theta.get(i, j);
@@ -690,6 +986,19 @@ fn theta_screen(
                 if x != 0.0 || g.abs() > opts.lam_t {
                     per_row[i].push((j, g));
                 }
+            };
+            match theta_allowed {
+                Some(by_row) => {
+                    let lst = &by_row[i];
+                    let start = lst.partition_point(|&j| j < t0);
+                    for &j in &lst[start..] {
+                        if j >= t0 + b {
+                            break;
+                        }
+                        scan(j - t0);
+                    }
+                }
+                None => (0..b).for_each(scan),
             }
         }
         t0 += b;
@@ -709,11 +1018,28 @@ fn theta_screen_block(p: usize, q: usize, n: usize, opts: &SolveOptions) -> usiz
     ((budget / 2) / col_bytes).clamp(1, q)
 }
 
+/// One row's outcome from the parallel Θ row phase: updates for Θ's row
+/// `i` and the accumulated V-column delta (`dv[c]` = this row's total
+/// change to `vt[(c, si)]`), applied after the phase.
+struct RowOutcome {
+    i: usize,
+    si: usize,
+    upds: Vec<(usize, f64)>,
+    dv: Vec<f64>,
+}
+
 /// Θ block CD sweep (Alg. 2 lower half): partition output columns, cache
 /// Σ_{C_r} and V rows, update row blocks (i, C_r) with one S_xx row at a
 /// time restricted to the support rows. The column partition persists in
 /// `theta_cache` across sweeps and λ-path points; returns whether it was
 /// rebuilt this call.
+///
+/// With `cd_par.threads > 1` the row blocks run data-parallel: rows write
+/// disjoint V columns, and each row carries its own column delta (`dv`) so
+/// its within-row updates stay exact Gauss–Seidel against the frozen
+/// cross-row state (Jacobi across rows, like the colored passes). The
+/// expensive per-row `S_xx` row reconstructions — the §4.2 cache-miss cost
+/// — parallelize with the rows.
 #[allow(clippy::too_many_arguments)]
 fn theta_block_sweep(
     data: &Dataset,
@@ -721,6 +1047,7 @@ fn theta_block_sweep(
     model: &mut CggmModel,
     active: &ThetaActive,
     par: &Parallelism,
+    cd_par: &Parallelism,
     opts: &SolveOptions,
     ws: &Workspace,
     theta_cache: &mut PersistentPartition,
@@ -831,33 +1158,127 @@ fn theta_block_sweep(
             for (c, &j) in cols.iter().enumerate() {
                 col_pos[j] = c;
             }
-            // Row blocks (i, C_b).
-            for (i, jlist) in &row_actives[b] {
-                let i = *i;
-                // One S_xx row, restricted to the support (cache miss cost
-                // O(n·p̃), §4.2).
-                data.sxx_row_restricted(i, &support, &mut sxx_row);
-                let sxx_ii = data.sxx(i, i);
-                let si = support_pos[i];
-                debug_assert!(si != usize::MAX);
-                for &(j, _g) in jlist {
-                    let c = col_pos[j];
-                    debug_assert!(c != usize::MAX);
-                    let sig_c = sigma.row(c);
-                    let a = 2.0 * sxx_ii * sig_c[j];
-                    if a <= 0.0 {
-                        continue;
+            if cd_par.threads > 1 {
+                // Row blocks in parallel. Rows sharing an active column in
+                // this block couple at *first order* (2·S_xx[i1,i2]·Σ[jj]),
+                // so — exactly like the elementwise colored sweeps — they
+                // are separated into classes (greedy group coloring over
+                // the block's columns) and the classes run Gauss–Seidel:
+                // within one class rows share no column, each computes its
+                // S_xx row and sweeps its own columns exactly (own-column
+                // delta carried in dv), and the outcomes are applied in
+                // row order before the next class sees V. Per-row scratch
+                // is thread-local by necessity (the workspace arena is
+                // single-owner) and dwarfed by the O(n·p̃) S_xx row
+                // reconstruction it sits next to.
+                let rows = &row_actives[b];
+                let occ: Vec<Vec<usize>> = rows
+                    .iter()
+                    .map(|(_, jl)| jl.iter().map(|&(j, _)| col_pos[j]).collect())
+                    .collect();
+                let colors = crate::graph::coloring::greedy_color_groups(
+                    occ.iter().map(|v| v.as_slice()),
+                    bsz,
+                );
+                let nclasses = colors.iter().map(|&c| c + 1).max().unwrap_or(0);
+                for class in 0..nclasses {
+                    let members: Vec<usize> = (0..rows.len())
+                        .filter(|&r| colors[r] == class)
+                        .collect();
+                    // Tiny classes run the identical code on one thread —
+                    // a spawn would cost more than the rows it covers (the
+                    // gate is size-only, so results stay thread-count
+                    // invariant).
+                    let inline = Parallelism::new(1);
+                    let class_par = if members.len() < 4 { &inline } else { cd_par };
+                    let mut slots: Vec<Option<RowOutcome>> = Vec::new();
+                    slots.resize_with(members.len(), || None);
+                    {
+                        let sigma_d = sigma.data();
+                        let vt_d = vt.data();
+                        let theta_ro = &model.theta;
+                        let support_ref: &[usize] = &support;
+                        let support_pos_ref: &[usize] = &support_pos;
+                        let col_pos_ref: &[usize] = &col_pos;
+                        let members_ref: &[usize] = &members;
+                        class_par.parallel_chunks_mut(&mut slots, 1, |mk, slot| {
+                            let (i, jlist) = &rows[members_ref[mk]];
+                            let i = *i;
+                            let mut row_buf: Vec<f64> = Vec::new();
+                            data.sxx_row_restricted(i, support_ref, &mut row_buf);
+                            let sxx_ii = data.sxx(i, i);
+                            let si = support_pos_ref[i];
+                            debug_assert!(si != usize::MAX);
+                            let mut dv = vec![0.0; bsz];
+                            let mut upds: Vec<(usize, f64)> = Vec::new();
+                            for &(j, _g) in jlist {
+                                let c = col_pos_ref[j];
+                                debug_assert!(c != usize::MAX);
+                                let sig_c = &sigma_d[c * q..(c + 1) * q];
+                                let a = 2.0 * sxx_ii * sig_c[j];
+                                if a <= 0.0 {
+                                    continue;
+                                }
+                                // Frozen class-entry V plus this row's own
+                                // accumulated column delta — exact
+                                // within-row Gauss–Seidel.
+                                let vt_c = &vt_d[c * ns..(c + 1) * ns];
+                                let b_lin = 2.0 * data.sxy(i, j)
+                                    + 2.0 * (dot(&row_buf, vt_c) + row_buf[si] * dv[c]);
+                                let cc = theta_ro.get(i, j);
+                                let mu = cd_minimizer(a, b_lin, cc, opts.lam_t);
+                                if mu != 0.0 {
+                                    upds.push((j, mu));
+                                    for (cp, d) in dv.iter_mut().enumerate() {
+                                        *d += mu * sigma_d[cp * q + j];
+                                    }
+                                }
+                            }
+                            slot[0] = Some(RowOutcome { i, si, upds, dv });
+                        });
                     }
-                    let b_lin =
-                        2.0 * data.sxy(i, j) + 2.0 * dot(&sxx_row, vt.row(c));
-                    let cc = model.theta.get(i, j);
-                    let mu = cd_minimizer(a, b_lin, cc, opts.lam_t);
-                    if mu != 0.0 {
-                        model.theta.add(i, j, mu);
-                        // V_{i,:}|block += μΣ_{j,:}|block ⇒ vt[c'][si] += μσ_{c'}[j].
-                        for cprime in 0..bsz {
-                            let sjc = sigma[(cprime, j)];
-                            vt[(cprime, si)] += mu * sjc;
+                    for slot in slots {
+                        let out = slot.expect("every row slot is filled");
+                        for &(j, mu) in &out.upds {
+                            model.theta.add(out.i, j, mu);
+                        }
+                        for (cp, d) in out.dv.iter().enumerate() {
+                            if *d != 0.0 {
+                                vt[(cp, out.si)] += *d;
+                            }
+                        }
+                    }
+                }
+            } else {
+                // Row blocks (i, C_b), serial.
+                for (i, jlist) in &row_actives[b] {
+                    let i = *i;
+                    // One S_xx row, restricted to the support (cache miss
+                    // cost O(n·p̃), §4.2).
+                    data.sxx_row_restricted(i, &support, &mut sxx_row);
+                    let sxx_ii = data.sxx(i, i);
+                    let si = support_pos[i];
+                    debug_assert!(si != usize::MAX);
+                    for &(j, _g) in jlist {
+                        let c = col_pos[j];
+                        debug_assert!(c != usize::MAX);
+                        let sig_c = sigma.row(c);
+                        let a = 2.0 * sxx_ii * sig_c[j];
+                        if a <= 0.0 {
+                            continue;
+                        }
+                        let b_lin =
+                            2.0 * data.sxy(i, j) + 2.0 * dot(&sxx_row, vt.row(c));
+                        let cc = model.theta.get(i, j);
+                        let mu = cd_minimizer(a, b_lin, cc, opts.lam_t);
+                        if mu != 0.0 {
+                            model.theta.add(i, j, mu);
+                            // V_{i,:}|block += μΣ_{j,:}|block
+                            // ⇒ vt[c'][si] += μσ_{c'}[j].
+                            for cprime in 0..bsz {
+                                let sjc = sigma[(cprime, j)];
+                                vt[(cprime, si)] += mu * sjc;
+                            }
                         }
                     }
                 }

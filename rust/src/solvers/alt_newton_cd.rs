@@ -20,7 +20,10 @@
 //! workspace arena, so the loop performs no allocations and the budget's
 //! `peak()` reports the true working set.
 
-use super::cd_common::{lambda_cd_pass, theta_cd_pass_direct, trace_grad_dir};
+use super::cd_common::{
+    lambda_cd_pass, lambda_cd_pass_colored, theta_cd_pass_direct, theta_cd_pass_direct_colored,
+    trace_grad_dir, ColoredScratch,
+};
 use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::active::{
     lambda_active_dense, lambda_active_within, theta_active_dense, theta_active_within,
@@ -30,6 +33,7 @@ use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
 use crate::cggm::objective::SmoothParts;
 use crate::cggm::{CggmModel, Objective};
 use crate::gemm::GemmEngine;
+use crate::graph::coloring::ConflictSpace;
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpRowMat;
 use crate::metrics::{IterRecord, SolveTrace};
@@ -83,6 +87,11 @@ pub fn solve(
     // per-coordinate gradients from the shared Σ·R̃ᵀ panel instead of the
     // dense O(npq) GEMM.
     let screen = opts.screen.as_deref();
+
+    // Colored parallel CD (`--cd-threads > 1`): conflict-free color classes
+    // from the context's churn-gated coloring cache.
+    let cd_par = opts.cd_parallelism();
+    let mut cd_scratch = ColoredScratch::default();
 
     for it in 0..opts.max_iter {
         // ---- screens (gradients at the current iterate) ----
@@ -146,14 +155,40 @@ pub fn solve(
         // ---- Λ step: CD for the Newton direction, then line search ----
         let mut delta = SpRowMat::zeros(q, q);
         let mut w = ws.mat(q, q)?;
-        prof.time("cd:lambda", || {
-            for _ in 0..opts.inner_sweeps {
-                lambda_cd_pass(
-                    &active_l, syy, &sigma, &psi, &model.lambda, &mut delta, &mut w,
-                    opts.lam_l, None,
-                );
+        prof.time("cd:lambda", || -> Result<(), SolveError> {
+            if opts.colored_cd() {
+                let mut colorings = ctx.coloring_caches();
+                let classes = colorings.lambda.classes_for(
+                    &active_l,
+                    ConflictSpace::Symmetric(q),
+                    opts.recluster_churn,
+                    ctx.budget(),
+                )?;
+                for _ in 0..opts.inner_sweeps {
+                    lambda_cd_pass_colored(
+                        classes,
+                        syy,
+                        &sigma,
+                        &psi,
+                        &model.lambda,
+                        &mut delta,
+                        &mut w,
+                        opts.lam_l,
+                        None,
+                        &cd_par,
+                        &mut cd_scratch,
+                    );
+                }
+            } else {
+                for _ in 0..opts.inner_sweeps {
+                    lambda_cd_pass(
+                        &active_l, syy, &sigma, &psi, &model.lambda, &mut delta, &mut w,
+                        opts.lam_l, None,
+                    );
+                }
             }
-        });
+            Ok(())
+        })?;
         let tr_gd = trace_grad_dir(&gl, &delta);
         let mut lpd = model.lambda.clone();
         lpd.add_scaled(1.0, &delta);
@@ -187,20 +222,45 @@ pub fn solve(
             let mut v = ws.mat(p, q)?;
             prof.time("vt", || theta_sigma_t_into(&model.theta, &sigma, &mut v, &mut vt));
         }
-        prof.time("cd:theta", || {
-            for _ in 0..opts.inner_sweeps {
-                theta_cd_pass_direct(
+        prof.time("cd:theta", || -> Result<(), SolveError> {
+            if opts.colored_cd() {
+                let mut colorings = ctx.coloring_caches();
+                let classes = colorings.theta.classes_for(
                     &active_t,
-                    sxx,
-                    sxx_diag,
-                    sxy,
-                    &sigma,
-                    &mut model.theta,
-                    &mut vt,
-                    opts.lam_t,
-                );
+                    ConflictSpace::Bipartite(p, q),
+                    opts.recluster_churn,
+                    ctx.budget(),
+                )?;
+                for _ in 0..opts.inner_sweeps {
+                    theta_cd_pass_direct_colored(
+                        classes,
+                        sxx,
+                        sxx_diag,
+                        sxy,
+                        &sigma,
+                        &mut model.theta,
+                        &mut vt,
+                        opts.lam_t,
+                        &cd_par,
+                        &mut cd_scratch,
+                    );
+                }
+            } else {
+                for _ in 0..opts.inner_sweeps {
+                    theta_cd_pass_direct(
+                        &active_t,
+                        sxx,
+                        sxx_diag,
+                        sxy,
+                        &sigma,
+                        &mut model.theta,
+                        &mut vt,
+                        opts.lam_t,
+                    );
+                }
             }
-        });
+            Ok(())
+        })?;
         model.theta.prune(0.0);
         data.xtheta_t_into(&model.theta, &mut rt);
         parts.tr_sxy_theta = obj.tr_sxy_sparse(&model.theta);
@@ -219,8 +279,10 @@ pub fn solve(
 
 /// Σ = Λ⁻¹ dense, into a preallocated q×q buffer; the dense path's
 /// triangular scratch comes from the workspace arena (budget-visible, no
-/// allocation). With a sparse factor, solve per column in parallel (writing
-/// column c into row c — Σ is symmetric).
+/// allocation). Both branches are column-parallel under `par`: the sparse
+/// factor solves per column (writing column c into row c — Σ is symmetric),
+/// and the dense factor's TRSM phase runs band-parallel
+/// ([`crate::linalg::chol_dense::DenseChol::inverse_into_scratch_par`]).
 pub(crate) fn sigma_dense_into(
     factor: &LambdaFactor,
     engine: &dyn GemmEngine,
@@ -232,7 +294,7 @@ pub(crate) fn sigma_dense_into(
         FactorRepr::Dense(f) => {
             let n = f.n();
             let mut w = ws.mat(n, n)?;
-            f.inverse_into_scratch(engine, &mut w, out);
+            f.inverse_into_scratch_par(engine, par, &mut w, out);
         }
         FactorRepr::Sparse(f) => {
             let q = f.n();

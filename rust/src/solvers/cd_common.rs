@@ -17,6 +17,7 @@
 use crate::cggm::cd_minimizer;
 use crate::linalg::dense::{dot, Mat};
 use crate::linalg::sparse::SpRowMat;
+use crate::util::threadpool::{Parallelism, SharedMut, SharedSlice};
 
 /// Extra cached matrices for the joint (Newton CD) Λ update: the Γ/Φ
 /// coupling terms of Appendix A.1.
@@ -25,6 +26,112 @@ pub struct JointTerms<'a> {
     pub gamma_t: &'a Mat,
     /// V'ᵀ = (Δ_ΘΣ)ᵀ (q×p): `vtp.row(j)` = V'_:,j.
     pub vtp: &'a Mat,
+}
+
+/// Reusable scratch for the colored (thread-parallel) CD passes: the
+/// per-class step-value slots every team member reads after the phase-1
+/// barrier. Kept by the solvers across iterations so the colored loops
+/// allocate only on first use.
+#[derive(Default)]
+pub struct ColoredScratch {
+    mu: Vec<f64>,
+}
+
+/// One coordinate's Λ CD step at the *current* (Δ, w) state — the shared
+/// math of the serial and colored passes. `w_i`/`w_j` are rows i and j of
+/// the `w = Uᵀ` cache (passed as slices so the colored pass can read them
+/// through its shared phase view).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn lambda_coord_mu(
+    i: usize,
+    j: usize,
+    syy: &Mat,
+    sigma: &Mat,
+    psi: &Mat,
+    lambda: &SpRowMat,
+    delta: &SpRowMat,
+    w_i: &[f64],
+    w_j: &[f64],
+    lam_l: f64,
+    joint: Option<&JointTerms>,
+) -> f64 {
+    let (s_ij, s_ii, s_jj) = (sigma[(i, j)], sigma[(i, i)], sigma[(j, j)]);
+    let (p_ij, p_ii, p_jj) = (psi[(i, j)], psi[(i, i)], psi[(j, j)]);
+    if i == j {
+        let a = s_ii * s_ii + 2.0 * s_ii * p_ii;
+        let mut b =
+            syy[(i, i)] - s_ii - p_ii + dot(sigma.row(i), w_i) + 2.0 * dot(psi.row(i), w_i);
+        if let Some(jt) = joint {
+            b -= 2.0 * dot(jt.gamma_t.row(i), jt.vtp.row(i));
+        }
+        let c = lambda.get(i, i) + delta.get(i, i);
+        cd_minimizer(a, b, c, lam_l)
+    } else {
+        let a = s_ij * s_ij + s_ii * s_jj + s_ii * p_jj + s_jj * p_ii + 2.0 * s_ij * p_ij;
+        let mut b = syy[(i, j)] - s_ij - p_ij
+            + dot(sigma.row(i), w_j)
+            + dot(psi.row(i), w_j)
+            + dot(psi.row(j), w_i);
+        if let Some(jt) = joint {
+            // Φ_ij + Φ_ji
+            b -= dot(jt.gamma_t.row(i), jt.vtp.row(j)) + dot(jt.gamma_t.row(j), jt.vtp.row(i));
+        }
+        let c = lambda.get(i, j) + delta.get(i, j);
+        cd_minimizer(a, b, c, lam_l)
+    }
+}
+
+/// One coordinate's Θ step for Algorithm 1's direct update (0.0 when the
+/// coordinate has no curvature). `vt_j` is row j of the `vt = (ΘΣ)ᵀ` cache.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn theta_direct_mu(
+    i: usize,
+    j: usize,
+    sxx: &Mat,
+    sxx_diag: &[f64],
+    sxy: &Mat,
+    sigma: &Mat,
+    theta: &SpRowMat,
+    vt_j: &[f64],
+    lam_t: f64,
+) -> f64 {
+    let a = 2.0 * sxx_diag[i] * sigma[(j, j)];
+    if a <= 0.0 {
+        return 0.0; // zero-variance input: coordinate has no curvature
+    }
+    let b = 2.0 * sxy[(i, j)] + 2.0 * dot(sxx.row(i), vt_j);
+    let c = theta.get(i, j);
+    cd_minimizer(a, b, c, lam_t)
+}
+
+/// One coordinate's Θ step for the joint direction (Newton CD baseline).
+/// `vtp_j` is row j of the `vtp = (Δ_ΘΣ)ᵀ` cache.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn theta_direction_mu(
+    i: usize,
+    j: usize,
+    sxx: &Mat,
+    sxx_diag: &[f64],
+    sxy: &Mat,
+    sigma: &Mat,
+    gamma: &Mat,
+    w: &Mat,
+    theta: &SpRowMat,
+    delta_t: &SpRowMat,
+    vtp_j: &[f64],
+    lam_t: f64,
+) -> f64 {
+    let a = 2.0 * sxx_diag[i] * sigma[(j, j)];
+    if a <= 0.0 {
+        return 0.0;
+    }
+    let b = 2.0 * sxy[(i, j)] + 2.0 * gamma[(i, j)] + 2.0 * dot(sxx.row(i), vtp_j)
+        - 2.0 * dot(gamma.row(i), w.row(j));
+    let c = theta.get(i, j) + delta_t.get(i, j);
+    cd_minimizer(a, b, c, lam_t)
 }
 
 /// One CD pass over the Λ active set, updating the direction `delta`
@@ -44,32 +151,19 @@ pub fn lambda_cd_pass(
     let q = sigma.rows();
     let mut moved = 0usize;
     for &(i, j) in active {
-        let (s_ij, s_ii, s_jj) = (sigma[(i, j)], sigma[(i, i)], sigma[(j, j)]);
-        let (p_ij, p_ii, p_jj) = (psi[(i, j)], psi[(i, i)], psi[(j, j)]);
-        let mu = if i == j {
-            let a = s_ii * s_ii + 2.0 * s_ii * p_ii;
-            let mut b = syy[(i, i)] - s_ii - p_ii
-                + dot(sigma.row(i), w.row(i))
-                + 2.0 * dot(psi.row(i), w.row(i));
-            if let Some(jt) = joint {
-                b -= 2.0 * dot(jt.gamma_t.row(i), jt.vtp.row(i));
-            }
-            let c = lambda.get(i, i) + delta.get(i, i);
-            cd_minimizer(a, b, c, lam_l)
-        } else {
-            let a = s_ij * s_ij + s_ii * s_jj + s_ii * p_jj + s_jj * p_ii + 2.0 * s_ij * p_ij;
-            let mut b = syy[(i, j)] - s_ij - p_ij
-                + dot(sigma.row(i), w.row(j))
-                + dot(psi.row(i), w.row(j))
-                + dot(psi.row(j), w.row(i));
-            if let Some(jt) = joint {
-                // Φ_ij + Φ_ji
-                b -= dot(jt.gamma_t.row(i), jt.vtp.row(j))
-                    + dot(jt.gamma_t.row(j), jt.vtp.row(i));
-            }
-            let c = lambda.get(i, j) + delta.get(i, j);
-            cd_minimizer(a, b, c, lam_l)
-        };
+        let mu = lambda_coord_mu(
+            i,
+            j,
+            syy,
+            sigma,
+            psi,
+            lambda,
+            delta,
+            w.row(i),
+            w.row(j),
+            lam_l,
+            joint,
+        );
         if mu != 0.0 {
             moved += 1;
             delta.add_sym(i, j, mu);
@@ -110,13 +204,7 @@ pub fn theta_cd_pass_direct(
     let q = sigma.rows();
     let mut moved = 0usize;
     for &(i, j) in active {
-        let a = 2.0 * sxx_diag[i] * sigma[(j, j)];
-        if a <= 0.0 {
-            continue; // zero-variance input: coordinate has no curvature
-        }
-        let b = 2.0 * sxy[(i, j)] + 2.0 * dot(sxx.row(i), vt.row(j));
-        let c = theta.get(i, j);
-        let mu = cd_minimizer(a, b, c, lam_t);
+        let mu = theta_direct_mu(i, j, sxx, sxx_diag, sxy, sigma, theta, vt.row(j), lam_t);
         if mu != 0.0 {
             moved += 1;
             theta.add(i, j, mu);
@@ -153,15 +241,20 @@ pub fn theta_cd_pass_direction(
     let p = sxx.rows();
     let mut moved = 0usize;
     for &(i, j) in active {
-        let a = 2.0 * sxx_diag[i] * sigma[(j, j)];
-        if a <= 0.0 {
-            continue;
-        }
-        let b = 2.0 * sxy[(i, j)] + 2.0 * gamma[(i, j)]
-            + 2.0 * dot(sxx.row(i), vtp.row(j))
-            - 2.0 * dot(gamma.row(i), w.row(j));
-        let c = theta.get(i, j) + delta_t.get(i, j);
-        let mu = cd_minimizer(a, b, c, lam_t);
+        let mu = theta_direction_mu(
+            i,
+            j,
+            sxx,
+            sxx_diag,
+            sxy,
+            sigma,
+            gamma,
+            w,
+            theta,
+            delta_t,
+            vtp.row(j),
+            lam_t,
+        );
         if mu != 0.0 {
             moved += 1;
             delta_t.add(i, j, mu);
@@ -173,6 +266,306 @@ pub fn theta_cd_pass_direction(
         }
     }
     moved
+}
+
+// -------------------------------------------------- colored parallel passes
+//
+// The colored variants run Gauss–Seidel *across* color classes and
+// data-parallel *within* a class (the classes come from
+// `graph::coloring`: no two pairs in a class share a row/column index).
+// One scoped team ([`Parallelism::team`]) processes all classes, with a
+// barrier pair per class:
+//
+//   1. every pair's step μ is computed from the class-entry state (the
+//      caches are frozen — read-only — into the shared `mu` slots, each
+//      written by one thread) — `sync` —
+//   2. every thread derives the identical nonzero-update list from `mu`;
+//      thread 0 applies it to the sparse direction (O(1) per step) while
+//      the dense ring cache is updated data-parallel across its *rows*
+//      (each row applies every step in class order, so writes are disjoint
+//      and the result is bitwise-identical for every thread count) —
+//      `sync` — next class.
+//
+// Within a class this is a Jacobi step — sound because same-class pairs
+// share no index, so their Hessian coupling is only the off-diagonal
+// Σ/S_xx products; across classes it remains Gauss–Seidel. The solvers use
+// these passes only when `SolveOptions::cd_threads > 1`, so the serial
+// passes above stay the bit-exact single-thread reference.
+
+/// Colored Λ CD pass over `classes` (see [`crate::graph::coloring`]).
+/// Semantically matches [`lambda_cd_pass`] up to within-class Jacobi
+/// ordering; bitwise-identical for every `par` thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn lambda_cd_pass_colored(
+    classes: &[Vec<(usize, usize)>],
+    syy: &Mat,
+    sigma: &Mat,
+    psi: &Mat,
+    lambda: &SpRowMat,
+    delta: &mut SpRowMat,
+    w: &mut Mat,
+    lam_l: f64,
+    joint: Option<&JointTerms>,
+    par: &Parallelism,
+    scratch: &mut ColoredScratch,
+) -> usize {
+    let q = sigma.rows();
+    let maxc = classes.iter().map(|c| c.len()).max().unwrap_or(0);
+    if maxc == 0 {
+        return 0;
+    }
+    scratch.mu.clear();
+    scratch.mu.resize(maxc, 0.0);
+    let moved = std::sync::atomic::AtomicUsize::new(0);
+    let mu_shared = SharedSlice::new(&mut scratch.mu);
+    let w_shared = SharedSlice::new(w.data_mut());
+    let delta_shared = SharedMut::new(delta);
+    let sd = sigma.data();
+    par.team(|tid, team| {
+        let nt = team.threads();
+        let mut upd: Vec<(usize, usize, f64)> = Vec::new();
+        for class in classes {
+            let m = class.len();
+            {
+                // Phase 1 — SAFETY: nothing writes w/delta until the
+                // barrier; each mu slot is written by exactly one thread.
+                let w_ro = unsafe { w_shared.slice(0, q * q) };
+                let delta_ro = unsafe { delta_shared.get_ref() };
+                for k in (tid..m).step_by(nt) {
+                    let (i, j) = class[k];
+                    let mu = lambda_coord_mu(
+                        i,
+                        j,
+                        syy,
+                        sigma,
+                        psi,
+                        lambda,
+                        delta_ro,
+                        &w_ro[i * q..(i + 1) * q],
+                        &w_ro[j * q..(j + 1) * q],
+                        lam_l,
+                        joint,
+                    );
+                    unsafe { mu_shared.write(k, mu) };
+                }
+            }
+            team.sync();
+            // Phase 2: identical update list on every thread (no second
+            // rendezvous needed to share it).
+            upd.clear();
+            {
+                let mu_ro = unsafe { mu_shared.slice(0, m) };
+                for (k, &(i, j)) in class.iter().enumerate() {
+                    if mu_ro[k] != 0.0 {
+                        upd.push((i, j, mu_ro[k]));
+                    }
+                }
+            }
+            if !upd.is_empty() {
+                if tid == 0 {
+                    moved.fetch_add(upd.len(), std::sync::atomic::Ordering::Relaxed);
+                    // SAFETY: only thread 0 touches delta during phase 2.
+                    let delta_mut = unsafe { delta_shared.get_mut() };
+                    for &(i, j, mu) in &upd {
+                        delta_mut.add_sym(i, j, mu);
+                    }
+                }
+                for t in (tid..q).step_by(nt) {
+                    // SAFETY: row t is written by exactly one thread.
+                    let wrow = unsafe { w_shared.slice_mut(t * q, q) };
+                    for &(i, j, mu) in &upd {
+                        if i == j {
+                            wrow[i] += mu * sd[i * q + t];
+                        } else {
+                            wrow[i] += mu * sd[j * q + t];
+                            wrow[j] += mu * sd[i * q + t];
+                        }
+                    }
+                }
+            }
+            team.sync();
+        }
+    });
+    moved.into_inner()
+}
+
+/// Colored Θ pass for Algorithm 1's direct update; parallel counterpart of
+/// [`theta_cd_pass_direct`].
+#[allow(clippy::too_many_arguments)]
+pub fn theta_cd_pass_direct_colored(
+    classes: &[Vec<(usize, usize)>],
+    sxx: &Mat,
+    sxx_diag: &[f64],
+    sxy: &Mat,
+    sigma: &Mat,
+    theta: &mut SpRowMat,
+    vt: &mut Mat,
+    lam_t: f64,
+    par: &Parallelism,
+    scratch: &mut ColoredScratch,
+) -> usize {
+    let q = sigma.rows();
+    let p = sxx.rows();
+    let maxc = classes.iter().map(|c| c.len()).max().unwrap_or(0);
+    if maxc == 0 {
+        return 0;
+    }
+    scratch.mu.clear();
+    scratch.mu.resize(maxc, 0.0);
+    let moved = std::sync::atomic::AtomicUsize::new(0);
+    let mu_shared = SharedSlice::new(&mut scratch.mu);
+    let vt_shared = SharedSlice::new(vt.data_mut());
+    let theta_shared = SharedMut::new(theta);
+    let sd = sigma.data();
+    par.team(|tid, team| {
+        let nt = team.threads();
+        let mut upd: Vec<(usize, usize, f64)> = Vec::new();
+        for class in classes {
+            let m = class.len();
+            {
+                // Phase 1 — SAFETY: vt/theta are read-only until the barrier.
+                let vt_ro = unsafe { vt_shared.slice(0, q * p) };
+                let theta_ro = unsafe { theta_shared.get_ref() };
+                for k in (tid..m).step_by(nt) {
+                    let (i, j) = class[k];
+                    let mu = theta_direct_mu(
+                        i,
+                        j,
+                        sxx,
+                        sxx_diag,
+                        sxy,
+                        sigma,
+                        theta_ro,
+                        &vt_ro[j * p..(j + 1) * p],
+                        lam_t,
+                    );
+                    unsafe { mu_shared.write(k, mu) };
+                }
+            }
+            team.sync();
+            upd.clear();
+            {
+                let mu_ro = unsafe { mu_shared.slice(0, m) };
+                for (k, &(i, j)) in class.iter().enumerate() {
+                    if mu_ro[k] != 0.0 {
+                        upd.push((i, j, mu_ro[k]));
+                    }
+                }
+            }
+            if !upd.is_empty() {
+                if tid == 0 {
+                    moved.fetch_add(upd.len(), std::sync::atomic::Ordering::Relaxed);
+                    // SAFETY: only thread 0 touches Θ during phase 2.
+                    let theta_mut = unsafe { theta_shared.get_mut() };
+                    for &(i, j, mu) in &upd {
+                        theta_mut.add(i, j, mu);
+                    }
+                }
+                for t in (tid..q).step_by(nt) {
+                    // SAFETY: row t is written by exactly one thread.
+                    let vrow = unsafe { vt_shared.slice_mut(t * p, p) };
+                    for &(i, j, mu) in &upd {
+                        vrow[i] += mu * sd[j * q + t];
+                    }
+                }
+            }
+            team.sync();
+        }
+    });
+    moved.into_inner()
+}
+
+/// Colored Θ pass for the joint direction; parallel counterpart of
+/// [`theta_cd_pass_direction`].
+#[allow(clippy::too_many_arguments)]
+pub fn theta_cd_pass_direction_colored(
+    classes: &[Vec<(usize, usize)>],
+    sxx: &Mat,
+    sxx_diag: &[f64],
+    sxy: &Mat,
+    sigma: &Mat,
+    gamma: &Mat,
+    w: &Mat,
+    theta: &SpRowMat,
+    delta_t: &mut SpRowMat,
+    vtp: &mut Mat,
+    lam_t: f64,
+    par: &Parallelism,
+    scratch: &mut ColoredScratch,
+) -> usize {
+    let q = sigma.rows();
+    let p = sxx.rows();
+    let maxc = classes.iter().map(|c| c.len()).max().unwrap_or(0);
+    if maxc == 0 {
+        return 0;
+    }
+    scratch.mu.clear();
+    scratch.mu.resize(maxc, 0.0);
+    let moved = std::sync::atomic::AtomicUsize::new(0);
+    let mu_shared = SharedSlice::new(&mut scratch.mu);
+    let vtp_shared = SharedSlice::new(vtp.data_mut());
+    let dt_shared = SharedMut::new(delta_t);
+    let sd = sigma.data();
+    par.team(|tid, team| {
+        let nt = team.threads();
+        let mut upd: Vec<(usize, usize, f64)> = Vec::new();
+        for class in classes {
+            let m = class.len();
+            {
+                // Phase 1 — SAFETY: vtp/delta_t are read-only until the
+                // barrier.
+                let vtp_ro = unsafe { vtp_shared.slice(0, q * p) };
+                let dt_ro = unsafe { dt_shared.get_ref() };
+                for k in (tid..m).step_by(nt) {
+                    let (i, j) = class[k];
+                    let mu = theta_direction_mu(
+                        i,
+                        j,
+                        sxx,
+                        sxx_diag,
+                        sxy,
+                        sigma,
+                        gamma,
+                        w,
+                        theta,
+                        dt_ro,
+                        &vtp_ro[j * p..(j + 1) * p],
+                        lam_t,
+                    );
+                    unsafe { mu_shared.write(k, mu) };
+                }
+            }
+            team.sync();
+            upd.clear();
+            {
+                let mu_ro = unsafe { mu_shared.slice(0, m) };
+                for (k, &(i, j)) in class.iter().enumerate() {
+                    if mu_ro[k] != 0.0 {
+                        upd.push((i, j, mu_ro[k]));
+                    }
+                }
+            }
+            if !upd.is_empty() {
+                if tid == 0 {
+                    moved.fetch_add(upd.len(), std::sync::atomic::Ordering::Relaxed);
+                    // SAFETY: only thread 0 touches Δ_Θ during phase 2.
+                    let dt_mut = unsafe { dt_shared.get_mut() };
+                    for &(i, j, mu) in &upd {
+                        dt_mut.add(i, j, mu);
+                    }
+                }
+                for t in (tid..q).step_by(nt) {
+                    // SAFETY: row t is written by exactly one thread.
+                    let vrow = unsafe { vtp_shared.slice_mut(t * p, p) };
+                    for &(i, j, mu) in &upd {
+                        vrow[i] += mu * sd[j * q + t];
+                    }
+                }
+            }
+            team.sync();
+        }
+    });
+    moved.into_inner()
 }
 
 /// tr(Gᵀ D) for dense G and sparse D (δ term of the Armijo condition).
@@ -385,6 +778,135 @@ mod tests {
             eng.gemm(1.0, &td, &sigma, 0.0, &mut v);
             let vtt = v.transposed();
             crate::util::testing::check_all_close(vt.data(), vtt.data(), 1e-9, "vt = (ΘΣ)ᵀ")
+        });
+    }
+
+    #[test]
+    fn colored_lambda_pass_keeps_w_consistent_and_descends() {
+        // The colored pass must (a) keep w = (ΔΣ)ᵀ exact, (b) not increase
+        // the quadratic model, and (c) be bitwise-identical across thread
+        // counts.
+        property(15, |rng| {
+            let q = 3 + rng.below(10);
+            let sigma = random_spd_dense(rng, q);
+            let psi = random_psd_dense(rng, q, 3);
+            let syy = random_psd_dense(rng, q, q + 2);
+            let lambda = SpRowMat::eye(q);
+            let mut active = Vec::new();
+            for i in 0..q {
+                for j in i..q {
+                    if i == j || rng.bernoulli(0.6) {
+                        active.push((i, j));
+                    }
+                }
+            }
+            let space = crate::graph::coloring::ConflictSpace::Symmetric(q);
+            let classes = crate::graph::coloring::color_classes(&active, space);
+            crate::graph::coloring::validate_classes(&active, &classes, space)?;
+            let lam_l = 0.25;
+            let grad = {
+                let mut g = syy.clone();
+                g.add_scaled(-1.0, &sigma);
+                g.add_scaled(-1.0, &psi);
+                g
+            };
+            let zero = lambda_model_value(&grad, &sigma, &psi, &lambda, &SpRowMat::zeros(q, q), lam_l);
+            let mut results = Vec::new();
+            for threads in [1usize, 2, 4] {
+                let par = Parallelism::new(threads);
+                let mut scratch = ColoredScratch::default();
+                let mut delta = SpRowMat::zeros(q, q);
+                let mut w = Mat::zeros(q, q);
+                let mut prev = zero;
+                for sweep in 0..3 {
+                    lambda_cd_pass_colored(
+                        &classes, &syy, &sigma, &psi, &lambda, &mut delta, &mut w, lam_l,
+                        None, &par, &mut scratch,
+                    );
+                    let cur = lambda_model_value(&grad, &sigma, &psi, &lambda, &delta, lam_l);
+                    // Within-class Jacobi may wiggle at rounding scale;
+                    // anything beyond that slack is a real regression.
+                    if cur > prev + 1e-7 * (1.0 + prev.abs()) {
+                        return Err(format!(
+                            "colored model increased (threads={threads} sweep={sweep}): \
+                             {prev} -> {cur}"
+                        ));
+                    }
+                    prev = cur;
+                }
+                // w = (ΔΣ)ᵀ exactly.
+                let eng = NativeGemm::new(1);
+                let d = delta.to_dense();
+                let mut ds = Mat::zeros(q, q);
+                eng.gemm(1.0, &d, &sigma, 0.0, &mut ds);
+                let dst = ds.transposed();
+                crate::util::testing::check_all_close(w.data(), dst.data(), 1e-9, "w = (ΔΣ)ᵀ")?;
+                results.push((delta.to_dense(), w));
+            }
+            // Bitwise determinism across thread counts.
+            for k in 1..results.len() {
+                if results[0].0.data() != results[k].0.data()
+                    || results[0].1.data() != results[k].1.data()
+                {
+                    return Err("colored pass not deterministic across thread counts".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn colored_theta_pass_matches_cache_invariant_and_is_deterministic() {
+        property(15, |rng| {
+            let p = 2 + rng.below(8);
+            let q = 2 + rng.below(8);
+            let sigma = random_spd_dense(rng, q);
+            let sxx = random_spd_dense(rng, p);
+            let sxy = Mat::from_fn(p, q, |_, _| rng.normal());
+            let sxx_diag: Vec<f64> = (0..p).map(|i| sxx[(i, i)]).collect();
+            let mut active = Vec::new();
+            for i in 0..p {
+                for j in 0..q {
+                    if rng.bernoulli(0.7) {
+                        active.push((i, j));
+                    }
+                }
+            }
+            let space = crate::graph::coloring::ConflictSpace::Bipartite(p, q);
+            let classes = crate::graph::coloring::color_classes(&active, space);
+            crate::graph::coloring::validate_classes(&active, &classes, space)?;
+            let lam_t = 0.2;
+            let mut outs = Vec::new();
+            for threads in [1usize, 3] {
+                let par = Parallelism::new(threads);
+                let mut scratch = ColoredScratch::default();
+                let mut theta = SpRowMat::zeros(p, q);
+                let mut vt = Mat::zeros(q, p);
+                let mut prev = theta_obj(&sxy, &sxx, &sigma, &theta, lam_t);
+                for sweep in 0..3 {
+                    theta_cd_pass_direct_colored(
+                        &classes, &sxx, &sxx_diag, &sxy, &sigma, &mut theta, &mut vt, lam_t,
+                        &par, &mut scratch,
+                    );
+                    let cur = theta_obj(&sxy, &sxx, &sigma, &theta, lam_t);
+                    if cur > prev + 1e-7 * (1.0 + prev.abs()) {
+                        return Err(format!("Θ objective increased (sweep {sweep})"));
+                    }
+                    prev = cur;
+                }
+                // vt = (ΘΣ)ᵀ exactly.
+                let eng = NativeGemm::new(1);
+                let td = theta.to_dense();
+                let mut v = Mat::zeros(p, q);
+                eng.gemm(1.0, &td, &sigma, 0.0, &mut v);
+                let vtt = v.transposed();
+                crate::util::testing::check_all_close(vt.data(), vtt.data(), 1e-9, "vt")?;
+                outs.push(theta.to_dense());
+            }
+            if outs[0].data() != outs[1].data() {
+                return Err("colored Θ pass not deterministic across thread counts".into());
+            }
+            Ok(())
         });
     }
 

@@ -39,6 +39,7 @@ use crate::cggm::factor::CholKind;
 use crate::cggm::{CggmModel, Dataset, Objective};
 use crate::gemm::GemmEngine;
 use crate::graph::cluster::PersistentPartition;
+use crate::graph::coloring::ColoringCache;
 use crate::linalg::dense::Mat;
 use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
 use crate::util::threadpool::Parallelism;
@@ -59,6 +60,19 @@ pub struct ClusterCaches {
     pub theta: PersistentPartition,
 }
 
+/// The colored CD sweeps' conflict-graph colorings (one per parameter),
+/// persisted next to the clustering partitions for the same reason: the
+/// active set changes slowly across inner sweeps, outer iterations, and
+/// adjacent λ-path points, so the coloring is reused or incrementally
+/// extended instead of rebuilt (churn-gated by
+/// [`crate::solvers::SolveOptions::recluster_churn`]; buffers registered
+/// against the context's [`MemBudget`]).
+#[derive(Default)]
+pub struct ColoringCaches {
+    pub lambda: ColoringCache,
+    pub theta: ColoringCache,
+}
+
 /// Shared state for one dataset: construct once, run many solves.
 pub struct SolverContext<'a> {
     data: &'a Dataset,
@@ -71,6 +85,7 @@ pub struct SolverContext<'a> {
     sxx_diag: OnceCell<Vec<f64>>,
     stat_computes: Cell<usize>,
     clusters: RefCell<ClusterCaches>,
+    colorings: RefCell<ColoringCaches>,
 }
 
 impl<'a> SolverContext<'a> {
@@ -90,6 +105,7 @@ impl<'a> SolverContext<'a> {
             sxx_diag: OnceCell::new(),
             stat_computes: Cell::new(0),
             clusters: RefCell::new(ClusterCaches::default()),
+            colorings: RefCell::new(ColoringCaches::default()),
         }
     }
 
@@ -98,6 +114,12 @@ impl<'a> SolverContext<'a> {
     /// partition phase).
     pub fn cluster_caches(&self) -> RefMut<'_, ClusterCaches> {
         self.clusters.borrow_mut()
+    }
+
+    /// The colored CD sweeps' persisted conflict colorings (exclusive
+    /// borrow for the duration of one CD phase).
+    pub fn coloring_caches(&self) -> RefMut<'_, ColoringCaches> {
+        self.colorings.borrow_mut()
     }
 
     pub fn data(&self) -> &'a Dataset {

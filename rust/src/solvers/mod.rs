@@ -85,13 +85,15 @@ impl SolverKind {
         ]
     }
 
-    /// Whether this solver honors [`SolveOptions::screen`] (path-level
-    /// strong-rule restriction). The λ-path driver only engages screening —
-    /// including its per-point gradient evaluations — for these solvers.
-    /// All three dense-statistic solvers restrict their screens (and CD /
-    /// prox work) to the allowed set. The block solver must stay off this
-    /// list: the driver's dense gradient evaluations would materialize the
-    /// q×q/p×q matrices its memory story exists to avoid.
+    /// Whether the λ-path *driver* engages screening — including its
+    /// per-point dense gradient evaluations — for this solver. All three
+    /// dense-statistic solvers restrict their screens (and CD / prox work)
+    /// to the allowed set. The block solver also honors a caller-provided
+    /// [`SolveOptions::screen`] at the solver level (its blockwise Λ/Θ
+    /// screens and panel sweeps restrict to the allowed coordinates), but
+    /// stays off this list: the *driver's* dense gradient evaluations
+    /// would materialize the q×q/p×q matrices its memory story exists to
+    /// avoid.
     pub fn supports_screen(&self) -> bool {
         matches!(
             self,
@@ -123,8 +125,19 @@ pub struct SolveOptions {
     pub tol: f64,
     /// CD passes over the active set per subproblem (paper: 1).
     pub inner_sweeps: usize,
-    /// Worker threads (paper §Parallelization).
+    /// Worker threads (paper §Parallelization) for the column-parallel
+    /// work: Σ column solves, GEMM bands, fold-parallel drivers.
     pub threads: usize,
+    /// Worker threads for the coordinate-descent sweeps themselves. `> 1`
+    /// switches every CD hot loop to the *colored* passes: the active set's
+    /// conflict graph ([`crate::graph::coloring`], cached in the
+    /// [`SolverContext`] and rebuilt only on active-set churn) partitions
+    /// coordinates into index-disjoint classes, processed Gauss–Seidel
+    /// across classes and data-parallel within one. `1` (default) keeps the
+    /// bit-exact serial sweeps. Kept separate from `threads` because the
+    /// two parallelize different grains (long column solves vs O(q) updates)
+    /// and tuning them independently matters — see docs/PERF.md.
+    pub cd_threads: usize,
     /// Λ factorization strategy.
     pub chol: CholKind,
     /// Memory budget for the block solver's caches.
@@ -169,6 +182,7 @@ impl Default for SolveOptions {
             tol: 0.01,
             inner_sweeps: 1,
             threads: 1,
+            cd_threads: 1,
             chol: CholKind::Auto,
             budget: MemBudget::unlimited(),
             clustering: true,
@@ -184,6 +198,16 @@ impl Default for SolveOptions {
 impl SolveOptions {
     pub fn parallelism(&self) -> Parallelism {
         Parallelism::new(self.threads)
+    }
+
+    /// Parallelism handle for the colored CD sweeps (`--cd-threads`).
+    pub fn cd_parallelism(&self) -> Parallelism {
+        Parallelism::new(self.cd_threads)
+    }
+
+    /// Whether the colored (conflict-free parallel) CD passes are engaged.
+    pub fn colored_cd(&self) -> bool {
+        self.cd_threads > 1
     }
 
     /// True when the wall-clock cap is reached. `>=` so `time_limit` is

@@ -25,7 +25,8 @@
 
 use super::alt_newton_cd::{full_count, sigma_dense_into};
 use super::cd_common::{
-    lambda_cd_pass, theta_cd_pass_direction, trace_grad_dir, JointTerms,
+    lambda_cd_pass, lambda_cd_pass_colored, theta_cd_pass_direction,
+    theta_cd_pass_direction_colored, trace_grad_dir, ColoredScratch, JointTerms,
 };
 use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::active::{
@@ -34,6 +35,7 @@ use crate::cggm::active::{
 use crate::cggm::linesearch::{joint_line_search, LineSearchOptions};
 use crate::cggm::objective::SmoothParts;
 use crate::cggm::{CggmModel, Objective};
+use crate::graph::coloring::ConflictSpace;
 use crate::linalg::sparse::SpRowMat;
 use crate::metrics::{IterRecord, SolveTrace};
 use crate::util::timer::{PhaseProfiler, Stopwatch};
@@ -67,6 +69,11 @@ pub fn solve(
     // Path-level strong-rule restriction (λ-path driver): screens and CD
     // work confined to the allowed coordinates.
     let screen = opts.screen.as_deref();
+
+    // Colored parallel CD (`--cd-threads > 1`): conflict-free classes from
+    // the context's churn-gated coloring caches, shared with alt_newton_cd.
+    let cd_par = opts.cd_parallelism();
+    let mut cd_scratch = ColoredScratch::default();
 
     let mut factor = obj.factor_lambda(&model.lambda, engine)?;
     let mut rt = ws.mat(q, n)?;
@@ -146,37 +153,90 @@ pub fn solve(
         let mut delta_t = SpRowMat::zeros(p, q);
         let mut w = ws.mat(q, q)?;
         let mut vtp = ws.mat(q, p)?;
-        prof.time("cd:joint", || {
-            for _ in 0..opts.inner_sweeps {
-                lambda_cd_pass(
+        prof.time("cd:joint", || -> Result<(), SolveError> {
+            if opts.colored_cd() {
+                let mut colorings = ctx.coloring_caches();
+                // Split the RefMut once so both caches' class slices can
+                // coexist (field-level borrows) without cloning either.
+                let caches = &mut *colorings;
+                let classes_l = caches.lambda.classes_for(
                     &active_l,
-                    syy,
-                    &sigma,
-                    &psi,
-                    &model.lambda,
-                    &mut delta_l,
-                    &mut w,
-                    opts.lam_l,
-                    Some(&JointTerms {
-                        gamma_t: &gamma_t,
-                        vtp: &vtp,
-                    }),
-                );
-                theta_cd_pass_direction(
+                    ConflictSpace::Symmetric(q),
+                    opts.recluster_churn,
+                    ctx.budget(),
+                )?;
+                let classes_t = caches.theta.classes_for(
                     &active_t,
-                    sxx,
-                    sxx_diag,
-                    sxy,
-                    &sigma,
-                    &gamma,
-                    &w,
-                    &model.theta,
-                    &mut delta_t,
-                    &mut vtp,
-                    opts.lam_t,
-                );
+                    ConflictSpace::Bipartite(p, q),
+                    opts.recluster_churn,
+                    ctx.budget(),
+                )?;
+                for _ in 0..opts.inner_sweeps {
+                    lambda_cd_pass_colored(
+                        classes_l,
+                        syy,
+                        &sigma,
+                        &psi,
+                        &model.lambda,
+                        &mut delta_l,
+                        &mut w,
+                        opts.lam_l,
+                        Some(&JointTerms {
+                            gamma_t: &gamma_t,
+                            vtp: &vtp,
+                        }),
+                        &cd_par,
+                        &mut cd_scratch,
+                    );
+                    theta_cd_pass_direction_colored(
+                        classes_t,
+                        sxx,
+                        sxx_diag,
+                        sxy,
+                        &sigma,
+                        &gamma,
+                        &w,
+                        &model.theta,
+                        &mut delta_t,
+                        &mut vtp,
+                        opts.lam_t,
+                        &cd_par,
+                        &mut cd_scratch,
+                    );
+                }
+            } else {
+                for _ in 0..opts.inner_sweeps {
+                    lambda_cd_pass(
+                        &active_l,
+                        syy,
+                        &sigma,
+                        &psi,
+                        &model.lambda,
+                        &mut delta_l,
+                        &mut w,
+                        opts.lam_l,
+                        Some(&JointTerms {
+                            gamma_t: &gamma_t,
+                            vtp: &vtp,
+                        }),
+                    );
+                    theta_cd_pass_direction(
+                        &active_t,
+                        sxx,
+                        sxx_diag,
+                        sxy,
+                        &sigma,
+                        &gamma,
+                        &w,
+                        &model.theta,
+                        &mut delta_t,
+                        &mut vtp,
+                        opts.lam_t,
+                    );
+                }
             }
-        });
+            Ok(())
+        })?;
 
         // ---- Armijo δ over the joint direction ----
         let mut lpd = model.lambda.clone();

@@ -42,6 +42,7 @@ use crate::linalg::chol_dense::DenseChol;
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpRowMat;
 use crate::metrics::{IterRecord, SolveTrace};
+use crate::util::threadpool::Parallelism;
 use crate::util::timer::{PhaseProfiler, Stopwatch};
 
 /// Smooth value + gradients at one iterate; the gradient buffers stay
@@ -54,12 +55,14 @@ struct SmoothEval<'w> {
 
 /// g, ∇_Λg, ∇_Θg at (Λ, Θ). `Ok(None)` means Λ ⊁ 0 (momentum overshot the
 /// PD cone); `Err` is a budget failure.
+#[allow(clippy::too_many_arguments)]
 fn eval_smooth<'w>(
     ws: &'w Workspace,
     data: &Dataset,
     syy: &Mat,
     sxy: &Mat,
     engine: &dyn GemmEngine,
+    par: &Parallelism,
     lam: &Mat,
     th: &Mat,
 ) -> Result<Option<SmoothEval<'w>>, SolveError> {
@@ -77,7 +80,7 @@ fn eval_smooth<'w>(
     let mut sigma = ws.mat(q, q)?;
     {
         let mut wtri = ws.mat(q, q)?;
-        chol.inverse_into_scratch(engine, &mut wtri, &mut sigma);
+        chol.inverse_into_scratch_par(engine, par, &mut wtri, &mut sigma);
     }
     // R̃ᵀ = Θᵀ·xt (q×n); sr = Σ·R̃ᵀ.
     let mut rtt = ws.mat(q, n)?;
@@ -135,6 +138,10 @@ fn screen_masks(set: &ScreenSet, p: usize, q: usize) -> (Vec<bool>, Vec<bool>) {
 /// only allowed coordinates take the gradient-prox step; the rest copy `y`
 /// unchanged — since frozen coordinates never move, their momentum point
 /// equals their (frozen) value, so copying `y` keeps them exactly fixed.
+/// Row-parallel under `par` (prox touches every coordinate — this is this
+/// solver's per-iteration coordinate hot loop, so it follows
+/// `SolveOptions::cd_threads`); rows are disjoint output chunks, so the
+/// result is thread-count-independent.
 #[allow(clippy::too_many_arguments)]
 fn prox_step(
     y_lam: &Mat,
@@ -144,6 +151,7 @@ fn prox_step(
     lam_l: f64,
     lam_t: f64,
     masks: Option<&(Vec<bool>, Vec<bool>)>,
+    par: &Parallelism,
     out_lam: &mut Mat,
     out_th: &mut Mat,
 ) {
@@ -151,29 +159,31 @@ fn prox_step(
         Some((ml, mt)) => (Some(ml.as_slice()), Some(mt.as_slice())),
         None => (None, None),
     };
-    for (k, (o, (yi, gi))) in out_lam
-        .data_mut()
-        .iter_mut()
-        .zip(y_lam.data().iter().zip(ev.grad_l.data()))
-        .enumerate()
-    {
-        *o = match ml {
-            Some(mask) if !mask[k] => *yi,
-            _ => soft_threshold(yi - eta * gi, eta * lam_l),
-        };
-    }
+    // Hoist plain data slices: the parallel closures must not capture the
+    // workspace-backed guards (the arena is single-owner, not Sync).
+    let q = y_lam.cols();
+    let (yl, gl) = (y_lam.data(), ev.grad_l.data());
+    par.parallel_chunks_mut(out_lam.data_mut(), q, |i, orow| {
+        let base = i * q;
+        for (k, o) in orow.iter_mut().enumerate() {
+            *o = match ml {
+                Some(mask) if !mask[base + k] => yl[base + k],
+                _ => soft_threshold(yl[base + k] - eta * gl[base + k], eta * lam_l),
+            };
+        }
+    });
     out_lam.symmetrize();
-    for (k, (o, (yi, gi))) in out_th
-        .data_mut()
-        .iter_mut()
-        .zip(y_th.data().iter().zip(ev.grad_t.data()))
-        .enumerate()
-    {
-        *o = match mt {
-            Some(mask) if !mask[k] => *yi,
-            _ => soft_threshold(yi - eta * gi, eta * lam_t),
-        };
-    }
+    let qt = y_th.cols();
+    let (yt, gt) = (y_th.data(), ev.grad_t.data());
+    par.parallel_chunks_mut(out_th.data_mut(), qt, |i, orow| {
+        let base = i * qt;
+        for (k, o) in orow.iter_mut().enumerate() {
+            *o = match mt {
+                Some(mask) if !mask[base + k] => yt[base + k],
+                _ => soft_threshold(yt[base + k] - eta * gt[base + k], eta * lam_t),
+            };
+        }
+    });
 }
 
 pub fn solve(
@@ -184,6 +194,8 @@ pub fn solve(
     let data = ctx.data();
     let engine = ctx.engine();
     let ws = ctx.workspace();
+    let par = ctx.par();
+    let cd_par = opts.cd_parallelism();
     let (p, q) = (data.p(), data.q());
     let prof = PhaseProfiler::new();
     let sw = Stopwatch::start();
@@ -240,7 +252,7 @@ pub fn solve(
     let mut eta = 1.0f64;
     // A non-PD initial Λ (possible with a caller-supplied warm start) is an
     // error, not a panic — same contract as the factorizing solvers.
-    let mut ev_x = match eval_smooth(ws, data, syy, sxy, engine, &x_lam, &x_th)? {
+    let mut ev_x = match eval_smooth(ws, data, syy, sxy, engine, par, &x_lam, &x_th)? {
         Some(e) => e,
         None => return Err(SolveError::Factor(FactorError::NotPd)),
     };
@@ -285,7 +297,7 @@ pub fn solve(
 
         // Momentum point (y already holds it; evaluate there).
         let ev_y = match prof.time("eval", || {
-            eval_smooth(ws, data, syy, sxy, engine, &y_lam, &y_th)
+            eval_smooth(ws, data, syy, sxy, engine, par, &y_lam, &y_th)
         })? {
             Some(e) => e,
             None => {
@@ -293,7 +305,7 @@ pub fn solve(
                 y_lam.copy_from(&x_lam);
                 y_th.copy_from(&x_th);
                 tk = 1.0;
-                eval_smooth(ws, data, syy, sxy, engine, &y_lam, &y_th)?.expect("x is PD")
+                eval_smooth(ws, data, syy, sxy, engine, par, &y_lam, &y_th)?.expect("x is PD")
             }
         };
         // Backtracking on η: g(x⁺) ≤ g(y) + <∇g(y), x⁺−y> + ‖x⁺−y‖²/(2η).
@@ -307,10 +319,13 @@ pub fn solve(
                 opts.lam_l,
                 opts.lam_t,
                 masks.as_ref(),
+                &cd_par,
                 &mut cand_lam,
                 &mut cand_th,
             );
-            if let Some(ev_c) = eval_smooth(ws, data, syy, sxy, engine, &cand_lam, &cand_th)? {
+            if let Some(ev_c) =
+                eval_smooth(ws, data, syy, sxy, engine, par, &cand_lam, &cand_th)?
+            {
                 let mut lin = 0.0;
                 let mut dist2 = 0.0;
                 for ((c, yv), g) in cand_lam

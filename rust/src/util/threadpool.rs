@@ -2,14 +2,151 @@
 //!
 //! Implements the paper's §Parallelization ("embarrassingly-parallelizable"
 //! column computations: multiple columns of Σ via CG, elements of S_xx rows,
-//! GEMM tiles). rayon is unavailable offline, so this provides the two
-//! primitives the solvers need: `parallel_for` over an index range with
-//! static chunking, and `parallel_chunks_mut` over disjoint output slices.
+//! GEMM tiles). rayon is unavailable offline, so this provides the
+//! primitives the solvers need: `parallel_for` over an index range,
+//! `parallel_chunks_mut` over disjoint output slices, `parallel_fill` as a
+//! deterministic parallel map, and `team` — a scoped worker group with a
+//! spin barrier for multi-phase work (the colored CD sweeps, which
+//! rendezvous hundreds of times per pass).
 //!
 //! The thread count is a runtime parameter (`Parallelism`), which is how the
 //! Fig. 3 speedup experiment sweeps 1..16 workers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Spin barrier for compute-bound team phases. `std::sync::Barrier` parks
+/// on a mutex/condvar (micro­seconds per rendezvous under contention); the
+/// colored CD sweeps synchronize twice per color class — hundreds of times
+/// per pass — so the ~100ns spin rendezvous is what keeps fine-grained
+/// Gauss–Seidel phases profitable. Spins briefly, then yields (teams may be
+/// oversubscribed in CI).
+struct SpinBarrier {
+    nt: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    fn new(nt: usize) -> SpinBarrier {
+        SpinBarrier {
+            nt,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+        }
+    }
+
+    fn wait(&self) {
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.nt {
+            // Last arriver resets the count, then opens the next generation;
+            // waiters only proceed after observing the generation bump, which
+            // orders the reset before any re-entry.
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                spins = spins.wrapping_add(1);
+                if spins < 1 << 10 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// Handle given to each member of a [`Parallelism::team`]: the member count
+/// and a barrier. Members partition shared work by their thread id and call
+/// [`Team::sync`] between phases; every member must reach every `sync`
+/// (classic barrier discipline).
+pub struct Team<'a> {
+    barrier: Option<&'a SpinBarrier>,
+    nt: usize,
+}
+
+impl Team<'_> {
+    pub fn threads(&self) -> usize {
+        self.nt
+    }
+
+    /// Rendezvous with the rest of the team. No-op for a team of one.
+    #[inline]
+    pub fn sync(&self) {
+        if let Some(b) = self.barrier {
+            b.wait();
+        }
+    }
+}
+
+/// Raw shared view of a mutable f64 buffer for [`Team`] phases. Barrier
+/// discipline (compute phases only read, apply phases write disjoint
+/// targets, a `sync` between them) is the caller's obligation — every
+/// accessor is `unsafe` and states its requirement.
+pub struct SharedSlice {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Sync for SharedSlice {}
+unsafe impl Send for SharedSlice {}
+
+impl SharedSlice {
+    pub fn new(s: &mut [f64]) -> SharedSlice {
+        SharedSlice {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+        }
+    }
+
+    /// SAFETY: caller guarantees no concurrent writes overlap this range.
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &[f64] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), len)
+    }
+
+    /// SAFETY: caller guarantees this range is written by exactly one
+    /// thread and read by none until the next barrier.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f64] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// SAFETY: slot `i` is written by exactly one thread this phase.
+    pub unsafe fn write(&self, i: usize, v: f64) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+/// Raw shared handle to a structure only one designated thread mutates
+/// (e.g. the colored CD passes' sparse direction), with read access for
+/// everyone between mutation phases.
+pub struct SharedMut<T> {
+    ptr: *mut T,
+}
+
+unsafe impl<T> Sync for SharedMut<T> {}
+unsafe impl<T> Send for SharedMut<T> {}
+
+impl<T> SharedMut<T> {
+    pub fn new(p: &mut T) -> SharedMut<T> {
+        SharedMut { ptr: p }
+    }
+
+    /// SAFETY: no `get_mut` borrow may be live concurrently.
+    pub unsafe fn get_ref(&self) -> &T {
+        &*self.ptr
+    }
+
+    /// SAFETY: designated-thread-only, with no concurrent `get_ref` borrows.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self) -> &mut T {
+        &mut *self.ptr
+    }
+}
 
 /// Degree of parallelism for a solver run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,6 +194,56 @@ impl Parallelism {
                         body(i);
                     }
                 });
+            }
+        });
+    }
+
+    /// Run `body(tid, &team)` on this handle's worker count as one scoped
+    /// team. Unlike [`Self::parallel_for`], which spawns per call, a team
+    /// spawns once and coordinates arbitrarily many phases through
+    /// [`Team::sync`] — the primitive behind the colored CD sweeps, whose
+    /// Gauss–Seidel class sequence needs hundreds of cheap barriers per
+    /// pass. Shared-state partitioning (disjoint index ranges per `tid`)
+    /// is the body's responsibility.
+    pub fn team<F>(&self, body: F)
+    where
+        F: Fn(usize, &Team) + Sync,
+    {
+        let nt = self.threads.max(1);
+        if nt == 1 {
+            body(0, &Team { barrier: None, nt: 1 });
+            return;
+        }
+        let barrier = SpinBarrier::new(nt);
+        std::thread::scope(|s| {
+            for tid in 0..nt {
+                let barrier = &barrier;
+                let body = &body;
+                s.spawn(move || {
+                    body(
+                        tid,
+                        &Team {
+                            barrier: Some(barrier),
+                            nt,
+                        },
+                    )
+                });
+            }
+        });
+    }
+
+    /// Fill `out[i] = f(i)` for every `i`, data-parallel with static
+    /// chunking — a deterministic parallel map: slots are disjoint, so the
+    /// result is identical for every thread count.
+    pub fn parallel_fill<T: Send, F>(&self, out: &mut [T], chunk: usize, f: F)
+    where
+        F: Fn(usize) -> T + Sync,
+    {
+        let chunk = chunk.max(1);
+        self.parallel_chunks_mut(out, chunk, |ci, slots| {
+            let base = ci * chunk;
+            for (k, slot) in slots.iter_mut().enumerate() {
+                *slot = f(base + k);
             }
         });
     }
@@ -146,5 +333,52 @@ mod tests {
         par.parallel_for(0, 8, |_| panic!("should not run"));
         let mut v: Vec<u8> = vec![];
         par.parallel_chunks_mut(&mut v, 4, |_, _| panic!("should not run"));
+        let mut w: Vec<f64> = vec![];
+        par.parallel_fill(&mut w, 4, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn team_barriers_order_phases() {
+        // Phase 1 writes disjoint slots; phase 2 (after sync) reads ALL
+        // slots — correct only if the barrier actually separates phases.
+        for threads in [1, 2, 4] {
+            let par = Parallelism::new(threads);
+            let n = 64;
+            let slots: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let sums: Vec<AtomicU64> = (0..threads).map(|_| AtomicU64::new(0)).collect();
+            par.team(|tid, team| {
+                let nt = team.threads();
+                for round in 1..=3u64 {
+                    for k in (tid..n).step_by(nt) {
+                        slots[k].store(k as u64 * round, Ordering::Relaxed);
+                    }
+                    team.sync();
+                    let s: u64 = slots.iter().map(|x| x.load(Ordering::Relaxed)).sum();
+                    sums[tid].fetch_add(s, Ordering::Relaxed);
+                    team.sync();
+                }
+            });
+            let base: u64 = (0..n as u64).sum();
+            let want = base * (1 + 2 + 3);
+            for (tid, s) in sums.iter().enumerate() {
+                assert_eq!(
+                    s.load(Ordering::Relaxed),
+                    want,
+                    "threads={threads} tid={tid}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fill_matches_serial_map() {
+        for threads in [1, 2, 4, 8] {
+            let par = Parallelism::new(threads);
+            let mut out = vec![0.0f64; 333];
+            par.parallel_fill(&mut out, 7, |i| (i as f64).sqrt());
+            for (i, x) in out.iter().enumerate() {
+                assert_eq!(*x, (i as f64).sqrt(), "threads={threads} i={i}");
+            }
+        }
     }
 }

@@ -18,6 +18,10 @@
 //!   resume, corrupted-tail recovery, 1e-8 objective equivalence;
 //! - [`cluster_persistence_tests`] — the block solver's partition cache:
 //!   re-clustering only on churn, forced-rebuild equivalence;
+//! - [`parallel_cd_tests`] — colored conflict-free CD sweeps
+//!   (`cd_threads`): serial-vs-colored 1e-6 objective equivalence,
+//!   bitwise thread-count determinism, coloring-cache reuse and budget
+//!   accounting;
 //! - [`cli_tests`] — config/dataset plumbing plus the compiled `cggm`
 //!   binary run as a subprocess;
 //! - [`oracle_tests`] — the cross-language PJRT oracle (skips when
@@ -52,6 +56,9 @@ mod checkpoint_tests;
 
 #[path = "integration/cluster_persistence_tests.rs"]
 mod cluster_persistence_tests;
+
+#[path = "integration/parallel_cd_tests.rs"]
+mod parallel_cd_tests;
 
 #[path = "integration/cli_tests.rs"]
 mod cli_tests;

@@ -40,6 +40,7 @@ fn cv_refit_beats_every_single_lambda_fit_on_heldout_nll() {
         seed: CV_SEED,
         fold_threads: 2,
         refit: true,
+        ..Default::default()
     };
     let res = cross_validate(SolverKind::AltNewtonCd, &train, &base, &popts, &cvo, &eng).unwrap();
     assert_eq!(res.points.len(), 6);
