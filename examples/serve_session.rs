@@ -1,0 +1,94 @@
+//! Serve-session walkthrough: one in-process [`ServeEngine`], one dataset,
+//! repeat fits — showing what the warm registry buys (zero statistic
+//! recomputation + model warm starts on every fit after the first) and
+//! what admission control refuses.
+//!
+//! ```bash
+//! cargo run --release --example serve_session -- [--p 200] [--n 120] [--jobs 4]
+//! ```
+//!
+//! The same session over the wire:
+//!
+//! ```bash
+//! printf '%s\n' \
+//!   '{"op":"load","id":1,"name":"d","workload":"chain","p":200,"q":200,"n":120}' \
+//!   '{"op":"fit","id":2,"dataset":"d","solver":"alt","lambda":0.4}' \
+//!   '{"op":"fit","id":3,"dataset":"d","solver":"alt","lambda":0.4}' \
+//!   '{"op":"stat","id":4}' | cggm serve --max-jobs 1
+//! ```
+
+use cggm::coordinator::RunConfig;
+use cggm::gemm::native::NativeGemm;
+use cggm::serve::{Request, ServeEngine};
+use cggm::util::cli::Args;
+use cggm::util::membudget::fmt_bytes;
+use std::sync::Arc;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]);
+    let p = args.get_usize("p", 200);
+    let q = args.get_usize("q", p);
+    let n = args.get_usize("n", 120);
+    let jobs = args.get_usize("jobs", 4);
+
+    let cfg = RunConfig {
+        serve_max_jobs: 1,
+        ..RunConfig::default()
+    };
+    let engine = ServeEngine::new(cfg, Arc::new(NativeGemm::new(args.get_usize("threads", 1))));
+
+    println!("== cggm serve session: chain p={p} q={q} n={n}, {jobs} repeat fits ==");
+    let load = engine.request(
+        Request::parse_line(&format!(
+            r#"{{"op":"load","id":1,"name":"d","workload":"chain","p":{p},"q":{q},"n":{n},"seed":1}}"#
+        ))
+        .unwrap(),
+    );
+    let lres = load.result().expect("load failed");
+    println!(
+        "load: warmed {} statistics, {} pinned, {:.2}s",
+        lres.get("stat_computes").unwrap().as_f64().unwrap(),
+        fmt_bytes(lres.get("pinned_bytes").unwrap().as_f64().unwrap() as usize),
+        lres.get("seconds").unwrap().as_f64().unwrap(),
+    );
+
+    println!(
+        "{:<6} {:>9} {:>12} {:>14} {:>13} {:>10}",
+        "fit", "time(s)", "warm_start", "stat_computes", "registry_hit", "f"
+    );
+    for k in 0..jobs {
+        let resp = engine.request(
+            Request::parse_line(&format!(
+                r#"{{"op":"fit","id":{},"dataset":"d","solver":"alt","lambda":0.4}}"#,
+                k + 2
+            ))
+            .unwrap(),
+        );
+        let r = resp.result().expect("fit failed");
+        println!(
+            "{:<6} {:>9.3} {:>12} {:>14} {:>13} {:>10.4}",
+            k + 1,
+            r.get("seconds").unwrap().as_f64().unwrap(),
+            r.get("warm_started").unwrap().as_bool().unwrap(),
+            r.get("stat_computes").unwrap().as_f64().unwrap(),
+            r.get("registry_hit").unwrap().as_bool().unwrap(),
+            r.get("summary").unwrap().get("f").unwrap().as_f64().unwrap(),
+        );
+    }
+
+    let stat = engine.request(Request::parse_line(r#"{"op":"stat","id":99}"#).unwrap());
+    let sres = stat.result().expect("stat failed");
+    let reg = sres.get("registry").unwrap();
+    let budget = sres.get("budget").unwrap();
+    println!(
+        "stat: registry hits={} misses={} evictions={}; budget live={} peak={}",
+        reg.get("hits").unwrap().as_f64().unwrap(),
+        reg.get("misses").unwrap().as_f64().unwrap(),
+        reg.get("evictions").unwrap().as_f64().unwrap(),
+        fmt_bytes(budget.get("live").unwrap().as_f64().unwrap() as usize),
+        fmt_bytes(budget.get("peak").unwrap().as_f64().unwrap() as usize),
+    );
+    engine.join();
+    println!("session closed; every fit after the first reused the warm context.");
+}

@@ -324,6 +324,268 @@ pub fn load(path: &Path) -> std::io::Result<CheckpointState> {
     })
 }
 
+// ------------------------------------------------------------ cv streaming
+
+/// Bump when the CV line format changes incompatibly.
+const CV_VERSION: f64 = 1.0;
+
+/// Streaming checkpoint for [`super::cv::cross_validate`]: one JSONL file
+/// shared by all (possibly parallel) folds.
+///
+/// ```text
+/// {"kind":"cv_header","version":1,"solver":"alt_newton_cd","p":10,"q":10,
+///  "n":90,"folds":3,"seed":24397,"grid":[[0.5,0.4], ...]}
+/// {"kind":"cv_point","fold":1,"k":0,"nll":12.25}
+/// {"kind":"cv_point","fold":0,"k":0,"nll":12.5}
+/// {"kind":"cv_fold","fold":1,"fallbacks":0}
+/// ...
+/// ```
+///
+/// Unlike the λ-path log, lines from different folds interleave (folds run
+/// on parallel threads), so records self-describe their (fold, k) slot and
+/// order carries no meaning. Resume granularity is the *fold*: a fold with
+/// a `cv_fold` done-marker is carried over verbatim; a partially scored
+/// fold is re-run from scratch (its stray `cv_point` lines are ignored).
+/// The header pins solver, shape, fold count, and the shuffle seed — the
+/// fold *assignment* must be byte-identical for carried scores to mean
+/// anything, so a mismatch refuses to resume, exactly like the path log.
+///
+/// Writes are serialized through an internal lock and flushed per line; an
+/// I/O failure mid-run disables the writer with a warning instead of
+/// failing the cross-validation (the checkpoint just ends early).
+pub struct CvCheckpointWriter {
+    file: std::sync::Mutex<std::fs::File>,
+    failed: std::sync::atomic::AtomicBool,
+}
+
+impl CvCheckpointWriter {
+    /// Start a fresh CV checkpoint (truncates any existing file).
+    #[allow(clippy::too_many_arguments)]
+    pub fn create(
+        path: &Path,
+        solver: &str,
+        p: usize,
+        q: usize,
+        n: usize,
+        folds: usize,
+        seed: u64,
+        grid: &[(f64, f64)],
+    ) -> std::io::Result<CvCheckpointWriter> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = std::fs::File::create(path)?;
+        let header = Json::obj(vec![
+            ("kind", Json::str("cv_header")),
+            ("version", Json::num(CV_VERSION)),
+            ("solver", Json::str(solver)),
+            ("p", Json::num(p as f64)),
+            ("q", Json::num(q as f64)),
+            ("n", Json::num(n as f64)),
+            ("folds", Json::num(folds as f64)),
+            ("seed", Json::num(seed as f64)),
+            (
+                "grid",
+                Json::arr(
+                    grid.iter()
+                        .map(|&(l, t)| Json::arr([Json::num(l), Json::num(t)])),
+                ),
+            ),
+        ]);
+        writeln!(file, "{}", header.to_string())?;
+        file.flush()?;
+        Ok(CvCheckpointWriter {
+            file: std::sync::Mutex::new(file),
+            failed: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
+    /// Reopen a validated CV checkpoint for appending, truncating any torn
+    /// trailing line first (same contract as [`CheckpointWriter::append_after`]).
+    pub fn append_after(path: &Path, valid_bytes: u64) -> std::io::Result<CvCheckpointWriter> {
+        use std::io::Seek;
+        let mut file = std::fs::OpenOptions::new().write(true).open(path)?;
+        file.set_len(valid_bytes)?;
+        file.seek(std::io::SeekFrom::End(0))?;
+        Ok(CvCheckpointWriter {
+            file: std::sync::Mutex::new(file),
+            failed: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
+    fn write_line(&self, line: Json) {
+        use std::sync::atomic::Ordering;
+        if self.failed.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut file = self.file.lock().unwrap();
+        let res = writeln!(file, "{}", line.to_string()).and_then(|_| file.flush());
+        if let Err(e) = res {
+            // A dead checkpoint must not kill the CV run — the log simply
+            // ends early and a resume re-runs the unrecorded folds.
+            self.failed.store(true, Ordering::Relaxed);
+            eprintln!("warning: cv checkpoint write failed: {e}");
+        }
+    }
+
+    /// Record one scored grid point of one fold.
+    pub fn record_point(&self, fold: usize, k: usize, nll: f64) {
+        self.write_line(Json::obj(vec![
+            ("kind", Json::str("cv_point")),
+            ("fold", Json::num(fold as f64)),
+            ("k", Json::num(k as f64)),
+            // JSON has no Inf/NaN: unscored/diverged points round-trip
+            // through null (see the loader).
+            ("nll", Json::num(nll)),
+        ]));
+    }
+
+    /// Mark a fold complete (every grid point it will ever score is on
+    /// disk); resumed runs carry such folds over verbatim.
+    pub fn record_fold_done(&self, fold: usize, fallbacks: usize) {
+        self.write_line(Json::obj(vec![
+            ("kind", Json::str("cv_fold")),
+            ("fold", Json::num(fold as f64)),
+            ("fallbacks", Json::num(fallbacks as f64)),
+        ]));
+    }
+}
+
+/// The valid prefix of a CV checkpoint file.
+pub struct CvCheckpointState {
+    pub solver: String,
+    pub p: usize,
+    pub q: usize,
+    pub n: usize,
+    pub folds: usize,
+    pub seed: u64,
+    pub grid: Vec<(f64, f64)>,
+    /// Per-fold, per-grid-point held-out NLL (NaN where unrecorded).
+    pub nll: Vec<Vec<f64>>,
+    /// Folds whose done-marker is on disk — the resume unit.
+    pub done: Vec<bool>,
+    /// Screening fallbacks of each completed fold.
+    pub fallbacks: Vec<usize>,
+    /// Byte length of the valid prefix (torn tails are truncated on
+    /// resume).
+    pub valid_bytes: u64,
+}
+
+impl CvCheckpointState {
+    /// Number of completed (carried-over) folds.
+    pub fn completed_folds(&self) -> usize {
+        self.done.iter().filter(|&&d| d).count()
+    }
+}
+
+/// Parse the valid prefix of a CV checkpoint. Errors only on unreadable
+/// files or a malformed *header*; a malformed line merely ends the prefix.
+pub fn load_cv(path: &Path) -> std::io::Result<CvCheckpointState> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let file = std::fs::File::open(path)?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut line = String::new();
+    let n_read = reader.read_line(&mut line)?;
+    if n_read == 0 || !line.ends_with('\n') {
+        return Err(bad("missing cv checkpoint header"));
+    }
+    let header = Json::parse(line.trim_end()).map_err(|e| bad(&format!("bad header: {e}")))?;
+    if header.get("kind").and_then(|v| v.as_str()) != Some("cv_header")
+        || header.get("version").and_then(|v| v.as_f64()) != Some(CV_VERSION)
+    {
+        return Err(bad("not a cggm cv checkpoint (kind/version mismatch)"));
+    }
+    let field = |key: &str| -> std::io::Result<usize> {
+        header
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad(&format!("header missing {key}")))
+    };
+    let solver = header
+        .get("solver")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| bad("header missing solver"))?
+        .to_string();
+    let (p, q, n) = (field("p")?, field("q")?, field("n")?);
+    let folds = field("folds")?.max(1);
+    let seed = field("seed")? as u64;
+    let mut grid = Vec::new();
+    for pair in header
+        .get("grid")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| bad("header missing grid"))?
+    {
+        match pair.as_arr() {
+            Some([l, t]) => match (l.as_f64(), t.as_f64()) {
+                (Some(l), Some(t)) => grid.push((l, t)),
+                _ => return Err(bad("bad grid pair")),
+            },
+            _ => return Err(bad("bad grid pair")),
+        }
+    }
+    let mut consumed = n_read as u64;
+    let mut nll = vec![vec![f64::NAN; grid.len()]; folds];
+    let mut done = vec![false; folds];
+    let mut fallbacks = vec![0usize; folds];
+    loop {
+        line.clear();
+        let n_read = match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if !line.ends_with('\n') {
+            break; // torn final line
+        }
+        let Ok(parsed) = Json::parse(line.trim_end()) else {
+            break;
+        };
+        let fold = parsed.get("fold").and_then(|v| v.as_usize());
+        match (parsed.get("kind").and_then(|v| v.as_str()), fold) {
+            (Some("cv_point"), Some(f)) if f < folds => {
+                let (Some(k), Some(x)) = (
+                    parsed.get("k").and_then(|v| v.as_usize()),
+                    // null = the writer's Inf/NaN (heldout_nll diverged).
+                    parsed.get("nll").map(|v| match v {
+                        Json::Null => f64::INFINITY,
+                        other => other.as_f64().unwrap_or(f64::NAN),
+                    }),
+                ) else {
+                    break;
+                };
+                if k >= grid.len() {
+                    break;
+                }
+                nll[f][k] = x;
+            }
+            (Some("cv_fold"), Some(f)) if f < folds => {
+                done[f] = true;
+                fallbacks[f] = parsed
+                    .get("fallbacks")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0);
+            }
+            _ => break,
+        }
+        consumed += n_read as u64;
+    }
+    Ok(CvCheckpointState {
+        solver,
+        p,
+        q,
+        n,
+        folds,
+        seed,
+        grid,
+        nll,
+        done,
+        fallbacks,
+        valid_bytes: consumed,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,6 +665,65 @@ mod tests {
         drop(w);
         let state = load(&path).unwrap();
         assert_eq!(state.points.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cv_checkpoint_roundtrip_interleaved_and_torn() {
+        let path = std::env::temp_dir().join("cggm_cv_ckpt_unit.jsonl");
+        let grid = vec![(0.5, 0.5), (0.25, 0.25)];
+        let w = CvCheckpointWriter::create(&path, "alt_newton_cd", 4, 3, 30, 3, 99, &grid)
+            .unwrap();
+        // Folds interleave arbitrarily; fold 1 completes, fold 0 is partial,
+        // fold 2 never starts. One diverged point round-trips through null.
+        w.record_point(1, 0, 2.5);
+        w.record_point(0, 0, 3.5);
+        w.record_point(1, 1, f64::INFINITY);
+        w.record_fold_done(1, 2);
+        drop(w);
+        let state = load_cv(&path).unwrap();
+        assert_eq!(state.solver, "alt_newton_cd");
+        assert_eq!((state.p, state.q, state.n), (4, 3, 30));
+        assert_eq!((state.folds, state.seed), (3, 99));
+        assert_eq!(state.grid, grid);
+        assert_eq!(state.done, vec![false, true, false]);
+        assert_eq!(state.completed_folds(), 1);
+        assert_eq!(state.fallbacks[1], 2);
+        assert_eq!(state.nll[1][0], 2.5);
+        assert_eq!(state.nll[1][1], f64::INFINITY);
+        assert_eq!(state.nll[0][0], 3.5);
+        assert!(state.nll[0][1].is_nan());
+        assert!(state.nll[2][0].is_nan());
+        // Tear the done-marker line in half: fold 1 degrades to partial and
+        // valid_bytes stops before the tear.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let torn: String = lines[..4].iter().map(|l| format!("{l}\n")).collect::<String>()
+            + &lines[4][..lines[4].len() / 2];
+        std::fs::write(&path, &torn).unwrap();
+        let state = load_cv(&path).unwrap();
+        assert_eq!(state.done, vec![false, false, false]);
+        assert_eq!(state.nll[1][0], 2.5, "point lines before the tear survive");
+        // Appending after the valid prefix drops the torn tail and the
+        // re-recorded done marker is honored.
+        let w = CvCheckpointWriter::append_after(&path, state.valid_bytes).unwrap();
+        w.record_fold_done(1, 2);
+        drop(w);
+        let state = load_cv(&path).unwrap();
+        assert_eq!(state.done, vec![false, true, false]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cv_checkpoint_rejects_foreign_headers() {
+        let path = std::env::temp_dir().join("cggm_cv_ckpt_bad.jsonl");
+        // A λ-path checkpoint is not a CV checkpoint (and vice versa).
+        let grid = vec![(0.5, 0.5)];
+        let w = CheckpointWriter::create(&path, "alt_newton_cd", 3, 2, &grid).unwrap();
+        drop(w);
+        assert!(load_cv(&path).is_err());
+        std::fs::write(&path, "garbage\n").unwrap();
+        assert!(load_cv(&path).is_err());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -57,6 +57,17 @@ pub struct RunConfig {
     /// Block-solver clustering persistence: active-set churn above which the
     /// cached partition is rebuilt (negative = always rebuild).
     pub recluster_churn: f64,
+    /// `cggm serve` / `cggm batch`: bounded worker pool size — at most this
+    /// many admitted jobs run concurrently (`--max-jobs`).
+    pub serve_max_jobs: usize,
+    /// `cggm serve`: shared registry + job budget in bytes
+    /// (`--serve-budget 1GB`). Warm dataset statistics, cached warm-start
+    /// models, and every running job's working set draw on this one
+    /// `MemBudget`; `None` = unlimited.
+    pub serve_budget: Option<usize>,
+    /// `cggm serve`: serve JSONL over this unix socket instead of stdio
+    /// (`--socket /tmp/cggm.sock`).
+    pub serve_socket: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -89,6 +100,9 @@ impl Default for RunConfig {
             cv_one_se: false,
             checkpoint: None,
             recluster_churn: 0.2,
+            serve_max_jobs: 2,
+            serve_budget: None,
+            serve_socket: None,
         }
     }
 }
@@ -120,7 +134,10 @@ impl RunConfig {
         Ok(cfg)
     }
 
-    fn apply(&mut self, key: &str, val: &Json) -> Result<(), ConfigError> {
+    /// Apply one `key: value` pair (the serve engine layers per-job request
+    /// keys through this too, so jobs and config files share one schema and
+    /// one set of error messages).
+    pub(crate) fn apply(&mut self, key: &str, val: &Json) -> Result<(), ConfigError> {
         let bad = |msg: &str| ConfigError::BadValue {
             key: key.to_string(),
             msg: msg.to_string(),
@@ -195,6 +212,18 @@ impl RunConfig {
             "recluster_churn" => {
                 self.recluster_churn = val.as_f64().ok_or_else(|| bad("expected number"))?
             }
+            "serve_max_jobs" => {
+                self.serve_max_jobs = val.as_usize().ok_or_else(|| bad("expected int"))?
+            }
+            "serve_budget" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string like '1GB'"))?;
+                self.serve_budget =
+                    Some(parse_bytes(s).ok_or_else(|| bad("unparseable byte size"))?);
+            }
+            "serve_socket" => {
+                self.serve_socket =
+                    Some(val.as_str().ok_or_else(|| bad("expected string"))?.into())
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -251,6 +280,13 @@ impl RunConfig {
             self.checkpoint = Some(ck.to_string());
         }
         self.recluster_churn = args.get_f64("recluster-churn", self.recluster_churn);
+        self.serve_max_jobs = args.get_usize("max-jobs", self.serve_max_jobs);
+        if let Some(b) = args.opt("serve-budget") {
+            self.serve_budget = Some(parse_bytes(b).expect("--serve-budget like 1GB"));
+        }
+        if let Some(s) = args.opt("socket") {
+            self.serve_socket = Some(s.to_string());
+        }
     }
 
     /// λ-path options derived from this config (`cggm path` / `cggm cv`).
@@ -269,6 +305,8 @@ impl RunConfig {
     }
 
     /// Cross-validation options derived from this config (`cggm cv`).
+    /// Resume is a CLI-level decision (`--resume FILE`), layered on by
+    /// `cmd_cv`.
     pub fn cv_options(&self) -> crate::coordinator::CvOptions {
         crate::coordinator::CvOptions {
             folds: self.cv_folds,
@@ -276,6 +314,8 @@ impl RunConfig {
             fold_threads: self.cv_threads,
             refit: true,
             one_se: self.cv_one_se,
+            checkpoint: self.checkpoint.as_ref().map(std::path::PathBuf::from),
+            resume: false,
         }
     }
 
@@ -442,6 +482,56 @@ mod tests {
         assert_eq!(d.cd_threads, 1);
         assert!(!d.solve_options().colored_cd());
         assert!(!d.cv_options().one_se);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn serve_keys_layer_like_the_rest() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_serve.json");
+        std::fs::write(
+            &tmp,
+            r#"{"serve_max_jobs": 4, "serve_budget": "64MB",
+                "serve_socket": "/tmp/cggm.sock"}"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.serve_max_jobs, 4);
+        assert_eq!(cfg.serve_budget, Some(64 << 20));
+        assert_eq!(cfg.serve_socket.as_deref(), Some("/tmp/cggm.sock"));
+        let args = Args::parse(
+            &[
+                "--max-jobs".into(),
+                "1".into(),
+                "--serve-budget".into(),
+                "32MB".into(),
+                "--socket".into(),
+                "/tmp/other.sock".into(),
+            ],
+            &[],
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.serve_max_jobs, 1);
+        assert_eq!(cfg.serve_budget, Some(32 << 20));
+        assert_eq!(cfg.serve_socket.as_deref(), Some("/tmp/other.sock"));
+        // Defaults: 2 workers, unlimited budget, stdio transport.
+        let d = RunConfig::default();
+        assert_eq!(d.serve_max_jobs, 2);
+        assert_eq!(d.serve_budget, None);
+        assert_eq!(d.serve_socket, None);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn cv_checkpoint_key_flows_into_cv_options() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_cvckpt.json");
+        std::fs::write(&tmp, r#"{"checkpoint": "cv.jsonl", "cv_folds": 4}"#).unwrap();
+        let cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        let cvo = cfg.cv_options();
+        assert_eq!(
+            cvo.checkpoint.as_deref(),
+            Some(std::path::Path::new("cv.jsonl"))
+        );
+        assert!(!cvo.resume, "resume is a CLI-level decision");
         let _ = std::fs::remove_file(tmp);
     }
 

@@ -25,8 +25,14 @@
 //! 5. the λ with the lowest mean held-out NLL wins, and a final
 //!    warm-started path refit on the full data down to the winner produces
 //!    the returned model.
+//!
+//! Fold progress can stream to a JSONL checkpoint
+//! ([`CvOptions::checkpoint`], CLI `cggm cv --checkpoint FILE`): every
+//! scored (fold, λ) point and every completed fold is a flushed line, and
+//! `--resume FILE` carries completed folds over verbatim — bitwise, since
+//! the recorded scores round-trip exactly — refitting only the rest.
 
-use super::{fit_path_with, geometric_grid, lambda_max, PathOptions, PathResult};
+use super::{checkpoint, fit_path_with, geometric_grid, lambda_max, PathOptions, PathResult};
 use crate::cggm::objective::heldout_nll;
 use crate::cggm::{CggmModel, Dataset};
 use crate::gemm::GemmEngine;
@@ -56,6 +62,18 @@ pub struct CvOptions {
     /// parsimony when the NLL curve is flat near its minimum. `false`
     /// selects the argmin.
     pub one_se: bool,
+    /// Stream fold progress to this JSONL checkpoint
+    /// ([`checkpoint::CvCheckpointWriter`]): every scored (fold, λ) point
+    /// and every completed fold is a flushed line, so an interrupted CV run
+    /// loses at most its in-flight folds. `None` disables checkpointing.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Resume from `checkpoint`: completed folds (those with a done-marker
+    /// on disk) are carried over verbatim and only the remaining folds are
+    /// fitted; the header's grid governs. The header also pins solver,
+    /// problem shape, fold count, and the shuffle seed — any mismatch is an
+    /// error (carried scores from a different fold assignment would be
+    /// meaningless). A missing or header-corrupt file starts fresh.
+    pub resume: bool,
 }
 
 impl Default for CvOptions {
@@ -66,6 +84,8 @@ impl Default for CvOptions {
             fold_threads: 1,
             refit: true,
             one_se: false,
+            checkpoint: None,
+            resume: false,
         }
     }
 }
@@ -102,6 +122,8 @@ pub struct CvResult {
     pub refit: Option<PathResult>,
     /// KKT fallbacks summed over all fold paths (screening quality).
     pub screen_fallbacks: usize,
+    /// Folds carried over from a resumed checkpoint (0 for a fresh run).
+    pub resumed_folds: usize,
     pub total_seconds: f64,
 }
 
@@ -123,6 +145,7 @@ impl CvResult {
                 "screen_fallbacks",
                 Json::num(self.screen_fallbacks as f64),
             ),
+            ("resumed_folds", Json::num(self.resumed_folds as f64)),
             ("total_seconds", Json::num(self.total_seconds)),
             (
                 "points",
@@ -210,18 +233,80 @@ pub fn cross_validate(
     // so the full dataset's covariance statistics are computed at most once
     // (they are lazy: an explicit grid with refit off materializes nothing).
     let full_ctx = SolverContext::new(data, base, engine);
-    // One grid for every fold, from the full data's λ_max.
-    let grid: Vec<(f64, f64)> = match &popts.lambdas {
-        Some(g) => g.clone(),
-        None => {
+    // Resume: adopt the checkpoint's completed folds. Its header pins the
+    // run identity — a checkpoint written under a different solver, shape,
+    // fold count, or shuffle seed describes *different fold splits*, so
+    // carrying its scores would silently corrupt the selection; refuse.
+    let mut resumed: Option<checkpoint::CvCheckpointState> = None;
+    if cv.resume {
+        if let Some(ck) = &cv.checkpoint {
+            if let Ok(state) = checkpoint::load_cv(ck) {
+                if state.solver != kind.name()
+                    || (state.p, state.q, state.n) != (data.p(), data.q(), n)
+                    || state.folds != k
+                    || state.seed != cv.seed
+                {
+                    return Err(SolveError::Checkpoint(format!(
+                        "{} was written by {} for {}×{} (n={}, {} folds, seed {}); \
+                         this run is {} on {}×{} (n={}, {} folds, seed {}) — \
+                         refusing to resume",
+                        ck.display(),
+                        state.solver,
+                        state.p,
+                        state.q,
+                        state.n,
+                        state.folds,
+                        state.seed,
+                        kind.name(),
+                        data.p(),
+                        data.q(),
+                        n,
+                        k,
+                        cv.seed
+                    )));
+                }
+                resumed = Some(state);
+            }
+        }
+    }
+    // One grid for every fold: the resumed header's grid governs (the
+    // interrupted run's candidates must be continued exactly), otherwise
+    // from the full data's λ_max.
+    let grid: Vec<(f64, f64)> = match (&resumed, &popts.lambdas) {
+        (Some(state), _) => state.grid.clone(),
+        (None, Some(g)) => g.clone(),
+        (None, None) => {
             let (ml, mt) = lambda_max(&full_ctx, kind)?;
             geometric_grid(ml, mt, popts.points.max(1), popts.min_ratio)
         }
     };
-    // Folds pin the shared grid and drop any checkpoint wiring: K parallel
-    // folds streaming into one caller-supplied checkpoint file would corrupt
-    // it (and resuming a CV fold from a single-path checkpoint is
-    // meaningless).
+    let writer = match &cv.checkpoint {
+        Some(ck) => Some(match &resumed {
+            Some(state) => checkpoint::CvCheckpointWriter::append_after(ck, state.valid_bytes)
+                .map_err(|e| SolveError::Checkpoint(e.to_string()))?,
+            None => checkpoint::CvCheckpointWriter::create(
+                ck,
+                kind.name(),
+                data.p(),
+                data.q(),
+                n,
+                k,
+                cv.seed,
+                &grid,
+            )
+            .map_err(|e| SolveError::Checkpoint(e.to_string()))?,
+        }),
+        None => None,
+    };
+    let (carried_nll, carried_done, carried_fallbacks) = match resumed {
+        Some(state) => (state.nll, state.done, state.fallbacks),
+        None => (Vec::new(), Vec::new(), Vec::new()),
+    };
+    let resumed_folds = carried_done.iter().filter(|&&d| d).count();
+    // Folds pin the shared grid and drop any *path* checkpoint wiring: K
+    // parallel folds streaming into one caller-supplied path checkpoint
+    // file would corrupt it. Fold progress streams through the dedicated
+    // CV writer above instead, whose line format is interleave-safe.
     let fold_popts = PathOptions {
         lambdas: Some(grid.clone()),
         checkpoint: None,
@@ -232,9 +317,16 @@ pub fn cross_validate(
 
     // Fit + score the folds, in parallel across threads. Each fold owns its
     // data copies, context, and budget; slots are disjoint, so the
-    // chunk-parallel helper applies directly.
+    // chunk-parallel helper applies directly. Folds completed by a resumed
+    // checkpoint are carried over verbatim and cost nothing here.
     let mut slots: Vec<Option<Result<FoldScores, SolveError>>> = (0..k).map(|_| None).collect();
     let run_fold = |f: usize| -> Result<FoldScores, SolveError> {
+        if carried_done.get(f).copied().unwrap_or(false) {
+            return Ok(FoldScores {
+                nll: carried_nll[f].clone(),
+                fallbacks: carried_fallbacks[f],
+            });
+        }
         let (train, test) = split_fold(data, &assign, f);
         let mut fold_base = base.clone();
         // Same cap, independent accounting: K concurrent folds must not
@@ -243,8 +335,15 @@ pub fn cross_validate(
         let ctx = SolverContext::new(&train, &fold_base, engine);
         let mut nll = vec![f64::NAN; grid.len()];
         let path = fit_path_with(kind, &ctx, &fold_base, &fold_popts, |j, _, model| {
-            nll[j] = heldout_nll(model, &test, engine).unwrap_or(f64::INFINITY);
+            let x = heldout_nll(model, &test, engine).unwrap_or(f64::INFINITY);
+            nll[j] = x;
+            if let Some(w) = &writer {
+                w.record_point(f, j, x);
+            }
         })?;
+        if let Some(w) = &writer {
+            w.record_fold_done(f, path.screen_fallbacks);
+        }
         Ok(FoldScores {
             nll,
             fallbacks: path.screen_fallbacks,
@@ -325,6 +424,7 @@ pub fn cross_validate(
         best_lambda,
         refit,
         screen_fallbacks,
+        resumed_folds,
         total_seconds: sw.seconds(),
     })
 }
@@ -526,6 +626,77 @@ mod tests {
         }
         let j = b.to_json().to_string();
         assert!(j.contains("\"selected\""));
+    }
+
+    #[test]
+    fn cv_checkpoint_resumes_completed_folds_bitwise() {
+        let prob = datagen::chain::generate(8, 8, 60, 11);
+        let eng = NativeGemm::new(1);
+        let base = SolveOptions {
+            max_iter: 50,
+            ..Default::default()
+        };
+        let popts = PathOptions {
+            points: 3,
+            min_ratio: 0.2,
+            ..Default::default()
+        };
+        let ck = std::env::temp_dir().join("cggm_cv_resume_unit.jsonl");
+        let _ = std::fs::remove_file(&ck);
+        let cvo = CvOptions {
+            folds: 3,
+            fold_threads: 1, // sequential folds → deterministic line order
+            refit: false,
+            checkpoint: Some(ck.clone()),
+            ..Default::default()
+        };
+        let full =
+            cross_validate(SolverKind::AltNewtonCd, &prob.data, &base, &popts, &cvo, &eng)
+                .unwrap();
+        assert_eq!(full.resumed_folds, 0);
+        let text = std::fs::read_to_string(&ck).unwrap();
+        // header + 3 folds × (3 points + 1 done marker)
+        assert_eq!(text.lines().count(), 1 + 3 * 4);
+        // "Interrupt" after fold 0 completed: keep header + its 4 lines.
+        let prefix: String = text.lines().take(5).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&ck, prefix).unwrap();
+        let resumed_opts = CvOptions {
+            resume: true,
+            ..cvo.clone()
+        };
+        let resumed = cross_validate(
+            SolverKind::AltNewtonCd,
+            &prob.data,
+            &base,
+            &popts,
+            &resumed_opts,
+            &eng,
+        )
+        .unwrap();
+        assert_eq!(resumed.resumed_folds, 1);
+        assert_eq!(resumed.best, full.best);
+        for (a, b) in full.points.iter().zip(&resumed.points) {
+            assert_eq!(a.fold_nll, b.fold_nll, "resume must be bitwise-equal");
+        }
+        // A checkpoint from a different fold assignment must be refused.
+        let mismatched = CvOptions {
+            seed: cvo.seed + 1,
+            resume: true,
+            ..cvo.clone()
+        };
+        let err = cross_validate(
+            SolverKind::AltNewtonCd,
+            &prob.data,
+            &base,
+            &popts,
+            &mismatched,
+            &eng,
+        );
+        assert!(
+            matches!(err, Err(SolveError::Checkpoint(_))),
+            "seed mismatch must refuse to resume"
+        );
+        let _ = std::fs::remove_file(&ck);
     }
 
     #[test]

@@ -749,6 +749,26 @@ pub fn save_dataset(data: &Dataset, path: &Path) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Read only the (p, q, n) header of a dataset saved by [`save_dataset`] —
+/// the serve engine's admission control sizes jobs from the shape without
+/// paying for the full read.
+pub fn peek_dataset_dims(path: &Path) -> std::io::Result<(usize, usize, usize)> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut header = [0u8; 8 + 24];
+    f.read_exact(&mut header)?;
+    if &header[..8] != b"CGGMDS01" {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic",
+        ));
+    }
+    let dim = |k: usize| {
+        u64::from_le_bytes(header[8 + 8 * k..16 + 8 * k].try_into().unwrap()) as usize
+    };
+    Ok((dim(0), dim(1), dim(2)))
+}
+
 /// Load a dataset saved by [`save_dataset`].
 pub fn load_dataset(path: &Path) -> std::io::Result<Dataset> {
     use std::io::Read;

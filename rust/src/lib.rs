@@ -30,5 +30,6 @@ pub mod graph;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod util;

@@ -6,6 +6,8 @@
 //! - `fit`   estimate a CGGM (solver/engine/budget configurable);
 //! - `path`  fit a warm-started λ regularization path (strong-rule screened);
 //! - `cv`    K-fold cross-validated λ selection + full-data refit;
+//! - `serve` long-lived JSONL job server with warm per-dataset contexts;
+//! - `batch` execute a manifest of serve jobs through the same engine;
 //! - `exp`   regenerate a paper table/figure (`--list` shows all);
 //! - `cal`   calibrate λ for a workload;
 //! - `info`  environment + artifact status.
@@ -16,7 +18,9 @@ use cggm::experiments;
 use cggm::gemm::GemmEngine;
 use cggm::metrics::f1_edges_sym;
 use cggm::runtime;
+use cggm::serve::{self, ServeEngine};
 use cggm::util::cli::Args;
+use cggm::util::membudget::fmt_bytes;
 use std::path::PathBuf;
 
 const BOOL_FLAGS: &[&str] = &[
@@ -43,6 +47,8 @@ fn main() {
         "fit" => cmd_fit(&args),
         "path" => cmd_path(&args),
         "cv" => cmd_cv(&args),
+        "serve" => cmd_serve(&args),
+        "batch" => cmd_batch(&args),
         "exp" => cmd_exp(&args),
         "cal" => cmd_cal(&args),
         "info" => cmd_info(&args),
@@ -84,10 +90,21 @@ COMMANDS
          warm-restarts an interrupted sweep from its last valid point)
   cv    [--config FILE] [--workload ...|--data FILE] --solver ... --folds K
         [--cv-threads T] [--path-points N] [--path-min-ratio R]
-        [--screen full|strong] [--one-se] [--seed S] ...
+        [--screen full|strong] [--one-se] [--seed S]
+        [--checkpoint FILE | --resume FILE] ...
         (K-fold CV over the λ path: per-fold contexts, folds in parallel,
          held-out NLL scoring, winning λ refit on the full data; --one-se
-         selects the sparsest λ within one standard error of the best)
+         selects the sparsest λ within one standard error of the best;
+         --checkpoint streams fold progress to a JSONL file and --resume
+         carries completed folds over verbatim)
+  serve [--config FILE] [--max-jobs N] [--serve-budget 1GB]
+        [--socket PATH] [--threads T] [--cd-threads T] ...
+        (long-lived JSONL job server: one request object per line on stdio
+         — or PATH with --socket — against named warm datasets; ops: load,
+         fit, path, cv, stat, evict, shutdown; see docs/SERVING.md)
+  batch FILE [--out-file FILE] [--max-jobs N] [--serve-budget 1GB] ...
+        (execute a JSON manifest of serve jobs through the same engine;
+         responses printed as JSONL, ordered by job id)
   exp   <id>|all [--list] [--scale F] [--sizes a,b,c] [--lambda X] ...
   cal   --workload ... --p N --q N --n N
   info
@@ -302,7 +319,11 @@ fn cmd_cv(args: &Args) -> i32 {
     };
     let opts = cfg.solve_options();
     let popts = cfg.path_options(!args.flag("cold"));
-    let cvo = cfg.cv_options();
+    let mut cvo = cfg.cv_options();
+    if let Some(ck) = args.opt("resume") {
+        cvo.checkpoint = Some(PathBuf::from(ck));
+        cvo.resume = true;
+    }
     eprintln!(
         "cv: {} (engine={}, p={}, q={}, n={}, {} folds × {} points, \
          screen={}, {} fold threads)",
@@ -320,6 +341,12 @@ fn cmd_cv(args: &Args) -> i32 {
     {
         Ok(res) => {
             println!("{}", res.to_json().to_string_pretty());
+            if res.resumed_folds > 0 {
+                eprintln!(
+                    "resumed from checkpoint: {} of {} folds carried over",
+                    res.resumed_folds, res.folds
+                );
+            }
             eprintln!(
                 "selected lambda=({:.4},{:.4}) at point {} of {}{} \
                  (mean held-out NLL {:.4})",
@@ -347,6 +374,105 @@ fn cmd_cv(args: &Args) -> i32 {
             eprintln!("cv failed: {e}");
             1
         }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let engine = make_engine(args);
+    let budget = cfg
+        .serve_budget
+        .map(fmt_bytes)
+        .unwrap_or_else(|| "unlimited".into());
+    eprintln!(
+        "cggm serve: {} worker(s), budget {}, engine {}, defaults solver={} \
+         threads={} cd_threads={}",
+        cfg.serve_max_jobs.max(1),
+        budget,
+        engine.name(),
+        cfg.solver.name(),
+        cfg.threads,
+        cfg.cd_threads,
+    );
+    let socket = cfg.serve_socket.clone();
+    let srv = ServeEngine::new(cfg, engine);
+    let result = match socket {
+        Some(path) => {
+            eprintln!("listening on unix socket {path} (one JSON request per line)");
+            serve_on_socket(&srv, &path)
+        }
+        None => {
+            eprintln!("serving on stdio (one JSON request per line; EOF or \
+                       {{\"op\":\"shutdown\"}} ends the session)");
+            let stdin = std::io::stdin();
+            let mut stdout = std::io::stdout();
+            serve::serve_connection(&srv, stdin.lock(), &mut stdout)
+        }
+    };
+    srv.join();
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve transport error: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(unix)]
+fn serve_on_socket(srv: &ServeEngine, path: &str) -> std::io::Result<()> {
+    serve::serve_unix(srv, std::path::Path::new(path))
+}
+
+#[cfg(not(unix))]
+fn serve_on_socket(_srv: &ServeEngine, _path: &str) -> std::io::Result<()> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "--socket requires unix domain sockets; use stdio mode",
+    ))
+}
+
+fn cmd_batch(args: &Args) -> i32 {
+    let Some(file) = args.positional.first() else {
+        eprintln!("usage: cggm batch FILE [--out-file FILE] (see docs/SERVING.md)");
+        return 2;
+    };
+    let manifest = match runtime::manifest::JobManifest::load(&PathBuf::from(file)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot read manifest {file}: {e}");
+            return 1;
+        }
+    };
+    let cfg = load_config(args);
+    let engine = make_engine(args);
+    eprintln!(
+        "cggm batch: {} job(s) from {file}, {} worker(s)",
+        manifest.jobs().len(),
+        cfg.serve_max_jobs.max(1),
+    );
+    let out = args.opt("out-file").map(PathBuf::from);
+    let srv = ServeEngine::new(cfg, engine);
+    let outcome = serve::run_batch(&srv, &manifest);
+    srv.join();
+    let jsonl = outcome.to_jsonl();
+    print!("{jsonl}");
+    if let Some(path) = out {
+        if let Err(e) = std::fs::write(&path, &jsonl) {
+            eprintln!("warning: cannot write {}: {e}", path.display());
+        } else {
+            eprintln!("-> {}", path.display());
+        }
+    }
+    if outcome.failures > 0 {
+        eprintln!(
+            "{} of {} job(s) failed",
+            outcome.failures,
+            outcome.responses.len()
+        );
+        1
+    } else {
+        0
     }
 }
 

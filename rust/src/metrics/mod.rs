@@ -118,6 +118,11 @@ pub struct SolveTrace {
     /// `SolveOptions::recluster_churn`, so a warm path point typically
     /// reports 0 — the λ-path persistence tests pin this.
     pub reclusterings: usize,
+    /// Whether this solve was seeded from a previous solution (λ-path warm
+    /// starts, the serve registry's cached models). Set centrally by
+    /// `solvers::solve_in_context`, so warm-vs-cold behavior is observable
+    /// from the trace JSON without a profiler.
+    pub warm_started: bool,
 }
 
 impl SolveTrace {
@@ -142,6 +147,7 @@ impl SolveTrace {
             ("coords_screened", Json::num(self.coords_screened as f64)),
             ("cd_updates", Json::num(self.cd_updates as f64)),
             ("reclusterings", Json::num(self.reclusterings as f64)),
+            ("warm_started", Json::Bool(self.warm_started)),
             (
                 "phases",
                 Json::arr(self.phases.iter().map(|(name, secs, calls)| {

@@ -1,4 +1,6 @@
-//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
+//! Manifest parsing: the AOT artifact manifest (`artifacts/manifest.json`,
+//! written by `python/compile/aot.py`) and the batch *job* manifest
+//! consumed by `cggm batch` ([`JobManifest`]).
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -106,6 +108,82 @@ impl Manifest {
     }
 }
 
+// ------------------------------------------------------------ job manifest
+
+/// A batch job manifest (`cggm batch FILE`): serve-protocol request
+/// objects, optionally layered over shared defaults.
+///
+/// Accepted shapes:
+///
+/// ```text
+/// [ {"op":"load", ...}, {"op":"fit", ...} ]
+///
+/// {"defaults": {"solver": "alt", "tol": 0.001},
+///  "jobs": [ {"op":"load", ...}, {"op":"fit", ...} ]}
+/// ```
+///
+/// Defaults merge *under* each job object (job keys win). Jobs without an
+/// `"id"` get their 1-based manifest position, so responses are
+/// correlatable and orderable even for terse manifests.
+#[derive(Clone, Debug, Default)]
+pub struct JobManifest {
+    jobs: Vec<Json>,
+}
+
+impl JobManifest {
+    pub fn load(path: &Path) -> Result<JobManifest, ManifestError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<JobManifest, ManifestError> {
+        let doc = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let (defaults, raw_jobs) = match &doc {
+            Json::Arr(items) => (None, items.as_slice()),
+            Json::Obj(_) => {
+                let jobs = doc
+                    .get("jobs")
+                    .and_then(|j| j.as_arr())
+                    .ok_or_else(|| ManifestError::Parse("missing 'jobs' array".into()))?;
+                (doc.get("defaults"), jobs)
+            }
+            _ => {
+                return Err(ManifestError::Parse(
+                    "manifest must be an array or an object with 'jobs'".into(),
+                ))
+            }
+        };
+        if let Some(d) = defaults {
+            if d.as_obj().is_none() {
+                return Err(ManifestError::Parse("'defaults' must be an object".into()));
+            }
+        }
+        let mut jobs = Vec::with_capacity(raw_jobs.len());
+        for (k, job) in raw_jobs.iter().enumerate() {
+            let obj = job.as_obj().ok_or_else(|| {
+                ManifestError::Parse(format!("job {} must be an object", k + 1))
+            })?;
+            let mut merged: BTreeMap<String, Json> = defaults
+                .and_then(|d| d.as_obj())
+                .cloned()
+                .unwrap_or_default();
+            for (key, val) in obj {
+                merged.insert(key.clone(), val.clone());
+            }
+            merged
+                .entry("id".to_string())
+                .or_insert(Json::num((k + 1) as f64));
+            jobs.push(Json::Obj(merged));
+        }
+        Ok(JobManifest { jobs })
+    }
+
+    /// The merged request objects, in manifest order.
+    pub fn jobs(&self) -> &[Json] {
+        &self.jobs
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +223,41 @@ mod tests {
     fn rejects_bad_docs() {
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn job_manifest_merges_defaults_and_assigns_ids() {
+        let m = JobManifest::parse(
+            r#"{"defaults": {"solver": "alt", "tol": 0.001},
+                "jobs": [
+                  {"op": "load", "name": "d", "workload": "chain",
+                   "p": 8, "q": 8, "n": 40},
+                  {"op": "fit", "dataset": "d", "solver": "prox", "id": 9}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.jobs().len(), 2);
+        let load = &m.jobs()[0];
+        assert_eq!(load.get("id").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(load.get("solver").and_then(|v| v.as_str()), Some("alt"));
+        let fit = &m.jobs()[1];
+        // Explicit values win over defaults; explicit ids are kept.
+        assert_eq!(fit.get("solver").and_then(|v| v.as_str()), Some("prox"));
+        assert_eq!(fit.get("tol").and_then(|v| v.as_f64()), Some(0.001));
+        assert_eq!(fit.get("id").and_then(|v| v.as_usize()), Some(9));
+        // A bare array works too.
+        let bare = JobManifest::parse(r#"[{"op": "stat"}]"#).unwrap();
+        assert_eq!(
+            bare.jobs()[0].get("id").and_then(|v| v.as_usize()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn job_manifest_rejects_malformed_docs() {
+        assert!(JobManifest::parse("3").is_err());
+        assert!(JobManifest::parse(r#"{"defaults": 1, "jobs": []}"#).is_err());
+        assert!(JobManifest::parse(r#"{"jobs": [42]}"#).is_err());
+        assert!(JobManifest::parse(r#"{"no_jobs": []}"#).is_err());
     }
 }

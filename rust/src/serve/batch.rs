@@ -1,0 +1,63 @@
+//! The batch manifest driver: execute a file of serve-protocol jobs
+//! through the same [`ServeEngine`] the daemon uses (`cggm batch FILE`).
+//!
+//! A manifest is either a bare JSON array of request objects or
+//! `{"defaults": {...}, "jobs": [...]}` — see
+//! [`crate::runtime::manifest::JobManifest`]. Offline sweeps and the
+//! long-lived daemon thus share one code path: admission control, the warm
+//! registry, per-dataset sequencing, and the worker pool behave
+//! identically, so a manifest's results are the daemon's results.
+
+use std::sync::mpsc;
+
+use super::engine::ServeEngine;
+use super::protocol::{Request, Response};
+use crate::runtime::manifest::JobManifest;
+
+/// Outcome of one manifest run: every response (ordered by request id,
+/// parse failures included) plus the failure count.
+pub struct BatchOutcome {
+    pub responses: Vec<Response>,
+    pub failures: usize,
+}
+
+impl BatchOutcome {
+    /// JSONL rendering, one response per line (the `cggm batch` output).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for resp in &self.responses {
+            out.push_str(&resp.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Run every job of a parsed manifest. Jobs are submitted in manifest
+/// order (FIFO — per-dataset sequencing holds), run with the engine's
+/// configured concurrency, and reported ordered by id.
+pub fn run_batch(engine: &ServeEngine, manifest: &JobManifest) -> BatchOutcome {
+    let (tx, rx) = mpsc::channel::<Response>();
+    let mut parse_failures = Vec::new();
+    for (k, job) in manifest.jobs().iter().enumerate() {
+        match Request::parse(job) {
+            Ok(req) => engine.submit(req, &tx),
+            Err(e) => parse_failures.push(Response::err(
+                (k + 1) as u64,
+                "parse",
+                super::protocol::ErrKind::Parse,
+                e,
+            )),
+        }
+    }
+    drop(tx);
+    // The channel closes when the last job's reply sender drops.
+    let mut responses: Vec<Response> = rx.into_iter().collect();
+    responses.extend(parse_failures);
+    responses.sort_by_key(|r| r.id);
+    let failures = responses.iter().filter(|r| !r.is_ok()).count();
+    BatchOutcome {
+        responses,
+        failures,
+    }
+}

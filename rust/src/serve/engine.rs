@@ -1,0 +1,912 @@
+//! The serve job engine: a bounded worker pool draining one FIFO queue of
+//! admission-controlled jobs against the warm [`Registry`].
+//!
+//! # Admission control
+//!
+//! Every queued job carries a submit-time **peak-bytes estimate** built
+//! from the same estimators the memwall suite pins:
+//! [`dense_workingset_bytes`] for the solver's iterate-and-cache set,
+//! [`dense_factor_bytes`] (×2: held factor + line-search trial) and
+//! [`dense_factor_scratch_bytes`] for the Λ Cholesky,
+//! [`NativeGemm::scratch_bytes_bound`] for engine-internal pack panels,
+//! plus any dense statistics the target dataset has not materialized yet.
+//! A job whose estimate can never fit — even with every other dataset
+//! evicted — is **rejected** at submit with a structured `budget` error.
+//! Everything else queues FIFO; a worker starts the head job only when
+//! `live + reserved + estimate ≤ limit` over the shared [`MemBudget`]
+//! (`reserved` = estimates of running jobs — conservative, since their
+//! transients are also in `live`). When nothing is running and the head
+//! still does not fit, idle LRU datasets are evicted to make room; if that
+//! cannot help, the head fails with `budget` and the session keeps serving.
+//!
+//! The estimates schedule; the budget *enforces* — with one carve-out.
+//! `fit` and `path` jobs register every allocation against the shared
+//! budget, so even an underestimated job cannot push the process past the
+//! cap: it fails fast with [`SolveError::Budget`] instead, mapping to the
+//! same structured `budget` error. `cv` jobs inherit
+//! [`cross_validate`](crate::coordinator::cross_validate)'s deliberate
+//! per-fold budgeting: each fold gets an *independent* budget with the
+//! shared limit (so concurrent folds cannot trip each other), and fold
+//! data copies are raw input outside any budget — meaning a cv job's true
+//! footprint can exceed the shared cap by up to its fold parallelism when
+//! the estimate is low. Admission compensates by reserving
+//! `cv_threads × (fold estimate + fold data)` for cv jobs; the hard
+//! per-byte guarantee holds for everything except fold-internal work.
+//!
+//! # Ordering
+//!
+//! Claiming is strict FIFO, and a job whose dataset has an earlier `load`
+//! still in flight waits for it — so a single-connection session behaves
+//! sequentially-consistently (`load d` → `fit d` works with any worker
+//! count), while jobs on unrelated datasets run concurrently up to
+//! `serve_max_jobs`. Jobs on the *same* dataset additionally serialize on
+//! the entry lock ([`WarmContext`] is single-threaded by design).
+//!
+//! Each worker installs the engine's persistent [`TeamPool`] for the
+//! duration of a job, so the colored-CD team phases of every job reuse one
+//! set of parked threads instead of spawning per pass.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use super::protocol::{ErrKind, JobKind, JobOp, LoadOp, LoadSource, Op, Request, Response};
+use super::registry::{Registry, RegistryError, WarmContext};
+use crate::cggm::factor::{dense_factor_bytes, dense_factor_scratch_bytes};
+use crate::cggm::Dataset;
+use crate::coordinator::{self, RunConfig, RunSummary};
+use crate::gemm::native::NativeGemm;
+use crate::gemm::GemmEngine;
+use crate::solvers::{dense_workingset_bytes, solve_in_context, SolveError, SolverKind};
+use crate::util::json::Json;
+use crate::util::membudget::{fmt_bytes, MemBudget};
+use crate::util::threadpool::TeamPool;
+use crate::util::timer::Stopwatch;
+
+/// Raw dataset bytes (feature-major X and Y).
+fn data_bytes(p: usize, q: usize, n: usize) -> usize {
+    8 * n * (p + q)
+}
+
+/// Bytes of all three dense statistics (`S_yy`, `S_xx`, `S_xy`).
+fn stats_bytes(p: usize, q: usize) -> usize {
+    8 * (q * q + p * p + p * q)
+}
+
+/// Estimated peak working-set bytes of one `fit` (or one λ-path point —
+/// the path driver reuses the same working set across points). `stats`
+/// adds the dense statistics a cold context would materialize during the
+/// job (0 once the registry entry is warm, or for the block solver, which
+/// never forms them).
+pub fn fit_estimate(kind: SolverKind, p: usize, q: usize, threads: usize) -> usize {
+    dense_workingset_bytes(kind, p, q)
+        + 2 * dense_factor_bytes(q)
+        + dense_factor_scratch_bytes(q)
+        + NativeGemm::scratch_bytes_bound(threads)
+}
+
+/// Estimated peak bytes of a `load`: the raw arrays plus (when eagerly
+/// warming) the statistics and the Gram products' engine scratch.
+pub fn load_estimate(p: usize, q: usize, n: usize, warm: bool, threads: usize) -> usize {
+    let warm_cost = if warm {
+        stats_bytes(p, q) + NativeGemm::scratch_bytes_bound(threads)
+    } else {
+        0
+    };
+    data_bytes(p, q, n) + warm_cost
+}
+
+/// Job-request keys that must not override the serving process's identity
+/// (problem shape belongs to `load`; budgets, transports, and engines are
+/// fixed at `cggm serve` startup).
+const FORBIDDEN_JOB_KEYS: &[&str] = &[
+    "workload",
+    "p",
+    "q",
+    "n",
+    "engine",
+    "tile",
+    "mem_budget",
+    "checkpoint",
+    "out_dir",
+    "serve_max_jobs",
+    "serve_budget",
+    "serve_socket",
+];
+
+/// Submit-time shape knowledge: populated when a `load` is accepted, so
+/// jobs queued right behind it can be sized before it finishes.
+#[derive(Clone, Copy)]
+struct Dims {
+    p: usize,
+    q: usize,
+    n: usize,
+    /// Whether the dense statistics are (or will be, once the pending load
+    /// completes) materialized.
+    warm: bool,
+}
+
+struct Queued {
+    req: Request,
+    est: usize,
+    reply: mpsc::Sender<Response>,
+}
+
+struct Sched {
+    queue: VecDeque<Queued>,
+    /// Estimates of currently running jobs.
+    reserved: usize,
+    running: usize,
+    /// Dataset names whose `load` is executing right now. Combined with
+    /// strict head-of-line claiming this gives per-dataset sequential
+    /// consistency: a job queued behind a load of its dataset cannot be
+    /// claimed until that load (claimed earlier, FIFO) has completed. A
+    /// second load of a running name also waits, then resolves as a cheap
+    /// idempotent hit.
+    active_loads: std::collections::HashSet<String>,
+    shutdown: bool,
+}
+
+struct Inner {
+    base: RunConfig,
+    gemm: Arc<dyn GemmEngine>,
+    budget: MemBudget,
+    registry: Mutex<Registry>,
+    sched: Mutex<Sched>,
+    work: Condvar,
+    pool: Option<Arc<TeamPool>>,
+    dims: Mutex<HashMap<String, Dims>>,
+    completed: AtomicUsize,
+    failed: AtomicUsize,
+    rejected: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// The long-lived serving engine; see the module docs. Construct once,
+/// [`Self::submit`] requests from any thread, [`Self::join`] at the end.
+pub struct ServeEngine {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServeEngine {
+    /// Build an engine from a run config (its `serve_*` keys size the
+    /// worker pool and shared budget; the rest is the per-job defaults that
+    /// request keys layer over).
+    pub fn new(mut base: RunConfig, gemm: Arc<dyn GemmEngine>) -> ServeEngine {
+        // Serve jobs must never share one path-checkpoint file; the CLI
+        // `--checkpoint` flag belongs to `cggm path`/`cggm cv`, not here.
+        base.checkpoint = None;
+        let budget = base
+            .serve_budget
+            .map(MemBudget::new)
+            .unwrap_or_else(MemBudget::unlimited);
+        let team_threads = base.threads.max(base.cd_threads);
+        let pool = (team_threads > 1).then(|| Arc::new(TeamPool::new(team_threads)));
+        let workers = base.serve_max_jobs.max(1);
+        let inner = Arc::new(Inner {
+            base,
+            gemm,
+            budget: budget.clone(),
+            registry: Mutex::new(Registry::new(budget)),
+            sched: Mutex::new(Sched {
+                queue: VecDeque::new(),
+                reserved: 0,
+                running: 0,
+                active_loads: std::collections::HashSet::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            pool,
+            dims: Mutex::new(HashMap::new()),
+            completed: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || worker_loop(inner))
+            })
+            .collect();
+        ServeEngine {
+            inner,
+            workers: handles,
+        }
+    }
+
+    /// The shared registry/job budget (tests pin `peak() ≤ limit`).
+    pub fn budget(&self) -> &MemBudget {
+        &self.inner.budget
+    }
+
+    /// Number of admitted jobs that may run concurrently.
+    pub fn max_jobs(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Submit one request; its response is sent to `reply` when done.
+    /// Control decisions (parse/shape validation, can-never-fit rejection,
+    /// shutdown) respond immediately; everything else queues FIFO.
+    pub fn submit(&self, req: Request, reply: &mpsc::Sender<Response>) {
+        let op = req.op_name();
+        let id = req.id;
+        if self.is_shutdown() {
+            let _ = reply.send(Response::err(
+                id,
+                op,
+                ErrKind::Shutdown,
+                "engine is shutting down",
+            ));
+            return;
+        }
+        if let Op::Shutdown = req.op {
+            // Stop accepting immediately, but queue the ack like any other
+            // job so responses stay in FIFO order behind still-pending work
+            // (workers drain the whole queue, shutdown included, then exit).
+            self.shutdown();
+            let mut sched = self.inner.sched.lock().unwrap();
+            sched.queue.push_back(Queued {
+                req,
+                est: 0,
+                reply: reply.clone(),
+            });
+            self.inner.work.notify_all();
+            return;
+        }
+        match self.admit(&req) {
+            Ok(est) => {
+                let mut sched = self.inner.sched.lock().unwrap();
+                sched.queue.push_back(Queued {
+                    req,
+                    est,
+                    reply: reply.clone(),
+                });
+                self.inner.work.notify_all();
+            }
+            Err(resp) => {
+                self.inner.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(resp);
+            }
+        }
+    }
+
+    /// Submit and synchronously wait for the response (tests, examples,
+    /// and the batch driver's sequential mode).
+    pub fn request(&self, req: Request) -> Response {
+        let (tx, rx) = mpsc::channel();
+        self.submit(req, &tx);
+        drop(tx);
+        rx.recv().expect("engine always responds")
+    }
+
+    /// Submit-time admission: estimate the job's peak bytes and reject it
+    /// when it could never run, even on an empty registry.
+    fn admit(&self, req: &Request) -> Result<usize, Response> {
+        let (op, id) = (req.op_name(), req.id);
+        let limit = self.inner.budget.limit();
+        let threads = self.inner.base.threads.max(self.inner.base.cd_threads);
+        match &req.op {
+            Op::Stat { .. } | Op::Evict { .. } | Op::Shutdown => Ok(0),
+            Op::Load(l) => {
+                let (p, q, n) = match &l.source {
+                    LoadSource::Generate { p, q, n, .. } => (*p, *q, *n),
+                    LoadSource::Path(path) => {
+                        match coordinator::peek_dataset_dims(std::path::Path::new(path)) {
+                            Ok(dims) => dims,
+                            Err(e) => {
+                                return Err(Response::err(
+                                    id,
+                                    op,
+                                    ErrKind::Io,
+                                    format!("cannot read {path}: {e}"),
+                                ))
+                            }
+                        }
+                    }
+                };
+                let est = load_estimate(p, q, n, l.warm, threads);
+                if est > limit {
+                    return Err(Response::err(
+                        id,
+                        op,
+                        ErrKind::Budget,
+                        format!(
+                            "loading '{}' needs ~{} but the serve budget is {}",
+                            l.name,
+                            fmt_bytes(est),
+                            fmt_bytes(limit)
+                        ),
+                    ));
+                }
+                self.inner.dims.lock().unwrap().insert(
+                    l.name.clone(),
+                    Dims {
+                        p,
+                        q,
+                        n,
+                        warm: l.warm,
+                    },
+                );
+                Ok(est)
+            }
+            Op::Job(job) => {
+                let cfg = job_config(&self.inner.base, job)
+                    .map_err(|e| Response::err(id, op, ErrKind::Parse, e))?;
+                let dims = self.job_dims(&job.dataset).ok_or_else(|| {
+                    Response::err(
+                        id,
+                        op,
+                        ErrKind::NotFound,
+                        format!("dataset '{}' is not loaded", job.dataset),
+                    )
+                })?;
+                let est = self.job_estimate(job.kind, &cfg, dims);
+                // The bytes that must be resident for this job to run at
+                // all: its own dataset plus the estimate. If that exceeds
+                // the cap with everything else evicted, fail now.
+                let floor = data_bytes(dims.p, dims.q, dims.n).saturating_add(est);
+                if floor > limit {
+                    return Err(Response::err(
+                        id,
+                        op,
+                        ErrKind::Budget,
+                        format!(
+                            "{} on '{}' needs ~{} (with its dataset resident) but the \
+                             serve budget is {}",
+                            job.kind.name(),
+                            job.dataset,
+                            fmt_bytes(floor),
+                            fmt_bytes(limit)
+                        ),
+                    ));
+                }
+                Ok(est)
+            }
+        }
+    }
+
+    /// Shape knowledge for a job's dataset: the registry entry if resident,
+    /// else the submit-time record of a pending load.
+    fn job_dims(&self, dataset: &str) -> Option<Dims> {
+        if let Some(e) = self.inner.registry.lock().unwrap().peek(dataset) {
+            let warm = e.stat_computes >= 3;
+            return Some(Dims {
+                p: e.p,
+                q: e.q,
+                n: e.n,
+                warm,
+            });
+        }
+        self.inner.dims.lock().unwrap().get(dataset).copied()
+    }
+
+    fn job_estimate(&self, kind: JobKind, cfg: &RunConfig, dims: Dims) -> usize {
+        let threads = cfg.threads.max(cfg.cd_threads).max(1);
+        let solver = cfg.solver;
+        let per_fit = fit_estimate(solver, dims.p, dims.q, threads);
+        // A cold entry materializes its dense statistics during the job
+        // (except the block solver, whose memory story never forms them).
+        let cold_stats = if dims.warm || solver == SolverKind::AltNewtonBcd {
+            0
+        } else {
+            stats_bytes(dims.p, dims.q)
+        };
+        match kind {
+            JobKind::Fit | JobKind::Path => per_fit + cold_stats,
+            JobKind::Cv => {
+                // Folds run on `cv_threads` parallel contexts over their own
+                // (K-1)/K-sized data copies, plus the full-data refit.
+                let fold = per_fit + stats_bytes(dims.p, dims.q)
+                    + data_bytes(dims.p, dims.q, dims.n);
+                cfg.cv_threads.max(1) * fold + per_fit + cold_stats
+            }
+        }
+    }
+
+    /// Stop accepting work; queued jobs still drain.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::Relaxed);
+        let mut sched = self.inner.sched.lock().unwrap();
+        sched.shutdown = true;
+        self.inner.work.notify_all();
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn drain(&self) {
+        let mut sched = self.inner.sched.lock().unwrap();
+        while !(sched.queue.is_empty() && sched.running == 0) {
+            sched = self.inner.work.wait(sched).unwrap();
+        }
+    }
+
+    /// Shut down and join the workers (drains the queue first).
+    pub fn join(mut self) {
+        self.shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Layer job params over the serving base config through the config-file
+/// schema (same keys, same errors).
+fn job_config(base: &RunConfig, job: &JobOp) -> Result<RunConfig, String> {
+    let mut cfg = base.clone();
+    for (key, val) in &job.params {
+        if FORBIDDEN_JOB_KEYS.contains(&key.as_str()) {
+            return Err(format!("key '{key}' is not allowed in serve jobs"));
+        }
+        cfg.apply(key, val).map_err(|e| e.to_string())?;
+    }
+    Ok(cfg)
+}
+
+// ------------------------------------------------------------------ worker
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let job = claim(&inner);
+        let Some(job) = job else { return };
+        let _pool = inner.pool.as_ref().map(TeamPool::install);
+        // A panicking solver must not take the worker (and the whole
+        // session) down with it.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute(&inner, &job.req)
+        }));
+        let resp = outcome.unwrap_or_else(|_| {
+            Response::err(
+                job.req.id,
+                job.req.op_name(),
+                ErrKind::Solve,
+                "job panicked; see server logs",
+            )
+        });
+        if resp.is_ok() {
+            inner.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            inner.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = job.reply.send(resp);
+        if let Op::Load(l) = &job.req.op {
+            // The submit-time shape record exists only to size jobs queued
+            // behind an in-flight load; once the load completes (either
+            // way) the registry is the sole source of truth, so drop it —
+            // otherwise a failed or later-evicted dataset would keep
+            // admitting doomed jobs through the stale record.
+            inner.dims.lock().unwrap().remove(&l.name);
+        }
+        let mut sched = inner.sched.lock().unwrap();
+        if let Op::Load(l) = &job.req.op {
+            sched.active_loads.remove(&l.name);
+        }
+        sched.reserved -= job.est;
+        sched.running -= 1;
+        inner.work.notify_all();
+    }
+}
+
+/// Claim the next admissible job (head-of-line, FIFO). Returns `None` on
+/// shutdown with an empty queue.
+fn claim(inner: &Inner) -> Option<Queued> {
+    let mut sched = inner.sched.lock().unwrap();
+    loop {
+        if let Some(head) = sched.queue.front() {
+            // Sequencing: any head job touching a dataset whose load is
+            // executing waits for it (see `Sched::active_loads`).
+            let waiting_on_load = head
+                .req
+                .dataset_name()
+                .is_some_and(|d| sched.active_loads.contains(d));
+            let est = head.est;
+            let admissible = inner
+                .budget
+                .live()
+                .saturating_add(sched.reserved)
+                .saturating_add(est)
+                <= inner.budget.limit();
+            if !waiting_on_load {
+                if admissible {
+                    let job = sched.queue.pop_front().unwrap();
+                    if let Op::Load(l) = &job.req.op {
+                        sched.active_loads.insert(l.name.clone());
+                    }
+                    sched.reserved += job.est;
+                    sched.running += 1;
+                    return Some(job);
+                }
+                if sched.running == 0 {
+                    // Alone and still over: make room by evicting idle
+                    // datasets (keeping the job's own), or fail the job.
+                    let keep = head.req.dataset_name().map(str::to_string);
+                    let fits = inner
+                        .registry
+                        .lock()
+                        .unwrap()
+                        .ensure_room(est, keep.as_deref());
+                    if fits {
+                        continue;
+                    }
+                    let job = sched.queue.pop_front().unwrap();
+                    inner.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Response::err(
+                        job.req.id,
+                        job.req.op_name(),
+                        ErrKind::Budget,
+                        format!(
+                            "job needs ~{} but only {} of the {} serve budget can be \
+                             freed",
+                            fmt_bytes(est),
+                            fmt_bytes(inner.budget.available()),
+                            fmt_bytes(inner.budget.limit())
+                        ),
+                    ));
+                    inner.work.notify_all();
+                    continue;
+                }
+            }
+        } else if sched.shutdown {
+            return None;
+        }
+        sched = inner.work.wait(sched).unwrap();
+    }
+}
+
+// --------------------------------------------------------------- execution
+
+fn execute(inner: &Inner, req: &Request) -> Response {
+    let (id, op) = (req.id, req.op_name());
+    match &req.op {
+        Op::Load(load) => execute_load(inner, id, load),
+        Op::Job(job) => execute_job(inner, id, job),
+        Op::Stat { dataset } => execute_stat(inner, id, dataset.as_deref()),
+        Op::Evict { dataset } => match inner.registry.lock().unwrap().evict(dataset) {
+            Ok(freed) => Response::ok(
+                id,
+                op,
+                Json::obj(vec![
+                    ("dataset", Json::str(dataset.clone())),
+                    ("freed_bytes", Json::num(freed as f64)),
+                ]),
+            ),
+            Err(e) => Response::err(id, op, registry_err_kind(&e), e.to_string()),
+        },
+        // The flag was set at submit; this queued ack just keeps response
+        // order FIFO behind the work that was already pending.
+        Op::Shutdown => Response::ok(id, op, Json::obj(vec![])),
+    }
+}
+
+fn registry_err_kind(e: &RegistryError) -> ErrKind {
+    match e {
+        RegistryError::NotFound(_) => ErrKind::NotFound,
+        RegistryError::Busy(_) => ErrKind::Busy,
+        RegistryError::Budget(_) => ErrKind::Budget,
+    }
+}
+
+fn solve_err_kind(e: &SolveError) -> ErrKind {
+    match e {
+        SolveError::Budget(_) => ErrKind::Budget,
+        SolveError::Checkpoint(_) => ErrKind::Io,
+        _ => ErrKind::Solve,
+    }
+}
+
+fn execute_load(inner: &Inner, id: u64, load: &LoadOp) -> Response {
+    let sw = Stopwatch::start();
+    let op = "load";
+    // Idempotent: a resident name is a registry hit, optionally re-warmed.
+    {
+        let mut reg = inner.registry.lock().unwrap();
+        if reg.contains(&load.name) {
+            let warm = reg.lookup(&load.name).expect("checked resident");
+            drop(reg);
+            let guard = warm.lock().unwrap();
+            if load.warm {
+                if let Err(e) = guard.warm_stats() {
+                    return Response::err(id, op, ErrKind::Budget, e.to_string());
+                }
+            }
+            return Response::ok(
+                id,
+                op,
+                load_result(&load.name, &guard, true, sw.seconds()),
+            );
+        }
+    }
+    let data = match &load.source {
+        LoadSource::Path(path) => {
+            match coordinator::load_dataset(std::path::Path::new(path)) {
+                Ok(d) => d,
+                Err(e) => {
+                    return Response::err(
+                        id,
+                        op,
+                        ErrKind::Io,
+                        format!("cannot load {path}: {e}"),
+                    )
+                }
+            }
+        }
+        LoadSource::Generate {
+            workload,
+            p,
+            q,
+            n,
+            seed,
+        } => coordinator::generate_problem(*workload, *p, *q, *n, *seed).data,
+    };
+    let (p, q, n) = (data.p(), data.q(), data.n());
+    // Make room for the bytes the entry will pin, then build the warm
+    // context *outside* the registry lock (warming runs Gram products).
+    let pin = data_bytes(p, q, n) + if load.warm { stats_bytes(p, q) } else { 0 };
+    {
+        let mut reg = inner.registry.lock().unwrap();
+        if !reg.ensure_room(pin, None) {
+            return Response::err(
+                id,
+                op,
+                ErrKind::Budget,
+                format!(
+                    "'{}' needs {} resident but only {} of the {} serve budget can \
+                     be freed",
+                    load.name,
+                    fmt_bytes(pin),
+                    fmt_bytes(reg.budget().available()),
+                    fmt_bytes(reg.budget().limit())
+                ),
+            );
+        }
+    }
+    let mut opts = inner.base.solve_options();
+    opts.budget = inner.budget.clone();
+    let warm = match WarmContext::new(Arc::new(data), inner.gemm.clone(), &opts) {
+        Ok(w) => w,
+        Err(e) => return Response::err(id, op, ErrKind::Budget, e.to_string()),
+    };
+    if load.warm {
+        if let Err(e) = warm.warm_stats() {
+            return Response::err(id, op, ErrKind::Budget, e.to_string());
+        }
+    }
+    let result = load_result(&load.name, &warm, false, sw.seconds());
+    match inner.registry.lock().unwrap().insert(&load.name, warm) {
+        Ok(()) => Response::ok(id, op, result),
+        Err(e) => Response::err(id, op, registry_err_kind(&e), e.to_string()),
+    }
+}
+
+fn load_result(name: &str, warm: &WarmContext, already: bool, seconds: f64) -> Json {
+    let data = warm.data();
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("p", Json::num(data.p() as f64)),
+        ("q", Json::num(data.q() as f64)),
+        ("n", Json::num(data.n() as f64)),
+        ("already_loaded", Json::Bool(already)),
+        ("pinned_bytes", Json::num(warm.pinned_bytes() as f64)),
+        ("stat_computes", Json::num(warm.stat_computes() as f64)),
+        ("seconds", Json::num(seconds)),
+    ])
+}
+
+fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
+    let op = job.kind.name();
+    let cfg = match job_config(&inner.base, job) {
+        Ok(cfg) => cfg,
+        Err(e) => return Response::err(id, op, ErrKind::Parse, e),
+    };
+    let kind = cfg.solver;
+    let entry = match inner.registry.lock().unwrap().lookup(&job.dataset) {
+        Some(e) => e,
+        None => {
+            return Response::err(
+                id,
+                op,
+                ErrKind::NotFound,
+                format!("dataset '{}' is not loaded", job.dataset),
+            )
+        }
+    };
+    let mut opts = cfg.solve_options();
+    opts.budget = inner.budget.clone();
+    let sw = Stopwatch::start();
+    let outcome = match job.kind {
+        JobKind::Fit => {
+            let mut warm = entry.lock().unwrap();
+            let before = warm.stat_computes();
+            let seed_lambda = warm.cached_lambda(kind);
+            let seed = if job.warm { warm.cached_model(kind) } else { None };
+            let warm_reused = seed.is_some();
+            match solve_in_context(kind, warm.ctx(), &opts, seed) {
+                Ok(res) => {
+                    let stat_delta = warm.stat_computes() - before;
+                    let summary =
+                        RunSummary::from_result(kind, &res, None, inner.budget.peak());
+                    warm.store_model(
+                        kind,
+                        res.model,
+                        (opts.lam_l, opts.lam_t),
+                        &inner.budget,
+                    );
+                    let result = Json::obj(vec![
+                        ("summary", summary.to_json()),
+                        ("trace", res.trace.to_json()),
+                        ("registry_hit", Json::Bool(true)),
+                        ("warm_started", Json::Bool(res.trace.warm_started)),
+                        ("warm_model_reused", Json::Bool(warm_reused)),
+                        (
+                            "warm_model_lambda",
+                            seed_lambda
+                                .filter(|_| warm_reused)
+                                .map(|(l, _)| Json::num(l))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("stat_computes", Json::num(stat_delta as f64)),
+                        ("seconds", Json::num(sw.seconds())),
+                    ]);
+                    Ok((result, warm.pinned_bytes(), stat_delta, warm_reused))
+                }
+                Err(e) => Err(e),
+            }
+        }
+        JobKind::Path => {
+            let warm = entry.lock().unwrap();
+            let before = warm.stat_computes();
+            let popts = cfg.path_options(true);
+            match coordinator::fit_path_in_context(kind, warm.ctx(), &opts, &popts) {
+                Ok(path) => {
+                    let stat_delta = warm.stat_computes() - before;
+                    let result = Json::obj(vec![
+                        ("path", path.to_json()),
+                        ("registry_hit", Json::Bool(true)),
+                        ("stat_computes", Json::num(stat_delta as f64)),
+                        ("seconds", Json::num(sw.seconds())),
+                    ]);
+                    Ok((result, warm.pinned_bytes(), stat_delta, false))
+                }
+                Err(e) => Err(e),
+            }
+        }
+        JobKind::Cv => {
+            // CV splits its own fold datasets/contexts; it needs the shared
+            // data handle, not the warm context — so the entry lock is held
+            // only long enough to clone the `Arc`.
+            let data: Arc<Dataset> = entry.lock().unwrap().data();
+            let popts = cfg.path_options(true);
+            let mut cvo = cfg.cv_options();
+            // K parallel folds must not interleave into one checkpoint
+            // owned by some other client's run.
+            cvo.checkpoint = None;
+            cvo.resume = false;
+            match coordinator::cross_validate(
+                kind,
+                &data,
+                &opts,
+                &popts,
+                &cvo,
+                inner.gemm.as_ref(),
+            ) {
+                Ok(cv) => {
+                    let result = Json::obj(vec![
+                        ("cv", cv.to_json()),
+                        ("registry_hit", Json::Bool(true)),
+                        ("seconds", Json::num(sw.seconds())),
+                    ]);
+                    let pinned = entry.lock().unwrap().pinned_bytes();
+                    Ok((result, pinned, 0, false))
+                }
+                Err(e) => Err(e),
+            }
+        }
+    };
+    match outcome {
+        Ok((result, pinned, stat_delta, warm_reused)) => {
+            let mut reg = inner.registry.lock().unwrap();
+            reg.refresh(&job.dataset, |e| {
+                e.jobs += 1;
+                if warm_reused {
+                    e.warm_reuses += 1;
+                }
+                e.stat_computes += stat_delta;
+                e.pinned_bytes = pinned;
+            });
+            Response::ok(id, op, result)
+        }
+        Err(e) => Response::err(id, op, solve_err_kind(&e), e.to_string()),
+    }
+}
+
+fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
+    let reg = inner.registry.lock().unwrap();
+    if let Some(name) = dataset {
+        if !reg.contains(name) {
+            return Response::err(
+                id,
+                "stat",
+                ErrKind::NotFound,
+                format!("dataset '{name}' is not loaded"),
+            );
+        }
+    }
+    let datasets: Vec<Json> = reg
+        .entries()
+        .filter(|(name, _)| dataset.map(|d| d == name.as_str()).unwrap_or(true))
+        .map(|(name, e)| {
+            Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("p", Json::num(e.p as f64)),
+                ("q", Json::num(e.q as f64)),
+                ("n", Json::num(e.n as f64)),
+                ("pinned_bytes", Json::num(e.pinned_bytes as f64)),
+                ("stat_computes", Json::num(e.stat_computes as f64)),
+                ("jobs", Json::num(e.jobs as f64)),
+                ("warm_reuses", Json::num(e.warm_reuses as f64)),
+                ("last_used", Json::num(e.last_used as f64)),
+            ])
+        })
+        .collect();
+    let registry = Json::obj(vec![
+        ("hits", Json::num(reg.hits as f64)),
+        ("misses", Json::num(reg.misses as f64)),
+        ("evictions", Json::num(reg.evictions as f64)),
+        ("pinned_bytes", Json::num(reg.pinned_bytes() as f64)),
+        ("datasets", Json::Arr(datasets)),
+    ]);
+    drop(reg);
+    let budget = &inner.budget;
+    let limit = if budget.limit() == usize::MAX {
+        Json::Null
+    } else {
+        Json::num(budget.limit() as f64)
+    };
+    let sched = inner.sched.lock().unwrap();
+    let jobs = Json::obj(vec![
+        ("queued", Json::num(sched.queue.len() as f64)),
+        ("running", Json::num(sched.running.saturating_sub(1) as f64)),
+        (
+            "completed",
+            Json::num(inner.completed.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "failed",
+            Json::num(inner.failed.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "rejected",
+            Json::num(inner.rejected.load(Ordering::Relaxed) as f64),
+        ),
+    ]);
+    drop(sched);
+    Response::ok(
+        id,
+        "stat",
+        Json::obj(vec![
+            (
+                "budget",
+                Json::obj(vec![
+                    ("limit", limit),
+                    ("live", Json::num(budget.live() as f64)),
+                    ("peak", Json::num(budget.peak() as f64)),
+                ]),
+            ),
+            ("jobs", jobs),
+            ("registry", registry),
+        ]),
+    )
+}

@@ -1,0 +1,107 @@
+//! `cggm serve` — the long-lived multi-dataset serving runtime.
+//!
+//! The paper's point is that one machine can solve million-dimensional
+//! CGGM problems; this subsystem is what lets one *process* keep doing so
+//! under repeat traffic. Historically every `cggm fit` paid the full
+//! dataset-read + Gram-statistics + coloring/clustering setup before the
+//! first Newton step; `serve` keeps that state alive between jobs:
+//!
+//! - [`registry`] — named, long-lived warm [`SolverContext`]s (raw data,
+//!   `S_yy`/`S_xx`/`S_xy`, clustering partitions, CD colorings, cached
+//!   warm-start models), LRU-evicted against one shared
+//!   [`MemBudget`](crate::util::membudget::MemBudget);
+//! - [`engine`] — a bounded worker pool draining a FIFO queue of
+//!   admission-controlled `fit` / `path` / `cv` / `load` / `evict` /
+//!   `stat` jobs, with submit-time peak-bytes estimates from the memwall
+//!   estimators and a persistent
+//!   [`TeamPool`](crate::util::threadpool::TeamPool) shared across jobs;
+//! - [`protocol`] — the JSONL request/response schema (job keys are config
+//!   keys);
+//! - [`batch`] — `cggm batch FILE`: a manifest of jobs through the same
+//!   engine, so offline sweeps and the daemon share one code path.
+//!
+//! Transport is stdio by default ([`serve_connection`] on
+//! stdin/stdout) or a unix socket (`--socket PATH`, [`serve_unix`]) —
+//! connections come and go, the engine and its warm registry persist.
+//!
+//! [`SolverContext`]: crate::solvers::SolverContext
+
+pub mod batch;
+pub mod engine;
+pub mod protocol;
+pub mod registry;
+
+pub use batch::{run_batch, BatchOutcome};
+pub use engine::ServeEngine;
+pub use protocol::{ErrKind, Op, Request, Response};
+pub use registry::{Registry, WarmContext};
+
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+
+/// Serve one JSONL connection: requests read line-by-line from `reader`
+/// (submitted in order), responses written as they complete by a writer
+/// thread. Returns when the client disconnects (EOF) or sends
+/// `{"op":"shutdown"}`, after draining every in-flight job — the engine
+/// itself stays alive (socket mode serves the next connection with the
+/// registry still warm).
+pub fn serve_connection<R: BufRead, W: Write + Send>(
+    engine: &ServeEngine,
+    reader: R,
+    writer: &mut W,
+) -> std::io::Result<()> {
+    let (tx, rx) = mpsc::channel::<Response>();
+    std::thread::scope(|scope| {
+        let writer_thread = scope.spawn(move || -> std::io::Result<()> {
+            for resp in rx {
+                writeln!(writer, "{}", resp.to_json().to_string())?;
+                writer.flush()?;
+            }
+            Ok(())
+        });
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Request::parse_line(&line) {
+                Ok(req) => {
+                    let is_shutdown = matches!(req.op, Op::Shutdown);
+                    engine.submit(req, &tx);
+                    if is_shutdown {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Response::err(0, "parse", ErrKind::Parse, e));
+                }
+            }
+        }
+        // Every queued job holds a reply sender clone; once the queue
+        // drains and this original drops, the writer's channel closes.
+        drop(tx);
+        engine.drain();
+        writer_thread.join().expect("writer thread panicked")
+    })
+}
+
+/// Serve JSONL connections on a unix socket, one client at a time, until a
+/// client sends `{"op":"shutdown"}`. The warm registry persists across
+/// connections — that is the whole point.
+#[cfg(unix)]
+pub fn serve_unix(engine: &ServeEngine, path: &std::path::Path) -> std::io::Result<()> {
+    use std::os::unix::net::UnixListener;
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)?;
+    for conn in listener.incoming() {
+        let stream = conn?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        serve_connection(engine, reader, &mut writer)?;
+        if engine.is_shutdown() {
+            break;
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(())
+}

@@ -1,0 +1,409 @@
+//! JSONL wire protocol of `cggm serve` / `cggm batch`.
+//!
+//! One JSON object per line, in both directions. Requests:
+//!
+//! ```text
+//! {"op":"load","id":1,"name":"expr","path":"expr.bin"}
+//! {"op":"load","id":2,"name":"syn","workload":"chain","p":200,"q":200,"n":100,"seed":7}
+//! {"op":"fit","id":3,"dataset":"syn","solver":"alt","lambda":0.4,"tol":0.001}
+//! {"op":"path","id":4,"dataset":"syn","solver":"alt","path_points":8}
+//! {"op":"cv","id":5,"dataset":"syn","cv_folds":5,"cv_threads":2}
+//! {"op":"stat","id":6}
+//! {"op":"evict","id":7,"dataset":"expr"}
+//! {"op":"shutdown","id":8}
+//! ```
+//!
+//! Job requests (`fit` / `path` / `cv`) carry solver parameters under the
+//! *same keys as config files* — the engine layers them onto its base
+//! [`crate::coordinator::RunConfig`] via the one shared schema, so an
+//! unknown or malformed key fails with the same message a bad config file
+//! would. `"warm": false` opts a job out of the registry's cached-model
+//! warm start.
+//!
+//! Responses echo the request `id` and `op`:
+//!
+//! ```text
+//! {"id":3,"op":"fit","ok":true,"result":{...}}
+//! {"id":9,"op":"fit","ok":false,"error":{"kind":"budget","message":"..."}}
+//! ```
+//!
+//! Error kinds are closed ([`ErrKind`]): `parse`, `not_found`, `budget`,
+//! `busy`, `io`, `solve`, `shutdown`. A failed job never takes the session
+//! down — the next line is served normally.
+
+use crate::datagen::Workload;
+use crate::util::json::Json;
+
+/// A parsed request line.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed in the response (0 if absent).
+    pub id: u64,
+    pub op: Op,
+}
+
+/// Request operations.
+#[derive(Clone, Debug)]
+pub enum Op {
+    Load(LoadOp),
+    Job(JobOp),
+    Stat { dataset: Option<String> },
+    Evict { dataset: String },
+    Shutdown,
+}
+
+/// Bring a dataset into the registry (idempotent: re-loading a resident
+/// name is a cheap hit).
+#[derive(Clone, Debug)]
+pub struct LoadOp {
+    pub name: String,
+    pub source: LoadSource,
+    /// Eagerly materialize the dense statistics (default `true`) so later
+    /// jobs start warm; `false` defers them to first use.
+    pub warm: bool,
+}
+
+/// Where a `load` gets its data.
+#[derive(Clone, Debug)]
+pub enum LoadSource {
+    /// A dataset file written by `cggm gen` / `coordinator::save_dataset`.
+    Path(String),
+    /// A synthetic workload, generated in-process.
+    Generate {
+        workload: Workload,
+        p: usize,
+        q: usize,
+        n: usize,
+        seed: u64,
+    },
+}
+
+/// The three solver job shapes, admission-controlled and queued.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Fit,
+    Path,
+    Cv,
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Fit => "fit",
+            JobKind::Path => "path",
+            JobKind::Cv => "cv",
+        }
+    }
+}
+
+/// A solver job against a registered dataset.
+#[derive(Clone, Debug)]
+pub struct JobOp {
+    pub kind: JobKind,
+    pub dataset: String,
+    /// Warm-start from the registry's cached model when one exists
+    /// (default `true`; `fit` only — paths warm internally).
+    pub warm: bool,
+    /// Remaining request keys, layered onto the engine's base config.
+    pub params: Vec<(String, Json)>,
+}
+
+impl Request {
+    /// The response `op` label for this request.
+    pub fn op_name(&self) -> &'static str {
+        match &self.op {
+            Op::Load(_) => "load",
+            Op::Job(j) => j.kind.name(),
+            Op::Stat { .. } => "stat",
+            Op::Evict { .. } => "evict",
+            Op::Shutdown => "shutdown",
+        }
+    }
+
+    /// The dataset a queued instance of this request will touch (admission
+    /// and sequencing key), if any.
+    pub fn dataset_name(&self) -> Option<&str> {
+        match &self.op {
+            Op::Load(l) => Some(&l.name),
+            Op::Job(j) => Some(&j.dataset),
+            Op::Evict { dataset } => Some(dataset),
+            Op::Stat { dataset } => dataset.as_deref(),
+            Op::Shutdown => None,
+        }
+    }
+
+    /// Parse one request line.
+    pub fn parse_line(line: &str) -> Result<Request, String> {
+        let doc = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+        Self::parse(&doc)
+    }
+
+    /// Parse a request object (batch manifests hand these over directly).
+    pub fn parse(doc: &Json) -> Result<Request, String> {
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| "request must be a JSON object".to_string())?;
+        let op = doc
+            .get("op")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "request missing string 'op'".to_string())?;
+        let id = doc.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+        let str_field = |key: &str| -> Result<String, String> {
+            doc.get(key)
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .ok_or_else(|| format!("'{op}' requires string '{key}'"))
+        };
+        let warm = doc.get("warm").and_then(|v| v.as_bool()).unwrap_or(true);
+        let parsed = match op {
+            "load" => {
+                let name = str_field("name")?;
+                let source = if doc.get("path").is_some() {
+                    LoadSource::Path(str_field("path")?)
+                } else {
+                    let dim = |key: &str| -> Result<usize, String> {
+                        doc.get(key)
+                            .and_then(|v| v.as_usize())
+                            .ok_or_else(|| format!("'load' requires int '{key}' (or 'path')"))
+                    };
+                    let w = str_field("workload")?;
+                    LoadSource::Generate {
+                        workload: Workload::parse(&w)
+                            .ok_or_else(|| format!("unknown workload '{w}'"))?,
+                        p: dim("p")?,
+                        q: dim("q")?,
+                        n: dim("n")?,
+                        seed: doc.get("seed").and_then(|v| v.as_usize()).unwrap_or(1) as u64,
+                    }
+                };
+                Op::Load(LoadOp { name, source, warm })
+            }
+            "fit" | "path" | "cv" => {
+                let kind = match op {
+                    "fit" => JobKind::Fit,
+                    "path" => JobKind::Path,
+                    _ => JobKind::Cv,
+                };
+                let dataset = str_field("dataset")?;
+                // Everything that is not addressing/control is a solver
+                // parameter for the engine's config layering.
+                let reserved = ["op", "id", "dataset", "warm"];
+                let params: Vec<(String, Json)> = obj
+                    .iter()
+                    .filter(|(k, _)| !reserved.contains(&k.as_str()))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect();
+                Op::Job(JobOp {
+                    kind,
+                    dataset,
+                    warm,
+                    params,
+                })
+            }
+            "stat" => Op::Stat {
+                dataset: doc
+                    .get("dataset")
+                    .and_then(|v| v.as_str())
+                    .map(String::from),
+            },
+            "evict" => Op::Evict {
+                dataset: str_field("dataset")?,
+            },
+            "shutdown" => Op::Shutdown,
+            other => return Err(format!("unknown op '{other}'")),
+        };
+        Ok(Request { id, op: parsed })
+    }
+}
+
+/// Closed error taxonomy; `kind` is machine-matchable, `message` is for
+/// humans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrKind {
+    /// Malformed request line or unknown/invalid job parameter.
+    Parse,
+    /// Dataset not resident in the registry.
+    NotFound,
+    /// The shared memory budget cannot (ever) hold this work.
+    Budget,
+    /// The dataset is held by a running job (evict/reload).
+    Busy,
+    /// Filesystem failure (dataset load).
+    Io,
+    /// The solver failed (line search, factorization, panic).
+    Solve,
+    /// The engine is shutting down; no further jobs are accepted.
+    Shutdown,
+}
+
+impl ErrKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrKind::Parse => "parse",
+            ErrKind::NotFound => "not_found",
+            ErrKind::Budget => "budget",
+            ErrKind::Busy => "busy",
+            ErrKind::Io => "io",
+            ErrKind::Solve => "solve",
+            ErrKind::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// A response line.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub op: String,
+    /// `Ok(result)` or `Err((kind, message))`.
+    pub outcome: Result<Json, (ErrKind, String)>,
+}
+
+impl Response {
+    pub fn ok(id: u64, op: &str, result: Json) -> Response {
+        Response {
+            id,
+            op: op.to_string(),
+            outcome: Ok(result),
+        }
+    }
+
+    pub fn err(id: u64, op: &str, kind: ErrKind, message: impl Into<String>) -> Response {
+        Response {
+            id,
+            op: op.to_string(),
+            outcome: Err((kind, message.into())),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.outcome.is_ok()
+    }
+
+    /// The result object (`None` for errors) — test/introspection helper.
+    pub fn result(&self) -> Option<&Json> {
+        self.outcome.as_ref().ok()
+    }
+
+    /// The error kind (`None` for successes).
+    pub fn err_kind(&self) -> Option<ErrKind> {
+        self.outcome.as_ref().err().map(|(k, _)| *k)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("op", Json::str(self.op.clone())),
+            ("ok", Json::Bool(self.outcome.is_ok())),
+        ];
+        match &self.outcome {
+            Ok(result) => fields.push(("result", result.clone())),
+            Err((kind, message)) => fields.push((
+                "error",
+                Json::obj(vec![
+                    ("kind", Json::str(kind.as_str())),
+                    ("message", Json::str(message.clone())),
+                ]),
+            )),
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_op() {
+        let r = Request::parse_line(
+            r#"{"op":"load","id":1,"name":"d","workload":"chain","p":8,"q":9,"n":10}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 1);
+        assert_eq!(r.op_name(), "load");
+        let Op::Load(l) = &r.op else { panic!() };
+        assert!(l.warm, "warm defaults on");
+        let LoadSource::Generate { p, q, n, seed, .. } = &l.source else {
+            panic!()
+        };
+        assert_eq!((*p, *q, *n, *seed), (8, 9, 10, 1));
+
+        let r = Request::parse_line(r#"{"op":"load","id":2,"name":"d","path":"x.bin"}"#).unwrap();
+        let Op::Load(l) = &r.op else { panic!() };
+        assert!(matches!(&l.source, LoadSource::Path(p) if p == "x.bin"));
+
+        let r = Request::parse_line(
+            r#"{"op":"fit","id":3,"dataset":"d","solver":"alt","lambda":0.4,"warm":false}"#,
+        )
+        .unwrap();
+        assert_eq!(r.dataset_name(), Some("d"));
+        let Op::Job(j) = &r.op else { panic!() };
+        assert_eq!(j.kind, JobKind::Fit);
+        assert!(!j.warm);
+        // Addressing keys are stripped; solver params pass through.
+        let keys: Vec<&str> = j.params.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["lambda", "solver"]);
+
+        for (line, want) in [
+            (r#"{"op":"path","dataset":"d"}"#, JobKind::Path),
+            (r#"{"op":"cv","dataset":"d","cv_folds":3}"#, JobKind::Cv),
+        ] {
+            let r = Request::parse_line(line).unwrap();
+            let Op::Job(j) = &r.op else { panic!() };
+            assert_eq!(j.kind, want);
+            assert_eq!(r.id, 0, "id defaults to 0");
+        }
+
+        assert!(matches!(
+            Request::parse_line(r#"{"op":"stat"}"#).unwrap().op,
+            Op::Stat { dataset: None }
+        ));
+        assert!(matches!(
+            Request::parse_line(r#"{"op":"evict","dataset":"d"}"#)
+                .unwrap()
+                .op,
+            Op::Evict { .. }
+        ));
+        assert!(matches!(
+            Request::parse_line(r#"{"op":"shutdown"}"#).unwrap().op,
+            Op::Shutdown
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for line in [
+            "not json",
+            "[1,2]",
+            r#"{"id":1}"#,
+            r#"{"op":"nope"}"#,
+            r#"{"op":"load","name":"d"}"#,
+            r#"{"op":"load","name":"d","workload":"wat","p":1,"q":1,"n":1}"#,
+            r#"{"op":"fit"}"#,
+            r#"{"op":"evict"}"#,
+        ] {
+            assert!(Request::parse_line(line).is_err(), "{line}");
+        }
+    }
+
+    #[test]
+    fn response_lines_roundtrip() {
+        let ok = Response::ok(7, "fit", Json::obj(vec![("f", Json::num(1.5))]));
+        let doc = Json::parse(&ok.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("id").and_then(|v| v.as_usize()), Some(7));
+        assert_eq!(doc.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            doc.get("result").and_then(|r| r.get("f")).and_then(|v| v.as_f64()),
+            Some(1.5)
+        );
+        let err = Response::err(8, "fit", ErrKind::Budget, "too big");
+        assert_eq!(err.err_kind(), Some(ErrKind::Budget));
+        let doc = Json::parse(&err.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(
+            doc.get("error").and_then(|e| e.get("kind")).and_then(|v| v.as_str()),
+            Some("budget")
+        );
+    }
+}

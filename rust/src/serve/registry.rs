@@ -1,0 +1,479 @@
+//! Named, long-lived warm solver contexts with budget-driven LRU eviction.
+//!
+//! A serving process answers many jobs against few datasets. The expensive
+//! per-dataset state — the raw arrays, the `S_yy`/`S_xx`/`S_xy` Gram
+//! statistics, the block solver's clustering partitions, the colored CD
+//! sweeps' conflict colorings, and the most recent fitted model per solver
+//! (the warm-start seed) — all lives in or next to a [`SolverContext`], so
+//! keeping *that* alive between jobs is what makes a repeat `fit` cost an
+//! optimization instead of an optimization plus a data pipeline.
+//!
+//! [`Registry`] owns those contexts by name. Every byte an entry pins —
+//! raw dataset, materialized statistics, cached models — registers against
+//! one shared [`MemBudget`] (the same budget running jobs draw their
+//! working sets from, so `peak()` covers the whole process and the cap is
+//! a real cap). When a load does not fit, idle least-recently-used entries
+//! are evicted until it does ([`Registry::ensure_room`]); an entry a job
+//! is still using is never evicted (liveness is the entry `Arc`'s strong
+//! count, read under the registry lock that all clones are created under).
+//!
+//! # Safety of [`WarmContext`]
+//!
+//! `SolverContext<'a>` borrows its dataset and engine; a registry entry
+//! must *own* them. `WarmContext` bundles the context with the `Arc`s it
+//! borrows from, erasing the borrow lifetime to `'static`. This is sound
+//! because (a) `Arc` heap addresses are stable and both `Arc`s live in the
+//! same struct as the context, (b) the context field is declared first so
+//! it drops before them, (c) nothing hands out `&mut Dataset`, and (d) the
+//! only context accessor re-shortens the erased lifetime to the borrow of
+//! `self` (`SolverContext` is covariant in its lifetime), so the `'static`
+//! can never leak to a caller.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cggm::{CggmModel, Dataset};
+use crate::gemm::GemmEngine;
+use crate::solvers::{SolveOptions, SolverContext, SolverKind};
+use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
+
+/// One dataset's warm state: the solver context plus the warm-start model
+/// cache. Jobs take the entry's mutex for the duration of a solve
+/// (`SolverContext` is single-threaded by design; two jobs on the *same*
+/// dataset serialize, jobs on different datasets run concurrently).
+pub struct WarmContext {
+    /// Declared first: drops before the `Arc`s it borrows from.
+    ctx: SolverContext<'static>,
+    /// Most recent fitted model per solver, budget-tracked.
+    models: HashMap<&'static str, CachedModel>,
+    /// Registration of the raw dataset bytes against the shared budget.
+    _data_track: Tracked,
+    data: Arc<Dataset>,
+    engine: Arc<dyn GemmEngine>,
+}
+
+struct CachedModel {
+    model: CggmModel,
+    lam: (f64, f64),
+    bytes: usize,
+    _track: Tracked,
+}
+
+impl WarmContext {
+    /// Build a warm context owning `data`. Fails (without allocating) when
+    /// the shared budget cannot hold the raw dataset bytes.
+    pub fn new(
+        data: Arc<Dataset>,
+        engine: Arc<dyn GemmEngine>,
+        opts: &SolveOptions,
+    ) -> Result<WarmContext, BudgetExceeded> {
+        let data_track = opts.budget.track(data.bytes())?;
+        // SAFETY: see the module docs — the referents live behind `Arc`s
+        // owned by this struct (stable addresses), `ctx` drops first, and
+        // `Self::ctx` re-shortens the lifetime on every access.
+        let data_ref: &'static Dataset = unsafe { &*Arc::as_ptr(&data) };
+        let engine_ref: &'static dyn GemmEngine = unsafe { &*Arc::as_ptr(&engine) };
+        let ctx = SolverContext::new(data_ref, opts, engine_ref);
+        Ok(WarmContext {
+            ctx,
+            models: HashMap::new(),
+            _data_track: data_track,
+            data,
+            engine,
+        })
+    }
+
+    /// The warm solver context, with the erased `'static` shortened back to
+    /// this borrow (covariance) so it cannot outlive the entry.
+    pub fn ctx<'s>(&'s self) -> &'s SolverContext<'s> {
+        &self.ctx
+    }
+
+    /// Shared handle to the raw dataset (CV jobs fold-split it without
+    /// holding the entry lock).
+    pub fn data(&self) -> Arc<Dataset> {
+        self.data.clone()
+    }
+
+    /// Shared handle to the GEMM engine.
+    pub fn engine(&self) -> Arc<dyn GemmEngine> {
+        self.engine.clone()
+    }
+
+    /// Eagerly materialize the dense statistics (`load`'s warm mode): every
+    /// later job on this entry starts with the Gram work already paid.
+    pub fn warm_stats(&self) -> Result<(), BudgetExceeded> {
+        self.ctx.syy()?;
+        self.ctx.sxy()?;
+        self.ctx.sxx()?;
+        Ok(())
+    }
+
+    /// Dense statistics materialized so far (the registry-hit observability
+    /// counter: a warm repeat job leaves this unchanged).
+    pub fn stat_computes(&self) -> usize {
+        self.ctx.stat_computes()
+    }
+
+    /// The warm-start seed for `kind`, if a model was cached.
+    pub fn cached_model(&self, kind: SolverKind) -> Option<&CggmModel> {
+        self.models.get(kind.name()).map(|c| &c.model)
+    }
+
+    /// The λ the cached model for `kind` was fitted at.
+    pub fn cached_lambda(&self, kind: SolverKind) -> Option<(f64, f64)> {
+        self.models.get(kind.name()).map(|c| c.lam)
+    }
+
+    /// Cache `model` as the warm-start seed for `kind`, replacing any
+    /// previous one. Returns `false` (and caches nothing) when the budget
+    /// cannot hold it — serving degrades to cold starts, never errors.
+    pub fn store_model(
+        &mut self,
+        kind: SolverKind,
+        model: CggmModel,
+        lam: (f64, f64),
+        budget: &MemBudget,
+    ) -> bool {
+        // Release the previous model's bytes before asking for the new
+        // one's, so replacement never double-counts.
+        self.models.remove(kind.name());
+        let bytes = model.bytes();
+        match budget.track(bytes) {
+            Ok(track) => {
+                self.models.insert(
+                    kind.name(),
+                    CachedModel {
+                        model,
+                        lam,
+                        bytes,
+                        _track: track,
+                    },
+                );
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Bytes this entry pins in the shared budget while idle: raw data,
+    /// materialized statistics, cached models.
+    pub fn pinned_bytes(&self) -> usize {
+        self.data.bytes()
+            + self.ctx.cached_stat_bytes()
+            + self.models.values().map(|c| c.bytes).sum::<usize>()
+    }
+}
+
+/// Registry errors, surfaced as structured serve responses.
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error("dataset '{0}' is not loaded")]
+    NotFound(String),
+    #[error("dataset '{0}' is in use by a running job")]
+    Busy(String),
+    #[error("registry budget cannot hold the dataset: {0}")]
+    Budget(#[from] BudgetExceeded),
+}
+
+/// Per-entry bookkeeping snapshot (counters updated after each job so
+/// `stat` never has to wait behind a running solve for the entry lock).
+pub struct Entry {
+    pub warm: Arc<Mutex<WarmContext>>,
+    pub p: usize,
+    pub q: usize,
+    pub n: usize,
+    /// Logical LRU clock value of the last lookup.
+    pub last_used: u64,
+    /// Jobs executed against this entry.
+    pub jobs: usize,
+    /// Jobs that were seeded from the cached model.
+    pub warm_reuses: usize,
+    /// Snapshot of the context's statistic-compute counter.
+    pub stat_computes: usize,
+    /// Snapshot of the bytes the entry pins.
+    pub pinned_bytes: usize,
+}
+
+/// Named warm contexts sharing one [`MemBudget`], LRU-evicted under
+/// pressure.
+pub struct Registry {
+    entries: HashMap<String, Entry>,
+    budget: MemBudget,
+    clock: u64,
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+}
+
+impl Registry {
+    pub fn new(budget: MemBudget) -> Registry {
+        Registry {
+            entries: HashMap::new(),
+            budget,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn budget(&self) -> &MemBudget {
+        &self.budget
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Iterate entries for `stat` reporting (no LRU effect).
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &Entry)> {
+        self.entries.iter()
+    }
+
+    /// Read an entry without touching LRU/hit accounting (admission
+    /// estimation).
+    pub fn peek(&self, name: &str) -> Option<&Entry> {
+        self.entries.get(name)
+    }
+
+    /// Look up an entry for a job: bumps the LRU clock and the hit/miss
+    /// counters, returns a clone of the entry handle (the caller locks it
+    /// outside the registry lock).
+    pub fn lookup(&mut self, name: &str) -> Option<Arc<Mutex<WarmContext>>> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(name) {
+            Some(e) => {
+                e.last_used = clock;
+                self.hits += 1;
+                Some(e.warm.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Update an entry's post-job counter snapshots.
+    pub fn refresh(&mut self, name: &str, f: impl FnOnce(&mut Entry)) {
+        if let Some(e) = self.entries.get_mut(name) {
+            f(e);
+        }
+    }
+
+    /// Register a freshly built warm context under `name`. The caller
+    /// builds the (possibly expensive) context *outside* the registry lock;
+    /// this just installs it. Re-loading an existing name is rejected as
+    /// [`RegistryError::Busy`]-free idempotence at the engine layer — here
+    /// it replaces only if idle, so a stale entry cannot shadow new data.
+    pub fn insert(&mut self, name: &str, warm: WarmContext) -> Result<(), RegistryError> {
+        if let Some(e) = self.entries.get(name) {
+            if Arc::strong_count(&e.warm) > 1 {
+                return Err(RegistryError::Busy(name.to_string()));
+            }
+            self.evictions += 1;
+        }
+        self.clock += 1;
+        let data = warm.data();
+        let entry = Entry {
+            p: data.p(),
+            q: data.q(),
+            n: data.n(),
+            last_used: self.clock,
+            jobs: 0,
+            warm_reuses: 0,
+            stat_computes: warm.stat_computes(),
+            pinned_bytes: warm.pinned_bytes(),
+            warm: Arc::new(Mutex::new(warm)),
+        };
+        self.entries.insert(name.to_string(), entry);
+        Ok(())
+    }
+
+    /// Drop `name`, freeing every byte it pinned. Refuses while a job holds
+    /// the entry.
+    pub fn evict(&mut self, name: &str) -> Result<usize, RegistryError> {
+        match self.entries.get(name) {
+            None => Err(RegistryError::NotFound(name.to_string())),
+            Some(e) if Arc::strong_count(&e.warm) > 1 => {
+                Err(RegistryError::Busy(name.to_string()))
+            }
+            Some(_) => {
+                let before = self.budget.live();
+                self.entries.remove(name);
+                self.evictions += 1;
+                Ok(before.saturating_sub(self.budget.live()))
+            }
+        }
+    }
+
+    /// Evict idle entries, least-recently-used first (never `keep`), until
+    /// `need` bytes fit in the shared budget. Returns whether they now do.
+    pub fn ensure_room(&mut self, need: usize, keep: Option<&str>) -> bool {
+        while self.budget.available() < need {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(name, e)| {
+                    Some(name.as_str()) != keep && Arc::strong_count(&e.warm) == 1
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(name, _)| name.clone());
+            match victim {
+                Some(name) => {
+                    self.entries.remove(&name);
+                    self.evictions += 1;
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Total bytes pinned by idle registry state (entry snapshots).
+    pub fn pinned_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.pinned_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::linalg::dense::Mat;
+    use crate::solvers::solve_in_context;
+    use crate::util::rng::Rng;
+
+    fn small_data(seed: u64, n: usize, p: usize, q: usize) -> Arc<Dataset> {
+        let mut rng = Rng::new(seed);
+        Arc::new(Dataset::new(
+            Mat::from_fn(p, n, |_, _| rng.normal()),
+            Mat::from_fn(q, n, |_, _| rng.normal()),
+        ))
+    }
+
+    fn opts_with(budget: &MemBudget) -> SolveOptions {
+        SolveOptions {
+            budget: budget.clone(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn warm_context_pins_data_stats_and_models() {
+        let budget = MemBudget::unlimited();
+        let eng: Arc<dyn GemmEngine> = Arc::new(NativeGemm::new(1));
+        let data = small_data(1, 20, 4, 5);
+        let data_bytes = data.bytes();
+        let warm = WarmContext::new(data, eng, &opts_with(&budget)).unwrap();
+        assert_eq!(budget.live(), data_bytes);
+        warm.warm_stats().unwrap();
+        let stats = 8 * (5 * 5 + 4 * 4 + 4 * 5);
+        assert_eq!(budget.live(), data_bytes + stats);
+        assert_eq!(warm.pinned_bytes(), budget.live());
+        assert_eq!(warm.stat_computes(), 3);
+        // A repeat warm is free.
+        warm.warm_stats().unwrap();
+        assert_eq!(warm.stat_computes(), 3);
+        drop(warm);
+        assert_eq!(budget.live(), 0, "eviction must free every byte");
+    }
+
+    #[test]
+    fn warm_context_solves_and_caches_models() {
+        let budget = MemBudget::unlimited();
+        let eng: Arc<dyn GemmEngine> = Arc::new(NativeGemm::new(1));
+        let mut warm =
+            WarmContext::new(small_data(2, 60, 8, 8), eng, &opts_with(&budget)).unwrap();
+        let opts = SolveOptions {
+            lam_l: 0.4,
+            lam_t: 0.4,
+            max_iter: 40,
+            budget: budget.clone(),
+            ..Default::default()
+        };
+        let kind = SolverKind::AltNewtonCd;
+        assert!(warm.cached_model(kind).is_none());
+        let cold = solve_in_context(kind, warm.ctx(), &opts, None).unwrap();
+        assert!(!cold.trace.warm_started);
+        assert!(warm.store_model(kind, cold.model.clone(), (0.4, 0.4), &budget));
+        assert_eq!(warm.cached_lambda(kind), Some((0.4, 0.4)));
+        // Second solve: seeded, zero statistic recomputation, same optimum.
+        let before = warm.stat_computes();
+        let rewarm =
+            solve_in_context(kind, warm.ctx(), &opts, warm.cached_model(kind)).unwrap();
+        assert!(rewarm.trace.warm_started);
+        assert_eq!(warm.stat_computes(), before);
+        let (a, b) = (
+            cold.trace.final_f().unwrap(),
+            rewarm.trace.final_f().unwrap(),
+        );
+        assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0));
+        // Replacing the cached model releases the old bytes first.
+        let live = budget.live();
+        assert!(warm.store_model(kind, rewarm.model, (0.4, 0.4), &budget));
+        assert!(
+            budget.live() <= live + 1024,
+            "replacement must not accumulate"
+        );
+    }
+
+    #[test]
+    fn registry_lru_eviction_frees_bytes_and_skips_busy() {
+        let eng: Arc<dyn GemmEngine> = Arc::new(NativeGemm::new(1));
+        let budget = MemBudget::new(64 << 10);
+        let opts = opts_with(&budget);
+        let mut reg = Registry::new(budget.clone());
+        // Each dataset: 8·n·(p+q) = 8·40·20 = 6.4KB + warm stats ~2.6KB.
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            let warm =
+                WarmContext::new(small_data(10 + i as u64, 40, 10, 10), eng.clone(), &opts)
+                    .unwrap();
+            warm.warm_stats().unwrap();
+            reg.insert(name, warm).unwrap();
+        }
+        assert_eq!(reg.len(), 3);
+        let live = budget.live();
+        assert!(live > 0);
+        // Touch "a" so "b" is the LRU victim.
+        assert!(reg.lookup("a").is_some());
+        assert!(reg.lookup("missing").is_none());
+        assert_eq!((reg.hits, reg.misses), (1, 1));
+        // Demand almost the whole budget: evicts b then c, keeps a.
+        assert!(reg.ensure_room(budget.limit() - reg.peek("a").unwrap().pinned_bytes, None));
+        assert_eq!(reg.len(), 1);
+        assert!(reg.contains("a"));
+        assert_eq!(reg.evictions, 2);
+        assert!(budget.live() < live);
+        // A held entry is never evicted: demand more than can ever fit.
+        let held = reg.lookup("a").unwrap();
+        assert!(!reg.ensure_room(budget.limit() + 1, None));
+        assert!(reg.contains("a"));
+        assert!(matches!(reg.evict("a"), Err(RegistryError::Busy(_))));
+        drop(held);
+        let freed = reg.evict("a").unwrap();
+        assert!(freed > 0);
+        assert_eq!(budget.live(), 0);
+        assert!(matches!(reg.evict("a"), Err(RegistryError::NotFound(_))));
+    }
+
+    #[test]
+    fn oversized_dataset_fails_fast_without_allocating() {
+        let budget = MemBudget::new(1024);
+        let eng: Arc<dyn GemmEngine> = Arc::new(NativeGemm::new(1));
+        // 8·40·20 = 6.4KB of raw data > 1KB budget.
+        let err = WarmContext::new(small_data(3, 40, 10, 10), eng, &opts_with(&budget));
+        assert!(err.is_err());
+        assert_eq!(budget.live(), 0);
+    }
+}

@@ -192,6 +192,24 @@ impl<'a> SolverContext<'a> {
         self.stat_computes.get()
     }
 
+    /// Bytes currently pinned by materialized dense statistics — what a
+    /// long-lived registry entry "costs" while it stays warm (the serve
+    /// registry's accounting and `stat` responses read this).
+    pub fn cached_stat_bytes(&self) -> usize {
+        let (p, q) = (self.data.p(), self.data.q());
+        let mut bytes = 0usize;
+        if self.syy.get().is_some() {
+            bytes += 8 * q * q;
+        }
+        if self.sxx.get().is_some() {
+            bytes += 8 * p * p;
+        }
+        if self.sxy.get().is_some() {
+            bytes += 8 * p * q;
+        }
+        bytes
+    }
+
     /// Dense gradients of the *smooth* objective at `model`:
     /// `(∇_Λ g, ∇_Θ g)` per Eq. 3, from the context's cached statistics
     /// (`S_yy`, `S_xy`; `S_xx` is never formed — ∇_Θ is n-factored). All

@@ -277,12 +277,16 @@ pub fn solve_in_context(
     opts: &SolveOptions,
     warm: Option<&CggmModel>,
 ) -> Result<SolveResult, SolveError> {
-    match kind {
+    let mut res = match kind {
         SolverKind::NewtonCd => newton_cd::solve(ctx, opts, warm),
         SolverKind::AltNewtonCd => alt_newton_cd::solve(ctx, opts, warm),
         SolverKind::AltNewtonBcd => alt_newton_bcd::solve(ctx, opts, warm),
         SolverKind::ProxGrad => prox_grad::solve(ctx, opts, warm),
-    }
+    }?;
+    // Recorded centrally so every solver's trace reports warm-start reuse
+    // (the serve engine and λ-path observability both read this).
+    res.trace.warm_started = warm.is_some();
+    Ok(res)
 }
 
 /// Estimated dense working-set bytes of the non-block solvers — used by the

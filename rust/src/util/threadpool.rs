@@ -1,18 +1,31 @@
-//! Scoped data-parallel helpers over `std::thread::scope`.
+//! Scoped data-parallel helpers over `std::thread::scope`, plus a
+//! persistent worker pool for long-lived drivers.
 //!
 //! Implements the paper's §Parallelization ("embarrassingly-parallelizable"
 //! column computations: multiple columns of Σ via CG, elements of S_xx rows,
 //! GEMM tiles). rayon is unavailable offline, so this provides the
 //! primitives the solvers need: `parallel_for` over an index range,
 //! `parallel_chunks_mut` over disjoint output slices, `parallel_fill` as a
-//! deterministic parallel map, and `team` — a scoped worker group with a
-//! spin barrier for multi-phase work (the colored CD sweeps, which
-//! rendezvous hundreds of times per pass).
+//! deterministic parallel map, and `team` — a worker group with a spin
+//! barrier for multi-phase work (the colored CD sweeps, which rendezvous
+//! hundreds of times per pass).
+//!
+//! `team` historically spawned a fresh scoped thread group per call — per
+//! CD *pass*, so a serving process paid thread spawn/join latency hundreds
+//! of times per solve. [`TeamPool`] removes that: a fixed set of parked
+//! worker threads that any number of sequential `team` calls reuse. A pool
+//! is opt-in and thread-scoped: [`TeamPool::install`] binds it to the
+//! current thread (RAII guard), and every [`Parallelism::team`] call made
+//! from that thread runs on the pool when it fits (enough workers, not
+//! already busy) and silently falls back to the scoped spawn otherwise —
+//! numerics are identical either way, only the spawn cost changes. The
+//! serve engine installs one shared pool around every job it runs.
 //!
 //! The thread count is a runtime parameter (`Parallelism`), which is how the
 //! Fig. 3 speedup experiment sweeps 1..16 workers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Spin barrier for compute-bound team phases. `std::sync::Barrier` parks
 /// on a mutex/condvar (micro­seconds per rendezvous under contention); the
@@ -24,6 +37,13 @@ struct SpinBarrier {
     nt: usize,
     count: AtomicUsize,
     generation: AtomicUsize,
+    /// Set when a team member panicked: every current and future `wait`
+    /// returns immediately so the surviving members can drain out of the
+    /// (now meaningless) phase protocol instead of spinning forever for an
+    /// arrival that will never come. Only consulted on the panic path —
+    /// the job's result is discarded and the panic re-raised by the
+    /// dispatcher.
+    poisoned: std::sync::atomic::AtomicBool,
 }
 
 impl SpinBarrier {
@@ -32,10 +52,18 @@ impl SpinBarrier {
             nt,
             count: AtomicUsize::new(0),
             generation: AtomicUsize::new(0),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
         }
     }
 
+    fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
     fn wait(&self) {
+        if self.poisoned.load(Ordering::Acquire) {
+            return;
+        }
         let gen = self.generation.load(Ordering::Acquire);
         if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.nt {
             // Last arriver resets the count, then opens the next generation;
@@ -46,6 +74,9 @@ impl SpinBarrier {
         } else {
             let mut spins = 0u32;
             while self.generation.load(Ordering::Acquire) == gen {
+                if self.poisoned.load(Ordering::Acquire) {
+                    return;
+                }
                 spins = spins.wrapping_add(1);
                 if spins < 1 << 10 {
                     std::hint::spin_loop();
@@ -77,6 +108,285 @@ impl Team<'_> {
         if let Some(b) = self.barrier {
             b.wait();
         }
+    }
+}
+
+// ------------------------------------------------------------ worker pool
+
+/// The closure shape every team member runs (elided lifetimes are
+/// higher-ranked, so one alias covers all borrows).
+type TeamBody = dyn Fn(usize, &Team) + Sync;
+
+/// A dispatched team job, type-erased. The borrow lifetimes of `body` and
+/// `barrier` are erased; soundness comes from the dispatch protocol: the
+/// dispatcher blocks in [`TeamPool::dispatch`] until every worker has
+/// decremented `remaining`, so both pointees strictly outlive every
+/// dereference.
+#[derive(Clone, Copy)]
+struct RawJob {
+    body: *const TeamBody,
+    barrier: *const SpinBarrier,
+    nt: usize,
+}
+
+// SAFETY: the raw pointers are only dereferenced by pool workers while the
+// dispatching thread is blocked waiting for them (see `RawJob` docs); the
+// pointee body is `Sync`, so shared cross-thread calls are allowed.
+unsafe impl Send for RawJob {}
+
+struct PoolState {
+    /// Job generation counter; workers run one job per observed bump.
+    gen: u64,
+    job: Option<RawJob>,
+    /// Workers that have not yet finished the current generation.
+    remaining: usize,
+    /// First panic payload a worker caught during the current generation;
+    /// re-raised on the dispatching thread (scoped-spawn parity).
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    start: Condvar,
+    /// The dispatcher parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+/// Persistent team-worker pool: `threads - 1` parked OS threads plus the
+/// calling thread as member 0. One [`TeamPool::run`] at a time; concurrent
+/// callers either block ([`TeamPool::run`]) or fall back to a scoped spawn
+/// ([`TeamPool::try_run`] returning `false` — the path
+/// [`Parallelism::team`] takes, so a busy pool degrades to the old
+/// behavior instead of serializing unrelated solves).
+pub struct TeamPool {
+    shared: Arc<PoolShared>,
+    /// Serializes dispatches; `try_lock` is the busy probe.
+    run_lock: Mutex<()>,
+    /// Total team members a run may use (workers + the caller).
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TeamPool {
+    /// A pool supporting teams of up to `threads` members (spawns
+    /// `threads - 1` workers; the dispatching thread is member 0).
+    pub fn new(threads: usize) -> TeamPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                gen: 0,
+                job: None,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|tid| {
+                let shared = shared.clone();
+                std::thread::spawn(move || Self::worker_loop(shared, tid))
+            })
+            .collect();
+        TeamPool {
+            shared,
+            run_lock: Mutex::new(()),
+            threads,
+            handles,
+        }
+    }
+
+    /// Largest team this pool can host.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn worker_loop(shared: Arc<PoolShared>, tid: usize) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if st.gen != seen {
+                        seen = st.gen;
+                        break st.job;
+                    }
+                    st = shared.start.wait(st).unwrap();
+                }
+            };
+            // `job` is always `Some` here: the dispatcher clears it only
+            // after every worker decremented `remaining` for its generation
+            // (the guard below is defensive, not a reachable path).
+            let Some(job) = job else { continue };
+            let mut caught = None;
+            if tid < job.nt {
+                // SAFETY: the dispatcher blocks until `remaining == 0`
+                // before returning (and before dropping body/barrier), so
+                // both pointers are live for the duration of this call.
+                let body = unsafe { &*job.body };
+                let barrier = unsafe { &*job.barrier };
+                // The body may panic (solver asserts). The decrement below
+                // MUST still happen or the dispatcher waits forever, and
+                // the barrier must be poisoned so sibling members stop
+                // spinning for this member's arrivals; the payload is
+                // re-raised on the dispatching thread.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    body(
+                        tid,
+                        &Team {
+                            barrier: Some(barrier),
+                            nt: job.nt,
+                        },
+                    )
+                }));
+                if let Err(payload) = result {
+                    barrier.poison();
+                    caught = Some(payload);
+                }
+            }
+            let mut st = shared.state.lock().unwrap();
+            if st.panic.is_none() {
+                st.panic = caught;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done.notify_one();
+            }
+        }
+    }
+
+    /// Dispatch `body` as a team of `nt` (preconditions checked by the
+    /// callers; the run lock is held by them).
+    ///
+    /// Panic-safe: member 0's body runs under `catch_unwind` so this
+    /// function *always* waits for every worker before the stack-allocated
+    /// barrier and the borrowed body go away (the soundness contract of
+    /// [`RawJob`]); any member's panic poisons the barrier (so siblings
+    /// drain instead of spinning forever) and is re-raised here afterwards
+    /// — the same observable behavior as a panicking scoped spawn.
+    fn dispatch(&self, nt: usize, body: &TeamBody) {
+        let barrier = SpinBarrier::new(nt);
+        let raw = RawJob {
+            // SAFETY (transmute): erases the borrow lifetime from the fat
+            // reference; this function does not return until every worker
+            // has finished calling through it.
+            body: unsafe { std::mem::transmute::<&TeamBody, *const TeamBody>(body) },
+            barrier: &barrier,
+            nt,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.gen += 1;
+            st.job = Some(raw);
+            st.remaining = self.handles.len();
+            st.panic = None;
+            self.shared.start.notify_all();
+        }
+        let result0 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(
+                0,
+                &Team {
+                    barrier: Some(&barrier),
+                    nt,
+                },
+            )
+        }));
+        if result0.is_err() {
+            barrier.poison();
+        }
+        let worker_panic = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic.take()
+        };
+        if let Err(payload) = result0 {
+            std::panic::resume_unwind(payload);
+        }
+        if let Some(payload) = worker_panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Run a team of `nt` on the pool, blocking if another run is in
+    /// flight. Panics if `nt` exceeds the pool size.
+    pub fn run(&self, nt: usize, body: &TeamBody) {
+        assert!(
+            nt >= 1 && nt <= self.threads,
+            "team of {nt} on a {}-thread pool",
+            self.threads
+        );
+        if nt == 1 {
+            body(0, &Team { barrier: None, nt: 1 });
+            return;
+        }
+        let _guard = self.run_lock.lock().unwrap();
+        self.dispatch(nt, body);
+    }
+
+    /// Non-blocking [`Self::run`]: `false` when the pool is too small for
+    /// `nt` or currently busy (including a nested call from a thread that
+    /// is already dispatching) — the caller should fall back to a scoped
+    /// spawn.
+    pub fn try_run(&self, nt: usize, body: &TeamBody) -> bool {
+        if nt < 2 || nt > self.threads {
+            return false;
+        }
+        let Ok(_guard) = self.run_lock.try_lock() else {
+            return false;
+        };
+        self.dispatch(nt, body);
+        true
+    }
+
+    /// Bind `pool` to the current thread until the guard drops: subsequent
+    /// [`Parallelism::team`] calls from this thread reuse it when they fit.
+    pub fn install(pool: &Arc<TeamPool>) -> PoolInstallGuard {
+        let prev = CURRENT_POOL.with(|c| c.borrow_mut().replace(pool.clone()));
+        PoolInstallGuard { prev }
+    }
+
+    fn current() -> Option<Arc<TeamPool>> {
+        CURRENT_POOL.with(|c| c.borrow().clone())
+    }
+}
+
+impl Drop for TeamPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT_POOL: std::cell::RefCell<Option<Arc<TeamPool>>> =
+        std::cell::RefCell::new(None);
+}
+
+/// RAII guard of [`TeamPool::install`]; restores the previously installed
+/// pool (if any) on drop.
+pub struct PoolInstallGuard {
+    prev: Option<Arc<TeamPool>>,
+}
+
+impl Drop for PoolInstallGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT_POOL.with(|c| *c.borrow_mut() = prev);
     }
 }
 
@@ -198,13 +508,20 @@ impl Parallelism {
         });
     }
 
-    /// Run `body(tid, &team)` on this handle's worker count as one scoped
-    /// team. Unlike [`Self::parallel_for`], which spawns per call, a team
-    /// spawns once and coordinates arbitrarily many phases through
-    /// [`Team::sync`] — the primitive behind the colored CD sweeps, whose
-    /// Gauss–Seidel class sequence needs hundreds of cheap barriers per
-    /// pass. Shared-state partitioning (disjoint index ranges per `tid`)
-    /// is the body's responsibility.
+    /// Run `body(tid, &team)` on this handle's worker count as one team.
+    /// Unlike [`Self::parallel_for`], which spawns per call, a team spawns
+    /// once and coordinates arbitrarily many phases through [`Team::sync`]
+    /// — the primitive behind the colored CD sweeps, whose Gauss–Seidel
+    /// class sequence needs hundreds of cheap barriers per pass.
+    /// Shared-state partitioning (disjoint index ranges per `tid`) is the
+    /// body's responsibility.
+    ///
+    /// When a [`TeamPool`] is installed on the calling thread (long-lived
+    /// drivers: the serve engine installs one around every job) and it can
+    /// host this team right now, the pool's parked workers are reused
+    /// instead of spawning; otherwise the call spawns a scoped group
+    /// exactly as before. The two paths are numerically identical — same
+    /// member count, same barrier discipline.
     pub fn team<F>(&self, body: F)
     where
         F: Fn(usize, &Team) + Sync,
@@ -213,6 +530,11 @@ impl Parallelism {
         if nt == 1 {
             body(0, &Team { barrier: None, nt: 1 });
             return;
+        }
+        if let Some(pool) = TeamPool::current() {
+            if pool.try_run(nt, &body) {
+                return;
+            }
         }
         let barrier = SpinBarrier::new(nt);
         std::thread::scope(|s| {
@@ -368,6 +690,147 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn team_pool_reuses_workers_across_runs() {
+        // The same phase-ordering property as `team_barriers_order_phases`,
+        // but run repeatedly on one pool: correctness must hold on parked
+        // workers exactly as on fresh scoped spawns.
+        let pool = TeamPool::new(4);
+        for round in 0..20 {
+            for nt in [2usize, 3, 4] {
+                let n = 48;
+                let slots: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                let sums: Vec<AtomicU64> = (0..nt).map(|_| AtomicU64::new(0)).collect();
+                pool.run(nt, &|tid, team| {
+                    assert_eq!(team.threads(), nt);
+                    for k in (tid..n).step_by(nt) {
+                        slots[k].store(k as u64 + round, Ordering::Relaxed);
+                    }
+                    team.sync();
+                    let s: u64 = slots.iter().map(|x| x.load(Ordering::Relaxed)).sum();
+                    sums[tid].fetch_add(s, Ordering::Relaxed);
+                    team.sync();
+                });
+                let want: u64 = (0..n as u64).map(|k| k + round).sum();
+                for s in &sums {
+                    assert_eq!(s.load(Ordering::Relaxed), want, "nt={nt} round={round}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn installed_pool_serves_parallelism_team() {
+        let pool = Arc::new(TeamPool::new(3));
+        let _guard = TeamPool::install(&pool);
+        let par = Parallelism::new(3);
+        let hits: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        for _ in 0..5 {
+            par.team(|tid, team| {
+                assert_eq!(team.threads(), 3);
+                hits[tid].fetch_add(1, Ordering::Relaxed);
+                team.sync();
+            });
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 5);
+        }
+        // Oversized teams fall back to the scoped spawn and still work.
+        let par8 = Parallelism::new(8);
+        let wide: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        par8.team(|tid, _| {
+            wide[tid].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(wide.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_team_on_pooled_caller_falls_back() {
+        // The outer team runs on the pool; the inner call happens while the
+        // pool's run lock is held (on the dispatcher) or on a worker thread
+        // with no installed pool — both must fall back to a scoped spawn
+        // rather than deadlock.
+        let pool = Arc::new(TeamPool::new(2));
+        let _guard = TeamPool::install(&pool);
+        let par = Parallelism::new(2);
+        let inner_runs = AtomicU64::new(0);
+        par.team(|_, team| {
+            let inner = Parallelism::new(2);
+            inner.team(|_, _| {
+                inner_runs.fetch_add(1, Ordering::Relaxed);
+            });
+            team.sync();
+        });
+        assert_eq!(inner_runs.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn pooled_team_propagates_panics_and_survives() {
+        let pool = Arc::new(TeamPool::new(2));
+        let _guard = TeamPool::install(&pool);
+        let par = Parallelism::new(2);
+        // A panicking member must re-raise on the caller (scoped-spawn
+        // parity), not hang the dispatcher or leave dangling job pointers.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par.team(|tid, team| {
+                if tid == 1 {
+                    panic!("member panic");
+                }
+                // Poisoned barrier: returns instead of spinning forever
+                // for the panicked member's arrival.
+                team.sync();
+            });
+        }));
+        assert!(result.is_err(), "the member's panic must propagate");
+        // The pool survives and serves the next team normally.
+        let hits: Vec<AtomicU64> = (0..2).map(|_| AtomicU64::new(0)).collect();
+        par.team(|tid, team| {
+            hits[tid].fetch_add(1, Ordering::Relaxed);
+            team.sync();
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn install_guard_restores_previous_pool() {
+        let a = Arc::new(TeamPool::new(2));
+        let b = Arc::new(TeamPool::new(2));
+        let _ga = TeamPool::install(&a);
+        {
+            let _gb = TeamPool::install(&b);
+            assert!(Arc::ptr_eq(&TeamPool::current().unwrap(), &b));
+        }
+        assert!(Arc::ptr_eq(&TeamPool::current().unwrap(), &a));
+        drop(_ga);
+        assert!(TeamPool::current().is_none());
+    }
+
+    #[test]
+    fn concurrent_pool_users_complete() {
+        // Two threads hammer one shared pool; whoever finds it busy takes
+        // the scoped fallback. Every team invocation must still cover all
+        // member ids exactly once.
+        let pool = Arc::new(TeamPool::new(2));
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    let _g = TeamPool::install(&pool);
+                    let par = Parallelism::new(2);
+                    for _ in 0..50 {
+                        let hits: Vec<AtomicU64> =
+                            (0..2).map(|_| AtomicU64::new(0)).collect();
+                        par.team(|tid, team| {
+                            hits[tid].fetch_add(1, Ordering::Relaxed);
+                            team.sync();
+                        });
+                        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+                    }
+                });
+            }
+        });
     }
 
     #[test]

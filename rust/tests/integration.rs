@@ -22,8 +22,13 @@
 //!   (`cd_threads`): serial-vs-colored 1e-6 objective equivalence,
 //!   bitwise thread-count determinism, coloring-cache reuse and budget
 //!   accounting;
+//! - [`serve_tests`] — the serve subsystem: warm-context reuse across
+//!   repeat fits (registry hit + warm start + zero statistic recompute),
+//!   admission control on one shared `MemBudget`, LRU eviction, and
+//!   batch ↔ standalone 1e-6 equivalence;
 //! - [`cli_tests`] — config/dataset plumbing plus the compiled `cggm`
-//!   binary run as a subprocess;
+//!   binary run as a subprocess (incl. a `serve` stdio session and a
+//!   `batch` manifest);
 //! - [`oracle_tests`] — the cross-language PJRT oracle (skips when
 //!   artifacts are not built).
 //!
@@ -59,6 +64,9 @@ mod cluster_persistence_tests;
 
 #[path = "integration/parallel_cd_tests.rs"]
 mod parallel_cd_tests;
+
+#[path = "integration/serve_tests.rs"]
+mod serve_tests;
 
 #[path = "integration/cli_tests.rs"]
 mod cli_tests;

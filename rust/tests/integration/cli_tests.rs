@@ -186,6 +186,143 @@ fn cggm_path_checkpoint_resume_roundtrip() {
     let _ = std::fs::remove_dir_all(out_dir);
 }
 
+/// Acceptance smoke: a `cggm serve` stdio session — load → fit → fit
+/// (warm) → stat → evict → shutdown. The second fit must report the
+/// registry hit, the warm start, and zero statistic recomputation.
+#[test]
+fn cggm_serve_stdio_session_smoke() {
+    use std::io::Write;
+    let mut child = Command::new(env!("CARGO_BIN_EXE_cggm"))
+        .args(["serve", "--max-jobs", "1"])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("failed to start cggm serve");
+    let script = concat!(
+        r#"{"op":"load","id":1,"name":"d","workload":"chain","p":12,"q":12,"n":60,"seed":4}"#,
+        "\n",
+        r#"{"op":"fit","id":2,"dataset":"d","solver":"alt","lambda":0.4}"#,
+        "\n",
+        r#"{"op":"fit","id":3,"dataset":"d","solver":"alt","lambda":0.4}"#,
+        "\n",
+        r#"{"op":"stat","id":4}"#,
+        "\n",
+        r#"{"op":"evict","id":5,"dataset":"d"}"#,
+        "\n",
+        r#"{"op":"shutdown","id":6}"#,
+        "\n",
+    );
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(script.as_bytes())
+        .expect("write requests");
+    let output = child.wait_with_output().expect("serve session");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "serve exited nonzero\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    let lines: Vec<Json> = stdout
+        .lines()
+        .map(|l| Json::parse(l).expect("every response line is JSON"))
+        .collect();
+    assert_eq!(lines.len(), 6, "one response per request: {stdout}");
+    // One worker → strict FIFO → responses arrive in request order.
+    for (k, line) in lines.iter().enumerate() {
+        assert_eq!(line.get("id").and_then(|v| v.as_usize()), Some(k + 1));
+        assert_eq!(
+            line.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "request {} failed: {stdout}",
+            k + 1
+        );
+    }
+    let warm_fit = lines[2].get("result").expect("fit result");
+    assert_eq!(
+        warm_fit.get("warm_started").and_then(|v| v.as_bool()),
+        Some(true),
+        "second fit must warm-start: {stdout}"
+    );
+    assert_eq!(
+        warm_fit.get("stat_computes").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "second fit must not recompute statistics: {stdout}"
+    );
+    let registry = lines[3]
+        .get("result")
+        .and_then(|r| r.get("registry"))
+        .expect("stat registry block");
+    assert_eq!(
+        registry.get("hits").and_then(|v| v.as_usize()),
+        Some(2),
+        "both fits hit the registry: {stdout}"
+    );
+    assert!(
+        lines[4]
+            .get("result")
+            .and_then(|r| r.get("freed_bytes"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            > 0.0,
+        "evict frees bytes: {stdout}"
+    );
+}
+
+/// `cggm batch` runs a manifest through the serve engine and emits one
+/// ordered JSONL response per job.
+#[test]
+fn cggm_batch_manifest_smoke() {
+    let manifest = std::env::temp_dir().join("cggm_cli_batch.json");
+    std::fs::write(
+        &manifest,
+        r#"{"defaults": {"solver": "alt", "tol": 0.001},
+           "jobs": [
+             {"op": "load", "name": "d", "workload": "chain",
+              "p": 10, "q": 10, "n": 60, "seed": 6},
+             {"op": "fit", "dataset": "d", "lambda": 0.5},
+             {"op": "fit", "dataset": "d", "lambda": 0.3},
+             {"op": "stat"}
+           ]}"#,
+    )
+    .unwrap();
+    // One worker keeps the fit order deterministic (the second fit must
+    // find the first's cached model).
+    let output = Command::new(env!("CARGO_BIN_EXE_cggm"))
+        .args(["batch", manifest.to_str().unwrap(), "--max-jobs", "1"])
+        .output()
+        .expect("failed to run cggm batch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "batch failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    let lines: Vec<Json> = stdout
+        .lines()
+        .map(|l| Json::parse(l).expect("batch output is JSONL"))
+        .collect();
+    assert_eq!(lines.len(), 4);
+    for (k, line) in lines.iter().enumerate() {
+        assert_eq!(line.get("id").and_then(|v| v.as_usize()), Some(k + 1));
+        assert_eq!(line.get("ok").and_then(|v| v.as_bool()), Some(true));
+    }
+    // The two fits ran against one warm context: the second reports a
+    // cached-model warm start.
+    assert_eq!(
+        lines[2]
+            .get("result")
+            .and_then(|r| r.get("warm_model_reused"))
+            .and_then(|v| v.as_bool()),
+        Some(true),
+        "{stdout}"
+    );
+    let _ = std::fs::remove_file(manifest);
+}
+
 /// `cggm path` honors `--screen full` (no screened points in the JSON).
 #[test]
 fn cggm_path_subcommand_screen_flag() {

@@ -1,0 +1,321 @@
+//! The serve subsystem end to end, in-process: warm-context reuse across
+//! repeat fits, admission control against one shared budget, registry LRU
+//! eviction, per-dataset sequencing, and `batch` ↔ standalone equivalence.
+
+use cggm::coordinator::{self, PathOptions, RunConfig};
+use cggm::datagen::Workload;
+use cggm::gemm::native::NativeGemm;
+use cggm::runtime::manifest::JobManifest;
+use cggm::serve::engine::{fit_estimate, load_estimate};
+use cggm::serve::{run_batch, ErrKind, Request, ServeEngine};
+use cggm::solvers::{solve, SolveOptions, SolverKind};
+use cggm::util::json::Json;
+use std::sync::Arc;
+
+fn engine(max_jobs: usize, budget: Option<usize>) -> ServeEngine {
+    let cfg = RunConfig {
+        serve_max_jobs: max_jobs,
+        serve_budget: budget,
+        ..RunConfig::default()
+    };
+    ServeEngine::new(cfg, Arc::new(NativeGemm::new(1)))
+}
+
+fn req(line: &str) -> Request {
+    Request::parse_line(line).expect("test request must parse")
+}
+
+fn num(doc: &Json, key: &str) -> f64 {
+    doc.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing number '{key}' in {}", doc.to_string()))
+}
+
+fn flag(doc: &Json, key: &str) -> bool {
+    doc.get(key)
+        .and_then(|v| v.as_bool())
+        .unwrap_or_else(|| panic!("missing bool '{key}' in {}", doc.to_string()))
+}
+
+/// Acceptance: the second identical `fit` is a registry hit with a warm
+/// start and zero statistic recomputation, and reaches the same optimum.
+#[test]
+fn repeat_fit_reuses_warm_context_without_stat_recompute() {
+    let srv = engine(1, None);
+    let load = srv.request(req(
+        r#"{"op":"load","id":1,"name":"d","workload":"chain","p":14,"q":14,"n":80,"seed":5}"#,
+    ));
+    assert!(load.is_ok(), "{:?}", load.outcome);
+    let lres = load.result().unwrap();
+    assert_eq!(num(lres, "stat_computes"), 3.0, "eager warm = all 3 stats");
+    assert!(num(lres, "pinned_bytes") > 0.0);
+    assert!(!flag(lres, "already_loaded"));
+
+    let fit_line =
+        r#"{"op":"fit","id":2,"dataset":"d","solver":"alt","lambda":0.4,"tol":0.00001,"max_iter":120}"#;
+    let fit1 = srv.request(req(fit_line));
+    assert!(fit1.is_ok(), "{:?}", fit1.outcome);
+    let r1 = fit1.result().unwrap();
+    assert!(flag(r1, "registry_hit"));
+    assert!(!flag(r1, "warm_started"), "first fit is cold");
+    assert!(!flag(r1, "warm_model_reused"));
+    assert_eq!(
+        num(r1, "stat_computes"),
+        0.0,
+        "statistics were warmed at load; the fit must not recompute them"
+    );
+
+    let fit2 = srv.request(req(fit_line));
+    let r2 = fit2.result().unwrap();
+    assert!(flag(r2, "registry_hit"));
+    assert!(flag(r2, "warm_started"), "second fit reuses the cached model");
+    assert!(flag(r2, "warm_model_reused"));
+    assert_eq!(num(r2, "stat_computes"), 0.0, "zero S_yy/S_xx/S_xy recompute");
+    // The trace satellite: warm-start reuse is visible in the trace JSON.
+    assert!(!flag(r1.get("trace").unwrap(), "warm_started"));
+    assert!(flag(r2.get("trace").unwrap(), "warm_started"));
+    // Same optimum either way.
+    let (f1, f2) = (
+        num(r1.get("summary").unwrap(), "f"),
+        num(r2.get("summary").unwrap(), "f"),
+    );
+    assert!(
+        (f1 - f2).abs() <= 1e-6 * f1.abs().max(1.0),
+        "warm refit diverged: {f1} vs {f2}"
+    );
+
+    // Observability: per-dataset counters in `stat`.
+    let stat = srv.request(req(r#"{"op":"stat","id":3}"#));
+    let sres = stat.result().unwrap();
+    let reg = sres.get("registry").unwrap();
+    assert_eq!(num(reg, "hits"), 2.0, "both fits hit the registry");
+    let ds = &reg.get("datasets").unwrap().as_arr().unwrap()[0];
+    assert_eq!(num(ds, "jobs"), 2.0);
+    assert_eq!(num(ds, "warm_reuses"), 1.0);
+    assert_eq!(num(ds, "stat_computes"), 3.0);
+
+    // Evict frees every pinned byte; the dataset is then a miss.
+    let evict = srv.request(req(r#"{"op":"evict","id":4,"dataset":"d"}"#));
+    assert!(evict.is_ok());
+    assert!(num(evict.result().unwrap(), "freed_bytes") > 0.0);
+    assert_eq!(srv.budget().live(), 0, "eviction must free every byte");
+    let gone = srv.request(req(fit_line));
+    assert_eq!(gone.err_kind(), Some(ErrKind::NotFound));
+    srv.join();
+}
+
+/// Acceptance: an over-budget job is rejected with a structured `budget`
+/// error and the session keeps serving.
+#[test]
+fn over_budget_jobs_fail_fast_and_session_survives() {
+    let (p, q, n) = (12usize, 12usize, 60usize);
+    let limit = load_estimate(p, q, n, true, 1)
+        + fit_estimate(SolverKind::AltNewtonCd, p, q, 1)
+        + (8 * n * (p + q));
+    let srv = engine(1, Some(limit));
+    let ok = srv.request(req(
+        r#"{"op":"load","id":1,"name":"small","workload":"chain","p":12,"q":12,"n":60,"seed":3}"#,
+    ));
+    assert!(ok.is_ok(), "{:?}", ok.outcome);
+
+    // A dataset that can never fit is rejected at submit, structurally.
+    let big = srv.request(req(
+        r#"{"op":"load","id":2,"name":"big","workload":"chain","p":600,"q":600,"n":50,"seed":3}"#,
+    ));
+    assert_eq!(big.err_kind(), Some(ErrKind::Budget), "{:?}", big.outcome);
+
+    // So is a job whose own working set cannot fit next to its dataset.
+    let wide_cv = srv.request(req(
+        r#"{"op":"cv","id":3,"dataset":"small","solver":"alt","cv_folds":3,"cv_threads":64}"#,
+    ));
+    assert_eq!(wide_cv.err_kind(), Some(ErrKind::Budget));
+
+    // The session keeps serving: the same fit that always fit still runs.
+    let fit = srv.request(req(
+        r#"{"op":"fit","id":4,"dataset":"small","solver":"alt","lambda":0.4}"#,
+    ));
+    assert!(fit.is_ok(), "{:?}", fit.outcome);
+    let stat = srv.request(req(r#"{"op":"stat","id":5}"#));
+    let jobs = stat.result().unwrap().get("jobs").unwrap();
+    assert!(num(jobs, "rejected") >= 2.0);
+    srv.join();
+}
+
+/// Concurrent jobs draw on one shared `MemBudget`: the cap is never
+/// exceeded (enforced by the budget itself, scheduled by admission).
+#[test]
+fn concurrent_jobs_share_one_budget_within_cap() {
+    let (p, q, n) = (12usize, 12usize, 60usize);
+    let per = load_estimate(p, q, n, true, 1) + fit_estimate(SolverKind::AltNewtonCd, p, q, 1);
+    let limit = 4 * per;
+    let srv = engine(2, Some(limit));
+    for (id, name, seed) in [(1, "a", 7), (2, "b", 8)] {
+        let resp = srv.request(req(&format!(
+            r#"{{"op":"load","id":{id},"name":"{name}","workload":"chain","p":{p},"q":{q},"n":{n},"seed":{seed}}}"#,
+        )));
+        assert!(resp.is_ok(), "{:?}", resp.outcome);
+    }
+    // Four fits across two datasets, two workers; all must succeed without
+    // ever pushing the shared budget past its cap.
+    let (tx, rx) = std::sync::mpsc::channel();
+    for (id, name) in [(3, "a"), (4, "b"), (5, "a"), (6, "b")] {
+        srv.submit(
+            req(&format!(
+                r#"{{"op":"fit","id":{id},"dataset":"{name}","solver":"alt","lambda":0.4}}"#,
+            )),
+            &tx,
+        );
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.into_iter().collect();
+    assert_eq!(responses.len(), 4);
+    for resp in &responses {
+        assert!(resp.is_ok(), "{:?}", resp.outcome);
+    }
+    assert!(srv.budget().peak() > 0);
+    assert!(
+        srv.budget().peak() <= limit,
+        "shared budget exceeded: peak {} > limit {}",
+        srv.budget().peak(),
+        limit
+    );
+    srv.join();
+}
+
+/// Loading past the budget evicts idle LRU entries and frees their bytes.
+#[test]
+fn registry_lru_eviction_frees_bytes_under_pressure() {
+    let (p, q, n) = (40usize, 40usize, 30usize);
+    let pin = 8 * n * (p + q) + 8 * 3 * p * q; // raw data + three stats
+    let limit = load_estimate(p, q, n, true, 1) + pin / 2;
+    let srv = engine(1, Some(limit));
+    let first = srv.request(req(&format!(
+        r#"{{"op":"load","id":1,"name":"old","workload":"chain","p":{p},"q":{q},"n":{n},"seed":1}}"#,
+    )));
+    assert!(first.is_ok(), "{:?}", first.outcome);
+    let live_one = srv.budget().live();
+    assert!(live_one > 0);
+    // The second dataset cannot fit next to the first: the idle LRU entry
+    // is evicted to make room.
+    let second = srv.request(req(&format!(
+        r#"{{"op":"load","id":2,"name":"new","workload":"chain","p":{p},"q":{q},"n":{n},"seed":2}}"#,
+    )));
+    assert!(second.is_ok(), "{:?}", second.outcome);
+    assert!(
+        srv.budget().live() <= live_one + pin / 2,
+        "evicted bytes were not freed: live {} after second load",
+        srv.budget().live()
+    );
+    let stat = srv.request(req(r#"{"op":"stat","id":3}"#));
+    let reg = stat.result().unwrap().get("registry").unwrap();
+    assert!(num(reg, "evictions") >= 1.0);
+    let datasets = reg.get("datasets").unwrap().as_arr().unwrap();
+    assert_eq!(datasets.len(), 1, "only the new dataset survives");
+    assert_eq!(datasets[0].get("name").unwrap().as_str(), Some("new"));
+    // The evicted dataset is now a structured miss.
+    let gone = srv.request(req(
+        r#"{"op":"fit","id":4,"dataset":"old","solver":"alt","lambda":0.4}"#,
+    ));
+    assert_eq!(gone.err_kind(), Some(ErrKind::NotFound));
+    srv.join();
+}
+
+/// Acceptance: `batch` on a manifest of ≥3 jobs is 1e-6-equivalent to
+/// running each job standalone — the daemon and offline sweeps share one
+/// code path.
+#[test]
+fn batch_manifest_matches_standalone_runs() {
+    let manifest = JobManifest::parse(
+        r#"{"defaults": {"solver": "alt", "tol": 0.00001, "max_iter": 120},
+            "jobs": [
+              {"op": "load", "name": "d", "workload": "chain",
+               "p": 10, "q": 10, "n": 70, "seed": 9},
+              {"op": "fit", "dataset": "d", "lambda": 0.5, "warm": false},
+              {"op": "fit", "dataset": "d", "lambda": 0.3, "warm": false},
+              {"op": "fit", "dataset": "d", "lambda": 0.3},
+              {"op": "path", "dataset": "d", "path_points": 3}
+            ]}"#,
+    )
+    .unwrap();
+    let srv = engine(2, None);
+    let outcome = run_batch(&srv, &manifest);
+    srv.join();
+    assert_eq!(outcome.failures, 0, "{}", outcome.to_jsonl());
+    assert_eq!(outcome.responses.len(), 5);
+    // Ordered by id == manifest position.
+    let ids: Vec<u64> = outcome.responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![1, 2, 3, 4, 5]);
+
+    // Standalone references on the identical generated dataset.
+    let prob = coordinator::generate_problem(Workload::Chain, 10, 10, 70, 9);
+    let eng = NativeGemm::new(1);
+    let opts = |lam: f64| SolveOptions {
+        lam_l: lam,
+        lam_t: lam,
+        tol: 0.00001,
+        max_iter: 120,
+        ..Default::default()
+    };
+    let close = |a: f64, b: f64, what: &str| {
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "{what}: batch {b} vs standalone {a}"
+        );
+    };
+    for (idx, lam) in [(1usize, 0.5), (2, 0.3), (3, 0.3)] {
+        let standalone = solve(SolverKind::AltNewtonCd, &prob.data, &opts(lam), &eng).unwrap();
+        let got = num(
+            outcome.responses[idx].result().unwrap().get("summary").unwrap(),
+            "f",
+        );
+        close(
+            standalone.trace.final_f().unwrap(),
+            got,
+            &format!("fit lambda={lam}"),
+        );
+    }
+    let popts = PathOptions {
+        points: 3,
+        ..Default::default()
+    };
+    let standalone_path = coordinator::fit_path(
+        SolverKind::AltNewtonCd,
+        &prob.data,
+        &opts(0.5),
+        &popts,
+        &eng,
+    )
+    .unwrap();
+    let batch_path = outcome.responses[4].result().unwrap().get("path").unwrap();
+    let batch_points = batch_path.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(batch_points.len(), standalone_path.points.len());
+    for (sp, bp) in standalone_path.points.iter().zip(batch_points) {
+        close(sp.f, num(bp, "f"), "path point");
+        close(sp.lam_l, num(bp, "lambda_l"), "path grid");
+    }
+}
+
+/// Shutdown stops admission but drains queued work; the engine joins
+/// cleanly and later submissions get a structured `shutdown` error.
+#[test]
+fn shutdown_drains_and_rejects_new_work() {
+    let srv = engine(1, None);
+    let (tx, rx) = std::sync::mpsc::channel();
+    srv.submit(
+        req(r#"{"op":"load","id":1,"name":"d","workload":"chain","p":8,"q":8,"n":40,"seed":2}"#),
+        &tx,
+    );
+    srv.submit(
+        req(r#"{"op":"fit","id":2,"dataset":"d","solver":"alt","lambda":0.5}"#),
+        &tx,
+    );
+    let down = srv.request(req(r#"{"op":"shutdown","id":3}"#));
+    assert!(down.is_ok());
+    let late = srv.request(req(r#"{"op":"stat","id":4}"#));
+    assert_eq!(late.err_kind(), Some(ErrKind::Shutdown));
+    drop(tx);
+    let mut ids: Vec<u64> = rx.into_iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2], "queued jobs drain through shutdown");
+    srv.join();
+}
