@@ -1,7 +1,8 @@
 //! Kernel-level perf trajectory: packed-GEMM and colored-CD-sweep
-//! microbenches across 1/2/4 threads, written to `BENCH_KERNELS.json` so
-//! future PRs have a machine-readable baseline to regress against (see
-//! docs/PERF.md for the schema and how to read it).
+//! microbenches across 1/2/4 threads, plus tiled-vs-eager Gram statistic
+//! builds and a budget-capped tiled BCD solve, written to
+//! `BENCH_KERNELS.json` so future PRs have a machine-readable baseline to
+//! regress against (see docs/PERF.md for the schema and how to read it).
 //!
 //! Flags (after `--`):
 //! - `--smoke`        small sizes / few iterations, no scaling assertions
@@ -24,8 +25,10 @@ use cggm::solvers::cd_common::{
     lambda_cd_pass, lambda_cd_pass_colored, theta_cd_pass_direct, theta_cd_pass_direct_colored,
     ColoredScratch,
 };
-use cggm::solvers::{SolveOptions, SolverContext};
+use cggm::cggm::tiles::TileStore;
+use cggm::solvers::{solve, SolveOptions, SolverContext, SolverKind, StatMode};
 use cggm::util::json::Json;
+use cggm::util::membudget::MemBudget;
 use cggm::util::rng::Rng;
 use cggm::util::threadpool::Parallelism;
 
@@ -239,6 +242,125 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------------- tiled statistics
+    // ISSUE-6 acceptance shape: the tiled on-demand Gram build vs the eager
+    // dense build, plus a BCD solve whose budget is strictly below the dense
+    // S_xx footprint. `tiled_diag` shows the laziness win — only the touched
+    // block-diagonal is ever built.
+    let (tp, tq, tn) = if smoke { (96, 16, 60) } else { (256, 32, 120) };
+    let copts = datagen::cluster_graph::ClusterOptions {
+        cluster_size: 8,
+        hub_coeff: 100.0,
+        ..Default::default()
+    };
+    let tprob = datagen::cluster_graph::generate(tp, tq, tn, 11, &copts);
+    let tile = 32usize;
+    let (nbx, nby) = (tp.div_ceil(tile), tq.div_ceil(tile));
+    let stats = Bench::new("stat_build/eager")
+        .warmup(warmup)
+        .iters(bench_iters)
+        .run(|| {
+            let c = SolverContext::new(&tprob.data, &opts, &eng);
+            c.sxx().unwrap();
+            c.sxy().unwrap();
+        });
+    legs.push(Leg {
+        family: "stat_build_eager",
+        threads: 1,
+        coord_updates: 0,
+        stats: stats.clone(),
+    });
+    set.push(stats);
+    let stats = Bench::new("stat_build/tiled_full")
+        .warmup(warmup)
+        .iters(bench_iters)
+        .run(|| {
+            let ts = TileStore::new(&tprob.data, &eng, MemBudget::unlimited(), tile);
+            for bi in 0..nbx {
+                for bj in bi..nbx {
+                    ts.sxx_entry(bi * tile, bj * tile);
+                }
+            }
+            for bi in 0..nbx {
+                for bj in 0..nby {
+                    ts.sxy_entry(bi * tile, bj * tile);
+                }
+            }
+        });
+    legs.push(Leg {
+        family: "stat_build_tiled_full",
+        threads: 1,
+        coord_updates: 0,
+        stats: stats.clone(),
+    });
+    set.push(stats);
+    let stats = Bench::new("stat_build/tiled_diag")
+        .warmup(warmup)
+        .iters(bench_iters)
+        .run(|| {
+            let ts = TileStore::new(&tprob.data, &eng, MemBudget::unlimited(), tile);
+            for b in 0..nbx {
+                ts.sxx_entry(b * tile, b * tile);
+            }
+        });
+    legs.push(Leg {
+        family: "stat_build_tiled_diag",
+        threads: 1,
+        coord_updates: 0,
+        stats: stats.clone(),
+    });
+    set.push(stats);
+
+    // Budget-capped BCD: dense-mode solve vs tiled under cap = dense S_xx / 2.
+    let solve_iters = if smoke { 2 } else { 3 };
+    let bcd_opts = SolveOptions {
+        lam_l: 0.1,
+        lam_t: 0.1,
+        max_iter: 60,
+        ..Default::default()
+    };
+    let stats = Bench::new("bcd_solve/dense")
+        .warmup(1)
+        .iters(solve_iters)
+        .run(|| {
+            solve(SolverKind::AltNewtonBcd, &tprob.data, &bcd_opts, &eng).unwrap();
+        });
+    legs.push(Leg {
+        family: "bcd_solve_dense",
+        threads: 1,
+        coord_updates: 0,
+        stats: stats.clone(),
+    });
+    set.push(stats);
+    let dense_sxx_bytes = 8 * tp * tp;
+    let cap = dense_sxx_bytes / 2;
+    let mut capped_opts = bcd_opts.clone();
+    capped_opts.stat_mode = StatMode::Tiled(tile);
+    capped_opts.budget = MemBudget::new(cap);
+    let stats = Bench::new("bcd_solve/tiled_capped")
+        .warmup(1)
+        .iters(solve_iters)
+        .run(|| {
+            solve(SolverKind::AltNewtonBcd, &tprob.data, &capped_opts, &eng).unwrap();
+        });
+    legs.push(Leg {
+        family: "bcd_solve_tiled_capped",
+        threads: 1,
+        coord_updates: 0,
+        stats: stats.clone(),
+    });
+    set.push(stats);
+    // One more instrumented run for the machine-readable tile counters.
+    let capped = solve(SolverKind::AltNewtonBcd, &tprob.data, &capped_opts, &eng).unwrap();
+    println!(
+        "# tiled bcd (p={tp} q={tq} tile={tile}, cap {cap} B < dense S_xx {dense_sxx_bytes} B): \
+         {} of {} tiles, {} evictions, {} spills",
+        capped.trace.tiles_computed,
+        capped.trace.total_tiles,
+        capped.trace.tile_evictions,
+        capped.trace.tile_spills
+    );
+
     // ------------------------------------------------- scaling + trajectory
     let median_of = |family: &str, t: usize| -> Option<f64> {
         legs.iter()
@@ -310,6 +432,21 @@ fn main() {
                 ("active_theta", Json::num(active_t.len() as f64)),
                 ("lambda_classes", Json::num(classes_l.len() as f64)),
                 ("theta_classes", Json::num(classes_t.len() as f64)),
+            ]),
+        ),
+        (
+            "tiled",
+            Json::obj(vec![
+                ("p", Json::num(tp as f64)),
+                ("q", Json::num(tq as f64)),
+                ("n", Json::num(tn as f64)),
+                ("tile", Json::num(tile as f64)),
+                ("budget_cap_bytes", Json::num(cap as f64)),
+                ("dense_sxx_bytes", Json::num(dense_sxx_bytes as f64)),
+                ("tiles_computed", Json::num(capped.trace.tiles_computed as f64)),
+                ("total_tiles", Json::num(capped.trace.total_tiles as f64)),
+                ("tile_evictions", Json::num(capped.trace.tile_evictions as f64)),
+                ("tile_spills", Json::num(capped.trace.tile_spills as f64)),
             ]),
         ),
         (

@@ -98,6 +98,29 @@ impl Dataset {
         s
     }
 
+    /// Stream the feature rows `rows` of X into `panel` (which must be
+    /// `rows.len() × n`). This is the tile layer's *only* access to X during
+    /// tile construction: builders that go through it never need a second
+    /// resident copy of X, and an out-of-core `Dataset` variant can later
+    /// satisfy the same contract by reading the panel from storage.
+    pub fn x_panel_into(&self, rows: std::ops::Range<usize>, panel: &mut Mat) {
+        assert!(rows.end <= self.p(), "X panel rows out of range");
+        assert_eq!((panel.rows(), panel.cols()), (rows.len(), self.n()));
+        for (k, i) in rows.enumerate() {
+            panel.row_mut(k).copy_from_slice(self.xt.row(i));
+        }
+    }
+
+    /// Stream the feature rows `rows` of Y into `panel` (`rows.len() × n`);
+    /// the Y-side counterpart of [`Self::x_panel_into`].
+    pub fn y_panel_into(&self, rows: std::ops::Range<usize>, panel: &mut Mat) {
+        assert!(rows.end <= self.q(), "Y panel rows out of range");
+        assert_eq!((panel.rows(), panel.cols()), (rows.len(), self.n()));
+        for (k, i) in rows.enumerate() {
+            panel.row_mut(k).copy_from_slice(self.yt.row(i));
+        }
+    }
+
     /// R̃ᵀ = (XΘ)ᵀ as a q×n matrix (`rt.row(j)` = j-th column of XΘ).
     /// O(nnz(Θ)·n); the basis of every Ψ/trace computation.
     pub fn xtheta_t(&self, theta: &SpRowMat) -> Mat {
@@ -217,6 +240,22 @@ mod tests {
         let full = d.syy(1, 2) * d.n() as f64;
         let split = a.syy(1, 2) * a.n() as f64 + b.syy(1, 2) * b.n() as f64;
         assert!((full - split).abs() < 1e-10);
+    }
+
+    #[test]
+    fn panel_loaders_stream_feature_rows() {
+        let mut rng = Rng::new(4);
+        let d = random_dataset(&mut rng, 6, 9, 5);
+        let mut px = Mat::zeros(3, 6);
+        d.x_panel_into(4..7, &mut px);
+        for k in 0..3 {
+            assert_eq!(px.row(k), d.xt.row(4 + k));
+        }
+        let mut py = Mat::zeros(2, 6);
+        d.y_panel_into(3..5, &mut py);
+        for k in 0..2 {
+            assert_eq!(py.row(k), d.yt.row(3 + k));
+        }
     }
 
     #[test]

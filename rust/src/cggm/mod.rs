@@ -7,6 +7,7 @@ pub mod factor;
 pub mod linesearch;
 pub mod model;
 pub mod objective;
+pub mod tiles;
 
 pub use dataset::Dataset;
 pub use factor::{CholKind, LambdaFactor};

@@ -197,6 +197,22 @@ impl<'a> Objective<'a> {
             + 2.0 * self.data.inv_n() * crate::linalg::dense::dot(self.data.xt.row(i), sr.row(j))
     }
 
+    /// [`Self::grad_theta_entry`] reading `(S_xy)_ij` through the demand-
+    /// driven tile cache instead of a dense p×q matrix — the screening paths'
+    /// entry point under [`crate::solvers::StatMode::Tiled`]: a restricted
+    /// screen touches only the `S_xy` tiles its allowed coordinates live in.
+    #[inline]
+    pub fn grad_theta_entry_tiled(
+        &self,
+        tiles: &crate::cggm::tiles::TileStore,
+        sr: &Mat,
+        i: usize,
+        j: usize,
+    ) -> f64 {
+        2.0 * tiles.sxy_entry(i, j)
+            + 2.0 * self.data.inv_n() * crate::linalg::dense::dot(self.data.xt.row(i), sr.row(j))
+    }
+
     /// Ψ = ΣΘᵀS_xxΘΣ computed as Gram of rows of `sr = Σ·rt` divided by n.
     pub fn psi_dense(&self, sigma: &Mat, rt: &Mat, engine: &dyn GemmEngine) -> Mat {
         let d = self.data;
@@ -430,10 +446,15 @@ mod tests {
                     check_close(fd, want, 2e-4, &format!("Λ entry FD [{i},{j}]"))?;
                 }
             }
+            let budget = crate::util::membudget::MemBudget::unlimited();
+            let tiles = crate::cggm::tiles::TileStore::new(&data, &eng, budget, 2);
             for i in 0..p {
                 for j in 0..q {
                     let e = obj.grad_theta_entry(&sxy, &sr, i, j);
                     check_close(e, gt[(i, j)], 1e-10, &format!("Θ entry vs dense [{i},{j}]"))?;
+                    // The tiled read is the same entry through the tile cache.
+                    let et = obj.grad_theta_entry_tiled(&tiles, &sr, i, j);
+                    check_close(et, e, 1e-12, &format!("Θ entry tiled [{i},{j}]"))?;
                     let mut mp = model.clone();
                     mp.theta.add(i, j, h);
                     let mut mm = model.clone();

@@ -1,0 +1,624 @@
+//! Tiled on-demand Gram statistics: lazy `S_xx`/`S_xy` blocks behind a
+//! budget-driven LRU cache with file spill.
+//!
+//! The paper's scaling story (§4.2, p + q ≈ 10⁶ on one machine) depends on
+//! never materializing the dense O(p²) Gram matrix: the block solver touches
+//! `S_xx` sub-blocks for the *active* blocks only. [`TileStore`] makes that
+//! access pattern first-class. The p×p `S_xx` and p×q `S_xy` are carved into
+//! fixed-size `tile × tile` blocks; a block is computed — one packed
+//! [`GemmEngine::gemm_nt`] row-Gram over streamed column panels of X/Y
+//! ([`Dataset::x_panel_into`]) — only when a solver first reads an entry
+//! inside it. Hot tiles stay resident in an LRU keyed against the shared
+//! [`MemBudget`]; under budget pressure cold tiles are *spilled* to a
+//! page-cache-backed slot file instead of failing the solve, and reload from
+//! disk (cheap, O(t²) I/O) instead of recomputing (O(t²·n) FLOPs). Tiles are
+//! pure functions of the data, so a disk copy stays valid forever: re-evicting
+//! a previously spilled tile is free.
+//!
+//! Budget accounting: only *resident* tiles are tracked (RAII [`Tracked`],
+//! same discipline as the workspace arena), so `MemBudget::peak()` keeps
+//! measuring the true concurrent working set. Transient panel scratch during
+//! a tile build is bounded by `2·tile·n·8` bytes and treated like the GEMM
+//! engine's pack buffers: outside the budget, bounded by construction. If
+//! even a single tile cannot fit in the budget after spilling everything, the
+//! store degrades to serving the requested entries from an uncached transient
+//! tile — strictly the paper's "store only one row of S_xx at a time" mode —
+//! so tiled reads never fail and never change numerics.
+//!
+//! Concurrency: the store is `Sync` (one internal mutex), so the block
+//! solver's colored parallel sweeps read tiles from worker threads. The lock
+//! is held across a tile build, serializing concurrent *misses*; hits are a
+//! map probe. This is the right trade for the access pattern — misses are
+//! O(t²·n) GEMMs where serialization is amortized, and the alternative
+//! (per-tile locks) would let concurrent misses overshoot the budget.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cggm::Dataset;
+use crate::gemm::GemmEngine;
+use crate::linalg::dense::Mat;
+use crate::util::membudget::{MemBudget, Tracked};
+
+/// Identity of one Gram tile. `Sxx(bi, bj)` is stored canonically with
+/// `bi ≤ bj` (the mirror block is the transpose); `Sxy` has no symmetry.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum TileKey {
+    Sxx(u32, u32),
+    Sxy(u32, u32),
+}
+
+impl TileKey {
+    fn tag(&self) -> u32 {
+        match self {
+            TileKey::Sxx(..) => 1,
+            TileKey::Sxy(..) => 2,
+        }
+    }
+
+    fn blocks(&self) -> (u32, u32) {
+        match *self {
+            TileKey::Sxx(a, b) | TileKey::Sxy(a, b) => (a, b),
+        }
+    }
+}
+
+/// Counters describing the cache's behavior over its lifetime — surfaced on
+/// `SolveTrace` and the serve `stat` op so tiled-vs-dense compute savings are
+/// machine-readable.
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct TileStats {
+    /// Tiles actually built (one `gemm_nt` each). The tiled perf claim is
+    /// `computes < total_tiles` on screened solves.
+    pub computes: usize,
+    /// Reads served by a resident tile.
+    pub hits: usize,
+    /// Reads that found no resident tile (reload or compute followed).
+    pub misses: usize,
+    /// Resident tiles dropped under budget pressure.
+    pub evictions: usize,
+    /// Evicted tiles written to the spill file (≤ evictions: a tile with a
+    /// still-valid disk copy re-evicts for free).
+    pub spills: usize,
+    /// Spilled tiles read back from disk instead of recomputed.
+    pub reloads: usize,
+}
+
+struct ResidentTile {
+    mat: Mat,
+    last_used: u64,
+    _track: Tracked,
+}
+
+#[derive(Clone, Copy)]
+struct DiskSlot {
+    slot: u64,
+    rows: u32,
+    cols: u32,
+}
+
+struct SpillFile {
+    file: File,
+    path: PathBuf,
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+struct TileInner {
+    resident: HashMap<TileKey, ResidentTile>,
+    disk: HashMap<TileKey, DiskSlot>,
+    spill: Option<SpillFile>,
+    next_slot: u64,
+    clock: u64,
+    stats: TileStats,
+}
+
+/// Slot header: MAGIC (8) + tag, bi, bj, rows, cols (4 each) + pad to 32.
+const SPILL_MAGIC: u64 = 0x4347_474d_5449_4c45; // "CGGMTILE"
+const HEADER_BYTES: u64 = 32;
+
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The demand-driven Gram statistics layer; see the module docs.
+pub struct TileStore<'a> {
+    data: &'a Dataset,
+    engine: &'a dyn GemmEngine,
+    budget: MemBudget,
+    tile: usize,
+    inner: Mutex<TileInner>,
+}
+
+/// Result of resolving a tile: resident in the cache, or a transient copy
+/// that could not be admitted under the budget.
+enum Got {
+    Resident,
+    Transient(Mat),
+}
+
+impl<'a> TileStore<'a> {
+    pub fn new(
+        data: &'a Dataset,
+        engine: &'a dyn GemmEngine,
+        budget: MemBudget,
+        tile: usize,
+    ) -> TileStore<'a> {
+        assert!(tile >= 1, "tile size must be positive");
+        TileStore {
+            data,
+            engine,
+            budget,
+            tile,
+            inner: Mutex::new(TileInner {
+                resident: HashMap::new(),
+                disk: HashMap::new(),
+                spill: None,
+                next_slot: 0,
+                clock: 0,
+                stats: TileStats::default(),
+            }),
+        }
+    }
+
+    /// Edge length of a full tile (boundary tiles are smaller).
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Number of distinct tiles the full statistics decompose into:
+    /// upper-triangular `S_xx` blocks plus all `S_xy` blocks. The screened-
+    /// path perf claim is `stats().computes < total_tiles()`.
+    pub fn total_tiles(&self) -> usize {
+        let nbx = self.data.p().div_ceil(self.tile);
+        let nby = self.data.q().div_ceil(self.tile);
+        nbx * (nbx + 1) / 2 + nbx * nby
+    }
+
+    /// Snapshot of the lifetime counters.
+    pub fn stats(&self) -> TileStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Bytes currently pinned by resident tiles (what the cache "costs" in
+    /// the budget right now — feeds `SolverContext::cached_stat_bytes` and
+    /// hence the serve registry's pinned-byte accounting).
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.resident.values().map(|t| t.mat.bytes()).sum()
+    }
+
+    /// Number of tiles currently resident.
+    pub fn resident_tiles(&self) -> usize {
+        self.inner.lock().unwrap().resident.len()
+    }
+
+    /// Path of the spill file, once budget pressure has created one
+    /// (tests corrupt it to exercise torn-file recovery).
+    pub fn spill_path(&self) -> Option<PathBuf> {
+        self.inner
+            .lock()
+            .unwrap()
+            .spill
+            .as_ref()
+            .map(|s| s.path.clone())
+    }
+
+    /// `(S_xx)_ij` through the tile cache. Never fails: under an impossible
+    /// budget the entry is served from an uncached transient tile.
+    pub fn sxx_entry(&self, i: usize, j: usize) -> f64 {
+        let mut inner = self.inner.lock().unwrap();
+        self.sxx_at(&mut inner, i, j)
+    }
+
+    /// `(S_xy)_ij` through the tile cache.
+    pub fn sxy_entry(&self, i: usize, j: usize) -> f64 {
+        let t = self.tile;
+        let key = TileKey::Sxy((i / t) as u32, (j / t) as u32);
+        let (li, lj) = (i % t, j % t);
+        let mut inner = self.inner.lock().unwrap();
+        match self.ensure(&mut inner, key) {
+            Got::Resident => inner.resident[&key].mat[(li, lj)],
+            Got::Transient(m) => m[(li, lj)],
+        }
+    }
+
+    /// Row `i` of `S_xx` restricted to `cols`, appended into `out` — the
+    /// tile-cache counterpart of [`Dataset::sxx_row_restricted`], resolving
+    /// each needed tile at most once per miss under a single lock.
+    pub fn sxx_row_restricted(&self, i: usize, cols: &[usize], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(cols.len());
+        let mut inner = self.inner.lock().unwrap();
+        for &k in cols {
+            let v = self.sxx_at(&mut inner, i, k);
+            out.push(v);
+        }
+    }
+
+    fn sxx_at(&self, inner: &mut TileInner, i: usize, j: usize) -> f64 {
+        let t = self.tile;
+        let (bi, bj) = (i / t, j / t);
+        // Canonical upper-triangular block; the mirror entry reads the
+        // transposed local position (S_xx is symmetric).
+        let (key, li, lj) = if bi <= bj {
+            (TileKey::Sxx(bi as u32, bj as u32), i % t, j % t)
+        } else {
+            (TileKey::Sxx(bj as u32, bi as u32), j % t, i % t)
+        };
+        match self.ensure(inner, key) {
+            Got::Resident => inner.resident[&key].mat[(li, lj)],
+            Got::Transient(m) => m[(li, lj)],
+        }
+    }
+
+    /// Make `key` resident (hit, reload, or compute), spilling LRU tiles
+    /// under budget pressure. Returns the tile by value only when the budget
+    /// cannot hold it even with every other tile evicted.
+    fn ensure(&self, inner: &mut TileInner, key: TileKey) -> Got {
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(tile) = inner.resident.get_mut(&key) {
+            tile.last_used = clock;
+            inner.stats.hits += 1;
+            return Got::Resident;
+        }
+        inner.stats.misses += 1;
+        // Disk before FLOPs: a previously spilled tile reloads in O(t²) I/O.
+        let mat = match self.try_reload(inner, key) {
+            Some(m) => {
+                inner.stats.reloads += 1;
+                m
+            }
+            None => {
+                inner.stats.computes += 1;
+                self.compute_tile(key)
+            }
+        };
+        let bytes = mat.bytes();
+        loop {
+            match self.budget.track(bytes) {
+                Ok(track) => {
+                    inner.resident.insert(
+                        key,
+                        ResidentTile {
+                            mat,
+                            last_used: clock,
+                            _track: track,
+                        },
+                    );
+                    return Got::Resident;
+                }
+                Err(_) => {
+                    if !self.spill_lru(inner) {
+                        // Nothing left to evict: serve the read from the
+                        // transient tile (§4.2's one-row-at-a-time mode).
+                        return Got::Transient(mat);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evict the least-recently-used resident tile, writing a disk copy
+    /// first unless one already exists (tiles are immutable, so an old spill
+    /// stays valid). Returns false when nothing is resident.
+    fn spill_lru(&self, inner: &mut TileInner) -> bool {
+        let Some((&key, _)) = inner
+            .resident
+            .iter()
+            .min_by_key(|(_, tile)| tile.last_used)
+        else {
+            return false;
+        };
+        let tile = inner.resident.remove(&key).expect("key just found");
+        inner.stats.evictions += 1;
+        if !inner.disk.contains_key(&key) {
+            match self.write_spill(inner, key, &tile.mat) {
+                Ok(()) => inner.stats.spills += 1,
+                // A failed write just drops the tile; the next touch
+                // recomputes it — slower, never wrong.
+                Err(_) => {}
+            }
+        }
+        true // dropping `tile` releases its Tracked bytes
+    }
+
+    fn slot_bytes(&self) -> u64 {
+        HEADER_BYTES + (self.tile * self.tile * 8) as u64
+    }
+
+    fn write_spill(&self, inner: &mut TileInner, key: TileKey, mat: &Mat) -> io::Result<()> {
+        if inner.spill.is_none() {
+            let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+            let path = std::env::temp_dir().join(format!(
+                "cggm-tiles-{}-{}.spill",
+                std::process::id(),
+                seq
+            ));
+            let file = File::options()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&path)?;
+            inner.spill = Some(SpillFile { file, path });
+        }
+        let slot = match inner.disk.get(&key) {
+            Some(d) => d.slot,
+            None => {
+                let s = inner.next_slot;
+                inner.next_slot += 1;
+                s
+            }
+        };
+        let (rows, cols) = (mat.rows(), mat.cols());
+        let (bi, bj) = key.blocks();
+        let mut buf = Vec::with_capacity(HEADER_BYTES as usize + rows * cols * 8);
+        buf.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&key.tag().to_le_bytes());
+        buf.extend_from_slice(&bi.to_le_bytes());
+        buf.extend_from_slice(&bj.to_le_bytes());
+        buf.extend_from_slice(&(rows as u32).to_le_bytes());
+        buf.extend_from_slice(&(cols as u32).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 4]); // pad header to 32 bytes
+        for &v in mat.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let file = &inner.spill.as_ref().expect("spill just ensured").file;
+        file.write_all_at(&buf, slot * self.slot_bytes())?;
+        inner.disk.insert(
+            key,
+            DiskSlot {
+                slot,
+                rows: rows as u32,
+                cols: cols as u32,
+            },
+        );
+        Ok(())
+    }
+
+    /// Read a spilled tile back, verifying the slot header. Any torn,
+    /// truncated, or mismatched slot invalidates the disk copy and falls
+    /// back to recomputation — corruption costs time, never correctness.
+    fn try_reload(&self, inner: &mut TileInner, key: TileKey) -> Option<Mat> {
+        let slot = *inner.disk.get(&key)?;
+        let mat = self.read_slot(inner, key, slot);
+        if mat.is_none() {
+            inner.disk.remove(&key);
+        }
+        mat
+    }
+
+    fn read_slot(&self, inner: &TileInner, key: TileKey, d: DiskSlot) -> Option<Mat> {
+        let file = &inner.spill.as_ref()?.file;
+        let off = d.slot * self.slot_bytes();
+        let mut head = [0u8; HEADER_BYTES as usize];
+        file.read_exact_at(&mut head, off).ok()?;
+        let magic = u64::from_le_bytes(head[0..8].try_into().unwrap());
+        let tag = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let bi = u32::from_le_bytes(head[12..16].try_into().unwrap());
+        let bj = u32::from_le_bytes(head[16..20].try_into().unwrap());
+        let rows = u32::from_le_bytes(head[20..24].try_into().unwrap());
+        let cols = u32::from_le_bytes(head[24..28].try_into().unwrap());
+        let want = key.blocks();
+        if magic != SPILL_MAGIC
+            || tag != key.tag()
+            || (bi, bj) != want
+            || rows != d.rows
+            || cols != d.cols
+        {
+            return None;
+        }
+        let elems = rows as usize * cols as usize;
+        let mut payload = vec![0u8; elems * 8];
+        file.read_exact_at(&mut payload, off + HEADER_BYTES).ok()?;
+        let data = payload
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Some(Mat::from_rows(rows as usize, cols as usize, data))
+    }
+
+    /// Build one tile: stream the two column panels and run the packed
+    /// row-Gram product (the same idiom as the dense `S` builders, restricted
+    /// to the block).
+    fn compute_tile(&self, key: TileKey) -> Mat {
+        let (t, n, inv_n) = (self.tile, self.data.n(), self.data.inv_n());
+        let range = |b: u32, dim: usize| {
+            let lo = b as usize * t;
+            lo..(lo + t).min(dim)
+        };
+        match key {
+            TileKey::Sxx(bi, bj) => {
+                let (ri, rj) = (range(bi, self.data.p()), range(bj, self.data.p()));
+                let mut pa = Mat::zeros(ri.len(), n);
+                self.data.x_panel_into(ri, &mut pa);
+                let mut out = Mat::zeros(pa.rows(), rj.len());
+                if bi == bj {
+                    self.engine.gemm_nt(inv_n, &pa, &pa, 0.0, &mut out);
+                } else {
+                    let mut pb = Mat::zeros(rj.len(), n);
+                    self.data.x_panel_into(rj, &mut pb);
+                    self.engine.gemm_nt(inv_n, &pa, &pb, 0.0, &mut out);
+                }
+                out
+            }
+            TileKey::Sxy(bi, bj) => {
+                let (ri, rj) = (range(bi, self.data.p()), range(bj, self.data.q()));
+                let mut pa = Mat::zeros(ri.len(), n);
+                self.data.x_panel_into(ri, &mut pa);
+                let mut pb = Mat::zeros(rj.len(), n);
+                self.data.y_panel_into(rj, &mut pb);
+                let mut out = Mat::zeros(pa.rows(), pb.rows());
+                self.engine.gemm_nt(inv_n, &pa, &pb, 0.0, &mut out);
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::native::NativeGemm;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check_close, property};
+
+    fn random_dataset(rng: &mut Rng, n: usize, p: usize, q: usize) -> Dataset {
+        Dataset::new(
+            Mat::from_fn(p, n, |_, _| rng.normal()),
+            Mat::from_fn(q, n, |_, _| rng.normal()),
+        )
+    }
+
+    #[test]
+    fn tiled_entries_match_dense() {
+        property(15, |rng| {
+            let (n, p, q) = (2 + rng.below(9), 1 + rng.below(12), 1 + rng.below(9));
+            let tile = 1 + rng.below(5);
+            let d = random_dataset(rng, n, p, q);
+            let eng = NativeGemm::new(1);
+            let ts = TileStore::new(&d, &eng, MemBudget::unlimited(), tile);
+            for i in 0..p {
+                for j in 0..p {
+                    check_close(ts.sxx_entry(i, j), d.sxx(i, j), 1e-12, "sxx")?;
+                }
+                for j in 0..q {
+                    check_close(ts.sxy_entry(i, j), d.sxy(i, j), 1e-12, "sxy")?;
+                }
+            }
+            // Every tile computed at most once under an unlimited budget.
+            let st = ts.stats();
+            if st.computes > ts.total_tiles() {
+                return Err(format!(
+                    "computed {} tiles, only {} exist",
+                    st.computes,
+                    ts.total_tiles()
+                ));
+            }
+            if st.evictions != 0 || st.spills != 0 {
+                return Err("unlimited budget must never evict".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_restricted_matches_dataset() {
+        let mut rng = Rng::new(11);
+        let d = random_dataset(&mut rng, 7, 13, 3);
+        let eng = NativeGemm::new(1);
+        let ts = TileStore::new(&d, &eng, MemBudget::unlimited(), 4);
+        let cols = vec![0, 3, 9, 12, 5];
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        ts.sxx_row_restricted(6, &cols, &mut got);
+        d.sxx_row_restricted(6, &cols, &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lru_eviction_keeps_peak_under_budget() {
+        let mut rng = Rng::new(5);
+        let d = random_dataset(&mut rng, 10, 16, 4);
+        let eng = NativeGemm::new(1);
+        // tile 4 → a full S_xx tile is 4·4·8 = 128 bytes; allow two.
+        let budget = MemBudget::new(256);
+        let ts = TileStore::new(&d, &eng, budget.clone(), 4);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert!((ts.sxx_entry(i, j) - d.sxx(i, j)).abs() < 1e-12);
+            }
+        }
+        assert!(budget.peak() <= 256, "peak {} over cap", budget.peak());
+        let st = ts.stats();
+        assert!(st.evictions > 0, "16 blocks cannot fit in 2 slots");
+        assert!(st.spills > 0);
+        assert!(ts.resident_bytes() <= 256);
+    }
+
+    #[test]
+    fn spill_reload_roundtrip_avoids_recompute() {
+        let mut rng = Rng::new(8);
+        let d = random_dataset(&mut rng, 9, 8, 2);
+        let eng = NativeGemm::new(1);
+        // Exactly one resident 4×4 tile (128 bytes).
+        let ts = TileStore::new(&d, &eng, MemBudget::new(128), 4);
+        let a = ts.sxx_entry(0, 0); // tile (0,0) computed
+        let _ = ts.sxx_entry(4, 4); // tile (1,1) computed; (0,0) spilled
+        assert_eq!(ts.stats().computes, 2);
+        assert_eq!(ts.stats().spills, 1);
+        let a2 = ts.sxx_entry(0, 0); // (0,0) reloads from disk, (1,1) spills
+        assert_eq!(a, a2);
+        let st = ts.stats();
+        assert_eq!(st.computes, 2, "reload must not recompute");
+        assert_eq!(st.reloads, 1);
+        // Re-evicting a tile whose disk copy is still valid writes nothing
+        // new: ping-ponging between the two tiles leaves spills at 2 (one
+        // fresh write per tile) while evictions keep climbing.
+        let _ = ts.sxx_entry(4, 4);
+        let _ = ts.sxx_entry(0, 0);
+        let st = ts.stats();
+        assert_eq!(st.spills, 2, "each tile spills fresh exactly once");
+        assert_eq!(st.reloads, 3);
+        assert!(st.evictions >= 3);
+    }
+
+    #[test]
+    fn torn_spill_file_recomputes_correctly() {
+        let mut rng = Rng::new(13);
+        let d = random_dataset(&mut rng, 9, 8, 2);
+        let eng = NativeGemm::new(1);
+        let ts = TileStore::new(&d, &eng, MemBudget::new(128), 4);
+        let a = ts.sxx_entry(0, 0);
+        let _ = ts.sxx_entry(4, 4); // spills (0,0)
+        let path = ts.spill_path().expect("eviction created a spill file");
+        // Truncate mid-header: the reload must detect the torn slot.
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(5)
+            .unwrap();
+        let a2 = ts.sxx_entry(0, 0);
+        assert_eq!(a, a2, "recomputed tile must match");
+        let st = ts.stats();
+        assert_eq!(st.reloads, 0, "torn slot must not count as a reload");
+        assert_eq!(st.computes, 3, "torn slot falls back to recompute");
+    }
+
+    #[test]
+    fn impossible_budget_serves_transient_reads() {
+        let mut rng = Rng::new(21);
+        let d = random_dataset(&mut rng, 6, 9, 3);
+        let eng = NativeGemm::new(1);
+        let budget = MemBudget::new(8); // smaller than any tile
+        let ts = TileStore::new(&d, &eng, budget.clone(), 4);
+        for i in 0..9 {
+            for j in 0..3 {
+                assert!((ts.sxy_entry(i, j) - d.sxy(i, j)).abs() < 1e-12);
+            }
+        }
+        assert_eq!(ts.resident_tiles(), 0);
+        assert_eq!(budget.peak(), 0, "transient tiles are never tracked");
+    }
+
+    #[test]
+    fn total_tiles_counts_triangle_plus_cross() {
+        let mut rng = Rng::new(2);
+        let d = random_dataset(&mut rng, 5, 10, 6);
+        let eng = NativeGemm::new(1);
+        // p=10, q=6, tile 4 → nbx=3, nby=2 → 3·4/2 + 3·2 = 12.
+        let ts = TileStore::new(&d, &eng, MemBudget::unlimited(), 4);
+        assert_eq!(ts.total_tiles(), 12);
+    }
+}

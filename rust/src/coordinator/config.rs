@@ -7,7 +7,7 @@
 use crate::cggm::active::ScreenRule;
 use crate::cggm::factor::CholKind;
 use crate::datagen::Workload;
-use crate::solvers::{SolveOptions, SolverKind};
+use crate::solvers::{SolveOptions, SolverKind, StatMode};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::membudget::{parse_bytes, MemBudget};
@@ -32,6 +32,20 @@ pub struct RunConfig {
     pub cd_threads: usize,
     pub engine: String,
     pub tile: usize,
+    /// Gram-statistics mode (`--stat-mode dense|tiled`): `dense` is the
+    /// eager cached path; `tiled` makes the block solver compute S_xx/S_xy
+    /// Gram tiles on demand through the budget-bound LRU tile cache
+    /// (docs/PERF.md "Tile memory model").
+    pub stat_mode: String,
+    /// Square tile edge for `stat_mode = tiled` (`--stat-tile`).
+    pub stat_tile: usize,
+    /// One-shot construction-time probe of native-GEMM cache-block sizes
+    /// (`--gemm-autotune`). Machine-dependent by design; mutually exclusive
+    /// with `gemm_blocks`, which wins when both are set.
+    pub gemm_autotune: bool,
+    /// Explicit native-GEMM cache blocks `(mc, kc, nc)`
+    /// (`--gemm-blocks mc,kc,nc` / config string `"mc,kc,nc"`).
+    pub gemm_blocks: Option<(usize, usize, usize)>,
     pub mem_budget: Option<usize>,
     pub clustering: bool,
     pub time_limit: f64,
@@ -87,6 +101,10 @@ impl Default for RunConfig {
             cd_threads: 1,
             engine: "native".into(),
             tile: 256,
+            stat_mode: "dense".into(),
+            stat_tile: 256,
+            gemm_autotune: false,
+            gemm_blocks: None,
             mem_budget: None,
             clustering: true,
             time_limit: 0.0,
@@ -172,6 +190,28 @@ impl RunConfig {
                 self.engine = val.as_str().ok_or_else(|| bad("expected string"))?.into()
             }
             "tile" => self.tile = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "stat_mode" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string"))?;
+                if StatMode::parse(s, 1).is_none() {
+                    return Err(bad("expected 'dense' or 'tiled'"));
+                }
+                self.stat_mode = s.into();
+            }
+            "stat_tile" => {
+                let t = val.as_usize().ok_or_else(|| bad("expected int"))?;
+                if t == 0 {
+                    return Err(bad("tile edge must be >= 1"));
+                }
+                self.stat_tile = t;
+            }
+            "gemm_autotune" => {
+                self.gemm_autotune = val.as_bool().ok_or_else(|| bad("expected bool"))?
+            }
+            "gemm_blocks" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string 'mc,kc,nc'"))?;
+                self.gemm_blocks =
+                    Some(parse_block_triple(s).ok_or_else(|| bad("expected 'mc,kc,nc'"))?);
+            }
             "mem_budget" => {
                 let s = val.as_str().ok_or_else(|| bad("expected string like '512MB'"))?;
                 self.mem_budget =
@@ -254,6 +294,24 @@ impl RunConfig {
         self.cd_threads = args.get_usize("cd-threads", self.cd_threads);
         self.engine = args.get_str("engine", &self.engine);
         self.tile = args.get_usize("tile", self.tile);
+        if let Some(s) = args.opt("stat-mode") {
+            assert!(
+                StatMode::parse(s, 1).is_some(),
+                "--stat-mode expects 'dense' or 'tiled', got '{s}'"
+            );
+            self.stat_mode = s.to_string();
+        }
+        self.stat_tile = args.get_usize("stat-tile", self.stat_tile);
+        assert!(self.stat_tile >= 1, "--stat-tile expects a tile edge >= 1");
+        if args.flag("gemm-autotune") {
+            self.gemm_autotune = true;
+        }
+        if let Some(s) = args.opt("gemm-blocks") {
+            self.gemm_blocks = Some(
+                parse_block_triple(s)
+                    .unwrap_or_else(|| panic!("--gemm-blocks expects mc,kc,nc, got '{s}'")),
+            );
+        }
         if let Some(b) = args.opt("mem-budget") {
             self.mem_budget = Some(parse_bytes(b).expect("--mem-budget like 512MB"));
         }
@@ -341,8 +399,22 @@ impl RunConfig {
             time_limit: self.time_limit,
             seed: self.seed,
             recluster_churn: self.recluster_churn,
+            stat_mode: StatMode::parse(&self.stat_mode, self.stat_tile)
+                .expect("stat_mode validated at apply time"),
             ..Default::default()
         }
+    }
+}
+
+/// Parse `"mc,kc,nc"` into a block triple (whitespace-tolerant).
+fn parse_block_triple(s: &str) -> Option<(usize, usize, usize)> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|t| t.trim().replace('_', "").parse().ok())
+        .collect::<Option<Vec<_>>>()?;
+    match parts[..] {
+        [mc, kc, nc] => Some((mc, kc, nc)),
+        _ => None,
     }
 }
 
@@ -532,6 +604,48 @@ mod tests {
             Some(std::path::Path::new("cv.jsonl"))
         );
         assert!(!cvo.resume, "resume is a CLI-level decision");
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn stat_and_gemm_keys_layer_like_the_rest() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_stat.json");
+        std::fs::write(
+            &tmp,
+            r#"{"stat_mode": "tiled", "stat_tile": 64,
+                "gemm_blocks": "128,128,512", "gemm_autotune": true}"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.stat_mode, "tiled");
+        assert_eq!(cfg.stat_tile, 64);
+        assert_eq!(cfg.gemm_blocks, Some((128, 128, 512)));
+        assert!(cfg.gemm_autotune);
+        assert_eq!(cfg.solve_options().stat_mode, StatMode::Tiled(64));
+        let args = Args::parse(
+            &[
+                "--stat-mode".into(),
+                "dense".into(),
+                "--gemm-blocks".into(),
+                "96,192,384".into(),
+            ],
+            &["gemm-autotune"],
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.solve_options().stat_mode, StatMode::Dense);
+        assert_eq!(cfg.gemm_blocks, Some((96, 192, 384)));
+        // Defaults: eager dense stats, compiled-in GEMM blocks.
+        let d = RunConfig::default();
+        assert_eq!(d.solve_options().stat_mode, StatMode::Dense);
+        assert_eq!(d.gemm_blocks, None);
+        assert!(!d.gemm_autotune);
+        // Bad values fail loudly.
+        std::fs::write(&tmp, r#"{"stat_mode": "sideways"}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
+        std::fs::write(&tmp, r#"{"stat_tile": 0}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
+        std::fs::write(&tmp, r#"{"gemm_blocks": "64,256"}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
         let _ = std::fs::remove_file(tmp);
     }
 

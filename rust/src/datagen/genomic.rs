@@ -12,6 +12,15 @@
 //! - **Θ***: *cis* effects (a gene regulated by a few nearby SNPs) plus a few
 //!   *trans* hotspot SNPs that each regulate many genes — producing the
 //!   row-sparse Θ with non-empty-row count p̃ ≪ p that §4.2 exploits.
+//!
+//! At the paper's shape (p ≈ 4.4·10⁵) the dense `S_xx` alone is 8·p² ≈
+//! 1.5 TiB — far past any single-machine budget — so paper-scale runs of
+//! this workload require `--stat-mode tiled` (the row-sparse Θ means a
+//! screened solve touches a small fraction of the tile grid; see
+//! docs/PERF.md). The LD-block structure is also the adversarial case for
+//! the tile cache: correlated neighboring SNPs concentrate reads inside
+//! block-diagonal tiles, which is exactly the access pattern the LRU keeps
+//! resident.
 
 use super::cluster_graph::{clustered_lambda, ClusterOptions};
 use super::sampler::sample_dataset;
@@ -157,6 +166,33 @@ mod tests {
             within > across,
             "LD structure missing: within={within} across={across}"
         );
+    }
+
+    /// The tile cache must agree with direct Gram reads on this generator's
+    /// LD-correlated, standardized design — the p ≫ q shape tiled mode
+    /// exists for (chain/cluster equivalence lives in the integration
+    /// suite; this pins the datagen-specific input statistics).
+    #[test]
+    fn tiled_reads_match_direct_gram_on_ld_design() {
+        use crate::cggm::tiles::TileStore;
+        use crate::gemm::native::NativeGemm;
+        use crate::util::membudget::MemBudget;
+        let prob = generate(90, 12, 60, 13, &GenomicOptions::default());
+        let d = &prob.data;
+        let eng = NativeGemm::new(1);
+        let ts = TileStore::new(d, &eng, MemBudget::unlimited(), 16);
+        for &(i, j) in &[(0usize, 1usize), (5, 40), (83, 2), (89, 89)] {
+            assert!(
+                (ts.sxx_entry(i, j) - d.sxx(i, j)).abs() < 1e-12,
+                "S_xx({i},{j}) disagrees through the tile cache"
+            );
+        }
+        for &(i, j) in &[(0usize, 0usize), (47, 11), (89, 3)] {
+            assert!(
+                (ts.sxy_entry(i, j) - d.sxy(i, j)).abs() < 1e-12,
+                "S_xy({i},{j}) disagrees through the tile cache"
+            );
+        }
     }
 
     #[test]

@@ -36,9 +36,12 @@ use std::sync::Mutex;
 /// Micro-kernel tile: MR×NR C block with register accumulators.
 const MR: usize = 4;
 const NR: usize = 8;
-/// Cache-block sizes: MC×KC packed panel of A (L2-resident), KC×NC packed
-/// panel of B (streamed through L1 in NR-column tiles). MC is a multiple of
-/// MR and NC of NR so tiles never straddle a panel edge.
+/// Default cache-block sizes: MC×KC packed panel of A (L2-resident), KC×NC
+/// packed panel of B (streamed through L1 in NR-column tiles). MC is a
+/// multiple of MR and NC of NR so tiles never straddle a panel edge.
+/// Per-instance overrides ([`NativeGemm::with_blocks`], `autotuned`) must
+/// keep the packed-panel footprint under this default's, so
+/// [`NativeGemm::scratch_bytes_bound`] stays a valid bound for every engine.
 const MC: usize = 64;
 const KC: usize = 256;
 const NC: usize = 512;
@@ -51,24 +54,98 @@ const POOL_MAX_ELEMS: usize = 4 * (MC * KC + NC * KC);
 /// Native engine with a configurable thread count (paper §Parallelization).
 pub struct NativeGemm {
     par: Parallelism,
+    /// Cache-block sizes for this instance (defaults MC/KC/NC; see
+    /// [`Self::with_blocks`] for the invariants).
+    mc: usize,
+    kc: usize,
+    nc: usize,
     /// Recycled pack buffers (byte-bounded; see module docs).
     pool: Mutex<Vec<Vec<f64>>>,
 }
 
 impl NativeGemm {
     pub fn new(threads: usize) -> Self {
+        Self::with_blocks(threads, MC, KC, NC)
+    }
+
+    /// Engine with explicit cache-block sizes (config key `gemm_blocks` /
+    /// CLI `--gemm-blocks mc,kc,nc`). Invariants: `mc` a multiple of MR and
+    /// `nc` of NR (tiles never straddle a panel edge), and the packed-panel
+    /// footprint `(mc+nc)·kc` no larger than the default's so
+    /// [`Self::scratch_bytes_bound`] remains valid for every instance.
+    /// Results stay bitwise deterministic for a *fixed* block choice (the
+    /// band split does not affect summation order), but different `kc`
+    /// groupings legitimately round differently at ~1e-15.
+    pub fn with_blocks(threads: usize, mc: usize, kc: usize, nc: usize) -> Self {
+        assert!(mc >= MR && mc % MR == 0, "mc must be a positive multiple of {MR}");
+        assert!(nc >= NR && nc % NR == 0, "nc must be a positive multiple of {NR}");
+        assert!(kc >= 1, "kc must be >= 1");
+        assert!(
+            (mc + nc) * kc <= (MC + NC) * KC,
+            "block footprint (mc+nc)*kc = {} exceeds the scratch bound {}",
+            (mc + nc) * kc,
+            (MC + NC) * KC
+        );
         NativeGemm {
             par: Parallelism::new(threads),
+            mc,
+            kc,
+            nc,
             pool: Mutex::new(Vec::new()),
         }
     }
 
+    /// One-shot construction-time autotune (config key `gemm_autotune` / CLI
+    /// `--gemm-autotune`): time a warm mid-sized `gemm_nt` — the Gram-product
+    /// shape every statistics build uses — for each candidate block triple
+    /// and keep the fastest. Candidates all satisfy the `with_blocks`
+    /// footprint invariant. Cost is a few tens of MFLOPs once per engine;
+    /// the probe result is machine-dependent by design, so benches that
+    /// need run-to-run reproducibility should pass explicit blocks instead.
+    pub fn autotuned(threads: usize) -> Self {
+        const CANDIDATES: [(usize, usize, usize); 4] = [
+            (MC, KC, NC),
+            (128, 128, 512),
+            (32, 512, 256),
+            (96, 192, 384),
+        ];
+        let (m, k, n) = (160, 320, 320);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let a = Mat::from_fn(m, k, |_, _| rng.normal());
+        let b = Mat::from_fn(n, k, |_, _| rng.normal());
+        let mut c = Mat::zeros(m, n);
+        let mut best = CANDIDATES[0];
+        let mut best_t = f64::INFINITY;
+        for &(mc, kc, nc) in &CANDIDATES {
+            let eng = Self::with_blocks(threads, mc, kc, nc);
+            eng.gemm_nt(1.0, &a, &b, 0.0, &mut c); // warm pool + caches
+            let mut t = f64::INFINITY;
+            for _ in 0..2 {
+                let start = std::time::Instant::now();
+                eng.gemm_nt(1.0, &a, &b, 0.0, &mut c);
+                t = t.min(start.elapsed().as_secs_f64());
+            }
+            if t < best_t {
+                best_t = t;
+                best = (mc, kc, nc);
+            }
+        }
+        Self::with_blocks(threads, best.0, best.1, best.2)
+    }
+
+    /// This instance's cache-block sizes `(mc, kc, nc)`.
+    pub fn blocks(&self) -> (usize, usize, usize) {
+        (self.mc, self.kc, self.nc)
+    }
+
     /// Worst-case engine-internal scratch in bytes for `threads` workers:
     /// one A + one B pack panel per in-flight band worker, plus the pool's
-    /// idle retention cap. This scratch is outside [`crate::util::membudget`]
-    /// accounting (the `GemmEngine` trait carries no budget handle and the
-    /// workspace arena is single-owner); callers that need an airtight
-    /// memory plan can register this bound against their budget up front.
+    /// idle retention cap. Valid for every instance — `with_blocks` rejects
+    /// block triples whose panels exceed the default footprint. This scratch
+    /// is outside [`crate::util::membudget`] accounting (the `GemmEngine`
+    /// trait carries no budget handle and the workspace arena is
+    /// single-owner); callers that need an airtight memory plan can register
+    /// this bound against their budget up front.
     pub fn scratch_bytes_bound(threads: usize) -> usize {
         let f = std::mem::size_of::<f64>();
         threads.max(1) * (MC * KC + NC * KC) * f + POOL_MAX_ELEMS * f
@@ -124,22 +201,23 @@ impl NativeGemm {
         if alpha == 0.0 || kdim == 0 {
             return;
         }
-        // MC-row bands of C are disjoint; each band worker packs its own A
+        let (mc, kc, nc) = (self.mc, self.kc, self.nc);
+        // mc-row bands of C are disjoint; each band worker packs its own A
         // panel (band-local) and B panel (shared values, re-packed per band
-        // — an O(k·n) cost against the band's O(MC·n·k) compute, ≈1/MC).
-        self.par.parallel_chunks_mut(c.data_mut(), MC * n, |band, cband| {
-            let i0 = band * MC;
+        // — an O(k·n) cost against the band's O(mc·n·k) compute, ≈1/mc).
+        self.par.parallel_chunks_mut(c.data_mut(), mc * n, |band, cband| {
+            let i0 = band * mc;
             let ib = cband.len() / n;
-            let mut apack = self.take_buf(MC * KC);
-            let mut bpack = self.take_buf(NC * KC);
-            for p0 in (0..kdim).step_by(KC) {
-                let kb = KC.min(kdim - p0);
+            let mut apack = self.take_buf(mc * kc);
+            let mut bpack = self.take_buf(nc * kc);
+            for p0 in (0..kdim).step_by(kc) {
+                let kb = kc.min(kdim - p0);
                 match kind {
                     PackKind::Tn => pack_a_tn(a, i0, ib, p0, kb, &mut apack),
                     _ => pack_a_nn(a, i0, ib, p0, kb, &mut apack),
                 }
-                for j0 in (0..n).step_by(NC) {
-                    let jb = NC.min(n - j0);
+                for j0 in (0..n).step_by(nc) {
+                    let jb = nc.min(n - j0);
                     match kind {
                         PackKind::Nt => pack_b_nt(b, p0, kb, j0, jb, &mut bpack),
                         _ => pack_b_nn(b, p0, kb, j0, jb, &mut bpack),
@@ -468,6 +546,48 @@ mod tests {
         assert!(b1 > 0 && b4 > b1);
         // Pool retention cap is part of the bound.
         assert!(b1 >= POOL_MAX_ELEMS * 8);
+    }
+
+    /// Non-default block triples stay correct across packing edges — the
+    /// invariant the autotuner relies on to swap triples freely.
+    #[test]
+    fn custom_blocks_match_reference() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (m, k, n) = (67, 300, 530);
+        let a = Mat::from_fn(m, k, |_, _| rng.normal());
+        let b = Mat::from_fn(k, n, |_, _| rng.normal());
+        let mut want = Mat::zeros(m, n);
+        reference_gemm(1.0, &a, &b, 0.0, &mut want);
+        for (mc, kc, nc) in [(128, 128, 512), (32, 512, 256), (96, 192, 384), (4, 1, 8)] {
+            let eng = NativeGemm::with_blocks(2, mc, kc, nc);
+            assert_eq!(eng.blocks(), (mc, kc, nc));
+            let mut c = Mat::zeros(m, n);
+            eng.gemm(1.0, &a, &b, 0.0, &mut c);
+            check_all_close(c.data(), want.data(), 1e-10, &format!("{mc},{kc},{nc}"))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn autotuned_engine_is_valid_and_correct() {
+        let eng = NativeGemm::autotuned(2);
+        let (mc, kc, nc) = eng.blocks();
+        assert!(mc % MR == 0 && nc % NR == 0 && kc >= 1);
+        assert!((mc + nc) * kc <= (MC + NC) * KC);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let a = Mat::from_fn(20, 50, |_, _| rng.normal());
+        let b = Mat::from_fn(50, 30, |_, _| rng.normal());
+        let mut c = Mat::zeros(20, 30);
+        let mut want = Mat::zeros(20, 30);
+        eng.gemm(1.0, &a, &b, 0.0, &mut c);
+        reference_gemm(1.0, &a, &b, 0.0, &mut want);
+        check_all_close(c.data(), want.data(), 1e-10, "autotuned").unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "block footprint")]
+    fn oversized_blocks_rejected() {
+        let _ = NativeGemm::with_blocks(1, 256, 512, 512);
     }
 
     #[test]

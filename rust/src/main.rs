@@ -32,6 +32,7 @@ const BOOL_FLAGS: &[&str] = &[
     "quick",
     "cold",
     "one-se",
+    "gemm-autotune",
 ];
 
 fn main() {
@@ -76,9 +77,12 @@ COMMANDS
   fit   [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--lambda X | --calibrate] [--mem-budget 512MB] [--threads T]
         [--cd-threads T] [--engine native|xla|pallas [--tile 128|256]] [--trace]
+        [--stat-mode dense|tiled [--stat-tile N]]
+        [--gemm-blocks mc,kc,nc | --gemm-autotune]
         (--threads drives column/GEMM parallelism; --cd-threads > 1 switches
-         the CD sweeps to colored conflict-free parallel passes — see
-         docs/PERF.md)
+         the CD sweeps to colored conflict-free parallel passes;
+         --stat-mode tiled makes bcd compute S_xx/S_xy Gram tiles on demand
+         through a budget-bound LRU cache with disk spill — see docs/PERF.md)
   path  [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--path-points N] [--path-min-ratio R] [--screen full|strong] [--cold]
         [--checkpoint FILE | --resume FILE] [--recluster-churn X]
@@ -114,15 +118,23 @@ requires `make artifacts`)."#
     );
 }
 
-fn make_engine(args: &Args) -> std::sync::Arc<dyn GemmEngine> {
-    let kind = args.get_str("engine", "native");
-    let threads = args.get_usize("threads", 1);
-    let tile = args.get_usize("tile", 256);
-    match runtime::make_engine(&kind, threads, tile) {
+/// Engine from the layered config (defaults ← config file ← CLI flags):
+/// `--engine`, `--threads`, `--tile`, plus the native block-size policy
+/// (`--gemm-blocks mc,kc,nc` beats `--gemm-autotune` when both are given).
+fn make_engine(cfg: &RunConfig) -> std::sync::Arc<dyn GemmEngine> {
+    let blocks = match (cfg.gemm_blocks, cfg.gemm_autotune) {
+        (Some((mc, kc, nc)), _) => runtime::GemmBlocks::Explicit(mc, kc, nc),
+        (None, true) => runtime::GemmBlocks::Autotune,
+        (None, false) => runtime::GemmBlocks::Default,
+    };
+    match runtime::make_engine_with(&cfg.engine, cfg.threads, cfg.tile, blocks) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("engine '{kind}' unavailable ({e}); falling back to native");
-            std::sync::Arc::new(cggm::gemm::native::NativeGemm::new(threads))
+            eprintln!(
+                "engine '{}' unavailable ({e}); falling back to native",
+                cfg.engine
+            );
+            std::sync::Arc::new(cggm::gemm::native::NativeGemm::new(cfg.threads))
         }
     }
 }
@@ -192,7 +204,7 @@ fn load_problem(args: &Args, cfg: &RunConfig) -> Result<datagen::Problem, i32> {
 
 fn cmd_fit(args: &Args) -> i32 {
     let cfg = load_config(args);
-    let engine = make_engine(args);
+    let engine = make_engine(&cfg);
     let prob = match load_problem(args, &cfg) {
         Ok(p) => p,
         Err(code) => return code,
@@ -249,7 +261,7 @@ fn cmd_fit(args: &Args) -> i32 {
 
 fn cmd_path(args: &Args) -> i32 {
     let cfg = load_config(args);
-    let engine = make_engine(args);
+    let engine = make_engine(&cfg);
     let prob = match load_problem(args, &cfg) {
         Ok(p) => p,
         Err(code) => return code,
@@ -312,7 +324,7 @@ fn cmd_path(args: &Args) -> i32 {
 
 fn cmd_cv(args: &Args) -> i32 {
     let cfg = load_config(args);
-    let engine = make_engine(args);
+    let engine = make_engine(&cfg);
     let prob = match load_problem(args, &cfg) {
         Ok(p) => p,
         Err(code) => return code,
@@ -379,7 +391,7 @@ fn cmd_cv(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = load_config(args);
-    let engine = make_engine(args);
+    let engine = make_engine(&cfg);
     let budget = cfg
         .serve_budget
         .map(fmt_bytes)
@@ -445,7 +457,7 @@ fn cmd_batch(args: &Args) -> i32 {
         }
     };
     let cfg = load_config(args);
-    let engine = make_engine(args);
+    let engine = make_engine(&cfg);
     eprintln!(
         "cggm batch: {} job(s) from {file}, {} worker(s)",
         manifest.jobs().len(),
@@ -484,7 +496,8 @@ fn cmd_exp(args: &Args) -> i32 {
         }
         return 0;
     }
-    let engine = make_engine(args);
+    let cfg = load_config(args);
+    let engine = make_engine(&cfg);
     let mut code = 0;
     for id in &args.positional {
         let ids: Vec<String> = if id == "all" {
@@ -507,7 +520,7 @@ fn cmd_exp(args: &Args) -> i32 {
 
 fn cmd_cal(args: &Args) -> i32 {
     let cfg = load_config(args);
-    let engine = make_engine(args);
+    let engine = make_engine(&cfg);
     let prob = coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed);
     let opts = cfg.solve_options();
     let (l, t) = coordinator::calibrate_lambda(&prob, engine.as_ref(), &opts, 6);

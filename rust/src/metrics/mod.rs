@@ -123,6 +123,18 @@ pub struct SolveTrace {
     /// `solvers::solve_in_context`, so warm-vs-cold behavior is observable
     /// from the trace JSON without a profiler.
     pub warm_started: bool,
+    /// Tile-cache activity under `StatMode::Tiled` (all zero for dense-stat
+    /// solves): entry reads served from a resident tile / reads that had to
+    /// materialize one, LRU evictions and the subset spilled to disk, Gram
+    /// tiles actually built by GEMM, and the tile count a full S_xx/S_xy
+    /// would need — `tiles_computed < total_tiles` is the observable proof
+    /// that screening kept whole tiles untouched.
+    pub tile_hits: usize,
+    pub tile_misses: usize,
+    pub tile_evictions: usize,
+    pub tile_spills: usize,
+    pub tiles_computed: usize,
+    pub total_tiles: usize,
 }
 
 impl SolveTrace {
@@ -148,6 +160,12 @@ impl SolveTrace {
             ("cd_updates", Json::num(self.cd_updates as f64)),
             ("reclusterings", Json::num(self.reclusterings as f64)),
             ("warm_started", Json::Bool(self.warm_started)),
+            ("tile_hits", Json::num(self.tile_hits as f64)),
+            ("tile_misses", Json::num(self.tile_misses as f64)),
+            ("tile_evictions", Json::num(self.tile_evictions as f64)),
+            ("tile_spills", Json::num(self.tile_spills as f64)),
+            ("tiles_computed", Json::num(self.tiles_computed as f64)),
+            ("total_tiles", Json::num(self.total_tiles as f64)),
             (
                 "phases",
                 Json::arr(self.phases.iter().map(|(name, secs, calls)| {
@@ -248,9 +266,15 @@ mod tests {
             param_l1: 30.0,
         });
         t.converged = true;
+        t.tiles_computed = 7;
+        t.total_tiles = 12;
+        t.tile_hits = 100;
         let j = t.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.get("tiles_computed").unwrap().as_f64(), Some(7.0));
+        assert_eq!(parsed.get("total_tiles").unwrap().as_f64(), Some(12.0));
+        assert_eq!(parsed.get("tile_hits").unwrap().as_f64(), Some(100.0));
         assert_eq!(
             parsed.get("iters").unwrap().as_arr().unwrap()[0]
                 .get("f")

@@ -326,14 +326,44 @@ pub fn artifact_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+/// How the native engine picks its cache-block sizes (`--gemm-blocks` /
+/// `--gemm-autotune`; ignored by the PJRT engines, whose tiling is fixed by
+/// the compiled artifacts).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GemmBlocks {
+    /// Compiled-in defaults — deterministic across machines.
+    #[default]
+    Default,
+    /// Explicit `(mc, kc, nc)` triple.
+    Explicit(usize, usize, usize),
+    /// One-shot construction-time probe ([`NativeGemm::autotuned`]).
+    Autotune,
+}
+
 /// Build the configured engine: `native`, `xla`, or `pallas`.
 pub fn make_engine(
     kind: &str,
     threads: usize,
     tile: usize,
 ) -> Result<std::sync::Arc<dyn GemmEngine>, RuntimeError> {
+    make_engine_with(kind, threads, tile, GemmBlocks::Default)
+}
+
+/// [`make_engine`] with a native-engine block-size policy.
+pub fn make_engine_with(
+    kind: &str,
+    threads: usize,
+    tile: usize,
+    blocks: GemmBlocks,
+) -> Result<std::sync::Arc<dyn GemmEngine>, RuntimeError> {
     match kind {
-        "native" => Ok(std::sync::Arc::new(NativeGemm::new(threads))),
+        "native" => Ok(match blocks {
+            GemmBlocks::Default => std::sync::Arc::new(NativeGemm::new(threads)),
+            GemmBlocks::Explicit(mc, kc, nc) => {
+                std::sync::Arc::new(NativeGemm::with_blocks(threads, mc, kc, nc))
+            }
+            GemmBlocks::Autotune => std::sync::Arc::new(NativeGemm::autotuned(threads)),
+        }),
         "xla" | "pallas" => {
             let variant = GemmVariant::parse(kind).unwrap();
             Ok(std::sync::Arc::new(XlaGemm::load(

@@ -57,7 +57,8 @@ use crate::cggm::Dataset;
 use crate::coordinator::{self, RunConfig, RunSummary};
 use crate::gemm::native::NativeGemm;
 use crate::gemm::GemmEngine;
-use crate::solvers::{dense_workingset_bytes, solve_in_context, SolveError, SolverKind};
+use crate::cggm::tiles::TileStats;
+use crate::solvers::{dense_workingset_bytes, solve_in_context, SolveError, SolverKind, StatMode};
 use crate::util::json::Json;
 use crate::util::membudget::{fmt_bytes, MemBudget};
 use crate::util::threadpool::TeamPool;
@@ -71,6 +72,16 @@ fn data_bytes(p: usize, q: usize, n: usize) -> usize {
 /// Bytes of all three dense statistics (`S_yy`, `S_xx`, `S_xy`).
 fn stats_bytes(p: usize, q: usize) -> usize {
     8 * (q * q + p * p + p * q)
+}
+
+/// Minimum resident footprint of the tiled statistics layer during a job:
+/// two streaming `tile × n` feature panels plus one `tile × tile` Gram
+/// tile. The LRU tile cache can grow past this, but only into budget that
+/// is actually *available* (excess tiles spill to disk instead of
+/// allocating), so admission reserves just the floor — capped by the dense
+/// statistics, which a small problem's tile layer never exceeds.
+pub fn tiled_stats_floor(tile: usize, p: usize, q: usize, n: usize) -> usize {
+    (16 * tile * n + 8 * tile * tile).min(stats_bytes(p, q))
 }
 
 /// Estimated peak working-set bytes of one `fit` (or one λ-path point —
@@ -98,7 +109,10 @@ pub fn load_estimate(p: usize, q: usize, n: usize, warm: bool, threads: usize) -
 
 /// Job-request keys that must not override the serving process's identity
 /// (problem shape belongs to `load`; budgets, transports, and engines are
-/// fixed at `cggm serve` startup).
+/// fixed at `cggm serve` startup). `stat_mode`/`stat_tile` are here because
+/// a warm context's statistics layout is fixed when the context is built —
+/// a per-job override would be silently ignored, so reject it loudly.
+/// Likewise the `gemm_*` keys configure the engine, built once at startup.
 const FORBIDDEN_JOB_KEYS: &[&str] = &[
     "workload",
     "p",
@@ -106,6 +120,10 @@ const FORBIDDEN_JOB_KEYS: &[&str] = &[
     "n",
     "engine",
     "tile",
+    "stat_mode",
+    "stat_tile",
+    "gemm_autotune",
+    "gemm_blocks",
     "mem_budget",
     "checkpoint",
     "out_dir",
@@ -391,9 +409,19 @@ impl ServeEngine {
         let solver = cfg.solver;
         let per_fit = fit_estimate(solver, dims.p, dims.q, threads);
         // A cold entry materializes its dense statistics during the job
-        // (except the block solver, whose memory story never forms them).
-        let cold_stats = if dims.warm || solver == SolverKind::AltNewtonBcd {
+        // (except the block solver, whose memory story never forms them —
+        // under tiled statistics it instead needs the tile layer's resident
+        // floor; the LRU cache above the floor only consumes budget that is
+        // actually free).
+        let stat_mode =
+            StatMode::parse(&cfg.stat_mode, cfg.stat_tile).unwrap_or_default();
+        let cold_stats = if dims.warm {
             0
+        } else if solver == SolverKind::AltNewtonBcd {
+            match stat_mode {
+                StatMode::Tiled(t) => tiled_stats_floor(t, dims.p, dims.q, dims.n),
+                StatMode::Dense => 0,
+            }
         } else {
             stats_bytes(dims.p, dims.q)
         };
@@ -760,7 +788,7 @@ fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
                         ("stat_computes", Json::num(stat_delta as f64)),
                         ("seconds", Json::num(sw.seconds())),
                     ]);
-                    Ok((result, warm.pinned_bytes(), stat_delta, warm_reused))
+                    Ok((result, warm.pinned_bytes(), warm.tile_stats(), stat_delta, warm_reused))
                 }
                 Err(e) => Err(e),
             }
@@ -778,7 +806,7 @@ fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
                         ("stat_computes", Json::num(stat_delta as f64)),
                         ("seconds", Json::num(sw.seconds())),
                     ]);
-                    Ok((result, warm.pinned_bytes(), stat_delta, false))
+                    Ok((result, warm.pinned_bytes(), warm.tile_stats(), stat_delta, false))
                 }
                 Err(e) => Err(e),
             }
@@ -808,15 +836,17 @@ fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
                         ("registry_hit", Json::Bool(true)),
                         ("seconds", Json::num(sw.seconds())),
                     ]);
-                    let pinned = entry.lock().unwrap().pinned_bytes();
-                    Ok((result, pinned, 0, false))
+                    let guard = entry.lock().unwrap();
+                    let snap = (guard.pinned_bytes(), guard.tile_stats());
+                    drop(guard);
+                    Ok((result, snap.0, snap.1, 0, false))
                 }
                 Err(e) => Err(e),
             }
         }
     };
     match outcome {
-        Ok((result, pinned, stat_delta, warm_reused)) => {
+        Ok((result, pinned, tiles, stat_delta, warm_reused)) => {
             let mut reg = inner.registry.lock().unwrap();
             reg.refresh(&job.dataset, |e| {
                 e.jobs += 1;
@@ -824,6 +854,9 @@ fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
                     e.warm_reuses += 1;
                 }
                 e.stat_computes += stat_delta;
+                // Tile counters are cumulative on the context, so snapshot
+                // (don't accumulate) — mirrors `pinned_bytes`.
+                e.tile_stats = tiles;
                 e.pinned_bytes = pinned;
             });
             Response::ok(id, op, result)
@@ -848,6 +881,7 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
         .entries()
         .filter(|(name, _)| dataset.map(|d| d == name.as_str()).unwrap_or(true))
         .map(|(name, e)| {
+            let ts = e.tile_stats.unwrap_or(TileStats::default());
             Json::obj(vec![
                 ("name", Json::str(name.clone())),
                 ("p", Json::num(e.p as f64)),
@@ -855,6 +889,11 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
                 ("n", Json::num(e.n as f64)),
                 ("pinned_bytes", Json::num(e.pinned_bytes as f64)),
                 ("stat_computes", Json::num(e.stat_computes as f64)),
+                ("tile_hits", Json::num(ts.hits as f64)),
+                ("tile_misses", Json::num(ts.misses as f64)),
+                ("tile_evictions", Json::num(ts.evictions as f64)),
+                ("tile_spills", Json::num(ts.spills as f64)),
+                ("tiles_computed", Json::num(ts.computes as f64)),
                 ("jobs", Json::num(e.jobs as f64)),
                 ("warm_reuses", Json::num(e.warm_reuses as f64)),
                 ("last_used", Json::num(e.last_used as f64)),

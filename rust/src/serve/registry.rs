@@ -115,6 +115,13 @@ impl WarmContext {
         self.ctx.stat_computes()
     }
 
+    /// Tile-cache counters of the context's `StatMode::Tiled` statistics
+    /// layer (`None` in dense mode or before the first tiled read). Like
+    /// `stat_computes`, cumulative over the entry's lifetime.
+    pub fn tile_stats(&self) -> Option<crate::cggm::tiles::TileStats> {
+        self.ctx.tile_stats()
+    }
+
     /// The warm-start seed for `kind`, if a model was cached.
     pub fn cached_model(&self, kind: SolverKind) -> Option<&CggmModel> {
         self.models.get(kind.name()).map(|c| &c.model)
@@ -191,6 +198,9 @@ pub struct Entry {
     pub warm_reuses: usize,
     /// Snapshot of the context's statistic-compute counter.
     pub stat_computes: usize,
+    /// Snapshot of the tile cache's counters (`None` until the entry's
+    /// context serves a tiled read; always `None` in dense mode).
+    pub tile_stats: Option<crate::cggm::tiles::TileStats>,
     /// Snapshot of the bytes the entry pins.
     pub pinned_bytes: usize,
 }
@@ -293,6 +303,7 @@ impl Registry {
             jobs: 0,
             warm_reuses: 0,
             stat_computes: warm.stat_computes(),
+            tile_stats: warm.tile_stats(),
             pinned_bytes: warm.pinned_bytes(),
             warm: Arc::new(Mutex::new(warm)),
         };

@@ -38,6 +38,7 @@ use super::{SolveError, SolveOptions, SolveResult, SolverContext};
 use crate::cggm::factor::{FactorRepr, LambdaFactor};
 use crate::cggm::linesearch::{lambda_line_search, LineSearchOptions};
 use crate::cggm::objective::{min_norm_subgrad, SmoothParts};
+use crate::cggm::tiles::TileStore;
 use crate::cggm::{cd_minimizer, CggmModel, Dataset, Objective};
 use crate::gemm::GemmEngine;
 use crate::graph::cluster::{
@@ -263,7 +264,17 @@ pub fn solve(
 
         // ---- Θ screen (also needed for the stopping statistic) ----
         let (theta_active, subgrad_t) = prof.time("screen:theta", || {
-            theta_screen(data, &sig, &model, engine, par, opts, ws, theta_allowed.as_deref())
+            theta_screen(
+                data,
+                &sig,
+                &model,
+                engine,
+                par,
+                opts,
+                ws,
+                theta_allowed.as_deref(),
+                ctx.tiles(),
+            )
         })?;
         trace.coords_screened += match screen {
             Some(set) => set.len(),
@@ -470,6 +481,7 @@ pub fn solve(
                 opts,
                 ws,
                 &mut caches.theta,
+                ctx.tiles(),
             )
         })?;
         if theta_reclustered {
@@ -488,6 +500,18 @@ pub fn solve(
         .into_iter()
         .map(|(n, s, c)| (n.to_string(), s, c))
         .collect();
+    // Tile-cache observability: under StatMode::Tiled every statistic read
+    // above went through the context's tile store — snapshot its counters so
+    // the trace shows how many tiles the active buckets actually touched.
+    if let Some(tiles) = ctx.tiles() {
+        let st = tiles.stats();
+        trace.tile_hits = st.hits;
+        trace.tile_misses = st.misses;
+        trace.tile_evictions = st.evictions;
+        trace.tile_spills = st.spills;
+        trace.tiles_computed = st.computes;
+        trace.total_tiles = tiles.total_tiles();
+    }
     Ok(SolveResult { model, trace })
 }
 
@@ -901,6 +925,13 @@ type ThetaActive = Vec<(usize, Vec<(usize, f64)>)>;
 /// row's allowed columns — the subgradient statistic and active lists then
 /// cover exactly the allowed set, mirroring the dense solvers' restricted
 /// screens.
+///
+/// `tiles` (StatMode::Tiled): a *restricted* scan reads its `S_xy` values
+/// through the tile cache instead of building the full p×b panel, so the
+/// screen only computes the tiles its allowed coordinates live in — the
+/// tiled screening win. An unrestricted scan must visit every (i, j) anyway,
+/// where the blocked `gemm_nt` panel is strictly cheaper than p·q cache
+/// probes, so it keeps the panel path in either mode.
 #[allow(clippy::too_many_arguments)]
 fn theta_screen(
     data: &Dataset,
@@ -911,6 +942,7 @@ fn theta_screen(
     opts: &SolveOptions,
     ws: &Workspace,
     theta_allowed: Option<&[Vec<usize>]>,
+    tiles: Option<&TileStore>,
 ) -> Result<(ThetaActive, f64), SolveError> {
     let (p, q, n) = (data.p(), data.q(), data.n());
     let bsz = theta_screen_block(p, q, n, opts);
@@ -969,18 +1001,31 @@ fn theta_screen(
         // Γ_blk = Xᵀ·T / n  (p×b): gemm(xt (p×n), T (n×b)).
         let mut gamma = ws.mat(p, b)?;
         engine.gemm(data.inv_n(), &data.xt, &t_mat, 0.0, &mut gamma);
-        // S_xy block (p×b).
-        let mut ytb = ws.mat(b, n)?;
-        data.yt.rows_into(&cols, &mut ytb);
-        let mut sxyb = ws.mat(p, b)?;
-        engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
+        // S_xy block (p×b) — skipped entirely when a restricted tiled scan
+        // will read its few entries through the tile cache instead.
+        let tiled_scan = tiles.filter(|_| theta_allowed.is_some());
+        let sxyb = match tiled_scan {
+            Some(_) => None,
+            None => {
+                let mut ytb = ws.mat(b, n)?;
+                data.yt.rows_into(&cols, &mut ytb);
+                let mut sxyb = ws.mat(p, b)?;
+                engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
+                Some(sxyb)
+            }
+        };
         // Screen (restricted to each row's allowed columns when screening).
         for i in 0..p {
             let grow = gamma.row(i);
-            let srow = sxyb.row(i);
+            let srow = sxyb.as_deref().map(|m| m.row(i));
             let mut scan = |c: usize| {
                 let j = cols[c];
-                let g = 2.0 * srow[c] + 2.0 * grow[c];
+                let sxy_ij = match (srow, tiled_scan) {
+                    (Some(row), _) => row[c],
+                    (None, Some(ts)) => ts.sxy_entry(i, j),
+                    (None, None) => unreachable!("panel built unless tiled"),
+                };
+                let g = 2.0 * sxy_ij + 2.0 * grow[c];
                 let x = model.theta.get(i, j);
                 subgrad += min_norm_subgrad(g, x, opts.lam_t).abs();
                 if x != 0.0 || g.abs() > opts.lam_t {
@@ -1040,6 +1085,13 @@ struct RowOutcome {
 /// cross-row state (Jacobi across rows, like the colored passes). The
 /// expensive per-row `S_xx` row reconstructions — the §4.2 cache-miss cost
 /// — parallelize with the rows.
+///
+/// `tiles` (StatMode::Tiled) routes every `S_xx`/`S_xy` read through the
+/// context's tile cache: a row's restricted `S_xx` slice resolves only the
+/// tiles the support columns live in, and tiles computed for one row are
+/// reused by every later row of the same block rows — turning the §4.2
+/// per-row O(n·p̃) recompute into amortized tile builds. The store is `Sync`,
+/// so the parallel row classes read it from worker threads.
 #[allow(clippy::too_many_arguments)]
 fn theta_block_sweep(
     data: &Dataset,
@@ -1051,6 +1103,7 @@ fn theta_block_sweep(
     opts: &SolveOptions,
     ws: &Workspace,
     theta_cache: &mut PersistentPartition,
+    tiles: Option<&TileStore>,
 ) -> Result<bool, SolveError> {
     let q = data.q();
     if active.is_empty() {
@@ -1205,8 +1258,16 @@ fn theta_block_sweep(
                             let (i, jlist) = &rows[members_ref[mk]];
                             let i = *i;
                             let mut row_buf: Vec<f64> = Vec::new();
-                            data.sxx_row_restricted(i, support_ref, &mut row_buf);
-                            let sxx_ii = data.sxx(i, i);
+                            let sxx_ii = match tiles {
+                                Some(ts) => {
+                                    ts.sxx_row_restricted(i, support_ref, &mut row_buf);
+                                    ts.sxx_entry(i, i)
+                                }
+                                None => {
+                                    data.sxx_row_restricted(i, support_ref, &mut row_buf);
+                                    data.sxx(i, i)
+                                }
+                            };
                             let si = support_pos_ref[i];
                             debug_assert!(si != usize::MAX);
                             let mut dv = vec![0.0; bsz];
@@ -1223,7 +1284,11 @@ fn theta_block_sweep(
                                 // accumulated column delta — exact
                                 // within-row Gauss–Seidel.
                                 let vt_c = &vt_d[c * ns..(c + 1) * ns];
-                                let b_lin = 2.0 * data.sxy(i, j)
+                                let sxy_ij = match tiles {
+                                    Some(ts) => ts.sxy_entry(i, j),
+                                    None => data.sxy(i, j),
+                                };
+                                let b_lin = 2.0 * sxy_ij
                                     + 2.0 * (dot(&row_buf, vt_c) + row_buf[si] * dv[c]);
                                 let cc = theta_ro.get(i, j);
                                 let mu = cd_minimizer(a, b_lin, cc, opts.lam_t);
@@ -1254,9 +1319,18 @@ fn theta_block_sweep(
                 for (i, jlist) in &row_actives[b] {
                     let i = *i;
                     // One S_xx row, restricted to the support (cache miss
-                    // cost O(n·p̃), §4.2).
-                    data.sxx_row_restricted(i, &support, &mut sxx_row);
-                    let sxx_ii = data.sxx(i, i);
+                    // cost O(n·p̃), §4.2) — or tile-cache reads under
+                    // StatMode::Tiled, which amortize across rows.
+                    let sxx_ii = match tiles {
+                        Some(ts) => {
+                            ts.sxx_row_restricted(i, &support, &mut sxx_row);
+                            ts.sxx_entry(i, i)
+                        }
+                        None => {
+                            data.sxx_row_restricted(i, &support, &mut sxx_row);
+                            data.sxx(i, i)
+                        }
+                    };
                     let si = support_pos[i];
                     debug_assert!(si != usize::MAX);
                     for &(j, _g) in jlist {
@@ -1267,8 +1341,11 @@ fn theta_block_sweep(
                         if a <= 0.0 {
                             continue;
                         }
-                        let b_lin =
-                            2.0 * data.sxy(i, j) + 2.0 * dot(&sxx_row, vt.row(c));
+                        let sxy_ij = match tiles {
+                            Some(ts) => ts.sxy_entry(i, j),
+                            None => data.sxy(i, j),
+                        };
+                        let b_lin = 2.0 * sxy_ij + 2.0 * dot(&sxx_row, vt.row(c));
                         let cc = model.theta.get(i, j);
                         let mu = cd_minimizer(a, b_lin, cc, opts.lam_t);
                         if mu != 0.0 {

@@ -34,8 +34,9 @@
 use std::cell::{Cell, OnceCell, RefCell, RefMut};
 
 use super::workspace::Workspace;
-use super::{SolveError, SolveOptions};
+use super::{SolveError, SolveOptions, StatMode};
 use crate::cggm::factor::CholKind;
+use crate::cggm::tiles::{TileStats, TileStore};
 use crate::cggm::{CggmModel, Dataset, Objective};
 use crate::gemm::GemmEngine;
 use crate::graph::cluster::PersistentPartition;
@@ -84,6 +85,8 @@ pub struct SolverContext<'a> {
     sxy: OnceCell<CachedMat>,
     sxx_diag: OnceCell<Vec<f64>>,
     stat_computes: Cell<usize>,
+    stat_mode: StatMode,
+    tiles: OnceCell<TileStore<'a>>,
     clusters: RefCell<ClusterCaches>,
     colorings: RefCell<ColoringCaches>,
 }
@@ -104,6 +107,8 @@ impl<'a> SolverContext<'a> {
             sxy: OnceCell::new(),
             sxx_diag: OnceCell::new(),
             stat_computes: Cell::new(0),
+            stat_mode: opts.stat_mode,
+            tiles: OnceCell::new(),
             clusters: RefCell::new(ClusterCaches::default()),
             colorings: RefCell::new(ColoringCaches::default()),
         }
@@ -192,6 +197,30 @@ impl<'a> SolverContext<'a> {
         self.stat_computes.get()
     }
 
+    /// The context's statistics materialization mode.
+    pub fn stat_mode(&self) -> StatMode {
+        self.stat_mode
+    }
+
+    /// The demand-driven tile cache, when the context runs in
+    /// [`StatMode::Tiled`] — created lazily on first use so a dense-mode (or
+    /// never-tiled) context materializes nothing. The store shares the
+    /// context's budget: resident tiles and dense caches draw on one limit.
+    pub fn tiles(&self) -> Option<&TileStore<'a>> {
+        match self.stat_mode {
+            StatMode::Dense => None,
+            StatMode::Tiled(tile) => Some(self.tiles.get_or_init(|| {
+                TileStore::new(self.data, self.engine, self.ws.budget().clone(), tile)
+            })),
+        }
+    }
+
+    /// Snapshot of the tile cache's counters (`None` until a tiled solve has
+    /// touched it) — the solvers copy this onto their `SolveTrace`.
+    pub fn tile_stats(&self) -> Option<TileStats> {
+        self.tiles.get().map(TileStore::stats)
+    }
+
     /// Bytes currently pinned by materialized dense statistics — what a
     /// long-lived registry entry "costs" while it stays warm (the serve
     /// registry's accounting and `stat` responses read this).
@@ -206,6 +235,9 @@ impl<'a> SolverContext<'a> {
         }
         if self.sxy.get().is_some() {
             bytes += 8 * p * q;
+        }
+        if let Some(tiles) = self.tiles.get() {
+            bytes += tiles.resident_bytes();
         }
         bytes
     }
@@ -335,6 +367,30 @@ mod tests {
         assert!(gt.max_abs_diff(&want_gt) < 1e-10);
         // Uses only the cached S_yy and S_xy — S_xx is never materialized.
         assert_eq!(ctx.stat_computes(), 2);
+    }
+
+    #[test]
+    fn tiled_context_reads_through_tile_cache() {
+        let mut rng = Rng::new(7);
+        let data = small_data(&mut rng, 10, 6, 4);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions {
+            stat_mode: StatMode::Tiled(3),
+            ..Default::default()
+        };
+        let ctx = SolverContext::new(&data, &opts, &eng);
+        assert!(ctx.tile_stats().is_none(), "lazy until first touch");
+        assert_eq!(ctx.cached_stat_bytes(), 0);
+        let ts = ctx.tiles().expect("tiled mode exposes the store");
+        assert!((ts.sxx_entry(1, 5) - data.sxx(1, 5)).abs() < 1e-12);
+        assert!((ts.sxy_entry(4, 2) - data.sxy(4, 2)).abs() < 1e-12);
+        let st = ctx.tile_stats().unwrap();
+        assert_eq!(st.computes, 2);
+        // Resident tiles show up in the context's pinned-byte accounting.
+        assert!(ctx.cached_stat_bytes() > 0);
+        // A dense-mode context never creates a store.
+        let dense = SolverContext::new(&data, &SolveOptions::default(), &eng);
+        assert!(dense.tiles().is_none());
     }
 
     #[test]

@@ -112,6 +112,52 @@ impl SolverKind {
     }
 }
 
+/// How a solver's covariance statistics are materialized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatMode {
+    /// Eager dense `S_yy`/`S_xx`/`S_xy`, cached whole in the context — the
+    /// historical path, and the only one the dense-row CD solvers
+    /// (`newton_cd`, `alt_newton_cd`, whose Θ updates read contiguous
+    /// `S_xx` rows) can use.
+    Dense,
+    /// Demand-driven `tile × tile` Gram blocks behind the context's
+    /// [`crate::cggm::tiles::TileStore`]: computed on first touch, LRU-cached
+    /// against the budget, spilled to disk under pressure. Honored by
+    /// `alt_newton_bcd` and the screening entry paths; solvers that need
+    /// dense statistics simply keep the eager path (the mode is a memory/
+    /// compute optimization, never a semantic change).
+    Tiled(usize),
+}
+
+impl StatMode {
+    /// Parse a config/CLI mode string; `tile` supplies the block edge for
+    /// `"tiled"`.
+    pub fn parse(mode: &str, tile: usize) -> Option<StatMode> {
+        match mode {
+            "dense" | "eager" => Some(StatMode::Dense),
+            "tiled" | "tiles" | "lazy" if tile >= 1 => Some(StatMode::Tiled(tile)),
+            _ => None,
+        }
+    }
+
+    pub fn is_tiled(&self) -> bool {
+        matches!(self, StatMode::Tiled(_))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StatMode::Dense => "dense",
+            StatMode::Tiled(_) => "tiled",
+        }
+    }
+}
+
+impl Default for StatMode {
+    fn default() -> Self {
+        StatMode::Dense
+    }
+}
+
 /// Solver configuration shared by all four methods.
 #[derive(Clone)]
 pub struct SolveOptions {
@@ -171,6 +217,10 @@ pub struct SolveOptions {
     /// correct — the restriction is an optimization, never a semantic
     /// change, and the path driver's KKT post-check holds either way.
     pub screen: Option<Arc<ScreenSet>>,
+    /// Covariance statistics materialization ([`StatMode`]). `Tiled` routes
+    /// the block solver's and the screening paths' statistic reads through
+    /// the context's on-demand tile cache.
+    pub stat_mode: StatMode,
 }
 
 impl Default for SolveOptions {
@@ -191,6 +241,7 @@ impl Default for SolveOptions {
             seed: 7,
             recluster_churn: 0.2,
             screen: None,
+            stat_mode: StatMode::default(),
         }
     }
 }

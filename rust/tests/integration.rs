@@ -22,6 +22,10 @@
 //!   (`cd_threads`): serial-vs-colored 1e-6 objective equivalence,
 //!   bitwise thread-count determinism, coloring-cache reuse and budget
 //!   accounting;
+//! - [`tiled_tests`] — `StatMode::Tiled` acceptance: tiled-vs-dense 1e-6
+//!   equivalence (chain + cluster), budget-capped solves under the dense
+//!   `S_xx` footprint with LRU eviction/spill, and screened runs computing
+//!   strictly fewer tiles;
 //! - [`serve_tests`] — the serve subsystem: warm-context reuse across
 //!   repeat fits (registry hit + warm start + zero statistic recompute),
 //!   admission control on one shared `MemBudget`, LRU eviction, and
@@ -64,6 +68,9 @@ mod cluster_persistence_tests;
 
 #[path = "integration/parallel_cd_tests.rs"]
 mod parallel_cd_tests;
+
+#[path = "integration/tiled_tests.rs"]
+mod tiled_tests;
 
 #[path = "integration/serve_tests.rs"]
 mod serve_tests;

@@ -93,6 +93,10 @@ fn repeat_fit_reuses_warm_context_without_stat_recompute() {
     assert_eq!(num(ds, "jobs"), 2.0);
     assert_eq!(num(ds, "warm_reuses"), 1.0);
     assert_eq!(num(ds, "stat_computes"), 3.0);
+    // Tile counters are always emitted; a dense-mode dataset reports zeros.
+    assert_eq!(num(ds, "tiles_computed"), 0.0);
+    assert_eq!(num(ds, "tile_hits"), 0.0);
+    assert_eq!(num(ds, "tile_evictions"), 0.0);
 
     // Evict frees every pinned byte; the dataset is then a miss.
     let evict = srv.request(req(r#"{"op":"evict","id":4,"dataset":"d"}"#));

@@ -1,0 +1,183 @@
+//! Tiled on-demand Gram statistics (`StatMode::Tiled`) acceptance suite:
+//!
+//! 1. **Equivalence** — a tiled block solve reaches the dense-mode objective
+//!    to 1e-6 on both chain and cluster workloads (tiling changes where
+//!    statistics come from, not what they are);
+//! 2. **Memory** — a tiled solve completes under a `MemBudget` strictly
+//!    smaller than the dense `S_xx` footprint, with `peak() ≤ cap` and the
+//!    LRU actually evicting/spilling under pressure;
+//! 3. **Laziness** — a screened run computes strictly fewer tiles than an
+//!    unscreened run on the same problem (only touched blocks are built),
+//!    and no run ever computes more than `total_tiles`.
+
+use cggm::cggm::active::ScreenSet;
+use cggm::datagen::{self, cluster_graph::ClusterOptions};
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{solve, solve_in_context, SolveOptions, SolverContext, SolverKind, StatMode};
+use cggm::util::membudget::MemBudget;
+use std::sync::Arc;
+
+fn bcd_opts(lam: f64) -> SolveOptions {
+    SolveOptions {
+        lam_l: lam,
+        lam_t: lam,
+        max_iter: 120,
+        ..Default::default()
+    }
+}
+
+/// Tiled-vs-dense 1e-6 objective equivalence on the paper's two synthetic
+/// workloads, with a tile size that divides p and one that does not (ragged
+/// edge tiles).
+#[test]
+fn tiled_bcd_matches_dense_on_chain_and_cluster() {
+    let cluster_opts = ClusterOptions {
+        cluster_size: 6,
+        hub_coeff: 3.0,
+        ..Default::default()
+    };
+    let problems = [
+        ("chain", datagen::chain::generate(24, 24, 100, 71)),
+        (
+            "cluster",
+            datagen::cluster_graph::generate(40, 12, 120, 73, &cluster_opts),
+        ),
+    ];
+    let eng = NativeGemm::new(1);
+    for (name, prob) in &problems {
+        let dense_opts = bcd_opts(0.2);
+        let dense = solve(SolverKind::AltNewtonBcd, &prob.data, &dense_opts, &eng).unwrap();
+        assert!(dense.trace.converged, "{name}: dense run must converge");
+        let f_dense = dense.trace.final_f().unwrap();
+        assert_eq!(dense.trace.total_tiles, 0, "{name}: dense mode has no tiles");
+        // 16 divides neither p; 7 is deliberately awkward.
+        for tile in [7usize, 16] {
+            let mut topts = bcd_opts(0.2);
+            topts.stat_mode = StatMode::Tiled(tile);
+            let tiled = solve(SolverKind::AltNewtonBcd, &prob.data, &topts, &eng).unwrap();
+            assert!(tiled.trace.converged, "{name}/t={tile}: tiled run converges");
+            let f_tiled = tiled.trace.final_f().unwrap();
+            assert!(
+                (f_tiled - f_dense).abs() <= 1e-6 * f_dense.abs().max(1.0),
+                "{name}/t={tile}: tiled {f_tiled} vs dense {f_dense}"
+            );
+            assert_eq!(tiled.model.lambda_nnz(), dense.model.lambda_nnz());
+            assert_eq!(tiled.model.theta_nnz(), dense.model.theta_nnz());
+            assert!(
+                tiled.trace.tiles_computed > 0,
+                "{name}/t={tile}: sweeps must read through the tile store"
+            );
+            assert!(
+                tiled.trace.tiles_computed <= tiled.trace.total_tiles,
+                "{name}/t={tile}: computed {} of {} tiles",
+                tiled.trace.tiles_computed,
+                tiled.trace.total_tiles
+            );
+        }
+    }
+}
+
+/// Acceptance: a tiled block solve completes under a budget strictly smaller
+/// than the dense `S_xx` footprint (8·p² bytes), the measured peak stays
+/// under the cap, the LRU evicts and spills under pressure, and the answer
+/// still matches an unconstrained dense-mode run to 1e-6.
+#[test]
+fn budget_capped_tiled_solve_stays_under_dense_sxx_footprint() {
+    // Hub Θ* spread across all of p (hub_coeff·√p ≥ p) so the sweeps touch
+    // every tile block-row, not just the first.
+    let cluster_opts = ClusterOptions {
+        cluster_size: 4,
+        hub_coeff: 100.0,
+        ..Default::default()
+    };
+    let (p, q, n) = (48usize, 8usize, 100usize);
+    let prob = datagen::cluster_graph::generate(p, q, n, 79, &cluster_opts);
+    let eng = NativeGemm::new(1);
+    // Reference: dense statistics, unlimited memory.
+    let dense_opts = bcd_opts(0.1);
+    let dense = solve(SolverKind::AltNewtonBcd, &prob.data, &dense_opts, &eng).unwrap();
+    assert!(dense.trace.converged);
+    let f_dense = dense.trace.final_f().unwrap();
+    // Tiled run under a cap strictly below dense S_xx (8·48² = 18432 B).
+    let dense_sxx_bytes = 8 * p * p;
+    let cap = 12 * 1024;
+    assert!(cap < dense_sxx_bytes, "cap must undercut the dense footprint");
+    let budget = MemBudget::new(cap);
+    let mut topts = bcd_opts(0.1);
+    topts.stat_mode = StatMode::Tiled(16);
+    topts.budget = budget.clone();
+    let tiled = solve(SolverKind::AltNewtonBcd, &prob.data, &topts, &eng)
+        .expect("tiled solve must fit under the cap");
+    assert!(tiled.trace.converged);
+    let f_tiled = tiled.trace.final_f().unwrap();
+    assert!(
+        (f_tiled - f_dense).abs() <= 1e-6 * f_dense.abs().max(1.0),
+        "budget-capped tiled {f_tiled} vs dense {f_dense}"
+    );
+    assert!(
+        budget.peak() <= cap,
+        "peak {} exceeded the cap {cap}",
+        budget.peak()
+    );
+    // All 6 S_xx + 3 S_xy tiles total ~15 KiB — they cannot all be resident
+    // at once, so the LRU must have evicted, and first-time evictions write
+    // the spill file.
+    assert!(
+        tiled.trace.tile_evictions > 0,
+        "budget pressure must force evictions (computed {} tiles)",
+        tiled.trace.tiles_computed
+    );
+    assert!(
+        tiled.trace.tile_spills > 0,
+        "first-time evictions must spill to disk"
+    );
+    assert!(tiled.trace.tiles_computed <= tiled.trace.total_tiles);
+}
+
+/// Acceptance: restricting the solve to a screen set makes it compute
+/// *strictly fewer* tiles than the unrestricted run — untouched blocks are
+/// never built. The screen keeps Θ rows in the first tile block-row only
+/// (plus the full Λ universe), so S_xx reads stay inside block (0,0).
+#[test]
+fn screened_tiled_solve_computes_strictly_fewer_tiles() {
+    let (p, q) = (24usize, 24usize);
+    let prob = datagen::chain::generate(p, q, 100, 83);
+    let eng = NativeGemm::new(1);
+    // tile = 8 → 3 block-rows each way: 6 S_xx tiles + 9 S_xy tiles = 15.
+    let mut opts = bcd_opts(0.15);
+    opts.stat_mode = StatMode::Tiled(8);
+    let ctx = SolverContext::new(&prob.data, &opts, &eng);
+    let unscreened = solve_in_context(SolverKind::AltNewtonBcd, &ctx, &opts, None).unwrap();
+    assert!(unscreened.trace.converged);
+    // Chain Θ* is diagonal over all 24 rows, so the unrestricted active set
+    // spans every block-row.
+    assert!(
+        unscreened.trace.tiles_computed > 2,
+        "fixture must touch more than the first block-row (got {})",
+        unscreened.trace.tiles_computed
+    );
+    let mut ropts = opts.clone();
+    ropts.screen = Some(Arc::new(ScreenSet {
+        lambda: (0..q).flat_map(|i| (i..q).map(move |j| (i, j))).collect(),
+        theta: (0..8).flat_map(|i| (0..q).map(move |j| (i, j))).collect(),
+    }));
+    let ctx2 = SolverContext::new(&prob.data, &ropts, &eng);
+    let screened = solve_in_context(SolverKind::AltNewtonBcd, &ctx2, &ropts, None).unwrap();
+    assert!(screened.trace.converged);
+    assert!(
+        screened.trace.tiles_computed > 0,
+        "the restricted sweep still reads through the store"
+    );
+    assert!(
+        screened.trace.tiles_computed < unscreened.trace.tiles_computed,
+        "screened run must build fewer tiles: {} vs {}",
+        screened.trace.tiles_computed,
+        unscreened.trace.tiles_computed
+    );
+    assert!(
+        screened.trace.tiles_computed < screened.trace.total_tiles,
+        "laziness proof: {} of {} tiles built",
+        screened.trace.tiles_computed,
+        screened.trace.total_tiles
+    );
+}
