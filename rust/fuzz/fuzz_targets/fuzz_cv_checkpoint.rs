@@ -1,0 +1,21 @@
+//! CV checkpoint loader on arbitrary bytes: never panics, score-table
+//! allocation is bounded by the header caps, and the valid prefix is
+//! internally consistent.
+
+#![no_main]
+
+use cggm::coordinator::checkpoint;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(state) = checkpoint::load_cv_from(std::io::Cursor::new(data)) {
+        assert!(state.valid_bytes as usize <= data.len());
+        assert_eq!(state.nll.len(), state.folds);
+        assert_eq!(state.done.len(), state.folds);
+        assert_eq!(state.fallbacks.len(), state.folds);
+        for row in &state.nll {
+            assert_eq!(row.len(), state.grid.len());
+        }
+        assert!(state.completed_folds() <= state.folds);
+    }
+});

@@ -1,0 +1,23 @@
+//! `Json::parse` on arbitrary bytes: must never panic, abort, or overflow
+//! the stack (depth cap), and anything it *accepts* must round-trip
+//! through the writer to an equal value.
+
+#![no_main]
+
+use cggm::util::json::Json;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else {
+        return;
+    };
+    if let Ok(v) = Json::parse(text) {
+        // Writer output is itself valid JSON parsing back to the same
+        // value (modulo the documented non-finite → null lossy case,
+        // which the parser can never produce).
+        let reparsed = Json::parse(&v.to_string()).expect("writer emitted invalid JSON");
+        assert_eq!(reparsed, v, "parse(write(v)) != v");
+        let pretty = Json::parse(&v.to_string_pretty()).expect("pretty writer emitted invalid JSON");
+        assert_eq!(pretty, v, "pretty round-trip diverged");
+    }
+});

@@ -1,0 +1,21 @@
+//! Artifact + batch-job manifest parsers on arbitrary bytes: never panic,
+//! and every accepted batch job carries an id (the correlation guarantee
+//! `cggm batch` relies on).
+
+#![no_main]
+
+use cggm::runtime::manifest::{JobManifest, Manifest};
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else {
+        return;
+    };
+    let _ = Manifest::parse(text);
+    if let Ok(jobs) = JobManifest::parse(text) {
+        for job in jobs.jobs() {
+            assert!(job.get("id").is_some(), "job admitted without an id");
+            assert!(job.as_obj().is_some(), "job admitted as a non-object");
+        }
+    }
+});

@@ -1,0 +1,18 @@
+//! λ-path checkpoint loader on arbitrary bytes. The loader's contract:
+//! errors only on unreadable/header-less input, otherwise returns the
+//! valid prefix — and never panics or makes a header-driven allocation
+//! (dimension caps run before any `O(dims)` buffer exists).
+
+#![no_main]
+
+use cggm::coordinator::checkpoint;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(state) = checkpoint::load_from(std::io::Cursor::new(data)) {
+        assert!(state.valid_bytes as usize <= data.len());
+        assert!(state.points.len() <= state.grid.len());
+        // A surviving point implies a surviving model and vice versa.
+        assert_eq!(state.points.is_empty(), state.model.is_none());
+    }
+});

@@ -1,0 +1,27 @@
+//! `Request::parse_line` on arbitrary bytes — the first thing a serve
+//! connection does to every client line. Must never panic; accepted
+//! requests must carry a sane id and a stable op name.
+
+#![no_main]
+
+use cggm::serve::{Op, Request};
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(line) = std::str::from_utf8(data) else {
+        return;
+    };
+    if let Ok(req) = Request::parse_line(line) {
+        // Ids are checked extractions: anything past 2^53 - 1 must have
+        // been rejected, not silently rounded.
+        assert!(req.id < (1u64 << 53));
+        let name = req.op_name();
+        assert!(
+            matches!(name, "load" | "fit" | "path" | "cv" | "stat" | "evict" | "shutdown"),
+            "unexpected op name {name}"
+        );
+        if let Op::Load(_) = &req.op {
+            assert!(req.dataset_name().is_some());
+        }
+    }
+});

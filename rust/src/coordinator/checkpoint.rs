@@ -37,6 +37,18 @@ use std::path::Path;
 /// Bump when the line format changes incompatibly.
 const VERSION: f64 = 1.0;
 
+/// Upper bound on any dimension a checkpoint header may declare (16M —
+/// comfortably above the paper's million-dimensional regime). Checkpoint
+/// files are a semi-trusted input (operators pass paths around, fuzzers
+/// pass anything), and the loaders allocate `O(dims)` buffers from header
+/// fields *before* any point line is read — without this cap a hostile
+/// header like `{"p":1e15,...}` is an OOM abort, not an `Err`.
+const MAX_DIM: usize = 1 << 24;
+
+/// Upper bound on the fold count a CV header may declare (the loader
+/// allocates `folds × grid` score slots up front).
+const MAX_FOLDS: usize = 1 << 20;
+
 // ---------------------------------------------------------------- encoding
 
 fn sparse_to_json(m: &SpRowMat) -> Json {
@@ -57,9 +69,16 @@ fn sparse_to_json(m: &SpRowMat) -> Json {
     ])
 }
 
-fn sparse_from_json(j: &Json) -> Option<SpRowMat> {
+/// Decode a sparse matrix whose shape is already known from the (validated)
+/// header. The declared shape must match `expect` *before* anything is
+/// allocated — a hostile point line declaring `"rows":1e15` must be a
+/// rejected line, not a `SpRowMat::zeros(1e15, …)` allocation.
+fn sparse_from_json(j: &Json, expect: (usize, usize)) -> Option<SpRowMat> {
     let rows = j.get("rows")?.as_usize()?;
     let cols = j.get("cols")?.as_usize()?;
+    if (rows, cols) != expect {
+        return None;
+    }
     let mut m = SpRowMat::zeros(rows, cols);
     for e in j.get("entries")?.as_arr()? {
         let e = e.as_arr()?;
@@ -82,12 +101,10 @@ fn model_to_json(model: &CggmModel) -> Json {
     ])
 }
 
-fn model_from_json(j: &Json) -> Option<CggmModel> {
-    let lambda = sparse_from_json(j.get("lambda")?)?;
-    let theta = sparse_from_json(j.get("theta")?)?;
-    if lambda.rows() != lambda.cols() || theta.cols() != lambda.rows() {
-        return None;
-    }
+/// Decode a model for a run of shape `(p, q)`: Λ is `q×q`, Θ is `p×q`.
+fn model_from_json(j: &Json, p: usize, q: usize) -> Option<CggmModel> {
+    let lambda = sparse_from_json(j.get("lambda")?, (q, q))?;
+    let theta = sparse_from_json(j.get("theta")?, (p, q))?;
     Some(CggmModel { lambda, theta })
 }
 
@@ -225,9 +242,14 @@ pub struct CheckpointState {
 /// truncated point line merely ends the prefix, and the resumed sweep refits
 /// from the last valid point.
 pub fn load(path: &Path) -> std::io::Result<CheckpointState> {
-    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let file = std::fs::File::open(path)?;
-    let mut reader = std::io::BufReader::new(file);
+    load_from(std::io::BufReader::new(file))
+}
+
+/// Reader-generic body of [`load`] — also the fuzz-target entry point, so
+/// hostile bytes exercise the real loader without touching a filesystem.
+pub fn load_from<R: BufRead>(mut reader: R) -> std::io::Result<CheckpointState> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let mut line = String::new();
     let mut consumed: u64 = 0;
 
@@ -250,11 +272,13 @@ pub fn load(path: &Path) -> std::io::Result<CheckpointState> {
     let p = header
         .get("p")
         .and_then(|v| v.as_usize())
-        .ok_or_else(|| bad("header missing p"))?;
+        .filter(|&p| p <= MAX_DIM)
+        .ok_or_else(|| bad("header p missing or out of range"))?;
     let q = header
         .get("q")
         .and_then(|v| v.as_usize())
-        .ok_or_else(|| bad("header missing q"))?;
+        .filter(|&q| q <= MAX_DIM)
+        .ok_or_else(|| bad("header q missing or out of range"))?;
     let mut grid = Vec::new();
     for pair in header
         .get("grid")
@@ -297,7 +321,7 @@ pub fn load(path: &Path) -> std::io::Result<CheckpointState> {
         }
         let (point, m) = match (
             parsed.get("point").and_then(point_from_json),
-            parsed.get("model").and_then(model_from_json),
+            parsed.get("model").and_then(|j| model_from_json(j, p, q)),
         ) {
             (Some(p), Some(m)) => (p, m),
             _ => break,
@@ -483,9 +507,13 @@ impl CvCheckpointState {
 /// Parse the valid prefix of a CV checkpoint. Errors only on unreadable
 /// files or a malformed *header*; a malformed line merely ends the prefix.
 pub fn load_cv(path: &Path) -> std::io::Result<CvCheckpointState> {
-    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let file = std::fs::File::open(path)?;
-    let mut reader = std::io::BufReader::new(file);
+    load_cv_from(std::io::BufReader::new(file))
+}
+
+/// Reader-generic body of [`load_cv`] — also the fuzz-target entry point.
+pub fn load_cv_from<R: BufRead>(mut reader: R) -> std::io::Result<CvCheckpointState> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let mut line = String::new();
     let n_read = reader.read_line(&mut line)?;
     if n_read == 0 || !line.ends_with('\n') {
@@ -508,9 +536,22 @@ pub fn load_cv(path: &Path) -> std::io::Result<CvCheckpointState> {
         .and_then(|v| v.as_str())
         .ok_or_else(|| bad("header missing solver"))?
         .to_string();
-    let (p, q, n) = (field("p")?, field("q")?, field("n")?);
-    let folds = field("folds")?.max(1);
-    let seed = field("seed")? as u64;
+    let range = |key: &str, val: usize, cap: usize| -> std::io::Result<usize> {
+        if val <= cap {
+            Ok(val)
+        } else {
+            Err(bad(&format!("header {key} out of range")))
+        }
+    };
+    let p = range("p", field("p")?, MAX_DIM)?;
+    let q = range("q", field("q")?, MAX_DIM)?;
+    let n = range("n", field("n")?, MAX_DIM)?;
+    // The loader allocates folds × grid score slots below — cap it.
+    let folds = range("folds", field("folds")?.max(1), MAX_FOLDS)?;
+    let seed = header
+        .get("seed")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| bad("header missing seed"))?;
     let mut grid = Vec::new();
     for pair in header
         .get("grid")
@@ -526,6 +567,11 @@ pub fn load_cv(path: &Path) -> std::io::Result<CvCheckpointState> {
         }
     }
     let mut consumed = n_read as u64;
+    // folds and grid are individually bounded, but their *product* sizes
+    // the score table — bound it too before allocating.
+    if folds.saturating_mul(grid.len()) > MAX_FOLDS {
+        return Err(bad("header folds × grid out of range"));
+    }
     let mut nll = vec![vec![f64::NAN; grid.len()]; folds];
     let mut done = vec![false; folds];
     let mut fallbacks = vec![0usize; folds];
@@ -619,11 +665,34 @@ mod tests {
     fn model_roundtrips_bit_exactly() {
         let m = dummy_model();
         let j = model_to_json(&m);
-        let back = model_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        let back = model_from_json(&Json::parse(&j.to_string()).unwrap(), 3, 2).unwrap();
         assert_eq!(back.lambda, m.lambda);
         assert_eq!(back.theta, m.theta);
         // The awkward float survived exactly.
         assert_eq!(back.theta.get(2, 1).to_bits(), (0.1f64 + 0.2).to_bits());
+    }
+
+    /// A point line may not re-declare the problem shape: the model decoder
+    /// validates declared dims against the header *before* allocating.
+    #[test]
+    fn model_with_wrong_declared_shape_is_rejected_not_allocated() {
+        let m = dummy_model();
+        let j = Json::parse(&model_to_json(&m).to_string()).unwrap();
+        assert!(model_from_json(&j, 3, 2).is_some());
+        assert!(model_from_json(&j, 2, 3).is_none(), "shape mismatch");
+        // A hostile declared shape (would be a ~PB allocation if trusted).
+        let hostile = Json::obj(vec![
+            (
+                "lambda",
+                Json::obj(vec![
+                    ("rows", Json::num(1e15)),
+                    ("cols", Json::num(1e15)),
+                    ("entries", Json::Arr(vec![])),
+                ]),
+            ),
+            ("theta", model_to_json(&m).get("theta").unwrap().clone()),
+        ]);
+        assert!(model_from_json(&hostile, 3, 2).is_none());
     }
 
     #[test]

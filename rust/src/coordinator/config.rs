@@ -165,10 +165,10 @@ impl RunConfig {
                 let s = val.as_str().ok_or_else(|| bad("expected string"))?;
                 self.workload = Workload::parse(s).ok_or_else(|| bad("unknown workload"))?;
             }
-            "p" => self.p = val.as_usize().ok_or_else(|| bad("expected int"))?,
-            "q" => self.q = val.as_usize().ok_or_else(|| bad("expected int"))?,
-            "n" => self.n = val.as_usize().ok_or_else(|| bad("expected int"))?,
-            "seed" => self.seed = val.as_usize().ok_or_else(|| bad("expected int"))? as u64,
+            "p" => self.p = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?,
+            "q" => self.q = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?,
+            "n" => self.n = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?,
+            "seed" => self.seed = val.as_u64().ok_or_else(|| bad("expected a non-negative integer"))?,
             "solver" => {
                 let s = val.as_str().ok_or_else(|| bad("expected string"))?;
                 self.solver = SolverKind::parse(s).ok_or_else(|| bad("unknown solver"))?;
@@ -180,16 +180,16 @@ impl RunConfig {
             }
             "lambda_l" => self.lam_l = val.as_f64().ok_or_else(|| bad("expected number"))?,
             "lambda_t" => self.lam_t = val.as_f64().ok_or_else(|| bad("expected number"))?,
-            "max_iter" => self.max_iter = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "max_iter" => self.max_iter = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?,
             "tol" => self.tol = val.as_f64().ok_or_else(|| bad("expected number"))?,
-            "threads" => self.threads = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "threads" => self.threads = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?,
             "cd_threads" => {
-                self.cd_threads = val.as_usize().ok_or_else(|| bad("expected int"))?
+                self.cd_threads = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?
             }
             "engine" => {
                 self.engine = val.as_str().ok_or_else(|| bad("expected string"))?.into()
             }
-            "tile" => self.tile = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "tile" => self.tile = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?,
             "stat_mode" => {
                 let s = val.as_str().ok_or_else(|| bad("expected string"))?;
                 if StatMode::parse(s, 1).is_none() {
@@ -198,7 +198,7 @@ impl RunConfig {
                 self.stat_mode = s.into();
             }
             "stat_tile" => {
-                let t = val.as_usize().ok_or_else(|| bad("expected int"))?;
+                let t = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?;
                 if t == 0 {
                     return Err(bad("tile edge must be >= 1"));
                 }
@@ -228,7 +228,7 @@ impl RunConfig {
                 self.out_dir = val.as_str().ok_or_else(|| bad("expected string"))?.into()
             }
             "path_points" => {
-                self.path_points = val.as_usize().ok_or_else(|| bad("expected int"))?
+                self.path_points = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?
             }
             "path_min_ratio" => {
                 self.path_min_ratio = val.as_f64().ok_or_else(|| bad("expected number"))?
@@ -238,9 +238,9 @@ impl RunConfig {
                 self.screen_rule =
                     ScreenRule::parse(s).ok_or_else(|| bad("expected 'full' or 'strong'"))?;
             }
-            "cv_folds" => self.cv_folds = val.as_usize().ok_or_else(|| bad("expected int"))?,
+            "cv_folds" => self.cv_folds = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?,
             "cv_threads" => {
-                self.cv_threads = val.as_usize().ok_or_else(|| bad("expected int"))?
+                self.cv_threads = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?
             }
             "cv_one_se" => {
                 self.cv_one_se = val.as_bool().ok_or_else(|| bad("expected bool"))?
@@ -253,7 +253,7 @@ impl RunConfig {
                 self.recluster_churn = val.as_f64().ok_or_else(|| bad("expected number"))?
             }
             "serve_max_jobs" => {
-                self.serve_max_jobs = val.as_usize().ok_or_else(|| bad("expected int"))?
+                self.serve_max_jobs = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?
             }
             "serve_budget" => {
                 let s = val.as_str().ok_or_else(|| bad("expected string like '1GB'"))?;
@@ -647,6 +647,35 @@ mod tests {
         std::fs::write(&tmp, r#"{"gemm_blocks": "64,256"}"#).unwrap();
         assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
         let _ = std::fs::remove_file(tmp);
+    }
+
+    /// Regression: on the seed, `as_usize` was a saturating cast, so
+    /// `{"p":-1}` configured a 0-dimensional run and `{"p":1e300}` a
+    /// `usize::MAX`-dimensional one. Both must be `BadValue`.
+    #[test]
+    fn hostile_integer_values_are_bad_values_not_saturated() {
+        let mut cfg = RunConfig::default();
+        for (key, val) in [
+            ("p", Json::num(-1.0)),
+            ("p", Json::num(1e300)),
+            ("q", Json::num(2.5)),
+            ("n", Json::num(f64::NAN)),
+            ("seed", Json::num(-3.0)),
+            ("max_iter", Json::num(f64::INFINITY)),
+            ("cv_folds", Json::num(9_007_199_254_740_992.0)), // 2^53
+        ] {
+            let err = cfg.apply(key, &val).unwrap_err();
+            assert!(
+                matches!(&err, ConfigError::BadValue { key: k, .. } if k == key),
+                "{key}: {err}"
+            );
+        }
+        // Nothing was mutated by the rejected applications.
+        assert_eq!(cfg.p, RunConfig::default().p);
+        assert_eq!(cfg.seed, RunConfig::default().seed);
+        // In-range values still land.
+        cfg.apply("p", &Json::num(7.0)).unwrap();
+        assert_eq!(cfg.p, 7);
     }
 
     #[test]

@@ -260,4 +260,32 @@ mod tests {
         assert!(JobManifest::parse(r#"{"jobs": [42]}"#).is_err());
         assert!(JobManifest::parse(r#"{"no_jobs": []}"#).is_err());
     }
+
+    /// Manifests come from disk but may be mangled or adversarial: hostile
+    /// bytes must be `Parse` errors, never panics, OOM, or stack overflow.
+    #[test]
+    fn hostile_manifests_error_cleanly() {
+        // Deep-nesting bomb (an abort on the seed parser).
+        let bomb = format!("{{\"jobs\": {}1{}}}", "[".repeat(100_000), "]".repeat(100_000));
+        assert!(JobManifest::parse(&bomb).is_err());
+        assert!(Manifest::parse(&bomb).is_err());
+        // Hostile numeric fields: checked extraction drops them instead of
+        // saturating (shape dims are filter_map'd; blocks become None).
+        let m = Manifest::parse(
+            r#"{"artifacts": {"a": {"file": "a.hlo", "block": -1,
+                "inputs": [{"shape": [-1, 1e300, 4]}]}}}"#,
+        )
+        .unwrap();
+        let e = m.entries.get("a").unwrap();
+        assert_eq!(e.block, None);
+        assert_eq!(e.inputs, vec![vec![4]]);
+        // Truncated \u escape and non-object jobs are parse errors.
+        assert!(JobManifest::parse(r#"{"jobs": [{"name": "\u12"}]}"#).is_err());
+        assert!(JobManifest::parse(r#"{"jobs": ["\ud800"]}"#).is_err());
+        // Every job always ends up with an id, hostile or not.
+        let m = JobManifest::parse(r#"[{"op": "stat"}, {"op": "stat", "id": -1}]"#).unwrap();
+        for job in m.jobs() {
+            assert!(job.get("id").is_some());
+        }
+    }
 }

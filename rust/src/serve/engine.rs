@@ -239,6 +239,14 @@ impl ServeEngine {
         &self.inner.budget
     }
 
+    /// Bytes currently reserved by admitted-but-unreleased job estimates.
+    /// Exposed so the abuse suite can assert the admission invariant
+    /// `budget().live() + reserved_bytes() ≤ limit (+ slack)` while jobs
+    /// are in flight, not just at quiescence.
+    pub fn reserved_bytes(&self) -> usize {
+        self.inner.sched.lock().unwrap().reserved
+    }
+
     /// Number of admitted jobs that may run concurrently.
     pub fn max_jobs(&self) -> usize {
         self.workers.len()

@@ -39,15 +39,107 @@ pub use registry::{Registry, WarmContext};
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
 
+/// Hard cap on one request line, in bytes. A well-formed request is a few
+/// hundred bytes; the cap bounds what one hostile client can make the
+/// daemon buffer. An over-long line is answered with a `parse` error and
+/// its remaining bytes are discarded — the connection itself survives.
+pub const MAX_REQUEST_LINE_BYTES: usize = 1 << 20;
+
+/// Outcome of one capped line read.
+enum LineRead {
+    /// Clean end of stream.
+    Eof,
+    /// A complete line (without the newline; trailing `\r` stripped).
+    Line(String),
+    /// The line exceeded the cap; its remainder was discarded.
+    TooLong,
+    /// The line was not valid UTF-8; it was discarded through its newline.
+    NotUtf8,
+}
+
+/// Read one `\n`-terminated line, buffering at most `cap` bytes. Unlike
+/// `BufRead::lines`, an over-long or non-UTF-8 line is a recoverable
+/// per-line condition, not the end of the stream.
+fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: a non-empty unterminated tail still counts as a line.
+            if buf.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            break;
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(nl) => {
+                let over = buf.len() + nl > cap;
+                if !over {
+                    buf.extend_from_slice(&chunk[..nl]);
+                }
+                reader.consume(nl + 1);
+                if over {
+                    return Ok(LineRead::TooLong);
+                }
+                break;
+            }
+            None => {
+                let over = buf.len() + chunk.len() > cap;
+                if !over {
+                    buf.extend_from_slice(chunk);
+                }
+                let n = chunk.len();
+                reader.consume(n);
+                if over {
+                    discard_to_newline(reader)?;
+                    return Ok(LineRead::TooLong);
+                }
+            }
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(LineRead::Line(s)),
+        Err(_) => Ok(LineRead::NotUtf8),
+    }
+}
+
+/// Consume input through the next `\n` (or EOF) without buffering it.
+fn discard_to_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(nl) => {
+                reader.consume(nl + 1);
+                return Ok(());
+            }
+            None => {
+                let n = chunk.len();
+                reader.consume(n);
+            }
+        }
+    }
+}
+
 /// Serve one JSONL connection: requests read line-by-line from `reader`
 /// (submitted in order), responses written as they complete by a writer
 /// thread. Returns when the client disconnects (EOF) or sends
 /// `{"op":"shutdown"}`, after draining every in-flight job — the engine
 /// itself stays alive (socket mode serves the next connection with the
 /// registry still warm).
+///
+/// Per-line faults — malformed JSON, a line past
+/// [`MAX_REQUEST_LINE_BYTES`], invalid UTF-8 — are answered with a
+/// `parse`-kind error response and the session continues; only a transport
+/// read error ends it.
 pub fn serve_connection<R: BufRead, W: Write + Send>(
     engine: &ServeEngine,
-    reader: R,
+    mut reader: R,
     writer: &mut W,
 ) -> std::io::Result<()> {
     let (tx, rx) = mpsc::channel::<Response>();
@@ -59,8 +151,30 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
             }
             Ok(())
         });
-        for line in reader.lines() {
-            let Ok(line) = line else { break };
+        loop {
+            let line = match read_line_capped(&mut reader, MAX_REQUEST_LINE_BYTES) {
+                Ok(LineRead::Eof) => break,
+                Ok(LineRead::Line(line)) => line,
+                Ok(LineRead::TooLong) => {
+                    let _ = tx.send(Response::err(
+                        0,
+                        "parse",
+                        ErrKind::Parse,
+                        format!("request line exceeds {MAX_REQUEST_LINE_BYTES} bytes"),
+                    ));
+                    continue;
+                }
+                Ok(LineRead::NotUtf8) => {
+                    let _ = tx.send(Response::err(
+                        0,
+                        "parse",
+                        ErrKind::Parse,
+                        "request line is not valid UTF-8",
+                    ));
+                    continue;
+                }
+                Err(_) => break,
+            };
             if line.trim().is_empty() {
                 continue;
             }
@@ -88,16 +202,38 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
 /// Serve JSONL connections on a unix socket, one client at a time, until a
 /// client sends `{"op":"shutdown"}`. The warm registry persists across
 /// connections — that is the whole point.
+///
+/// Per-connection I/O failures (a client disconnecting mid-response, a
+/// broken pipe, an accept error) are logged and the daemon moves on to the
+/// next connection; the seed code instead propagated the first such error,
+/// killing the daemon and unlinking the socket. Only failure to bind ends
+/// the loop with an error.
 #[cfg(unix)]
 pub fn serve_unix(engine: &ServeEngine, path: &std::path::Path) -> std::io::Result<()> {
     use std::os::unix::net::UnixListener;
     let _ = std::fs::remove_file(path);
     let listener = UnixListener::bind(path)?;
     for conn in listener.incoming() {
-        let stream = conn?;
-        let reader = std::io::BufReader::new(stream.try_clone()?);
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: accept failed ({e}); continuing");
+                continue;
+            }
+        };
+        let reader = match stream.try_clone() {
+            Ok(s) => std::io::BufReader::new(s),
+            Err(e) => {
+                eprintln!("serve: connection setup failed ({e}); continuing");
+                continue;
+            }
+        };
         let mut writer = stream;
-        serve_connection(engine, reader, &mut writer)?;
+        if let Err(e) = serve_connection(engine, reader, &mut writer) {
+            // Rust ignores SIGPIPE, so a client that vanished mid-response
+            // surfaces here as a plain io::Error — never daemon death.
+            eprintln!("serve: connection error ({e}); continuing");
+        }
         if engine.is_shutdown() {
             break;
         }

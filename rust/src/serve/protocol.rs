@@ -147,7 +147,16 @@ impl Request {
             .get("op")
             .and_then(|v| v.as_str())
             .ok_or_else(|| "request missing string 'op'".to_string())?;
-        let id = doc.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+        // An absent id defaults to 0; a *present but invalid* id is an
+        // error (the seed's saturating cast silently mangled negative,
+        // fractional, and > 2^53 ids — the echoed id then correlated the
+        // response with the wrong request).
+        let id = match doc.get("id") {
+            None => 0,
+            Some(v) => v.as_u64().ok_or_else(|| {
+                "'id' must be a non-negative integer below 2^53".to_string()
+            })?,
+        };
         let str_field = |key: &str| -> Result<String, String> {
             doc.get(key)
                 .and_then(|v| v.as_str())
@@ -173,7 +182,12 @@ impl Request {
                         p: dim("p")?,
                         q: dim("q")?,
                         n: dim("n")?,
-                        seed: doc.get("seed").and_then(|v| v.as_usize()).unwrap_or(1) as u64,
+                        seed: match doc.get("seed") {
+                            None => 1,
+                            Some(v) => v.as_u64().ok_or_else(|| {
+                                "'seed' must be a non-negative integer below 2^53".to_string()
+                            })?,
+                        },
                     }
                 };
                 Op::Load(LoadOp { name, source, warm })
@@ -385,6 +399,27 @@ mod tests {
         ] {
             assert!(Request::parse_line(line).is_err(), "{line}");
         }
+    }
+
+    /// Regression: on the seed, the saturating `as usize` cast turned
+    /// `{"p":-1}` into a 0-dimensional dataset and `{"p":1e300}` into a
+    /// `usize::MAX` allocation request. Both must be clean parse errors.
+    #[test]
+    fn rejects_hostile_dimensions_and_ids() {
+        for line in [
+            r#"{"op":"load","name":"d","workload":"chain","p":-1,"q":8,"n":8}"#,
+            r#"{"op":"load","name":"d","workload":"chain","p":1e300,"q":8,"n":8}"#,
+            r#"{"op":"load","name":"d","workload":"chain","p":8,"q":2.5,"n":8}"#,
+            r#"{"op":"load","name":"d","workload":"chain","p":8,"q":8,"n":8,"seed":-3}"#,
+            r#"{"op":"stat","id":-1}"#,
+            r#"{"op":"stat","id":1.5}"#,
+            r#"{"op":"stat","id":9007199254740992}"#,
+        ] {
+            assert!(Request::parse_line(line).is_err(), "{line}");
+        }
+        // The largest safe id round-trips exactly.
+        let r = Request::parse_line(r#"{"op":"stat","id":9007199254740991}"#).unwrap();
+        assert_eq!(r.id, 9_007_199_254_740_991);
     }
 
     #[test]

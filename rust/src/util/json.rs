@@ -1,9 +1,23 @@
 //! Minimal JSON value model, parser, and writer.
 //!
 //! Used for the artifact manifest (`artifacts/manifest.json`), run configs,
-//! and experiment result files. serde is unavailable offline; this
-//! implementation covers the full JSON grammar (RFC 8259) minus some
-//! exotic escapes we never emit.
+//! experiment result files, and — since the `serve` subsystem — for
+//! **untrusted** bytes arriving over the wire. The parser is therefore
+//! hardened against hostile input:
+//!
+//! - nesting is capped at [`MAX_DEPTH`] levels (the recursive-descent
+//!   `value`→`object`/`array` cycle would otherwise overflow the stack on a
+//!   line of ~100k `[`, an abort no panic handler can catch);
+//! - numbers follow the RFC 8259 grammar exactly (no `1.`, `01`, or bare
+//!   `-`; Rust's more permissive `f64` parser only sees pre-validated text);
+//! - [`Json::as_usize`]/[`Json::as_u64`] are *checked* extractions — NaN,
+//!   infinities, negatives, fractions, and magnitudes past 2⁵³−1 return
+//!   `None` instead of a silently saturated `as` cast.
+//!
+//! Documented lossy cases: JSON has no Inf/NaN, so non-finite numbers
+//! serialize as `null`; and surrogate pairs in `\u` escapes are *not*
+//! combined — each half decodes to U+FFFD (we never emit surrogate escapes,
+//! and a hostile half-pair cannot smuggle arbitrary scalars this way).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -26,8 +40,26 @@ impl Json {
             _ => None,
         }
     }
+    /// Checked index/count extraction: `Some` only for non-negative
+    /// integral values that fit (see [`Self::as_u64`] for the range).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_u64().and_then(|x| usize::try_from(x).ok())
+    }
+    /// Checked integer extraction. `Some(x)` only when the number is
+    /// finite, integral, non-negative, and at most 2⁵³ − 1 — the largest
+    /// range where every integer has a unique f64 representation. 2⁵³
+    /// itself is excluded because 2⁵³ + 1 rounds onto it, so a value of
+    /// exactly 2⁵³ is ambiguous (this is what used to corrupt serve client
+    /// ids above 2⁵³). NaN, ±∞, negatives, and fractions are `None`,
+    /// never a saturated cast.
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_SAFE: f64 = 9_007_199_254_740_991.0; // 2^53 - 1
+        let x = self.as_f64()?;
+        if x.is_finite() && x.fract() == 0.0 && x >= 0.0 && x <= MAX_SAFE {
+            Some(x as u64)
+        } else {
+            None
+        }
     }
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -75,11 +107,14 @@ impl Json {
         Json::Str(s.into())
     }
 
-    /// Parse a JSON document.
+    /// Parse a JSON document. Hostile-input guarantees: errors, never
+    /// panics or stack overflow, on any input (nesting past [`MAX_DEPTH`]
+    /// is a [`JsonError`]).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -196,9 +231,19 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Maximum container nesting [`Json::parse`] accepts. The parser is
+/// recursive descent, so depth is stack: without a cap, a line of ~100k
+/// `[` overflows the thread stack — an *abort*, which no
+/// `catch_unwind`-based job isolation (e.g. the serve engine's) can turn
+/// into an error response. 128 is far beyond anything we emit (checkpoint
+/// and response documents nest < 10 deep).
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, capped at [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -207,6 +252,17 @@ impl<'a> Parser<'a> {
             pos: self.pos,
             msg: msg.to_string(),
         }
+    }
+
+    /// Enter one `[`/`{` level; errors past [`MAX_DEPTH`]. The matching
+    /// decrement happens on the container's success path only — an error
+    /// aborts the whole parse, so a stale count cannot leak.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -251,33 +307,56 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Consume a run of ASCII digits; error if there is none. RFC 8259
+    /// requires at least one digit after `.` and after `e`/`E[+-]`, which
+    /// Rust's own f64 parser does not (it accepts `1.`, `1e`, …).
+    fn digits(&mut self) -> Result<(), JsonError> {
+        if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            return Err(self.err("expected a digit"));
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        Ok(())
+    }
+
+    /// RFC 8259 `number`: `-? (0 | [1-9][0-9]*) (\.[0-9]+)? ([eE][+-]?[0-9]+)?`.
+    /// Leading zeros (`01`) fall out as a trailing-character error at the
+    /// caller; `1.`, `.5`, `+1`, `1e`, and bare `-` are rejected here.
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("expected a digit")),
         }
         if self.peek() == Some(b'.') {
             self.pos += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
+            self.digits()?;
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
             self.pos += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
             }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
+            self.digits()?;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        match text.parse::<f64>() {
+            // Overflow (e.g. `1e400` → ±∞) is rejected: JSON cannot
+            // represent the result, so accepting it would break the
+            // parse∘write round-trip (non-finite serializes as null).
+            Ok(x) if x.is_finite() => Ok(Json::Num(x)),
+            Ok(_) => Err(self.err("number overflows f64")),
+            Err(_) => Err(self.err("bad number")),
+        }
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -305,12 +384,19 @@ impl<'a> Parser<'a> {
                             if self.pos + 4 >= self.bytes.len() {
                                 return Err(self.err("truncated \\u escape"));
                             }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
+                            let raw = &self.bytes[self.pos + 1..self.pos + 5];
+                            // Exactly four hex digits — from_str_radix alone
+                            // would also accept a sign (e.g. "+1ff").
+                            if !raw.iter().all(|b| b.is_ascii_hexdigit()) {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(raw).unwrap();
                             let code = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs unsupported (never emitted by us).
+                            // Surrogate pairs are not combined: each half is
+                            // a non-scalar, so it decodes to U+FFFD (the
+                            // documented lossy case — we never emit surrogate
+                            // escapes ourselves).
                             s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                             self.pos += 4;
                         }
@@ -332,10 +418,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.descend()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -347,6 +435,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -356,10 +445,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.descend()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -376,6 +467,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -438,5 +530,86 @@ mod tests {
     fn unicode_roundtrip() {
         let v = Json::str("héllo ☃");
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    /// Regression for the crash class the fuzz harness targets: on the
+    /// seed parser a line of ~100k `[` overflowed the recursion stack —
+    /// an abort, not a catchable panic. Must now be a plain error.
+    #[test]
+    fn deep_nesting_is_an_error_not_a_crash() {
+        let bomb = "[".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+        let bomb = "{\"a\":".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+
+        // Boundary: exactly MAX_DEPTH levels parse, one more errors.
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let too_deep = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&too_deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "unexpected error: {err}");
+
+        // Sibling (non-nested) containers are unlimited: depth is
+        // released on each container's close.
+        let wide = format!("[{}0]", "[0],".repeat(10_000));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn number_grammar_rfc8259() {
+        for ok in [
+            "0", "-0", "1", "20", "3.25", "-0.5", "1e3", "1E+3", "2e-2", "0.0",
+            "123.456e-7",
+        ] {
+            assert!(Json::parse(ok).is_ok(), "should accept {ok:?}");
+        }
+        for bad in [
+            "1.", ".5", "01", "-01", "+1", "1e", "1e+", "1.e3", "-", "--1",
+            "0x10", "NaN", "Infinity", "1e+-3",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // Overflow to ±∞ is a parse error (null round-trip hazard);
+        // underflow to zero is harmless and accepted.
+        assert!(Json::parse("1e400").is_err());
+        assert!(Json::parse("-1e400").is_err());
+        assert_eq!(Json::parse("1e-400").unwrap(), Json::Num(0.0));
+    }
+
+    /// `as_usize`/`as_u64` are checked: the seed's saturating `as` cast
+    /// turned `{"p":-1}` into 0 and `{"p":1e300}` into `usize::MAX`.
+    #[test]
+    fn as_usize_rejects_unsafe_numbers() {
+        assert_eq!(Json::Num(3.0).as_usize(), Some(3));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(f64::NEG_INFINITY).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
+        // 2^53 - 1 is the largest exactly-representable safe integer;
+        // 2^53 itself is ambiguous (2^53 + 1 rounds onto it) → None.
+        assert_eq!(Json::Num(9_007_199_254_740_991.0).as_u64(), Some(9_007_199_254_740_991));
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), None);
+    }
+
+    #[test]
+    fn unicode_escape_strictness() {
+        assert_eq!(
+            Json::parse("\"\\u0041\"").unwrap(),
+            Json::Str("A".into())
+        );
+        // A lone surrogate half decodes to U+FFFD (documented lossy case).
+        assert_eq!(
+            Json::parse("\"\\ud800\"").unwrap(),
+            Json::Str("\u{fffd}".into())
+        );
+        // Exactly four hex digits required; signs and truncation rejected.
+        assert!(Json::parse("\"\\u+123\"").is_err());
+        assert!(Json::parse("\"\\u12g4\"").is_err());
+        assert!(Json::parse("\"\\u12\"").is_err());
+        assert!(Json::parse("\"\\u123").is_err());
     }
 }

@@ -30,6 +30,11 @@
 //!   repeat fits (registry hit + warm start + zero statistic recompute),
 //!   admission control on one shared `MemBudget`, LRU eviction, and
 //!   batch ↔ standalone 1e-6 equivalence;
+//! - [`abuse_tests`] — the untrusted-input surface under structured abuse:
+//!   concurrent malformed/oversized/duplicate-id/disconnecting clients
+//!   against a live engine (budget invariant `live + reserved ≤ limit`),
+//!   plus the three seed-crash regressions (deep-nesting line, hostile
+//!   load dimensions, unix-socket disconnect mid-response);
 //! - [`cli_tests`] — config/dataset plumbing plus the compiled `cggm`
 //!   binary run as a subprocess (incl. a `serve` stdio session and a
 //!   `batch` manifest);
@@ -74,6 +79,9 @@ mod tiled_tests;
 
 #[path = "integration/serve_tests.rs"]
 mod serve_tests;
+
+#[path = "integration/abuse_tests.rs"]
+mod abuse_tests;
 
 #[path = "integration/cli_tests.rs"]
 mod cli_tests;

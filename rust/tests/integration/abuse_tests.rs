@@ -1,0 +1,404 @@
+//! Structured-abuse property suite for the untrusted-input surface: a live
+//! [`ServeEngine`] hammered with malformed, oversized, duplicate-id, and
+//! immediately-disconnecting clients. The properties under every
+//! interleaving:
+//!
+//! - the admission invariant `budget().live() + reserved_bytes() ≤ limit`
+//!   holds while abuse is in flight (the estimates are deliberately
+//!   conservative for these tiny probe datasets, so the strict form is
+//!   sound at this limit);
+//! - the daemon answers a well-formed probe after each abuse round;
+//! - no request is silently dropped — every line a client gets onto the
+//!   wire is answered exactly once (or the client observably lost its
+//!   connection).
+//!
+//! The three seed-crash repros live here too: a deep-nesting line (stack
+//! overflow abort on the seed), hostile `load` dimensions (`{"p":-1}` made
+//! a 0-dimensional dataset, `{"p":1e300}` a `usize::MAX` allocation), and
+//! the unix-socket client that vanishes mid-response (daemon death on the
+//! seed).
+
+use cggm::coordinator::RunConfig;
+use cggm::gemm::native::NativeGemm;
+use cggm::serve::{serve_connection, ErrKind, Request, Response, ServeEngine};
+use cggm::serve::MAX_REQUEST_LINE_BYTES;
+use cggm::util::json::Json;
+use std::io::Cursor;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+fn engine(max_jobs: usize, budget: Option<usize>) -> ServeEngine {
+    let cfg = RunConfig {
+        serve_max_jobs: max_jobs,
+        serve_budget: budget,
+        ..RunConfig::default()
+    };
+    ServeEngine::new(cfg, Arc::new(NativeGemm::new(1)))
+}
+
+fn req(line: &str) -> Request {
+    Request::parse_line(line).expect("test request must parse")
+}
+
+/// Run one in-process JSONL session over byte buffers and hand back the
+/// parsed response lines (every line the daemon wrote must be valid JSON).
+fn session(srv: &ServeEngine, input: Vec<u8>) -> Vec<Json> {
+    let mut out: Vec<u8> = Vec::new();
+    serve_connection(srv, Cursor::new(input), &mut out).expect("Vec writer cannot fail");
+    String::from_utf8(out)
+        .expect("responses are UTF-8")
+        .lines()
+        .map(|l| Json::parse(l).expect("every response line is valid JSON"))
+        .collect()
+}
+
+fn is_parse_err(doc: &Json) -> bool {
+    doc.get("ok").and_then(|v| v.as_bool()) == Some(false)
+        && doc
+            .get("error")
+            .and_then(|e| e.get("kind"))
+            .and_then(|k| k.as_str())
+            == Some("parse")
+}
+
+const PROBE_LOAD: &str =
+    r#"{"op":"load","id":900,"name":"probe","workload":"chain","p":10,"q":10,"n":50,"seed":3}"#;
+const PROBE_FIT: &str =
+    r#"{"op":"fit","id":901,"dataset":"probe","solver":"alt","lambda":0.5,"max_iter":30}"#;
+
+/// A well-formed load + fit must succeed on this engine right now.
+fn probe(srv: &ServeEngine) {
+    let load = srv.request(req(PROBE_LOAD));
+    assert!(load.is_ok(), "probe load failed: {:?}", load.outcome);
+    let fit = srv.request(req(PROBE_FIT));
+    assert!(fit.is_ok(), "probe fit failed: {:?}", fit.outcome);
+}
+
+/// Seed-crash repro 1: a line of ~100k `[` overflowed the recursive-descent
+/// parser's stack — a process abort, unreachable by the engine's panic
+/// isolation because it never reaches a job. Now: one `parse` error
+/// response, and the same connection keeps serving.
+#[test]
+fn deep_nesting_line_is_answered_not_fatal() {
+    let srv = engine(1, None);
+    let mut input = Vec::new();
+    input.extend_from_slice("[".repeat(100_000).as_bytes());
+    input.push(b'\n');
+    input.extend_from_slice(br#"{"op":"stat","id":2}"#);
+    input.push(b'\n');
+    let lines = session(&srv, input);
+    assert_eq!(lines.len(), 2, "both lines answered");
+    assert!(is_parse_err(&lines[0]), "bomb gets a parse error: {}", lines[0].to_string());
+    assert_eq!(
+        lines[1].get("ok").and_then(|v| v.as_bool()),
+        Some(true),
+        "the connection survives the bomb"
+    );
+    probe(&srv);
+    srv.join();
+}
+
+/// An over-cap request line is answered with a `parse` error naming the
+/// cap, its remainder is discarded, and the *next* line is served
+/// normally. Invalid UTF-8 likewise.
+#[test]
+fn oversized_and_non_utf8_lines_are_recoverable() {
+    let srv = engine(1, None);
+    let mut input = Vec::new();
+    // 2 MiB of junk on one line — twice the cap.
+    input.extend_from_slice(&vec![b'a'; 2 * MAX_REQUEST_LINE_BYTES]);
+    input.push(b'\n');
+    // A line that is not UTF-8 at all.
+    input.extend_from_slice(&[0xff, 0xfe, 0x80, b'\n']);
+    // A well-formed request after both.
+    input.extend_from_slice(br#"{"op":"stat","id":3}"#);
+    input.push(b'\n');
+    let lines = session(&srv, input);
+    assert_eq!(lines.len(), 3, "all three lines answered");
+    assert!(is_parse_err(&lines[0]));
+    let msg = lines[0]
+        .get("error")
+        .and_then(|e| e.get("message"))
+        .and_then(|m| m.as_str())
+        .unwrap_or("");
+    assert!(
+        msg.contains(&MAX_REQUEST_LINE_BYTES.to_string()),
+        "over-long error names the cap: {msg}"
+    );
+    assert!(is_parse_err(&lines[1]), "non-UTF-8 is a parse error");
+    assert_eq!(lines[2].get("ok").and_then(|v| v.as_bool()), Some(true));
+    probe(&srv);
+    srv.join();
+}
+
+/// Seed-crash repro 2: hostile `load` dimensions. On the seed, the
+/// saturating cast turned `{"p":-1}` into a 0-dimensional dataset and
+/// `{"p":1e300}` into a `usize::MAX` allocation request. Both must be
+/// clean `parse` rejects with the engine still serving.
+#[test]
+fn hostile_load_dimensions_are_clean_rejects() {
+    let srv = engine(1, None);
+    for line in [
+        r#"{"op":"load","id":1,"name":"h","workload":"chain","p":-1,"q":10,"n":50}"#,
+        r#"{"op":"load","id":2,"name":"h","workload":"chain","p":1e300,"q":10,"n":50}"#,
+        r#"{"op":"load","id":3,"name":"h","workload":"chain","p":10,"q":2.5,"n":50}"#,
+    ] {
+        assert!(
+            Request::parse_line(line).is_err(),
+            "hostile dims must not parse: {line}"
+        );
+    }
+    // Over the wire the reject is a structured parse-kind error response.
+    let mut input = Vec::new();
+    input.extend_from_slice(
+        br#"{"op":"load","id":1,"name":"h","workload":"chain","p":-1,"q":10,"n":50}"#,
+    );
+    input.push(b'\n');
+    let lines = session(&srv, input);
+    assert_eq!(lines.len(), 1);
+    assert!(is_parse_err(&lines[0]));
+    // Nothing named "h" was created, and the engine still serves.
+    let stat = srv.request(req(r#"{"op":"fit","id":4,"dataset":"h","lambda":0.5}"#));
+    assert_eq!(stat.err_kind(), Some(ErrKind::NotFound));
+    probe(&srv);
+    srv.join();
+}
+
+/// Duplicate ids are the client's problem, not the engine's: every
+/// submitted request gets exactly one response, ids echoed verbatim.
+#[test]
+fn duplicate_ids_each_get_exactly_one_response() {
+    let srv = engine(2, None);
+    let (tx, rx) = mpsc::channel::<Response>();
+    let n = 16;
+    for _ in 0..n {
+        srv.submit(req(r#"{"op":"stat","id":7}"#), &tx);
+    }
+    drop(tx);
+    let responses: Vec<Response> = rx.iter().collect();
+    assert_eq!(responses.len(), n, "one response per submission");
+    for r in &responses {
+        assert_eq!(r.id, 7);
+        assert!(r.is_ok());
+    }
+    srv.join();
+}
+
+/// A client whose writer dies mid-session (the in-process stand-in for a
+/// disconnecting socket peer): `serve_connection` reports the I/O error,
+/// but the engine — and every other client — is untouched.
+struct DyingWriter {
+    writes: usize,
+}
+
+impl std::io::Write for DyingWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.writes == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "peer vanished",
+            ));
+        }
+        self.writes -= 1;
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The tentpole property test: ≥ 3 concurrent abusive clients — a
+/// malformed/hostile-dimension flood, an oversized-line + duplicate-id
+/// flood, and an immediately-disconnecting client — while a monitor
+/// asserts the budget invariant on every observation. After the abuse,
+/// the engine serves a well-formed probe and nothing leaked.
+#[test]
+fn concurrent_abusive_clients_leave_the_engine_serving() {
+    let limit = 256 << 20; // generous headroom: estimates ≪ limit
+    let srv = engine(2, Some(limit));
+    // Resident warm data so abuse runs against a non-trivial registry.
+    probe(&srv);
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        // Monitor: the admission invariant under every interleaving.
+        let monitor = scope.spawn(|| {
+            let mut observations = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let live = srv.budget().live();
+                let reserved = srv.reserved_bytes();
+                assert!(
+                    live + reserved <= limit,
+                    "budget invariant violated: live {live} + reserved {reserved} > limit {limit}"
+                );
+                observations += 1;
+                std::thread::yield_now();
+            }
+            assert!(observations > 0);
+        });
+
+        // Client 1: malformed + hostile-dimension flood, interleaved with
+        // valid duplicate-id loads of the same name (admission races).
+        let flood = scope.spawn(|| {
+            let mut input = Vec::new();
+            for k in 0..40 {
+                match k % 5 {
+                    0 => input.extend_from_slice(b"not json at all"),
+                    1 => input.extend_from_slice(
+                        br#"{"op":"load","id":5,"name":"x","workload":"chain","p":-1,"q":8,"n":40}"#,
+                    ),
+                    2 => input.extend_from_slice(
+                        br#"{"op":"load","id":5,"name":"x","workload":"chain","p":1e300,"q":8,"n":40}"#,
+                    ),
+                    3 => input.extend_from_slice(
+                        br#"{"op":"load","id":5,"name":"x","workload":"chain","p":8,"q":8,"n":40,"seed":2}"#,
+                    ),
+                    _ => input.extend_from_slice(br#"{"op":"fit","id":5,"dataset":"x","lambda":0.6}"#),
+                }
+                input.push(b'\n');
+            }
+            let lines = session(&srv, input);
+            assert_eq!(lines.len(), 40, "every flood line answered");
+        });
+
+        // Client 2: oversized lines and deep nesting between valid stats.
+        let bomber = scope.spawn(|| {
+            let mut input = Vec::new();
+            for k in 0..6 {
+                if k % 2 == 0 {
+                    input.extend_from_slice(&vec![b'{'; 200_000]);
+                } else {
+                    input.extend_from_slice(&vec![b'a'; MAX_REQUEST_LINE_BYTES + 1]);
+                }
+                input.push(b'\n');
+                input.extend_from_slice(br#"{"op":"stat","id":6}"#);
+                input.push(b'\n');
+            }
+            let lines = session(&srv, input);
+            assert_eq!(lines.len(), 12, "every bomber line answered");
+            for (k, line) in lines.iter().enumerate() {
+                if k % 2 == 0 {
+                    assert!(is_parse_err(line), "bomb line {k}: {}", line.to_string());
+                } else {
+                    assert_eq!(line.get("ok").and_then(|v| v.as_bool()), Some(true));
+                }
+            }
+        });
+
+        // Client 3 (× several rounds): connects, queues real work, and
+        // vanishes before reading any response.
+        let vanisher = scope.spawn(|| {
+            for _ in 0..4 {
+                let mut input = Vec::new();
+                input.extend_from_slice(
+                    br#"{"op":"load","id":8,"name":"v","workload":"chain","p":9,"q":9,"n":40}"#,
+                );
+                input.push(b'\n');
+                input.extend_from_slice(br#"{"op":"fit","id":9,"dataset":"v","lambda":0.5}"#);
+                input.push(b'\n');
+                let mut w = DyingWriter { writes: 0 };
+                let res = serve_connection(&srv, Cursor::new(input), &mut w);
+                assert!(res.is_err(), "the dead writer's error is reported");
+            }
+        });
+
+        flood.join().unwrap();
+        bomber.join().unwrap();
+        vanisher.join().unwrap();
+        // A well-formed probe succeeds after the abuse, before teardown.
+        probe(&srv);
+        stop.store(true, Ordering::Relaxed);
+        monitor.join().unwrap();
+    });
+
+    // Quiescent: no reserved bytes leaked by any interleaving.
+    srv.drain();
+    assert_eq!(srv.reserved_bytes(), 0, "reservation leak");
+    assert!(srv.budget().live() <= limit);
+    probe(&srv);
+    srv.join();
+}
+
+/// Seed-crash repro 3, end to end over a real unix socket: client 1 queues
+/// work and disconnects without reading; on the seed the daemon died of the
+/// broken pipe (and unlinked its socket). Now it logs, survives, and serves
+/// client 2.
+#[cfg(unix)]
+#[test]
+fn unix_daemon_survives_client_disconnect_mid_response() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use std::time::{Duration, Instant};
+
+    let sock = std::env::temp_dir().join(format!("cggm_abuse_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_cggm"))
+        .args(["serve", "--max-jobs", "1", "--socket", sock.to_str().unwrap()])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("failed to start cggm serve --socket");
+
+    let connect = |deadline: Instant| -> UnixStream {
+        loop {
+            match UnixStream::connect(&sock) {
+                Ok(s) => return s,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "socket never came up: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    };
+    let deadline = Instant::now() + Duration::from_secs(30);
+
+    // Client 1: queue a load + a deliberately slow fit (tight tolerance on
+    // a denser problem — many milliseconds of work), then vanish without
+    // reading a byte. By the time the daemon writes either response, the
+    // peer is long gone and the write is a broken pipe.
+    {
+        let mut c1 = connect(deadline);
+        c1.write_all(
+            concat!(
+                r#"{"op":"load","id":1,"name":"d","workload":"chain","p":40,"q":40,"n":150,"seed":5}"#,
+                "\n",
+                r#"{"op":"fit","id":2,"dataset":"d","solver":"alt","lambda":0.2,"tol":0.0000001,"max_iter":300}"#,
+                "\n",
+            )
+            .as_bytes(),
+        )
+        .expect("client 1 writes its requests");
+        // Drop both halves: the daemon's response write hits a dead peer.
+    }
+
+    // Client 2: must get a full session — warm registry included.
+    let mut c2 = connect(deadline);
+    c2.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    c2.write_all(
+        concat!(
+            r#"{"op":"stat","id":3}"#,
+            "\n",
+            r#"{"op":"shutdown","id":4}"#,
+            "\n",
+        )
+        .as_bytes(),
+    )
+    .expect("client 2 writes (daemon must still be listening)");
+    let mut lines = Vec::new();
+    for line in BufReader::new(c2).lines() {
+        lines.push(line.expect("client 2 reads responses"));
+    }
+    assert_eq!(lines.len(), 2, "stat + shutdown answered: {lines:?}");
+    for l in &lines {
+        let doc = Json::parse(l).expect("valid response JSON");
+        assert_eq!(doc.get("ok").and_then(|v| v.as_bool()), Some(true), "{l}");
+    }
+
+    let output = child.wait_with_output().expect("daemon exits after shutdown");
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "daemon must exit cleanly despite the vanished client\nstderr:\n{stderr}"
+    );
+    let _ = std::fs::remove_file(&sock);
+}

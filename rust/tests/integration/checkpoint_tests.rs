@@ -318,3 +318,53 @@ fn resume_without_screening_or_warm_starts() {
     assert_paths_equal(&reference, &resumed);
     let _ = std::fs::remove_file(&ck);
 }
+
+/// Hostile checkpoint fixtures (`tests/fixtures/hostile/`): adversarial
+/// headers and point lines must produce errors or an empty valid prefix —
+/// never panics, aborts, or header-driven giant allocations. Convention:
+/// `cv_*` files go through `load_cv`, the rest through `load`; `*.err.*`
+/// must be an `Err`, `*.ok.*` must be `Ok` with nothing recorded.
+#[test]
+fn hostile_fixtures_error_cleanly_or_record_nothing() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("hostile");
+    let mut seen = 0usize;
+    for entry in std::fs::read_dir(&dir).expect("hostile fixture dir exists") {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !name.ends_with(".jsonl") {
+            continue;
+        }
+        seen += 1;
+        let expect_err = name.contains(".err.");
+        assert!(
+            expect_err || name.contains(".ok."),
+            "fixture {name} must declare .err. or .ok."
+        );
+        if name.starts_with("cv_") {
+            match checkpoint::load_cv(&path) {
+                Err(_) => assert!(expect_err, "{name}: unexpected error"),
+                Ok(state) => {
+                    assert!(!expect_err, "{name}: expected an error, got Ok");
+                    assert!(
+                        state.nll.iter().flatten().all(|x| x.is_nan()),
+                        "{name}: a hostile line recorded a score"
+                    );
+                    assert_eq!(state.completed_folds(), 0, "{name}");
+                }
+            }
+        } else {
+            match checkpoint::load(&path) {
+                Err(_) => assert!(expect_err, "{name}: unexpected error"),
+                Ok(state) => {
+                    assert!(!expect_err, "{name}: expected an error, got Ok");
+                    assert!(state.points.is_empty(), "{name}: a hostile line survived");
+                    assert!(state.model.is_none(), "{name}");
+                }
+            }
+        }
+    }
+    assert!(seen >= 9, "hostile fixture set went missing ({seen} files)");
+}
