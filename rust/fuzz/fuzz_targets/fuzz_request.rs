@@ -17,11 +17,22 @@ fuzz_target!(|data: &[u8]| {
         assert!(req.id < (1u64 << 53));
         let name = req.op_name();
         assert!(
-            matches!(name, "load" | "fit" | "path" | "cv" | "stat" | "evict" | "shutdown"),
+            matches!(
+                name,
+                "load" | "fit" | "path" | "cv" | "stat" | "evict" | "cancel" | "save"
+                    | "export" | "shutdown"
+            ),
             "unexpected op name {name}"
         );
         if let Op::Load(_) = &req.op {
             assert!(req.dataset_name().is_some());
+        }
+        if let Op::Save(_) | Op::Export { .. } = &req.op {
+            assert!(req.dataset_name().is_some());
+        }
+        if let Op::Cancel { job } = &req.op {
+            // Checked u64 extraction, same contract as the request id.
+            assert!(*job < (1u64 << 53));
         }
     }
 });

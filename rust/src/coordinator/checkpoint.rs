@@ -94,7 +94,10 @@ fn sparse_from_json(j: &Json, expect: (usize, usize)) -> Option<SpRowMat> {
     Some(m)
 }
 
-fn model_to_json(model: &CggmModel) -> Json {
+/// Exact-f64 JSON encoding of a fitted model — shared by the path
+/// checkpoint point lines, the standalone model files, and the serve
+/// `export` op (which returns it inline).
+pub fn model_to_json(model: &CggmModel) -> Json {
     Json::obj(vec![
         ("lambda", sparse_to_json(&model.lambda)),
         ("theta", sparse_to_json(&model.theta)),
@@ -102,7 +105,7 @@ fn model_to_json(model: &CggmModel) -> Json {
 }
 
 /// Decode a model for a run of shape `(p, q)`: Λ is `q×q`, Θ is `p×q`.
-fn model_from_json(j: &Json, p: usize, q: usize) -> Option<CggmModel> {
+pub fn model_from_json(j: &Json, p: usize, q: usize) -> Option<CggmModel> {
     let lambda = sparse_from_json(j.get("lambda")?, (q, q))?;
     let theta = sparse_from_json(j.get("theta")?, (p, q))?;
     Some(CggmModel { lambda, theta })
@@ -345,6 +348,130 @@ pub fn load_from<R: BufRead>(mut reader: R) -> std::io::Result<CheckpointState> 
         points,
         model,
         valid_bytes: consumed,
+    })
+}
+
+// ------------------------------------------------------------- model files
+
+/// Bump when the model-file line format changes incompatibly.
+const MODEL_VERSION: f64 = 1.0;
+
+/// A standalone saved model (serve `save` op / `cggm serve` restart seed):
+///
+/// ```text
+/// {"kind":"model","version":1,"solver":"alt_newton_cd","p":20,"q":10,
+///  "lambda_l":0.5,"lambda_t":0.4}
+/// {"kind":"weights","model":{"lambda":{...},"theta":{...}}}
+/// ```
+///
+/// Same exact-f64 encoding as the path checkpoint, so a model saved,
+/// evicted, and re-loaded warm-starts from the *identical* iterate.
+pub struct ModelFile {
+    /// [`crate::solvers::SolverKind::name`] of the solver that fitted it.
+    pub solver: String,
+    pub p: usize,
+    pub q: usize,
+    /// (λ_Λ, λ_Θ) the model was fitted at — the warm-start cache key.
+    pub lam: (f64, f64),
+    pub model: CggmModel,
+}
+
+/// Write a fitted model (+ its identity) as a two-line JSONL file. Both
+/// lines are flushed; the write is atomic enough for the serve `save` op
+/// (a torn file is rejected whole by [`load_model`], never half-adopted).
+pub fn save_model(
+    path: &Path,
+    solver: &str,
+    lam: (f64, f64),
+    model: &CggmModel,
+) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut file = std::fs::File::create(path)?;
+    let header = Json::obj(vec![
+        ("kind", Json::str("model")),
+        ("version", Json::num(MODEL_VERSION)),
+        ("solver", Json::str(solver)),
+        ("p", Json::num(model.theta.rows() as f64)),
+        ("q", Json::num(model.lambda.rows() as f64)),
+        ("lambda_l", Json::num(lam.0)),
+        ("lambda_t", Json::num(lam.1)),
+    ]);
+    writeln!(file, "{}", header.to_string())?;
+    let weights = Json::obj(vec![
+        ("kind", Json::str("weights")),
+        ("model", model_to_json(model)),
+    ]);
+    writeln!(file, "{}", weights.to_string())?;
+    file.flush()
+}
+
+/// Load a saved model file. Unlike the append-only logs there is no
+/// valid-prefix notion: a model is adopted whole or rejected whole (a
+/// truncated or shape-hostile file must never seed a warm start).
+pub fn load_model(path: &Path) -> std::io::Result<ModelFile> {
+    let file = std::fs::File::open(path)?;
+    load_model_from(std::io::BufReader::new(file))
+}
+
+/// Reader-generic body of [`load_model`] — also a fuzz entry point.
+pub fn load_model_from<R: BufRead>(mut reader: R) -> std::io::Result<ModelFile> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 || !line.ends_with('\n') {
+        return Err(bad("missing model header"));
+    }
+    let header = Json::parse(line.trim_end()).map_err(|e| bad(&format!("bad header: {e}")))?;
+    if header.get("kind").and_then(|v| v.as_str()) != Some("model")
+        || header.get("version").and_then(|v| v.as_f64()) != Some(MODEL_VERSION)
+    {
+        return Err(bad("not a cggm model file (kind/version mismatch)"));
+    }
+    let solver = header
+        .get("solver")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| bad("header missing solver"))?
+        .to_string();
+    // Dims bounded before the weight line allocates anything (same hostile-
+    // header posture as the checkpoint loaders).
+    let p = header
+        .get("p")
+        .and_then(|v| v.as_usize())
+        .filter(|&p| p <= MAX_DIM)
+        .ok_or_else(|| bad("header p missing or out of range"))?;
+    let q = header
+        .get("q")
+        .and_then(|v| v.as_usize())
+        .filter(|&q| q <= MAX_DIM)
+        .ok_or_else(|| bad("header q missing or out of range"))?;
+    let lam = match (
+        header.get("lambda_l").and_then(|v| v.as_f64()),
+        header.get("lambda_t").and_then(|v| v.as_f64()),
+    ) {
+        (Some(l), Some(t)) => (l, t),
+        _ => return Err(bad("header missing lambda_l/lambda_t")),
+    };
+    line.clear();
+    if reader.read_line(&mut line)? == 0 || !line.ends_with('\n') {
+        return Err(bad("missing or torn weights line"));
+    }
+    let weights = Json::parse(line.trim_end()).map_err(|e| bad(&format!("bad weights: {e}")))?;
+    if weights.get("kind").and_then(|v| v.as_str()) != Some("weights") {
+        return Err(bad("second line is not a weights record"));
+    }
+    let model = weights
+        .get("model")
+        .and_then(|j| model_from_json(j, p, q))
+        .ok_or_else(|| bad("weights do not match the declared shape"))?;
+    Ok(ModelFile {
+        solver,
+        p,
+        q,
+        lam,
+        model,
     })
 }
 
@@ -780,6 +907,47 @@ mod tests {
         drop(w);
         let state = load_cv(&path).unwrap();
         assert_eq!(state.done, vec![false, true, false]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn model_file_roundtrips_and_rejects_hostile_input() {
+        let path = std::env::temp_dir().join("cggm_model_unit.jsonl");
+        let m = dummy_model();
+        save_model(&path, "alt_newton_cd", (0.5, 0.25), &m).unwrap();
+        let back = load_model(&path).unwrap();
+        assert_eq!(back.solver, "alt_newton_cd");
+        assert_eq!((back.p, back.q), (3, 2));
+        assert_eq!(back.lam, (0.5, 0.25));
+        assert_eq!(back.model.lambda, m.lambda);
+        assert_eq!(back.model.theta, m.theta);
+        assert_eq!(
+            back.model.theta.get(2, 1).to_bits(),
+            (0.1f64 + 0.2).to_bits(),
+            "exact-f64 roundtrip"
+        );
+        // Torn weights line: rejected whole, never half-adopted.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        std::fs::write(&path, format!("{}\n{}", lines[0], &lines[1][..lines[1].len() / 2]))
+            .unwrap();
+        assert!(load_model(&path).is_err());
+        // Hostile header dims: rejected before allocation.
+        std::fs::write(
+            &path,
+            concat!(
+                r#"{"kind":"model","version":1,"solver":"alt_newton_cd","#,
+                r#""p":1e15,"q":2,"lambda_l":0.5,"lambda_t":0.25}"#,
+                "\n{\"kind\":\"weights\",\"model\":{}}\n"
+            ),
+        )
+        .unwrap();
+        assert!(load_model(&path).is_err());
+        // A path checkpoint is not a model file.
+        let grid = vec![(0.5, 0.5)];
+        let w = CheckpointWriter::create(&path, "alt_newton_cd", 3, 2, &grid).unwrap();
+        drop(w);
+        assert!(load_model(&path).is_err());
         let _ = std::fs::remove_file(&path);
     }
 

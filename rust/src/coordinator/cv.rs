@@ -226,6 +226,23 @@ pub fn cross_validate(
     cv: &CvOptions,
     engine: &dyn GemmEngine,
 ) -> Result<CvResult, SolveError> {
+    cross_validate_with(kind, data, base, popts, cv, engine, &|_, _, _| {})
+}
+
+/// [`cross_validate`] with a per-scored-point observer: `on_score(fold,
+/// grid_point, heldout_nll)` fires after each fold scores a λ point, from
+/// whichever fold thread produced it (`Sync` because folds run in
+/// parallel). The serve engine's streamed `cv` progress lines hang off
+/// this; resumed (carried-over) folds do not re-fire.
+pub fn cross_validate_with(
+    kind: SolverKind,
+    data: &Dataset,
+    base: &SolveOptions,
+    popts: &PathOptions,
+    cv: &CvOptions,
+    engine: &dyn GemmEngine,
+    on_score: &(dyn Fn(usize, usize, f64) + Sync),
+) -> Result<CvResult, SolveError> {
     let sw = Stopwatch::start();
     let n = data.n();
     let k = cv.folds.clamp(2, n.max(2));
@@ -340,6 +357,7 @@ pub fn cross_validate(
             if let Some(w) = &writer {
                 w.record_point(f, j, x);
             }
+            on_score(f, j, x);
         })?;
         if let Some(w) = &writer {
             w.record_fold_done(f, path.screen_fallbacks);

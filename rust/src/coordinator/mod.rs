@@ -23,7 +23,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 pub use config::RunConfig;
-pub use cv::{cross_validate, CvOptions, CvPoint, CvResult};
+pub use cv::{cross_validate, cross_validate_with, CvOptions, CvPoint, CvResult};
 
 /// One timed solver run with derived summary numbers (a row of Table 1).
 pub struct RunSummary {
@@ -564,6 +564,12 @@ pub fn fit_path_with(
     }
     let resumed_points = start_k;
     for (k, &(lam_l, lam_t)) in grid.iter().enumerate().skip(start_k) {
+        // Per-λ-point cancellation grain (the solvers also poll per outer
+        // iteration); completed points are already checkpointed, the
+        // in-flight one is discarded.
+        if base.cancel.is_cancelled() {
+            return Err(SolveError::Cancelled);
+        }
         let mut opts = base.clone();
         opts.lam_l = lam_l;
         opts.lam_t = lam_t;

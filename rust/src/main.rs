@@ -104,8 +104,10 @@ COMMANDS
   serve [--config FILE] [--max-jobs N] [--serve-budget 1GB]
         [--socket PATH] [--threads T] [--cd-threads T] ...
         (long-lived JSONL job server: one request object per line on stdio
-         — or PATH with --socket — against named warm datasets; ops: load,
-         fit, path, cv, stat, evict, shutdown; see docs/SERVING.md)
+         — or PATH with --socket, serving concurrent connections — against
+         named warm datasets; ops: load, fit, path, cv, stat, evict,
+         cancel, save, export, shutdown; path/cv take "stream":true for
+         per-point progress lines; see docs/SERVING.md)
   batch FILE [--out-file FILE] [--max-jobs N] [--serve-budget 1GB] ...
         (execute a JSON manifest of serve jobs through the same engine;
          responses printed as JSONL, ordered by job id)
@@ -410,7 +412,10 @@ fn cmd_serve(args: &Args) -> i32 {
     let srv = ServeEngine::new(cfg, engine);
     let result = match socket {
         Some(path) => {
-            eprintln!("listening on unix socket {path} (one JSON request per line)");
+            eprintln!(
+                "listening on unix socket {path} (one JSON request per line; \
+                 concurrent connections)"
+            );
             serve_on_socket(&srv, &path)
         }
         None => {

@@ -11,7 +11,7 @@
 use std::sync::mpsc;
 
 use super::engine::ServeEngine;
-use super::protocol::{Request, Response};
+use super::protocol::{Request, Response, ServerLine};
 use crate::runtime::manifest::JobManifest;
 
 /// Outcome of one manifest run: every response (ordered by request id,
@@ -37,7 +37,7 @@ impl BatchOutcome {
 /// order (FIFO — per-dataset sequencing holds), run with the engine's
 /// configured concurrency, and reported ordered by id.
 pub fn run_batch(engine: &ServeEngine, manifest: &JobManifest) -> BatchOutcome {
-    let (tx, rx) = mpsc::channel::<Response>();
+    let (tx, rx) = mpsc::channel::<ServerLine>();
     let mut parse_failures = Vec::new();
     for (k, job) in manifest.jobs().iter().enumerate() {
         match Request::parse(job) {
@@ -51,8 +51,16 @@ pub fn run_batch(engine: &ServeEngine, manifest: &JobManifest) -> BatchOutcome {
         }
     }
     drop(tx);
-    // The channel closes when the last job's reply sender drops.
-    let mut responses: Vec<Response> = rx.into_iter().collect();
+    // The channel closes when the last job's reply sender drops. Batch
+    // mode never sets `stream:true`, but a manifest that does is still
+    // well-defined: progress lines are dropped, terminals kept.
+    let mut responses: Vec<Response> = rx
+        .into_iter()
+        .filter_map(|line| match line {
+            ServerLine::Done(resp) => Some(resp),
+            ServerLine::Progress(_) => None,
+        })
+        .collect();
     responses.extend(parse_failures);
     responses.sort_by_key(|r| r.id);
     let failures = responses.iter().filter(|r| !r.is_ok()).count();

@@ -45,20 +45,39 @@
 //! Each worker installs the engine's persistent [`TeamPool`] for the
 //! duration of a job, so the colored-CD team phases of every job reuse one
 //! set of parked threads instead of spawning per pass.
+//!
+//! # Streaming, cancellation, and the job table
+//!
+//! Reply channels carry [`ServerLine`]s: zero or more `Progress` lines
+//! (streamed `path`/`cv` jobs, opt-in per request) followed by exactly one
+//! terminal `Done` response per submitted request. Every queued request
+//! gets a ticketed slot in the scheduler's job table holding its state
+//! (queued → running, or cancelled) and an armed [`CancelToken`] that the
+//! executing solver polls at its wall-clock sites. `cancel` is handled
+//! synchronously at submit: queued instances of the target id are reaped
+//! (each answers with a `cancelled` error on its own connection), running
+//! instances have their token flagged and terminate at the next poll with
+//! the same structured error — their reservation is released by the normal
+//! worker epilogue, so the admission invariant survives cancel storms.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-use super::protocol::{ErrKind, JobKind, JobOp, LoadOp, LoadSource, Op, Request, Response};
+use super::protocol::{
+    ErrKind, JobKind, JobOp, LoadOp, LoadSource, Op, Progress, Request, Response, SaveOp,
+    ServerLine,
+};
 use super::registry::{Registry, RegistryError, WarmContext};
 use crate::cggm::factor::{dense_factor_bytes, dense_factor_scratch_bytes};
-use crate::cggm::Dataset;
-use crate::coordinator::{self, RunConfig, RunSummary};
+use crate::cggm::{CggmModel, Dataset};
+use crate::coordinator::{self, checkpoint, RunConfig, RunSummary};
 use crate::gemm::native::NativeGemm;
 use crate::gemm::GemmEngine;
 use crate::cggm::tiles::TileStats;
-use crate::solvers::{dense_workingset_bytes, solve_in_context, SolveError, SolverKind, StatMode};
+use crate::solvers::{
+    dense_workingset_bytes, solve_in_context, CancelToken, SolveError, SolverKind, StatMode,
+};
 use crate::util::json::Json;
 use crate::util::membudget::{fmt_bytes, MemBudget};
 use crate::util::threadpool::TeamPool;
@@ -147,7 +166,45 @@ struct Dims {
 struct Queued {
     req: Request,
     est: usize,
-    reply: mpsc::Sender<Response>,
+    reply: mpsc::Sender<ServerLine>,
+    /// Engine-unique handle tying this instance to its [`JobSlot`] (client
+    /// ids are client-chosen and freely duplicated).
+    ticket: u64,
+    token: CancelToken,
+    /// Whether this request opted into per-λ-point progress lines.
+    stream: bool,
+}
+
+/// Per-request lifecycle state, reported by `stat` and targeted by `cancel`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobState {
+    Queued,
+    Running,
+    /// Cancel requested; a queued instance never starts, a running one
+    /// terminates at its next token poll.
+    Cancelled,
+}
+
+impl JobState {
+    fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One live (queued or running) request in the scheduler's job table; the
+/// slot is removed when its terminal response has been sent.
+struct JobSlot {
+    ticket: u64,
+    /// Client request id — the `cancel` op's addressing key.
+    id: u64,
+    op: &'static str,
+    state: JobState,
+    stream: bool,
+    token: CancelToken,
 }
 
 struct Sched {
@@ -155,6 +212,9 @@ struct Sched {
     /// Estimates of currently running jobs.
     reserved: usize,
     running: usize,
+    /// Live request slots (queued + running), in submission order.
+    jobs: Vec<JobSlot>,
+    next_ticket: u64,
     /// Dataset names whose `load` is executing right now. Combined with
     /// strict head-of-line claiming this gives per-dataset sequential
     /// consistency: a job queued behind a load of its dataset cannot be
@@ -177,6 +237,7 @@ struct Inner {
     completed: AtomicUsize,
     failed: AtomicUsize,
     rejected: AtomicUsize,
+    cancelled: AtomicUsize,
     shutdown: AtomicBool,
 }
 
@@ -211,6 +272,8 @@ impl ServeEngine {
                 queue: VecDeque::new(),
                 reserved: 0,
                 running: 0,
+                jobs: Vec::new(),
+                next_ticket: 0,
                 active_loads: std::collections::HashSet::new(),
                 shutdown: false,
             }),
@@ -220,6 +283,7 @@ impl ServeEngine {
             completed: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
+            cancelled: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
         });
         let handles = (0..workers)
@@ -256,19 +320,26 @@ impl ServeEngine {
         self.inner.shutdown.load(Ordering::Relaxed)
     }
 
-    /// Submit one request; its response is sent to `reply` when done.
-    /// Control decisions (parse/shape validation, can-never-fit rejection,
-    /// shutdown) respond immediately; everything else queues FIFO.
-    pub fn submit(&self, req: Request, reply: &mpsc::Sender<Response>) {
+    /// Submit one request; its progress lines (streamed jobs) and terminal
+    /// response are sent to `reply`. Control decisions (parse/shape
+    /// validation, can-never-fit rejection, cancel, shutdown) respond
+    /// immediately; everything else queues FIFO.
+    pub fn submit(&self, req: Request, reply: &mpsc::Sender<ServerLine>) {
         let op = req.op_name();
         let id = req.id;
         if self.is_shutdown() {
-            let _ = reply.send(Response::err(
+            let _ = reply.send(ServerLine::Done(Response::err(
                 id,
                 op,
                 ErrKind::Shutdown,
                 "engine is shutting down",
-            ));
+            )));
+            return;
+        }
+        if let Op::Cancel { job } = req.op {
+            // Synchronous: a cancel must reach a long-running job *now*,
+            // not after it in the FIFO queue.
+            let _ = reply.send(ServerLine::Done(self.cancel_job(id, job)));
             return;
         }
         if let Op::Shutdown = req.op {
@@ -277,38 +348,124 @@ impl ServeEngine {
             // (workers drain the whole queue, shutdown included, then exit).
             self.shutdown();
             let mut sched = self.inner.sched.lock().unwrap();
+            let ticket = sched.next_ticket;
+            sched.next_ticket += 1;
+            // No job-table slot: the ack is not cancellable work.
             sched.queue.push_back(Queued {
                 req,
                 est: 0,
                 reply: reply.clone(),
+                ticket,
+                token: CancelToken::none(),
+                stream: false,
             });
             self.inner.work.notify_all();
             return;
         }
         match self.admit(&req) {
             Ok(est) => {
+                let stream = matches!(&req.op, Op::Job(j) if j.stream);
+                let token = CancelToken::armed();
                 let mut sched = self.inner.sched.lock().unwrap();
+                let ticket = sched.next_ticket;
+                sched.next_ticket += 1;
+                sched.jobs.push(JobSlot {
+                    ticket,
+                    id,
+                    op,
+                    state: JobState::Queued,
+                    stream,
+                    token: token.clone(),
+                });
                 sched.queue.push_back(Queued {
                     req,
                     est,
                     reply: reply.clone(),
+                    ticket,
+                    token,
+                    stream,
                 });
                 self.inner.work.notify_all();
             }
             Err(resp) => {
                 self.inner.rejected.fetch_add(1, Ordering::Relaxed);
-                let _ = reply.send(resp);
+                let _ = reply.send(ServerLine::Done(resp));
             }
         }
     }
 
-    /// Submit and synchronously wait for the response (tests, examples,
-    /// and the batch driver's sequential mode).
+    /// Submit and synchronously wait for the terminal response, discarding
+    /// any progress lines (tests, examples, and the batch driver).
     pub fn request(&self, req: Request) -> Response {
         let (tx, rx) = mpsc::channel();
         self.submit(req, &tx);
         drop(tx);
-        rx.recv().expect("engine always responds")
+        for line in rx {
+            if let ServerLine::Done(resp) = line {
+                return resp;
+            }
+        }
+        panic!("engine always responds")
+    }
+
+    /// Handle a `cancel` op against request id `target`: reap its queued
+    /// instances (each answers `cancelled` on its own connection, having
+    /// reserved nothing — reservation happens at claim), flag the tokens of
+    /// its running instances (they answer `cancelled` from their worker at
+    /// the next poll, releasing their reservation through the normal
+    /// epilogue). Finished or unknown ids are a structured `not_found`.
+    fn cancel_job(&self, id: u64, target: u64) -> Response {
+        let mut sched = self.inner.sched.lock().unwrap();
+        let mut dequeued = 0usize;
+        let mut signalled = 0usize;
+        let queue = std::mem::take(&mut sched.queue);
+        for q in queue {
+            let cancellable = q.req.id == target && !matches!(q.req.op, Op::Shutdown);
+            if !cancellable {
+                sched.queue.push_back(q);
+                continue;
+            }
+            if let Op::Load(l) = &q.req.op {
+                // The load will never run; drop its submit-time shape
+                // record so it cannot keep admitting doomed jobs.
+                self.inner.dims.lock().unwrap().remove(&l.name);
+            }
+            sched.jobs.retain(|s| s.ticket != q.ticket);
+            self.inner.cancelled.fetch_add(1, Ordering::Relaxed);
+            dequeued += 1;
+            let _ = q.reply.send(ServerLine::Done(Response::err(
+                q.req.id,
+                q.req.op_name(),
+                ErrKind::Cancelled,
+                "cancelled while queued",
+            )));
+        }
+        for slot in sched.jobs.iter_mut() {
+            if slot.id == target && slot.state == JobState::Running {
+                slot.token.cancel();
+                slot.state = JobState::Cancelled;
+                signalled += 1;
+            }
+        }
+        self.inner.work.notify_all();
+        drop(sched);
+        if dequeued + signalled == 0 {
+            return Response::err(
+                id,
+                "cancel",
+                ErrKind::NotFound,
+                format!("no queued or running job with id {target}"),
+            );
+        }
+        Response::ok(
+            id,
+            "cancel",
+            Json::obj(vec![
+                ("job", Json::num(target as f64)),
+                ("dequeued", Json::num(dequeued as f64)),
+                ("signalled", Json::num(signalled as f64)),
+            ]),
+        )
     }
 
     /// Submit-time admission: estimate the job's peak bytes and reject it
@@ -318,7 +475,10 @@ impl ServeEngine {
         let limit = self.inner.budget.limit();
         let threads = self.inner.base.threads.max(self.inner.base.cd_threads);
         match &req.op {
-            Op::Stat { .. } | Op::Evict { .. } | Op::Shutdown => Ok(0),
+            // Cancel never reaches admit (handled synchronously at submit);
+            // save/export only clone an already-budgeted cached model.
+            Op::Stat { .. } | Op::Evict { .. } | Op::Cancel { .. } | Op::Save(_)
+            | Op::Export { .. } | Op::Shutdown => Ok(0),
             Op::Load(l) => {
                 let (p, q, n) = match &l.source {
                     LoadSource::Generate { p, q, n, .. } => (*p, *q, *n),
@@ -502,7 +662,7 @@ fn worker_loop(inner: Arc<Inner>) {
         // A panicking solver must not take the worker (and the whole
         // session) down with it.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            execute(&inner, &job.req)
+            execute(&inner, &job)
         }));
         let resp = outcome.unwrap_or_else(|_| {
             Response::err(
@@ -514,10 +674,15 @@ fn worker_loop(inner: Arc<Inner>) {
         });
         if resp.is_ok() {
             inner.completed.fetch_add(1, Ordering::Relaxed);
+        } else if resp.err_kind() == Some(ErrKind::Cancelled) {
+            // A job stopped by its own token is neither success nor
+            // failure; it has its own counter (and released its budget
+            // transients on unwind like any early return).
+            inner.cancelled.fetch_add(1, Ordering::Relaxed);
         } else {
             inner.failed.fetch_add(1, Ordering::Relaxed);
         }
-        let _ = job.reply.send(resp);
+        let _ = job.reply.send(ServerLine::Done(resp));
         if let Op::Load(l) = &job.req.op {
             // The submit-time shape record exists only to size jobs queued
             // behind an in-flight load; once the load completes (either
@@ -530,6 +695,7 @@ fn worker_loop(inner: Arc<Inner>) {
         if let Op::Load(l) = &job.req.op {
             sched.active_loads.remove(&l.name);
         }
+        sched.jobs.retain(|s| s.ticket != job.ticket);
         sched.reserved -= job.est;
         sched.running -= 1;
         inner.work.notify_all();
@@ -561,6 +727,11 @@ fn claim(inner: &Inner) -> Option<Queued> {
                     if let Op::Load(l) = &job.req.op {
                         sched.active_loads.insert(l.name.clone());
                     }
+                    if let Some(slot) =
+                        sched.jobs.iter_mut().find(|s| s.ticket == job.ticket)
+                    {
+                        slot.state = JobState::Running;
+                    }
                     sched.reserved += job.est;
                     sched.running += 1;
                     return Some(job);
@@ -578,8 +749,9 @@ fn claim(inner: &Inner) -> Option<Queued> {
                         continue;
                     }
                     let job = sched.queue.pop_front().unwrap();
+                    sched.jobs.retain(|s| s.ticket != job.ticket);
                     inner.rejected.fetch_add(1, Ordering::Relaxed);
-                    let _ = job.reply.send(Response::err(
+                    let _ = job.reply.send(ServerLine::Done(Response::err(
                         job.req.id,
                         job.req.op_name(),
                         ErrKind::Budget,
@@ -590,7 +762,7 @@ fn claim(inner: &Inner) -> Option<Queued> {
                             fmt_bytes(inner.budget.available()),
                             fmt_bytes(inner.budget.limit())
                         ),
-                    ));
+                    )));
                     inner.work.notify_all();
                     continue;
                 }
@@ -604,11 +776,14 @@ fn claim(inner: &Inner) -> Option<Queued> {
 
 // --------------------------------------------------------------- execution
 
-fn execute(inner: &Inner, req: &Request) -> Response {
+fn execute(inner: &Inner, queued: &Queued) -> Response {
+    let req = &queued.req;
     let (id, op) = (req.id, req.op_name());
     match &req.op {
         Op::Load(load) => execute_load(inner, id, load),
-        Op::Job(job) => execute_job(inner, id, job),
+        Op::Job(job) => {
+            execute_job(inner, id, job, &queued.token, queued.stream, &queued.reply)
+        }
         Op::Stat { dataset } => execute_stat(inner, id, dataset.as_deref()),
         Op::Evict { dataset } => match inner.registry.lock().unwrap().evict(dataset) {
             Ok(freed) => Response::ok(
@@ -621,6 +796,17 @@ fn execute(inner: &Inner, req: &Request) -> Response {
             ),
             Err(e) => Response::err(id, op, registry_err_kind(&e), e.to_string()),
         },
+        Op::Save(save) => execute_save(inner, id, save),
+        Op::Export { dataset, solver } => {
+            execute_export(inner, id, dataset, solver.as_deref())
+        }
+        // Cancel is handled synchronously at submit and never queued.
+        Op::Cancel { .. } => Response::err(
+            id,
+            op,
+            ErrKind::Parse,
+            "cancel is handled at submit; it cannot be queued",
+        ),
         // The flag was set at submit; this queued ack just keeps response
         // order FIFO behind the work that was already pending.
         Op::Shutdown => Response::ok(id, op, Json::obj(vec![])),
@@ -639,29 +825,44 @@ fn solve_err_kind(e: &SolveError) -> ErrKind {
     match e {
         SolveError::Budget(_) => ErrKind::Budget,
         SolveError::Checkpoint(_) => ErrKind::Io,
+        SolveError::Cancelled => ErrKind::Cancelled,
         _ => ErrKind::Solve,
     }
+}
+
+/// Accept both the CLI spellings (`alt`, `bcd`, …) and the canonical
+/// [`SolverKind::name`] form that model files and `stat` report.
+fn parse_solver(s: &str) -> Option<SolverKind> {
+    SolverKind::parse(s).or_else(|| SolverKind::all().into_iter().find(|k| k.name() == s))
 }
 
 fn execute_load(inner: &Inner, id: u64, load: &LoadOp) -> Response {
     let sw = Stopwatch::start();
     let op = "load";
-    // Idempotent: a resident name is a registry hit, optionally re-warmed.
+    // Idempotent: a resident name is a registry hit, optionally re-warmed
+    // (and, with a `model` key, re-seeded — the file governs either way).
     {
         let mut reg = inner.registry.lock().unwrap();
         if reg.contains(&load.name) {
             let warm = reg.lookup(&load.name).expect("checked resident");
             drop(reg);
-            let guard = warm.lock().unwrap();
+            let mut guard = warm.lock().unwrap();
             if load.warm {
                 if let Err(e) = guard.warm_stats() {
                     return Response::err(id, op, ErrKind::Budget, e.to_string());
                 }
             }
+            let seeded = match &load.model {
+                Some(path) => match seed_model_from_file(inner, id, &mut guard, path) {
+                    Ok(s) => Some(s),
+                    Err(resp) => return resp,
+                },
+                None => None,
+            };
             return Response::ok(
                 id,
                 op,
-                load_result(&load.name, &guard, true, sw.seconds()),
+                load_result(&load.name, &guard, true, sw.seconds(), seeded.as_ref()),
             );
         }
     }
@@ -711,7 +912,7 @@ fn execute_load(inner: &Inner, id: u64, load: &LoadOp) -> Response {
     }
     let mut opts = inner.base.solve_options();
     opts.budget = inner.budget.clone();
-    let warm = match WarmContext::new(Arc::new(data), inner.gemm.clone(), &opts) {
+    let mut warm = match WarmContext::new(Arc::new(data), inner.gemm.clone(), &opts) {
         Ok(w) => w,
         Err(e) => return Response::err(id, op, ErrKind::Budget, e.to_string()),
     };
@@ -720,14 +921,75 @@ fn execute_load(inner: &Inner, id: u64, load: &LoadOp) -> Response {
             return Response::err(id, op, ErrKind::Budget, e.to_string());
         }
     }
-    let result = load_result(&load.name, &warm, false, sw.seconds());
+    let seeded = match &load.model {
+        Some(path) => match seed_model_from_file(inner, id, &mut warm, path) {
+            Ok(s) => Some(s),
+            Err(resp) => return resp,
+        },
+        None => None,
+    };
+    let result = load_result(&load.name, &warm, false, sw.seconds(), seeded.as_ref());
     match inner.registry.lock().unwrap().insert(&load.name, warm) {
         Ok(()) => Response::ok(id, op, result),
         Err(e) => Response::err(id, op, registry_err_kind(&e), e.to_string()),
     }
 }
 
-fn load_result(name: &str, warm: &WarmContext, already: bool, seconds: f64) -> Json {
+/// Seed a warm context's model cache from a model file written by `save`
+/// (`load`'s optional `model` key — the warm-start-from-file path). The
+/// file's solver must be known and its shape must match the dataset; the
+/// operator asked for the seed explicitly, so failures are structured
+/// errors rather than silent cold starts.
+fn seed_model_from_file(
+    inner: &Inner,
+    id: u64,
+    warm: &mut WarmContext,
+    path: &str,
+) -> Result<(SolverKind, (f64, f64)), Response> {
+    let op = "load";
+    let mf = checkpoint::load_model(std::path::Path::new(path))
+        .map_err(|e| Response::err(id, op, ErrKind::Io, format!("cannot load model {path}: {e}")))?;
+    let kind = parse_solver(&mf.solver).ok_or_else(|| {
+        Response::err(
+            id,
+            op,
+            ErrKind::Parse,
+            format!("model file {path} names unknown solver '{}'", mf.solver),
+        )
+    })?;
+    let data = warm.data();
+    if (mf.p, mf.q) != (data.p(), data.q()) {
+        return Err(Response::err(
+            id,
+            op,
+            ErrKind::Parse,
+            format!(
+                "model file {path} is for a {}×{} problem but the dataset is {}×{}",
+                mf.p,
+                mf.q,
+                data.p(),
+                data.q()
+            ),
+        ));
+    }
+    if !warm.store_model(kind, mf.model, mf.lam, &inner.budget) {
+        return Err(Response::err(
+            id,
+            op,
+            ErrKind::Budget,
+            format!("serve budget cannot hold the model from {path}"),
+        ));
+    }
+    Ok((kind, mf.lam))
+}
+
+fn load_result(
+    name: &str,
+    warm: &WarmContext,
+    already: bool,
+    seconds: f64,
+    seeded: Option<&(SolverKind, (f64, f64))>,
+) -> Json {
     let data = warm.data();
     Json::obj(vec![
         ("name", Json::str(name)),
@@ -737,11 +999,129 @@ fn load_result(name: &str, warm: &WarmContext, already: bool, seconds: f64) -> J
         ("already_loaded", Json::Bool(already)),
         ("pinned_bytes", Json::num(warm.pinned_bytes() as f64)),
         ("stat_computes", Json::num(warm.stat_computes() as f64)),
+        ("model_loaded", Json::Bool(seeded.is_some())),
+        (
+            "model_solver",
+            seeded
+                .map(|(k, _)| Json::str(k.name()))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "model_lambda_l",
+            seeded.map(|(_, lam)| Json::num(lam.0)).unwrap_or(Json::Null),
+        ),
+        (
+            "model_lambda_t",
+            seeded.map(|(_, lam)| Json::num(lam.1)).unwrap_or(Json::Null),
+        ),
         ("seconds", Json::num(seconds)),
     ])
 }
 
-fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
+/// Resolve the cached model `save`/`export` operate on: the named dataset's
+/// warm entry, the requested (or default) solver's cached model, cloned out
+/// so the entry lock is held only for the copy.
+fn cached_model_for(
+    inner: &Inner,
+    id: u64,
+    op: &str,
+    dataset: &str,
+    solver: Option<&str>,
+) -> Result<(SolverKind, (f64, f64), CggmModel, usize, usize), Response> {
+    let kind = match solver {
+        None => inner.base.solver,
+        Some(s) => parse_solver(s).ok_or_else(|| {
+            Response::err(id, op, ErrKind::Parse, format!("unknown solver '{s}'"))
+        })?,
+    };
+    let entry = inner
+        .registry
+        .lock()
+        .unwrap()
+        .lookup(dataset)
+        .ok_or_else(|| {
+            Response::err(
+                id,
+                op,
+                ErrKind::NotFound,
+                format!("dataset '{dataset}' is not loaded"),
+            )
+        })?;
+    let warm = entry.lock().unwrap();
+    let model = warm.cached_model(kind).cloned().ok_or_else(|| {
+        Response::err(
+            id,
+            op,
+            ErrKind::NotFound,
+            format!(
+                "no cached {} model for '{dataset}' — run a fit first",
+                kind.name()
+            ),
+        )
+    })?;
+    let lam = warm.cached_lambda(kind).unwrap_or((f64::NAN, f64::NAN));
+    let data = warm.data();
+    Ok((kind, lam, model, data.p(), data.q()))
+}
+
+fn execute_save(inner: &Inner, id: u64, save: &SaveOp) -> Response {
+    let op = "save";
+    let (kind, lam, model, p, q) =
+        match cached_model_for(inner, id, op, &save.dataset, save.solver.as_deref()) {
+            Ok(found) => found,
+            Err(resp) => return resp,
+        };
+    match checkpoint::save_model(std::path::Path::new(&save.path), kind.name(), lam, &model) {
+        Ok(()) => Response::ok(
+            id,
+            op,
+            Json::obj(vec![
+                ("dataset", Json::str(save.dataset.clone())),
+                ("solver", Json::str(kind.name())),
+                ("path", Json::str(save.path.clone())),
+                ("p", Json::num(p as f64)),
+                ("q", Json::num(q as f64)),
+                ("lambda_l", Json::num(lam.0)),
+                ("lambda_t", Json::num(lam.1)),
+            ]),
+        ),
+        Err(e) => Response::err(
+            id,
+            op,
+            ErrKind::Io,
+            format!("cannot write {}: {e}", save.path),
+        ),
+    }
+}
+
+fn execute_export(inner: &Inner, id: u64, dataset: &str, solver: Option<&str>) -> Response {
+    let op = "export";
+    match cached_model_for(inner, id, op, dataset, solver) {
+        Ok((kind, lam, model, p, q)) => Response::ok(
+            id,
+            op,
+            Json::obj(vec![
+                ("dataset", Json::str(dataset)),
+                ("solver", Json::str(kind.name())),
+                ("p", Json::num(p as f64)),
+                ("q", Json::num(q as f64)),
+                ("lambda_l", Json::num(lam.0)),
+                ("lambda_t", Json::num(lam.1)),
+                ("model", checkpoint::model_to_json(&model)),
+            ]),
+        ),
+        Err(resp) => resp,
+    }
+}
+
+fn execute_job(
+    inner: &Inner,
+    id: u64,
+    job: &JobOp,
+    token: &CancelToken,
+    stream: bool,
+    reply: &mpsc::Sender<ServerLine>,
+) -> Response {
     let op = job.kind.name();
     let cfg = match job_config(&inner.base, job) {
         Ok(cfg) => cfg,
@@ -761,6 +1141,9 @@ fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
     };
     let mut opts = cfg.solve_options();
     opts.budget = inner.budget.clone();
+    // The job-table slot shares this token; a `cancel` op flips it and the
+    // solvers/path driver poll it at their wall-clock sites.
+    opts.cancel = token.clone();
     let sw = Stopwatch::start();
     let outcome = match job.kind {
         JobKind::Fit => {
@@ -805,7 +1188,29 @@ fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
             let warm = entry.lock().unwrap();
             let before = warm.stat_computes();
             let popts = cfg.path_options(true);
-            match coordinator::fit_path_in_context(kind, warm.ctx(), &opts, &popts) {
+            // Streamed progress rides the existing per-point observer; a
+            // dropped client just makes `send` a no-op (the job finishes
+            // and its terminal response is discarded with the channel).
+            let observe = |k: usize, point: &coordinator::PathPoint, _: &CggmModel| {
+                if !stream {
+                    return;
+                }
+                let _ = reply.send(ServerLine::Progress(Progress {
+                    id,
+                    op: op.to_string(),
+                    body: Json::obj(vec![
+                        ("point", Json::num(k as f64)),
+                        ("lambda_l", Json::num(point.lam_l)),
+                        ("lambda_t", Json::num(point.lam_t)),
+                        ("f", Json::num(point.f)),
+                        ("lambda_nnz", Json::num(point.lambda_nnz as f64)),
+                        ("theta_nnz", Json::num(point.theta_nnz as f64)),
+                        ("converged", Json::Bool(point.converged)),
+                        ("seconds", Json::num(point.seconds)),
+                    ]),
+                }));
+            };
+            match coordinator::fit_path_with(kind, warm.ctx(), &opts, &popts, observe) {
                 Ok(path) => {
                     let stat_delta = warm.stat_computes() - before;
                     let result = Json::obj(vec![
@@ -830,13 +1235,33 @@ fn execute_job(inner: &Inner, id: u64, job: &JobOp) -> Response {
             // owned by some other client's run.
             cvo.checkpoint = None;
             cvo.resume = false;
-            match coordinator::cross_validate(
+            // Fold threads score points concurrently; the observer must be
+            // Sync, so the (non-Sync) sender goes behind a mutex — one
+            // short lock per scored point, same discipline as the CV
+            // checkpoint writer.
+            let tx = Mutex::new(reply.clone());
+            let on_score = |f: usize, j: usize, x: f64| {
+                if !stream {
+                    return;
+                }
+                let _ = tx.lock().unwrap().send(ServerLine::Progress(Progress {
+                    id,
+                    op: op.to_string(),
+                    body: Json::obj(vec![
+                        ("fold", Json::num(f as f64)),
+                        ("point", Json::num(j as f64)),
+                        ("heldout_nll", Json::num(x)),
+                    ]),
+                }));
+            };
+            match coordinator::cross_validate_with(
                 kind,
                 &data,
                 &opts,
                 &popts,
                 &cvo,
                 inner.gemm.as_ref(),
+                &on_score,
             ) {
                 Ok(cv) => {
                     let result = Json::obj(vec![
@@ -890,11 +1315,20 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
         .filter(|(name, _)| dataset.map(|d| d == name.as_str()).unwrap_or(true))
         .map(|(name, e)| {
             let ts = e.tile_stats.unwrap_or(TileStats::default());
+            // Cached-model names come from the entry lock; `try_lock` so a
+            // running solve on the entry never stalls `stat` (a busy entry
+            // just reports an empty list this round).
+            let cached: Vec<Json> = e
+                .warm
+                .try_lock()
+                .map(|g| g.cached_solvers().iter().map(|s| Json::str(*s)).collect())
+                .unwrap_or_default();
             Json::obj(vec![
                 ("name", Json::str(name.clone())),
                 ("p", Json::num(e.p as f64)),
                 ("q", Json::num(e.q as f64)),
                 ("n", Json::num(e.n as f64)),
+                ("cached_models", Json::Arr(cached)),
                 ("pinned_bytes", Json::num(e.pinned_bytes as f64)),
                 ("stat_computes", Json::num(e.stat_computes as f64)),
                 ("tile_hits", Json::num(ts.hits as f64)),
@@ -923,9 +1357,34 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
         Json::num(budget.limit() as f64)
     };
     let sched = inner.sched.lock().unwrap();
+    // The job table makes `running` exact: Running slots whose op is not
+    // `stat` (this very request holds a Running slot — excluding by op
+    // replaces the old off-by-one `saturating_sub(1)` hack, which
+    // undercounted whenever a *different* stat was in flight too).
+    let running = sched
+        .jobs
+        .iter()
+        .filter(|s| s.state == JobState::Running && s.op != "stat")
+        .count();
+    let stream_subscribers = sched.jobs.iter().filter(|s| s.stream).count();
+    let states: Vec<Json> = sched
+        .jobs
+        .iter()
+        .filter(|s| s.op != "stat")
+        .map(|s| {
+            Json::obj(vec![
+                ("id", Json::num(s.id as f64)),
+                ("op", Json::str(s.op)),
+                ("state", Json::str(s.state.as_str())),
+                ("stream", Json::Bool(s.stream)),
+            ])
+        })
+        .collect();
     let jobs = Json::obj(vec![
         ("queued", Json::num(sched.queue.len() as f64)),
-        ("running", Json::num(sched.running.saturating_sub(1) as f64)),
+        ("running", Json::num(running as f64)),
+        ("stream_subscribers", Json::num(stream_subscribers as f64)),
+        ("states", Json::Arr(states)),
         (
             "completed",
             Json::num(inner.completed.load(Ordering::Relaxed) as f64),
@@ -937,6 +1396,10 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
         (
             "rejected",
             Json::num(inner.rejected.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "cancelled",
+            Json::num(inner.cancelled.load(Ordering::Relaxed) as f64),
         ),
     ]);
     drop(sched);

@@ -23,6 +23,12 @@
 //! Transport is stdio by default ([`serve_connection`] on
 //! stdin/stdout) or a unix socket (`--socket PATH`, [`serve_unix`]) —
 //! connections come and go, the engine and its warm registry persist.
+//! Socket mode is concurrent: each accepted connection gets its own
+//! reader thread over the one shared engine, so a long `path` job on one
+//! connection never blocks a `stat` probe or a `cancel` on another. Each
+//! connection also gets its own writer thread, so streamed `progress`
+//! lines and terminal responses from different connections never
+//! interleave within a line.
 //!
 //! [`SolverContext`]: crate::solvers::SolverContext
 
@@ -33,7 +39,7 @@ pub mod registry;
 
 pub use batch::{run_batch, BatchOutcome};
 pub use engine::ServeEngine;
-pub use protocol::{ErrKind, Op, Request, Response};
+pub use protocol::{ErrKind, Op, Progress, Request, Response, SaveOp, ServerLine};
 pub use registry::{Registry, WarmContext};
 
 use std::io::{BufRead, Write};
@@ -55,6 +61,11 @@ enum LineRead {
     TooLong,
     /// The line was not valid UTF-8; it was discarded through its newline.
     NotUtf8,
+    /// No bytes arrived within the stream's read timeout and nothing is
+    /// buffered — the connection is merely quiet. Socket mode uses this to
+    /// notice engine shutdown (triggered from *another* connection) without
+    /// blocking forever in `read`.
+    Idle,
 }
 
 /// Read one `\n`-terminated line, buffering at most `cap` bytes. Unlike
@@ -63,7 +74,24 @@ enum LineRead {
 fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<LineRead> {
     let mut buf: Vec<u8> = Vec::new();
     loop {
-        let chunk = reader.fill_buf()?;
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // A timeout mid-line keeps waiting for the rest of that
+                // line; a timeout between lines reports Idle so the caller
+                // can poll for shutdown.
+                if buf.is_empty() {
+                    return Ok(LineRead::Idle);
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
         if chunk.is_empty() {
             // EOF: a non-empty unterminated tail still counts as a line.
             if buf.is_empty() {
@@ -109,7 +137,18 @@ fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<L
 /// Consume input through the next `\n` (or EOF) without buffering it.
 fn discard_to_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
     loop {
-        let chunk = reader.fill_buf()?;
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
         if chunk.is_empty() {
             return Ok(());
         }
@@ -127,11 +166,12 @@ fn discard_to_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
 }
 
 /// Serve one JSONL connection: requests read line-by-line from `reader`
-/// (submitted in order), responses written as they complete by a writer
-/// thread. Returns when the client disconnects (EOF) or sends
-/// `{"op":"shutdown"}`, after draining every in-flight job — the engine
-/// itself stays alive (socket mode serves the next connection with the
-/// registry still warm).
+/// (submitted in order), server lines — streamed `progress` lines and
+/// terminal responses — written as they arrive by a writer thread.
+/// Returns when the client disconnects (EOF), sends `{"op":"shutdown"}`,
+/// or (socket mode) another connection shuts the engine down, after
+/// draining this connection's in-flight jobs — the engine itself stays
+/// alive across ordinary disconnects, with the registry still warm.
 ///
 /// Per-line faults — malformed JSON, a line past
 /// [`MAX_REQUEST_LINE_BYTES`], invalid UTF-8 — are answered with a
@@ -142,11 +182,11 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
     mut reader: R,
     writer: &mut W,
 ) -> std::io::Result<()> {
-    let (tx, rx) = mpsc::channel::<Response>();
+    let (tx, rx) = mpsc::channel::<ServerLine>();
     std::thread::scope(|scope| {
         let writer_thread = scope.spawn(move || -> std::io::Result<()> {
-            for resp in rx {
-                writeln!(writer, "{}", resp.to_json().to_string())?;
+            for line in rx {
+                writeln!(writer, "{}", line.to_json().to_string())?;
                 writer.flush()?;
             }
             Ok(())
@@ -155,22 +195,28 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
             let line = match read_line_capped(&mut reader, MAX_REQUEST_LINE_BYTES) {
                 Ok(LineRead::Eof) => break,
                 Ok(LineRead::Line(line)) => line,
+                Ok(LineRead::Idle) => {
+                    if engine.is_shutdown() {
+                        break;
+                    }
+                    continue;
+                }
                 Ok(LineRead::TooLong) => {
-                    let _ = tx.send(Response::err(
+                    let _ = tx.send(ServerLine::Done(Response::err(
                         0,
                         "parse",
                         ErrKind::Parse,
                         format!("request line exceeds {MAX_REQUEST_LINE_BYTES} bytes"),
-                    ));
+                    )));
                     continue;
                 }
                 Ok(LineRead::NotUtf8) => {
-                    let _ = tx.send(Response::err(
+                    let _ = tx.send(ServerLine::Done(Response::err(
                         0,
                         "parse",
                         ErrKind::Parse,
                         "request line is not valid UTF-8",
-                    ));
+                    )));
                     continue;
                 }
                 Err(_) => break,
@@ -187,57 +233,88 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
                     }
                 }
                 Err(e) => {
-                    let _ = tx.send(Response::err(0, "parse", ErrKind::Parse, e));
+                    let _ = tx.send(ServerLine::Done(Response::err(0, "parse", ErrKind::Parse, e)));
                 }
             }
         }
-        // Every queued job holds a reply sender clone; once the queue
-        // drains and this original drops, the writer's channel closes.
+        // Every queued job holds a reply sender clone; once this
+        // connection's jobs finish and this original drops, the writer's
+        // channel closes. Draining the whole engine here would make one
+        // client's disconnect wait on every other client's queue, so the
+        // writer join — which waits on exactly this connection's jobs —
+        // is the synchronization point.
         drop(tx);
-        engine.drain();
+        if engine.is_shutdown() {
+            engine.drain();
+        }
         writer_thread.join().expect("writer thread panicked")
     })
 }
 
-/// Serve JSONL connections on a unix socket, one client at a time, until a
+/// Serve JSONL connections on a unix socket, **concurrently** — one
+/// reader thread per accepted connection over the shared engine — until a
 /// client sends `{"op":"shutdown"}`. The warm registry persists across
-/// connections — that is the whole point.
+/// connections — that is the whole point — and a long job on one
+/// connection never blocks `stat`/`cancel` traffic on another.
+///
+/// Mechanics: the listener runs nonblocking so the accept loop can poll
+/// engine shutdown every ~20ms; each accepted stream is switched back to
+/// blocking with a 200ms read timeout, which [`serve_connection`] sees as
+/// [`LineRead::Idle`] between requests and uses as its own shutdown poll.
+/// Connection threads are scoped, so the daemon returns only after every
+/// connection has drained its writer.
 ///
 /// Per-connection I/O failures (a client disconnecting mid-response, a
-/// broken pipe, an accept error) are logged and the daemon moves on to the
-/// next connection; the seed code instead propagated the first such error,
-/// killing the daemon and unlinking the socket. Only failure to bind ends
-/// the loop with an error.
+/// broken pipe, an accept error) are logged and the daemon moves on; the
+/// seed code instead propagated the first such error, killing the daemon
+/// and unlinking the socket. Only failure to bind ends the loop with an
+/// error.
 #[cfg(unix)]
 pub fn serve_unix(engine: &ServeEngine, path: &std::path::Path) -> std::io::Result<()> {
     use std::os::unix::net::UnixListener;
+    use std::time::Duration;
     let _ = std::fs::remove_file(path);
     let listener = UnixListener::bind(path)?;
-    for conn in listener.incoming() {
-        let stream = match conn {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("serve: accept failed ({e}); continuing");
-                continue;
+    listener.set_nonblocking(true)?;
+    std::thread::scope(|scope| {
+        loop {
+            if engine.is_shutdown() {
+                break;
             }
-        };
-        let reader = match stream.try_clone() {
-            Ok(s) => std::io::BufReader::new(s),
-            Err(e) => {
-                eprintln!("serve: connection setup failed ({e}); continuing");
-                continue;
-            }
-        };
-        let mut writer = stream;
-        if let Err(e) = serve_connection(engine, reader, &mut writer) {
-            // Rust ignores SIGPIPE, so a client that vanished mid-response
-            // surfaces here as a plain io::Error — never daemon death.
-            eprintln!("serve: connection error ({e}); continuing");
+            let stream = match listener.accept() {
+                Ok((s, _addr)) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+                Err(e) => {
+                    eprintln!("serve: accept failed ({e}); continuing");
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+            };
+            let setup = stream
+                .set_nonblocking(false)
+                .and_then(|()| stream.set_read_timeout(Some(Duration::from_millis(200))))
+                .and_then(|()| stream.try_clone());
+            let reader = match setup {
+                Ok(s) => std::io::BufReader::new(s),
+                Err(e) => {
+                    eprintln!("serve: connection setup failed ({e}); continuing");
+                    continue;
+                }
+            };
+            scope.spawn(move || {
+                let mut writer = stream;
+                if let Err(e) = serve_connection(engine, reader, &mut writer) {
+                    // Rust ignores SIGPIPE, so a client that vanished
+                    // mid-response surfaces here as a plain io::Error —
+                    // never daemon death.
+                    eprintln!("serve: connection error ({e}); continuing");
+                }
+            });
         }
-        if engine.is_shutdown() {
-            break;
-        }
-    }
+    });
     let _ = std::fs::remove_file(path);
     Ok(())
 }

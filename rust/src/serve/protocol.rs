@@ -6,11 +6,14 @@
 //! {"op":"load","id":1,"name":"expr","path":"expr.bin"}
 //! {"op":"load","id":2,"name":"syn","workload":"chain","p":200,"q":200,"n":100,"seed":7}
 //! {"op":"fit","id":3,"dataset":"syn","solver":"alt","lambda":0.4,"tol":0.001}
-//! {"op":"path","id":4,"dataset":"syn","solver":"alt","path_points":8}
+//! {"op":"path","id":4,"dataset":"syn","solver":"alt","path_points":8,"stream":true}
 //! {"op":"cv","id":5,"dataset":"syn","cv_folds":5,"cv_threads":2}
 //! {"op":"stat","id":6}
 //! {"op":"evict","id":7,"dataset":"expr"}
-//! {"op":"shutdown","id":8}
+//! {"op":"cancel","id":8,"job":4}
+//! {"op":"save","id":9,"dataset":"syn","path":"syn.model.jsonl","solver":"alt"}
+//! {"op":"export","id":10,"dataset":"syn","solver":"alt"}
+//! {"op":"shutdown","id":11}
 //! ```
 //!
 //! Job requests (`fit` / `path` / `cv`) carry solver parameters under the
@@ -18,7 +21,9 @@
 //! [`crate::coordinator::RunConfig`] via the one shared schema, so an
 //! unknown or malformed key fails with the same message a bad config file
 //! would. `"warm": false` opts a job out of the registry's cached-model
-//! warm start.
+//! warm start. `"stream": true` opts a `path`/`cv` job into per-λ-point
+//! progress lines (below); old clients that never set it still get exactly
+//! one terminal response per request.
 //!
 //! Responses echo the request `id` and `op`:
 //!
@@ -27,9 +32,19 @@
 //! {"id":9,"op":"fit","ok":false,"error":{"kind":"budget","message":"..."}}
 //! ```
 //!
+//! A streamed job additionally emits zero or more non-terminal progress
+//! lines *before* its terminal response. A progress line carries a
+//! `progress` object and — the discriminator — **no `ok` key**:
+//!
+//! ```text
+//! {"id":4,"op":"path","progress":{"point":0,"lambda_l":0.5, ...}}
+//! {"id":4,"op":"path","progress":{"point":1, ...}}
+//! {"id":4,"op":"path","ok":true,"result":{...}}
+//! ```
+//!
 //! Error kinds are closed ([`ErrKind`]): `parse`, `not_found`, `budget`,
-//! `busy`, `io`, `solve`, `shutdown`. A failed job never takes the session
-//! down — the next line is served normally.
+//! `busy`, `io`, `solve`, `cancelled`, `shutdown`. A failed job never takes
+//! the session down — the next line is served normally.
 
 use crate::datagen::Workload;
 use crate::util::json::Json;
@@ -49,6 +64,17 @@ pub enum Op {
     Job(JobOp),
     Stat { dataset: Option<String> },
     Evict { dataset: String },
+    /// Cooperatively cancel the job(s) submitted under request id `job`.
+    Cancel { job: u64 },
+    /// Persist a registry entry's cached model to a JSONL model file.
+    Save(SaveOp),
+    /// Return a registry entry's cached model inline (exact-f64 JSON).
+    Export {
+        dataset: String,
+        /// Solver whose cached model to export; `None` = the serving
+        /// process's default solver.
+        solver: Option<String>,
+    },
     Shutdown,
 }
 
@@ -61,6 +87,19 @@ pub struct LoadOp {
     /// Eagerly materialize the dense statistics (default `true`) so later
     /// jobs start warm; `false` defers them to first use.
     pub warm: bool,
+    /// Optional model file (written by `save`) to seed the entry's
+    /// warm-start cache from, so a fitted model survives eviction and
+    /// restart.
+    pub model: Option<String>,
+}
+
+/// Persist the cached model of `dataset` (for `solver`, default the serving
+/// process's solver) to `path` via the checkpoint writer's exact-f64 JSONL.
+#[derive(Clone, Debug)]
+pub struct SaveOp {
+    pub dataset: String,
+    pub path: String,
+    pub solver: Option<String>,
 }
 
 /// Where a `load` gets its data.
@@ -104,6 +143,9 @@ pub struct JobOp {
     /// Warm-start from the registry's cached model when one exists
     /// (default `true`; `fit` only — paths warm internally).
     pub warm: bool,
+    /// Emit per-λ-point progress lines before the terminal response
+    /// (default `false`; `path`/`cv` only — `fit` has no per-point grain).
+    pub stream: bool,
     /// Remaining request keys, layered onto the engine's base config.
     pub params: Vec<(String, Json)>,
 }
@@ -116,6 +158,9 @@ impl Request {
             Op::Job(j) => j.kind.name(),
             Op::Stat { .. } => "stat",
             Op::Evict { .. } => "evict",
+            Op::Cancel { .. } => "cancel",
+            Op::Save(_) => "save",
+            Op::Export { .. } => "export",
             Op::Shutdown => "shutdown",
         }
     }
@@ -128,7 +173,9 @@ impl Request {
             Op::Job(j) => Some(&j.dataset),
             Op::Evict { dataset } => Some(dataset),
             Op::Stat { dataset } => dataset.as_deref(),
-            Op::Shutdown => None,
+            Op::Save(s) => Some(&s.dataset),
+            Op::Export { dataset, .. } => Some(dataset),
+            Op::Cancel { .. } | Op::Shutdown => None,
         }
     }
 
@@ -190,7 +237,20 @@ impl Request {
                         },
                     }
                 };
-                Op::Load(LoadOp { name, source, warm })
+                let model = doc
+                    .get("model")
+                    .map(|v| {
+                        v.as_str()
+                            .map(String::from)
+                            .ok_or_else(|| "'model' must be a string path".to_string())
+                    })
+                    .transpose()?;
+                Op::Load(LoadOp {
+                    name,
+                    source,
+                    warm,
+                    model,
+                })
             }
             "fit" | "path" | "cv" => {
                 let kind = match op {
@@ -199,9 +259,10 @@ impl Request {
                     _ => JobKind::Cv,
                 };
                 let dataset = str_field("dataset")?;
+                let stream = doc.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
                 // Everything that is not addressing/control is a solver
                 // parameter for the engine's config layering.
-                let reserved = ["op", "id", "dataset", "warm"];
+                let reserved = ["op", "id", "dataset", "warm", "stream"];
                 let params: Vec<(String, Json)> = obj
                     .iter()
                     .filter(|(k, _)| !reserved.contains(&k.as_str()))
@@ -211,6 +272,7 @@ impl Request {
                     kind,
                     dataset,
                     warm,
+                    stream,
                     params,
                 })
             }
@@ -222,6 +284,24 @@ impl Request {
             },
             "evict" => Op::Evict {
                 dataset: str_field("dataset")?,
+            },
+            "cancel" => Op::Cancel {
+                job: doc
+                    .get("job")
+                    .ok_or_else(|| "'cancel' requires 'job' (a request id)".to_string())?
+                    .as_u64()
+                    .ok_or_else(|| {
+                        "'job' must be a non-negative integer below 2^53".to_string()
+                    })?,
+            },
+            "save" => Op::Save(SaveOp {
+                dataset: str_field("dataset")?,
+                path: str_field("path")?,
+                solver: doc.get("solver").and_then(|v| v.as_str()).map(String::from),
+            }),
+            "export" => Op::Export {
+                dataset: str_field("dataset")?,
+                solver: doc.get("solver").and_then(|v| v.as_str()).map(String::from),
             },
             "shutdown" => Op::Shutdown,
             other => return Err(format!("unknown op '{other}'")),
@@ -246,6 +326,8 @@ pub enum ErrKind {
     Io,
     /// The solver failed (line search, factorization, panic).
     Solve,
+    /// The job was cancelled cooperatively (`cancel` op).
+    Cancelled,
     /// The engine is shutting down; no further jobs are accepted.
     Shutdown,
 }
@@ -259,6 +341,7 @@ impl ErrKind {
             ErrKind::Busy => "busy",
             ErrKind::Io => "io",
             ErrKind::Solve => "solve",
+            ErrKind::Cancelled => "cancelled",
             ErrKind::Shutdown => "shutdown",
         }
     }
@@ -324,6 +407,54 @@ impl Response {
     }
 }
 
+/// A non-terminal per-λ-point progress line for a streamed job. On the
+/// wire it carries a `progress` object and — deliberately — **no `ok`
+/// key**, so clients discriminate terminal responses by `ok`'s presence.
+#[derive(Clone, Debug)]
+pub struct Progress {
+    pub id: u64,
+    pub op: String,
+    /// The per-point payload (`point`, `lambda_l`, `f`, … for `path`;
+    /// `fold`/`point`/`heldout_nll` for `cv`).
+    pub body: Json,
+}
+
+impl Progress {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("op", Json::str(self.op.clone())),
+            ("progress", self.body.clone()),
+        ])
+    }
+}
+
+/// One line the server writes: a streamed progress event or the terminal
+/// response. Engine reply channels carry these so per-connection writers
+/// interleave progress and terminals in submission order.
+#[derive(Clone, Debug)]
+pub enum ServerLine {
+    Progress(Progress),
+    Done(Response),
+}
+
+impl ServerLine {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerLine::Progress(p) => p.to_json(),
+            ServerLine::Done(r) => r.to_json(),
+        }
+    }
+
+    /// The request id this line belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServerLine::Progress(p) => p.id,
+            ServerLine::Done(r) => r.id,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,9 +511,52 @@ mod tests {
             Op::Evict { .. }
         ));
         assert!(matches!(
+            Request::parse_line(r#"{"op":"cancel","id":9,"job":4}"#)
+                .unwrap()
+                .op,
+            Op::Cancel { job: 4 }
+        ));
+        assert!(matches!(
             Request::parse_line(r#"{"op":"shutdown"}"#).unwrap().op,
             Op::Shutdown
         ));
+    }
+
+    #[test]
+    fn parses_stream_save_export_and_model_seed() {
+        // `stream` defaults off, parses as a control key (never a param).
+        let r = Request::parse_line(r#"{"op":"path","dataset":"d","path_points":4}"#).unwrap();
+        let Op::Job(j) = &r.op else { panic!() };
+        assert!(!j.stream, "stream defaults off");
+        let r = Request::parse_line(
+            r#"{"op":"path","dataset":"d","stream":true,"path_points":4}"#,
+        )
+        .unwrap();
+        let Op::Job(j) = &r.op else { panic!() };
+        assert!(j.stream);
+        let keys: Vec<&str> = j.params.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["path_points"], "stream is not a solver param");
+
+        let r = Request::parse_line(
+            r#"{"op":"save","id":1,"dataset":"d","path":"m.jsonl","solver":"alt"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.op_name(), "save");
+        assert_eq!(r.dataset_name(), Some("d"));
+        let Op::Save(s) = &r.op else { panic!() };
+        assert_eq!((s.path.as_str(), s.solver.as_deref()), ("m.jsonl", Some("alt")));
+
+        let r = Request::parse_line(r#"{"op":"export","dataset":"d"}"#).unwrap();
+        assert_eq!(r.op_name(), "export");
+        assert!(matches!(&r.op, Op::Export { solver: None, .. }));
+
+        // `load` accepts an optional saved-model seed path.
+        let r = Request::parse_line(
+            r#"{"op":"load","name":"d","path":"x.bin","model":"m.jsonl"}"#,
+        )
+        .unwrap();
+        let Op::Load(l) = &r.op else { panic!() };
+        assert_eq!(l.model.as_deref(), Some("m.jsonl"));
     }
 
     #[test]
@@ -396,6 +570,13 @@ mod tests {
             r#"{"op":"load","name":"d","workload":"wat","p":1,"q":1,"n":1}"#,
             r#"{"op":"fit"}"#,
             r#"{"op":"evict"}"#,
+            r#"{"op":"cancel"}"#,
+            r#"{"op":"cancel","job":-1}"#,
+            r#"{"op":"cancel","job":1.5}"#,
+            r#"{"op":"save","dataset":"d"}"#,
+            r#"{"op":"save","path":"m.jsonl"}"#,
+            r#"{"op":"export"}"#,
+            r#"{"op":"load","name":"d","path":"x.bin","model":7}"#,
         ] {
             assert!(Request::parse_line(line).is_err(), "{line}");
         }
@@ -440,5 +621,30 @@ mod tests {
             doc.get("error").and_then(|e| e.get("kind")).and_then(|v| v.as_str()),
             Some("budget")
         );
+    }
+
+    /// Progress lines must omit the `ok` key — that absence is how old
+    /// clients and the batch driver tell them apart from terminals.
+    #[test]
+    fn progress_lines_have_no_ok_key() {
+        let p = Progress {
+            id: 4,
+            op: "path".to_string(),
+            body: Json::obj(vec![("point", Json::num(2.0))]),
+        };
+        let doc = Json::parse(&ServerLine::Progress(p).to_json().to_string()).unwrap();
+        assert_eq!(doc.get("id").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(doc.get("op").and_then(|v| v.as_str()), Some("path"));
+        assert!(doc.get("ok").is_none(), "progress lines carry no 'ok'");
+        assert_eq!(
+            doc.get("progress")
+                .and_then(|b| b.get("point"))
+                .and_then(|v| v.as_usize()),
+            Some(2)
+        );
+        let done = ServerLine::Done(Response::ok(4, "path", Json::obj(vec![])));
+        assert_eq!(done.id(), 4);
+        let doc = Json::parse(&done.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("ok").and_then(|v| v.as_bool()), Some(true));
     }
 }

@@ -132,6 +132,14 @@ impl WarmContext {
         self.models.get(kind.name()).map(|c| c.lam)
     }
 
+    /// Solver names with a cached warm-start model, sorted (stable `stat`
+    /// output — also what `save`/`export` can serialize).
+    pub fn cached_solvers(&self) -> Vec<&'static str> {
+        let mut names: Vec<&'static str> = self.models.keys().copied().collect();
+        names.sort_unstable();
+        names
+    }
+
     /// Cache `model` as the warm-start seed for `kind`, replacing any
     /// previous one. Returns `false` (and caches nothing) when the budget
     /// cannot hold it — serving degrades to cold starts, never errors.

@@ -304,6 +304,9 @@ pub fn solve(
         if opts.out_of_time(sw.seconds()) {
             break;
         }
+        if opts.cancel.is_cancelled() {
+            return Err(SolveError::Cancelled);
+        }
 
         // ---- partition columns of Λ (graph clustering on the active set,
         // persisted in the context and rebuilt only on churn) ----

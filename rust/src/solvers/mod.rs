@@ -39,7 +39,42 @@ use crate::gemm::GemmEngine;
 use crate::metrics::SolveTrace;
 use crate::util::membudget::MemBudget;
 use crate::util::threadpool::Parallelism;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Cooperative cancellation handle, polled at the same per-iteration /
+/// per-λ-point sites as the wall-clock budget. The default ([`CancelToken::none`])
+/// carries no flag and costs one branch per poll; [`CancelToken::armed`]
+/// shares an atomic flag between the solver and whoever may cancel it (the
+/// serve engine's `cancel` op). Cloning shares the flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Option<Arc<AtomicBool>>);
+
+impl CancelToken {
+    /// A token that can never fire (the non-serving default).
+    pub fn none() -> CancelToken {
+        CancelToken(None)
+    }
+
+    /// A live token; keep a clone to [`CancelToken::cancel`] later.
+    pub fn armed() -> CancelToken {
+        CancelToken(Some(Arc::new(AtomicBool::new(false))))
+    }
+
+    /// Request cancellation. No-op on an unarmed token.
+    pub fn cancel(&self) {
+        if let Some(flag) = &self.0 {
+            flag.store(true, Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0
+            .as_ref()
+            .map(|flag| flag.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+}
 
 /// Which solver to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -221,6 +256,11 @@ pub struct SolveOptions {
     /// the block solver's and the screening paths' statistic reads through
     /// the context's on-demand tile cache.
     pub stat_mode: StatMode,
+    /// Cooperative cancellation, polled wherever `time_limit` already is
+    /// (each solver's outer loop and the λ-path driver's per-point check).
+    /// A fired token surfaces as [`SolveError::Cancelled`]. Defaults to the
+    /// unarmed no-op token.
+    pub cancel: CancelToken,
 }
 
 impl Default for SolveOptions {
@@ -242,6 +282,7 @@ impl Default for SolveOptions {
             recluster_churn: 0.2,
             screen: None,
             stat_mode: StatMode::default(),
+            cancel: CancelToken::none(),
         }
     }
 }
@@ -284,6 +325,9 @@ pub enum SolveError {
     Budget(#[from] crate::util::membudget::BudgetExceeded),
     #[error("checkpoint io: {0}")]
     Checkpoint(String),
+    /// The run's [`CancelToken`] fired; the partial iterate is discarded.
+    #[error("job cancelled")]
+    Cancelled,
 }
 
 // Manual `From` impls so budget failures keep one face: a factorization or

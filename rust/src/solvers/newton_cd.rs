@@ -146,6 +146,9 @@ pub fn solve(
         if opts.out_of_time(sw.seconds()) {
             break;
         }
+        if opts.cancel.is_cancelled() {
+            return Err(SolveError::Cancelled);
+        }
         trace.cd_updates += opts.inner_sweeps * (active_l.len() + active_t.len());
 
         // ---- joint CD for (D_Λ, D_Θ) ----

@@ -294,6 +294,9 @@ pub fn solve(
         if opts.out_of_time(sw.seconds()) {
             break;
         }
+        if opts.cancel.is_cancelled() {
+            return Err(SolveError::Cancelled);
+        }
 
         // Momentum point (y already holds it; evaluate there).
         let ev_y = match prof.time("eval", || {

@@ -33,8 +33,14 @@
 //! - [`abuse_tests`] — the untrusted-input surface under structured abuse:
 //!   concurrent malformed/oversized/duplicate-id/disconnecting clients
 //!   against a live engine (budget invariant `live + reserved ≤ limit`),
-//!   plus the three seed-crash regressions (deep-nesting line, hostile
-//!   load dimensions, unix-socket disconnect mid-response);
+//!   cancel storms against running/queued/finished/unknown ids, plus the
+//!   three seed-crash regressions (deep-nesting line, hostile load
+//!   dimensions, unix-socket disconnect mid-response);
+//! - [`concurrent_serve_tests`] — the serve concurrency properties: three
+//!   threaded clients on one unix daemon (streamed `path` progress lines
+//!   precede their terminal, ids never cross connections, same-connection
+//!   cancel), and the save → evict → load(model) → refit roundtrip at
+//!   1e-6;
 //! - [`cli_tests`] — config/dataset plumbing plus the compiled `cggm`
 //!   binary run as a subprocess (incl. a `serve` stdio session and a
 //!   `batch` manifest);
@@ -82,6 +88,9 @@ mod serve_tests;
 
 #[path = "integration/abuse_tests.rs"]
 mod abuse_tests;
+
+#[path = "integration/concurrent_serve_tests.rs"]
+mod concurrent_serve_tests;
 
 #[path = "integration/cli_tests.rs"]
 mod cli_tests;

@@ -10,7 +10,11 @@
 //! - the daemon answers a well-formed probe after each abuse round;
 //! - no request is silently dropped — every line a client gets onto the
 //!   wire is answered exactly once (or the client observably lost its
-//!   connection).
+//!   connection);
+//! - `cancel` storms against running, queued, finished, and unknown ids
+//!   always answer structurally (`ok` or `not_found`), cancelled jobs
+//!   terminate with a `cancelled`-kind error, and no interleaving leaks a
+//!   byte of reservation.
 //!
 //! The three seed-crash repros live here too: a deep-nesting line (stack
 //! overflow abort on the seed), hostile `load` dimensions (`{"p":-1}` made
@@ -20,7 +24,7 @@
 
 use cggm::coordinator::RunConfig;
 use cggm::gemm::native::NativeGemm;
-use cggm::serve::{serve_connection, ErrKind, Request, Response, ServeEngine};
+use cggm::serve::{serve_connection, ErrKind, Request, Response, ServeEngine, ServerLine};
 use cggm::serve::MAX_REQUEST_LINE_BYTES;
 use cggm::util::json::Json;
 use std::io::Cursor;
@@ -169,13 +173,19 @@ fn hostile_load_dimensions_are_clean_rejects() {
 #[test]
 fn duplicate_ids_each_get_exactly_one_response() {
     let srv = engine(2, None);
-    let (tx, rx) = mpsc::channel::<Response>();
+    let (tx, rx) = mpsc::channel::<ServerLine>();
     let n = 16;
     for _ in 0..n {
         srv.submit(req(r#"{"op":"stat","id":7}"#), &tx);
     }
     drop(tx);
-    let responses: Vec<Response> = rx.iter().collect();
+    let responses: Vec<Response> = rx
+        .iter()
+        .filter_map(|line| match line {
+            ServerLine::Done(resp) => Some(resp),
+            ServerLine::Progress(_) => None,
+        })
+        .collect();
     assert_eq!(responses.len(), n, "one response per submission");
     for r in &responses {
         assert_eq!(r.id, 7);
@@ -401,4 +411,264 @@ fn unix_daemon_survives_client_disconnect_mid_response() {
         "daemon must exit cleanly despite the vanished client\nstderr:\n{stderr}"
     );
     let _ = std::fs::remove_file(&sock);
+}
+
+// ---------------------------------------------------------------------------
+// Cancel abuse: storms of `cancel` against running, queued, finished, and
+// unknown ids. The properties: every cancel gets exactly one structured
+// response (`ok` or `not_found`, never a hang or panic), every cancelled
+// job's terminal response is a `cancelled`-kind error, the admission
+// invariant holds throughout, and quiescence leaves zero reserved bytes.
+// Cancel races completion by design, so these tests accept both outcomes
+// where the race is real — what they never accept is a leak.
+// ---------------------------------------------------------------------------
+
+/// A deliberately long path job: many points at tight tolerance, so there
+/// is a wide window in which `cancel` finds it running.
+const SLOW_PATH: &str = r#"{"op":"path","id":10,"dataset":"slow","solver":"alt","path_points":24,"tol":0.00000001,"max_iter":400}"#;
+
+fn load_slow(srv: &ServeEngine) {
+    let load = srv.request(req(
+        r#"{"op":"load","id":890,"name":"slow","workload":"chain","p":24,"q":24,"n":90,"seed":4}"#,
+    ));
+    assert!(load.is_ok(), "{:?}", load.outcome);
+}
+
+/// Drain a reply channel to its terminal responses, dropping progress.
+fn terminals(rx: mpsc::Receiver<ServerLine>) -> Vec<Response> {
+    rx.into_iter()
+        .filter_map(|line| match line {
+            ServerLine::Done(resp) => Some(resp),
+            ServerLine::Progress(_) => None,
+        })
+        .collect()
+}
+
+/// Cancelling an id the engine has never seen — or one whose job already
+/// finished — is a structured `not_found`, not a hang or a panic.
+#[test]
+fn cancel_of_unknown_or_finished_job_is_not_found() {
+    let srv = engine(1, None);
+    probe(&srv); // ids 900 (load) and 901 (fit) run to completion
+    let unknown = srv.request(req(r#"{"op":"cancel","id":30,"job":12345}"#));
+    assert_eq!(unknown.err_kind(), Some(ErrKind::NotFound), "{:?}", unknown.outcome);
+    let finished = srv.request(req(r#"{"op":"cancel","id":31,"job":901}"#));
+    assert_eq!(finished.err_kind(), Some(ErrKind::NotFound), "{:?}", finished.outcome);
+    probe(&srv);
+    srv.join();
+}
+
+/// Cancel a mid-path job: the cancel answers `ok` (signalled) or
+/// `not_found` (lost the race to completion); the job's terminal response
+/// is correspondingly a `cancelled`-kind error or a success — and either
+/// way the reservation is released and a second cancel is `not_found`.
+#[test]
+fn cancel_mid_path_frees_reservation_and_double_cancel_is_not_found() {
+    let limit = 256 << 20;
+    let srv = engine(1, Some(limit));
+    load_slow(&srv);
+    let (tx, rx) = mpsc::channel::<ServerLine>();
+    srv.submit(req(SLOW_PATH), &tx);
+    drop(tx);
+    // Give the worker time to claim the job (the queue is empty, so the
+    // claim is immediate; the path then runs for many poll intervals).
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let first = srv.request(req(r#"{"op":"cancel","id":40,"job":10}"#));
+    assert!(
+        first.is_ok() || first.err_kind() == Some(ErrKind::NotFound),
+        "cancel must answer structurally: {:?}",
+        first.outcome
+    );
+    let done = terminals(rx);
+    assert_eq!(done.len(), 1, "the path job gets exactly one terminal response");
+    if first.is_ok() {
+        assert_eq!(
+            done[0].err_kind(),
+            Some(ErrKind::Cancelled),
+            "a signalled job must answer cancelled: {:?}",
+            done[0].outcome
+        );
+    } else {
+        assert!(done[0].is_ok(), "not_found means the job finished first");
+    }
+    // The slot is gone (cancelled or finished): a second cancel of the
+    // same id is deterministically not_found.
+    let second = srv.request(req(r#"{"op":"cancel","id":41,"job":10}"#));
+    assert_eq!(second.err_kind(), Some(ErrKind::NotFound), "{:?}", second.outcome);
+    srv.drain();
+    assert_eq!(srv.reserved_bytes(), 0, "cancellation leaked a reservation");
+    probe(&srv);
+    srv.join();
+}
+
+/// Cancelling queued jobs reaps them before they ever reserve bytes: each
+/// reaped job answers `cancelled while queued` on its own channel, and the
+/// jobs that escaped the reap (already running or finished) answer
+/// normally — exactly one terminal per submission either way.
+#[test]
+fn cancelling_queued_jobs_reaps_them_without_reservation() {
+    let limit = 256 << 20;
+    let srv = engine(1, Some(limit));
+    load_slow(&srv);
+    // One slow path occupies the single worker...
+    let (tx1, rx1) = mpsc::channel::<ServerLine>();
+    srv.submit(req(SLOW_PATH), &tx1);
+    drop(tx1);
+    // ...so these three fits sit queued behind it.
+    let (tx2, rx2) = mpsc::channel::<ServerLine>();
+    for _ in 0..3 {
+        srv.submit(
+            req(r#"{"op":"fit","id":11,"dataset":"slow","solver":"alt","lambda":0.5}"#),
+            &tx2,
+        );
+    }
+    drop(tx2);
+    let reap = srv.request(req(r#"{"op":"cancel","id":50,"job":11}"#));
+    if reap.is_ok() {
+        let dequeued = reap
+            .result()
+            .and_then(|r| r.get("dequeued"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0);
+        assert!(
+            (0.0..=3.0).contains(&dequeued),
+            "dequeued out of range: {:?}",
+            reap.outcome
+        );
+    } else {
+        assert_eq!(reap.err_kind(), Some(ErrKind::NotFound));
+    }
+    // Unblock the worker and check the terminals.
+    let _ = srv.request(req(r#"{"op":"cancel","id":51,"job":10}"#));
+    let fit_done = terminals(rx2);
+    assert_eq!(fit_done.len(), 3, "every queued fit answered exactly once");
+    for resp in &fit_done {
+        assert_eq!(resp.id, 11);
+        assert!(
+            resp.is_ok() || resp.err_kind() == Some(ErrKind::Cancelled),
+            "queued fit must finish or cancel cleanly: {:?}",
+            resp.outcome
+        );
+    }
+    let path_done = terminals(rx1);
+    assert_eq!(path_done.len(), 1);
+    srv.drain();
+    assert_eq!(srv.reserved_bytes(), 0, "queued-cancel leaked a reservation");
+    probe(&srv);
+    srv.join();
+}
+
+/// The cancel-storm property test: concurrent cancel floods against
+/// running, queued, finished, and unknown ids while real work flows, with
+/// a monitor asserting `live + reserved ≤ limit` on every observation.
+/// Quiescence: zero reserved bytes, and the engine still serves.
+#[test]
+fn cancel_storms_against_every_id_class_leave_engine_serving() {
+    let limit = 256 << 20;
+    let srv = engine(2, Some(limit));
+    load_slow(&srv);
+    probe(&srv); // id 901 is now a *finished* id for the storm to hit
+
+    let stop = AtomicBool::new(false);
+    let victim_done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let monitor = scope.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                let live = srv.budget().live();
+                let reserved = srv.reserved_bytes();
+                assert!(
+                    live + reserved <= limit,
+                    "budget invariant violated: live {live} + reserved {reserved} > limit {limit}"
+                );
+                std::thread::yield_now();
+            }
+        });
+
+        // Victim stream: slow paths under id 10, re-submitted as they die.
+        let victim = scope.spawn(|| {
+            for _ in 0..3 {
+                let (tx, rx) = mpsc::channel::<ServerLine>();
+                srv.submit(req(SLOW_PATH), &tx);
+                drop(tx);
+                let done = terminals(rx);
+                assert_eq!(done.len(), 1);
+                assert!(
+                    done[0].is_ok() || done[0].err_kind() == Some(ErrKind::Cancelled),
+                    "victim terminal must be ok or cancelled: {:?}",
+                    done[0].outcome
+                );
+            }
+            victim_done.store(true, Ordering::Relaxed);
+        });
+
+        // Queued stream: quick fits under id 11 on the second worker.
+        let queued = scope.spawn(|| {
+            let (tx, rx) = mpsc::channel::<ServerLine>();
+            for _ in 0..6 {
+                srv.submit(
+                    req(r#"{"op":"fit","id":11,"dataset":"slow","solver":"alt","lambda":0.5}"#),
+                    &tx,
+                );
+            }
+            drop(tx);
+            let done = terminals(rx);
+            assert_eq!(done.len(), 6, "every fit answered exactly once");
+            for resp in &done {
+                assert!(
+                    resp.is_ok() || resp.err_kind() == Some(ErrKind::Cancelled),
+                    "{:?}",
+                    resp.outcome
+                );
+            }
+        });
+
+        // Three cancel-storm threads hitting every id class at once. They
+        // run at least 40 rounds each, then keep storming until the
+        // victim's last path has been answered — so no slow path is left
+        // to run 24 points to completion un-cancelled.
+        let storms: Vec<_> = (0..3)
+            .map(|t| {
+                let victim_done = &victim_done;
+                scope.spawn(move || {
+                    let mut k = 0u64;
+                    loop {
+                        if k >= 40 && victim_done.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let target = match k % 4 {
+                            0 => 10,    // probably running
+                            1 => 11,    // probably queued
+                            2 => 901,   // finished long ago
+                            _ => 77777, // never existed
+                        };
+                        let resp = srv.request(req(&format!(
+                            r#"{{"op":"cancel","id":{},"job":{target}}}"#,
+                            600 + t * 1000 + k,
+                        )));
+                        assert!(
+                            resp.is_ok() || resp.err_kind() == Some(ErrKind::NotFound),
+                            "cancel must never fail unstructurally: {:?}",
+                            resp.outcome
+                        );
+                        k += 1;
+                        std::thread::yield_now();
+                    }
+                })
+            })
+            .collect();
+
+        for s in storms {
+            s.join().unwrap();
+        }
+        victim.join().unwrap();
+        queued.join().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        monitor.join().unwrap();
+    });
+
+    srv.drain();
+    assert_eq!(srv.reserved_bytes(), 0, "cancel storm leaked a reservation");
+    assert!(srv.budget().live() <= limit);
+    probe(&srv);
+    srv.join();
 }

@@ -1,0 +1,344 @@
+//! The concurrency property suite for `cggm serve`: one unix daemon,
+//! several threaded clients at once, each with its own connection. The
+//! properties:
+//!
+//! - responses and streamed `progress` lines never cross connections —
+//!   every line a client reads carries one of its own request ids;
+//! - on a streamed `path`, every `progress` line (no `"ok"` key) precedes
+//!   that job's terminal response on the same connection;
+//! - a `cancel` issued on the same connection as a mid-path job answers
+//!   structurally, and the job's terminal is `cancelled` or a clean
+//!   success — never silence;
+//! - a long job on one connection does not block `stat` on another.
+//!
+//! The save/export satellite lives here too: `save` a fitted model to
+//! disk, `evict` the dataset, `load` it back with `"model"` seeding the
+//! warm cache from the file, and refit to the same optimum at 1e-6.
+
+use cggm::coordinator::RunConfig;
+use cggm::gemm::native::NativeGemm;
+use cggm::serve::{ErrKind, Request, ServeEngine};
+use cggm::util::json::Json;
+use std::sync::Arc;
+
+fn engine(max_jobs: usize, budget: Option<usize>) -> ServeEngine {
+    let cfg = RunConfig {
+        serve_max_jobs: max_jobs,
+        serve_budget: budget,
+        ..RunConfig::default()
+    };
+    ServeEngine::new(cfg, Arc::new(NativeGemm::new(1)))
+}
+
+fn req(line: &str) -> Request {
+    Request::parse_line(line).expect("test request must parse")
+}
+
+fn num(doc: &Json, key: &str) -> f64 {
+    doc.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing number '{key}' in {}", doc.to_string()))
+}
+
+fn flag(doc: &Json, key: &str) -> bool {
+    doc.get(key)
+        .and_then(|v| v.as_bool())
+        .unwrap_or_else(|| panic!("missing bool '{key}' in {}", doc.to_string()))
+}
+
+/// save → evict → load(model=…) → refit roundtrip, in-process: the model
+/// written by `save` seeds the warm cache of a freshly re-loaded dataset,
+/// and the warm refit lands on the original optimum at 1e-6.
+#[test]
+fn save_evict_load_refit_roundtrip_matches_original_optimum() {
+    let srv = engine(1, None);
+    let load = srv.request(req(
+        r#"{"op":"load","id":1,"name":"d","workload":"chain","p":12,"q":12,"n":60,"seed":7}"#,
+    ));
+    assert!(load.is_ok(), "{:?}", load.outcome);
+    let fit_line = r#"{"op":"fit","id":2,"dataset":"d","solver":"alt","lambda":0.4,"tol":0.0000001,"max_iter":200}"#;
+    let fit1 = srv.request(req(fit_line));
+    assert!(fit1.is_ok(), "{:?}", fit1.outcome);
+    let f1 = num(fit1.result().unwrap().get("summary").unwrap(), "f");
+
+    // Export first: the in-band form of the same cached model.
+    let export = srv.request(req(r#"{"op":"export","id":3,"dataset":"d","solver":"alt"}"#));
+    assert!(export.is_ok(), "{:?}", export.outcome);
+    let eres = export.result().unwrap();
+    assert_eq!(num(eres, "p"), 12.0);
+    assert_eq!(num(eres, "q"), 12.0);
+    assert_eq!(num(eres, "lambda_l"), 0.4);
+    assert!(eres.get("model").is_some(), "export carries the weights");
+
+    // Save to disk.
+    let path = std::env::temp_dir().join(format!("cggm_roundtrip_{}.jsonl", std::process::id()));
+    let save = srv.request(req(&format!(
+        r#"{{"op":"save","id":4,"dataset":"d","path":"{}","solver":"alt"}}"#,
+        path.display()
+    )));
+    assert!(save.is_ok(), "{:?}", save.outcome);
+    assert_eq!(
+        save.result().unwrap().get("solver").unwrap().as_str(),
+        Some("alt_newton_cd")
+    );
+
+    // Evict: the dataset — and its cached model — are gone.
+    let evict = srv.request(req(r#"{"op":"evict","id":5,"dataset":"d"}"#));
+    assert!(evict.is_ok(), "{:?}", evict.outcome);
+    assert_eq!(srv.budget().live(), 0);
+
+    // Reload the identical dataset, seeding the warm cache from the file.
+    let reload = srv.request(req(&format!(
+        r#"{{"op":"load","id":6,"name":"d","workload":"chain","p":12,"q":12,"n":60,"seed":7,"model":"{}"}}"#,
+        path.display()
+    )));
+    assert!(reload.is_ok(), "{:?}", reload.outcome);
+    let rres = reload.result().unwrap();
+    assert!(flag(rres, "model_loaded"), "{}", rres.to_string());
+    assert_eq!(rres.get("model_solver").unwrap().as_str(), Some("alt_newton_cd"));
+    assert_eq!(num(rres, "model_lambda_l"), 0.4);
+
+    // The refit warm-starts from the seeded model and lands on the same
+    // optimum.
+    let fit2 = srv.request(req(fit_line.replace("\"id\":2", "\"id\":7").as_str()));
+    assert!(fit2.is_ok(), "{:?}", fit2.outcome);
+    let r2 = fit2.result().unwrap();
+    assert!(flag(r2, "warm_started"), "seeded model must warm-start the refit");
+    let f2 = num(r2.get("summary").unwrap(), "f");
+    assert!(
+        (f1 - f2).abs() <= 1e-6 * f1.abs().max(1.0),
+        "roundtrip diverged: {f1} vs {f2}"
+    );
+    let _ = std::fs::remove_file(&path);
+    srv.join();
+}
+
+/// Structured failure modes of save/export/load-model: unknown dataset,
+/// unfitted solver, unknown solver name, shape-mismatched model file.
+#[test]
+fn save_export_failures_are_structured() {
+    let srv = engine(1, None);
+    let missing = srv.request(req(r#"{"op":"save","id":1,"dataset":"nope","path":"/tmp/x.jsonl"}"#));
+    assert_eq!(missing.err_kind(), Some(ErrKind::NotFound), "{:?}", missing.outcome);
+    let load = srv.request(req(
+        r#"{"op":"load","id":2,"name":"d","workload":"chain","p":8,"q":8,"n":40,"seed":1}"#,
+    ));
+    assert!(load.is_ok());
+    // Loaded but never fitted: no cached model to export.
+    let unfitted = srv.request(req(r#"{"op":"export","id":3,"dataset":"d"}"#));
+    assert_eq!(unfitted.err_kind(), Some(ErrKind::NotFound), "{:?}", unfitted.outcome);
+    let badsolver = srv.request(req(
+        r#"{"op":"export","id":4,"dataset":"d","solver":"madeup"}"#,
+    ));
+    assert_eq!(badsolver.err_kind(), Some(ErrKind::Parse), "{:?}", badsolver.outcome);
+    // A model file for the wrong shape is rejected at load, structurally.
+    let fit = srv.request(req(r#"{"op":"fit","id":5,"dataset":"d","solver":"alt","lambda":0.5}"#));
+    assert!(fit.is_ok());
+    let path = std::env::temp_dir().join(format!("cggm_mismatch_{}.jsonl", std::process::id()));
+    let save = srv.request(req(&format!(
+        r#"{{"op":"save","id":6,"dataset":"d","path":"{}"}}"#,
+        path.display()
+    )));
+    assert!(save.is_ok(), "{:?}", save.outcome);
+    let mismatch = srv.request(req(&format!(
+        r#"{{"op":"load","id":7,"name":"other","workload":"chain","p":10,"q":10,"n":40,"seed":1,"model":"{}"}}"#,
+        path.display()
+    )));
+    assert_eq!(mismatch.err_kind(), Some(ErrKind::Parse), "{:?}", mismatch.outcome);
+    let _ = std::fs::remove_file(&path);
+    srv.join();
+}
+
+/// The tentpole acceptance, end to end over a real unix socket: three
+/// concurrent clients on one daemon — a streamed `path`, a plain
+/// load+fit+stat session, and a cancel session — with per-connection line
+/// isolation and progress-before-terminal ordering.
+#[cfg(unix)]
+#[test]
+fn unix_daemon_serves_three_concurrent_clients_with_streams_and_cancel() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::Shutdown;
+    use std::os::unix::net::UnixStream;
+    use std::time::{Duration, Instant};
+
+    let sock = std::env::temp_dir().join(format!("cggm_conc_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_cggm"))
+        .args(["serve", "--max-jobs", "2", "--socket", sock.to_str().unwrap()])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("failed to start cggm serve --socket");
+
+    let connect = || -> UnixStream {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match UnixStream::connect(&sock) {
+                Ok(s) => return s,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "socket never came up: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    };
+
+    // Write a whole session, half-close, and read every line back as
+    // parsed JSON (the daemon drains this connection's jobs before EOF).
+    let run_session = |requests: &str| -> Vec<Json> {
+        let mut c = connect();
+        c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        c.write_all(requests.as_bytes()).expect("client writes");
+        c.shutdown(Shutdown::Write).expect("half-close");
+        BufReader::new(c)
+            .lines()
+            .map(|l| Json::parse(&l.expect("client reads")).expect("valid JSON line"))
+            .collect()
+    };
+
+    let own_ids = |lines: &[Json], allowed: &[f64], who: &str| {
+        for line in lines {
+            let id = line.get("id").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+            assert!(
+                allowed.contains(&id),
+                "{who} read a line with a foreign id {id}: {}",
+                line.to_string()
+            );
+        }
+    };
+
+    std::thread::scope(|scope| {
+        // Client A: streamed path. Every progress line has no "ok" key and
+        // precedes the terminal for the same id.
+        let a = scope.spawn(|| {
+            let lines = run_session(concat!(
+                r#"{"op":"load","id":1000,"name":"a","workload":"chain","p":10,"q":10,"n":50,"seed":1}"#,
+                "\n",
+                r#"{"op":"path","id":1001,"dataset":"a","solver":"alt","path_points":4,"stream":true}"#,
+                "\n",
+            ));
+            own_ids(&lines, &[1000.0, 1001.0], "client A");
+            let mut progress = 0usize;
+            let mut terminal_seen = false;
+            for line in &lines {
+                if line.get("id").and_then(|v| v.as_f64()) != Some(1001.0) {
+                    continue;
+                }
+                if line.get("ok").is_none() {
+                    assert!(
+                        !terminal_seen,
+                        "progress after terminal: {}",
+                        line.to_string()
+                    );
+                    let body = line.get("progress").expect("progress body");
+                    assert!(body.get("lambda_l").is_some());
+                    assert!(body.get("f").is_some());
+                    progress += 1;
+                } else {
+                    assert!(flag(line, "ok"), "{}", line.to_string());
+                    terminal_seen = true;
+                }
+            }
+            assert!(terminal_seen, "path terminal missing: {lines:?}");
+            assert_eq!(progress, 4, "one progress line per path point");
+        });
+
+        // Client B: plain session — must be served while A's path runs.
+        let b = scope.spawn(|| {
+            let lines = run_session(concat!(
+                r#"{"op":"load","id":2000,"name":"b","workload":"chain","p":10,"q":10,"n":50,"seed":2}"#,
+                "\n",
+                r#"{"op":"fit","id":2001,"dataset":"b","solver":"alt","lambda":0.5}"#,
+                "\n",
+                r#"{"op":"stat","id":2002}"#,
+                "\n",
+            ));
+            own_ids(&lines, &[2000.0, 2001.0, 2002.0], "client B");
+            assert_eq!(lines.len(), 3, "no streaming requested, no extra lines");
+            for line in &lines {
+                assert!(flag(line, "ok"), "{}", line.to_string());
+            }
+        });
+
+        // Client C: a long path, then a same-connection cancel of it. The
+        // cancel answers structurally; the path terminates as `cancelled`
+        // or (losing the race) a clean success — never silence.
+        let c = scope.spawn(|| {
+            let lines = run_session(concat!(
+                r#"{"op":"load","id":3000,"name":"c","workload":"chain","p":20,"q":20,"n":80,"seed":3}"#,
+                "\n",
+                r#"{"op":"path","id":3001,"dataset":"c","solver":"alt","path_points":20,"tol":0.00000001,"max_iter":400}"#,
+                "\n",
+                r#"{"op":"cancel","id":3002,"job":3001}"#,
+                "\n",
+            ));
+            own_ids(&lines, &[3000.0, 3001.0, 3002.0], "client C");
+            assert_eq!(lines.len(), 3, "load, path terminal, cancel answered");
+            for target in [3000.0, 3001.0, 3002.0] {
+                assert_eq!(
+                    lines
+                        .iter()
+                        .filter(|l| l.get("id").and_then(|v| v.as_f64()) == Some(target))
+                        .count(),
+                    1,
+                    "exactly one terminal for id {target}"
+                );
+            }
+            for line in &lines {
+                let id = line.get("id").and_then(|v| v.as_f64()).unwrap();
+                let ok = flag(line, "ok");
+                let kind = line
+                    .get("error")
+                    .and_then(|e| e.get("kind"))
+                    .and_then(|k| k.as_str())
+                    .map(String::from);
+                if id == 3000.0 {
+                    assert!(ok, "{}", line.to_string());
+                } else if id == 3001.0 {
+                    assert!(
+                        ok || kind.as_deref() == Some("cancelled"),
+                        "path must finish or cancel cleanly: {}",
+                        line.to_string()
+                    );
+                } else {
+                    assert!(
+                        ok || kind.as_deref() == Some("not_found"),
+                        "cancel must answer structurally: {}",
+                        line.to_string()
+                    );
+                }
+            }
+        });
+
+        a.join().unwrap();
+        b.join().unwrap();
+        c.join().unwrap();
+    });
+
+    // A fourth connection shuts the daemon down cleanly.
+    let lines = {
+        let mut c = connect();
+        c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        c.write_all(b"{\"op\":\"shutdown\",\"id\":4000}\n")
+            .expect("shutdown client writes");
+        let mut out = Vec::new();
+        for line in BufReader::new(c).lines() {
+            out.push(line.expect("shutdown client reads"));
+        }
+        out
+    };
+    assert_eq!(lines.len(), 1, "shutdown answered: {lines:?}");
+    assert!(
+        flag(&Json::parse(&lines[0]).unwrap(), "ok"),
+        "{}",
+        lines[0]
+    );
+
+    let output = child.wait_with_output().expect("daemon exits after shutdown");
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "daemon must exit cleanly\nstderr:\n{stderr}"
+    );
+    let _ = std::fs::remove_file(&sock);
+}

@@ -7,7 +7,7 @@ use cggm::datagen::Workload;
 use cggm::gemm::native::NativeGemm;
 use cggm::runtime::manifest::JobManifest;
 use cggm::serve::engine::{fit_estimate, load_estimate};
-use cggm::serve::{run_batch, ErrKind, Request, ServeEngine};
+use cggm::serve::{run_batch, ErrKind, Request, ServeEngine, ServerLine};
 use cggm::solvers::{solve, SolveOptions, SolverKind};
 use cggm::util::json::Json;
 use std::sync::Arc;
@@ -93,6 +93,18 @@ fn repeat_fit_reuses_warm_context_without_stat_recompute() {
     assert_eq!(num(ds, "jobs"), 2.0);
     assert_eq!(num(ds, "warm_reuses"), 1.0);
     assert_eq!(num(ds, "stat_computes"), 3.0);
+    // The cached warm-start model is visible per dataset.
+    let cached = ds.get("cached_models").unwrap().as_arr().unwrap();
+    assert_eq!(cached.len(), 1);
+    assert_eq!(cached[0].as_str(), Some("alt_newton_cd"));
+    // A session that never set "stream":true has no stream subscribers,
+    // no live per-job states (the probing stat itself is excluded), and
+    // no cancellations.
+    let jobs = sres.get("jobs").unwrap();
+    assert_eq!(num(jobs, "stream_subscribers"), 0.0);
+    assert_eq!(num(jobs, "cancelled"), 0.0);
+    assert_eq!(num(jobs, "running"), 0.0);
+    assert!(jobs.get("states").unwrap().as_arr().unwrap().is_empty());
     // Tile counters are always emitted; a dense-mode dataset reports zeros.
     assert_eq!(num(ds, "tiles_computed"), 0.0);
     assert_eq!(num(ds, "tile_hits"), 0.0);
@@ -171,7 +183,13 @@ fn concurrent_jobs_share_one_budget_within_cap() {
         );
     }
     drop(tx);
-    let responses: Vec<_> = rx.into_iter().collect();
+    let responses: Vec<_> = rx
+        .into_iter()
+        .filter_map(|line| match line {
+            ServerLine::Done(resp) => Some(resp),
+            ServerLine::Progress(_) => None,
+        })
+        .collect();
     assert_eq!(responses.len(), 4);
     for resp in &responses {
         assert!(resp.is_ok(), "{:?}", resp.outcome);
@@ -318,7 +336,13 @@ fn shutdown_drains_and_rejects_new_work() {
     let late = srv.request(req(r#"{"op":"stat","id":4}"#));
     assert_eq!(late.err_kind(), Some(ErrKind::Shutdown));
     drop(tx);
-    let mut ids: Vec<u64> = rx.into_iter().map(|r| r.id).collect();
+    let mut ids: Vec<u64> = rx
+        .into_iter()
+        .filter_map(|line| match line {
+            ServerLine::Done(resp) => Some(resp.id),
+            ServerLine::Progress(_) => None,
+        })
+        .collect();
     ids.sort_unstable();
     assert_eq!(ids, vec![1, 2], "queued jobs drain through shutdown");
     srv.join();
