@@ -1,0 +1,149 @@
+//! Streaming re-fit bench: what the incremental Gram update + warm re-fit
+//! buys over a full rebuild and cold fit when k new samples slide a fixed
+//! n-sample window.
+//!
+//! For each k the same slid window is fit twice: once by rank-k-correcting
+//! the carried statistics and re-solving seeded from the live model, once
+//! by recomputing every Gram block from the n samples and fitting from
+//! scratch. Statistic work is counted in entry-updates — the incremental
+//! path touches each of the `p² + q² + pq` entries once per appended and
+//! once per evicted sample (`2k` passes) while a rebuild streams all `n`
+//! samples — so the crossover is analytic: the update wins iff `2k < n`.
+//!
+//! Besides the human-readable report it writes `BENCH_REFIT.json` — the
+//! machine-readable trajectory future PRs regress against (docs/PERF.md).
+
+use cggm::bench::write_bench_json;
+use cggm::cggm::{SampleBlock, WindowDelta};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::linalg::dense::Mat;
+use cggm::solvers::{solve_in_context, SolveOptions, SolverContext, SolverKind};
+use cggm::util::json::Json;
+use cggm::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let eng = NativeGemm::new(1);
+    let (p, q, n) = (100usize, 100usize, 600usize);
+    let prob = datagen::chain::generate(p, q, n, 13);
+    let opts = SolveOptions {
+        lam_l: 0.3,
+        lam_t: 0.3,
+        max_iter: 120,
+        tol: 0.00001,
+        ..Default::default()
+    };
+
+    // The model that is "live" when new samples start arriving.
+    let base_ctx = SolverContext::new(&prob.data, &opts, &eng);
+    let base = solve_in_context(SolverKind::AltNewtonCd, &base_ctx, &opts, None).unwrap();
+    assert!(base.trace.converged);
+    drop(base_ctx);
+    let entries = (p * p + q * q + p * q) as f64;
+    println!(
+        "# chain{p} streaming refit, {n}-sample window: warm+incremental vs cold+rebuild"
+    );
+
+    let mut legs: Vec<Json> = Vec::new();
+    for k in [1usize, 16, 256] {
+        // The identical slid window feeds both legs: k new samples in, the
+        // k oldest out.
+        let mut data = prob.data.clone();
+        let mut rng = Rng::new(100 + k as u64);
+        let mut delta = WindowDelta::new(data.n());
+        let xa = Mat::from_fn(p, k, |_, _| rng.normal());
+        let ya = Mat::from_fn(q, k, |_, _| rng.normal());
+        data.append_samples(&xa, &ya);
+        delta.record_append(SampleBlock::new(xa, ya));
+        delta.record_evict(data.evict_oldest(k));
+
+        // Warm leg: carry statistics from a context over the old window,
+        // rank-k correct them, re-solve seeded from the live model.
+        let donor = SolverContext::new(&prob.data, &opts, &eng);
+        donor.syy().unwrap();
+        donor.sxx().unwrap();
+        donor.sxy().unwrap();
+        let mut warm_ctx = SolverContext::with_carry(&data, &opts, &eng, donor.into_carry());
+        let t = Instant::now();
+        warm_ctx.update_stats(&delta).unwrap();
+        let update_seconds = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let warm =
+            solve_in_context(SolverKind::AltNewtonCd, &warm_ctx, &opts, Some(&base.model))
+                .unwrap();
+        let warm_seconds = t.elapsed().as_secs_f64();
+        assert!(warm.trace.warm_started);
+
+        // Cold leg: every Gram block rebuilt from the n-sample window, fit
+        // from scratch.
+        let cold_ctx = SolverContext::new(&data, &opts, &eng);
+        let t = Instant::now();
+        cold_ctx.syy().unwrap();
+        cold_ctx.sxx().unwrap();
+        cold_ctx.sxy().unwrap();
+        let rebuild_seconds = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let cold = solve_in_context(SolverKind::AltNewtonCd, &cold_ctx, &opts, None).unwrap();
+        let cold_seconds = t.elapsed().as_secs_f64();
+
+        // Same optimum either way — the update is exact, not approximate.
+        let (fw, fc) = (warm.trace.final_f().unwrap(), cold.trace.final_f().unwrap());
+        assert!(
+            (fw - fc).abs() <= 1e-6 * fc.abs().max(1.0),
+            "k={k}: warm refit diverged from cold fit: {fw} vs {fc}"
+        );
+
+        let inc_work = 2.0 * k as f64 * entries;
+        let rebuild_work = n as f64 * entries;
+        let (wi, ci) = (warm.trace.records.len(), cold.trace.records.len());
+        println!(
+            "#   k={k:<4} stats {:>8.1}k entry-updates in {:.4}s vs rebuild {:>9.1}k in {:.4}s \
+             | solve {wi:>3} warm iters {warm_seconds:.3}s vs {ci:>3} cold {cold_seconds:.3}s",
+            inc_work / 1e3,
+            update_seconds,
+            rebuild_work / 1e3,
+            rebuild_seconds,
+        );
+        // Acceptance: incremental statistics work strictly below a full
+        // rebuild, and the warm start saves solver iterations.
+        assert!(
+            inc_work < rebuild_work,
+            "k={k}: incremental stat work {inc_work} must undercut rebuild {rebuild_work}"
+        );
+        assert!(
+            wi <= ci,
+            "k={k}: warm refit took more iterations ({wi}) than the cold fit ({ci})"
+        );
+
+        legs.push(Json::obj(vec![
+            ("k", Json::num(k as f64)),
+            ("update_seconds", Json::num(update_seconds)),
+            ("rebuild_seconds", Json::num(rebuild_seconds)),
+            ("inc_entry_updates", Json::num(inc_work)),
+            ("rebuild_entry_updates", Json::num(rebuild_work)),
+            ("warm_iters", Json::num(wi as f64)),
+            ("cold_iters", Json::num(ci as f64)),
+            ("warm_seconds", Json::num(warm_seconds)),
+            ("cold_seconds", Json::num(cold_seconds)),
+            ("stat_updates", Json::num(warm_ctx.stat_updates() as f64)),
+            ("abs_delta_f", Json::num((fw - fc).abs())),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cggm-bench-refit/v1")),
+        (
+            "problem",
+            Json::obj(vec![
+                ("workload", Json::str("chain")),
+                ("p", Json::num(p as f64)),
+                ("q", Json::num(q as f64)),
+                ("n", Json::num(n as f64)),
+            ]),
+        ),
+        ("base_iters", Json::num(base.trace.records.len() as f64)),
+        ("legs", Json::arr(legs.into_iter())),
+    ]);
+    write_bench_json("REFIT", &doc);
+}

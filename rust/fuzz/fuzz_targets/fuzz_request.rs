@@ -4,7 +4,7 @@
 
 #![no_main]
 
-use cggm::serve::{Op, Request};
+use cggm::serve::{Op, Request, MAX_APPEND_ROWS};
 use libfuzzer_sys::fuzz_target;
 
 fuzz_target!(|data: &[u8]| {
@@ -20,7 +20,7 @@ fuzz_target!(|data: &[u8]| {
             matches!(
                 name,
                 "load" | "fit" | "path" | "cv" | "stat" | "evict" | "cancel" | "save"
-                    | "export" | "shutdown"
+                    | "export" | "append" | "refit" | "shutdown"
             ),
             "unexpected op name {name}"
         );
@@ -29,6 +29,16 @@ fuzz_target!(|data: &[u8]| {
         }
         if let Op::Save(_) | Op::Export { .. } = &req.op {
             assert!(req.dataset_name().is_some());
+        }
+        if let Op::Append(a) = &req.op {
+            // Exactly one source survived parsing, the inline row cap
+            // held, and no non-finite value slipped through.
+            assert!(a.rows.is_empty() != a.path.is_none());
+            assert!(a.rows.len() <= MAX_APPEND_ROWS);
+            assert!(a
+                .rows
+                .iter()
+                .all(|(x, y)| x.iter().chain(y).all(|v| v.is_finite())));
         }
         if let Op::Cancel { job } = &req.op {
             // Checked u64 extraction, same contract as the request id.

@@ -20,6 +20,118 @@ pub struct Dataset {
     pub yt: Mat,
 }
 
+/// A contiguous feature-major block of k samples — the unit of the sliding
+/// window's append/evict API and the rank-k panels of the incremental Gram
+/// corrections (`S ← (n·S + X_a·X_aᵀ − X_r·X_rᵀ)/n'`).
+#[derive(Clone, Debug)]
+pub struct SampleBlock {
+    /// Inputs, feature-major: p × k.
+    pub xt: Mat,
+    /// Outputs, feature-major: q × k.
+    pub yt: Mat,
+}
+
+impl SampleBlock {
+    pub fn new(xt: Mat, yt: Mat) -> SampleBlock {
+        assert_eq!(xt.cols(), yt.cols(), "sample count mismatch");
+        SampleBlock { xt, yt }
+    }
+
+    /// Number of samples in the block.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.xt.cols()
+    }
+
+    /// Horizontal concatenation (self's samples first) — how a delta merges
+    /// two appends (or two evictions) into one rank-k panel.
+    pub fn concat(&self, other: &SampleBlock) -> SampleBlock {
+        assert_eq!(self.xt.rows(), other.xt.rows(), "p mismatch");
+        assert_eq!(self.yt.rows(), other.yt.rows(), "q mismatch");
+        let k = self.k();
+        let xt = Mat::from_fn(self.xt.rows(), k + other.k(), |i, c| {
+            if c < k {
+                self.xt[(i, c)]
+            } else {
+                other.xt[(i, c - k)]
+            }
+        });
+        let yt = Mat::from_fn(self.yt.rows(), k + other.k(), |j, c| {
+            if c < k {
+                self.yt[(j, c)]
+            } else {
+                other.yt[(j, c - k)]
+            }
+        });
+        SampleBlock::new(xt, yt)
+    }
+}
+
+/// One window transition: the samples that entered, the samples that left,
+/// and the sample count the statistics were computed at *before* the
+/// transition. `SolverContext::update_stats` consumes this to apply the
+/// symmetric rank-k correction to whatever statistics are materialized.
+#[derive(Clone, Debug)]
+pub struct WindowDelta {
+    /// Samples appended (rank-k update panel), if any.
+    pub added: Option<SampleBlock>,
+    /// Samples evicted (rank-k downdate panel), if any.
+    pub removed: Option<SampleBlock>,
+    /// Window occupancy before the transition.
+    pub old_n: usize,
+}
+
+impl WindowDelta {
+    /// An empty delta starting from a window of `old_n` samples.
+    pub fn new(old_n: usize) -> WindowDelta {
+        WindowDelta {
+            added: None,
+            removed: None,
+            old_n,
+        }
+    }
+
+    /// Fold an appended block into the delta.
+    pub fn record_append(&mut self, block: SampleBlock) {
+        if block.k() == 0 {
+            return;
+        }
+        self.added = Some(match self.added.take() {
+            Some(prev) => prev.concat(&block),
+            None => block,
+        });
+    }
+
+    /// Fold an evicted block into the delta.
+    pub fn record_evict(&mut self, block: SampleBlock) {
+        if block.k() == 0 {
+            return;
+        }
+        self.removed = Some(match self.removed.take() {
+            Some(prev) => prev.concat(&block),
+            None => block,
+        });
+    }
+
+    /// Samples appended / removed across the transition.
+    pub fn added_k(&self) -> usize {
+        self.added.as_ref().map_or(0, SampleBlock::k)
+    }
+    pub fn removed_k(&self) -> usize {
+        self.removed.as_ref().map_or(0, SampleBlock::k)
+    }
+
+    /// Window occupancy after the transition.
+    pub fn new_n(&self) -> usize {
+        self.old_n + self.added_k() - self.removed_k()
+    }
+
+    /// True when nothing entered or left (the identity correction).
+    pub fn is_empty(&self) -> bool {
+        self.added_k() == 0 && self.removed_k() == 0
+    }
+}
+
 impl Dataset {
     pub fn new(xt: Mat, yt: Mat) -> Dataset {
         assert_eq!(xt.cols(), yt.cols(), "sample count mismatch");
@@ -162,6 +274,58 @@ impl Dataset {
         Dataset::new(xt, yt)
     }
 
+    /// Append `k` samples given as feature-major panels (`xa`: p × k,
+    /// `ya`: q × k); the new samples become the window's newest columns.
+    /// O((p+q)·(n+k)) copy — lower-order against the O(k·(p+q)²) statistics
+    /// correction the append is paired with, and it keeps `xt`/`yt`
+    /// contiguous, which every GEMM consumer relies on.
+    pub fn append_samples(&mut self, xa: &Mat, ya: &Mat) {
+        assert_eq!(xa.rows(), self.p(), "appended X feature count mismatch");
+        assert_eq!(ya.rows(), self.q(), "appended Y feature count mismatch");
+        assert_eq!(xa.cols(), ya.cols(), "appended sample count mismatch");
+        let (n, k) = (self.n(), xa.cols());
+        if k == 0 {
+            return;
+        }
+        let grow = |old: &Mat, add: &Mat| {
+            let mut out = Mat::zeros(old.rows(), n + k);
+            for i in 0..old.rows() {
+                let dst = out.row_mut(i);
+                dst[..n].copy_from_slice(old.row(i));
+                dst[n..].copy_from_slice(add.row(i));
+            }
+            out
+        };
+        self.xt = grow(&self.xt, xa);
+        self.yt = grow(&self.yt, ya);
+    }
+
+    /// Append the samples of a [`SampleBlock`] (convenience over
+    /// [`Self::append_samples`]).
+    pub fn append_block(&mut self, block: &SampleBlock) {
+        self.append_samples(&block.xt, &block.yt);
+    }
+
+    /// Drop the `k` oldest samples (the window's leftmost columns), returning
+    /// them as the rank-k downdate panel. O((p+q)·n).
+    pub fn evict_oldest(&mut self, k: usize) -> SampleBlock {
+        let k = k.min(self.n());
+        let n = self.n();
+        let split = |old: &Mat| {
+            let head = Mat::from_fn(old.rows(), k, |i, c| old[(i, c)]);
+            let mut tail = Mat::zeros(old.rows(), n - k);
+            for i in 0..old.rows() {
+                tail.row_mut(i).copy_from_slice(&old.row(i)[k..]);
+            }
+            (head, tail)
+        };
+        let (xh, xtail) = split(&self.xt);
+        let (yh, ytail) = split(&self.yt);
+        self.xt = xtail;
+        self.yt = ytail;
+        SampleBlock::new(xh, yh)
+    }
+
     pub fn bytes(&self) -> usize {
         self.xt.bytes() + self.yt.bytes()
     }
@@ -255,6 +419,61 @@ mod tests {
         d.y_panel_into(3..5, &mut py);
         for k in 0..2 {
             assert_eq!(py.row(k), d.yt.row(3 + k));
+        }
+    }
+
+    #[test]
+    fn append_and_evict_slide_the_window() {
+        let mut rng = Rng::new(12);
+        let base = random_dataset(&mut rng, 5, 4, 3);
+        let add = random_dataset(&mut rng, 2, 4, 3);
+        let mut d = base.clone();
+        d.append_samples(&add.xt, &add.yt);
+        assert_eq!(d.n(), 7);
+        for i in 0..4 {
+            assert_eq!(&d.xt.row(i)[..5], base.xt.row(i));
+            assert_eq!(&d.xt.row(i)[5..], add.xt.row(i));
+        }
+        for j in 0..3 {
+            assert_eq!(&d.yt.row(j)[5..], add.yt.row(j));
+        }
+        let evicted = d.evict_oldest(2);
+        assert_eq!((d.n(), evicted.k()), (5, 2));
+        for i in 0..4 {
+            assert_eq!(evicted.xt.row(i), &base.xt.row(i)[..2]);
+            assert_eq!(&d.xt.row(i)[..3], &base.xt.row(i)[2..]);
+        }
+        // The slid window equals a from-scratch gather of the same samples.
+        let naive = {
+            let mut m = base.clone();
+            m.append_samples(&add.xt, &add.yt);
+            m.select_samples(&[2, 3, 4, 5, 6])
+        };
+        assert_eq!(d.xt.max_abs_diff(&naive.xt), 0.0);
+        assert_eq!(d.yt.max_abs_diff(&naive.yt), 0.0);
+    }
+
+    #[test]
+    fn window_delta_merges_blocks_and_counts() {
+        let mut rng = Rng::new(14);
+        let a = random_dataset(&mut rng, 2, 3, 2);
+        let b = random_dataset(&mut rng, 3, 3, 2);
+        let mut delta = WindowDelta::new(10);
+        assert!(delta.is_empty());
+        delta.record_append(SampleBlock::new(a.xt.clone(), a.yt.clone()));
+        delta.record_append(SampleBlock::new(b.xt.clone(), b.yt.clone()));
+        delta.record_evict(SampleBlock::new(
+            Mat::zeros(3, 1),
+            Mat::zeros(2, 1),
+        ));
+        assert_eq!((delta.added_k(), delta.removed_k()), (5, 1));
+        assert_eq!(delta.new_n(), 14);
+        let added = delta.added.as_ref().unwrap();
+        assert_eq!(added.xt.cols(), 5);
+        // Concatenation preserves order: a's samples first, then b's.
+        for i in 0..3 {
+            assert_eq!(&added.xt.row(i)[..2], a.xt.row(i));
+            assert_eq!(&added.xt.row(i)[2..], b.xt.row(i));
         }
     }
 

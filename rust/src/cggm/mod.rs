@@ -8,8 +8,10 @@ pub mod linesearch;
 pub mod model;
 pub mod objective;
 pub mod tiles;
+pub mod window;
 
-pub use dataset::Dataset;
+pub use dataset::{Dataset, SampleBlock, WindowDelta};
+pub use window::SampleWindow;
 pub use factor::{CholKind, LambdaFactor};
 pub use model::CggmModel;
 pub use objective::Objective;

@@ -12,8 +12,9 @@
 //! [`MemBudget`]; under budget pressure cold tiles are *spilled* to a
 //! page-cache-backed slot file instead of failing the solve, and reload from
 //! disk (cheap, O(t²) I/O) instead of recomputing (O(t²·n) FLOPs). Tiles are
-//! pure functions of the data, so a disk copy stays valid forever: re-evicting
-//! a previously spilled tile is free.
+//! pure functions of the data, so a disk copy stays valid until the window
+//! moves ([`TileStore::apply_update`] invalidates every spill slot):
+//! re-evicting a previously spilled tile is free between window updates.
 //!
 //! Budget accounting: only *resident* tiles are tracked (RAII [`Tracked`],
 //! same discipline as the workspace arena), so `MemBudget::peak()` keeps
@@ -40,6 +41,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::cggm::dataset::WindowDelta;
 use crate::cggm::Dataset;
 use crate::gemm::GemmEngine;
 use crate::linalg::dense::Mat;
@@ -87,6 +89,9 @@ pub struct TileStats {
     pub spills: usize,
     /// Spilled tiles read back from disk instead of recomputed.
     pub reloads: usize,
+    /// Resident tiles corrected in place by an incremental window update
+    /// (rank-k, O(t·k·t) each) instead of recomputed (O(t²·n)).
+    pub updates: usize,
 }
 
 struct ResidentTile {
@@ -463,6 +468,121 @@ impl<'a> TileStore<'a> {
             }
         }
     }
+
+    /// Apply a sliding-window transition to the cache *in place*: every
+    /// resident tile gets the symmetric rank-k correction
+    /// `T ← (n·T + A_i·A_jᵀ − R_i·R_jᵀ)/n'` (O(t²·k) per tile instead of an
+    /// O(t²·n) rebuild), and every spilled disk copy is invalidated — the
+    /// window moved, so stale slots must never be reloaded. The store's
+    /// `data` reference must already point at the *post-transition* dataset.
+    /// Returns the number of tiles corrected (also accumulated into
+    /// [`TileStats::updates`]).
+    pub fn apply_update(&self, delta: &WindowDelta) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        // The old window's spill slots are stale under any non-empty delta.
+        inner.disk.clear();
+        inner.next_slot = 0;
+        if delta.is_empty() {
+            return 0;
+        }
+        debug_assert_eq!(delta.new_n(), self.data.n(), "delta out of sync");
+        let keys: Vec<TileKey> = inner.resident.keys().copied().collect();
+        for &key in &keys {
+            let tile = inner.resident.get_mut(&key).expect("key just listed");
+            correct_tile_mat(&mut tile.mat, key, self.tile, self.engine, delta);
+        }
+        inner.stats.updates += keys.len();
+        keys.len()
+    }
+
+    /// Tear the store down into its carryable parts: the resident tiles
+    /// (budget registrations released — the adopting store re-registers) and
+    /// the lifetime counters. Spilled copies are dropped with the spill file.
+    pub fn into_parts(self) -> (Vec<(TileKey, Mat)>, TileStats) {
+        let inner = self.inner.into_inner().unwrap();
+        let tiles = inner
+            .resident
+            .into_iter()
+            .map(|(key, t)| (key, t.mat))
+            .collect();
+        (tiles, inner.stats)
+    }
+
+    /// Seed a fresh store from a predecessor's [`Self::into_parts`] output:
+    /// counters carry forward and each tile is re-registered against this
+    /// store's budget (a tile that no longer fits is silently dropped — it is
+    /// only a cache). Tiles must describe the same (p, q, tile) geometry and
+    /// the *current* window contents (correct them first when the window
+    /// moved between teardown and adoption).
+    pub fn adopt(&self, tiles: Vec<(TileKey, Mat)>, stats: TileStats) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats = stats;
+        for (key, mat) in tiles {
+            debug_assert!(
+                mat.rows() <= self.tile && mat.cols() <= self.tile,
+                "adopted tile larger than the store's tile size"
+            );
+            inner.clock += 1;
+            let clock = inner.clock;
+            let bytes = mat.bytes();
+            if let Ok(track) = self.budget.track(bytes) {
+                inner.resident.insert(
+                    key,
+                    ResidentTile {
+                        mat,
+                        last_used: clock,
+                        _track: track,
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Copy feature rows `rows` of a delta panel (`src` is features × k) into a
+/// contiguous sub-panel for the tile-local GEMM.
+fn sub_panel(src: &Mat, rows: std::ops::Range<usize>) -> Mat {
+    Mat::from_fn(rows.len(), src.cols(), |r, c| src[(rows.start + r, c)])
+}
+
+/// The rank-k window correction for one tile, shared by [`TileStore`]'s
+/// in-place path and `SolverContext`'s pending-carry path:
+/// `T ← (old_n·T + A_i·A_jᵀ − R_i·R_jᵀ)/new_n`, where `A`/`R` are the
+/// appended/evicted panels restricted to the tile's feature ranges.
+/// Transient scratch is two sub-panels, bounded by `2·t·k·8` bytes — the
+/// same policy as the build panels. Diagonal `S_xx` tiles are re-symmetrized
+/// so mirror reads stay exact.
+pub(crate) fn correct_tile_mat(
+    mat: &mut Mat,
+    key: TileKey,
+    tile: usize,
+    engine: &dyn GemmEngine,
+    delta: &WindowDelta,
+) {
+    let new_n = delta.new_n();
+    assert!(new_n > 0, "window update emptied the dataset");
+    let (bi, bj) = key.blocks();
+    let ri = bi as usize * tile..bi as usize * tile + mat.rows();
+    let rj = bj as usize * tile..bj as usize * tile + mat.cols();
+    mat.scale(delta.old_n as f64 / new_n as f64);
+    let inv = 1.0 / new_n as f64;
+    let mut apply = |block: &crate::cggm::dataset::SampleBlock, sign: f64| {
+        let pa = sub_panel(&block.xt, ri.clone());
+        let pb = match key {
+            TileKey::Sxx(..) => sub_panel(&block.xt, rj.clone()),
+            TileKey::Sxy(..) => sub_panel(&block.yt, rj.clone()),
+        };
+        engine.gemm_nt(sign * inv, &pa, &pb, 1.0, mat);
+    };
+    if let Some(a) = &delta.added {
+        apply(a, 1.0);
+    }
+    if let Some(r) = &delta.removed {
+        apply(r, -1.0);
+    }
+    if matches!(key, TileKey::Sxx(..)) && bi == bj {
+        mat.symmetrize();
+    }
 }
 
 #[cfg(test)]
@@ -610,6 +730,83 @@ mod tests {
         }
         assert_eq!(ts.resident_tiles(), 0);
         assert_eq!(budget.peak(), 0, "transient tiles are never tracked");
+    }
+
+    #[test]
+    fn adopt_then_apply_update_matches_fresh_store() {
+        // The carry path used by warm refit: compute every tile on the old
+        // window, tear the store down, adopt the tiles into a store over the
+        // slid window, apply the rank-k correction, and compare against both
+        // a fresh store and the dense statistics of the new window.
+        use crate::cggm::dataset::{SampleBlock, WindowDelta};
+        property(10, |rng| {
+            let (n, p, q) = (4 + rng.below(8), 1 + rng.below(10), 1 + rng.below(6));
+            let tile = 1 + rng.below(4);
+            let k = 1 + rng.below(3);
+            let d_old = random_dataset(rng, n, p, q);
+            let added = SampleBlock::new(
+                Mat::from_fn(p, k, |_, _| rng.normal()),
+                Mat::from_fn(q, k, |_, _| rng.normal()),
+            );
+            let mut d_new = d_old.clone();
+            let removed = d_new.evict_oldest(k);
+            d_new.append_block(&added);
+            let mut delta = WindowDelta::new(d_old.n());
+            delta.record_evict(removed);
+            delta.record_append(added);
+
+            let eng = NativeGemm::new(1);
+            let old_store = TileStore::new(&d_old, &eng, MemBudget::unlimited(), tile);
+            for i in 0..p {
+                for j in 0..p {
+                    let _ = old_store.sxx_entry(i, j);
+                }
+                for j in 0..q {
+                    let _ = old_store.sxy_entry(i, j);
+                }
+            }
+            let computes_before = old_store.stats().computes;
+            let (tiles, stats) = old_store.into_parts();
+
+            let store = TileStore::new(&d_new, &eng, MemBudget::unlimited(), tile);
+            store.adopt(tiles, stats);
+            let corrected = store.apply_update(&delta);
+            if corrected == 0 {
+                return Err("no resident tiles were corrected".into());
+            }
+            for i in 0..p {
+                for j in 0..p {
+                    check_close(store.sxx_entry(i, j), d_new.sxx(i, j), 1e-10, "sxx")?;
+                }
+                for j in 0..q {
+                    check_close(store.sxy_entry(i, j), d_new.sxy(i, j), 1e-10, "sxy")?;
+                }
+            }
+            let st = store.stats();
+            if st.computes != computes_before {
+                return Err(format!(
+                    "adopted tiles must serve reads without recompute: {} vs {}",
+                    st.computes, computes_before
+                ));
+            }
+            if st.updates != corrected {
+                return Err("updates counter out of sync with corrected count".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_delta_update_is_a_noop() {
+        use crate::cggm::dataset::WindowDelta;
+        let mut rng = Rng::new(17);
+        let d = random_dataset(&mut rng, 6, 8, 3);
+        let eng = NativeGemm::new(1);
+        let ts = TileStore::new(&d, &eng, MemBudget::unlimited(), 4);
+        let a = ts.sxx_entry(0, 0);
+        assert_eq!(ts.apply_update(&WindowDelta::new(d.n())), 0);
+        assert_eq!(ts.stats().updates, 0);
+        assert_eq!(ts.sxx_entry(0, 0), a);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Ring-buffered sliding sample window: O(k) append/evict over a fixed
+//! capacity, feature-major like [`Dataset`] so panel streaming still works.
+//!
+//! [`Dataset`] stores the *exact current window* contiguously (every GEMM
+//! consumer takes `&data.xt` whole, so the dataset itself cannot carry ring
+//! offsets). The ring lives one layer up: [`SampleWindow`] owns the
+//! capacity-bounded circular storage, absorbs appends in O(p+q) per sample
+//! without shifting history, hands back evicted samples so callers can build
+//! the rank-k downdate panels, and materializes a contiguous [`Dataset`] (or
+//! wraparound-aware panels mirroring [`Dataset::x_panel_into`]) on demand.
+//! The serve layer's `append` op buffers rows here until a `refit`
+//! materializes them; `examples/energy_forecast.rs` drives its live
+//! forecasting loop off the same type.
+
+use crate::cggm::dataset::{Dataset, SampleBlock};
+use crate::linalg::dense::Mat;
+
+/// A fixed-capacity circular buffer of (x, y) samples, feature-major.
+///
+/// Sample `s` (logical order: 0 = oldest) lives in ring column
+/// `(head + s) % cap`. Appending when full evicts the oldest sample and
+/// returns it, so a steady-state window never reallocates.
+#[derive(Clone, Debug)]
+pub struct SampleWindow {
+    /// Inputs, feature-major: p × cap (ring columns).
+    xt: Mat,
+    /// Outputs, feature-major: q × cap (ring columns).
+    yt: Mat,
+    head: usize,
+    len: usize,
+    /// Lifetime counters: samples ever pushed / ever evicted by overflow.
+    appended: usize,
+    evicted: usize,
+}
+
+impl SampleWindow {
+    /// An empty window holding at most `cap` samples of shape (p, q).
+    pub fn new(p: usize, q: usize, cap: usize) -> SampleWindow {
+        assert!(cap >= 1, "window capacity must be positive");
+        SampleWindow {
+            xt: Mat::zeros(p, cap),
+            yt: Mat::zeros(q, cap),
+            head: 0,
+            len: 0,
+            appended: 0,
+            evicted: 0,
+        }
+    }
+
+    /// A full window seeded from an existing dataset (capacity = its n).
+    pub fn from_dataset(data: &Dataset) -> SampleWindow {
+        let mut w = SampleWindow::new(data.p(), data.q(), data.n().max(1));
+        for s in 0..data.n() {
+            let x: Vec<f64> = (0..data.p()).map(|i| data.xt[(i, s)]).collect();
+            let y: Vec<f64> = (0..data.q()).map(|j| data.yt[(j, s)]).collect();
+            let _ = w.push(&x, &y);
+        }
+        w
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.xt.rows()
+    }
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.yt.rows()
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.xt.cols()
+    }
+    /// Samples ever pushed into the window.
+    pub fn appended(&self) -> usize {
+        self.appended
+    }
+    /// Samples evicted by capacity overflow.
+    pub fn evicted(&self) -> usize {
+        self.evicted
+    }
+
+    #[inline]
+    fn slot(&self, s: usize) -> usize {
+        debug_assert!(s < self.len);
+        (self.head + s) % self.capacity()
+    }
+
+    /// Append one sample; when the window is full the oldest sample is
+    /// evicted and returned (its x then y values) so the caller can fold it
+    /// into a rank-1 downdate panel. O(p + q), no shifting.
+    pub fn push(&mut self, x: &[f64], y: &[f64]) -> Option<(Vec<f64>, Vec<f64>)> {
+        assert_eq!(x.len(), self.p(), "x length mismatch");
+        assert_eq!(y.len(), self.q(), "y length mismatch");
+        let cap = self.capacity();
+        let out = if self.len == cap {
+            let (ox, oy) = self.sample(0);
+            self.head = (self.head + 1) % cap;
+            self.len -= 1;
+            self.evicted += 1;
+            Some((ox, oy))
+        } else {
+            None
+        };
+        let col = (self.head + self.len) % cap;
+        for i in 0..self.p() {
+            self.xt[(i, col)] = x[i];
+        }
+        for j in 0..self.q() {
+            self.yt[(j, col)] = y[j];
+        }
+        self.len += 1;
+        self.appended += 1;
+        out
+    }
+
+    /// Copy out logical sample `s` (0 = oldest).
+    pub fn sample(&self, s: usize) -> (Vec<f64>, Vec<f64>) {
+        assert!(s < self.len, "sample {s} out of range (len {})", self.len);
+        let col = self.slot(s);
+        let x = (0..self.p()).map(|i| self.xt[(i, col)]).collect();
+        let y = (0..self.q()).map(|j| self.yt[(j, col)]).collect();
+        (x, y)
+    }
+
+    /// Drop the `k` oldest samples, returning them as a feature-major block
+    /// (the downdate panel). O((p+q)·k).
+    pub fn evict_oldest(&mut self, k: usize) -> SampleBlock {
+        let k = k.min(self.len);
+        let block = self.block(0..k);
+        self.head = (self.head + k) % self.capacity();
+        self.len -= k;
+        self.evicted += k;
+        block
+    }
+
+    /// Copy logical samples `range` into a contiguous feature-major block.
+    pub fn block(&self, range: std::ops::Range<usize>) -> SampleBlock {
+        assert!(range.end <= self.len, "window block out of range");
+        let cols: Vec<usize> = range.map(|s| self.slot(s)).collect();
+        let xt = Mat::from_fn(self.p(), cols.len(), |i, k| self.xt[(i, cols[k])]);
+        let yt = Mat::from_fn(self.q(), cols.len(), |j, k| self.yt[(j, cols[k])]);
+        SampleBlock::new(xt, yt)
+    }
+
+    /// Stream feature rows `rows` of the window's X into `panel`
+    /// (`rows.len() × len()`, columns in logical order) — the wraparound-aware
+    /// mirror of [`Dataset::x_panel_into`]. At most two contiguous segment
+    /// copies per feature row.
+    pub fn x_panel_into(&self, rows: std::ops::Range<usize>, panel: &mut Mat) {
+        assert!(rows.end <= self.p(), "X panel rows out of range");
+        Self::ring_panel(&self.xt, self.head, self.len, rows, panel);
+    }
+
+    /// The Y-side counterpart of [`Self::x_panel_into`].
+    pub fn y_panel_into(&self, rows: std::ops::Range<usize>, panel: &mut Mat) {
+        assert!(rows.end <= self.q(), "Y panel rows out of range");
+        Self::ring_panel(&self.yt, self.head, self.len, rows, panel);
+    }
+
+    fn ring_panel(
+        ring: &Mat,
+        head: usize,
+        len: usize,
+        rows: std::ops::Range<usize>,
+        panel: &mut Mat,
+    ) {
+        assert_eq!((panel.rows(), panel.cols()), (rows.len(), len));
+        let cap = ring.cols();
+        let first = (cap - head).min(len); // contiguous tail of the ring
+        for (k, i) in rows.enumerate() {
+            let src = ring.row(i);
+            let dst = panel.row_mut(k);
+            dst[..first].copy_from_slice(&src[head..head + first]);
+            dst[first..].copy_from_slice(&src[..len - first]);
+        }
+    }
+
+    /// Materialize the current window as a contiguous [`Dataset`]
+    /// (oldest-first), i.e. exactly what a from-scratch fit would see.
+    pub fn to_dataset(&self) -> Dataset {
+        let mut xt = Mat::zeros(self.p(), self.len);
+        let mut yt = Mat::zeros(self.q(), self.len);
+        self.x_panel_into(0..self.p(), &mut xt);
+        self.y_panel_into(0..self.q(), &mut yt);
+        Dataset::new(xt, yt)
+    }
+
+    /// Ring storage footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.xt.bytes() + self.yt.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::property;
+
+    fn sample(rng: &mut Rng, p: usize, q: usize) -> (Vec<f64>, Vec<f64>) {
+        (
+            (0..p).map(|_| rng.normal()).collect(),
+            (0..q).map(|_| rng.normal()).collect(),
+        )
+    }
+
+    #[test]
+    fn push_evicts_oldest_at_capacity() {
+        let mut w = SampleWindow::new(2, 1, 3);
+        assert!(w.push(&[1.0, 1.0], &[10.0]).is_none());
+        assert!(w.push(&[2.0, 2.0], &[20.0]).is_none());
+        assert!(w.push(&[3.0, 3.0], &[30.0]).is_none());
+        let (ox, oy) = w.push(&[4.0, 4.0], &[40.0]).expect("full window evicts");
+        assert_eq!(ox, vec![1.0, 1.0]);
+        assert_eq!(oy, vec![10.0]);
+        assert_eq!(w.len(), 3);
+        assert_eq!((w.appended(), w.evicted()), (4, 1));
+        // Logical order is oldest-first across the wraparound.
+        assert_eq!(w.sample(0).1, vec![20.0]);
+        assert_eq!(w.sample(2).1, vec![40.0]);
+    }
+
+    #[test]
+    fn window_matches_naive_sliding_dataset() {
+        // Property: after any mix of pushes and evictions, to_dataset() and
+        // the ring panels equal a naively maintained Vec of samples.
+        property(25, |rng| {
+            let (p, q) = (1 + rng.below(6), 1 + rng.below(4));
+            let cap = 2 + rng.below(6);
+            let mut w = SampleWindow::new(p, q, cap);
+            let mut naive: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+            for _ in 0..30 {
+                if rng.uniform() < 0.7 || naive.is_empty() {
+                    let (x, y) = sample(rng, p, q);
+                    let evicted = w.push(&x, &y);
+                    naive.push((x, y));
+                    if naive.len() > cap {
+                        let old = naive.remove(0);
+                        let got = evicted.ok_or("missing eviction")?;
+                        if got != old {
+                            return Err("evicted wrong sample".into());
+                        }
+                    } else if evicted.is_some() {
+                        return Err("eviction below capacity".into());
+                    }
+                } else {
+                    let k = 1 + rng.below(naive.len());
+                    let block = w.evict_oldest(k);
+                    for c in 0..k {
+                        let old = naive.remove(0);
+                        for i in 0..p {
+                            if block.xt[(i, c)] != old.0[i] {
+                                return Err("evict_oldest block mismatch".into());
+                            }
+                        }
+                        for j in 0..q {
+                            if block.yt[(j, c)] != old.1[j] {
+                                return Err("evict_oldest block mismatch".into());
+                            }
+                        }
+                    }
+                }
+                let d = w.to_dataset();
+                if d.n() != naive.len() {
+                    return Err(format!("n {} vs naive {}", d.n(), naive.len()));
+                }
+                for (s, (x, y)) in naive.iter().enumerate() {
+                    for i in 0..p {
+                        if d.xt[(i, s)] != x[i] {
+                            return Err("dataset X mismatch".into());
+                        }
+                    }
+                    for j in 0..q {
+                        if d.yt[(j, s)] != y[j] {
+                            return Err("dataset Y mismatch".into());
+                        }
+                    }
+                }
+                // Panels mirror the dataset contract across the wraparound.
+                let mut px = Mat::zeros(p, d.n());
+                w.x_panel_into(0..p, &mut px);
+                if px.max_abs_diff(&d.xt) != 0.0 {
+                    return Err("x panel mismatch".into());
+                }
+                let mut py = Mat::zeros(q, d.n());
+                w.y_panel_into(0..q, &mut py);
+                if py.max_abs_diff(&d.yt) != 0.0 {
+                    return Err("y panel mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_dataset_roundtrips() {
+        let mut rng = Rng::new(3);
+        let d = Dataset::new(
+            Mat::from_fn(4, 6, |_, _| rng.normal()),
+            Mat::from_fn(2, 6, |_, _| rng.normal()),
+        );
+        let w = SampleWindow::from_dataset(&d);
+        assert_eq!((w.len(), w.capacity()), (6, 6));
+        assert_eq!(w.to_dataset().xt.max_abs_diff(&d.xt), 0.0);
+        assert_eq!(w.to_dataset().yt.max_abs_diff(&d.yt), 0.0);
+    }
+}

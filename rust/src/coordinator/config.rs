@@ -39,6 +39,10 @@ pub struct RunConfig {
     pub stat_mode: String,
     /// Square tile edge for `stat_mode = tiled` (`--stat-tile`).
     pub stat_tile: usize,
+    /// Incremental-statistics drift guard (`--stat-rebuild-every`): force a
+    /// from-scratch rebuild of cached Gram statistics after this many
+    /// sample-removing window updates (0 = never). See docs/PERF.md.
+    pub stat_rebuild_every: usize,
     /// One-shot construction-time probe of native-GEMM cache-block sizes
     /// (`--gemm-autotune`). Machine-dependent by design; mutually exclusive
     /// with `gemm_blocks`, which wins when both are set.
@@ -103,6 +107,7 @@ impl Default for RunConfig {
             tile: 256,
             stat_mode: "dense".into(),
             stat_tile: 256,
+            stat_rebuild_every: 64,
             gemm_autotune: false,
             gemm_blocks: None,
             mem_budget: None,
@@ -204,6 +209,10 @@ impl RunConfig {
                 }
                 self.stat_tile = t;
             }
+            "stat_rebuild_every" => {
+                self.stat_rebuild_every =
+                    val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?
+            }
             "gemm_autotune" => {
                 self.gemm_autotune = val.as_bool().ok_or_else(|| bad("expected bool"))?
             }
@@ -303,6 +312,8 @@ impl RunConfig {
         }
         self.stat_tile = args.get_usize("stat-tile", self.stat_tile);
         assert!(self.stat_tile >= 1, "--stat-tile expects a tile edge >= 1");
+        self.stat_rebuild_every =
+            args.get_usize("stat-rebuild-every", self.stat_rebuild_every);
         if args.flag("gemm-autotune") {
             self.gemm_autotune = true;
         }
@@ -401,6 +412,7 @@ impl RunConfig {
             recluster_churn: self.recluster_churn,
             stat_mode: StatMode::parse(&self.stat_mode, self.stat_tile)
                 .expect("stat_mode validated at apply time"),
+            stat_rebuild_every: self.stat_rebuild_every,
             ..Default::default()
         }
     }
@@ -612,13 +624,15 @@ mod tests {
         let tmp = std::env::temp_dir().join("cggm_cfg_stat.json");
         std::fs::write(
             &tmp,
-            r#"{"stat_mode": "tiled", "stat_tile": 64,
+            r#"{"stat_mode": "tiled", "stat_tile": 64, "stat_rebuild_every": 8,
                 "gemm_blocks": "128,128,512", "gemm_autotune": true}"#,
         )
         .unwrap();
         let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
         assert_eq!(cfg.stat_mode, "tiled");
         assert_eq!(cfg.stat_tile, 64);
+        assert_eq!(cfg.stat_rebuild_every, 8);
+        assert_eq!(cfg.solve_options().stat_rebuild_every, 8);
         assert_eq!(cfg.gemm_blocks, Some((128, 128, 512)));
         assert!(cfg.gemm_autotune);
         assert_eq!(cfg.solve_options().stat_mode, StatMode::Tiled(64));
@@ -626,6 +640,8 @@ mod tests {
             &[
                 "--stat-mode".into(),
                 "dense".into(),
+                "--stat-rebuild-every".into(),
+                "0".into(),
                 "--gemm-blocks".into(),
                 "96,192,384".into(),
             ],
@@ -633,16 +649,21 @@ mod tests {
         );
         cfg.apply_args(&args);
         assert_eq!(cfg.solve_options().stat_mode, StatMode::Dense);
+        assert_eq!(cfg.solve_options().stat_rebuild_every, 0, "0 disables");
         assert_eq!(cfg.gemm_blocks, Some((96, 192, 384)));
-        // Defaults: eager dense stats, compiled-in GEMM blocks.
+        // Defaults: eager dense stats, compiled-in GEMM blocks, rebuild
+        // guard at 64 downdates.
         let d = RunConfig::default();
         assert_eq!(d.solve_options().stat_mode, StatMode::Dense);
         assert_eq!(d.gemm_blocks, None);
         assert!(!d.gemm_autotune);
+        assert_eq!(d.solve_options().stat_rebuild_every, 64);
         // Bad values fail loudly.
         std::fs::write(&tmp, r#"{"stat_mode": "sideways"}"#).unwrap();
         assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
         std::fs::write(&tmp, r#"{"stat_tile": 0}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
+        std::fs::write(&tmp, r#"{"stat_rebuild_every": -1}"#).unwrap();
         assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
         std::fs::write(&tmp, r#"{"gemm_blocks": "64,256"}"#).unwrap();
         assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());

@@ -105,9 +105,11 @@ COMMANDS
         [--socket PATH] [--threads T] [--cd-threads T] ...
         (long-lived JSONL job server: one request object per line on stdio
          — or PATH with --socket, serving concurrent connections — against
-         named warm datasets; ops: load, fit, path, cv, stat, evict,
-         cancel, save, export, shutdown; path/cv take "stream":true for
-         per-point progress lines; see docs/SERVING.md)
+         named warm datasets; ops: load, fit, path, cv, append, refit,
+         stat, evict, cancel, save, export, shutdown; path/cv take
+         "stream":true for per-point progress lines; append buffers new
+         samples and refit folds them into the sliding window with
+         incremental Gram updates + a warm re-solve; see docs/SERVING.md)
   batch FILE [--out-file FILE] [--max-jobs N] [--serve-budget 1GB] ...
         (execute a JSON manifest of serve jobs through the same engine;
          responses printed as JSONL, ordered by job id)

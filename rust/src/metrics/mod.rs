@@ -123,6 +123,13 @@ pub struct SolveTrace {
     /// `solvers::solve_in_context`, so warm-vs-cold behavior is observable
     /// from the trace JSON without a profiler.
     pub warm_started: bool,
+    /// Cached statistics corrected *in place* by an incremental window
+    /// update (`SolverContext::update_stats`) over the context's lifetime —
+    /// dense Gram matrices, the S_xx diagonal, and resident tiles. Non-zero
+    /// means this solve ran on incrementally maintained statistics (a
+    /// streaming re-fit) instead of a from-scratch rebuild. Set centrally by
+    /// `solvers::solve_in_context`, like `warm_started`.
+    pub stat_updates: usize,
     /// Tile-cache activity under `StatMode::Tiled` (all zero for dense-stat
     /// solves): entry reads served from a resident tile / reads that had to
     /// materialize one, LRU evictions and the subset spilled to disk, Gram
@@ -160,6 +167,7 @@ impl SolveTrace {
             ("cd_updates", Json::num(self.cd_updates as f64)),
             ("reclusterings", Json::num(self.reclusterings as f64)),
             ("warm_started", Json::Bool(self.warm_started)),
+            ("stat_updates", Json::num(self.stat_updates as f64)),
             ("tile_hits", Json::num(self.tile_hits as f64)),
             ("tile_misses", Json::num(self.tile_misses as f64)),
             ("tile_evictions", Json::num(self.tile_evictions as f64)),
@@ -269,9 +277,11 @@ mod tests {
         t.tiles_computed = 7;
         t.total_tiles = 12;
         t.tile_hits = 100;
+        t.stat_updates = 5;
         let j = t.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.get("stat_updates").unwrap().as_f64(), Some(5.0));
         assert_eq!(parsed.get("tiles_computed").unwrap().as_f64(), Some(7.0));
         assert_eq!(parsed.get("total_tiles").unwrap().as_f64(), Some(12.0));
         assert_eq!(parsed.get("tile_hits").unwrap().as_f64(), Some(100.0));

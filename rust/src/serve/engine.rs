@@ -65,12 +65,13 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use super::protocol::{
-    ErrKind, JobKind, JobOp, LoadOp, LoadSource, Op, Progress, Request, Response, SaveOp,
-    ServerLine,
+    AppendOp, ErrKind, JobKind, JobOp, LoadOp, LoadSource, Op, Progress, Request, Response,
+    SaveOp, ServerLine,
 };
 use super::registry::{Registry, RegistryError, WarmContext};
 use crate::cggm::factor::{dense_factor_bytes, dense_factor_scratch_bytes};
-use crate::cggm::{CggmModel, Dataset};
+use crate::cggm::{CggmModel, Dataset, SampleBlock, WindowDelta};
+use crate::linalg::dense::Mat;
 use crate::coordinator::{self, checkpoint, RunConfig, RunSummary};
 use crate::gemm::native::NativeGemm;
 use crate::gemm::GemmEngine;
@@ -479,6 +480,47 @@ impl ServeEngine {
             // save/export only clone an already-budgeted cached model.
             Op::Stat { .. } | Op::Evict { .. } | Op::Cancel { .. } | Op::Save(_)
             | Op::Export { .. } | Op::Shutdown => Ok(0),
+            Op::Append(a) => {
+                // The rows must land on a resident (or pending-load) name.
+                if self.job_dims(&a.dataset).is_none() {
+                    return Err(Response::err(
+                        id,
+                        op,
+                        ErrKind::NotFound,
+                        format!("dataset '{}' is not loaded", a.dataset),
+                    ));
+                }
+                let est = match &a.path {
+                    Some(path) => {
+                        match coordinator::peek_dataset_dims(std::path::Path::new(path)) {
+                            Ok((p, q, n)) => data_bytes(p, q, n),
+                            Err(e) => {
+                                return Err(Response::err(
+                                    id,
+                                    op,
+                                    ErrKind::Io,
+                                    format!("cannot read {path}: {e}"),
+                                ))
+                            }
+                        }
+                    }
+                    None => a.rows.iter().map(|(x, y)| 8 * (x.len() + y.len())).sum(),
+                };
+                if est > limit {
+                    return Err(Response::err(
+                        id,
+                        op,
+                        ErrKind::Budget,
+                        format!(
+                            "appending to '{}' needs ~{} but the serve budget is {}",
+                            a.dataset,
+                            fmt_bytes(est),
+                            fmt_bytes(limit)
+                        ),
+                    ));
+                }
+                Ok(est)
+            }
             Op::Load(l) => {
                 let (p, q, n) = match &l.source {
                     LoadSource::Generate { p, q, n, .. } => (*p, *q, *n),
@@ -595,6 +637,12 @@ impl ServeEngine {
         };
         match kind {
             JobKind::Fit | JobKind::Path => per_fit + cold_stats,
+            // A refit briefly holds the old and the slid window at once
+            // (the swap is copy-then-replace, never in-place mutation), so
+            // reserve a second copy of the raw data on top of the fit.
+            JobKind::Refit => {
+                per_fit + cold_stats + data_bytes(dims.p, dims.q, dims.n)
+            }
             JobKind::Cv => {
                 // Folds run on `cv_threads` parallel contexts over their own
                 // (K-1)/K-sized data copies, plus the full-data refit.
@@ -784,6 +832,7 @@ fn execute(inner: &Inner, queued: &Queued) -> Response {
         Op::Job(job) => {
             execute_job(inner, id, job, &queued.token, queued.stream, &queued.reply)
         }
+        Op::Append(append) => execute_append(inner, id, append),
         Op::Stat { dataset } => execute_stat(inner, id, dataset.as_deref()),
         Op::Evict { dataset } => match inner.registry.lock().unwrap().evict(dataset) {
             Ok(freed) => Response::ok(
@@ -1114,6 +1163,142 @@ fn execute_export(inner: &Inner, id: u64, dataset: &str, solver: Option<&str>) -
     }
 }
 
+/// Accept `append` rows against a resident entry: validate shapes, buffer
+/// them (budget-tracked) for the next `refit`. Rows come inline from the
+/// request (finiteness parse-enforced) or from a dataset file, which gets
+/// the same shape/finiteness validation here.
+fn execute_append(inner: &Inner, id: u64, append: &AppendOp) -> Response {
+    let op = "append";
+    let entry = match inner.registry.lock().unwrap().lookup(&append.dataset) {
+        Some(e) => e,
+        None => {
+            return Response::err(
+                id,
+                op,
+                ErrKind::NotFound,
+                format!("dataset '{}' is not loaded", append.dataset),
+            )
+        }
+    };
+    let mut warm = entry.lock().unwrap();
+    let data = warm.data();
+    let (p, q) = (data.p(), data.q());
+    let rows: Vec<(Vec<f64>, Vec<f64>)> = match &append.path {
+        Some(path) => {
+            let d = match coordinator::load_dataset(std::path::Path::new(path)) {
+                Ok(d) => d,
+                Err(e) => {
+                    return Response::err(
+                        id,
+                        op,
+                        ErrKind::Io,
+                        format!("cannot load {path}: {e}"),
+                    )
+                }
+            };
+            if (d.p(), d.q()) != (p, q) {
+                return Response::err(
+                    id,
+                    op,
+                    ErrKind::Parse,
+                    format!(
+                        "samples in {path} have p={}, q={} but '{}' has p={p}, q={q}",
+                        d.p(),
+                        d.q(),
+                        append.dataset
+                    ),
+                );
+            }
+            (0..d.n())
+                .map(|s| {
+                    (
+                        (0..p).map(|i| d.xt[(i, s)]).collect(),
+                        (0..q).map(|i| d.yt[(i, s)]).collect(),
+                    )
+                })
+                .collect()
+        }
+        None => append.rows.clone(),
+    };
+    for (idx, (x, y)) in rows.iter().enumerate() {
+        if x.len() != p || y.len() != q {
+            return Response::err(
+                id,
+                op,
+                ErrKind::Parse,
+                format!(
+                    "row {idx} has {} x-values and {} y-values but '{}' has p={p}, q={q}",
+                    x.len(),
+                    y.len(),
+                    append.dataset
+                ),
+            );
+        }
+        if !x.iter().chain(y.iter()).all(|v| v.is_finite()) {
+            return Response::err(
+                id,
+                op,
+                ErrKind::Parse,
+                format!("row {idx} contains a non-finite value"),
+            );
+        }
+    }
+    let accepted = rows.len();
+    let pending = match warm.push_pending(rows, &inner.budget) {
+        Ok(total) => total,
+        Err(e) => return Response::err(id, op, ErrKind::Budget, e.to_string()),
+    };
+    let (n, pinned) = (warm.data().n(), warm.pinned_bytes());
+    drop(warm);
+    inner.registry.lock().unwrap().refresh(&append.dataset, |e| {
+        e.pending = pending;
+        e.pinned_bytes = pinned;
+    });
+    Response::ok(
+        id,
+        op,
+        Json::obj(vec![
+            ("dataset", Json::str(append.dataset.clone())),
+            ("accepted", Json::num(accepted as f64)),
+            ("pending", Json::num(pending as f64)),
+            ("n", Json::num(n as f64)),
+            ("pinned_bytes", Json::num(pinned as f64)),
+        ]),
+    )
+}
+
+/// Post-job entry-counter snapshot, taken under the entry lock and applied
+/// to the registry's [`Entry`](super::registry::Entry) in the epilogue so
+/// `stat` never waits behind a running solve.
+struct EntrySnap {
+    pinned: usize,
+    tiles: Option<TileStats>,
+    /// Statistics materialized from scratch *by this job*.
+    stat_delta: usize,
+    warm_reused: bool,
+    n: usize,
+    appended: usize,
+    evicted: usize,
+    pending: usize,
+    /// Cumulative in-place statistic corrections (carried across window
+    /// rebuilds, so a snapshot — not an increment).
+    stat_updates: usize,
+}
+
+fn entry_snap(warm: &WarmContext, stat_delta: usize, warm_reused: bool) -> EntrySnap {
+    EntrySnap {
+        pinned: warm.pinned_bytes(),
+        tiles: warm.tile_stats(),
+        stat_delta,
+        warm_reused,
+        n: warm.data().n(),
+        appended: warm.appended(),
+        evicted: warm.evicted(),
+        pending: warm.pending_rows(),
+        stat_updates: warm.stat_updates(),
+    }
+}
+
 fn execute_job(
     inner: &Inner,
     id: u64,
@@ -1179,7 +1364,83 @@ fn execute_job(
                         ("stat_computes", Json::num(stat_delta as f64)),
                         ("seconds", Json::num(sw.seconds())),
                     ]);
-                    Ok((result, warm.pinned_bytes(), warm.tile_stats(), stat_delta, warm_reused))
+                    Ok((result, entry_snap(&warm, stat_delta, warm_reused)))
+                }
+                Err(e) => Err(e),
+            }
+        }
+        JobKind::Refit => {
+            let mut warm = entry.lock().unwrap();
+            let before = warm.stat_computes();
+            let updates_before = warm.stat_updates();
+            // Fold the buffered rows in and expire past the window cap —
+            // on a *copy* of the data, swapped in by `rebuild` (the old
+            // window is shared with in-flight readers and never mutated).
+            let rows = warm.take_pending();
+            let data = warm.data();
+            let (p, q) = (data.p(), data.q());
+            let mut next = (*data).clone();
+            let mut delta = WindowDelta::new(next.n());
+            if !rows.is_empty() {
+                let k = rows.len();
+                let xa = Mat::from_fn(p, k, |i, j| rows[j].0[i]);
+                let ya = Mat::from_fn(q, k, |i, j| rows[j].1[i]);
+                next.append_samples(&xa, &ya);
+                delta.record_append(SampleBlock::new(xa, ya));
+            }
+            if let Some(cap) = job.window {
+                if next.n() > cap {
+                    delta.record_evict(next.evict_oldest(next.n() - cap));
+                }
+            }
+            let (folded, expired) = (delta.added_k(), delta.removed_k());
+            if !delta.is_empty() {
+                if let Err(e) = warm.rebuild(Arc::new(next), &delta, &opts) {
+                    // The slid window did not fit; re-buffer the rows so a
+                    // later refit (after an evict elsewhere) can retry.
+                    let _ = warm.push_pending(rows, &inner.budget);
+                    return Response::err(id, op, ErrKind::Budget, e.to_string());
+                }
+            }
+            let seed_lambda = warm.cached_lambda(kind);
+            let seed = if job.warm { warm.cached_model(kind) } else { None };
+            let warm_reused = seed.is_some();
+            match solve_in_context(kind, warm.ctx(), &opts, seed) {
+                Ok(res) => {
+                    let stat_delta = warm.stat_computes() - before;
+                    let summary =
+                        RunSummary::from_result(kind, &res, None, inner.budget.peak());
+                    let trace = res.trace;
+                    warm.store_model(
+                        kind,
+                        res.model,
+                        (opts.lam_l, opts.lam_t),
+                        &inner.budget,
+                    );
+                    let result = Json::obj(vec![
+                        ("summary", summary.to_json()),
+                        ("trace", trace.to_json()),
+                        ("registry_hit", Json::Bool(true)),
+                        ("warm_started", Json::Bool(trace.warm_started)),
+                        ("warm_model_reused", Json::Bool(warm_reused)),
+                        (
+                            "warm_model_lambda",
+                            seed_lambda
+                                .filter(|_| warm_reused)
+                                .map(|(l, _)| Json::num(l))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("appended", Json::num(folded as f64)),
+                        ("evicted", Json::num(expired as f64)),
+                        ("n", Json::num(warm.data().n() as f64)),
+                        ("stat_computes", Json::num(stat_delta as f64)),
+                        (
+                            "stat_updates",
+                            Json::num((warm.stat_updates() - updates_before) as f64),
+                        ),
+                        ("seconds", Json::num(sw.seconds())),
+                    ]);
+                    Ok((result, entry_snap(&warm, stat_delta, warm_reused)))
                 }
                 Err(e) => Err(e),
             }
@@ -1219,7 +1480,7 @@ fn execute_job(
                         ("stat_computes", Json::num(stat_delta as f64)),
                         ("seconds", Json::num(sw.seconds())),
                     ]);
-                    Ok((result, warm.pinned_bytes(), warm.tile_stats(), stat_delta, false))
+                    Ok((result, entry_snap(&warm, stat_delta, false)))
                 }
                 Err(e) => Err(e),
             }
@@ -1270,27 +1531,33 @@ fn execute_job(
                         ("seconds", Json::num(sw.seconds())),
                     ]);
                     let guard = entry.lock().unwrap();
-                    let snap = (guard.pinned_bytes(), guard.tile_stats());
+                    let snap = entry_snap(&guard, 0, false);
                     drop(guard);
-                    Ok((result, snap.0, snap.1, 0, false))
+                    Ok((result, snap))
                 }
                 Err(e) => Err(e),
             }
         }
     };
     match outcome {
-        Ok((result, pinned, tiles, stat_delta, warm_reused)) => {
+        Ok((result, snap)) => {
             let mut reg = inner.registry.lock().unwrap();
             reg.refresh(&job.dataset, |e| {
                 e.jobs += 1;
-                if warm_reused {
+                if snap.warm_reused {
                     e.warm_reuses += 1;
                 }
-                e.stat_computes += stat_delta;
-                // Tile counters are cumulative on the context, so snapshot
-                // (don't accumulate) — mirrors `pinned_bytes`.
-                e.tile_stats = tiles;
-                e.pinned_bytes = pinned;
+                e.stat_computes += snap.stat_delta;
+                // The rest are cumulative on the context (or current-state
+                // values), so snapshot — don't accumulate — mirrors
+                // `pinned_bytes`.
+                e.stat_updates = snap.stat_updates;
+                e.n = snap.n;
+                e.appended = snap.appended;
+                e.evicted = snap.evicted;
+                e.pending = snap.pending;
+                e.tile_stats = snap.tiles;
+                e.pinned_bytes = snap.pinned;
             });
             Response::ok(id, op, result)
         }
@@ -1331,6 +1598,16 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
                 ("cached_models", Json::Arr(cached)),
                 ("pinned_bytes", Json::num(e.pinned_bytes as f64)),
                 ("stat_computes", Json::num(e.stat_computes as f64)),
+                // Streaming-window observability: `n` above is current
+                // occupancy; these are lifetime flow totals plus the
+                // incremental-vs-rebuilt statistics work split. One full
+                // rebuild recomputes `stat_bytes`; one incremental pass
+                // corrects the same bytes in place with O(k·(p+q)²) flops.
+                ("appended", Json::num(e.appended as f64)),
+                ("evicted", Json::num(e.evicted as f64)),
+                ("pending", Json::num(e.pending as f64)),
+                ("stat_updates", Json::num(e.stat_updates as f64)),
+                ("stat_bytes", Json::num(stats_bytes(e.p, e.q) as f64)),
                 ("tile_hits", Json::num(ts.hits as f64)),
                 ("tile_misses", Json::num(ts.misses as f64)),
                 ("tile_evictions", Json::num(ts.evictions as f64)),

@@ -39,7 +39,9 @@ pub mod registry;
 
 pub use batch::{run_batch, BatchOutcome};
 pub use engine::ServeEngine;
-pub use protocol::{ErrKind, Op, Progress, Request, Response, SaveOp, ServerLine};
+pub use protocol::{
+    AppendOp, ErrKind, Op, Progress, Request, Response, SaveOp, ServerLine, MAX_APPEND_ROWS,
+};
 pub use registry::{Registry, WarmContext};
 
 use std::io::{BufRead, Write};

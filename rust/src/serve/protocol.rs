@@ -8,6 +8,9 @@
 //! {"op":"fit","id":3,"dataset":"syn","solver":"alt","lambda":0.4,"tol":0.001}
 //! {"op":"path","id":4,"dataset":"syn","solver":"alt","path_points":8,"stream":true}
 //! {"op":"cv","id":5,"dataset":"syn","cv_folds":5,"cv_threads":2}
+//! {"op":"append","id":12,"dataset":"syn","rows":[{"x":[...],"y":[...]}]}
+//! {"op":"append","id":13,"dataset":"syn","path":"more.bin"}
+//! {"op":"refit","id":14,"dataset":"syn","window":100,"lambda":0.4}
 //! {"op":"stat","id":6}
 //! {"op":"evict","id":7,"dataset":"expr"}
 //! {"op":"cancel","id":8,"job":4}
@@ -16,7 +19,16 @@
 //! {"op":"shutdown","id":11}
 //! ```
 //!
-//! Job requests (`fit` / `path` / `cv`) carry solver parameters under the
+//! `append` buffers new samples against a resident dataset (inline `rows`,
+//! each `{"x":[p numbers],"y":[q numbers]}`, or a dataset file via `path` —
+//! exactly one source; 1..=[`MAX_APPEND_ROWS`] inline rows per request;
+//! non-finite values are parse errors). Buffered rows take effect at the
+//! next `refit`: the job folds them into the window (evicting the oldest
+//! samples beyond the optional `"window"` occupancy cap), applies the
+//! incremental rank-k statistics correction, and re-solves warm from the
+//! cached model — re-fit cost scales with the drift, not the dataset.
+//!
+//! Job requests (`fit` / `path` / `cv` / `refit`) carry solver parameters under the
 //! *same keys as config files* — the engine layers them onto its base
 //! [`crate::coordinator::RunConfig`] via the one shared schema, so an
 //! unknown or malformed key fails with the same message a bad config file
@@ -62,6 +74,8 @@ pub struct Request {
 pub enum Op {
     Load(LoadOp),
     Job(JobOp),
+    /// Buffer new samples against a resident dataset (applied by `refit`).
+    Append(AppendOp),
     Stat { dataset: Option<String> },
     Evict { dataset: String },
     /// Cooperatively cancel the job(s) submitted under request id `job`.
@@ -102,6 +116,24 @@ pub struct SaveOp {
     pub solver: Option<String>,
 }
 
+/// Upper bound on inline rows per `append` request — a closed, documented
+/// limit so a hostile client cannot stage an unbounded buffer through one
+/// line (the 1 MiB line cap bounds bytes; this bounds row *count*).
+pub const MAX_APPEND_ROWS: usize = 4096;
+
+/// Buffer new samples for `dataset`, to be folded into its window by the
+/// next `refit`. Exactly one of `rows` (inline, shape-checked against the
+/// dataset at execution) or `path` (a dataset file whose samples are
+/// appended) is present.
+#[derive(Clone, Debug)]
+pub struct AppendOp {
+    pub dataset: String,
+    /// Inline samples, `(x, y)` per row. Values are finite (parse-enforced).
+    pub rows: Vec<(Vec<f64>, Vec<f64>)>,
+    /// Dataset file to append from instead of inline rows.
+    pub path: Option<String>,
+}
+
 /// Where a `load` gets its data.
 #[derive(Clone, Debug)]
 pub enum LoadSource {
@@ -117,12 +149,16 @@ pub enum LoadSource {
     },
 }
 
-/// The three solver job shapes, admission-controlled and queued.
+/// The solver job shapes, admission-controlled and queued.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobKind {
     Fit,
     Path,
     Cv,
+    /// Fold buffered `append` rows into the dataset's sliding window,
+    /// incrementally correct its cached statistics, and re-solve warm from
+    /// the cached model.
+    Refit,
 }
 
 impl JobKind {
@@ -131,6 +167,7 @@ impl JobKind {
             JobKind::Fit => "fit",
             JobKind::Path => "path",
             JobKind::Cv => "cv",
+            JobKind::Refit => "refit",
         }
     }
 }
@@ -146,6 +183,9 @@ pub struct JobOp {
     /// Emit per-λ-point progress lines before the terminal response
     /// (default `false`; `path`/`cv` only — `fit` has no per-point grain).
     pub stream: bool,
+    /// `refit` only: after folding buffered appends in, evict the oldest
+    /// samples until window occupancy is at most this (`None` = keep all).
+    pub window: Option<usize>,
     /// Remaining request keys, layered onto the engine's base config.
     pub params: Vec<(String, Json)>,
 }
@@ -156,6 +196,7 @@ impl Request {
         match &self.op {
             Op::Load(_) => "load",
             Op::Job(j) => j.kind.name(),
+            Op::Append(_) => "append",
             Op::Stat { .. } => "stat",
             Op::Evict { .. } => "evict",
             Op::Cancel { .. } => "cancel",
@@ -171,6 +212,7 @@ impl Request {
         match &self.op {
             Op::Load(l) => Some(&l.name),
             Op::Job(j) => Some(&j.dataset),
+            Op::Append(a) => Some(&a.dataset),
             Op::Evict { dataset } => Some(dataset),
             Op::Stat { dataset } => dataset.as_deref(),
             Op::Save(s) => Some(&s.dataset),
@@ -252,17 +294,41 @@ impl Request {
                     model,
                 })
             }
-            "fit" | "path" | "cv" => {
+            "fit" | "path" | "cv" | "refit" => {
                 let kind = match op {
                     "fit" => JobKind::Fit,
                     "path" => JobKind::Path,
-                    _ => JobKind::Cv,
+                    "cv" => JobKind::Cv,
+                    _ => JobKind::Refit,
                 };
                 let dataset = str_field("dataset")?;
                 let stream = doc.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+                // `window` is a refit control key (occupancy cap), not a
+                // solver parameter; on other jobs it falls through to the
+                // config layering and fails there as an unknown key.
+                let window = if kind == JobKind::Refit {
+                    match doc.get("window") {
+                        None => None,
+                        Some(v) => {
+                            let w = v.as_usize().ok_or_else(|| {
+                                "'window' must be a non-negative integer below 2^53".to_string()
+                            })?;
+                            if w == 0 {
+                                return Err("'window' must be >= 1".to_string());
+                            }
+                            Some(w)
+                        }
+                    }
+                } else {
+                    None
+                };
                 // Everything that is not addressing/control is a solver
                 // parameter for the engine's config layering.
-                let reserved = ["op", "id", "dataset", "warm", "stream"];
+                let reserved: &[&str] = if kind == JobKind::Refit {
+                    &["op", "id", "dataset", "warm", "stream", "window"]
+                } else {
+                    &["op", "id", "dataset", "warm", "stream"]
+                };
                 let params: Vec<(String, Json)> = obj
                     .iter()
                     .filter(|(k, _)| !reserved.contains(&k.as_str()))
@@ -273,8 +339,70 @@ impl Request {
                     dataset,
                     warm,
                     stream,
+                    window,
                     params,
                 })
+            }
+            "append" => {
+                let dataset = str_field("dataset")?;
+                let path = doc
+                    .get("path")
+                    .map(|v| {
+                        v.as_str()
+                            .map(String::from)
+                            .ok_or_else(|| "'path' must be a string".to_string())
+                    })
+                    .transpose()?;
+                let rows = match doc.get("rows") {
+                    None => None,
+                    Some(v) => {
+                        let arr = v
+                            .as_arr()
+                            .ok_or_else(|| "'rows' must be an array of objects".to_string())?;
+                        if arr.len() > MAX_APPEND_ROWS {
+                            return Err(format!(
+                                "'rows' exceeds the {MAX_APPEND_ROWS}-row per-request limit"
+                            ));
+                        }
+                        if arr.is_empty() {
+                            return Err("'rows' must contain at least one row".to_string());
+                        }
+                        let vec_field = |row: &Json, key: &str| -> Result<Vec<f64>, String> {
+                            let vals = row.get(key).and_then(|a| a.as_arr()).ok_or_else(|| {
+                                format!("each append row requires number array '{key}'")
+                            })?;
+                            vals.iter()
+                                .map(|e| {
+                                    e.as_f64().filter(|f| f.is_finite()).ok_or_else(|| {
+                                        format!("append row '{key}' values must be finite numbers")
+                                    })
+                                })
+                                .collect()
+                        };
+                        Some(
+                            arr.iter()
+                                .map(|row| Ok((vec_field(row, "x")?, vec_field(row, "y")?)))
+                                .collect::<Result<Vec<_>, String>>()?,
+                        )
+                    }
+                };
+                match (rows, &path) {
+                    (Some(rows), None) => Op::Append(AppendOp {
+                        dataset,
+                        rows,
+                        path: None,
+                    }),
+                    (None, Some(_)) => Op::Append(AppendOp {
+                        dataset,
+                        rows: Vec::new(),
+                        path,
+                    }),
+                    _ => {
+                        return Err(
+                            "'append' requires exactly one of 'rows' or 'path'".to_string()
+                        )
+                    }
+                }
             }
             "stat" => Op::Stat {
                 dataset: doc
@@ -557,6 +685,83 @@ mod tests {
         .unwrap();
         let Op::Load(l) = &r.op else { panic!() };
         assert_eq!(l.model.as_deref(), Some("m.jsonl"));
+    }
+
+    #[test]
+    fn parses_append_and_refit() {
+        let r = Request::parse_line(
+            r#"{"op":"append","id":12,"dataset":"d","rows":[{"x":[1.0,2.0],"y":[3.0]},{"x":[4,5],"y":[6]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.op_name(), "append");
+        assert_eq!(r.dataset_name(), Some("d"));
+        let Op::Append(a) = &r.op else { panic!() };
+        assert_eq!(a.rows.len(), 2);
+        assert_eq!(a.rows[0].0, vec![1.0, 2.0]);
+        assert_eq!(a.rows[1].1, vec![6.0]);
+        assert!(a.path.is_none());
+
+        let r = Request::parse_line(r#"{"op":"append","dataset":"d","path":"more.bin"}"#).unwrap();
+        let Op::Append(a) = &r.op else { panic!() };
+        assert_eq!(a.path.as_deref(), Some("more.bin"));
+        assert!(a.rows.is_empty());
+
+        let r = Request::parse_line(
+            r#"{"op":"refit","id":14,"dataset":"d","window":100,"lambda":0.4}"#,
+        )
+        .unwrap();
+        assert_eq!(r.op_name(), "refit");
+        let Op::Job(j) = &r.op else { panic!() };
+        assert_eq!(j.kind, JobKind::Refit);
+        assert!(j.warm, "refit warm-starts by default");
+        assert_eq!(j.window, Some(100));
+        // `window` is a control key, never a solver param.
+        let keys: Vec<&str> = j.params.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["lambda"]);
+
+        // On non-refit jobs `window` stays a param (rejected downstream by
+        // the shared config schema).
+        let r = Request::parse_line(r#"{"op":"fit","dataset":"d","window":5}"#).unwrap();
+        let Op::Job(j) = &r.op else { panic!() };
+        assert_eq!(j.window, None);
+        assert!(j.params.iter().any(|(k, _)| k == "window"));
+    }
+
+    #[test]
+    fn rejects_hostile_append_payloads() {
+        for line in [
+            // no source / both sources
+            r#"{"op":"append","dataset":"d"}"#,
+            r#"{"op":"append","dataset":"d","rows":[],"path":"x.bin"}"#,
+            r#"{"op":"append","dataset":"d","rows":[]}"#,
+            // malformed rows
+            r#"{"op":"append","dataset":"d","rows":7}"#,
+            r#"{"op":"append","dataset":"d","rows":[7]}"#,
+            r#"{"op":"append","dataset":"d","rows":[{"x":[1]}]}"#,
+            r#"{"op":"append","dataset":"d","rows":[{"x":[1],"y":"no"}]}"#,
+            r#"{"op":"append","dataset":"d","rows":[{"x":["a"],"y":[1]}]}"#,
+            // non-finite values (1e999 parses to +inf)
+            r#"{"op":"append","dataset":"d","rows":[{"x":[1e999],"y":[1]}]}"#,
+            r#"{"op":"append","dataset":"d","rows":[{"x":[1],"y":[-1e999]}]}"#,
+            // refit window must be a positive checked integer
+            r#"{"op":"refit","dataset":"d","window":0}"#,
+            r#"{"op":"refit","dataset":"d","window":-1}"#,
+            r#"{"op":"refit","dataset":"d","window":2.5}"#,
+            r#"{"op":"refit","dataset":"d","window":9007199254740992}"#,
+        ] {
+            assert!(Request::parse_line(line).is_err(), "{line}");
+        }
+        // The row-count cap is a structured parse error, not an allocation.
+        let mut big = String::from(r#"{"op":"append","dataset":"d","rows":["#);
+        for i in 0..=MAX_APPEND_ROWS {
+            if i > 0 {
+                big.push(',');
+            }
+            big.push_str(r#"{"x":[1],"y":[1]}"#);
+        }
+        big.push_str("]}");
+        let err = Request::parse_line(&big).unwrap_err();
+        assert!(err.contains("per-request limit"), "{err}");
     }
 
     #[test]

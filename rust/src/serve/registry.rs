@@ -32,7 +32,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::cggm::{CggmModel, Dataset};
+use crate::cggm::{CggmModel, Dataset, WindowDelta};
 use crate::gemm::GemmEngine;
 use crate::solvers::{SolveOptions, SolverContext, SolverKind};
 use crate::util::membudget::{BudgetExceeded, MemBudget, Tracked};
@@ -46,6 +46,14 @@ pub struct WarmContext {
     ctx: SolverContext<'static>,
     /// Most recent fitted model per solver, budget-tracked.
     models: HashMap<&'static str, CachedModel>,
+    /// Rows accepted by `append` but not yet folded into the window by a
+    /// `refit` (each row a `(x, y)` pair of length `p` / `q`).
+    pending: Vec<(Vec<f64>, Vec<f64>)>,
+    /// Budget registrations covering `pending` (one per accepted `append`).
+    pending_tracks: Vec<Tracked>,
+    /// Lifetime samples folded into / expired out of the window by refits.
+    appended: usize,
+    evicted: usize,
     /// Registration of the raw dataset bytes against the shared budget.
     _data_track: Tracked,
     data: Arc<Dataset>,
@@ -77,10 +85,113 @@ impl WarmContext {
         Ok(WarmContext {
             ctx,
             models: HashMap::new(),
+            pending: Vec::new(),
+            pending_tracks: Vec::new(),
+            appended: 0,
+            evicted: 0,
             _data_track: data_track,
             data,
             engine,
         })
+    }
+
+    /// Replace the owned dataset with `data` (the slid window) while
+    /// carrying every cache the old context held — materialized Gram
+    /// blocks, resident tiles, clustering partitions, CD colorings — and
+    /// correcting the carried statistics in place with the rank-k update
+    /// described by `delta`. This is the streaming re-fit path: statistics
+    /// cost scales with `delta`, not with the window size.
+    ///
+    /// The new dataset must keep the old one's `(p, q)` shape (the window
+    /// slides over samples, never over features). Fails only when the
+    /// shared budget cannot hold the new raw dataset bytes, leaving `self`
+    /// untouched; a budget failure *inside* the statistics correction
+    /// instead degrades to invalidation (lazy recompute), never an error.
+    pub fn rebuild(
+        &mut self,
+        data: Arc<Dataset>,
+        delta: &WindowDelta,
+        opts: &SolveOptions,
+    ) -> Result<(), BudgetExceeded> {
+        assert_eq!(
+            (data.p(), data.q()),
+            (self.data.p(), self.data.q()),
+            "window rebuild must preserve feature dimensions"
+        );
+        // Reserve the new dataset's bytes first so failure changes nothing.
+        // Old and new windows briefly double-count; the engine's admission
+        // estimate covers the overlap.
+        let data_track = opts.budget.track(data.bytes())?;
+        // SAFETY: same argument as `new` — the new referent lives behind an
+        // `Arc` stored in this struct below (stable address), and `ctx`
+        // drops before it. Between the swap and the `self.data` store the
+        // new `Arc` is alive in this frame, and no code in between panics
+        // while holding a context over it.
+        let data_ref: &'static Dataset = unsafe { &*Arc::as_ptr(&data) };
+        let engine_ref: &'static dyn GemmEngine = unsafe { &*Arc::as_ptr(&self.engine) };
+        // Swap a bare context over the new data in, take the old one out,
+        // and strip it for parts: `into_carry` releases the old context's
+        // budget registrations and returns its caches as plain matrices.
+        let fresh = SolverContext::new(data_ref, opts, engine_ref);
+        let carry = std::mem::replace(&mut self.ctx, fresh).into_carry();
+        self.ctx = SolverContext::with_carry(data_ref, opts, engine_ref, carry);
+        if self.ctx.update_stats(delta).is_err() {
+            // The correction scratch did not fit: drop the carried stats
+            // and recompute lazily. Slower, never wrong.
+            self.ctx.invalidate_stats();
+        }
+        self.data = data;
+        self._data_track = data_track;
+        self.appended += delta.added_k();
+        self.evicted += delta.removed_k();
+        Ok(())
+    }
+
+    /// Buffer `rows` for the next refit. Shape validation happens at the
+    /// engine layer (it has the structured-error machinery); here the rows
+    /// only need to fit the budget. Returns the buffered-row total.
+    pub fn push_pending(
+        &mut self,
+        rows: Vec<(Vec<f64>, Vec<f64>)>,
+        budget: &MemBudget,
+    ) -> Result<usize, BudgetExceeded> {
+        let bytes: usize = rows.iter().map(|(x, y)| 8 * (x.len() + y.len())).sum();
+        let track = budget.track(bytes)?;
+        self.pending_tracks.push(track);
+        self.pending.extend(rows);
+        Ok(self.pending.len())
+    }
+
+    /// Take every buffered row (oldest first), releasing their budget
+    /// registration — the refit job re-accounts them inside the new window.
+    pub fn take_pending(&mut self) -> Vec<(Vec<f64>, Vec<f64>)> {
+        self.pending_tracks.clear();
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Rows buffered by `append` and not yet folded in by a `refit`.
+    pub fn pending_rows(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn pending_bytes(&self) -> usize {
+        self.pending.iter().map(|(x, y)| 8 * (x.len() + y.len())).sum()
+    }
+
+    /// Lifetime samples folded into the window by refits.
+    pub fn appended(&self) -> usize {
+        self.appended
+    }
+
+    /// Lifetime samples expired out of the window by refits.
+    pub fn evicted(&self) -> usize {
+        self.evicted
+    }
+
+    /// Cached statistics corrected in place by incremental window updates
+    /// (vs. `stat_computes`, which counts from-scratch materializations).
+    pub fn stat_updates(&self) -> usize {
+        self.ctx.stat_updates()
     }
 
     /// The warm solver context, with the erased `'static` shortened back to
@@ -172,11 +283,12 @@ impl WarmContext {
     }
 
     /// Bytes this entry pins in the shared budget while idle: raw data,
-    /// materialized statistics, cached models.
+    /// materialized statistics, cached models, pending appended rows.
     pub fn pinned_bytes(&self) -> usize {
         self.data.bytes()
             + self.ctx.cached_stat_bytes()
             + self.models.values().map(|c| c.bytes).sum::<usize>()
+            + self.pending_bytes()
     }
 }
 
@@ -206,6 +318,13 @@ pub struct Entry {
     pub warm_reuses: usize,
     /// Snapshot of the context's statistic-compute counter.
     pub stat_computes: usize,
+    /// Snapshot of the context's in-place statistic-correction counter.
+    pub stat_updates: usize,
+    /// Lifetime samples folded into / expired out of the sliding window.
+    pub appended: usize,
+    pub evicted: usize,
+    /// Rows buffered by `append` awaiting the next `refit`.
+    pub pending: usize,
     /// Snapshot of the tile cache's counters (`None` until the entry's
     /// context serves a tiled read; always `None` in dense mode).
     pub tile_stats: Option<crate::cggm::tiles::TileStats>,
@@ -311,6 +430,10 @@ impl Registry {
             jobs: 0,
             warm_reuses: 0,
             stat_computes: warm.stat_computes(),
+            stat_updates: warm.stat_updates(),
+            appended: warm.appended(),
+            evicted: warm.evicted(),
+            pending: warm.pending_rows(),
             tile_stats: warm.tile_stats(),
             pinned_bytes: warm.pinned_bytes(),
             warm: Arc::new(Mutex::new(warm)),
@@ -484,6 +607,58 @@ mod tests {
         assert!(freed > 0);
         assert_eq!(budget.live(), 0);
         assert!(matches!(reg.evict("a"), Err(RegistryError::NotFound(_))));
+    }
+
+    #[test]
+    fn rebuild_slides_the_window_on_carried_stats() {
+        use crate::cggm::SampleBlock;
+        let budget = MemBudget::unlimited();
+        let eng: Arc<dyn GemmEngine> = Arc::new(NativeGemm::new(1));
+        let opts = opts_with(&budget);
+        let data = small_data(7, 30, 4, 5);
+        let mut warm = WarmContext::new(data.clone(), eng, &opts).unwrap();
+        warm.warm_stats().unwrap();
+        assert_eq!(warm.stat_computes(), 3);
+        // Buffer two rows; the buffer pins budget until taken.
+        let mut rng = Rng::new(99);
+        let mut row = |len: usize| (0..len).map(|_| rng.normal()).collect::<Vec<f64>>();
+        let rows = vec![(row(4), row(5)), (row(4), row(5))];
+        let live_before = budget.live();
+        assert_eq!(warm.push_pending(rows, &budget).unwrap(), 2);
+        assert_eq!(warm.pending_rows(), 2);
+        assert_eq!(budget.live(), live_before + 8 * 2 * 9);
+        assert_eq!(warm.pinned_bytes(), budget.live());
+        let rows = warm.take_pending();
+        assert_eq!(warm.pending_rows(), 0);
+        assert_eq!(budget.live(), live_before);
+        // Slide the window exactly as the refit job does: append the taken
+        // rows, expire the oldest two, rebuild over the new dataset.
+        let mut next = (*data).clone();
+        let mut delta = WindowDelta::new(next.n());
+        let xa = Mat::from_fn(4, 2, |i, j| rows[j].0[i]);
+        let ya = Mat::from_fn(5, 2, |i, j| rows[j].1[i]);
+        next.append_samples(&xa, &ya);
+        delta.record_append(SampleBlock::new(xa, ya));
+        delta.record_evict(next.evict_oldest(2));
+        let next = Arc::new(next);
+        warm.rebuild(next.clone(), &delta, &opts).unwrap();
+        assert_eq!((warm.appended(), warm.evicted()), (2, 2));
+        assert_eq!(warm.stat_computes(), 3, "carried stats must not recompute");
+        assert!(warm.stat_updates() >= 3, "dense blocks corrected in place");
+        // Corrected statistics match a from-scratch context over the slid
+        // window.
+        let eng2 = NativeGemm::new(1);
+        let fresh = SolverContext::new(&next, &opts, &eng2);
+        for (got, want) in [
+            (warm.ctx().syy().unwrap(), fresh.syy().unwrap()),
+            (warm.ctx().sxx().unwrap(), fresh.sxx().unwrap()),
+            (warm.ctx().sxy().unwrap(), fresh.sxy().unwrap()),
+        ] {
+            assert!(got.max_abs_diff(want) <= 1e-10);
+        }
+        drop(fresh);
+        drop(warm);
+        assert_eq!(budget.live(), 0, "rebuild must not leak budget");
     }
 
     #[test]

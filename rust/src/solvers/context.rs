@@ -36,8 +36,8 @@ use std::cell::{Cell, OnceCell, RefCell, RefMut};
 use super::workspace::Workspace;
 use super::{SolveError, SolveOptions, StatMode};
 use crate::cggm::factor::CholKind;
-use crate::cggm::tiles::{TileStats, TileStore};
-use crate::cggm::{CggmModel, Dataset, Objective};
+use crate::cggm::tiles::{correct_tile_mat, TileKey, TileStats, TileStore};
+use crate::cggm::{CggmModel, Dataset, Objective, WindowDelta};
 use crate::gemm::GemmEngine;
 use crate::graph::cluster::PersistentPartition;
 use crate::graph::coloring::ColoringCache;
@@ -74,6 +74,53 @@ pub struct ColoringCaches {
     pub theta: ColoringCache,
 }
 
+/// The carryable statistics of a retired context: when a sliding-window
+/// re-fit replaces the [`Dataset`] (and hence the context borrowing it), the
+/// expensive caches — dense Gram matrices, resident tiles, clustering
+/// partitions, CD colorings — survive the swap through this bag instead of
+/// being recomputed. Budget registrations are *not* carried (each `Tracked`
+/// is released on teardown); [`SolverContext::with_carry`] re-registers
+/// against the new context's budget and silently drops whatever no longer
+/// fits — a carry is a cache, never a correctness requirement. The carried
+/// matrices describe the *old* window; apply
+/// [`SolverContext::update_stats`] with the window delta before solving.
+pub struct StatCarry {
+    syy: Option<Mat>,
+    sxx: Option<Mat>,
+    sxy: Option<Mat>,
+    sxx_diag: Option<Vec<f64>>,
+    tiles: Vec<(TileKey, Mat)>,
+    tile_stats: TileStats,
+    /// Tile edge the carried tiles were built with (0 when none) — adoption
+    /// refuses a geometry mismatch.
+    tile: usize,
+    clusters: ClusterCaches,
+    colorings: ColoringCaches,
+    stat_computes: usize,
+    stat_updates: usize,
+    downdates: usize,
+}
+
+impl StatCarry {
+    /// Dims of the carried dense stats, for sanity checks: (p, q) from
+    /// whichever matrices are present (0 when unknown).
+    fn dims(&self) -> (usize, usize) {
+        let q = self
+            .syy
+            .as_ref()
+            .map(|m| m.rows())
+            .or(self.sxy.as_ref().map(|m| m.cols()))
+            .unwrap_or(0);
+        let p = self
+            .sxx
+            .as_ref()
+            .map(|m| m.rows())
+            .or(self.sxy.as_ref().map(|m| m.rows()))
+            .unwrap_or(0);
+        (p, q)
+    }
+}
+
 /// Shared state for one dataset: construct once, run many solves.
 pub struct SolverContext<'a> {
     data: &'a Dataset,
@@ -87,6 +134,20 @@ pub struct SolverContext<'a> {
     stat_computes: Cell<usize>,
     stat_mode: StatMode,
     tiles: OnceCell<TileStore<'a>>,
+    /// Tiles adopted from a [`StatCarry`], parked until the lazily built
+    /// [`TileStore`] exists to receive them (consumed inside [`Self::tiles`]).
+    tile_carry: RefCell<Option<(Vec<(TileKey, Mat)>, TileStats)>>,
+    /// Cached statistics corrected in place by [`Self::update_stats`]
+    /// (dense matrices, the S_xx diagonal, and resident tiles) over the
+    /// context's lifetime — surfaced on `SolveTrace::stat_updates`.
+    stat_updates: Cell<usize>,
+    /// Window updates that removed samples since the last full rebuild —
+    /// the drift-accumulation guard's counter (see [`Self::update_stats`]).
+    downdates: Cell<usize>,
+    /// Force a from-scratch statistics rebuild after this many downdates
+    /// (0 = never); bounds floating-point drift from repeated subtractive
+    /// rank-k corrections.
+    stat_rebuild_every: usize,
     clusters: RefCell<ClusterCaches>,
     colorings: RefCell<ColoringCaches>,
 }
@@ -109,9 +170,201 @@ impl<'a> SolverContext<'a> {
             stat_computes: Cell::new(0),
             stat_mode: opts.stat_mode,
             tiles: OnceCell::new(),
+            tile_carry: RefCell::new(None),
+            stat_updates: Cell::new(0),
+            downdates: Cell::new(0),
+            stat_rebuild_every: opts.stat_rebuild_every,
             clusters: RefCell::new(ClusterCaches::default()),
             colorings: RefCell::new(ColoringCaches::default()),
         }
+    }
+
+    /// Build a context seeded from a retired context's [`StatCarry`]: dense
+    /// statistics are re-registered against this context's budget (dropped
+    /// silently when they no longer fit — the next read recomputes), carried
+    /// tiles wait for the lazy [`TileStore`] (and are discarded on a
+    /// stat-mode or tile-size mismatch), and the clustering/coloring caches
+    /// plus lifetime counters transfer as-is. The carry must come from the
+    /// same (p, q) problem; the carried values describe the *old* window, so
+    /// call [`Self::update_stats`] with the window delta before solving.
+    pub fn with_carry(
+        data: &'a Dataset,
+        opts: &SolveOptions,
+        engine: &'a dyn GemmEngine,
+        carry: StatCarry,
+    ) -> SolverContext<'a> {
+        let (cp, cq) = carry.dims();
+        assert!(
+            (cp == 0 || cp == data.p()) && (cq == 0 || cq == data.q()),
+            "stat carry from a different problem shape: ({cp}, {cq}) vs ({}, {})",
+            data.p(),
+            data.q()
+        );
+        let ctx = SolverContext::new(data, opts, engine);
+        fn adopt(budget: &MemBudget, cell: &OnceCell<CachedMat>, mat: Option<Mat>) {
+            if let Some(mat) = mat {
+                if let Ok(track) = budget.track(mat.bytes()) {
+                    let _ = cell.set(CachedMat { mat, _track: track });
+                }
+            }
+        }
+        adopt(ctx.ws.budget(), &ctx.syy, carry.syy);
+        adopt(ctx.ws.budget(), &ctx.sxx, carry.sxx);
+        adopt(ctx.ws.budget(), &ctx.sxy, carry.sxy);
+        if let Some(diag) = carry.sxx_diag {
+            if diag.len() == data.p() {
+                let _ = ctx.sxx_diag.set(diag);
+            }
+        }
+        if !carry.tiles.is_empty() && ctx.stat_mode == StatMode::Tiled(carry.tile) {
+            *ctx.tile_carry.borrow_mut() = Some((carry.tiles, carry.tile_stats));
+        }
+        ctx.stat_computes.set(carry.stat_computes);
+        ctx.stat_updates.set(carry.stat_updates);
+        ctx.downdates.set(carry.downdates);
+        *ctx.clusters.borrow_mut() = carry.clusters;
+        *ctx.colorings.borrow_mut() = carry.colorings;
+        ctx
+    }
+
+    /// Tear the context down into the parts worth keeping across a dataset
+    /// swap (see [`StatCarry`]). Every `Tracked` registration is released
+    /// here; the adopting context re-registers.
+    pub fn into_carry(self) -> StatCarry {
+        let tile = match self.stat_mode {
+            StatMode::Tiled(t) => t,
+            StatMode::Dense => 0,
+        };
+        let (tiles, tile_stats) = match self.tiles.into_inner() {
+            Some(store) => store.into_parts(),
+            None => self.tile_carry.into_inner().unwrap_or_default(),
+        };
+        StatCarry {
+            syy: self.syy.into_inner().map(|c| c.mat),
+            sxx: self.sxx.into_inner().map(|c| c.mat),
+            sxy: self.sxy.into_inner().map(|c| c.mat),
+            sxx_diag: self.sxx_diag.into_inner(),
+            tiles,
+            tile_stats,
+            tile,
+            clusters: self.clusters.into_inner(),
+            colorings: self.colorings.into_inner(),
+            stat_computes: self.stat_computes.get(),
+            stat_updates: self.stat_updates.get(),
+            downdates: self.downdates.get(),
+        }
+    }
+
+    /// Apply a sliding-window transition to every *materialized* statistic:
+    /// the symmetric rank-k correction
+    /// `S ← (old_n·S + A·Aᵀ − R·Rᵀ)/new_n` runs in O(k·(p+q)²) on whatever
+    /// is cached — dense blocks and the S_xx diagonal in place, resident
+    /// tiles (built or still parked in the carry) through
+    /// [`TileStore::apply_update`] — instead of the O(n·(p+q)²) rebuild.
+    /// Statistics not yet materialized stay lazy (their next read computes
+    /// from the already-updated dataset). `self.data` must already describe
+    /// the post-transition window.
+    ///
+    /// Drift guard: every update that *removes* samples is a subtractive
+    /// correction whose floating-point error compounds (catastrophic
+    /// cancellation when the evicted samples dominated a statistic — see
+    /// docs/PERF.md). After `stat_rebuild_every` such downdates all cached
+    /// statistics are invalidated, forcing an exact rebuild on next read,
+    /// and the counter resets.
+    ///
+    /// The correction's panel working set (the delta blocks it reads) is
+    /// registered against the budget for the duration of the call, so
+    /// `MemBudget::peak()` keeps measuring the true working set.
+    pub fn update_stats(&mut self, delta: &WindowDelta) -> Result<(), BudgetExceeded> {
+        if delta.is_empty() {
+            return Ok(());
+        }
+        let new_n = delta.new_n();
+        assert!(new_n > 0, "window update emptied the dataset");
+        assert_eq!(new_n, self.data.n(), "update_stats out of sync with data");
+        if delta.removed_k() > 0 {
+            let d = self.downdates.get() + 1;
+            self.downdates.set(d);
+            if self.stat_rebuild_every > 0 && d >= self.stat_rebuild_every {
+                self.invalidate_stats();
+                return Ok(());
+            }
+        }
+        let block_bytes =
+            |b: &Option<crate::cggm::SampleBlock>| b.as_ref().map_or(0, |b| b.xt.bytes() + b.yt.bytes());
+        let _scratch = self
+            .ws
+            .budget()
+            .track(block_bytes(&delta.added) + block_bytes(&delta.removed))?;
+        let ratio = delta.old_n as f64 / new_n as f64;
+        let inv = 1.0 / new_n as f64;
+        let engine = self.engine;
+        let mut corrected = 0usize;
+        let mut dense = |cell: &mut OnceCell<CachedMat>,
+                         side: fn(&crate::cggm::SampleBlock) -> (&Mat, &Mat),
+                         sym: bool| {
+            if let Some(c) = cell.get_mut() {
+                c.mat.scale(ratio);
+                if let Some(a) = &delta.added {
+                    let (pa, pb) = side(a);
+                    engine.gemm_nt(inv, pa, pb, 1.0, &mut c.mat);
+                }
+                if let Some(r) = &delta.removed {
+                    let (pa, pb) = side(r);
+                    engine.gemm_nt(-inv, pa, pb, 1.0, &mut c.mat);
+                }
+                if sym {
+                    c.mat.symmetrize();
+                }
+                corrected += 1;
+            }
+        };
+        dense(&mut self.syy, |b| (&b.yt, &b.yt), true);
+        dense(&mut self.sxx, |b| (&b.xt, &b.xt), true);
+        dense(&mut self.sxy, |b| (&b.xt, &b.yt), false);
+        if let Some(diag) = self.sxx_diag.get_mut() {
+            for (i, d) in diag.iter_mut().enumerate() {
+                *d *= ratio;
+                if let Some(a) = &delta.added {
+                    for k in 0..a.k() {
+                        *d += inv * a.xt[(i, k)] * a.xt[(i, k)];
+                    }
+                }
+                if let Some(r) = &delta.removed {
+                    for k in 0..r.k() {
+                        *d -= inv * r.xt[(i, k)] * r.xt[(i, k)];
+                    }
+                }
+            }
+            corrected += 1;
+        }
+        if let Some(store) = self.tiles.get() {
+            corrected += store.apply_update(delta);
+        } else if let Some((tiles, stats)) = self.tile_carry.borrow_mut().as_mut() {
+            if let StatMode::Tiled(t) = self.stat_mode {
+                for (key, mat) in tiles.iter_mut() {
+                    correct_tile_mat(mat, *key, t, engine, delta);
+                }
+                stats.updates += tiles.len();
+                corrected += tiles.len();
+            }
+        }
+        self.stat_updates.set(self.stat_updates.get() + corrected);
+        Ok(())
+    }
+
+    /// Drop every cached statistic (dense, diagonal, tiles, parked carry) so
+    /// the next read rebuilds exactly from the current dataset, and reset
+    /// the downdate counter. The rebuild is visible through
+    /// [`Self::stat_computes`] growing again.
+    pub fn invalidate_stats(&mut self) {
+        self.syy = OnceCell::new();
+        self.sxx = OnceCell::new();
+        self.sxy = OnceCell::new();
+        self.sxx_diag = OnceCell::new();
+        self.tiles = OnceCell::new();
+        *self.tile_carry.borrow_mut() = None;
+        self.downdates.set(0);
     }
 
     /// The block solver's persisted clustering partitions (exclusive borrow
@@ -197,6 +450,20 @@ impl<'a> SolverContext<'a> {
         self.stat_computes.get()
     }
 
+    /// Cached statistics corrected in place by [`Self::update_stats`] over
+    /// the context's lifetime (dense matrices + S_xx diagonal + resident
+    /// tiles). Copied onto `SolveTrace::stat_updates` by `solve_in_context`.
+    pub fn stat_updates(&self) -> usize {
+        self.stat_updates.get()
+    }
+
+    /// Sample-removing window updates since the last full statistics rebuild
+    /// — the drift guard's counter (resets when it trips or on
+    /// [`Self::invalidate_stats`]).
+    pub fn downdates(&self) -> usize {
+        self.downdates.get()
+    }
+
     /// The context's statistics materialization mode.
     pub fn stat_mode(&self) -> StatMode {
         self.stat_mode
@@ -210,7 +477,14 @@ impl<'a> SolverContext<'a> {
         match self.stat_mode {
             StatMode::Dense => None,
             StatMode::Tiled(tile) => Some(self.tiles.get_or_init(|| {
-                TileStore::new(self.data, self.engine, self.ws.budget().clone(), tile)
+                let store =
+                    TileStore::new(self.data, self.engine, self.ws.budget().clone(), tile);
+                // Tiles parked by a carry adoption (already corrected to the
+                // current window) seed the fresh store.
+                if let Some((tiles, stats)) = self.tile_carry.borrow_mut().take() {
+                    store.adopt(tiles, stats);
+                }
+                store
             })),
         }
     }
@@ -391,6 +665,141 @@ mod tests {
         // A dense-mode context never creates a store.
         let dense = SolverContext::new(&data, &SolveOptions::default(), &eng);
         assert!(dense.tiles().is_none());
+    }
+
+    #[test]
+    fn update_stats_matches_recompute_over_random_rounds() {
+        use crate::cggm::dataset::SampleBlock;
+        use crate::util::testing::property;
+        // The tentpole numerical-safety property at the unit level: after
+        // random append/evict rounds the incrementally maintained dense
+        // statistics match a from-scratch recompute at 1e-10.
+        property(10, |rng| {
+            let (n, p, q) = (5 + rng.below(8), 1 + rng.below(6), 1 + rng.below(5));
+            let eng = NativeGemm::new(1);
+            let opts = SolveOptions::default();
+            let mut data = Dataset::new(
+                Mat::from_fn(p, n, |_, _| rng.normal()),
+                Mat::from_fn(q, n, |_, _| rng.normal()),
+            );
+            let mut carry: Option<StatCarry> = None;
+            for _round in 0..6 {
+                let snapshot = data.clone();
+                let ctx = match carry.take() {
+                    Some(c) => SolverContext::with_carry(&snapshot, &opts, &eng, c),
+                    None => SolverContext::new(&snapshot, &opts, &eng),
+                };
+                let _ = ctx.syy().map_err(|e| e.to_string())?;
+                let _ = ctx.sxx().map_err(|e| e.to_string())?;
+                let _ = ctx.sxy().map_err(|e| e.to_string())?;
+                let _ = ctx.sxx_diag();
+                // Slide: append ka, evict kr ≤ ka (window never shrinks
+                // below its starting occupancy, so it never empties).
+                let ka = 1 + rng.below(3);
+                let kr = rng.below(ka + 1);
+                let added = SampleBlock::new(
+                    Mat::from_fn(p, ka, |_, _| rng.normal()),
+                    Mat::from_fn(q, ka, |_, _| rng.normal()),
+                );
+                let mut delta = crate::cggm::WindowDelta::new(data.n());
+                data.append_block(&added);
+                delta.record_append(added);
+                delta.record_evict(data.evict_oldest(kr));
+                // The context still borrows `snapshot`; re-home it on the
+                // slid window through the carry before updating.
+                let c = ctx.into_carry();
+                let mut ctx = SolverContext::with_carry(&data, &opts, &eng, c);
+                let before = ctx.stat_computes();
+                ctx.update_stats(&delta).map_err(|e| e.to_string())?;
+                if ctx.stat_computes() != before {
+                    return Err("update must not recompute".into());
+                }
+                let syy = data.syy_dense(&eng);
+                let sxx = data.sxx_dense(&eng);
+                let sxy = data.sxy_dense(&eng);
+                let e1 = ctx.syy().map_err(|e| e.to_string())?.max_abs_diff(&syy);
+                let e2 = ctx.sxx().map_err(|e| e.to_string())?.max_abs_diff(&sxx);
+                let e3 = ctx.sxy().map_err(|e| e.to_string())?.max_abs_diff(&sxy);
+                if e1 > 1e-10 || e2 > 1e-10 || e3 > 1e-10 {
+                    return Err(format!("drift: syy {e1:.2e} sxx {e2:.2e} sxy {e3:.2e}"));
+                }
+                for (i, d) in ctx.sxx_diag().iter().enumerate() {
+                    if (d - sxx[(i, i)]).abs() > 1e-10 {
+                        return Err(format!("diag drift at {i}"));
+                    }
+                }
+                carry = Some(ctx.into_carry());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rebuild_guard_trips_after_configured_downdates() {
+        use crate::cggm::dataset::SampleBlock;
+        let mut rng = Rng::new(9);
+        let mut data = small_data(&mut rng, 10, 3, 4);
+        let eng = NativeGemm::new(1);
+        let opts = SolveOptions {
+            stat_rebuild_every: 3,
+            ..Default::default()
+        };
+        let snapshot = data.clone();
+        let mut ctx = SolverContext::new(&snapshot, &opts, &eng);
+        let _ = ctx.syy().unwrap();
+        assert_eq!(ctx.stat_computes(), 1);
+        for round in 1..=3usize {
+            // Consume the context *before* mutating `data` (rounds ≥ 2
+            // borrow it), exactly as the serve refit path does.
+            let c = ctx.into_carry();
+            let added = SampleBlock::new(
+                Mat::from_fn(3, 1, |_, _| rng.normal()),
+                Mat::from_fn(4, 1, |_, _| rng.normal()),
+            );
+            let mut delta = crate::cggm::WindowDelta::new(data.n());
+            data.append_block(&added);
+            delta.record_append(added);
+            delta.record_evict(data.evict_oldest(1));
+            ctx = SolverContext::with_carry(&data, &opts, &eng, c);
+            ctx.update_stats(&delta).unwrap();
+            if round < 3 {
+                assert_eq!(ctx.downdates(), round, "counter pins each downdate");
+            } else {
+                // Third downdate trips the guard: caches dropped, counter
+                // reset, next read recomputes from scratch.
+                assert_eq!(ctx.downdates(), 0);
+                assert_eq!(ctx.cached_stat_bytes(), 0);
+                let before = ctx.stat_computes();
+                let want = data.syy_dense(&eng);
+                assert!(ctx.syy().unwrap().max_abs_diff(&want) < 1e-14);
+                assert_eq!(ctx.stat_computes(), before + 1, "guard forces rebuild");
+            }
+        }
+        drop(ctx);
+    }
+
+    #[test]
+    fn carry_preserves_caches_without_recompute() {
+        let mut rng = Rng::new(12);
+        let data = small_data(&mut rng, 9, 4, 5);
+        let eng = NativeGemm::new(1);
+        let budget = MemBudget::unlimited();
+        let opts = SolveOptions {
+            budget: budget.clone(),
+            ..Default::default()
+        };
+        let ctx = SolverContext::new(&data, &opts, &eng);
+        let _ = ctx.syy().unwrap();
+        let _ = ctx.sxy().unwrap();
+        assert_eq!(ctx.stat_computes(), 2);
+        let live_before = budget.live();
+        let carry = ctx.into_carry(); // releases the old registrations
+        assert_eq!(budget.live(), 0);
+        let ctx2 = SolverContext::with_carry(&data, &opts, &eng, carry);
+        assert_eq!(budget.live(), live_before, "carry re-registers the bytes");
+        let want = data.syy_dense(&eng);
+        assert!(ctx2.syy().unwrap().max_abs_diff(&want) < 1e-14);
+        assert_eq!(ctx2.stat_computes(), 2, "no recompute after adoption");
     }
 
     #[test]

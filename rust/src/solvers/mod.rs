@@ -29,7 +29,7 @@ pub mod newton_cd;
 pub mod prox_grad;
 pub mod workspace;
 
-pub use context::SolverContext;
+pub use context::{SolverContext, StatCarry};
 pub use workspace::Workspace;
 
 use crate::cggm::active::ScreenSet;
@@ -261,6 +261,13 @@ pub struct SolveOptions {
     /// A fired token surfaces as [`SolveError::Cancelled`]. Defaults to the
     /// unarmed no-op token.
     pub cancel: CancelToken,
+    /// Drift-accumulation guard for incremental statistics maintenance
+    /// ([`SolverContext::update_stats`]): force a from-scratch rebuild of
+    /// every cached statistic after this many sample-*removing* window
+    /// updates (each downdate is a subtractive rank-k correction whose
+    /// floating-point error compounds; see docs/PERF.md). `0` disables the
+    /// guard.
+    pub stat_rebuild_every: usize,
 }
 
 impl Default for SolveOptions {
@@ -283,6 +290,7 @@ impl Default for SolveOptions {
             screen: None,
             stat_mode: StatMode::default(),
             cancel: CancelToken::none(),
+            stat_rebuild_every: 64,
         }
     }
 }
@@ -379,8 +387,10 @@ pub fn solve_in_context(
         SolverKind::ProxGrad => prox_grad::solve(ctx, opts, warm),
     }?;
     // Recorded centrally so every solver's trace reports warm-start reuse
-    // (the serve engine and λ-path observability both read this).
+    // and incremental statistics maintenance (the serve engine and λ-path
+    // observability both read these).
     res.trace.warm_started = warm.is_some();
+    res.trace.stat_updates = ctx.stat_updates();
     Ok(res)
 }
 

@@ -26,6 +26,10 @@
 //!   equivalence (chain + cluster), budget-capped solves under the dense
 //!   `S_xx` footprint with LRU eviction/spill, and screened runs computing
 //!   strictly fewer tiles;
+//! - [`refit_tests`] — streaming re-fit acceptance: warm refit after a
+//!   window slide matches a cold fit on the same window at 1e-6 (dense and
+//!   tiled), with zero statistic recomputation and no extra iterations,
+//!   plus the `stat_rebuild_every` downdate drift guard end to end;
 //! - [`serve_tests`] — the serve subsystem: warm-context reuse across
 //!   repeat fits (registry hit + warm start + zero statistic recompute),
 //!   admission control on one shared `MemBudget`, LRU eviction, and
@@ -82,6 +86,9 @@ mod parallel_cd_tests;
 
 #[path = "integration/tiled_tests.rs"]
 mod tiled_tests;
+
+#[path = "integration/refit_tests.rs"]
+mod refit_tests;
 
 #[path = "integration/serve_tests.rs"]
 mod serve_tests;

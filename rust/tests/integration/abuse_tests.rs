@@ -16,6 +16,10 @@
 //!   terminate with a `cancelled`-kind error, and no interleaving leaks a
 //!   byte of reservation.
 //!
+//! The streaming surface is covered by the hostile-`append` fixture corpus
+//! (`tests/fixtures/hostile/append/`) and a concurrent
+//! append-vs-refit-vs-cancel interleaving under the same budget monitor.
+//!
 //! The three seed-crash repros live here too: a deep-nesting line (stack
 //! overflow abort on the seed), hostile `load` dimensions (`{"p":-1}` made
 //! a 0-dimensional dataset, `{"p":1e300}` a `usize::MAX` allocation), and
@@ -25,7 +29,7 @@
 use cggm::coordinator::RunConfig;
 use cggm::gemm::native::NativeGemm;
 use cggm::serve::{serve_connection, ErrKind, Request, Response, ServeEngine, ServerLine};
-use cggm::serve::MAX_REQUEST_LINE_BYTES;
+use cggm::serve::{MAX_APPEND_ROWS, MAX_REQUEST_LINE_BYTES};
 use cggm::util::json::Json;
 use std::io::Cursor;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -669,6 +673,203 @@ fn cancel_storms_against_every_id_class_leave_engine_serving() {
     srv.drain();
     assert_eq!(srv.reserved_bytes(), 0, "cancel storm leaked a reservation");
     assert!(srv.budget().live() <= limit);
+    probe(&srv);
+    srv.join();
+}
+
+/// Hostile `append` payload corpus (`tests/fixtures/hostile/append/`):
+/// every fixture line is answered structurally — `*.err.*` with a typed
+/// error kind, `*.ok.*` accepted — and the same connection serves a `stat`
+/// right after each payload. An inline payload over [`MAX_APPEND_ROWS`]
+/// rows (built programmatically; it would be unreadable checked in) is a
+/// `parse` error naming the per-request limit.
+#[test]
+fn hostile_append_fixtures_answer_structurally_and_connection_survives() {
+    let srv = engine(1, None);
+    probe(&srv); // the fixtures target "probe" (p = 10, q = 10)
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("hostile")
+        .join("append");
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .expect("hostile append fixture dir exists")
+        .map(|e| e.unwrap().path())
+        .collect();
+    paths.sort();
+    let mut seen = 0usize;
+    for path in paths {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !name.ends_with(".jsonl") {
+            continue;
+        }
+        seen += 1;
+        let expect_err = name.contains(".err.");
+        assert!(
+            expect_err || name.contains(".ok."),
+            "fixture {name} must declare .err. or .ok."
+        );
+        let mut input = std::fs::read(&path).unwrap();
+        input.extend_from_slice(br#"{"op":"stat","id":960}"#);
+        input.push(b'\n');
+        let lines = session(&srv, input);
+        assert_eq!(lines.len(), 2, "{name}: fixture line + stat both answered");
+        let ok = lines[0].get("ok").and_then(|v| v.as_bool());
+        if expect_err {
+            assert_eq!(
+                ok,
+                Some(false),
+                "{name}: hostile payload was accepted: {}",
+                lines[0].to_string()
+            );
+            let kind = lines[0]
+                .get("error")
+                .and_then(|e| e.get("kind"))
+                .and_then(|k| k.as_str());
+            assert!(kind.is_some(), "{name}: error must carry a typed kind");
+        } else {
+            assert_eq!(
+                ok,
+                Some(true),
+                "{name}: valid append was rejected: {}",
+                lines[0].to_string()
+            );
+        }
+        assert_eq!(
+            lines[1].get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "{name}: the connection survives the payload"
+        );
+    }
+    assert!(seen >= 8, "hostile append fixture set went missing ({seen} files)");
+
+    // One row over the inline cap: rejected at parse, connection intact.
+    let mut big = String::from(r#"{"op":"append","id":961,"dataset":"probe","rows":["#);
+    for i in 0..=MAX_APPEND_ROWS {
+        if i > 0 {
+            big.push(',');
+        }
+        big.push_str(r#"{"x":[0],"y":[0]}"#);
+    }
+    big.push_str("]}\n");
+    let mut input = big.into_bytes();
+    input.extend_from_slice(br#"{"op":"stat","id":962}"#);
+    input.push(b'\n');
+    let lines = session(&srv, input);
+    assert_eq!(lines.len(), 2);
+    assert!(is_parse_err(&lines[0]), "{}", lines[0].to_string());
+    let msg = lines[0]
+        .get("error")
+        .and_then(|e| e.get("message"))
+        .and_then(|m| m.as_str())
+        .unwrap_or("");
+    assert!(
+        msg.contains("per-request limit"),
+        "over-cap error names the limit: {msg}"
+    );
+    assert_eq!(lines[1].get("ok").and_then(|v| v.as_bool()), Some(true));
+    probe(&srv);
+    srv.join();
+}
+
+/// Concurrent append vs refit vs cancel: an appender streaming valid rows
+/// (every fourth deliberately shape-hostile), a refitter folding the
+/// sliding window, and a cancel storm against the refit id — all under the
+/// budget monitor. Afterwards: no reserved bytes leaked, a final refit
+/// shows the 90-sample window cap held, and the engine still serves.
+#[test]
+fn concurrent_append_refit_cancel_holds_window_and_budget() {
+    let limit = 256 << 20;
+    let srv = engine(2, Some(limit));
+    load_slow(&srv);
+    // Seed the registry's cached model so refits have a warm-start source.
+    let seed = srv.request(req(
+        r#"{"op":"fit","id":891,"dataset":"slow","solver":"alt","lambda":0.5,"max_iter":60}"#,
+    ));
+    assert!(seed.is_ok(), "{:?}", seed.outcome);
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let monitor = scope.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                let live = srv.budget().live();
+                let reserved = srv.reserved_bytes();
+                assert!(
+                    live + reserved <= limit,
+                    "budget invariant violated: live {live} + reserved {reserved} > limit {limit}"
+                );
+                std::thread::yield_now();
+            }
+        });
+
+        let appender = scope.spawn(|| {
+            for round in 0..12u32 {
+                // Every fourth row is shape-hostile (5 of 24 x-values).
+                let width = if round % 4 == 3 { 5 } else { 24 };
+                let xs = vec!["0.25"; width].join(",");
+                let ys = vec!["-0.5"; 24].join(",");
+                let resp = srv.request(req(&format!(
+                    r#"{{"op":"append","id":20,"dataset":"slow","rows":[{{"x":[{xs}],"y":[{ys}]}}]}}"#
+                )));
+                if width == 24 {
+                    assert!(resp.is_ok(), "valid append must land: {:?}", resp.outcome);
+                } else {
+                    assert_eq!(
+                        resp.err_kind(),
+                        Some(ErrKind::Parse),
+                        "shape-hostile append must be a typed parse error: {:?}",
+                        resp.outcome
+                    );
+                }
+            }
+        });
+
+        let refitter = scope.spawn(|| {
+            for _ in 0..8 {
+                let resp = srv.request(req(
+                    r#"{"op":"refit","id":21,"dataset":"slow","solver":"alt","lambda":0.5,"max_iter":120,"window":90}"#,
+                ));
+                assert!(
+                    resp.is_ok() || resp.err_kind() == Some(ErrKind::Cancelled),
+                    "refit terminal must be ok or cancelled: {:?}",
+                    resp.outcome
+                );
+            }
+        });
+
+        let canceller = scope.spawn(|| {
+            for _ in 0..40 {
+                let resp = srv.request(req(r#"{"op":"cancel","id":22,"job":21}"#));
+                assert!(
+                    resp.is_ok() || resp.err_kind() == Some(ErrKind::NotFound),
+                    "cancel must answer structurally: {:?}",
+                    resp.outcome
+                );
+                std::thread::yield_now();
+            }
+        });
+
+        appender.join().unwrap();
+        refitter.join().unwrap();
+        canceller.join().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        monitor.join().unwrap();
+    });
+
+    srv.drain();
+    assert_eq!(srv.reserved_bytes(), 0, "append/refit/cancel leaked a reservation");
+    // A quiescent refit folds any rows the storm left buffered; the window
+    // cap must have held through every interleaving.
+    let last = srv.request(req(
+        r#"{"op":"refit","id":23,"dataset":"slow","solver":"alt","lambda":0.5,"max_iter":120,"window":90}"#,
+    ));
+    assert!(last.is_ok(), "{:?}", last.outcome);
+    let rres = last.result().unwrap();
+    assert_eq!(
+        rres.get("n").and_then(|v| v.as_f64()),
+        Some(90.0),
+        "window occupancy stayed at the cap"
+    );
     probe(&srv);
     srv.join();
 }

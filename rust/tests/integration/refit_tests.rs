@@ -1,0 +1,191 @@
+//! Streaming re-fit acceptance: after the sample window slides, a warm
+//! refit on incrementally corrected statistics reaches the cold-fit
+//! optimum on the same window.
+//!
+//! 1. **Dense equivalence** — carry the context across an append+evict
+//!    slide, rank-k-correct the Gram blocks, re-solve seeded from the old
+//!    model: 1e-6 objective agreement with a from-scratch cold fit, zero
+//!    statistic recomputation, and no more iterations than the cold fit;
+//! 2. **Tiled equivalence** — the same property with `StatMode::Tiled`
+//!    resident tiles corrected in place;
+//! 3. **Drift guard** — with `stat_rebuild_every` set, enough downdates
+//!    force a full statistics rebuild, and the solve stays correct through
+//!    the guard path.
+//!
+//! The 1e-10 statistics-exactness property tests live next to the code
+//! they pin (`solvers::context` for dense, `cggm::tiles` for tiles); this
+//! module is the end-to-end objective-level acceptance.
+
+use cggm::cggm::{Dataset, SampleBlock, WindowDelta};
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::linalg::dense::Mat;
+use cggm::solvers::{solve_in_context, SolveOptions, SolverContext, SolverKind, StatMode};
+use cggm::util::rng::Rng;
+
+fn refit_opts(lam: f64) -> SolveOptions {
+    SolveOptions {
+        lam_l: lam,
+        lam_t: lam,
+        max_iter: 120,
+        tol: 0.00001,
+        ..Default::default()
+    }
+}
+
+/// Slide the window: append `ka` random samples, evict the `kr` oldest,
+/// returning the delta the incremental correction needs.
+fn slide(data: &mut Dataset, rng: &mut Rng, ka: usize, kr: usize) -> WindowDelta {
+    let (p, q) = (data.p(), data.q());
+    let mut delta = WindowDelta::new(data.n());
+    if ka > 0 {
+        let xa = Mat::from_fn(p, ka, |_, _| rng.normal());
+        let ya = Mat::from_fn(q, ka, |_, _| rng.normal());
+        data.append_samples(&xa, &ya);
+        delta.record_append(SampleBlock::new(xa, ya));
+    }
+    if kr > 0 {
+        delta.record_evict(data.evict_oldest(kr));
+    }
+    delta
+}
+
+fn assert_close(warm: f64, cold: f64, what: &str) {
+    assert!(
+        (warm - cold).abs() <= 1e-6 * cold.abs().max(1.0),
+        "{what}: warm refit {warm} vs cold fit {cold}"
+    );
+}
+
+/// Acceptance (dense): refit-after-append matches a cold fit on the same
+/// window at 1e-6, with zero from-scratch statistic work and no more
+/// iterations than the cold start needed.
+#[test]
+fn warm_refit_after_window_slide_matches_cold_fit_dense() {
+    let prob = datagen::chain::generate(14, 14, 90, 31);
+    let eng = NativeGemm::new(1);
+    let opts = refit_opts(0.3);
+    let mut data = prob.data.clone();
+    let ctx = SolverContext::new(&data, &opts, &eng);
+    let first = solve_in_context(SolverKind::AltNewtonCd, &ctx, &opts, None).unwrap();
+    assert!(first.trace.converged);
+    let computes = ctx.stat_computes();
+    assert!(computes > 0, "the first fit materialized statistics");
+    let carry = ctx.into_carry();
+
+    // Fixed-size window: 6 new samples in, the 6 oldest out.
+    let mut rng = Rng::new(77);
+    let delta = slide(&mut data, &mut rng, 6, 6);
+    let mut ctx = SolverContext::with_carry(&data, &opts, &eng, carry);
+    ctx.update_stats(&delta).unwrap();
+    assert_eq!(
+        ctx.stat_computes(),
+        computes,
+        "incremental correction must not rebuild statistics from scratch"
+    );
+    assert!(ctx.stat_updates() > 0, "dense blocks corrected in place");
+
+    let warm =
+        solve_in_context(SolverKind::AltNewtonCd, &ctx, &opts, Some(&first.model)).unwrap();
+    assert!(warm.trace.warm_started, "refit is seeded from the old model");
+    assert!(
+        warm.trace.stat_updates > 0,
+        "the trace shows the solve ran on incrementally maintained statistics"
+    );
+    assert_eq!(ctx.stat_computes(), computes, "the warm solve recomputed nothing");
+
+    // Cold reference on the identical slid window.
+    let fresh = SolverContext::new(&data, &opts, &eng);
+    let cold = solve_in_context(SolverKind::AltNewtonCd, &fresh, &opts, None).unwrap();
+    assert!(!cold.trace.warm_started);
+    assert_eq!(cold.trace.stat_updates, 0);
+    assert_close(
+        warm.trace.final_f().unwrap(),
+        cold.trace.final_f().unwrap(),
+        "dense",
+    );
+    assert!(
+        warm.trace.records.len() <= cold.trace.records.len(),
+        "warm refit took more iterations than the cold fit ({} vs {})",
+        warm.trace.records.len(),
+        cold.trace.records.len()
+    );
+}
+
+/// Acceptance (tiled): the same equivalence with the block solver's
+/// resident tiles corrected in place across the slide.
+#[test]
+fn warm_refit_after_window_slide_matches_cold_fit_tiled() {
+    let prob = datagen::chain::generate(24, 10, 100, 37);
+    let eng = NativeGemm::new(1);
+    let mut opts = refit_opts(0.2);
+    opts.stat_mode = StatMode::Tiled(7); // deliberately awkward: 7 ∤ 24
+    let mut data = prob.data.clone();
+    let ctx = SolverContext::new(&data, &opts, &eng);
+    let first = solve_in_context(SolverKind::AltNewtonBcd, &ctx, &opts, None).unwrap();
+    assert!(first.trace.converged);
+    assert!(first.trace.tiles_computed > 0, "the solve ran through the tile store");
+    let carry = ctx.into_carry();
+
+    let mut rng = Rng::new(78);
+    let delta = slide(&mut data, &mut rng, 5, 5);
+    let mut ctx = SolverContext::with_carry(&data, &opts, &eng, carry);
+    ctx.update_stats(&delta).unwrap();
+    assert!(ctx.stat_updates() > 0, "resident tiles corrected in place");
+
+    let warm =
+        solve_in_context(SolverKind::AltNewtonBcd, &ctx, &opts, Some(&first.model)).unwrap();
+    assert!(warm.trace.warm_started);
+
+    let fresh = SolverContext::new(&data, &opts, &eng);
+    let cold = solve_in_context(SolverKind::AltNewtonBcd, &fresh, &opts, None).unwrap();
+    assert_close(
+        warm.trace.final_f().unwrap(),
+        cold.trace.final_f().unwrap(),
+        "tiled",
+    );
+}
+
+/// The downdate drift guard end to end: with `stat_rebuild_every: 2`, the
+/// second evicting update invalidates the carried statistics (forcing a
+/// from-scratch rebuild at next use), the counter resets, and the solve on
+/// either side of the guard still matches a cold fit.
+#[test]
+fn downdate_drift_guard_forces_rebuild_and_stays_correct() {
+    let prob = datagen::chain::generate(10, 10, 60, 41);
+    let eng = NativeGemm::new(1);
+    let mut opts = refit_opts(0.4);
+    opts.stat_rebuild_every = 2;
+    let mut data = prob.data.clone();
+    let mut rng = Rng::new(5);
+    let ctx = SolverContext::new(&data, &opts, &eng);
+    ctx.syy().unwrap();
+    ctx.sxx().unwrap();
+    ctx.sxy().unwrap();
+    let mut carry = ctx.into_carry();
+    for round in 1..=2usize {
+        let delta = slide(&mut data, &mut rng, 3, 3);
+        let mut ctx = SolverContext::with_carry(&data, &opts, &eng, carry);
+        ctx.update_stats(&delta).unwrap();
+        if round < 2 {
+            assert_eq!(ctx.downdates(), round, "downdates accumulate under the guard");
+            assert!(ctx.cached_stat_bytes() > 0, "stats still cached before the trip");
+        } else {
+            assert_eq!(ctx.downdates(), 0, "the guard tripped and reset its counter");
+            assert_eq!(
+                ctx.cached_stat_bytes(),
+                0,
+                "tripping the guard drops the drifted statistics"
+            );
+        }
+        let res = solve_in_context(SolverKind::AltNewtonCd, &ctx, &opts, None).unwrap();
+        let fresh = SolverContext::new(&data, &opts, &eng);
+        let cold = solve_in_context(SolverKind::AltNewtonCd, &fresh, &opts, None).unwrap();
+        assert_close(
+            res.trace.final_f().unwrap(),
+            cold.trace.final_f().unwrap(),
+            &format!("guard round {round}"),
+        );
+        carry = ctx.into_carry();
+    }
+}

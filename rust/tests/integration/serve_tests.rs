@@ -347,3 +347,91 @@ fn shutdown_drains_and_rejects_new_work() {
     assert_eq!(ids, vec![1, 2], "queued jobs drain through shutdown");
     srv.join();
 }
+
+/// Acceptance (serve): `append` buffers rows against the window, `refit`
+/// folds them in with incremental statistic corrections and a warm start,
+/// and the result matches a cold fit on the identical slid window at 1e-6
+/// in no more iterations.
+#[test]
+fn append_then_refit_slides_window_warm_with_incremental_stats() {
+    let srv = engine(1, None);
+    let load = srv.request(req(
+        r#"{"op":"load","id":1,"name":"d","workload":"chain","p":10,"q":10,"n":60,"seed":9}"#,
+    ));
+    assert!(load.is_ok(), "{:?}", load.outcome);
+    let fit = srv.request(req(
+        r#"{"op":"fit","id":2,"dataset":"d","solver":"alt","lambda":0.4,"tol":0.00001,"max_iter":120}"#,
+    ));
+    assert!(fit.is_ok(), "{:?}", fit.outcome);
+
+    // Buffer 4 inline samples; the window itself is untouched until refit.
+    let row: Vec<String> = (0..4)
+        .map(|j| {
+            let xs: Vec<String> = (0..10).map(|i| format!("{}", 0.1 * (i + j) as f64)).collect();
+            let ys: Vec<String> = (0..10).map(|i| format!("{}", 0.05 * (i + 2 * j) as f64)).collect();
+            format!(r#"{{"x":[{}],"y":[{}]}}"#, xs.join(","), ys.join(","))
+        })
+        .collect();
+    let append = srv.request(req(&format!(
+        r#"{{"op":"append","id":3,"dataset":"d","rows":[{}]}}"#,
+        row.join(",")
+    )));
+    assert!(append.is_ok(), "{:?}", append.outcome);
+    let ares = append.result().unwrap();
+    assert_eq!(num(ares, "accepted"), 4.0);
+    assert_eq!(num(ares, "pending"), 4.0);
+    assert_eq!(num(ares, "n"), 60.0, "append buffers; it does not slide the window");
+
+    // Refit with a fixed 60-sample window: 4 in, the 4 oldest out.
+    let refit = srv.request(req(
+        r#"{"op":"refit","id":4,"dataset":"d","solver":"alt","lambda":0.4,"tol":0.00001,"max_iter":120,"window":60}"#,
+    ));
+    assert!(refit.is_ok(), "{:?}", refit.outcome);
+    let rres = refit.result().unwrap();
+    assert!(flag(rres, "registry_hit"));
+    assert!(flag(rres, "warm_started"), "refit seeds from the cached model");
+    assert!(flag(rres, "warm_model_reused"));
+    assert_eq!(num(rres, "appended"), 4.0);
+    assert_eq!(num(rres, "evicted"), 4.0);
+    assert_eq!(num(rres, "n"), 60.0, "window occupancy is capped");
+    assert_eq!(
+        num(rres, "stat_computes"),
+        0.0,
+        "refit corrects statistics in place instead of rebuilding"
+    );
+    assert!(num(rres, "stat_updates") >= 3.0, "all materialized blocks corrected");
+    assert!(flag(rres.get("trace").unwrap(), "warm_started"));
+
+    // Cold reference on the now-slid window: same optimum, no fewer iters.
+    let cold = srv.request(req(
+        r#"{"op":"fit","id":5,"dataset":"d","solver":"alt","lambda":0.4,"tol":0.00001,"max_iter":120,"warm":false}"#,
+    ));
+    assert!(cold.is_ok(), "{:?}", cold.outcome);
+    let cres = cold.result().unwrap();
+    assert!(!flag(cres, "warm_started"));
+    let (fw, fc) = (
+        num(rres.get("summary").unwrap(), "f"),
+        num(cres.get("summary").unwrap(), "f"),
+    );
+    assert!(
+        (fw - fc).abs() <= 1e-6 * fc.abs().max(1.0),
+        "refit-after-append diverged from the cold fit: {fw} vs {fc}"
+    );
+    let (iw, ic) = (
+        num(rres.get("summary").unwrap(), "iters"),
+        num(cres.get("summary").unwrap(), "iters"),
+    );
+    assert!(iw <= ic, "warm refit took more iterations ({iw}) than cold ({ic})");
+
+    // Observability: window counters surface in `stat`.
+    let stat = srv.request(req(r#"{"op":"stat","id":6}"#));
+    let sres = stat.result().unwrap();
+    let ds = &sres.get("registry").unwrap().get("datasets").unwrap().as_arr().unwrap()[0];
+    assert_eq!(num(ds, "n"), 60.0);
+    assert_eq!(num(ds, "appended"), 4.0);
+    assert_eq!(num(ds, "evicted"), 4.0);
+    assert_eq!(num(ds, "pending"), 0.0, "refit drained the buffer");
+    assert!(num(ds, "stat_updates") >= 3.0);
+    assert!(num(ds, "stat_bytes") > 0.0);
+    srv.join();
+}
