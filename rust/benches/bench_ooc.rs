@@ -1,0 +1,136 @@
+//! Out-of-core storage bench: what solving against disk-backed panels
+//! costs versus the fully resident dataset, and how the panel cache
+//! degrades as its budget shrinks below the working set.
+//!
+//! One chain problem is written to a sharded `CGGMPAN1` panel file and
+//! then fit three ways on identical data: fully resident, disk-backed
+//! with a cache generous enough to hold every panel, and disk-backed with
+//! a cache far below the dense footprint (forcing LRU eviction and
+//! re-reads). All three must reach the same optimum at 1e-6 — out-of-core
+//! is a memory trade, never an accuracy trade — so the interesting
+//! numbers are the timings and the panel counters (reads, hits,
+//! evictions) each cache regime produces.
+//!
+//! Besides the human-readable report it writes `BENCH_OOC.json` — the
+//! machine-readable trajectory future PRs regress against (docs/PERF.md).
+
+use cggm::bench::write_bench_json;
+use cggm::cggm::Dataset;
+use cggm::coordinator;
+use cggm::datagen;
+use cggm::gemm::native::NativeGemm;
+use cggm::solvers::{solve_in_context, SolveOptions, SolverContext, SolverKind};
+use cggm::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let eng = NativeGemm::new(1);
+    let (p, q, n) = (80usize, 80usize, 1000usize);
+    let prob = datagen::chain::generate(p, q, n, 29);
+    let dense_bytes = 8 * n * (p + q);
+    let opts = SolveOptions {
+        lam_l: 0.3,
+        lam_t: 0.3,
+        max_iter: 120,
+        tol: 0.00001,
+        ..Default::default()
+    };
+
+    // Stream the dataset out as sharded panels once; every disk leg reads
+    // the same file.
+    let path = std::env::temp_dir().join(format!("cggm_bench_ooc_{}.pan", std::process::id()));
+    let t = Instant::now();
+    coordinator::save_dataset_sharded(&prob.data, &path, 64).unwrap();
+    let write_seconds = t.elapsed().as_secs_f64();
+    let file_bytes = std::fs::metadata(&path).unwrap().len();
+    println!(
+        "# chain{p} out-of-core: {n} samples, dense {:.2} MB, panel file {:.2} MB written in {write_seconds:.3}s",
+        dense_bytes as f64 / (1 << 20) as f64,
+        file_bytes as f64 / (1 << 20) as f64,
+    );
+
+    // Resident baseline.
+    let ctx = SolverContext::new(&prob.data, &opts, &eng);
+    let t = Instant::now();
+    let resident = solve_in_context(SolverKind::AltNewtonCd, &ctx, &opts, None).unwrap();
+    let resident_seconds = t.elapsed().as_secs_f64();
+    assert!(resident.trace.converged);
+    let f_resident = resident.trace.final_f().unwrap();
+    println!(
+        "#   resident      {:>3} iters {resident_seconds:.3}s (dataset {:.2} MB in core)",
+        resident.trace.records.len(),
+        dense_bytes as f64 / (1 << 20) as f64,
+    );
+
+    // Disk legs: each opens its own store so the counters are per-leg.
+    let mut legs: Vec<Json> = Vec::new();
+    let mut cold_evictions = 0u64;
+    for (name, panel_rows, cache) in [
+        ("disk_warm_cache", 64usize, 16usize << 20),
+        // 8·16·1000 = 128 KB per panel: the 256 KB cache holds two of the
+        // ten panels a sweep touches, so eviction churn is guaranteed
+        // while single panels still admit (smaller and reads go transient,
+        // which never counts as an eviction).
+        ("disk_cold_cache", 16, 256 << 10),
+    ] {
+        let data = Dataset::open_disk(&path, panel_rows, cache).unwrap();
+        let ctx = SolverContext::new(&data, &opts, &eng);
+        let t = Instant::now();
+        let got = solve_in_context(SolverKind::AltNewtonCd, &ctx, &opts, None).unwrap();
+        let seconds = t.elapsed().as_secs_f64();
+        let f = got.trace.final_f().unwrap();
+        assert!(
+            (f - f_resident).abs() <= 1e-6 * f_resident.abs().max(1.0),
+            "{name}: disk-backed solve diverged from resident: {f} vs {f_resident}"
+        );
+        let stats = data.panel_stats().unwrap();
+        assert!(stats.reads > 0, "{name}: solve never touched the panel layer");
+        cold_evictions = stats.evictions;
+        println!(
+            "#   {name:<14}{:>3} iters {seconds:.3}s | cache {:>6.2} MB: {} reads, {} hits, {} misses, {} evictions",
+            got.trace.records.len(),
+            cache as f64 / (1 << 20) as f64,
+            stats.reads,
+            stats.hits,
+            stats.misses,
+            stats.evictions,
+        );
+        legs.push(Json::obj(vec![
+            ("leg", Json::str(name)),
+            ("panel_rows", Json::num(panel_rows as f64)),
+            ("cache_bytes", Json::num(cache as f64)),
+            ("seconds", Json::num(seconds)),
+            ("iters", Json::num(got.trace.records.len() as f64)),
+            ("panel_reads", Json::num(stats.reads as f64)),
+            ("panel_hits", Json::num(stats.hits as f64)),
+            ("panel_misses", Json::num(stats.misses as f64)),
+            ("panel_evictions", Json::num(stats.evictions as f64)),
+            ("panel_transient", Json::num(stats.transient as f64)),
+            ("abs_delta_f", Json::num((f - f_resident).abs())),
+        ]));
+    }
+    // The tight cache must actually have been tight, or the leg proves
+    // nothing about degradation.
+    assert!(cold_evictions > 0, "cold-cache leg never evicted a panel");
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cggm-bench-ooc/v1")),
+        (
+            "problem",
+            Json::obj(vec![
+                ("workload", Json::str("chain")),
+                ("p", Json::num(p as f64)),
+                ("q", Json::num(q as f64)),
+                ("n", Json::num(n as f64)),
+            ]),
+        ),
+        ("dense_bytes", Json::num(dense_bytes as f64)),
+        ("file_bytes", Json::num(file_bytes as f64)),
+        ("write_seconds", Json::num(write_seconds)),
+        ("resident_seconds", Json::num(resident_seconds)),
+        ("resident_iters", Json::num(resident.trace.records.len() as f64)),
+        ("legs", Json::arr(legs.into_iter())),
+    ]);
+    write_bench_json("OOC", &doc);
+    let _ = std::fs::remove_file(&path);
+}

@@ -54,9 +54,9 @@ fn main() {
         let mut delta = WindowDelta::new(data.n());
         let xa = Mat::from_fn(p, k, |_, _| rng.normal());
         let ya = Mat::from_fn(q, k, |_, _| rng.normal());
-        data.append_samples(&xa, &ya);
+        data.append_samples(&xa, &ya).unwrap();
         delta.record_append(SampleBlock::new(xa, ya));
-        delta.record_evict(data.evict_oldest(k));
+        delta.record_evict(data.evict_oldest(k).unwrap());
 
         // Warm leg: carry statistics from a context over the old window,
         // rank-k correct them, re-solve seeded from the live model.

@@ -1,0 +1,42 @@
+//! The `CGGMPAN1` panel-file header/shard-table parser on arbitrary bytes:
+//! `read_meta` must never panic, never allocate proportionally to claimed
+//! (unvalidated) dimensions, and every accepted shard table must satisfy
+//! the v1 invariants the disk-backed dataset layer relies on — full-row
+//! shards, contiguous per-space column ranges, balanced X/Y sample counts,
+//! and payloads that lie entirely inside the file.
+
+#![no_main]
+
+use cggm::storage::{read_meta, Space, COL_CAP, DIM_CAP};
+use libfuzzer_sys::fuzz_target;
+use std::io::Cursor;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(meta) = read_meta(&mut Cursor::new(data)) else {
+        return;
+    };
+    // Anything accepted must be safe to build a shard table over.
+    assert!(meta.p >= 1 && meta.p as u64 <= DIM_CAP);
+    assert!(meta.q >= 1 && meta.q as u64 <= DIM_CAP);
+    assert!((meta.n as u64) <= COL_CAP);
+    assert!(meta.data_end as usize <= data.len());
+    let (mut n_x, mut n_y) = (0usize, 0usize);
+    for s in &meta.shards {
+        assert!(s.col_start < s.col_end, "empty shard admitted");
+        let expect = match s.space {
+            Space::X => &mut n_x,
+            Space::Y => &mut n_y,
+        };
+        assert_eq!(s.col_start, *expect, "non-contiguous shard admitted");
+        *expect = s.col_end;
+        let rows = match s.space {
+            Space::X => meta.p,
+            Space::Y => meta.q,
+        } as u64;
+        let payload = rows * (s.col_end - s.col_start) as u64 * 8;
+        let end = s.offset.checked_add(payload).expect("payload overflow admitted");
+        assert!(end <= data.len() as u64, "payload past end of file admitted");
+    }
+    assert_eq!(n_x, meta.n, "X sample count disagrees with meta.n");
+    assert_eq!(n_y, meta.n, "Y sample count disagrees with meta.n");
+});

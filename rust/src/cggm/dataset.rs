@@ -6,18 +6,48 @@
 //! n is small relative to p, q in all of the paper's workloads, which is why
 //! rows of `xt` work as an implicit representation of the huge `S_xx`
 //! (§4.2: "we store only one row of S_xx at a time").
+//!
+//! A [`Dataset`] is backend-polymorphic: **resident** (the two dense
+//! feature-major buffers above) or **disk-backed** (a sharded
+//! [`crate::storage`] panel file read through a budget-tracked LRU panel
+//! cache). Consumers never see the difference — every access goes through
+//! row/panel accessors and the streaming GEMM helpers below, which a
+//! resident dataset forwards straight to the engine and a disk dataset
+//! satisfies panel-by-panel. Because the panels split only the *feature*
+//! rows (the contraction dimension n is never split), the row-Gram products
+//! are computed by the same engine kernels over the same contiguous sample
+//! ranges either way.
+//!
+//! Disk-backed datasets treat I/O errors *after* a successful open as fatal
+//! (panic): the file is assumed stable for the lifetime of the process, the
+//! same contract the tile spill file has. Operations that change the sample
+//! window (`append_samples`, `evict_oldest`) do return `io::Result`, since
+//! they are the natural places for a caller to observe a full disk or a
+//! read-only file.
+
+use std::io;
+use std::path::Path;
 
 use crate::gemm::GemmEngine;
-use crate::linalg::dense::{dot, Mat};
+use crate::linalg::dense::{axpy, dot, Mat};
 use crate::linalg::sparse::SpRowMat;
+use crate::storage::{DiskSource, Panel, PanelStats, Space};
+use crate::util::membudget::MemBudget;
+
+const PANEL_IO: &str = "panel file read failed mid-solve (storage contract: file stable after open)";
 
 /// A regression dataset for CGGM estimation.
 #[derive(Clone, Debug)]
 pub struct Dataset {
-    /// Inputs, feature-major: p × n.
-    pub xt: Mat,
-    /// Outputs, feature-major: q × n.
-    pub yt: Mat,
+    backing: Backing,
+}
+
+#[derive(Clone, Debug)]
+enum Backing {
+    /// Fully resident feature-major buffers: `xt` p×n, `yt` q×n.
+    Resident { xt: Mat, yt: Mat },
+    /// Sharded panel file behind the budget-tracked panel cache.
+    Disk(DiskSource),
 }
 
 /// A contiguous feature-major block of k samples — the unit of the sliding
@@ -132,23 +162,117 @@ impl WindowDelta {
     }
 }
 
+/// `beta`-scale `out` in place before a panel-accumulation loop.
+fn scale_out(out: &mut Mat, beta: f64) {
+    if beta == 0.0 {
+        out.fill(0.0);
+    } else if beta != 1.0 {
+        out.scale(beta);
+    }
+}
+
+/// Run `f` over every cached panel of `space` in row order.
+fn for_panels(src: &DiskSource, space: Space, mut f: impl FnMut(&Panel)) {
+    for idx in 0..src.n_panels(space) {
+        let panel = src.panel(space, idx).expect(PANEL_IO);
+        f(&panel);
+    }
+}
+
 impl Dataset {
+    /// A fully resident dataset from feature-major buffers.
     pub fn new(xt: Mat, yt: Mat) -> Dataset {
         assert_eq!(xt.cols(), yt.cols(), "sample count mismatch");
-        Dataset { xt, yt }
+        Dataset {
+            backing: Backing::Resident { xt, yt },
+        }
+    }
+
+    /// Open a sharded panel file ([`crate::storage`], magic `CGGMPAN1`) as a
+    /// disk-backed dataset. `panel_rows` is the cached-panel granularity in
+    /// feature rows; `cache_bytes` caps the resident panel set. Clones share
+    /// the backing store: window mutations are visible through every clone.
+    pub fn open_disk(path: &Path, panel_rows: usize, cache_bytes: usize) -> io::Result<Dataset> {
+        Ok(Dataset {
+            backing: Backing::Disk(DiskSource::open(path, panel_rows, cache_bytes)?),
+        })
+    }
+
+    /// The resident p×n X buffer. Panics for disk-backed datasets — callers
+    /// on this path (legacy dense save, datagen post-processing, tests) are
+    /// resident-only by construction.
+    pub fn xt(&self) -> &Mat {
+        match &self.backing {
+            Backing::Resident { xt, .. } => xt,
+            Backing::Disk(_) => panic!("resident-only access (xt) on disk-backed dataset"),
+        }
+    }
+
+    /// The resident q×n Y buffer (panics for disk-backed datasets).
+    pub fn yt(&self) -> &Mat {
+        match &self.backing {
+            Backing::Resident { yt, .. } => yt,
+            Backing::Disk(_) => panic!("resident-only access (yt) on disk-backed dataset"),
+        }
+    }
+
+    pub fn is_disk(&self) -> bool {
+        matches!(self.backing, Backing::Disk(_))
+    }
+
+    /// `"mem"` or `"disk"` — the serve `stat` storage-mode label.
+    pub fn storage_name(&self) -> &'static str {
+        match &self.backing {
+            Backing::Resident { .. } => "mem",
+            Backing::Disk(_) => "disk",
+        }
+    }
+
+    /// Panel-cache traffic counters (disk-backed only).
+    pub fn panel_stats(&self) -> Option<PanelStats> {
+        match &self.backing {
+            Backing::Resident { .. } => None,
+            Backing::Disk(s) => Some(s.stats()),
+        }
+    }
+
+    /// Configured panel-cache capacity (disk-backed only) — what admission
+    /// control prices instead of dense data bytes.
+    pub fn panel_cache_bytes(&self) -> Option<usize> {
+        match &self.backing {
+            Backing::Resident { .. } => None,
+            Backing::Disk(s) => Some(s.cache_bytes()),
+        }
+    }
+
+    /// Bind the budget that resident panels register against (no-op for
+    /// resident datasets and for a rebind to the already-bound budget).
+    pub fn bind_panel_budget(&self, budget: &MemBudget) {
+        if let Backing::Disk(s) = &self.backing {
+            s.bind_budget(budget);
+        }
     }
 
     #[inline]
     pub fn n(&self) -> usize {
-        self.xt.cols()
+        match &self.backing {
+            Backing::Resident { xt, .. } => xt.cols(),
+            Backing::Disk(s) => s.n(),
+        }
     }
     #[inline]
     pub fn p(&self) -> usize {
-        self.xt.rows()
+        match &self.backing {
+            Backing::Resident { xt, .. } => xt.rows(),
+            Backing::Disk(s) => s.p(),
+        }
     }
     #[inline]
     pub fn q(&self) -> usize {
-        self.yt.rows()
+        match &self.backing {
+            Backing::Resident { yt, .. } => yt.rows(),
+            Backing::Disk(s) => s.q(),
+        }
     }
 
     #[inline]
@@ -156,22 +280,67 @@ impl Dataset {
         1.0 / self.n() as f64
     }
 
+    /// Borrow feature row `i` of X for the duration of `f` — the
+    /// out-of-core-safe form of `xt.row(i)`. Disk-backed datasets pin the
+    /// covering panel in the cache for the call.
+    pub fn with_x_row<R>(&self, i: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+        match &self.backing {
+            Backing::Resident { xt, .. } => f(xt.row(i)),
+            Backing::Disk(s) => {
+                let (panel, li) = s.row_panel(Space::X, i).expect(PANEL_IO);
+                f(panel.mat.row(li))
+            }
+        }
+    }
+
+    /// Borrow feature row `j` of Y for the duration of `f`.
+    pub fn with_y_row<R>(&self, j: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+        match &self.backing {
+            Backing::Resident { yt, .. } => f(yt.row(j)),
+            Backing::Disk(s) => {
+                let (panel, lj) = s.row_panel(Space::Y, j).expect(PANEL_IO);
+                f(panel.mat.row(lj))
+            }
+        }
+    }
+
     /// (S_yy)_ij on demand — O(n).
     #[inline]
     pub fn syy(&self, i: usize, j: usize) -> f64 {
-        dot(self.yt.row(i), self.yt.row(j)) * self.inv_n()
+        match &self.backing {
+            Backing::Resident { yt, .. } => dot(yt.row(i), yt.row(j)) * self.inv_n(),
+            Backing::Disk(s) => {
+                let (pi, li) = s.row_panel(Space::Y, i).expect(PANEL_IO);
+                let (pj, lj) = s.row_panel(Space::Y, j).expect(PANEL_IO);
+                dot(pi.mat.row(li), pj.mat.row(lj)) * self.inv_n()
+            }
+        }
     }
 
     /// (S_xy)_ij on demand — O(n).
     #[inline]
     pub fn sxy(&self, i: usize, j: usize) -> f64 {
-        dot(self.xt.row(i), self.yt.row(j)) * self.inv_n()
+        match &self.backing {
+            Backing::Resident { xt, yt } => dot(xt.row(i), yt.row(j)) * self.inv_n(),
+            Backing::Disk(s) => {
+                let (pi, li) = s.row_panel(Space::X, i).expect(PANEL_IO);
+                let (pj, lj) = s.row_panel(Space::Y, j).expect(PANEL_IO);
+                dot(pi.mat.row(li), pj.mat.row(lj)) * self.inv_n()
+            }
+        }
     }
 
     /// (S_xx)_ij on demand — O(n).
     #[inline]
     pub fn sxx(&self, i: usize, j: usize) -> f64 {
-        dot(self.xt.row(i), self.xt.row(j)) * self.inv_n()
+        match &self.backing {
+            Backing::Resident { xt, .. } => dot(xt.row(i), xt.row(j)) * self.inv_n(),
+            Backing::Disk(s) => {
+                let (pi, li) = s.row_panel(Space::X, i).expect(PANEL_IO);
+                let (pj, lj) = s.row_panel(Space::X, j).expect(PANEL_IO);
+                dot(pi.mat.row(li), pj.mat.row(lj)) * self.inv_n()
+            }
+        }
     }
 
     /// Row i of S_xx restricted to `cols`, appended into `out`
@@ -180,46 +349,285 @@ impl Dataset {
     pub fn sxx_row_restricted(&self, i: usize, cols: &[usize], out: &mut Vec<f64>) {
         out.clear();
         out.reserve(cols.len());
-        let xi = self.xt.row(i);
         let inv_n = self.inv_n();
-        for &k in cols {
-            out.push(dot(xi, self.xt.row(k)) * inv_n);
+        match &self.backing {
+            Backing::Resident { xt, .. } => {
+                let xi = xt.row(i);
+                for &k in cols {
+                    out.push(dot(xi, xt.row(k)) * inv_n);
+                }
+            }
+            Backing::Disk(s) => {
+                // Pin row i's panel across the sweep; row k's panel comes
+                // from the cache (hot under the row-cluster access pattern).
+                let (pi, li) = s.row_panel(Space::X, i).expect(PANEL_IO);
+                let xi = pi.mat.row(li);
+                for &k in cols {
+                    let (pk, lk) = s.row_panel(Space::X, k).expect(PANEL_IO);
+                    out.push(dot(xi, pk.mat.row(lk)) * inv_n);
+                }
+            }
         }
+    }
+
+    /// Dense row-Gram between panels of two spaces: S = X_a·X_bᵀ/n blockwise.
+    fn gram_dense_disk(
+        src: &DiskSource,
+        engine: &dyn GemmEngine,
+        sa: Space,
+        sb: Space,
+        inv_n: f64,
+    ) -> Mat {
+        let mut s = Mat::zeros(src.dim(sa), src.dim(sb));
+        for ia in 0..src.n_panels(sa) {
+            let pa = src.panel(sa, ia).expect(PANEL_IO);
+            for ib in 0..src.n_panels(sb) {
+                let pb = src.panel(sb, ib).expect(PANEL_IO);
+                let mut tmp = Mat::zeros(pa.mat.rows(), pb.mat.rows());
+                engine.gemm_nt(inv_n, &pa.mat, &pb.mat, 0.0, &mut tmp);
+                for r in 0..tmp.rows() {
+                    s.row_mut(pa.row_start + r)[pb.row_start..pb.row_start + tmp.cols()]
+                        .copy_from_slice(tmp.row(r));
+                }
+            }
+        }
+        s
     }
 
     /// Dense S_yy (q×q) — non-block solvers only.
     pub fn syy_dense(&self, engine: &dyn GemmEngine) -> Mat {
-        let mut s = Mat::zeros(self.q(), self.q());
-        engine.gemm_nt(self.inv_n(), &self.yt, &self.yt, 0.0, &mut s);
+        let mut s = match &self.backing {
+            Backing::Resident { yt, .. } => {
+                let mut s = Mat::zeros(self.q(), self.q());
+                engine.gemm_nt(self.inv_n(), yt, yt, 0.0, &mut s);
+                s
+            }
+            Backing::Disk(src) => {
+                Self::gram_dense_disk(src, engine, Space::Y, Space::Y, self.inv_n())
+            }
+        };
         s.symmetrize();
         s
     }
 
     /// Dense S_xx (p×p) — small p only.
     pub fn sxx_dense(&self, engine: &dyn GemmEngine) -> Mat {
-        let mut s = Mat::zeros(self.p(), self.p());
-        engine.gemm_nt(self.inv_n(), &self.xt, &self.xt, 0.0, &mut s);
+        let mut s = match &self.backing {
+            Backing::Resident { xt, .. } => {
+                let mut s = Mat::zeros(self.p(), self.p());
+                engine.gemm_nt(self.inv_n(), xt, xt, 0.0, &mut s);
+                s
+            }
+            Backing::Disk(src) => {
+                Self::gram_dense_disk(src, engine, Space::X, Space::X, self.inv_n())
+            }
+        };
         s.symmetrize();
         s
     }
 
     /// Dense S_xy (p×q).
     pub fn sxy_dense(&self, engine: &dyn GemmEngine) -> Mat {
-        let mut s = Mat::zeros(self.p(), self.q());
-        engine.gemm_nt(self.inv_n(), &self.xt, &self.yt, 0.0, &mut s);
-        s
+        match &self.backing {
+            Backing::Resident { xt, yt } => {
+                let mut s = Mat::zeros(self.p(), self.q());
+                engine.gemm_nt(self.inv_n(), xt, yt, 0.0, &mut s);
+                s
+            }
+            Backing::Disk(src) => {
+                Self::gram_dense_disk(src, engine, Space::X, Space::Y, self.inv_n())
+            }
+        }
+    }
+
+    /// `out = alpha · X̃·Bᵀ + beta·out` where X̃ is the p×n feature-major X
+    /// and B is m×n: the Γ/S_xy-panel product every solver's Θ gradient
+    /// needs, streamed panel-by-panel when X lives on disk. Output feature
+    /// rows are partitioned by panel, so the engine's per-element contraction
+    /// over the unsplit sample dimension is identical to the resident call.
+    pub fn gemm_nt_x(
+        &self,
+        engine: &dyn GemmEngine,
+        alpha: f64,
+        b: &Mat,
+        beta: f64,
+        out: &mut Mat,
+    ) {
+        match &self.backing {
+            Backing::Resident { xt, .. } => engine.gemm_nt(alpha, xt, b, beta, out),
+            Backing::Disk(s) => {
+                scale_out(out, beta);
+                for_panels(s, Space::X, |panel| {
+                    let mut tmp = Mat::zeros(panel.mat.rows(), b.rows());
+                    engine.gemm_nt(alpha, &panel.mat, b, 0.0, &mut tmp);
+                    for r in 0..tmp.rows() {
+                        axpy(1.0, tmp.row(r), out.row_mut(panel.row_start + r));
+                    }
+                });
+            }
+        }
+    }
+
+    /// `out = alpha · Ỹ·Bᵀ + beta·out` (Ỹ q×n, B m×n) — the Y-side
+    /// counterpart of [`Self::gemm_nt_x`].
+    pub fn gemm_nt_y(
+        &self,
+        engine: &dyn GemmEngine,
+        alpha: f64,
+        b: &Mat,
+        beta: f64,
+        out: &mut Mat,
+    ) {
+        match &self.backing {
+            Backing::Resident { yt, .. } => engine.gemm_nt(alpha, yt, b, beta, out),
+            Backing::Disk(s) => {
+                scale_out(out, beta);
+                for_panels(s, Space::Y, |panel| {
+                    let mut tmp = Mat::zeros(panel.mat.rows(), b.rows());
+                    engine.gemm_nt(alpha, &panel.mat, b, 0.0, &mut tmp);
+                    for r in 0..tmp.rows() {
+                        axpy(1.0, tmp.row(r), out.row_mut(panel.row_start + r));
+                    }
+                });
+            }
+        }
+    }
+
+    /// `out = alpha · X̃·B + beta·out` (X̃ p×n, B n×m) — the BCD bucket
+    /// gradient's Γ panel.
+    pub fn gemm_x(&self, engine: &dyn GemmEngine, alpha: f64, b: &Mat, beta: f64, out: &mut Mat) {
+        match &self.backing {
+            Backing::Resident { xt, .. } => engine.gemm(alpha, xt, b, beta, out),
+            Backing::Disk(s) => {
+                scale_out(out, beta);
+                for_panels(s, Space::X, |panel| {
+                    let mut tmp = Mat::zeros(panel.mat.rows(), b.cols());
+                    engine.gemm(alpha, &panel.mat, b, 0.0, &mut tmp);
+                    for r in 0..tmp.rows() {
+                        axpy(1.0, tmp.row(r), out.row_mut(panel.row_start + r));
+                    }
+                });
+            }
+        }
+    }
+
+    /// `out = alpha · Aᵀ·X̃ + beta·out` (A p×m, X̃ p×n, out m×n) — the dense
+    /// proximal-gradient residual (XΘ)ᵀ. The contraction here runs over the
+    /// *split* feature dimension, so disk-backed results agree with resident
+    /// ones to rounding (not bitwise) — accumulation order differs.
+    pub fn gemm_tn_x(
+        &self,
+        engine: &dyn GemmEngine,
+        alpha: f64,
+        a: &Mat,
+        beta: f64,
+        out: &mut Mat,
+    ) {
+        match &self.backing {
+            Backing::Resident { xt, .. } => engine.gemm_tn(alpha, a, xt, beta, out),
+            Backing::Disk(s) => {
+                scale_out(out, beta);
+                for_panels(s, Space::X, |panel| {
+                    let a_sub =
+                        Mat::from_fn(panel.mat.rows(), a.cols(), |r, c| a[(panel.row_start + r, c)]);
+                    engine.gemm_tn(alpha, &a_sub, &panel.mat, 1.0, out);
+                });
+            }
+        }
+    }
+
+    /// Gather arbitrary feature rows of X into `out` (`rows.len() × n`).
+    pub fn x_rows_into(&self, rows: &[usize], out: &mut Mat) {
+        match &self.backing {
+            Backing::Resident { xt, .. } => xt.rows_into(rows, out),
+            Backing::Disk(s) => {
+                assert_eq!((out.rows(), out.cols()), (rows.len(), self.n()));
+                for (k, &i) in rows.iter().enumerate() {
+                    let (panel, li) = s.row_panel(Space::X, i).expect(PANEL_IO);
+                    out.row_mut(k).copy_from_slice(panel.mat.row(li));
+                }
+            }
+        }
+    }
+
+    /// Gather arbitrary feature rows of Y into `out` (`rows.len() × n`).
+    pub fn y_rows_into(&self, rows: &[usize], out: &mut Mat) {
+        match &self.backing {
+            Backing::Resident { yt, .. } => yt.rows_into(rows, out),
+            Backing::Disk(s) => {
+                assert_eq!((out.rows(), out.cols()), (rows.len(), self.n()));
+                for (k, &j) in rows.iter().enumerate() {
+                    let (panel, lj) = s.row_panel(Space::Y, j).expect(PANEL_IO);
+                    out.row_mut(k).copy_from_slice(panel.mat.row(lj));
+                }
+            }
+        }
+    }
+
+    /// Copy sample column `s` of X into `out` (`out.len() == p`).
+    pub fn x_col_into(&self, s: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.p());
+        match &self.backing {
+            Backing::Resident { xt, .. } => {
+                for i in 0..xt.rows() {
+                    out[i] = xt[(i, s)];
+                }
+            }
+            Backing::Disk(src) => {
+                for_panels(src, Space::X, |panel| {
+                    for r in 0..panel.mat.rows() {
+                        out[panel.row_start + r] = panel.mat[(r, s)];
+                    }
+                });
+            }
+        }
+    }
+
+    /// Copy sample column `s` of Y into `out` (`out.len() == q`).
+    pub fn y_col_into(&self, s: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.q());
+        match &self.backing {
+            Backing::Resident { yt, .. } => {
+                for j in 0..yt.rows() {
+                    out[j] = yt[(j, s)];
+                }
+            }
+            Backing::Disk(src) => {
+                for_panels(src, Space::Y, |panel| {
+                    for r in 0..panel.mat.rows() {
+                        out[panel.row_start + r] = panel.mat[(r, s)];
+                    }
+                });
+            }
+        }
     }
 
     /// Stream the feature rows `rows` of X into `panel` (which must be
     /// `rows.len() × n`). This is the tile layer's *only* access to X during
-    /// tile construction: builders that go through it never need a second
-    /// resident copy of X, and an out-of-core `Dataset` variant can later
-    /// satisfy the same contract by reading the panel from storage.
+    /// tile construction; disk-backed datasets satisfy it through the panel
+    /// cache, so tile builds count as panel reads/hits.
     pub fn x_panel_into(&self, rows: std::ops::Range<usize>, panel: &mut Mat) {
         assert!(rows.end <= self.p(), "X panel rows out of range");
         assert_eq!((panel.rows(), panel.cols()), (rows.len(), self.n()));
-        for (k, i) in rows.enumerate() {
-            panel.row_mut(k).copy_from_slice(self.xt.row(i));
+        match &self.backing {
+            Backing::Resident { xt, .. } => {
+                for (k, i) in rows.enumerate() {
+                    panel.row_mut(k).copy_from_slice(xt.row(i));
+                }
+            }
+            Backing::Disk(s) => {
+                let mut i = rows.start;
+                while i < rows.end {
+                    let (cp, li) = s.row_panel(Space::X, i).expect(PANEL_IO);
+                    let take = (cp.row_start + cp.mat.rows()).min(rows.end) - i;
+                    for t in 0..take {
+                        panel
+                            .row_mut(i - rows.start + t)
+                            .copy_from_slice(cp.mat.row(li + t));
+                    }
+                    i += take;
+                }
+            }
         }
     }
 
@@ -228,8 +636,25 @@ impl Dataset {
     pub fn y_panel_into(&self, rows: std::ops::Range<usize>, panel: &mut Mat) {
         assert!(rows.end <= self.q(), "Y panel rows out of range");
         assert_eq!((panel.rows(), panel.cols()), (rows.len(), self.n()));
-        for (k, i) in rows.enumerate() {
-            panel.row_mut(k).copy_from_slice(self.yt.row(i));
+        match &self.backing {
+            Backing::Resident { yt, .. } => {
+                for (k, i) in rows.enumerate() {
+                    panel.row_mut(k).copy_from_slice(yt.row(i));
+                }
+            }
+            Backing::Disk(s) => {
+                let mut i = rows.start;
+                while i < rows.end {
+                    let (cp, li) = s.row_panel(Space::Y, i).expect(PANEL_IO);
+                    let take = (cp.row_start + cp.mat.rows()).min(rows.end) - i;
+                    for t in 0..take {
+                        panel
+                            .row_mut(i - rows.start + t)
+                            .copy_from_slice(cp.mat.row(li + t));
+                    }
+                    i += take;
+                }
+            }
         }
     }
 
@@ -242,20 +667,48 @@ impl Dataset {
     }
 
     /// [`Self::xtheta_t`] into a preallocated q×n buffer (overwritten) — the
-    /// workspace-arena path used by the solvers' iteration loops.
+    /// workspace-arena path used by the solvers' iteration loops. Disk-backed
+    /// datasets skip panels whose Θ rows are all empty, so a sparse Θ touches
+    /// only the panels its support lives in.
     pub fn xtheta_t_into(&self, theta: &SpRowMat, rt: &mut Mat) {
         assert_eq!(theta.rows(), self.p());
         assert_eq!(theta.cols(), self.q());
         assert_eq!((rt.rows(), rt.cols()), (self.q(), self.n()));
         rt.fill(0.0);
-        for i in 0..self.p() {
-            let row = theta.row(i);
-            if row.is_empty() {
-                continue;
+        match &self.backing {
+            Backing::Resident { xt, .. } => {
+                for i in 0..xt.rows() {
+                    let row = theta.row(i);
+                    if row.is_empty() {
+                        continue;
+                    }
+                    let xi = xt.row(i);
+                    for &(j, v) in row {
+                        axpy(v, xi, rt.row_mut(j));
+                    }
+                }
             }
-            let xi = self.xt.row(i);
-            for &(j, v) in row {
-                crate::linalg::dense::axpy(v, xi, rt.row_mut(j));
+            Backing::Disk(s) => {
+                let pr = s.panel_rows();
+                let p = self.p();
+                for idx in 0..s.n_panels(Space::X) {
+                    let base = idx * pr;
+                    let hi = (base + pr).min(p);
+                    if (base..hi).all(|i| theta.row(i).is_empty()) {
+                        continue;
+                    }
+                    let panel = s.panel(Space::X, idx).expect(PANEL_IO);
+                    for i in base..hi {
+                        let row = theta.row(i);
+                        if row.is_empty() {
+                            continue;
+                        }
+                        let xi = panel.mat.row(i - base);
+                        for &(j, v) in row {
+                            axpy(v, xi, rt.row_mut(j));
+                        }
+                    }
+                }
             }
         }
     }
@@ -263,71 +716,119 @@ impl Dataset {
     /// Copy out the sample columns in `idx` (order preserved, duplicates
     /// allowed) — the K-fold splitter of [`crate::coordinator::cross_validate`].
     /// O((p+q)·|idx|); feature-major layout means each sample is a strided
-    /// column gather.
+    /// column gather. Always returns a *resident* dataset: folds are small.
     pub fn select_samples(&self, idx: &[usize]) -> Dataset {
         let m = idx.len();
         for &s in idx {
             assert!(s < self.n(), "sample index {s} out of range (n={})", self.n());
         }
-        let xt = Mat::from_fn(self.p(), m, |i, k| self.xt[(i, idx[k])]);
-        let yt = Mat::from_fn(self.q(), m, |j, k| self.yt[(j, idx[k])]);
-        Dataset::new(xt, yt)
+        match &self.backing {
+            Backing::Resident { xt, yt } => {
+                let sx = Mat::from_fn(self.p(), m, |i, k| xt[(i, idx[k])]);
+                let sy = Mat::from_fn(self.q(), m, |j, k| yt[(j, idx[k])]);
+                Dataset::new(sx, sy)
+            }
+            Backing::Disk(src) => {
+                let mut sx = Mat::zeros(self.p(), m);
+                let mut sy = Mat::zeros(self.q(), m);
+                for_panels(src, Space::X, |panel| {
+                    for r in 0..panel.mat.rows() {
+                        let dst = sx.row_mut(panel.row_start + r);
+                        for (k, &s) in idx.iter().enumerate() {
+                            dst[k] = panel.mat[(r, s)];
+                        }
+                    }
+                });
+                for_panels(src, Space::Y, |panel| {
+                    for r in 0..panel.mat.rows() {
+                        let dst = sy.row_mut(panel.row_start + r);
+                        for (k, &s) in idx.iter().enumerate() {
+                            dst[k] = panel.mat[(r, s)];
+                        }
+                    }
+                });
+                Dataset::new(sx, sy)
+            }
+        }
     }
 
     /// Append `k` samples given as feature-major panels (`xa`: p × k,
     /// `ya`: q × k); the new samples become the window's newest columns.
-    /// O((p+q)·(n+k)) copy — lower-order against the O(k·(p+q)²) statistics
-    /// correction the append is paired with, and it keeps `xt`/`yt`
-    /// contiguous, which every GEMM consumer relies on.
-    pub fn append_samples(&mut self, xa: &Mat, ya: &Mat) {
-        assert_eq!(xa.rows(), self.p(), "appended X feature count mismatch");
-        assert_eq!(ya.rows(), self.q(), "appended Y feature count mismatch");
-        assert_eq!(xa.cols(), ya.cols(), "appended sample count mismatch");
-        let (n, k) = (self.n(), xa.cols());
-        if k == 0 {
-            return;
-        }
-        let grow = |old: &Mat, add: &Mat| {
-            let mut out = Mat::zeros(old.rows(), n + k);
-            for i in 0..old.rows() {
-                let dst = out.row_mut(i);
-                dst[..n].copy_from_slice(old.row(i));
-                dst[n..].copy_from_slice(add.row(i));
+    /// Resident: O((p+q)·(n+k)) reallocating copy. Disk: an X/Y shard pair
+    /// appended to the panel file (and the panel cache flushed — every
+    /// panel's column extent changed). Note a disk-backed append is visible
+    /// through every clone sharing the store.
+    pub fn append_samples(&mut self, xa: &Mat, ya: &Mat) -> io::Result<()> {
+        match &mut self.backing {
+            Backing::Resident { xt, yt } => {
+                assert_eq!(xa.rows(), xt.rows(), "appended X feature count mismatch");
+                assert_eq!(ya.rows(), yt.rows(), "appended Y feature count mismatch");
+                assert_eq!(xa.cols(), ya.cols(), "appended sample count mismatch");
+                let (n, k) = (xt.cols(), xa.cols());
+                if k == 0 {
+                    return Ok(());
+                }
+                let grow = |old: &Mat, add: &Mat| {
+                    let mut out = Mat::zeros(old.rows(), n + k);
+                    for i in 0..old.rows() {
+                        let dst = out.row_mut(i);
+                        dst[..n].copy_from_slice(old.row(i));
+                        dst[n..].copy_from_slice(add.row(i));
+                    }
+                    out
+                };
+                *xt = grow(xt, xa);
+                *yt = grow(yt, ya);
+                Ok(())
             }
-            out
-        };
-        self.xt = grow(&self.xt, xa);
-        self.yt = grow(&self.yt, ya);
+            Backing::Disk(s) => s.append(xa, ya),
+        }
     }
 
     /// Append the samples of a [`SampleBlock`] (convenience over
     /// [`Self::append_samples`]).
-    pub fn append_block(&mut self, block: &SampleBlock) {
-        self.append_samples(&block.xt, &block.yt);
+    pub fn append_block(&mut self, block: &SampleBlock) -> io::Result<()> {
+        self.append_samples(&block.xt, &block.yt)
     }
 
     /// Drop the `k` oldest samples (the window's leftmost columns), returning
-    /// them as the rank-k downdate panel. O((p+q)·n).
-    pub fn evict_oldest(&mut self, k: usize) -> SampleBlock {
-        let k = k.min(self.n());
-        let n = self.n();
-        let split = |old: &Mat| {
-            let head = Mat::from_fn(old.rows(), k, |i, c| old[(i, c)]);
-            let mut tail = Mat::zeros(old.rows(), n - k);
-            for i in 0..old.rows() {
-                tail.row_mut(i).copy_from_slice(&old.row(i)[k..]);
+    /// them as the rank-k downdate panel. Resident: O((p+q)·n). Disk: a
+    /// transient read of the evicted columns plus a logical-offset bump —
+    /// the file itself is append-only.
+    pub fn evict_oldest(&mut self, k: usize) -> io::Result<SampleBlock> {
+        match &mut self.backing {
+            Backing::Resident { xt, yt } => {
+                let n = xt.cols();
+                let k = k.min(n);
+                let split = |old: &Mat| {
+                    let head = Mat::from_fn(old.rows(), k, |i, c| old[(i, c)]);
+                    let mut tail = Mat::zeros(old.rows(), n - k);
+                    for i in 0..old.rows() {
+                        tail.row_mut(i).copy_from_slice(&old.row(i)[k..]);
+                    }
+                    (head, tail)
+                };
+                let (xh, xtail) = split(xt);
+                let (yh, ytail) = split(yt);
+                *xt = xtail;
+                *yt = ytail;
+                Ok(SampleBlock::new(xh, yh))
             }
-            (head, tail)
-        };
-        let (xh, xtail) = split(&self.xt);
-        let (yh, ytail) = split(&self.yt);
-        self.xt = xtail;
-        self.yt = ytail;
-        SampleBlock::new(xh, yh)
+            Backing::Disk(s) => {
+                let (xh, yh) = s.evict_oldest(k)?;
+                Ok(SampleBlock::new(xh, yh))
+            }
+        }
     }
 
+    /// Heap bytes this handle itself pins: the dense buffers when resident,
+    /// only the shard-table overhead when disk-backed (panels self-register
+    /// against the bound budget — do not double-count them here).
     pub fn bytes(&self) -> usize {
-        self.xt.bytes() + self.yt.bytes()
+        match &self.backing {
+            Backing::Resident { xt, yt } => xt.bytes() + yt.bytes(),
+            Backing::Disk(s) => s.overhead_bytes(),
+        }
     }
 }
 
@@ -343,6 +844,17 @@ mod tests {
             Mat::from_fn(p, n, |_, _| rng.normal()),
             Mat::from_fn(q, n, |_, _| rng.normal()),
         )
+    }
+
+    /// Mirror `d` into a disk-backed dataset (sharded panel file).
+    fn disk_mirror(d: &Dataset, name: &str, panel_rows: usize) -> Dataset {
+        let path = std::env::temp_dir().join(format!(
+            "cggm_ds_mirror_{}_{}.pan",
+            name,
+            std::process::id()
+        ));
+        crate::storage::write_panel_dataset(&path, d.xt(), d.yt(), 3).unwrap();
+        Dataset::open_disk(&path, panel_rows, usize::MAX).unwrap()
     }
 
     #[test]
@@ -390,12 +902,12 @@ mod tests {
         let sub = d.select_samples(&[5, 0, 2]);
         assert_eq!((sub.p(), sub.q(), sub.n()), (4, 3, 3));
         for i in 0..4 {
-            assert_eq!(sub.xt[(i, 0)], d.xt[(i, 5)]);
-            assert_eq!(sub.xt[(i, 1)], d.xt[(i, 0)]);
-            assert_eq!(sub.xt[(i, 2)], d.xt[(i, 2)]);
+            assert_eq!(sub.xt()[(i, 0)], d.xt()[(i, 5)]);
+            assert_eq!(sub.xt()[(i, 1)], d.xt()[(i, 0)]);
+            assert_eq!(sub.xt()[(i, 2)], d.xt()[(i, 2)]);
         }
         for j in 0..3 {
-            assert_eq!(sub.yt[(j, 0)], d.yt[(j, 5)]);
+            assert_eq!(sub.yt()[(j, 0)], d.yt()[(j, 5)]);
         }
         // Complementary splits partition the covariance mass:
         // n·S_full = n₁·S₁ + n₂·S₂ entrywise.
@@ -413,12 +925,12 @@ mod tests {
         let mut px = Mat::zeros(3, 6);
         d.x_panel_into(4..7, &mut px);
         for k in 0..3 {
-            assert_eq!(px.row(k), d.xt.row(4 + k));
+            assert_eq!(px.row(k), d.xt().row(4 + k));
         }
         let mut py = Mat::zeros(2, 6);
         d.y_panel_into(3..5, &mut py);
         for k in 0..2 {
-            assert_eq!(py.row(k), d.yt.row(3 + k));
+            assert_eq!(py.row(k), d.yt().row(3 + k));
         }
     }
 
@@ -428,29 +940,29 @@ mod tests {
         let base = random_dataset(&mut rng, 5, 4, 3);
         let add = random_dataset(&mut rng, 2, 4, 3);
         let mut d = base.clone();
-        d.append_samples(&add.xt, &add.yt);
+        d.append_samples(add.xt(), add.yt()).unwrap();
         assert_eq!(d.n(), 7);
         for i in 0..4 {
-            assert_eq!(&d.xt.row(i)[..5], base.xt.row(i));
-            assert_eq!(&d.xt.row(i)[5..], add.xt.row(i));
+            assert_eq!(&d.xt().row(i)[..5], base.xt().row(i));
+            assert_eq!(&d.xt().row(i)[5..], add.xt().row(i));
         }
         for j in 0..3 {
-            assert_eq!(&d.yt.row(j)[5..], add.yt.row(j));
+            assert_eq!(&d.yt().row(j)[5..], add.yt().row(j));
         }
-        let evicted = d.evict_oldest(2);
+        let evicted = d.evict_oldest(2).unwrap();
         assert_eq!((d.n(), evicted.k()), (5, 2));
         for i in 0..4 {
-            assert_eq!(evicted.xt.row(i), &base.xt.row(i)[..2]);
-            assert_eq!(&d.xt.row(i)[..3], &base.xt.row(i)[2..]);
+            assert_eq!(evicted.xt.row(i), &base.xt().row(i)[..2]);
+            assert_eq!(&d.xt().row(i)[..3], &base.xt().row(i)[2..]);
         }
         // The slid window equals a from-scratch gather of the same samples.
         let naive = {
             let mut m = base.clone();
-            m.append_samples(&add.xt, &add.yt);
+            m.append_samples(add.xt(), add.yt()).unwrap();
             m.select_samples(&[2, 3, 4, 5, 6])
         };
-        assert_eq!(d.xt.max_abs_diff(&naive.xt), 0.0);
-        assert_eq!(d.yt.max_abs_diff(&naive.yt), 0.0);
+        assert_eq!(d.xt().max_abs_diff(naive.xt()), 0.0);
+        assert_eq!(d.yt().max_abs_diff(naive.yt()), 0.0);
     }
 
     #[test]
@@ -460,20 +972,17 @@ mod tests {
         let b = random_dataset(&mut rng, 3, 3, 2);
         let mut delta = WindowDelta::new(10);
         assert!(delta.is_empty());
-        delta.record_append(SampleBlock::new(a.xt.clone(), a.yt.clone()));
-        delta.record_append(SampleBlock::new(b.xt.clone(), b.yt.clone()));
-        delta.record_evict(SampleBlock::new(
-            Mat::zeros(3, 1),
-            Mat::zeros(2, 1),
-        ));
+        delta.record_append(SampleBlock::new(a.xt().clone(), a.yt().clone()));
+        delta.record_append(SampleBlock::new(b.xt().clone(), b.yt().clone()));
+        delta.record_evict(SampleBlock::new(Mat::zeros(3, 1), Mat::zeros(2, 1)));
         assert_eq!((delta.added_k(), delta.removed_k()), (5, 1));
         assert_eq!(delta.new_n(), 14);
         let added = delta.added.as_ref().unwrap();
         assert_eq!(added.xt.cols(), 5);
         // Concatenation preserves order: a's samples first, then b's.
         for i in 0..3 {
-            assert_eq!(&added.xt.row(i)[..2], a.xt.row(i));
-            assert_eq!(&added.xt.row(i)[2..], b.xt.row(i));
+            assert_eq!(&added.xt.row(i)[..2], a.xt().row(i));
+            assert_eq!(&added.xt.row(i)[2..], b.xt().row(i));
         }
     }
 
@@ -493,12 +1002,127 @@ mod tests {
                 for k in 0..n {
                     let mut want = 0.0;
                     for i in 0..p {
-                        want += d.xt[(i, k)] * td[(i, j)];
+                        want += d.xt()[(i, k)] * td[(i, j)];
                     }
                     check_close(rt[(j, k)], want, 1e-12, "xtheta")?;
                 }
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn disk_backend_matches_resident_everywhere() {
+        let mut rng = Rng::new(21);
+        let (n, p, q) = (11, 9, 5);
+        let d = random_dataset(&mut rng, n, p, q);
+        let dd = disk_mirror(&d, "parity", 4);
+        assert!(dd.is_disk());
+        assert_eq!(dd.storage_name(), "disk");
+        assert_eq!((dd.n(), dd.p(), dd.q()), (n, p, q));
+        let eng = NativeGemm::new(1);
+
+        // Entry + dense statistics.
+        for i in 0..p {
+            for j in 0..p {
+                assert!((dd.sxx(i, j) - d.sxx(i, j)).abs() < 1e-14);
+            }
+            for j in 0..q {
+                assert!((dd.sxy(i, j) - d.sxy(i, j)).abs() < 1e-14);
+            }
+        }
+        for i in 0..q {
+            for j in 0..q {
+                assert!((dd.syy(i, j) - d.syy(i, j)).abs() < 1e-14);
+            }
+        }
+        assert!(dd.syy_dense(&eng).max_abs_diff(&d.syy_dense(&eng)) < 1e-13);
+        assert!(dd.sxx_dense(&eng).max_abs_diff(&d.sxx_dense(&eng)) < 1e-13);
+        assert!(dd.sxy_dense(&eng).max_abs_diff(&d.sxy_dense(&eng)) < 1e-13);
+
+        // Panel / row / column accessors.
+        let mut pa = Mat::zeros(5, n);
+        let mut pb = Mat::zeros(5, n);
+        d.x_panel_into(2..7, &mut pa);
+        dd.x_panel_into(2..7, &mut pb);
+        assert_eq!(pa.max_abs_diff(&pb), 0.0);
+        let rows = [8usize, 0, 3];
+        let mut ra = Mat::zeros(3, n);
+        let mut rb = Mat::zeros(3, n);
+        d.x_rows_into(&rows, &mut ra);
+        dd.x_rows_into(&rows, &mut rb);
+        assert_eq!(ra.max_abs_diff(&rb), 0.0);
+        d.y_rows_into(&[4, 1], &mut Mat::zeros(2, n));
+        dd.with_x_row(6, |xi| assert_eq!(xi, d.xt().row(6)));
+        dd.with_y_row(2, |yj| assert_eq!(yj, d.yt().row(2)));
+        let mut ca = vec![0.0; p];
+        let mut cb = vec![0.0; p];
+        d.x_col_into(7, &mut ca);
+        dd.x_col_into(7, &mut cb);
+        assert_eq!(ca, cb);
+        let mut cy = vec![0.0; q];
+        dd.y_col_into(3, &mut cy);
+        for j in 0..q {
+            assert_eq!(cy[j], d.yt()[(j, 3)]);
+        }
+
+        // Streaming GEMM helpers against the resident engine calls.
+        let b = Mat::from_fn(4, n, |_, _| rng.normal());
+        let mut oa = Mat::from_fn(p, 4, |_, _| rng.normal());
+        let mut ob = oa.clone();
+        d.gemm_nt_x(&eng, 1.3, &b, 0.7, &mut oa);
+        dd.gemm_nt_x(&eng, 1.3, &b, 0.7, &mut ob);
+        assert!(oa.max_abs_diff(&ob) < 1e-13);
+        let mut oa = Mat::zeros(q, 4);
+        let mut ob = Mat::zeros(q, 4);
+        d.gemm_nt_y(&eng, 2.0, &b, 0.0, &mut oa);
+        dd.gemm_nt_y(&eng, 2.0, &b, 0.0, &mut ob);
+        assert!(oa.max_abs_diff(&ob) < 1e-13);
+        let bn = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let mut oa = Mat::zeros(p, 3);
+        let mut ob = Mat::zeros(p, 3);
+        d.gemm_x(&eng, 0.5, &bn, 0.0, &mut oa);
+        dd.gemm_x(&eng, 0.5, &bn, 0.0, &mut ob);
+        assert!(oa.max_abs_diff(&ob) < 1e-13);
+        let ap = Mat::from_fn(p, 2, |_, _| rng.normal());
+        let mut oa = Mat::zeros(2, n);
+        let mut ob = Mat::zeros(2, n);
+        d.gemm_tn_x(&eng, 1.0, &ap, 0.0, &mut oa);
+        dd.gemm_tn_x(&eng, 1.0, &ap, 0.0, &mut ob);
+        assert!(oa.max_abs_diff(&ob) < 1e-12);
+
+        // XΘ, select, restricted S_xx row.
+        let mut theta = SpRowMat::zeros(p, q);
+        theta.set(0, 1, 0.8);
+        theta.set(6, 3, -1.1);
+        assert!(dd.xtheta_t(&theta).max_abs_diff(&d.xtheta_t(&theta)) < 1e-14);
+        let sel = dd.select_samples(&[9, 2, 2, 0]);
+        let want = d.select_samples(&[9, 2, 2, 0]);
+        assert_eq!(sel.xt().max_abs_diff(want.xt()), 0.0);
+        assert_eq!(sel.yt().max_abs_diff(want.yt()), 0.0);
+        let mut oa = Vec::new();
+        let mut ob = Vec::new();
+        d.sxx_row_restricted(5, &[0, 8, 2], &mut oa);
+        dd.sxx_row_restricted(5, &[0, 8, 2], &mut ob);
+        assert_eq!(oa, ob);
+
+        // Counters moved, and the window slides on disk too.
+        let st = dd.panel_stats().unwrap();
+        assert!(st.reads > 0 && st.hits > 0);
+        let add = random_dataset(&mut rng, 3, p, q);
+        let mut dm = d.clone();
+        let mut ddm = dd.clone();
+        dm.append_samples(add.xt(), add.yt()).unwrap();
+        ddm.append_samples(add.xt(), add.yt()).unwrap();
+        let ea = dm.evict_oldest(4).unwrap();
+        let eb = ddm.evict_oldest(4).unwrap();
+        assert_eq!(ea.xt.max_abs_diff(&eb.xt), 0.0);
+        assert_eq!(ea.yt.max_abs_diff(&eb.yt), 0.0);
+        assert_eq!(ddm.n(), dm.n());
+        assert!(ddm.syy_dense(&eng).max_abs_diff(&dm.syy_dense(&eng)) < 1e-13);
+        std::fs::remove_file(
+            std::env::temp_dir().join(format!("cggm_ds_mirror_parity_{}.pan", std::process::id())),
+        )
+        .ok();
     }
 }

@@ -175,7 +175,7 @@ impl<'a> Objective<'a> {
         // ∇_Θ = 2S_xy + 2Γ, Γ = gemm_nt(xt, sr)/n  (p×q)
         gt.copy_from(sxy);
         gt.scale(2.0);
-        engine.gemm_nt(2.0 * d.inv_n(), &d.xt, sr, 1.0, gt);
+        d.gemm_nt_x(engine, 2.0 * d.inv_n(), sr, 1.0, gt);
     }
 
     /// Single ∇_Λ entry from the dense pieces the CD loop already holds:
@@ -194,7 +194,11 @@ impl<'a> Objective<'a> {
     #[inline]
     pub fn grad_theta_entry(&self, sxy: &Mat, sr: &Mat, i: usize, j: usize) -> f64 {
         2.0 * sxy[(i, j)]
-            + 2.0 * self.data.inv_n() * crate::linalg::dense::dot(self.data.xt.row(i), sr.row(j))
+            + 2.0
+                * self.data.inv_n()
+                * self
+                    .data
+                    .with_x_row(i, |xi| crate::linalg::dense::dot(xi, sr.row(j)))
     }
 
     /// [`Self::grad_theta_entry`] reading `(S_xy)_ij` through the demand-
@@ -210,7 +214,11 @@ impl<'a> Objective<'a> {
         j: usize,
     ) -> f64 {
         2.0 * tiles.sxy_entry(i, j)
-            + 2.0 * self.data.inv_n() * crate::linalg::dense::dot(self.data.xt.row(i), sr.row(j))
+            + 2.0
+                * self.data.inv_n()
+                * self
+                    .data
+                    .with_x_row(i, |xi| crate::linalg::dense::dot(xi, sr.row(j)))
     }
 
     /// Ψ = ΣΘᵀS_xxΘΣ computed as Gram of rows of `sr = Σ·rt` divided by n.
@@ -485,14 +493,14 @@ mod tests {
             let mut total = 0.0;
             for s in 0..n {
                 // residual r = y + Λ⁻¹Θᵀx; NLL_s = ½(q log 2π − log|Λ| + rᵀΛr)
-                let x: Vec<f64> = (0..p).map(|i| data.xt[(i, s)]).collect();
+                let x: Vec<f64> = (0..p).map(|i| data.xt()[(i, s)]).collect();
                 let tx: Vec<f64> = (0..q)
                     .map(|j| (0..p).map(|i| th_d[(i, j)] * x[i]).sum::<f64>())
                     .collect();
                 let mu: Vec<f64> = (0..q)
                     .map(|j| -(0..q).map(|k| sigma[(j, k)] * tx[k]).sum::<f64>())
                     .collect();
-                let r: Vec<f64> = (0..q).map(|j| data.yt[(j, s)] - mu[j]).collect();
+                let r: Vec<f64> = (0..q).map(|j| data.yt()[(j, s)] - mu[j]).collect();
                 let mut quad = 0.0;
                 for a in 0..q {
                     for b in 0..q {

@@ -749,8 +749,8 @@ mod tests {
                 Mat::from_fn(q, k, |_, _| rng.normal()),
             );
             let mut d_new = d_old.clone();
-            let removed = d_new.evict_oldest(k);
-            d_new.append_block(&added);
+            let removed = d_new.evict_oldest(k).unwrap();
+            d_new.append_block(&added).unwrap();
             let mut delta = WindowDelta::new(d_old.n());
             delta.record_evict(removed);
             delta.record_append(added);

@@ -2,8 +2,8 @@
 //! capacity, feature-major like [`Dataset`] so panel streaming still works.
 //!
 //! [`Dataset`] stores the *exact current window* contiguously (every GEMM
-//! consumer takes `&data.xt` whole, so the dataset itself cannot carry ring
-//! offsets). The ring lives one layer up: [`SampleWindow`] owns the
+//! consumer reads whole sample ranges, so the dataset itself cannot carry
+//! ring offsets). The ring lives one layer up: [`SampleWindow`] owns the
 //! capacity-bounded circular storage, absorbs appends in O(p+q) per sample
 //! without shifting history, hands back evicted samples so callers can build
 //! the rank-k downdate panels, and materializes a contiguous [`Dataset`] (or
@@ -48,11 +48,15 @@ impl SampleWindow {
     }
 
     /// A full window seeded from an existing dataset (capacity = its n).
+    /// Works for disk-backed datasets too — columns stream through the
+    /// panel cache.
     pub fn from_dataset(data: &Dataset) -> SampleWindow {
         let mut w = SampleWindow::new(data.p(), data.q(), data.n().max(1));
+        let mut x = vec![0.0; data.p()];
+        let mut y = vec![0.0; data.q()];
         for s in 0..data.n() {
-            let x: Vec<f64> = (0..data.p()).map(|i| data.xt[(i, s)]).collect();
-            let y: Vec<f64> = (0..data.q()).map(|j| data.yt[(j, s)]).collect();
+            data.x_col_into(s, &mut x);
+            data.y_col_into(s, &mut y);
             let _ = w.push(&x, &y);
         }
         w
@@ -274,12 +278,12 @@ mod tests {
                 }
                 for (s, (x, y)) in naive.iter().enumerate() {
                     for i in 0..p {
-                        if d.xt[(i, s)] != x[i] {
+                        if d.xt()[(i, s)] != x[i] {
                             return Err("dataset X mismatch".into());
                         }
                     }
                     for j in 0..q {
-                        if d.yt[(j, s)] != y[j] {
+                        if d.yt()[(j, s)] != y[j] {
                             return Err("dataset Y mismatch".into());
                         }
                     }
@@ -287,12 +291,12 @@ mod tests {
                 // Panels mirror the dataset contract across the wraparound.
                 let mut px = Mat::zeros(p, d.n());
                 w.x_panel_into(0..p, &mut px);
-                if px.max_abs_diff(&d.xt) != 0.0 {
+                if px.max_abs_diff(d.xt()) != 0.0 {
                     return Err("x panel mismatch".into());
                 }
                 let mut py = Mat::zeros(q, d.n());
                 w.y_panel_into(0..q, &mut py);
-                if py.max_abs_diff(&d.yt) != 0.0 {
+                if py.max_abs_diff(d.yt()) != 0.0 {
                     return Err("y panel mismatch".into());
                 }
             }
@@ -309,7 +313,7 @@ mod tests {
         );
         let w = SampleWindow::from_dataset(&d);
         assert_eq!((w.len(), w.capacity()), (6, 6));
-        assert_eq!(w.to_dataset().xt.max_abs_diff(&d.xt), 0.0);
-        assert_eq!(w.to_dataset().yt.max_abs_diff(&d.yt), 0.0);
+        assert_eq!(w.to_dataset().xt().max_abs_diff(d.xt()), 0.0);
+        assert_eq!(w.to_dataset().yt().max_abs_diff(d.yt()), 0.0);
     }
 }

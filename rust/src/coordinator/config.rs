@@ -86,6 +86,18 @@ pub struct RunConfig {
     /// `cggm serve`: serve JSONL over this unix socket instead of stdio
     /// (`--socket /tmp/cggm.sock`).
     pub serve_socket: Option<String>,
+    /// Dataset storage policy (`--storage mem|disk`): `mem` keeps X/Y
+    /// resident; `disk` binds saved `CGGMPAN1` panel files out-of-core
+    /// behind the budget-tracked panel cache (docs/PERF.md "Out-of-core
+    /// datasets"). Also selects the `gen --out` format: `disk` writes
+    /// sharded panels instead of the dense monolith.
+    pub storage: String,
+    /// Feature rows per cached panel for disk-backed datasets
+    /// (`--panel-rows`).
+    pub panel_rows: usize,
+    /// Panel-cache budget in bytes for disk-backed datasets
+    /// (`--panel-cache 64MB`).
+    pub panel_cache: usize,
 }
 
 impl Default for RunConfig {
@@ -126,6 +138,9 @@ impl Default for RunConfig {
             serve_max_jobs: 2,
             serve_budget: None,
             serve_socket: None,
+            storage: "mem".into(),
+            panel_rows: crate::storage::DEFAULT_PANEL_ROWS,
+            panel_cache: crate::storage::DEFAULT_PANEL_CACHE,
         }
     }
 }
@@ -273,6 +288,24 @@ impl RunConfig {
                 self.serve_socket =
                     Some(val.as_str().ok_or_else(|| bad("expected string"))?.into())
             }
+            "storage" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string"))?;
+                if s != "mem" && s != "disk" {
+                    return Err(bad("expected 'mem' or 'disk'"));
+                }
+                self.storage = s.into();
+            }
+            "panel_rows" => {
+                let r = val.as_usize().ok_or_else(|| bad("expected a non-negative integer"))?;
+                if r == 0 {
+                    return Err(bad("panel rows must be >= 1"));
+                }
+                self.panel_rows = r;
+            }
+            "panel_cache" => {
+                let s = val.as_str().ok_or_else(|| bad("expected string like '64MB'"))?;
+                self.panel_cache = parse_bytes(s).ok_or_else(|| bad("unparseable byte size"))?;
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -355,6 +388,18 @@ impl RunConfig {
         }
         if let Some(s) = args.opt("socket") {
             self.serve_socket = Some(s.to_string());
+        }
+        if let Some(s) = args.opt("storage") {
+            assert!(
+                s == "mem" || s == "disk",
+                "--storage expects 'mem' or 'disk', got '{s}'"
+            );
+            self.storage = s.to_string();
+        }
+        self.panel_rows = args.get_usize("panel-rows", self.panel_rows);
+        assert!(self.panel_rows >= 1, "--panel-rows expects >= 1");
+        if let Some(b) = args.opt("panel-cache") {
+            self.panel_cache = parse_bytes(b).expect("--panel-cache like 64MB");
         }
     }
 
@@ -602,6 +647,48 @@ mod tests {
         assert_eq!(d.serve_max_jobs, 2);
         assert_eq!(d.serve_budget, None);
         assert_eq!(d.serve_socket, None);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn storage_keys_layer_like_the_rest() {
+        let tmp = std::env::temp_dir().join("cggm_cfg_storage.json");
+        std::fs::write(
+            &tmp,
+            r#"{"storage": "disk", "panel_rows": 32, "panel_cache": "8MB"}"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_file(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.storage, "disk");
+        assert_eq!(cfg.panel_rows, 32);
+        assert_eq!(cfg.panel_cache, 8 << 20);
+        let args = Args::parse(
+            &[
+                "--storage".into(),
+                "mem".into(),
+                "--panel-rows".into(),
+                "16".into(),
+                "--panel-cache".into(),
+                "4MB".into(),
+            ],
+            &[],
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.storage, "mem");
+        assert_eq!(cfg.panel_rows, 16);
+        assert_eq!(cfg.panel_cache, 4 << 20);
+        // Defaults: resident datasets, library panel geometry.
+        let d = RunConfig::default();
+        assert_eq!(d.storage, "mem");
+        assert_eq!(d.panel_rows, crate::storage::DEFAULT_PANEL_ROWS);
+        assert_eq!(d.panel_cache, crate::storage::DEFAULT_PANEL_CACHE);
+        // Bad values fail loudly.
+        std::fs::write(&tmp, r#"{"storage": "tape"}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
+        std::fs::write(&tmp, r#"{"panel_rows": 0}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
+        std::fs::write(&tmp, r#"{"panel_cache": "lots"}"#).unwrap();
+        assert!(RunConfig::from_file(tmp.to_str().unwrap()).is_err());
         let _ = std::fs::remove_file(tmp);
     }
 

@@ -739,6 +739,8 @@ pub fn generate_problem(
 }
 
 /// Save a dataset in a simple binary format (header + row-major f64).
+/// Streams feature rows, so a disk-backed dataset can be re-exported without
+/// ever being fully resident.
 pub fn save_dataset(data: &Dataset, path: &Path) -> std::io::Result<()> {
     use std::io::Write;
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -746,23 +748,64 @@ pub fn save_dataset(data: &Dataset, path: &Path) -> std::io::Result<()> {
     for dim in [data.p() as u64, data.q() as u64, data.n() as u64] {
         f.write_all(&dim.to_le_bytes())?;
     }
-    for v in data.xt.data() {
-        f.write_all(&v.to_le_bytes())?;
+    for i in 0..data.p() {
+        data.with_x_row(i, |row| -> std::io::Result<()> {
+            for v in row {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            Ok(())
+        })?;
     }
-    for v in data.yt.data() {
-        f.write_all(&v.to_le_bytes())?;
+    for j in 0..data.q() {
+        data.with_y_row(j, |row| -> std::io::Result<()> {
+            for v in row {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            Ok(())
+        })?;
     }
     Ok(())
 }
 
-/// Read only the (p, q, n) header of a dataset saved by [`save_dataset`] —
-/// the serve engine's admission control sizes jobs from the shape without
-/// paying for the full read.
+/// Save a dataset in the sharded column-major panel format
+/// ([`crate::storage`], magic `CGGMPAN1`) — the on-disk layout
+/// [`Dataset::open_disk`] serves out-of-core. Samples are written in
+/// `shard_cols`-column shards; the source may itself be disk-backed (columns
+/// stream through its panel cache), so format conversion is O(shard) memory.
+pub fn save_dataset_sharded(
+    data: &Dataset,
+    path: &Path,
+    shard_cols: usize,
+) -> std::io::Result<()> {
+    let sc = shard_cols.max(1);
+    let mut w = crate::storage::PanelWriter::create(path, data.p(), data.q())?;
+    let mut s = 0usize;
+    while s < data.n() {
+        let e = (s + sc).min(data.n());
+        let idx: Vec<usize> = (s..e).collect();
+        let block = data.select_samples(&idx);
+        w.append_block(&block.xt, &block.yt)?;
+        s = e;
+    }
+    w.finish()
+}
+
+/// Read only the (p, q, n) header of a saved dataset — the serve engine's
+/// admission control sizes jobs from the shape without paying for the full
+/// read. Understands both the dense `CGGMDS01` format and the sharded
+/// `CGGMPAN1` panel format (whose headers are checksum-validated, so a
+/// corrupt shard directory is rejected here rather than at first panel read).
 pub fn peek_dataset_dims(path: &Path) -> std::io::Result<(usize, usize, usize)> {
     use std::io::Read;
     let mut f = std::fs::File::open(path)?;
     let mut header = [0u8; 8 + 24];
     f.read_exact(&mut header)?;
+    if header[..8] == crate::storage::GLOBAL_MAGIC {
+        use std::io::Seek;
+        f.seek(std::io::SeekFrom::Start(0))?;
+        let meta = crate::storage::read_meta(&mut f).map_err(std::io::Error::from)?;
+        return Ok((meta.p, meta.q, meta.n));
+    }
     if &header[..8] != b"CGGMDS01" {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -775,9 +818,26 @@ pub fn peek_dataset_dims(path: &Path) -> std::io::Result<(usize, usize, usize)> 
     Ok((dim(0), dim(1), dim(2)))
 }
 
-/// Load a dataset saved by [`save_dataset`].
+/// Load a dataset fully resident. Accepts both on-disk formats: the dense
+/// `CGGMDS01` layout from [`save_dataset`] and the sharded `CGGMPAN1` panel
+/// layout from [`save_dataset_sharded`] (materialized through a small
+/// transient panel cache, so peak memory is the resident matrices plus one
+/// panel).
 pub fn load_dataset(path: &Path) -> std::io::Result<Dataset> {
     use std::io::Read;
+    {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if magic == crate::storage::GLOBAL_MAGIC {
+            let src = Dataset::open_disk(path, crate::storage::DEFAULT_PANEL_ROWS, 0)?;
+            let mut xt = crate::linalg::Mat::zeros(src.p(), src.n());
+            let mut yt = crate::linalg::Mat::zeros(src.q(), src.n());
+            src.x_panel_into(0..src.p(), &mut xt);
+            src.y_panel_into(0..src.q(), &mut yt);
+            return Ok(Dataset::new(xt, yt));
+        }
+    }
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
@@ -808,6 +868,37 @@ pub fn load_dataset(path: &Path) -> std::io::Result<Dataset> {
     Ok(Dataset::new(xt, yt))
 }
 
+/// Open a saved dataset under an explicit storage policy: `"mem"` loads it
+/// fully resident (either format), `"disk"` binds a `CGGMPAN1` panel file as
+/// an out-of-core backend with a `cache_bytes` panel cache in `panel_rows`
+/// row granules — the dataset then holds O(cache) memory regardless of n·p.
+/// A dense `CGGMDS01` file cannot be served out-of-core (its X/Y halves are
+/// monolithic); convert with [`save_dataset_sharded`] first.
+pub fn open_dataset(
+    path: &Path,
+    storage: &str,
+    panel_rows: usize,
+    cache_bytes: usize,
+) -> std::io::Result<Dataset> {
+    match storage {
+        "mem" | "" => load_dataset(path),
+        "disk" => Dataset::open_disk(path, panel_rows, cache_bytes).map_err(|e| {
+            std::io::Error::new(
+                e.kind(),
+                format!(
+                    "cannot open {} disk-backed: {e} (only the sharded \
+                     CGGMPAN1 format streams; see save_dataset_sharded)",
+                    path.display()
+                ),
+            )
+        }),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("unknown storage mode {other:?} (expected \"mem\" or \"disk\")"),
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -822,9 +913,44 @@ mod tests {
         assert_eq!(back.p(), 6);
         assert_eq!(back.q(), 4);
         assert_eq!(back.n(), 5);
-        assert_eq!(back.xt.data(), prob.data.xt.data());
-        assert_eq!(back.yt.data(), prob.data.yt.data());
+        assert_eq!(back.xt().data(), prob.data.xt().data());
+        assert_eq!(back.yt().data(), prob.data.yt().data());
         let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn sharded_dataset_roundtrip_and_open_modes() {
+        let prob = datagen::chain::generate(6, 4, 11, 9);
+        let path = std::env::temp_dir().join(format!(
+            "cggm_test_ds_sharded_{}.pan",
+            std::process::id()
+        ));
+        save_dataset_sharded(&prob.data, &path, 4).unwrap();
+        // Header peek sees the panel format's dims without a full read.
+        assert_eq!(peek_dataset_dims(&path).unwrap(), (6, 4, 11));
+        // "mem" materializes the exact same matrices.
+        let mem = open_dataset(&path, "mem", 0, 0).unwrap();
+        assert!(!mem.is_disk());
+        assert_eq!(mem.xt().data(), prob.data.xt().data());
+        assert_eq!(mem.yt().data(), prob.data.yt().data());
+        // "disk" binds the panel backend; re-export through save_dataset
+        // streams it back out bit-identically.
+        let disk = open_dataset(&path, "disk", 3, 1 << 16).unwrap();
+        assert!(disk.is_disk());
+        assert_eq!(disk.storage_name(), "disk");
+        let dense = std::env::temp_dir().join(format!(
+            "cggm_test_ds_sharded_{}.bin",
+            std::process::id()
+        ));
+        save_dataset(&disk, &dense).unwrap();
+        let back = load_dataset(&dense).unwrap();
+        assert_eq!(back.xt().data(), prob.data.xt().data());
+        assert_eq!(back.yt().data(), prob.data.yt().data());
+        // Unknown modes and dense files opened "disk" are structured errors.
+        assert!(open_dataset(&path, "tape", 0, 0).is_err());
+        assert!(open_dataset(&dense, "disk", 4, 1 << 16).is_err());
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(dense);
     }
 
     #[test]

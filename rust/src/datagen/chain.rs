@@ -65,8 +65,8 @@ mod tests {
     fn deterministic_by_seed() {
         let a = generate(6, 6, 5, 42);
         let b = generate(6, 6, 5, 42);
-        assert_eq!(a.data.yt.data(), b.data.yt.data());
+        assert_eq!(a.data.yt().data(), b.data.yt().data());
         let c = generate(6, 6, 5, 43);
-        assert_ne!(a.data.yt.data(), c.data.yt.data());
+        assert_ne!(a.data.yt().data(), c.data.yt().data());
     }
 }

@@ -174,6 +174,6 @@ mod tests {
         assert_eq!(prob.data.n(), 20);
         assert_eq!(prob.data.p(), 60);
         assert_eq!(prob.data.q(), 40);
-        assert!(prob.data.yt.frob_norm() > 0.0);
+        assert!(prob.data.yt().frob_norm() > 0.0);
     }
 }

@@ -23,7 +23,7 @@
 //! resident.
 
 use super::cluster_graph::{clustered_lambda, ClusterOptions};
-use super::sampler::sample_dataset;
+use super::sampler::{sample_dataset, sample_dataset_to_panels};
 use super::Problem;
 use crate::cggm::CggmModel;
 use crate::linalg::sparse::SpRowMat;
@@ -62,30 +62,38 @@ impl Default for GenomicOptions {
     }
 }
 
-/// Generate the genomic problem.
-pub fn generate(p: usize, q: usize, n: usize, seed: u64, opts: &GenomicOptions) -> Problem {
-    let mut rng = Rng::new(seed);
+/// Ground truth drawn from `rng` (shared by the resident and streamed
+/// generators so both see identical draws for a given seed).
+fn build_truth(p: usize, q: usize, rng: &mut Rng, opts: &GenomicOptions) -> CggmModel {
     let mut truth = CggmModel::init(p, q);
     truth.lambda = clustered_lambda(
         q,
-        &mut rng,
+        rng,
         &ClusterOptions {
             cluster_size: opts.module_size,
             avg_degree: 8,
             ..Default::default()
         },
     );
-    truth.theta = eqtl_theta(p, q, &mut rng, opts);
+    truth.theta = eqtl_theta(p, q, rng, opts);
+    truth
+}
 
-    // Genotype model: per individual, per LD block, a latent haplotype
-    // dosage h ~ N(0,1); SNP i has genotype Binomial(2, sigmoid-ish pi)
-    // where pi mixes its MAF with the block signal.
+/// Genotype model: per individual, per LD block, a latent haplotype dosage
+/// h ~ N(0,1); SNP i has genotype Binomial(2, sigmoid-ish pi) where pi mixes
+/// its MAF with the block signal. MAFs are drawn from `rng` here, so calling
+/// this advances the generator state identically for every consumer.
+fn genotype_sampler(
+    p: usize,
+    rng: &mut Rng,
+    opts: &GenomicOptions,
+) -> impl FnMut(&mut Rng, &mut [f64]) {
     let mafs: Vec<f64> = (0..p).map(|_| rng.uniform_in(0.05, 0.5)).collect();
     // Standardization constants under Hardy–Weinberg: mean 2·maf,
     // var ≈ 2·maf·(1-maf) (approximate; post-standardized empirically below).
     let ld_block = opts.ld_block.max(1);
     let ld_rho = opts.ld_rho.clamp(0.0, 0.99);
-    let draw_x = move |rng: &mut Rng, x: &mut [f64]| {
+    move |rng: &mut Rng, x: &mut [f64]| {
         let nblocks = x.len().div_ceil(ld_block);
         for b in 0..nblocks {
             let h = rng.normal();
@@ -105,9 +113,37 @@ pub fn generate(p: usize, q: usize, n: usize, seed: u64, opts: &GenomicOptions) 
                 *xi = (geno - mean) / sd;
             }
         }
-    };
+    }
+}
+
+/// Generate the genomic problem.
+pub fn generate(p: usize, q: usize, n: usize, seed: u64, opts: &GenomicOptions) -> Problem {
+    let mut rng = Rng::new(seed);
+    let truth = build_truth(p, q, &mut rng, opts);
+    let draw_x = genotype_sampler(p, &mut rng, opts);
     let data = sample_dataset(&truth, n, &mut rng, draw_x);
     Problem { truth, data }
+}
+
+/// Generate the genomic workload straight to a sharded `CGGMPAN1` panel file
+/// — the paper-scale path (p ≈ 4.4·10⁵ SNPs would need ~560 GB resident for
+/// the asthma shape before a single solve): peak memory is one shard plus
+/// the truth model. Identical RNG schedule to [`generate`], so the written
+/// samples equal `generate(..).data` bit-for-bit; returns the ground truth.
+pub fn generate_to_panels(
+    p: usize,
+    q: usize,
+    n: usize,
+    seed: u64,
+    opts: &GenomicOptions,
+    path: &std::path::Path,
+    shard_cols: usize,
+) -> std::io::Result<CggmModel> {
+    let mut rng = Rng::new(seed);
+    let truth = build_truth(p, q, &mut rng, opts);
+    let draw_x = genotype_sampler(p, &mut rng, opts);
+    sample_dataset_to_panels(&truth, n, &mut rng, draw_x, path, shard_cols)?;
+    Ok(truth)
 }
 
 /// cis + trans-hotspot eQTL map.
@@ -154,7 +190,7 @@ mod tests {
         // Standardized-ish: mean near 0, sd near 1.
         let mut worst_mean = 0.0f64;
         for i in 0..d.p() {
-            let row = d.xt.row(i);
+            let row = d.xt().row(i);
             let mean: f64 = row.iter().sum::<f64>() / row.len() as f64;
             worst_mean = worst_mean.max(mean.abs());
         }
@@ -199,6 +235,25 @@ mod tests {
     fn deterministic() {
         let a = generate(50, 10, 5, 3, &GenomicOptions::default());
         let b = generate(50, 10, 5, 3, &GenomicOptions::default());
-        assert_eq!(a.data.xt.data(), b.data.xt.data());
+        assert_eq!(a.data.xt().data(), b.data.xt().data());
+    }
+
+    #[test]
+    fn streamed_generation_matches_resident() {
+        // The out-of-core generator must produce the same truth and the same
+        // samples as the resident one — the whole point of sharing the RNG
+        // schedule through build_truth/genotype_sampler.
+        let want = generate(60, 8, 17, 21, &GenomicOptions::default());
+        let path = std::env::temp_dir().join(format!(
+            "cggm_genomic_stream_{}.pan",
+            std::process::id()
+        ));
+        let truth =
+            generate_to_panels(60, 8, 17, 21, &GenomicOptions::default(), &path, 5).unwrap();
+        assert_eq!(truth.theta.nnz(), want.truth.theta.nnz());
+        let got = crate::coordinator::load_dataset(&path).unwrap();
+        assert_eq!(got.xt().data(), want.data.xt().data());
+        assert_eq!(got.yt().data(), want.data.yt().data());
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -14,48 +14,109 @@ use crate::linalg::chol_sparse::SparseChol;
 use crate::linalg::dense::Mat;
 use crate::util::rng::Rng;
 
+/// Sample n (x, y) pairs in feature-major column blocks of at most
+/// `block_cols` samples, handing each completed block to `sink`. The
+/// streaming core behind [`sample_dataset`] (one block) and
+/// [`sample_dataset_to_panels`] (one shard per block): per-sample RNG draws
+/// are identical for every blocking, so all of them produce bit-identical
+/// data for a given seed — blocking only bounds resident memory.
+pub fn sample_dataset_blocks(
+    truth: &CggmModel,
+    n: usize,
+    rng: &mut Rng,
+    mut draw_x: impl FnMut(&mut Rng, &mut [f64]),
+    block_cols: usize,
+    mut sink: impl FnMut(&Mat, &Mat) -> std::io::Result<()>,
+) -> std::io::Result<()> {
+    let (p, q) = (truth.p(), truth.q());
+    let chol = SparseChol::factor(&truth.lambda, true, usize::MAX)
+        .expect("ground-truth Λ must be positive definite");
+    let bc = block_cols.max(1);
+    let mut x = vec![0.0; p];
+    let mut w = vec![0.0; q];
+    let mut s = 0usize;
+    while s < n {
+        let m = bc.min(n - s);
+        let mut xt = Mat::zeros(p, m);
+        let mut yt = Mat::zeros(q, m);
+        for k in 0..m {
+            draw_x(rng, &mut x);
+            for (i, xi) in x.iter().enumerate() {
+                xt[(i, k)] = *xi;
+            }
+            // t = Θᵀ x (sparse).
+            let mut t = vec![0.0; q];
+            for i in 0..p {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for &(j, v) in truth.theta.row(i) {
+                    t[j] += v * xi;
+                }
+            }
+            // mean = -Λ⁻¹ t.
+            let mean = chol.solve(&t);
+            // ε = P L⁻ᵀ w.
+            for wi in w.iter_mut() {
+                *wi = rng.normal();
+            }
+            let eps = chol.sample_transform(&w);
+            for j in 0..q {
+                yt[(j, k)] = -mean[j] + eps[j];
+            }
+        }
+        sink(&xt, &yt)?;
+        s += m;
+    }
+    Ok(())
+}
+
 /// Sample n (x, y) pairs given ground-truth parameters and an input sampler.
 pub fn sample_dataset(
     truth: &CggmModel,
     n: usize,
     rng: &mut Rng,
-    mut draw_x: impl FnMut(&mut Rng, &mut [f64]),
+    draw_x: impl FnMut(&mut Rng, &mut [f64]),
 ) -> Dataset {
     let (p, q) = (truth.p(), truth.q());
-    let chol = SparseChol::factor(&truth.lambda, true, usize::MAX)
-        .expect("ground-truth Λ must be positive definite");
     let mut xt = Mat::zeros(p, n);
     let mut yt = Mat::zeros(q, n);
-    let mut x = vec![0.0; p];
-    let mut w = vec![0.0; q];
-    for k in 0..n {
-        draw_x(rng, &mut x);
-        for (i, xi) in x.iter().enumerate() {
-            xt[(i, k)] = *xi;
-        }
-        // t = Θᵀ x (sparse).
-        let mut t = vec![0.0; q];
+    let mut at = 0usize;
+    sample_dataset_blocks(truth, n, rng, draw_x, n.max(1), |xb, yb| {
         for i in 0..p {
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            for &(j, v) in truth.theta.row(i) {
-                t[j] += v * xi;
-            }
+            xt.row_mut(i)[at..at + xb.cols()].copy_from_slice(xb.row(i));
         }
-        // mean = -Λ⁻¹ t.
-        let mean = chol.solve(&t);
-        // ε = P L⁻ᵀ w.
-        for wi in w.iter_mut() {
-            *wi = rng.normal();
-        }
-        let eps = chol.sample_transform(&w);
         for j in 0..q {
-            yt[(j, k)] = -mean[j] + eps[j];
+            yt.row_mut(j)[at..at + yb.cols()].copy_from_slice(yb.row(j));
         }
-    }
+        at += xb.cols();
+        Ok(())
+    })
+    .expect("in-memory sink cannot fail");
     Dataset::new(xt, yt)
+}
+
+/// Sample n (x, y) pairs straight into a sharded `CGGMPAN1` panel file
+/// (`shard_cols` samples per shard) without ever materializing the full
+/// dataset — the paper-scale datagen path: peak memory is one shard, and the
+/// written file loads resident (`coordinator::load_dataset`) or binds
+/// out-of-core (`Dataset::open_disk`). Same per-sample RNG order as
+/// [`sample_dataset`], so the file contents equal the in-memory dataset for
+/// a given seed.
+pub fn sample_dataset_to_panels(
+    truth: &CggmModel,
+    n: usize,
+    rng: &mut Rng,
+    draw_x: impl FnMut(&mut Rng, &mut [f64]),
+    path: &std::path::Path,
+    shard_cols: usize,
+) -> std::io::Result<()> {
+    let mut w = crate::storage::PanelWriter::create(path, truth.p(), truth.q())?;
+    sample_dataset_blocks(truth, n, rng, draw_x, shard_cols, |xb, yb| {
+        w.append_block(xb, yb)
+    })?;
+    w.finish()
 }
 
 /// Standard normal inputs (the synthetic experiments' X).
@@ -115,6 +176,26 @@ mod tests {
         eng.gemm(-1.0, &th, &sigma, 0.0, &mut want_xy);
         let err2 = sxy.max_abs_diff(&want_xy);
         assert!(err2 < 0.1, "S_xy deviates: {err2}");
+    }
+
+    #[test]
+    fn streamed_panel_sampling_is_bit_identical() {
+        // The blocking must not perturb the per-sample RNG order: a sharded
+        // on-disk generation equals the in-memory dataset bit-for-bit.
+        let truth = small_truth();
+        let n = 23;
+        let mut rng = Rng::new(91);
+        let want = sample_dataset(&truth, n, &mut rng, gaussian_x);
+        let path = std::env::temp_dir().join(format!(
+            "cggm_sampler_stream_{}.pan",
+            std::process::id()
+        ));
+        let mut rng2 = Rng::new(91);
+        sample_dataset_to_panels(&truth, n, &mut rng2, gaussian_x, &path, 7).unwrap();
+        let got = crate::coordinator::load_dataset(&path).unwrap();
+        assert_eq!(got.xt().data(), want.xt().data());
+        assert_eq!(got.yt().data(), want.yt().data());
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -32,4 +32,5 @@ pub mod metrics;
 pub mod runtime;
 pub mod serve;
 pub mod solvers;
+pub mod storage;
 pub mod util;

@@ -74,15 +74,21 @@ USAGE: cggm <command> [flags]
 
 COMMANDS
   gen   --workload chain|cluster|genomic --p N --q N --n N [--seed S] --out FILE
+        [--storage disk [--shard-cols N]]
+        (--storage disk writes the sharded CGGMPAN1 panel format that
+         fit/path/cv/serve can bind out-of-core instead of loading resident)
   fit   [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--lambda X | --calibrate] [--mem-budget 512MB] [--threads T]
         [--cd-threads T] [--engine native|xla|pallas [--tile 128|256]] [--trace]
         [--stat-mode dense|tiled [--stat-tile N]]
+        [--storage mem|disk [--panel-rows N] [--panel-cache 64MB]]
         [--gemm-blocks mc,kc,nc | --gemm-autotune]
         (--threads drives column/GEMM parallelism; --cd-threads > 1 switches
          the CD sweeps to colored conflict-free parallel passes;
          --stat-mode tiled makes bcd compute S_xx/S_xy Gram tiles on demand
-         through a budget-bound LRU cache with disk spill — see docs/PERF.md)
+         through a budget-bound LRU cache with disk spill;
+         --storage disk streams a sharded --data file through a budget-tracked
+         panel cache instead of holding X/Y resident — see docs/PERF.md)
   path  [--config FILE] [--workload ...|--data FILE] --solver newton|alt|bcd|prox
         [--path-points N] [--path-min-ratio R] [--screen full|strong] [--cold]
         [--checkpoint FILE | --resume FILE] [--recluster-churn X]
@@ -159,11 +165,28 @@ fn cmd_gen(args: &Args) -> i32 {
     let cfg = load_config(args);
     let out = args.get_str("out", "dataset.bin");
     eprintln!(
-        "generating {:?} workload p={} q={} n={} seed={}",
-        cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed
+        "generating {:?} workload p={} q={} n={} seed={} ({} format)",
+        cfg.workload,
+        cfg.p,
+        cfg.q,
+        cfg.n,
+        cfg.seed,
+        if cfg.storage == "disk" {
+            "sharded panel"
+        } else {
+            "dense"
+        }
     );
     let prob = coordinator::generate_problem(cfg.workload, cfg.p, cfg.q, cfg.n, cfg.seed);
-    match coordinator::save_dataset(&prob.data, &PathBuf::from(&out)) {
+    // `--storage disk` writes the sharded CGGMPAN1 panel format so the file
+    // can later be bound out-of-core (`fit --data FILE --storage disk`).
+    let write = if cfg.storage == "disk" {
+        let shard = args.get_usize("shard-cols", 1024).max(1);
+        coordinator::save_dataset_sharded(&prob.data, &PathBuf::from(&out), shard)
+    } else {
+        coordinator::save_dataset(&prob.data, &PathBuf::from(&out))
+    };
+    match write {
         Ok(()) => {
             eprintln!(
                 "wrote {out} (truth: nnz(L*)={} nnz(T*)={})",
@@ -183,13 +206,25 @@ fn cmd_gen(args: &Args) -> i32 {
 fn load_problem(args: &Args, cfg: &RunConfig) -> Result<datagen::Problem, i32> {
     match args.opt("data") {
         Some(path) => {
-            let data = match coordinator::load_dataset(&PathBuf::from(path)) {
+            let data = match coordinator::open_dataset(
+                &PathBuf::from(path),
+                &cfg.storage,
+                cfg.panel_rows,
+                cfg.panel_cache,
+            ) {
                 Ok(d) => d,
                 Err(e) => {
                     eprintln!("cannot load {path}: {e}");
                     return Err(1);
                 }
             };
+            if data.is_disk() {
+                eprintln!(
+                    "dataset {path} bound disk-backed (panel rows {}, cache {})",
+                    cfg.panel_rows,
+                    fmt_bytes(cfg.panel_cache)
+                );
+            }
             let (p, q) = (data.p(), data.q());
             Ok(datagen::Problem {
                 truth: cggm::cggm::CggmModel::init(p, q),

@@ -142,6 +142,11 @@ pub struct SolveTrace {
     pub tile_spills: usize,
     pub tiles_computed: usize,
     pub total_tiles: usize,
+    /// Data-panel cache activity for disk-backed datasets (both zero when
+    /// the dataset is resident): total panel fetches through the cache, and
+    /// the subset served without touching the panel file.
+    pub panel_reads: u64,
+    pub panel_cache_hits: u64,
 }
 
 impl SolveTrace {
@@ -174,6 +179,8 @@ impl SolveTrace {
             ("tile_spills", Json::num(self.tile_spills as f64)),
             ("tiles_computed", Json::num(self.tiles_computed as f64)),
             ("total_tiles", Json::num(self.total_tiles as f64)),
+            ("panel_reads", Json::num(self.panel_reads as f64)),
+            ("panel_cache_hits", Json::num(self.panel_cache_hits as f64)),
             (
                 "phases",
                 Json::arr(self.phases.iter().map(|(name, secs, calls)| {
@@ -278,6 +285,8 @@ mod tests {
         t.total_tiles = 12;
         t.tile_hits = 100;
         t.stat_updates = 5;
+        t.panel_reads = 40;
+        t.panel_cache_hits = 33;
         let j = t.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("converged").unwrap().as_bool(), Some(true));
@@ -285,6 +294,8 @@ mod tests {
         assert_eq!(parsed.get("tiles_computed").unwrap().as_f64(), Some(7.0));
         assert_eq!(parsed.get("total_tiles").unwrap().as_f64(), Some(12.0));
         assert_eq!(parsed.get("tile_hits").unwrap().as_f64(), Some(100.0));
+        assert_eq!(parsed.get("panel_reads").unwrap().as_f64(), Some(40.0));
+        assert_eq!(parsed.get("panel_cache_hits").unwrap().as_f64(), Some(33.0));
         assert_eq!(
             parsed.get("iters").unwrap().as_arr().unwrap()[0]
                 .get("f")

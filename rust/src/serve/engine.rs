@@ -162,6 +162,9 @@ struct Dims {
     /// Whether the dense statistics are (or will be, once the pending load
     /// completes) materialized.
     warm: bool,
+    /// Whether the dataset is (or will be) disk-backed — its resident
+    /// footprint is then the panel-cache ceiling, not the dense arrays.
+    disk: bool,
 }
 
 struct Queued {
@@ -538,7 +541,19 @@ impl ServeEngine {
                         }
                     }
                 };
-                let est = load_estimate(p, q, n, l.warm, threads);
+                let disk = l.storage.as_deref() == Some("disk");
+                let est = if disk {
+                    // Disk-backed: panels never exceed the configured cache
+                    // cap, so only that (plus any eager warm stats) must fit.
+                    let warm_cost = if l.warm {
+                        stats_bytes(p, q) + NativeGemm::scratch_bytes_bound(threads)
+                    } else {
+                        0
+                    };
+                    data_bytes(p, q, n).min(self.inner.base.panel_cache) + warm_cost
+                } else {
+                    load_estimate(p, q, n, l.warm, threads)
+                };
                 if est > limit {
                     return Err(Response::err(
                         id,
@@ -559,6 +574,7 @@ impl ServeEngine {
                         q,
                         n,
                         warm: l.warm,
+                        disk,
                     },
                 );
                 Ok(est)
@@ -578,7 +594,7 @@ impl ServeEngine {
                 // The bytes that must be resident for this job to run at
                 // all: its own dataset plus the estimate. If that exceeds
                 // the cap with everything else evicted, fail now.
-                let floor = data_bytes(dims.p, dims.q, dims.n).saturating_add(est);
+                let floor = self.resident_bytes(dims).saturating_add(est);
                 if floor > limit {
                     return Err(Response::err(
                         id,
@@ -609,9 +625,22 @@ impl ServeEngine {
                 q: e.q,
                 n: e.n,
                 warm,
+                disk: e.storage == "disk",
             });
         }
         self.inner.dims.lock().unwrap().get(dataset).copied()
+    }
+
+    /// Bytes a job's dataset keeps resident: the dense arrays, or the
+    /// panel-cache ceiling when the dataset is disk-backed (panels above
+    /// the cap degrade to transients instead of allocating).
+    fn resident_bytes(&self, dims: Dims) -> usize {
+        let dense = data_bytes(dims.p, dims.q, dims.n);
+        if dims.disk {
+            dense.min(self.inner.base.panel_cache)
+        } else {
+            dense
+        }
     }
 
     fn job_estimate(&self, kind: JobKind, cfg: &RunConfig, dims: Dims) -> usize {
@@ -639,10 +668,10 @@ impl ServeEngine {
             JobKind::Fit | JobKind::Path => per_fit + cold_stats,
             // A refit briefly holds the old and the slid window at once
             // (the swap is copy-then-replace, never in-place mutation), so
-            // reserve a second copy of the raw data on top of the fit.
-            JobKind::Refit => {
-                per_fit + cold_stats + data_bytes(dims.p, dims.q, dims.n)
-            }
+            // reserve a second copy of the raw data on top of the fit. For a
+            // disk-backed window the clone shares the backing store, so the
+            // second copy costs at most the panel-cache ceiling.
+            JobKind::Refit => per_fit + cold_stats + self.resident_bytes(dims),
             JobKind::Cv => {
                 // Folds run on `cv_threads` parallel contexts over their own
                 // (K-1)/K-sized data copies, plus the full-data refit.
@@ -915,7 +944,27 @@ fn execute_load(inner: &Inner, id: u64, load: &LoadOp) -> Response {
             );
         }
     }
+    let disk = load.storage.as_deref() == Some("disk");
     let data = match &load.source {
+        LoadSource::Path(path) if disk => {
+            // Bind the panel file out-of-core: only the shard table and up
+            // to `panel_cache` bytes of panels ever become resident.
+            match Dataset::open_disk(
+                std::path::Path::new(path),
+                inner.base.panel_rows,
+                inner.base.panel_cache,
+            ) {
+                Ok(d) => d,
+                Err(e) => {
+                    return Response::err(
+                        id,
+                        op,
+                        ErrKind::Io,
+                        format!("cannot open {path} disk-backed: {e}"),
+                    )
+                }
+            }
+        }
         LoadSource::Path(path) => {
             match coordinator::load_dataset(std::path::Path::new(path)) {
                 Ok(d) => d,
@@ -940,7 +989,14 @@ fn execute_load(inner: &Inner, id: u64, load: &LoadOp) -> Response {
     let (p, q, n) = (data.p(), data.q(), data.n());
     // Make room for the bytes the entry will pin, then build the warm
     // context *outside* the registry lock (warming runs Gram products).
-    let pin = data_bytes(p, q, n) + if load.warm { stats_bytes(p, q) } else { 0 };
+    // A disk-backed entry pins its shard-table overhead plus at most the
+    // panel-cache cap; a resident one pins the dense arrays.
+    let resident = if data.is_disk() {
+        data.bytes() + data_bytes(p, q, n).min(inner.base.panel_cache)
+    } else {
+        data_bytes(p, q, n)
+    };
+    let pin = resident + if load.warm { stats_bytes(p, q) } else { 0 };
     {
         let mut reg = inner.registry.lock().unwrap();
         if !reg.ensure_room(pin, None) {
@@ -959,6 +1015,9 @@ fn execute_load(inner: &Inner, id: u64, load: &LoadOp) -> Response {
             );
         }
     }
+    // Cached panels register against the shared budget, so `peak()` covers
+    // out-of-core reads too (and the cap stays a real cap).
+    data.bind_panel_budget(&inner.budget);
     let mut opts = inner.base.solve_options();
     opts.budget = inner.budget.clone();
     let mut warm = match WarmContext::new(Arc::new(data), inner.gemm.clone(), &opts) {
@@ -1045,6 +1104,7 @@ fn load_result(
         ("p", Json::num(data.p() as f64)),
         ("q", Json::num(data.q() as f64)),
         ("n", Json::num(data.n() as f64)),
+        ("storage", Json::str(data.storage_name())),
         ("already_loaded", Json::Bool(already)),
         ("pinned_bytes", Json::num(warm.pinned_bytes() as f64)),
         ("stat_computes", Json::num(warm.stat_computes() as f64)),
@@ -1211,10 +1271,11 @@ fn execute_append(inner: &Inner, id: u64, append: &AppendOp) -> Response {
             }
             (0..d.n())
                 .map(|s| {
-                    (
-                        (0..p).map(|i| d.xt[(i, s)]).collect(),
-                        (0..q).map(|i| d.yt[(i, s)]).collect(),
-                    )
+                    let mut x = vec![0.0; p];
+                    let mut y = vec![0.0; q];
+                    d.x_col_into(s, &mut x);
+                    d.y_col_into(s, &mut y);
+                    (x, y)
                 })
                 .collect()
         }
@@ -1283,6 +1344,8 @@ struct EntrySnap {
     /// Cumulative in-place statistic corrections (carried across window
     /// rebuilds, so a snapshot — not an increment).
     stat_updates: usize,
+    /// Panel-cache counters (disk-backed entries; cumulative on the store).
+    panels: Option<crate::storage::PanelStats>,
 }
 
 fn entry_snap(warm: &WarmContext, stat_delta: usize, warm_reused: bool) -> EntrySnap {
@@ -1296,6 +1359,7 @@ fn entry_snap(warm: &WarmContext, stat_delta: usize, warm_reused: bool) -> Entry
         evicted: warm.evicted(),
         pending: warm.pending_rows(),
         stat_updates: warm.stat_updates(),
+        panels: warm.data().panel_stats(),
     }
 }
 
@@ -1385,12 +1449,32 @@ fn execute_job(
                 let k = rows.len();
                 let xa = Mat::from_fn(p, k, |i, j| rows[j].0[i]);
                 let ya = Mat::from_fn(q, k, |i, j| rows[j].1[i]);
-                next.append_samples(&xa, &ya);
+                // Disk-backed windows append a shard pair to the panel
+                // file; an I/O failure re-buffers the rows for a retry.
+                if let Err(e) = next.append_samples(&xa, &ya) {
+                    let _ = warm.push_pending(rows, &inner.budget);
+                    return Response::err(
+                        id,
+                        op,
+                        ErrKind::Io,
+                        format!("cannot append to '{}': {e}", job.dataset),
+                    );
+                }
                 delta.record_append(SampleBlock::new(xa, ya));
             }
             if let Some(cap) = job.window {
                 if next.n() > cap {
-                    delta.record_evict(next.evict_oldest(next.n() - cap));
+                    match next.evict_oldest(next.n() - cap) {
+                        Ok(block) => delta.record_evict(block),
+                        Err(e) => {
+                            return Response::err(
+                                id,
+                                op,
+                                ErrKind::Io,
+                                format!("cannot expire from '{}': {e}", job.dataset),
+                            )
+                        }
+                    }
                 }
             }
             let (folded, expired) = (delta.added_k(), delta.removed_k());
@@ -1557,6 +1641,7 @@ fn execute_job(
                 e.evicted = snap.evicted;
                 e.pending = snap.pending;
                 e.tile_stats = snap.tiles;
+                e.panel_stats = snap.panels;
                 e.pinned_bytes = snap.pinned;
             });
             Response::ok(id, op, result)
@@ -1582,6 +1667,7 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
         .filter(|(name, _)| dataset.map(|d| d == name.as_str()).unwrap_or(true))
         .map(|(name, e)| {
             let ts = e.tile_stats.unwrap_or(TileStats::default());
+            let ps = e.panel_stats.unwrap_or_default();
             // Cached-model names come from the entry lock; `try_lock` so a
             // running solve on the entry never stalls `stat` (a busy entry
             // just reports an empty list this round).
@@ -1595,6 +1681,7 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
                 ("p", Json::num(e.p as f64)),
                 ("q", Json::num(e.q as f64)),
                 ("n", Json::num(e.n as f64)),
+                ("storage", Json::str(e.storage)),
                 ("cached_models", Json::Arr(cached)),
                 ("pinned_bytes", Json::num(e.pinned_bytes as f64)),
                 ("stat_computes", Json::num(e.stat_computes as f64)),
@@ -1613,6 +1700,13 @@ fn execute_stat(inner: &Inner, id: u64, dataset: Option<&str>) -> Response {
                 ("tile_evictions", Json::num(ts.evictions as f64)),
                 ("tile_spills", Json::num(ts.spills as f64)),
                 ("tiles_computed", Json::num(ts.computes as f64)),
+                // Out-of-core panel traffic (all zero for `"mem"` entries):
+                // cumulative on the backing store, shared by every clone.
+                ("panel_reads", Json::num(ps.reads as f64)),
+                ("panel_cache_hits", Json::num(ps.hits as f64)),
+                ("panel_cache_misses", Json::num(ps.misses as f64)),
+                ("panel_cache_evictions", Json::num(ps.evictions as f64)),
+                ("panel_transient", Json::num(ps.transient as f64)),
                 ("jobs", Json::num(e.jobs as f64)),
                 ("warm_reuses", Json::num(e.warm_reuses as f64)),
                 ("last_used", Json::num(e.last_used as f64)),

@@ -5,6 +5,7 @@
 //! ```text
 //! {"op":"load","id":1,"name":"expr","path":"expr.bin"}
 //! {"op":"load","id":2,"name":"syn","workload":"chain","p":200,"q":200,"n":100,"seed":7}
+//! {"op":"load","id":15,"name":"big","path":"big.pan","storage":"disk"}
 //! {"op":"fit","id":3,"dataset":"syn","solver":"alt","lambda":0.4,"tol":0.001}
 //! {"op":"path","id":4,"dataset":"syn","solver":"alt","path_points":8,"stream":true}
 //! {"op":"cv","id":5,"dataset":"syn","cv_folds":5,"cv_threads":2}
@@ -105,6 +106,11 @@ pub struct LoadOp {
     /// warm-start cache from, so a fitted model survives eviction and
     /// restart.
     pub model: Option<String>,
+    /// Storage policy for a `path` load: `"mem"` (default) loads the file
+    /// resident; `"disk"` binds a sharded `CGGMPAN1` panel file out-of-core
+    /// behind the registry-budget-tracked panel cache, so admission prices
+    /// the cache rather than the full X/Y matrices.
+    pub storage: Option<String>,
 }
 
 /// Persist the cached model of `dataset` (for `solver`, default the serving
@@ -287,11 +293,36 @@ impl Request {
                             .ok_or_else(|| "'model' must be a string path".to_string())
                     })
                     .transpose()?;
+                let storage = doc
+                    .get("storage")
+                    .map(|v| {
+                        let s = v
+                            .as_str()
+                            .ok_or_else(|| "'storage' must be a string".to_string())?;
+                        if s != "mem" && s != "disk" {
+                            return Err(format!(
+                                "'storage' must be \"mem\" or \"disk\", got '{s}'"
+                            ));
+                        }
+                        Ok(s.to_string())
+                    })
+                    .transpose()?;
+                if matches!(storage.as_deref(), Some("disk"))
+                    && !matches!(source, LoadSource::Path(_))
+                {
+                    return Err(
+                        "'storage':\"disk\" requires a 'path' source (generated \
+                         workloads are resident; write them with `gen --storage \
+                         disk` first)"
+                            .to_string(),
+                    );
+                }
                 Op::Load(LoadOp {
                     name,
                     source,
                     warm,
                     model,
+                    storage,
                 })
             }
             "fit" | "path" | "cv" | "refit" => {
@@ -685,6 +716,32 @@ mod tests {
         .unwrap();
         let Op::Load(l) = &r.op else { panic!() };
         assert_eq!(l.model.as_deref(), Some("m.jsonl"));
+        assert_eq!(l.storage, None, "storage defaults to the engine policy");
+    }
+
+    #[test]
+    fn parses_and_rejects_storage_modes() {
+        let r = Request::parse_line(
+            r#"{"op":"load","name":"d","path":"x.pan","storage":"disk"}"#,
+        )
+        .unwrap();
+        let Op::Load(l) = &r.op else { panic!() };
+        assert_eq!(l.storage.as_deref(), Some("disk"));
+        let r = Request::parse_line(
+            r#"{"op":"load","name":"d","path":"x.bin","storage":"mem"}"#,
+        )
+        .unwrap();
+        let Op::Load(l) = &r.op else { panic!() };
+        assert_eq!(l.storage.as_deref(), Some("mem"));
+        for line in [
+            // unknown mode / non-string
+            r#"{"op":"load","name":"d","path":"x.bin","storage":"tape"}"#,
+            r#"{"op":"load","name":"d","path":"x.bin","storage":7}"#,
+            // disk storage needs a file to stream from
+            r#"{"op":"load","name":"d","workload":"chain","p":4,"q":4,"n":4,"storage":"disk"}"#,
+        ] {
+            assert!(Request::parse_line(line).is_err(), "{line}");
+        }
     }
 
     #[test]

@@ -328,6 +328,11 @@ pub struct Entry {
     /// Snapshot of the tile cache's counters (`None` until the entry's
     /// context serves a tiled read; always `None` in dense mode).
     pub tile_stats: Option<crate::cggm::tiles::TileStats>,
+    /// Storage mode of the owned dataset (`"mem"` or `"disk"`; fixed at
+    /// load — a window never changes backing).
+    pub storage: &'static str,
+    /// Snapshot of the panel-cache counters (`None` for resident entries).
+    pub panel_stats: Option<crate::storage::PanelStats>,
     /// Snapshot of the bytes the entry pins.
     pub pinned_bytes: usize,
 }
@@ -435,6 +440,8 @@ impl Registry {
             evicted: warm.evicted(),
             pending: warm.pending_rows(),
             tile_stats: warm.tile_stats(),
+            storage: data.storage_name(),
+            panel_stats: data.panel_stats(),
             pinned_bytes: warm.pinned_bytes(),
             warm: Arc::new(Mutex::new(warm)),
         };
@@ -637,9 +644,9 @@ mod tests {
         let mut delta = WindowDelta::new(next.n());
         let xa = Mat::from_fn(4, 2, |i, j| rows[j].0[i]);
         let ya = Mat::from_fn(5, 2, |i, j| rows[j].1[i]);
-        next.append_samples(&xa, &ya);
+        next.append_samples(&xa, &ya).unwrap();
         delta.record_append(SampleBlock::new(xa, ya));
-        delta.record_evict(next.evict_oldest(2));
+        delta.record_evict(next.evict_oldest(2).unwrap());
         let next = Arc::new(next);
         warm.rebuild(next.clone(), &delta, &opts).unwrap();
         assert_eq!((warm.appended(), warm.evicted()), (2, 2));

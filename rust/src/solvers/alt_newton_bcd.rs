@@ -235,9 +235,9 @@ pub fn solve(
                 )?;
                 // S_yy block = gemm_nt(yt, yt[cols]) / n  (q×m).
                 let mut ytb = ws.mat(m, n)?;
-                data.yt.rows_into(&cols, &mut ytb);
+                data.y_rows_into(&cols, &mut ytb);
                 let mut syyb = ws.mat(q, m)?;
-                engine.gemm_nt(data.inv_n(), &data.yt, &ytb, 0.0, &mut syyb);
+                data.gemm_nt_y(engine, data.inv_n(), &ytb, 0.0, &mut syyb);
                 for (c, &t) in cols.iter().enumerate() {
                     let sigc = cache.sigma.row(c);
                     let psic = cache.psi.row(c);
@@ -996,14 +996,15 @@ fn theta_screen(
                 }
                 *m = s;
             }
-            let xi = data.xt.row(i);
-            for k in 0..n {
-                axpy(xi[k], &mi, t_mat.row_mut(k));
-            }
+            data.with_x_row(i, |xi| {
+                for k in 0..n {
+                    axpy(xi[k], &mi, t_mat.row_mut(k));
+                }
+            });
         }
         // Γ_blk = Xᵀ·T / n  (p×b): gemm(xt (p×n), T (n×b)).
         let mut gamma = ws.mat(p, b)?;
-        engine.gemm(data.inv_n(), &data.xt, &t_mat, 0.0, &mut gamma);
+        data.gemm_x(engine, data.inv_n(), &t_mat, 0.0, &mut gamma);
         // S_xy block (p×b) — skipped entirely when a restricted tiled scan
         // will read its few entries through the tile cache instead.
         let tiled_scan = tiles.filter(|_| theta_allowed.is_some());
@@ -1011,9 +1012,9 @@ fn theta_screen(
             Some(_) => None,
             None => {
                 let mut ytb = ws.mat(b, n)?;
-                data.yt.rows_into(&cols, &mut ytb);
+                data.y_rows_into(&cols, &mut ytb);
                 let mut sxyb = ws.mat(p, b)?;
-                engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
+                data.gemm_nt_x(engine, data.inv_n(), &ytb, 0.0, &mut sxyb);
                 Some(sxyb)
             }
         };
@@ -1396,10 +1397,10 @@ pub(crate) fn streamed_lambda_max(
         let b = bsz.min(q - t0);
         let cols: Vec<usize> = (t0..t0 + b).collect();
         let mut ytb = ws.mat(b, n)?;
-        data.yt.rows_into(&cols, &mut ytb);
+        data.y_rows_into(&cols, &mut ytb);
         // S_yy panel (q×b): off-diagonal max.
         let mut syyb = ws.mat(q, b)?;
-        engine.gemm_nt(data.inv_n(), &data.yt, &ytb, 0.0, &mut syyb);
+        data.gemm_nt_y(engine, data.inv_n(), &ytb, 0.0, &mut syyb);
         for i in 0..q {
             for (c, v) in syyb.row(i).iter().enumerate() {
                 if i != t0 + c {
@@ -1409,7 +1410,7 @@ pub(crate) fn streamed_lambda_max(
         }
         // S_xy panel (p×b).
         let mut sxyb = ws.mat(p, b)?;
-        engine.gemm_nt(data.inv_n(), &data.xt, &ytb, 0.0, &mut sxyb);
+        data.gemm_nt_x(engine, data.inv_n(), &ytb, 0.0, &mut sxyb);
         for v in sxyb.data() {
             mt = mt.max(2.0 * v.abs());
         }

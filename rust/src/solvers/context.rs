@@ -158,6 +158,10 @@ impl<'a> SolverContext<'a> {
         opts: &SolveOptions,
         engine: &'a dyn GemmEngine,
     ) -> SolverContext<'a> {
+        // Disk-backed datasets register their resident panels against the
+        // same budget as the workspace and cached statistics, so `peak()`
+        // covers the panel cache too (a no-op rebind keeps the cache warm).
+        data.bind_panel_budget(&opts.budget);
         SolverContext {
             data,
             engine,
@@ -702,9 +706,9 @@ mod tests {
                     Mat::from_fn(q, ka, |_, _| rng.normal()),
                 );
                 let mut delta = crate::cggm::WindowDelta::new(data.n());
-                data.append_block(&added);
+                data.append_block(&added).unwrap();
                 delta.record_append(added);
-                delta.record_evict(data.evict_oldest(kr));
+                delta.record_evict(data.evict_oldest(kr).unwrap());
                 // The context still borrows `snapshot`; re-home it on the
                 // slid window through the carry before updating.
                 let c = ctx.into_carry();
@@ -757,9 +761,9 @@ mod tests {
                 Mat::from_fn(4, 1, |_, _| rng.normal()),
             );
             let mut delta = crate::cggm::WindowDelta::new(data.n());
-            data.append_block(&added);
+            data.append_block(&added).unwrap();
             delta.record_append(added);
-            delta.record_evict(data.evict_oldest(1));
+            delta.record_evict(data.evict_oldest(1).unwrap());
             ctx = SolverContext::with_carry(&data, &opts, &eng, c);
             ctx.update_stats(&delta).unwrap();
             if round < 3 {

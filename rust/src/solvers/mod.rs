@@ -380,6 +380,9 @@ pub fn solve_in_context(
     opts: &SolveOptions,
     warm: Option<&CggmModel>,
 ) -> Result<SolveResult, SolveError> {
+    // Panel-cache counters are cumulative per backing store (shared across
+    // solves and clones); snapshot so the trace reports *this solve's* I/O.
+    let panel0 = ctx.data().panel_stats().unwrap_or_default();
     let mut res = match kind {
         SolverKind::NewtonCd => newton_cd::solve(ctx, opts, warm),
         SolverKind::AltNewtonCd => alt_newton_cd::solve(ctx, opts, warm),
@@ -391,6 +394,10 @@ pub fn solve_in_context(
     // observability both read these).
     res.trace.warm_started = warm.is_some();
     res.trace.stat_updates = ctx.stat_updates();
+    if let Some(ps) = ctx.data().panel_stats() {
+        res.trace.panel_reads = ps.reads.saturating_sub(panel0.reads);
+        res.trace.panel_cache_hits = ps.hits.saturating_sub(panel0.hits);
+    }
     Ok(res)
 }
 

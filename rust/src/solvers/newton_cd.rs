@@ -99,7 +99,7 @@ pub fn solve(
             // saved versus recomputing Σ·rt.
             prof.time("psi", || obj.psi_into(&sigma, &rt, engine, &mut sr, &mut psi));
             prof.time("gamma", || {
-                engine.gemm_nt(data.inv_n(), &data.xt, &sr, 0.0, &mut gamma);
+                data.gemm_nt_x(engine, data.inv_n(), &sr, 0.0, &mut gamma);
             });
         }
         let mut gamma_t = ws.mat(q, p)?;

@@ -84,14 +84,14 @@ fn eval_smooth<'w>(
     }
     // R̃ᵀ = Θᵀ·xt (q×n); sr = Σ·R̃ᵀ.
     let mut rtt = ws.mat(q, n)?;
-    engine.gemm_tn(1.0, th, &data.xt, 0.0, &mut rtt);
+    data.gemm_tn_x(engine, 1.0, th, 0.0, &mut rtt);
     let mut sr = ws.mat(q, n)?;
     engine.gemm(1.0, &sigma, &rtt, 0.0, &mut sr);
     let mut psi = ws.mat(q, q)?;
     engine.gemm_nt(data.inv_n(), &sr, &sr, 0.0, &mut psi);
     psi.symmetrize();
     let mut gamma = ws.mat(p, q)?;
-    engine.gemm_nt(data.inv_n(), &data.xt, &sr, 0.0, &mut gamma);
+    data.gemm_nt_x(engine, data.inv_n(), &sr, 0.0, &mut gamma);
     // g = -logdet + tr(SyyΛ) + 2tr(SxyᵀΘ) + tr(ΣΘᵀSxxΘ), the last term as
     // tr(ΘᵀSxxΘΣ) = Σ_ij Θ_ij (SxxΘΣ)_ij = <Θ, Γ>.
     let mut tr1 = 0.0;

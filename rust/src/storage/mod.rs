@@ -1,0 +1,924 @@
+//! Out-of-core dataset storage: disk-backed X/Y feature panels behind a
+//! budget-tracked LRU cache.
+//!
+//! The paper's million-dimensional claims assume the *statistics* are the
+//! memory bottleneck, but at p + q ~ 10⁶ even the raw data panels X (p×n)
+//! and Y (q×n) exceed RAM. This module keeps them on disk in a sharded,
+//! checksummed binary **panel format** and serves feature-row panels through
+//! a [`PanelCache`] that registers every resident panel against the shared
+//! [`MemBudget`] via RAII [`Tracked`] handles — the same infallible-
+//! degradation design as `cggm::tiles::TileStore`: when neither the cache
+//! capacity nor the budget admits a panel, the read still succeeds as a
+//! bounded *transient* allocation that is dropped as soon as the caller is
+//! done with it.
+//!
+//! # File format (`CGGMPAN1`, version 1)
+//!
+//! A panel file is a 48-byte global header followed by any number of
+//! shards, each a 64-byte shard header plus a row-major f64 little-endian
+//! payload:
+//!
+//! ```text
+//! global:  magic "CGGMPAN1" | version u32 | flags u32 | p u64 | q u64
+//!          | reserved u64 | fnv1a64(bytes 0..40) u64
+//! shard:   magic "CGGMSHRD" | space u32 (0=X, 1=Y) | reserved u32
+//!          | row_start u64 | row_end u64 | col_start u64 | col_end u64
+//!          | payload_bytes u64 | fnv1a64(bytes 0..56) u64
+//! payload: (row_end-row_start) × (col_end-col_start) f64 LE, row-major
+//! ```
+//!
+//! Version-1 constraints, checked by [`read_meta`] with the same
+//! bounded-before-allocation discipline as the checkpoint loaders: every
+//! shard spans the full feature-row range of its space; per space, shard
+//! column ranges are contiguous from 0 (so shards are an append log of
+//! sample blocks); dimensions and shard counts are capped *before* any
+//! payload-sized allocation; header checksums must match; a payload that
+//! runs past end-of-file is a structured "torn tail" error, mirroring a
+//! crashed writer.
+//!
+//! Eviction of old samples (the sliding window) is a *logical* offset kept
+//! in memory only — the file is append-only and the evict offset is a
+//! session-local view, exactly like a reader's cursor into a log.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::dense::Mat;
+use crate::util::membudget::{MemBudget, Tracked};
+
+/// Global file header magic.
+pub const GLOBAL_MAGIC: [u8; 8] = *b"CGGMPAN1";
+/// Per-shard header magic.
+pub const SHARD_MAGIC: [u8; 8] = *b"CGGMSHRD";
+/// On-disk format version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+const GLOBAL_HEADER_LEN: u64 = 48;
+const SHARD_HEADER_LEN: u64 = 64;
+/// Feature dimensions are bounded before any allocation sized by them.
+pub const DIM_CAP: u64 = 1 << 24;
+/// Shard-table length is bounded before the table is built.
+pub const SHARD_CAP: usize = 1 << 20;
+/// Sample count is bounded so payload arithmetic cannot overflow u64.
+pub const COL_CAP: u64 = 1 << 32;
+
+/// Default feature rows per cached panel.
+pub const DEFAULT_PANEL_ROWS: usize = 256;
+/// Default panel-cache capacity in bytes (64 MB).
+pub const DEFAULT_PANEL_CACHE: usize = 64 << 20;
+
+/// Which data matrix a shard or panel belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Space {
+    /// Inputs X (p features).
+    X,
+    /// Outputs Y (q features).
+    Y,
+}
+
+impl Space {
+    #[inline]
+    fn tag(self) -> u8 {
+        match self {
+            Space::X => 0,
+            Space::Y => 1,
+        }
+    }
+    fn from_u32(v: u32) -> Option<Space> {
+        match v {
+            0 => Some(Space::X),
+            1 => Some(Space::Y),
+            _ => None,
+        }
+    }
+}
+
+/// FNV-1a 64-bit — the header checksum. Not cryptographic; it catches
+/// torn writes and bit rot, which is all a local panel file needs.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Structured panel-file validation failure. Every variant converts to
+/// `io::ErrorKind::InvalidData` so callers that speak `io::Result` get a
+/// descriptive message without a second error type in their signatures.
+#[derive(Debug, thiserror::Error)]
+pub enum StorageError {
+    #[error("panel file i/o: {0}")]
+    Io(#[from] io::Error),
+    #[error("bad panel-file magic")]
+    BadMagic,
+    #[error("unsupported panel-file version {0}")]
+    BadVersion(u32),
+    #[error("panel-file header checksum mismatch")]
+    BadChecksum,
+    #[error("panel-file dimensions out of range (p={p}, q={q}, cap={DIM_CAP})")]
+    DimsOutOfRange { p: u64, q: u64 },
+    #[error("invalid shard header: {0}")]
+    ShardInvalid(&'static str),
+    #[error("torn shard tail: {0}")]
+    TornTail(&'static str),
+    #[error("unbalanced X/Y sample counts (x={x}, y={y})")]
+    Unbalanced { x: usize, y: usize },
+}
+
+impl From<StorageError> for io::Error {
+    fn from(e: StorageError) -> io::Error {
+        match e {
+            StorageError::Io(io) => io,
+            other => io::Error::new(io::ErrorKind::InvalidData, other.to_string()),
+        }
+    }
+}
+
+/// One validated shard: a contiguous block of samples for one space.
+#[derive(Clone, Debug)]
+pub struct ShardMeta {
+    pub space: Space,
+    /// Physical sample-column range `[col_start, col_end)`.
+    pub col_start: usize,
+    pub col_end: usize,
+    /// File offset of the payload (just past the shard header).
+    pub offset: u64,
+}
+
+impl ShardMeta {
+    #[inline]
+    fn cols(&self) -> usize {
+        self.col_end - self.col_start
+    }
+}
+
+/// The validated header view of a panel file: dimensions, shard table, and
+/// where valid data ends (the append point).
+#[derive(Clone, Debug)]
+pub struct PanelMeta {
+    pub p: usize,
+    pub q: usize,
+    /// Total samples in the file (X and Y agree by construction).
+    pub n: usize,
+    pub shards: Vec<ShardMeta>,
+    /// Offset one past the last valid shard — where an appender writes.
+    pub data_end: u64,
+}
+
+fn u32_at(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().unwrap())
+}
+fn u64_at(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().unwrap())
+}
+
+/// Parse and validate a panel file's global header and shard table.
+///
+/// Bounded-before-allocation: dimensions are capped before the shard table
+/// is sized, the shard count is capped as it grows, and no payload is read
+/// at all — only header bytes. Any structural violation is a typed
+/// [`StorageError`]; the only allocations made before full validation are
+/// the fixed-size header buffers and the (capped) shard table.
+pub fn read_meta<R: Read + Seek>(r: &mut R) -> Result<PanelMeta, StorageError> {
+    let file_len = r.seek(SeekFrom::End(0))?;
+    r.seek(SeekFrom::Start(0))?;
+    if file_len < GLOBAL_HEADER_LEN {
+        return Err(StorageError::TornTail("file shorter than global header"));
+    }
+    let mut gh = [0u8; GLOBAL_HEADER_LEN as usize];
+    r.read_exact(&mut gh)?;
+    if gh[..8] != GLOBAL_MAGIC {
+        return Err(StorageError::BadMagic);
+    }
+    let version = u32_at(&gh, 8);
+    if version != FORMAT_VERSION {
+        return Err(StorageError::BadVersion(version));
+    }
+    if u64_at(&gh, 40) != fnv1a64(&gh[..40]) {
+        return Err(StorageError::BadChecksum);
+    }
+    let (p, q) = (u64_at(&gh, 16), u64_at(&gh, 24));
+    if p == 0 || q == 0 || p > DIM_CAP || q > DIM_CAP {
+        return Err(StorageError::DimsOutOfRange { p, q });
+    }
+    let (p, q) = (p as usize, q as usize);
+
+    let mut shards = Vec::new();
+    let mut pos = GLOBAL_HEADER_LEN;
+    let (mut n_x, mut n_y) = (0u64, 0u64);
+    let mut sh = [0u8; SHARD_HEADER_LEN as usize];
+    while pos < file_len {
+        if file_len - pos < SHARD_HEADER_LEN {
+            return Err(StorageError::TornTail("partial shard header at end of file"));
+        }
+        r.read_exact(&mut sh)?;
+        if sh[..8] != SHARD_MAGIC {
+            return Err(StorageError::ShardInvalid("bad shard magic"));
+        }
+        if u64_at(&sh, 56) != fnv1a64(&sh[..56]) {
+            return Err(StorageError::BadChecksum);
+        }
+        let space = Space::from_u32(u32_at(&sh, 8))
+            .ok_or(StorageError::ShardInvalid("unknown space tag"))?;
+        let dim = match space {
+            Space::X => p,
+            Space::Y => q,
+        } as u64;
+        let (row_start, row_end) = (u64_at(&sh, 16), u64_at(&sh, 24));
+        if row_start != 0 || row_end != dim {
+            return Err(StorageError::ShardInvalid("v1 shards must span the full row range"));
+        }
+        let (col_start, col_end) = (u64_at(&sh, 32), u64_at(&sh, 40));
+        let n_so_far = match space {
+            Space::X => n_x,
+            Space::Y => n_y,
+        };
+        if col_start != n_so_far {
+            return Err(StorageError::ShardInvalid("non-contiguous shard column range"));
+        }
+        if col_end <= col_start || col_end > COL_CAP {
+            return Err(StorageError::ShardInvalid("empty or oversized shard column range"));
+        }
+        let want_payload = dim
+            .checked_mul(col_end - col_start)
+            .and_then(|c| c.checked_mul(8))
+            .ok_or(StorageError::ShardInvalid("payload size overflow"))?;
+        if u64_at(&sh, 48) != want_payload {
+            return Err(StorageError::ShardInvalid("payload size disagrees with shard shape"));
+        }
+        let payload_at = pos + SHARD_HEADER_LEN;
+        let next = payload_at
+            .checked_add(want_payload)
+            .ok_or(StorageError::ShardInvalid("payload offset overflow"))?;
+        if next > file_len {
+            return Err(StorageError::TornTail("shard payload runs past end of file"));
+        }
+        if shards.len() >= SHARD_CAP {
+            return Err(StorageError::ShardInvalid("too many shards"));
+        }
+        shards.push(ShardMeta {
+            space,
+            col_start: col_start as usize,
+            col_end: col_end as usize,
+            offset: payload_at,
+        });
+        match space {
+            Space::X => n_x = col_end,
+            Space::Y => n_y = col_end,
+        }
+        pos = next;
+        r.seek(SeekFrom::Start(pos))?;
+    }
+    if n_x != n_y {
+        return Err(StorageError::Unbalanced {
+            x: n_x as usize,
+            y: n_y as usize,
+        });
+    }
+    Ok(PanelMeta {
+        p,
+        q,
+        n: n_x as usize,
+        shards,
+        data_end: pos,
+    })
+}
+
+fn global_header(p: usize, q: usize) -> [u8; GLOBAL_HEADER_LEN as usize] {
+    let mut h = [0u8; GLOBAL_HEADER_LEN as usize];
+    h[..8].copy_from_slice(&GLOBAL_MAGIC);
+    h[8..12].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+    // flags [12..16) and reserved [32..40) stay zero.
+    h[16..24].copy_from_slice(&(p as u64).to_le_bytes());
+    h[24..32].copy_from_slice(&(q as u64).to_le_bytes());
+    let ck = fnv1a64(&h[..40]);
+    h[40..48].copy_from_slice(&ck.to_le_bytes());
+    h
+}
+
+fn shard_header(space: Space, rows: usize, col_start: usize, col_end: usize) -> [u8; 64] {
+    let mut h = [0u8; SHARD_HEADER_LEN as usize];
+    h[..8].copy_from_slice(&SHARD_MAGIC);
+    h[8..12].copy_from_slice(&(space.tag() as u32).to_le_bytes());
+    h[16..24].copy_from_slice(&0u64.to_le_bytes());
+    h[24..32].copy_from_slice(&(rows as u64).to_le_bytes());
+    h[32..40].copy_from_slice(&(col_start as u64).to_le_bytes());
+    h[40..48].copy_from_slice(&(col_end as u64).to_le_bytes());
+    let payload = (rows as u64) * ((col_end - col_start) as u64) * 8;
+    h[48..56].copy_from_slice(&payload.to_le_bytes());
+    let ck = fnv1a64(&h[..56]);
+    h[56..64].copy_from_slice(&ck.to_le_bytes());
+    h
+}
+
+/// Streaming shard writer: create a panel file and append feature-major
+/// sample blocks without ever holding more than one block in memory — the
+/// datagen path to paper-scale files.
+pub struct PanelWriter {
+    w: io::BufWriter<File>,
+    p: usize,
+    q: usize,
+    n: usize,
+}
+
+impl PanelWriter {
+    /// Create (truncating) `path` for a p×n / q×n dataset built by appends.
+    pub fn create(path: &Path, p: usize, q: usize) -> io::Result<PanelWriter> {
+        if p == 0 || q == 0 || p as u64 > DIM_CAP || q as u64 > DIM_CAP {
+            return Err(StorageError::DimsOutOfRange {
+                p: p as u64,
+                q: q as u64,
+            }
+            .into());
+        }
+        let f = File::create(path)?;
+        let mut w = io::BufWriter::new(f);
+        w.write_all(&global_header(p, q))?;
+        Ok(PanelWriter { w, p, q, n: 0 })
+    }
+
+    /// Samples written so far.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Append one feature-major block (`xt`: p×k, `yt`: q×k) as an X shard
+    /// followed by a Y shard.
+    pub fn append_block(&mut self, xt: &Mat, yt: &Mat) -> io::Result<()> {
+        assert_eq!(xt.rows(), self.p, "X feature count mismatch");
+        assert_eq!(yt.rows(), self.q, "Y feature count mismatch");
+        assert_eq!(xt.cols(), yt.cols(), "sample count mismatch");
+        let k = xt.cols();
+        if k == 0 {
+            return Ok(());
+        }
+        if (self.n + k) as u64 > COL_CAP {
+            return Err(StorageError::ShardInvalid("sample count over cap").into());
+        }
+        for (space, mat) in [(Space::X, xt), (Space::Y, yt)] {
+            self.w
+                .write_all(&shard_header(space, mat.rows(), self.n, self.n + k))?;
+            for &v in mat.data() {
+                self.w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        self.n += k;
+        Ok(())
+    }
+
+    /// Flush and durably sync the file.
+    pub fn finish(mut self) -> io::Result<()> {
+        self.w.flush()?;
+        self.w.get_ref().sync_all()
+    }
+}
+
+/// Write a fully resident dataset as a panel file, sharded every
+/// `shard_cols` samples (the shard size trades append granularity against
+/// per-shard header overhead and read fan-in; see docs/PERF.md).
+pub fn write_panel_dataset(path: &Path, xt: &Mat, yt: &Mat, shard_cols: usize) -> io::Result<()> {
+    assert_eq!(xt.cols(), yt.cols(), "sample count mismatch");
+    let shard_cols = shard_cols.max(1);
+    let mut w = PanelWriter::create(path, xt.rows(), yt.rows())?;
+    let n = xt.cols();
+    let mut c = 0;
+    while c < n {
+        let k = shard_cols.min(n - c);
+        let xs = Mat::from_fn(xt.rows(), k, |i, j| xt[(i, c + j)]);
+        let ys = Mat::from_fn(yt.rows(), k, |i, j| yt[(i, c + j)]);
+        w.append_block(&xs, &ys)?;
+        c += k;
+    }
+    w.finish()
+}
+
+/// Panel-cache traffic counters. `transient` counts reads that could not be
+/// admitted (cache full of hotter panels, or budget exhausted) and were
+/// served as unregistered short-lived allocations instead — the degradation
+/// path, never a failure path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanelStats {
+    pub reads: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub transient: u64,
+}
+
+/// A resident (or transient) feature-row panel: rows
+/// `[row_start, row_start + mat.rows())` of one space, all live samples.
+/// The budget registration lives *inside* the Arc, so a panel evicted from
+/// the cache while a solver still holds it stays counted until the last
+/// reference drops.
+pub struct Panel {
+    pub row_start: usize,
+    pub mat: Mat,
+    _track: Option<Tracked>,
+}
+
+struct CacheSlot {
+    panel: Arc<Panel>,
+    last_used: u64,
+    bytes: usize,
+}
+
+struct CacheState {
+    panel_rows: usize,
+    cache_bytes: usize,
+    budget: MemBudget,
+    map: HashMap<(u8, usize), CacheSlot>,
+    resident_bytes: usize,
+    clock: u64,
+    stats: PanelStats,
+}
+
+impl CacheState {
+    fn clear(&mut self) {
+        self.map.clear();
+        self.resident_bytes = 0;
+    }
+
+    /// Drop the least-recently-used resident panel. False when empty.
+    fn evict_lru(&mut self) -> bool {
+        let victim = self
+            .map
+            .iter()
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(&k, _)| k);
+        match victim {
+            Some(k) => {
+                let slot = self.map.remove(&k).unwrap();
+                self.resident_bytes -= slot.bytes;
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+struct DiskState {
+    file: File,
+    writable: bool,
+    p: usize,
+    q: usize,
+    shards: Vec<ShardMeta>,
+    /// Physical samples in the file.
+    n_total: usize,
+    /// Logical evict offset: live samples are physical columns
+    /// `[evict, n_total)`. In-memory only — the file is append-only.
+    evict: usize,
+    /// Where the next appended shard goes.
+    data_end: u64,
+    cache: CacheState,
+}
+
+/// A disk-backed dataset source. `Clone` shares the underlying file, shard
+/// table, evict offset, and panel cache — window mutations (`append`,
+/// `evict_oldest`) are visible through every clone, which is exactly what
+/// the serving refit path wants.
+#[derive(Clone)]
+pub struct DiskSource {
+    path: PathBuf,
+    inner: Arc<Mutex<DiskState>>,
+}
+
+impl std::fmt::Debug for DiskSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.inner.lock().unwrap();
+        f.debug_struct("DiskSource")
+            .field("path", &self.path)
+            .field("p", &st.p)
+            .field("q", &st.q)
+            .field("n", &(st.n_total - st.evict))
+            .finish()
+    }
+}
+
+impl DiskSource {
+    /// Open and validate a panel file. The file is opened read-write when
+    /// possible (so the sliding window can append); a read-only filesystem
+    /// degrades to a read-only source whose appends fail.
+    pub fn open(path: &Path, panel_rows: usize, cache_bytes: usize) -> io::Result<DiskSource> {
+        let (file, writable) = match OpenOptions::new().read(true).write(true).open(path) {
+            Ok(f) => (f, true),
+            Err(_) => (File::open(path)?, false),
+        };
+        let meta = {
+            let mut r = &file;
+            read_meta(&mut r)?
+        };
+        Ok(DiskSource {
+            path: path.to_path_buf(),
+            inner: Arc::new(Mutex::new(DiskState {
+                file,
+                writable,
+                p: meta.p,
+                q: meta.q,
+                shards: meta.shards,
+                n_total: meta.n,
+                evict: 0,
+                data_end: meta.data_end,
+                cache: CacheState {
+                    panel_rows: panel_rows.max(1),
+                    cache_bytes,
+                    budget: MemBudget::unlimited(),
+                    map: HashMap::new(),
+                    resident_bytes: 0,
+                    clock: 0,
+                    stats: PanelStats::default(),
+                },
+            })),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn p(&self) -> usize {
+        self.inner.lock().unwrap().p
+    }
+    pub fn q(&self) -> usize {
+        self.inner.lock().unwrap().q
+    }
+    /// Live (non-evicted) sample count.
+    pub fn n(&self) -> usize {
+        let st = self.inner.lock().unwrap();
+        st.n_total - st.evict
+    }
+    pub fn panel_rows(&self) -> usize {
+        self.inner.lock().unwrap().cache.panel_rows
+    }
+    pub fn cache_bytes(&self) -> usize {
+        self.inner.lock().unwrap().cache.cache_bytes
+    }
+    pub fn stats(&self) -> PanelStats {
+        self.inner.lock().unwrap().cache.stats
+    }
+
+    /// Feature rows of `space` (p for X, q for Y).
+    pub fn dim(&self, space: Space) -> usize {
+        let st = self.inner.lock().unwrap();
+        match space {
+            Space::X => st.p,
+            Space::Y => st.q,
+        }
+    }
+
+    /// Number of fixed-granularity panels covering `space`.
+    pub fn n_panels(&self, space: Space) -> usize {
+        let st = self.inner.lock().unwrap();
+        let dim = match space {
+            Space::X => st.p,
+            Space::Y => st.q,
+        };
+        (dim + st.cache.panel_rows - 1) / st.cache.panel_rows
+    }
+
+    /// Small bookkeeping overhead — the panels themselves self-register
+    /// against the bound budget, so callers must not double-count them.
+    pub fn overhead_bytes(&self) -> usize {
+        let st = self.inner.lock().unwrap();
+        st.shards.len() * std::mem::size_of::<ShardMeta>() + std::mem::size_of::<DiskState>()
+    }
+
+    /// Rebind the budget panels register against. A no-op when `budget`
+    /// is already the bound one; otherwise the cache is cleared so every
+    /// resident panel re-admits under the new budget.
+    pub fn bind_budget(&self, budget: &MemBudget) {
+        let mut st = self.inner.lock().unwrap();
+        if budget.same(&st.cache.budget) {
+            return;
+        }
+        st.cache.clear();
+        st.cache.budget = budget.clone();
+    }
+
+    /// Fetch the `idx`-th fixed-granularity panel of `space` through the
+    /// cache. Infallible degradation: a panel that cannot be admitted is
+    /// returned as a transient unregistered allocation.
+    pub fn panel(&self, space: Space, idx: usize) -> io::Result<Arc<Panel>> {
+        let mut st = self.inner.lock().unwrap();
+        st.cache.clock += 1;
+        let clock = st.cache.clock;
+        st.cache.stats.reads += 1;
+        let key = (space.tag(), idx);
+        if let Some(slot) = st.cache.map.get_mut(&key) {
+            slot.last_used = clock;
+            st.cache.stats.hits += 1;
+            return Ok(slot.panel.clone());
+        }
+        st.cache.stats.misses += 1;
+        let dim = match space {
+            Space::X => st.p,
+            Space::Y => st.q,
+        };
+        let pr = st.cache.panel_rows;
+        let row_start = idx * pr;
+        assert!(row_start < dim, "panel index out of range");
+        let row_end = (row_start + pr).min(dim);
+        let n = st.n_total - st.evict;
+        let mut mat = Mat::zeros(row_end - row_start, n);
+        read_rows_cols(
+            &st.file,
+            &st.shards,
+            space,
+            row_start..row_end,
+            st.evict..st.n_total,
+            &mut mat,
+        )?;
+        let bytes = mat.bytes() + std::mem::size_of::<Panel>();
+        loop {
+            if st.cache.resident_bytes + bytes <= st.cache.cache_bytes {
+                if let Ok(t) = st.cache.budget.track(bytes) {
+                    let panel = Arc::new(Panel {
+                        row_start,
+                        mat,
+                        _track: Some(t),
+                    });
+                    st.cache.resident_bytes += bytes;
+                    st.cache.map.insert(
+                        key,
+                        CacheSlot {
+                            panel: panel.clone(),
+                            last_used: clock,
+                            bytes,
+                        },
+                    );
+                    return Ok(panel);
+                }
+            }
+            if !st.cache.evict_lru() {
+                st.cache.stats.transient += 1;
+                return Ok(Arc::new(Panel {
+                    row_start,
+                    mat,
+                    _track: None,
+                }));
+            }
+        }
+    }
+
+    /// The panel holding feature row `i` of `space`, plus `i`'s local row.
+    pub fn row_panel(&self, space: Space, i: usize) -> io::Result<(Arc<Panel>, usize)> {
+        let pr = self.panel_rows();
+        let panel = self.panel(space, i / pr)?;
+        Ok((panel, i % pr))
+    }
+
+    /// Append `k` samples (`xa`: p×k, `ya`: q×k) as a new X/Y shard pair at
+    /// the end of the file. Clears the panel cache (every panel's column
+    /// extent changed).
+    pub fn append(&self, xa: &Mat, ya: &Mat) -> io::Result<()> {
+        let mut st = self.inner.lock().unwrap();
+        assert_eq!(xa.rows(), st.p, "appended X feature count mismatch");
+        assert_eq!(ya.rows(), st.q, "appended Y feature count mismatch");
+        assert_eq!(xa.cols(), ya.cols(), "appended sample count mismatch");
+        let k = xa.cols();
+        if k == 0 {
+            return Ok(());
+        }
+        if !st.writable {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                "panel file opened read-only; cannot append",
+            ));
+        }
+        if (st.n_total + k) as u64 > COL_CAP {
+            return Err(StorageError::ShardInvalid("sample count over cap").into());
+        }
+        let n0 = st.n_total;
+        let mut at = st.data_end;
+        let mut new_shards = Vec::with_capacity(2);
+        for (space, mat) in [(Space::X, xa), (Space::Y, ya)] {
+            let hdr = shard_header(space, mat.rows(), n0, n0 + k);
+            st.file.write_all_at(&hdr, at)?;
+            at += SHARD_HEADER_LEN;
+            let mut payload = Vec::with_capacity(mat.data().len() * 8);
+            for &v in mat.data() {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            st.file.write_all_at(&payload, at)?;
+            new_shards.push(ShardMeta {
+                space,
+                col_start: n0,
+                col_end: n0 + k,
+                offset: at,
+            });
+            at += payload.len() as u64;
+        }
+        st.shards.extend(new_shards);
+        st.data_end = at;
+        st.n_total += k;
+        st.cache.clear();
+        Ok(())
+    }
+
+    /// Drop the `k` oldest live samples, returning them as feature-major
+    /// panels (`xt`: p×k, `yt`: q×k). The read is transient (never cached);
+    /// the file itself is untouched — only the logical offset moves.
+    pub fn evict_oldest(&self, k: usize) -> io::Result<(Mat, Mat)> {
+        let mut st = self.inner.lock().unwrap();
+        let k = k.min(st.n_total - st.evict);
+        let cols = st.evict..st.evict + k;
+        let mut xh = Mat::zeros(st.p, k);
+        let mut yh = Mat::zeros(st.q, k);
+        read_rows_cols(&st.file, &st.shards, Space::X, 0..st.p, cols.clone(), &mut xh)?;
+        read_rows_cols(&st.file, &st.shards, Space::Y, 0..st.q, cols, &mut yh)?;
+        st.evict += k;
+        st.cache.clear();
+        Ok((xh, yh))
+    }
+}
+
+/// Read feature rows `rows` × physical sample columns `phys_cols` of
+/// `space` into `out` (`rows.len() × phys_cols.len()`), gathering across
+/// every overlapping shard with positioned reads.
+fn read_rows_cols(
+    file: &File,
+    shards: &[ShardMeta],
+    space: Space,
+    rows: std::ops::Range<usize>,
+    phys_cols: std::ops::Range<usize>,
+    out: &mut Mat,
+) -> io::Result<()> {
+    debug_assert_eq!((out.rows(), out.cols()), (rows.len(), phys_cols.len()));
+    let mut scratch = Vec::new();
+    for shard in shards.iter().filter(|s| s.space == space) {
+        let lo = shard.col_start.max(phys_cols.start);
+        let hi = shard.col_end.min(phys_cols.end);
+        if lo >= hi {
+            continue;
+        }
+        let seg = hi - lo;
+        scratch.resize(seg * 8, 0u8);
+        for (r, g) in rows.clone().enumerate() {
+            let off = shard.offset + ((g * shard.cols() + (lo - shard.col_start)) as u64) * 8;
+            file.read_exact_at(&mut scratch, off)?;
+            let dst = &mut out.row_mut(r)[lo - phys_cols.start..hi - phys_cols.start];
+            for (d, chunk) in dst.iter_mut().zip(scratch.chunks_exact(8)) {
+                *d = f64::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cggm_storage_{}_{}", name, std::process::id()))
+    }
+
+    fn random_mats(rng: &mut Rng, p: usize, q: usize, n: usize) -> (Mat, Mat) {
+        (
+            Mat::from_fn(p, n, |_, _| rng.normal()),
+            Mat::from_fn(q, n, |_, _| rng.normal()),
+        )
+    }
+
+    #[test]
+    fn roundtrip_reads_back_exact_values() {
+        let mut rng = Rng::new(7);
+        let (p, q, n) = (11, 6, 23);
+        let (xt, yt) = random_mats(&mut rng, p, q, n);
+        let path = tmp("roundtrip.pan");
+        write_panel_dataset(&path, &xt, &yt, 5).unwrap();
+        let src = DiskSource::open(&path, 4, usize::MAX).unwrap();
+        assert_eq!((src.p(), src.q(), src.n()), (p, q, n));
+        for space in [Space::X, Space::Y] {
+            let want = if space == Space::X { &xt } else { &yt };
+            for idx in 0..src.n_panels(space) {
+                let panel = src.panel(space, idx).unwrap();
+                for r in 0..panel.mat.rows() {
+                    assert_eq!(panel.mat.row(r), want.row(panel.row_start + r));
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_hits_evictions_and_transient_degradation() {
+        let mut rng = Rng::new(8);
+        let (xt, yt) = random_mats(&mut rng, 16, 4, 32);
+        let path = tmp("cache.pan");
+        write_panel_dataset(&path, &xt, &yt, 32).unwrap();
+        // Each X panel is 4×32 f64 ≈ 1KB + struct overhead; cache fits ~2.
+        let panel_bytes = 4 * 32 * 8 + std::mem::size_of::<Panel>();
+        let src = DiskSource::open(&path, 4, 2 * panel_bytes).unwrap();
+        for idx in [0usize, 0, 1, 2, 3, 0] {
+            src.panel(Space::X, idx).unwrap();
+        }
+        let st = src.stats();
+        assert_eq!(st.reads, 6);
+        assert!(st.hits >= 1, "repeat read of panel 0 should hit");
+        assert!(st.evictions >= 1, "capacity 2 over 4 panels must evict");
+        assert_eq!(st.transient, 0);
+
+        // A budget too small for even one panel degrades to transient reads.
+        let tight = MemBudget::new(16);
+        src.bind_budget(&tight);
+        src.panel(Space::X, 0).unwrap();
+        assert!(src.stats().transient >= 1);
+        assert_eq!(tight.live(), 0, "transient panels never stay registered");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn evicted_but_held_panel_stays_budget_registered() {
+        let mut rng = Rng::new(9);
+        let (xt, yt) = random_mats(&mut rng, 8, 2, 10);
+        let path = tmp("held.pan");
+        write_panel_dataset(&path, &xt, &yt, 10).unwrap();
+        let panel_bytes = 4 * 10 * 8 + std::mem::size_of::<Panel>();
+        let src = DiskSource::open(&path, 4, panel_bytes).unwrap();
+        let budget = MemBudget::new(usize::MAX);
+        src.bind_budget(&budget);
+        let held = src.panel(Space::X, 0).unwrap();
+        src.panel(Space::X, 1).unwrap(); // evicts panel 0 (capacity 1)
+        assert!(src.stats().evictions >= 1);
+        assert!(budget.live() >= panel_bytes, "held panel still counted");
+        drop(held);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn append_and_evict_slide_the_logical_window() {
+        let mut rng = Rng::new(10);
+        let (xt, yt) = random_mats(&mut rng, 5, 3, 6);
+        let path = tmp("window.pan");
+        write_panel_dataset(&path, &xt, &yt, 6).unwrap();
+        let src = DiskSource::open(&path, 8, usize::MAX).unwrap();
+        let (xa, ya) = random_mats(&mut rng, 5, 3, 2);
+        src.append(&xa, &ya).unwrap();
+        assert_eq!(src.n(), 8);
+        let panel = src.panel(Space::X, 0).unwrap();
+        for i in 0..5 {
+            assert_eq!(&panel.mat.row(i)[..6], xt.row(i));
+            assert_eq!(&panel.mat.row(i)[6..], xa.row(i));
+        }
+        let (xh, yh) = src.evict_oldest(2).unwrap();
+        assert_eq!(src.n(), 6);
+        for i in 0..5 {
+            assert_eq!(xh.row(i), &xt.row(i)[..2]);
+        }
+        for j in 0..3 {
+            assert_eq!(yh.row(j), &yt.row(j)[..2]);
+        }
+        let panel = src.panel(Space::Y, 0).unwrap();
+        for j in 0..3 {
+            assert_eq!(&panel.mat.row(j)[..4], &yt.row(j)[2..]);
+        }
+        // Reopening sees the appended samples; the evict offset is
+        // session-local and resets.
+        let re = DiskSource::open(&path, 8, usize::MAX).unwrap();
+        assert_eq!(re.n(), 8);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn hostile_headers_are_structured_errors() {
+        let mut rng = Rng::new(11);
+        let (xt, yt) = random_mats(&mut rng, 3, 2, 4);
+        let path = tmp("hostile.pan");
+        write_panel_dataset(&path, &xt, &yt, 4).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let parse = |bytes: &[u8]| read_meta(&mut io::Cursor::new(bytes));
+
+        assert!(matches!(parse(&good), Ok(m) if m.n == 4));
+        assert!(matches!(parse(&good[..20]), Err(StorageError::TornTail(_))));
+        assert!(matches!(
+            parse(&good[..good.len() - 7]),
+            Err(StorageError::TornTail(_))
+        ));
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(parse(&bad), Err(StorageError::BadMagic)));
+        let mut bad = good.clone();
+        bad[17] ^= 0x40; // flip a bit of p without fixing the checksum
+        assert!(matches!(parse(&bad), Err(StorageError::BadChecksum)));
+        // Oversized dims with a *valid* checksum must still be rejected.
+        let mut bad = good.clone();
+        bad[16..24].copy_from_slice(&(DIM_CAP + 1).to_le_bytes());
+        let ck = fnv1a64(&bad[..40]);
+        bad[40..48].copy_from_slice(&ck.to_le_bytes());
+        assert!(matches!(parse(&bad), Err(StorageError::DimsOutOfRange { .. })));
+        // Truncating mid-payload is a torn tail.
+        assert!(matches!(
+            parse(&good[..good.len() - 3 * 4 * 8 + 5]),
+            Err(StorageError::TornTail(_))
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+}

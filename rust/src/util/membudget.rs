@@ -100,6 +100,12 @@ impl MemBudget {
     pub fn available(&self) -> usize {
         self.inner.limit.saturating_sub(self.live())
     }
+
+    /// True when `other` is a clone of this budget (shares the same
+    /// counters) — lets caches detect a redundant rebind without clearing.
+    pub fn same(&self, other: &MemBudget) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
 }
 
 /// Parse "512MB", "2GB", "1048576", "64KB" into bytes.

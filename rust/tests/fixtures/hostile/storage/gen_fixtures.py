@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Regenerate the hostile CGGMPAN1 panel-file fixtures.
+
+Each fixture is named `<case>.<ok|err>.pan`: `.ok.` files must pass
+`cggm::storage::read_meta` (and `.err.` files must fail it) — the sweep in
+`tests/integration/storage_tests.rs` asserts exactly that. The writer here
+mirrors the format spec in `rust/src/storage/mod.rs` (48-byte global
+header, 64-byte shard headers, FNV-1a-64 checksums) so corruption can be
+applied surgically, one field at a time.
+"""
+
+import os
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GLOBAL_MAGIC = b"CGGMPAN1"
+SHARD_MAGIC = b"CGGMSHRD"
+VERSION = 1
+DIM_CAP = 1 << 24
+COL_CAP = 1 << 32
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def global_header(p, q, magic=GLOBAL_MAGIC, version=VERSION, checksum=None):
+    body = magic + struct.pack("<IIQQQ", version, 0, p, q, 0)
+    ck = fnv1a64(body) if checksum is None else checksum
+    return body + struct.pack("<Q", ck)
+
+
+def shard(space, rows, col_start, col_end, payload_bytes=None, magic=SHARD_MAGIC,
+          checksum=None, payload=None):
+    want = rows * (col_end - col_start) * 8
+    declared = want if payload_bytes is None else payload_bytes
+    body = magic + struct.pack("<IIQQQQQ", space, 0, 0, rows, col_start, col_end, declared)
+    ck = fnv1a64(body) if checksum is None else checksum
+    data = b"\x00" * want if payload is None else payload
+    return body + struct.pack("<Q", ck) + data
+
+
+def write(name, data):
+    with open(os.path.join(HERE, name), "wb") as f:
+        f.write(data)
+    print(f"{name}: {len(data)} bytes")
+
+
+P, Q, N = 2, 1, 3
+
+# Valid files: one X/Y shard pair, and a header-only (zero-sample) file.
+write("good_tiny.ok.pan",
+      global_header(P, Q) + shard(0, P, 0, N) + shard(1, Q, 0, N))
+write("empty_header_only.ok.pan", global_header(P, Q))
+
+# Global-header corruption, one field at a time.
+write("bad_magic.err.pan", global_header(P, Q, magic=b"CGGMXXX1"))
+write("bad_version.err.pan", global_header(P, Q, version=2))
+write("bad_checksum.err.pan", global_header(P, Q, checksum=0xDEADBEEF))
+# Dimension bombs carry a *valid* checksum: the cap check itself must stop
+# any allocation sized by them.
+write("dim_bomb_p.err.pan", global_header(DIM_CAP + 1, Q))
+write("dim_bomb_q.err.pan", global_header(P, 1 << 40))
+write("zero_dim.err.pan", global_header(0, Q))
+write("truncated_global.err.pan", global_header(P, Q)[:20])
+
+# Shard-table corruption behind a valid global header.
+write("shard_bad_magic.err.pan",
+      global_header(P, Q) + shard(0, P, 0, N, magic=b"CGGMXXXX"))
+write("shard_bad_checksum.err.pan",
+      global_header(P, Q) + shard(0, P, 0, N, checksum=1))
+write("shard_bad_space.err.pan",
+      global_header(P, Q) + shard(7, P, 0, N))
+write("shard_partial_row_range.err.pan",
+      global_header(P, Q) + shard(0, P - 1, 0, N))
+write("shard_noncontiguous.err.pan",
+      global_header(P, Q) + shard(0, P, 5, 5 + N))
+write("shard_empty_cols.err.pan",
+      global_header(P, Q) + shard(0, P, 0, 0, payload_bytes=0))
+write("shard_col_bomb.err.pan",
+      global_header(P, Q) + shard(0, P, 0, COL_CAP + 1, payload=b""))
+write("shard_payload_lie.err.pan",
+      global_header(P, Q) + shard(0, P, 0, N, payload_bytes=8))
+write("partial_shard_header.err.pan",
+      global_header(P, Q) + shard(0, P, 0, N)[:30])
+write("torn_payload.err.pan",
+      global_header(P, Q) + shard(0, P, 0, N)[: 64 + 5])
+write("unbalanced_xy.err.pan",
+      global_header(P, Q) + shard(0, P, 0, N))

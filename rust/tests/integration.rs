@@ -30,6 +30,11 @@
 //!   window slide matches a cold fit on the same window at 1e-6 (dense and
 //!   tiled), with zero statistic recomputation and no extra iterations,
 //!   plus the `stat_rebuild_every` downdate drift guard end to end;
+//! - [`storage_tests`] — out-of-core dataset storage: disk-backed solves
+//!   match resident at 1e-6 with identical support, a resident-infeasible
+//!   problem solves under a capped `MemBudget` with panel-cache evictions,
+//!   window slides on disk match resident, the hostile panel-file fixture
+//!   sweep, and serve's `storage:"disk"` load with panel counters;
 //! - [`serve_tests`] — the serve subsystem: warm-context reuse across
 //!   repeat fits (registry hit + warm start + zero statistic recompute),
 //!   admission control on one shared `MemBudget`, LRU eviction, and
@@ -89,6 +94,9 @@ mod tiled_tests;
 
 #[path = "integration/refit_tests.rs"]
 mod refit_tests;
+
+#[path = "integration/storage_tests.rs"]
+mod storage_tests;
 
 #[path = "integration/serve_tests.rs"]
 mod serve_tests;

@@ -41,11 +41,11 @@ fn slide(data: &mut Dataset, rng: &mut Rng, ka: usize, kr: usize) -> WindowDelta
     if ka > 0 {
         let xa = Mat::from_fn(p, ka, |_, _| rng.normal());
         let ya = Mat::from_fn(q, ka, |_, _| rng.normal());
-        data.append_samples(&xa, &ya);
+        data.append_samples(&xa, &ya).unwrap();
         delta.record_append(SampleBlock::new(xa, ya));
     }
     if kr > 0 {
-        delta.record_evict(data.evict_oldest(kr));
+        delta.record_evict(data.evict_oldest(kr).unwrap());
     }
     delta
 }

@@ -1,0 +1,263 @@
+//! Out-of-core dataset storage acceptance suite:
+//!
+//! 1. **Equivalence** — a solve over a disk-backed (`CGGMPAN1`) dataset
+//!    reaches the in-memory objective to 1e-6 with the identical support,
+//!    on both chain and cluster workloads (the backing changes where the
+//!    samples live, not what they are);
+//! 2. **Memory** — a chain problem whose raw panels alone exceed the
+//!    configured `MemBudget` still solves disk-backed, with `peak() ≤ cap`
+//!    and the panel cache actually evicting under pressure;
+//! 3. **Streaming** — an append/evict window slide applied to the
+//!    disk-backed window matches the same slide applied resident at 1e-6;
+//! 4. **Hostility** — every `tests/fixtures/hostile/storage/*.pan` fixture
+//!    parses (`.ok.`) or is rejected with a structured error (`.err.`),
+//!    never a panic or a dimension-sized allocation;
+//! 5. **Serving** — `load {"storage":"disk"}` binds the panel file
+//!    out-of-core and `stat`/fit traces expose the panel-cache counters.
+
+use cggm::coordinator::{self, RunConfig};
+use cggm::cggm::Dataset;
+use cggm::datagen::{self, cluster_graph::ClusterOptions};
+use cggm::gemm::native::NativeGemm;
+use cggm::linalg::dense::Mat;
+use cggm::linalg::sparse::SpRowMat;
+use cggm::serve::{Request, ServeEngine};
+use cggm::solvers::{solve, SolveOptions, SolverKind};
+use cggm::storage;
+use cggm::util::membudget::MemBudget;
+use cggm::util::rng::Rng;
+use std::io::Cursor;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cggm_storage_it_{}_{}", name, std::process::id()))
+}
+
+fn opts(lam: f64) -> SolveOptions {
+    SolveOptions {
+        lam_l: lam,
+        lam_t: lam,
+        max_iter: 120,
+        tol: 0.00001,
+        ..Default::default()
+    }
+}
+
+/// Write `data` as a sharded panel file and bind it disk-backed.
+fn disk_mirror(data: &Dataset, name: &str, panel_rows: usize, cache: usize) -> (Dataset, PathBuf) {
+    let path = tmp(name);
+    coordinator::save_dataset_sharded(data, &path, 16).unwrap();
+    (Dataset::open_disk(&path, panel_rows, cache).unwrap(), path)
+}
+
+fn assert_same_support(a: &SpRowMat, b: &SpRowMat, what: &str) {
+    assert_eq!(a.rows(), b.rows(), "{what}: shape");
+    for i in 0..a.rows() {
+        let pa: Vec<usize> = a.row(i).iter().map(|e| e.0).collect();
+        let pb: Vec<usize> = b.row(i).iter().map(|e| e.0).collect();
+        assert_eq!(pa, pb, "{what}: support differs in row {i}");
+    }
+}
+
+/// Acceptance: disk-backed and in-memory solves agree at 1e-6 with the
+/// identical support, on both synthetic workloads.
+#[test]
+fn disk_backed_solve_matches_resident_on_chain_and_cluster() {
+    let cluster_opts = ClusterOptions {
+        cluster_size: 6,
+        hub_coeff: 3.0,
+        ..Default::default()
+    };
+    let problems = [
+        ("chain", datagen::chain::generate(24, 24, 100, 101)),
+        (
+            "cluster",
+            datagen::cluster_graph::generate(40, 12, 120, 103, &cluster_opts),
+        ),
+    ];
+    let eng = NativeGemm::new(1);
+    for (name, prob) in &problems {
+        let mem = solve(SolverKind::AltNewtonCd, &prob.data, &opts(0.2), &eng).unwrap();
+        assert!(mem.trace.converged, "{name}: resident run must converge");
+        let f_mem = mem.trace.final_f().unwrap();
+        // A panel granularity that divides p and one that does not.
+        for panel_rows in [7usize, 16] {
+            let (disk, path) = disk_mirror(&prob.data, name, panel_rows, usize::MAX);
+            assert_eq!(disk.storage_name(), "disk");
+            let got = solve(SolverKind::AltNewtonCd, &disk, &opts(0.2), &eng).unwrap();
+            assert!(got.trace.converged, "{name}/r={panel_rows}: disk run converges");
+            let f_disk = got.trace.final_f().unwrap();
+            assert!(
+                (f_disk - f_mem).abs() <= 1e-6 * f_mem.abs().max(1.0),
+                "{name}/r={panel_rows}: disk {f_disk} vs mem {f_mem}"
+            );
+            assert_same_support(&got.model.lambda, &mem.model.lambda, "lambda");
+            assert_same_support(&got.model.theta, &mem.model.theta, "theta");
+            // The solve's I/O is visible in the trace.
+            assert!(got.trace.panel_reads > 0, "{name}: no panel reads recorded");
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Acceptance: a chain problem whose raw data cannot be resident under the
+/// configured budget solves disk-backed to the unconstrained answer at
+/// 1e-6, with the measured `peak() ≤ cap` and panel-cache evictions > 0.
+#[test]
+fn budget_capped_disk_solve_stays_under_resident_data_footprint() {
+    let (p, q, n) = (60usize, 60usize, 4000usize);
+    let prob = datagen::chain::generate(p, q, n, 107);
+    let eng = NativeGemm::new(1);
+    // Reference: resident data, unlimited memory.
+    let mem = solve(SolverKind::AltNewtonCd, &prob.data, &opts(0.4), &eng).unwrap();
+    assert!(mem.trace.converged);
+    let f_mem = mem.trace.final_f().unwrap();
+    // The raw panels alone (8·n·(p+q) ≈ 3.84 MB) cannot fit the 1.5 MB cap:
+    // pinning them resident would fail before any solve work started.
+    let cap = 3 << 19;
+    assert!(
+        prob.data.bytes() > 2 * cap,
+        "fixture must be infeasible fully-resident ({} bytes vs cap {cap})",
+        prob.data.bytes()
+    );
+    let budget = MemBudget::new(cap);
+    // 8-row panels ≈ 256 KB each; a 300 KB cache holds at most one, so the
+    // pairwise Gram sweeps must evict (and degrade to transients).
+    let (disk, path) = disk_mirror(&prob.data, "capped", 8, 300 << 10);
+    disk.bind_panel_budget(&budget);
+    let mut o = opts(0.4);
+    o.budget = budget.clone();
+    let got = solve(SolverKind::AltNewtonCd, &disk, &o, &eng)
+        .expect("disk-backed solve must fit under the cap");
+    assert!(got.trace.converged);
+    let f_disk = got.trace.final_f().unwrap();
+    assert!(
+        (f_disk - f_mem).abs() <= 1e-6 * f_mem.abs().max(1.0),
+        "budget-capped disk {f_disk} vs resident {f_mem}"
+    );
+    assert!(
+        budget.peak() <= cap,
+        "peak {} exceeded the cap {cap}",
+        budget.peak()
+    );
+    let stats = disk.panel_stats().unwrap();
+    assert!(stats.evictions > 0, "cache pressure must force evictions: {stats:?}");
+    assert!(stats.reads > 0 && stats.misses > 0);
+    let _ = std::fs::remove_file(path);
+}
+
+/// Acceptance: the same append + evict window slide applied to the
+/// disk-backed window (shards appended to the file, logical evict offset)
+/// and to the resident window produces 1e-6-identical solves.
+#[test]
+fn window_slide_on_disk_matches_resident() {
+    let (p, q, n, k) = (16usize, 16usize, 80usize, 12usize);
+    let prob = datagen::chain::generate(p, q, n, 109);
+    let (mut disk, path) = disk_mirror(&prob.data, "slide", 5, usize::MAX);
+    let mut mem = prob.data.clone();
+    let mut rng = Rng::new(211);
+    let xa = Mat::from_fn(p, k, |_, _| rng.normal());
+    let ya = Mat::from_fn(q, k, |_, _| rng.normal());
+    for d in [&mut mem, &mut disk] {
+        d.append_samples(&xa, &ya).unwrap();
+        let evicted = d.evict_oldest(k).unwrap();
+        assert_eq!(evicted.k(), k);
+        assert_eq!(d.n(), n);
+    }
+    let eng = NativeGemm::new(1);
+    let a = solve(SolverKind::AltNewtonCd, &mem, &opts(0.3), &eng).unwrap();
+    let b = solve(SolverKind::AltNewtonCd, &disk, &opts(0.3), &eng).unwrap();
+    assert!(a.trace.converged && b.trace.converged);
+    let (fa, fb) = (a.trace.final_f().unwrap(), b.trace.final_f().unwrap());
+    assert!(
+        (fa - fb).abs() <= 1e-6 * fa.abs().max(1.0),
+        "slid window: resident {fa} vs disk {fb}"
+    );
+    assert_same_support(&a.model.lambda, &b.model.lambda, "lambda");
+    assert_same_support(&a.model.theta, &b.model.theta, "theta");
+    let _ = std::fs::remove_file(path);
+}
+
+/// Every hostile panel-file fixture resolves per its name — `.ok.` parses,
+/// `.err.` is a structured error — through both the bare header parser and
+/// the full disk-binding path (which must not panic either way).
+#[test]
+fn hostile_panel_fixtures_resolve_per_name() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/hostile/storage");
+    let mut seen = 0usize;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !name.ends_with(".pan") {
+            continue;
+        }
+        seen += 1;
+        let bytes = std::fs::read(&path).unwrap();
+        let meta = storage::read_meta(&mut Cursor::new(bytes.as_slice()));
+        if name.contains(".ok.") {
+            let meta = meta.unwrap_or_else(|e| panic!("{name} must parse: {e}"));
+            assert!(meta.p >= 1 && meta.q >= 1);
+            // A parsed header also binds (possibly with zero samples).
+            let d = Dataset::open_disk(&path, 4, usize::MAX)
+                .unwrap_or_else(|e| panic!("{name} must bind: {e}"));
+            assert_eq!((d.p(), d.q(), d.n()), (meta.p, meta.q, meta.n));
+        } else {
+            assert!(meta.is_err(), "{name} must be rejected");
+            assert!(
+                Dataset::open_disk(&path, 4, usize::MAX).is_err(),
+                "{name} must not bind"
+            );
+        }
+    }
+    assert!(seen >= 15, "fixture sweep found only {seen} files — wrong dir?");
+}
+
+/// Serving: `load` with `"storage":"disk"` binds the panel file out-of-core
+/// (pinning far less than the dense arrays), the fit's trace carries
+/// nonzero panel counters, and `stat` reports the storage mode per dataset.
+#[test]
+fn serve_load_disk_reports_panel_counters() {
+    let prob = datagen::chain::generate(20, 20, 400, 113);
+    let path = tmp("serve.pan");
+    coordinator::save_dataset_sharded(&prob.data, &path, 64).unwrap();
+    let cfg = RunConfig {
+        serve_max_jobs: 1,
+        panel_rows: 6,
+        panel_cache: 64 << 10,
+        ..RunConfig::default()
+    };
+    let srv = ServeEngine::new(cfg, Arc::new(NativeGemm::new(1)));
+    let req = |line: &str| Request::parse_line(line).expect("test request must parse");
+    let load = srv.request(req(&format!(
+        r#"{{"op":"load","id":1,"name":"ooc","path":"{}","storage":"disk"}}"#,
+        path.display()
+    )));
+    assert!(load.is_ok(), "{:?}", load.outcome);
+    let lres = load.result().unwrap();
+    assert_eq!(lres.get("storage").and_then(|v| v.as_str()), Some("disk"));
+    let fit = srv.request(req(
+        r#"{"op":"fit","id":2,"dataset":"ooc","solver":"alt","lambda":0.4,"max_iter":80}"#,
+    ));
+    assert!(fit.is_ok(), "{:?}", fit.outcome);
+    let trace = fit.result().unwrap().get("trace").unwrap().clone();
+    let reads = trace.get("panel_reads").and_then(|v| v.as_f64()).unwrap();
+    assert!(reads > 0.0, "fit on a disk dataset must read panels");
+    let stat = srv.request(req(r#"{"op":"stat","id":3}"#));
+    let sres = stat.result().unwrap().clone();
+    let ds = &sres.get("registry").unwrap().get("datasets").unwrap().as_arr().unwrap()[0];
+    assert_eq!(ds.get("storage").and_then(|v| v.as_str()), Some("disk"));
+    assert!(ds.get("panel_reads").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    // A generated (resident) load reports "mem" and zero panel traffic.
+    let load2 = srv.request(req(
+        r#"{"op":"load","id":4,"name":"res","workload":"chain","p":10,"q":10,"n":40,"seed":1}"#,
+    ));
+    assert!(load2.is_ok(), "{:?}", load2.outcome);
+    assert_eq!(
+        load2.result().unwrap().get("storage").and_then(|v| v.as_str()),
+        Some("mem")
+    );
+    srv.join();
+    let _ = std::fs::remove_file(path);
+}
